@@ -1,0 +1,22 @@
+//! PJRT executable-cache micro-benchmark (§Perf, runtime layer).
+//!
+//! Measures first-call (HLO-text parse + XLA compile + run) vs cached-call
+//! latency for the matmul_64 artifact — the justification for the
+//! compile-once executable cache in `runtime::Runtime`.
+
+fn main() {
+    let mut rt = envadapt::runtime::Runtime::new(envadapt::runtime::Runtime::artifact_dir()).unwrap();
+    let n = 64;
+    let a = vec![1.0f32; n*n];
+    let shape = [n, n];
+    let t0 = std::time::Instant::now();
+    let _ = rt.execute("matmul_64", &[(&shape, &a), (&shape, &a)]).unwrap();
+    println!("first call (compile+run): {:.3}ms", t0.elapsed().as_secs_f64()*1e3);
+    let mut best = f64::INFINITY;
+    for _ in 0..50 {
+        let t = std::time::Instant::now();
+        let _ = rt.execute("matmul_64", &[(&shape, &a), (&shape, &a)]).unwrap();
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    println!("cached call best: {:.1}us", best*1e6);
+}

@@ -1,0 +1,38 @@
+//! VM interpreter micro-benchmark (the §Perf L3 hot path).
+//!
+//! ```bash
+//! cargo run --release --example vmbench
+//! ```
+//! Reports the best-of-10 interpretation rate on three profiles: the
+//! elementwise/intrinsic-heavy `blackscholes`, the index-heavy `mm`,
+//! and the nested-loop `stencil`.
+
+use envadapt::frontend::parse;
+use envadapt::ir::Lang;
+use envadapt::vm::{run_cpu, VmConfig};
+use envadapt::workloads;
+
+fn bench(app: &str) {
+    let src = workloads::get(app, Lang::C).unwrap();
+    let p = parse(src.code, Lang::C, app).unwrap();
+    let mut best = f64::INFINITY;
+    let mut ops = 0;
+    for _ in 0..10 {
+        let t0 = std::time::Instant::now();
+        let o = run_cpu(&p, VmConfig::default()).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        ops = o.cpu_ops;
+        best = best.min(dt);
+    }
+    println!(
+        "{app:<14} ops={ops:>9}  best wall={:>8.3}ms  rate={:>6.1} Mops/s",
+        best * 1e3,
+        ops as f64 / best / 1e6
+    );
+}
+
+fn main() {
+    bench("blackscholes");
+    bench("mm");
+    bench("stencil");
+}

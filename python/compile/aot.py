@@ -1,0 +1,66 @@
+"""AOT lowering: every artifact in `model.ARTIFACTS` → HLO *text*.
+
+HLO text (not `.serialize()`d protos) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+(what the published `xla` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot [--out-dir ../artifacts] [--only NAME]
+
+Also writes `manifest.txt` — one line per artifact:
+    <name> <num_inputs> <num_outputs> <in_shape>,... -> <out_shape>,...
+(human-readable; the Rust runtime keys on file names and checks arity).
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import ARTIFACTS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_str(x) -> str:
+    return "x".join(str(d) for d in x.shape) or "scalar"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default=None, help="lower a single artifact by name")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = []
+    for name, (fn, example) in sorted(ARTIFACTS.items()):
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = fn(*example)
+        ins = ",".join(shape_str(x) for x in example)
+        os_ = ",".join(shape_str(x) for x in outs)
+        manifest.append(f"{name} {len(example)} {len(outs)} {ins} -> {os_}")
+        print(f"  {name}: {len(text)} chars, in [{ins}] out [{os_}]")
+
+    if not args.only:
+        with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+            f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Pallas kernel library — the GPU side of the pattern DB.
+
+Each module provides one family of device kernels, all `interpret=True`
+(see mm.py for why), plus `ref.py`, the pure-jnp oracle used by pytest.
+"""
+
+from . import elementwise, mm, reduction, ref, spectral, stencil  # noqa: F401

@@ -1,0 +1,73 @@
+"""Layer-1 Pallas elementwise kernels: saxpy and Black-Scholes.
+
+TPU adaptation: 1-D data is processed in VPU-friendly chunks (multiples of
+8×128 = 1024 lanes). Scalars ride along as (1,)-blocks broadcast to every
+grid step (the paper's kernel-argument transfer: scalars are cheap, arrays
+are what the transfer planner worries about).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.scipy.stats import norm
+
+CHUNK = 1024  # 8 sublanes × 128 lanes
+
+
+def chunk_for(n: int) -> int:
+    return CHUNK if n % CHUNK == 0 else n
+
+
+def _saxpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...] + y_ref[...]
+
+
+@jax.jit
+def saxpy(alpha, x, y):
+    """y' = alpha*x + y (alpha: scalar or shape-(1,) f32)."""
+    n = x.shape[0]
+    alpha = jnp.asarray(alpha, jnp.float32).reshape((1,))
+    c = chunk_for(n)
+    return pl.pallas_call(
+        _saxpy_kernel,
+        grid=(n // c,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (i,)),
+            pl.BlockSpec((c,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((c,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(alpha, x, y)
+
+
+def _blackscholes_kernel(s_ref, k_ref, t_ref, call_ref, put_ref, *, r, sigma):
+    s, k, t = s_ref[...], k_ref[...], t_ref[...]
+    sq = sigma * jnp.sqrt(t)
+    d1 = (jnp.log(s / k) + (r + 0.5 * sigma * sigma) * t) / sq
+    d2 = d1 - sq
+    disc = jnp.exp(-r * t)
+    call_ref[...] = s * norm.cdf(d1) - k * disc * norm.cdf(d2)
+    put_ref[...] = k * disc * norm.cdf(-d2) - s * norm.cdf(-d1)
+
+
+@jax.jit
+def blackscholes(s, k, t):
+    """European option prices; fixed r=0.02, sigma=0.30 (see libs.rs)."""
+    n = s.shape[0]
+    c = chunk_for(n)
+    kernel = functools.partial(_blackscholes_kernel, r=0.02, sigma=0.30)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // c,),
+        in_specs=[pl.BlockSpec((c,), lambda i: (i,))] * 3,
+        out_specs=[pl.BlockSpec((c,), lambda i: (i,))] * 2,
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(s, k, t)

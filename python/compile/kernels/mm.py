@@ -1,0 +1,63 @@
+"""Layer-1 Pallas matmul kernel (the cuBLAS-gemm analogue).
+
+TPU adaptation of the paper's CUDA library replacement (DESIGN.md
+§Hardware-Adaptation): instead of thread-block shared-memory tiles, the
+HBM→VMEM schedule is expressed with `BlockSpec`s over a (i, j, k) grid and
+the inner block product targets the MXU systolic array
+(128×128 f32 blocks; VMEM footprint per step = 3 × 128×128×4 B = 192 KiB,
+well under the ~16 MiB VMEM budget, leaving room for double buffering).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU lowering would only change `interpret`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MXU_BLOCK = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """Grid (i, j, k): accumulate x[i,k] @ y[k,j] into o[i,j]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def block_for(n: int) -> int:
+    """MXU-sized blocks when the extent allows, whole-array otherwise."""
+    return MXU_BLOCK if n % MXU_BLOCK == 0 else n
+
+
+@functools.partial(jax.jit, static_argnames=())
+def matmul(a, b):
+    """c = a @ b for square f32 matrices via the Pallas kernel."""
+    n = a.shape[0]
+    assert a.shape == (n, n) and b.shape == (n, n), (a.shape, b.shape)
+    bm = bn = bk = block_for(n)
+    grid = (n // bm, n // bn, n // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def vmem_bytes(n: int) -> int:
+    """Estimated VMEM footprint of one grid step (for DESIGN.md §Perf)."""
+    b = block_for(n)
+    return 3 * b * b * 4

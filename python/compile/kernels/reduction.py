@@ -1,0 +1,37 @@
+"""Layer-1 Pallas tree-reduction kernel (sum).
+
+TPU adaptation: CUDA's warp-shuffle tree reduction becomes a sequential
+grid over VPU-width chunks with a (1, 1) accumulator block that persists
+across grid steps (TPU grids execute in order, so cross-step accumulation
+is well-defined — the idiom Pallas documents for reductions).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 1024
+
+
+def _reduce_kernel(x_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...].sum()
+
+
+@jax.jit
+def reduce_sum(x):
+    """Scalar sum of a 1-D f32 vector."""
+    n = x.shape[0]
+    c = CHUNK if n % CHUNK == 0 else n
+    out = pl.pallas_call(
+        _reduce_kernel,
+        grid=(n // c,),
+        in_specs=[pl.BlockSpec((c,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(x)
+    return out[0]

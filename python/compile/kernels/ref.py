@@ -1,0 +1,81 @@
+"""Pure-jnp oracle implementations of the GPU library kernels.
+
+These are the correctness references for the Pallas kernels (pytest
+compares each kernel against these under hypothesis-driven shape sweeps)
+and the semantic twins of the Rust CPU library in ``rust/src/libs.rs``
+(the paper's PCAST results check compares the two across the PJRT
+boundary).
+
+All kernels are f32, matching the device-side representation.
+"""
+
+import jax.numpy as jnp
+from jax.scipy.stats import norm
+
+
+def matmul(a, b):
+    """c = a @ b for square f32 matrices."""
+    return jnp.matmul(a, b)
+
+
+def dft(re, im):
+    """Dense DFT of a complex signal given as separate re/im vectors.
+
+    Returns (re_out, im_out). Matches the naive O(n^2) definition used by
+    the Rust CPU library (cuFFT analogue at small n).
+    """
+    n = re.shape[0]
+    k = jnp.arange(n, dtype=jnp.float32)[:, None]
+    t = jnp.arange(n, dtype=jnp.float32)[None, :]
+    ang = -2.0 * jnp.pi * k * t / n
+    c, s = jnp.cos(ang), jnp.sin(ang)
+    re_out = c @ re - s @ im
+    im_out = s @ re + c @ im
+    return re_out, im_out
+
+
+def saxpy(alpha, x, y):
+    """y' = alpha*x + y."""
+    return alpha * x + y
+
+
+def conv1d(x, k):
+    """Valid 1-D correlation: y[i] = sum_j x[i+j] * k[j]."""
+    n, m = x.shape[0], k.shape[0]
+    idx = jnp.arange(n - m + 1)[:, None] + jnp.arange(m)[None, :]
+    return (x[idx] * k[None, :]).sum(axis=1)
+
+
+def reduce_sum(x):
+    """Scalar sum (kept 0-d so the HLO output is a scalar)."""
+    return jnp.sum(x)
+
+
+def blackscholes(s, k, t, r=0.02, sigma=0.30):
+    """European call/put prices; fixed r/sigma match the Rust library."""
+    sq = sigma * jnp.sqrt(t)
+    d1 = (jnp.log(s / k) + (r + 0.5 * sigma * sigma) * t) / sq
+    d2 = d1 - sq
+    disc = jnp.exp(-r * t)
+    call = s * norm.cdf(d1) - k * disc * norm.cdf(d2)
+    put = k * disc * norm.cdf(-d2) - s * norm.cdf(-d1)
+    return call, put
+
+
+def jacobi_step(src):
+    """One 5-point Jacobi relaxation step; boundary rows/cols copied."""
+    interior = 0.25 * (
+        src[:-2, 1:-1] + src[2:, 1:-1] + src[1:-1, :-2] + src[1:-1, 2:]
+    )
+    return src.at[1:-1, 1:-1].set(interior)
+
+
+def pipeline(a, b, x):
+    """Composite 'mixed' workload: c = a@b; y = 0.5*c[0]+x; return sum(y).
+
+    Exercises kernel composition in a single lowered module (the L2 model
+    role: several kernels composed into one HLO graph).
+    """
+    c = matmul(a, b)
+    y = saxpy(jnp.float32(0.5), c[0], x)
+    return reduce_sum(y)

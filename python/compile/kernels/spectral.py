@@ -1,0 +1,52 @@
+"""Layer-1 Pallas DFT kernel (the cuFFT analogue of the pattern DB).
+
+The O(n²) DFT is expressed as two matrix-vector products against twiddle
+matrices. TPU adaptation: the twiddle rows stream through VMEM in
+MXU-friendly row blocks; the signal vector stays resident. Twiddles are
+computed *inside* the lowered function (jnp on iota), so the HLO artifact
+needs only (re, im) inputs — the GPU generates its own constants, exactly
+like a cuFFT plan.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 128
+
+
+def _dft_kernel(c_ref, s_ref, re_ref, im_ref, re_o_ref, im_o_ref):
+    c, s = c_ref[...], s_ref[...]
+    re, im = re_ref[...], im_ref[...]
+    re_o_ref[...] = c @ re - s @ im
+    im_o_ref[...] = s @ re + c @ im
+
+
+@jax.jit
+def dft(re, im):
+    """(re_out, im_out) = DFT(re + i·im)."""
+    n = re.shape[0]
+    k = jnp.arange(n, dtype=jnp.float32)[:, None]
+    t = jnp.arange(n, dtype=jnp.float32)[None, :]
+    ang = -2.0 * jnp.pi * k * t / n
+    c, s = jnp.cos(ang), jnp.sin(ang)
+    b = ROW_BLOCK if n % ROW_BLOCK == 0 else n
+    return pl.pallas_call(
+        _dft_kernel,
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((b, n), lambda i: (i, 0)),
+            pl.BlockSpec((b, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(c, s, re, im)

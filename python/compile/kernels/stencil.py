@@ -1,0 +1,54 @@
+"""Layer-1 Pallas stencil kernels: 2-D Jacobi step and valid 1-D conv.
+
+TPU adaptation: halo exchange between thread blocks (the CUDA formulation)
+becomes whole-array VMEM residency — the grids used by the paper-scale
+workloads (≤ 256²·4 B = 256 KiB) fit VMEM outright, so the kernel reads
+the full array block and the `BlockSpec` machinery degenerates to a single
+grid step. For larger grids the row-block + halo variant would partition
+rows; the single-block form keeps the artifact exact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _jacobi_kernel(src_ref, dst_ref):
+    src = src_ref[...]
+    interior = 0.25 * (
+        src[:-2, 1:-1] + src[2:, 1:-1] + src[1:-1, :-2] + src[1:-1, 2:]
+    )
+    dst_ref[...] = src_ref[...]
+    dst_ref[1:-1, 1:-1] = interior
+
+
+@jax.jit
+def jacobi_step(src):
+    """One 5-point relaxation step, boundary copied."""
+    n, m = src.shape
+    return pl.pallas_call(
+        _jacobi_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(src)
+
+
+def _conv1d_kernel(x_ref, k_ref, o_ref, *, m):
+    x, k = x_ref[...], k_ref[...]
+    n_out = o_ref.shape[0]
+    idx = jnp.arange(n_out)[:, None] + jnp.arange(m)[None, :]
+    o_ref[...] = (x[idx] * k[None, :]).sum(axis=1)
+
+
+@jax.jit
+def conv1d(x, k):
+    """Valid correlation y[i] = Σ_j x[i+j]·k[j]; output length n-m+1."""
+    n, m = x.shape[0], k.shape[0]
+    kernel = functools.partial(_conv1d_kernel, m=m)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n - m + 1,), jnp.float32),
+        interpret=True,
+    )(x, k)

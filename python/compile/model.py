@@ -1,0 +1,86 @@
+"""Layer-2 model: the GPU library's artifact catalogue.
+
+For this paper the "model" is the library of offload targets: every
+function block the pattern DB can replace (cuBLAS/cuFFT analogues) plus a
+composite pipeline proving kernel composition in one lowered module.
+`ARTIFACTS` maps artifact name → (jax function, example inputs); `aot.py`
+lowers each entry to `artifacts/<name>.hlo.txt` for the Rust runtime.
+
+Artifact naming convention (parsed by `rust/src/runtime`):
+    <kernel>_<n>.hlo.txt
+where `<n>` is the size parameter the Rust coordinator keys on (square
+matrix extent, vector length, or grid rows).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import elementwise, mm, reduction, spectral, stencil
+
+
+def _f32(shape):
+    return jnp.zeros(shape, jnp.float32)
+
+
+def gpu_matmul(a, b):
+    """Square matmul through the Pallas MXU kernel."""
+    return (mm.matmul(a, b),)
+
+
+def gpu_dft(re, im):
+    """DFT through the Pallas twiddle-matmul kernel."""
+    return tuple(spectral.dft(re, im))
+
+
+def gpu_saxpy(alpha, x, y):
+    return (elementwise.saxpy(alpha, x, y),)
+
+
+def gpu_blackscholes(s, k, t):
+    return tuple(elementwise.blackscholes(s, k, t))
+
+
+def gpu_jacobi(src):
+    return (stencil.jacobi_step(src),)
+
+
+def gpu_conv1d(x, k):
+    return (stencil.conv1d(x, k),)
+
+
+def gpu_reduce(x):
+    return (reduction.reduce_sum(x),)
+
+
+def gpu_pipeline(a, b, x):
+    """Composite: matmul → saxpy on row 0 → reduce (single HLO module)."""
+    (c,) = gpu_matmul(a, b)
+    (y,) = gpu_saxpy(jnp.float32(0.5), c[0], x)
+    (s,) = gpu_reduce(y)
+    return (s,)
+
+
+#: artifact name → (fn, example_args); sizes match `rust/src/workloads.rs`
+ARTIFACTS = {}
+
+for n in (32, 64, 96, 128, 256):
+    ARTIFACTS[f"matmul_{n}"] = (gpu_matmul, (_f32((n, n)), _f32((n, n))))
+for n in (128, 256, 512):
+    ARTIFACTS[f"dft_{n}"] = (gpu_dft, (_f32((n,)), _f32((n,))))
+for n in (1024, 4096, 65536):
+    ARTIFACTS[f"saxpy_{n}"] = (
+        gpu_saxpy,
+        (jnp.zeros((1,), jnp.float32), _f32((n,)), _f32((n,))),
+    )
+for n in (1024, 4096, 65536):
+    ARTIFACTS[f"blackscholes_{n}"] = (
+        gpu_blackscholes,
+        (_f32((n,)), _f32((n,)), _f32((n,))),
+    )
+for n in (32, 64, 128):
+    ARTIFACTS[f"jacobi_{n}"] = (gpu_jacobi, (_f32((n, n)),))
+for n in (1024, 4096):
+    # conv input is n+15 so the valid output is exactly n
+    ARTIFACTS[f"conv1d_{n}"] = (gpu_conv1d, (_f32((n + 15,)), _f32((16,))))
+for n in (1024, 4096, 65536):
+    ARTIFACTS[f"reduce_{n}"] = (gpu_reduce, (_f32((n,)),))
+ARTIFACTS["pipeline_64"] = (gpu_pipeline, (_f32((64, 64)), _f32((64, 64)), _f32((64,))))

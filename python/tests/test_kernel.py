@@ -1,0 +1,151 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (and data) so the kernels are exercised at both
+the MXU-tiled multiples-of-128 sizes and ragged single-block sizes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import elementwise, mm, reduction, ref, spectral, stencil
+
+SET = settings(max_examples=12, deadline=None)
+
+
+def rnd(shape, seed, scale=1.0):
+    return jnp.asarray(
+        np.random.default_rng(seed).standard_normal(shape) * scale, jnp.float32
+    )
+
+
+class TestMatmul:
+    @SET
+    @given(n=st.sampled_from([4, 16, 31, 64, 128, 256]), seed=st.integers(0, 2**16))
+    def test_matches_ref(self, n, seed):
+        a, b = rnd((n, n), seed), rnd((n, n), seed + 1)
+        got = mm.matmul(a, b)
+        np.testing.assert_allclose(got, ref.matmul(a, b), rtol=5e-4, atol=5e-4)
+
+    def test_identity(self):
+        n = 64
+        eye = jnp.eye(n, dtype=jnp.float32)
+        b = rnd((n, n), 7)
+        np.testing.assert_allclose(mm.matmul(eye, b), b, rtol=1e-6)
+
+    def test_block_selection(self):
+        assert mm.block_for(256) == 128
+        assert mm.block_for(100) == 100
+        assert mm.vmem_bytes(128) == 3 * 128 * 128 * 4
+
+
+class TestSaxpy:
+    @SET
+    @given(
+        n=st.sampled_from([8, 100, 1024, 4096]),
+        alpha=st.floats(-10, 10, allow_nan=False),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, n, alpha, seed):
+        x, y = rnd(n, seed), rnd(n, seed + 1)
+        got = elementwise.saxpy(alpha, x, y)
+        want = ref.saxpy(jnp.float32(alpha), x, y)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_zero_alpha_is_identity(self):
+        y = rnd(1024, 3)
+        np.testing.assert_allclose(elementwise.saxpy(0.0, rnd(1024, 2), y), y)
+
+
+class TestDft:
+    @SET
+    @given(n=st.sampled_from([8, 32, 100, 128, 256]), seed=st.integers(0, 2**16))
+    def test_matches_ref(self, n, seed):
+        re, im = rnd(n, seed), rnd(n, seed + 1)
+        got_re, got_im = spectral.dft(re, im)
+        want_re, want_im = ref.dft(re, im)
+        np.testing.assert_allclose(got_re, want_re, rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(got_im, want_im, rtol=2e-3, atol=2e-3)
+
+    def test_constant_signal_concentrates_at_dc(self):
+        n = 64
+        re, im = jnp.ones(n, jnp.float32), jnp.zeros(n, jnp.float32)
+        got_re, got_im = spectral.dft(re, im)
+        assert abs(float(got_re[0]) - n) < 1e-3
+        assert np.abs(np.asarray(got_re[1:])).max() < 1e-3
+        assert np.abs(np.asarray(got_im)).max() < 1e-3
+
+    def test_parseval(self):
+        n = 128
+        re, im = rnd(n, 5), rnd(n, 6)
+        fr, fi = spectral.dft(re, im)
+        lhs = float((fr**2 + fi**2).sum()) / n
+        rhs = float((re**2 + im**2).sum())
+        assert abs(lhs - rhs) / rhs < 1e-3
+
+
+class TestBlackScholes:
+    @SET
+    @given(n=st.sampled_from([16, 100, 1024]), seed=st.integers(0, 2**16))
+    def test_matches_ref(self, n, seed):
+        g = np.random.default_rng(seed)
+        s = jnp.asarray(g.uniform(10, 200, n), jnp.float32)
+        k = jnp.asarray(g.uniform(10, 200, n), jnp.float32)
+        t = jnp.asarray(g.uniform(0.05, 3.0, n), jnp.float32)
+        gc, gp = elementwise.blackscholes(s, k, t)
+        wc, wp = ref.blackscholes(s, k, t)
+        np.testing.assert_allclose(gc, wc, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(gp, wp, rtol=1e-4, atol=1e-4)
+
+    def test_put_call_parity(self):
+        n = 256
+        g = np.random.default_rng(0)
+        s = jnp.asarray(g.uniform(50, 150, n), jnp.float32)
+        k = jnp.asarray(g.uniform(50, 150, n), jnp.float32)
+        t = jnp.asarray(g.uniform(0.1, 2.0, n), jnp.float32)
+        c, p = elementwise.blackscholes(s, k, t)
+        parity = np.asarray(c - p - (s - k * jnp.exp(-0.02 * t)))
+        assert np.abs(parity).max() < 1e-3
+
+
+class TestStencil:
+    @SET
+    @given(n=st.sampled_from([4, 16, 64, 128]), seed=st.integers(0, 2**16))
+    def test_jacobi_matches_ref(self, n, seed):
+        src = rnd((n, n), seed)
+        np.testing.assert_allclose(
+            stencil.jacobi_step(src), ref.jacobi_step(src), rtol=1e-5, atol=1e-6
+        )
+
+    def test_jacobi_boundary_fixed(self):
+        src = rnd((16, 16), 1)
+        out = stencil.jacobi_step(src)
+        np.testing.assert_array_equal(out[0], src[0])
+        np.testing.assert_array_equal(out[-1], src[-1])
+        np.testing.assert_array_equal(out[:, 0], src[:, 0])
+
+    @SET
+    @given(
+        n=st.sampled_from([32, 100, 1039]),
+        m=st.sampled_from([3, 8, 16]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_conv1d_matches_ref(self, n, m, seed):
+        x, k = rnd(n, seed), rnd(m, seed + 1)
+        np.testing.assert_allclose(
+            stencil.conv1d(x, k), ref.conv1d(x, k), rtol=2e-4, atol=2e-4
+        )
+
+
+class TestReduce:
+    @SET
+    @given(n=st.sampled_from([8, 100, 1024, 4096]), seed=st.integers(0, 2**16))
+    def test_matches_ref(self, n, seed):
+        x = rnd(n, seed)
+        got = reduction.reduce_sum(x)
+        np.testing.assert_allclose(got, ref.reduce_sum(x), rtol=1e-4, atol=1e-3)
+
+    def test_sum_of_ones(self):
+        x = jnp.ones(2048, jnp.float32)
+        assert float(reduction.reduce_sum(x)) == pytest.approx(2048.0)

@@ -1,0 +1,1081 @@
+//! Code analysis: the language-independent "ループと変数の把握" layer.
+//!
+//! Implements, over the IR (never over source syntax):
+//!
+//! * loop-table extraction — nest structure, induction variables;
+//! * def/use analysis per loop — scalars and arrays read/written;
+//! * the **parallelizability check** (§4.2.2: 並列処理自体が不可な for 文は
+//!   排除): loops whose offload "fails to compile" are excluded from the GA
+//!   gene space. The paper does this by trial directive insertion; here the
+//!   equivalent static legality rules are applied (no I/O or calls inside,
+//!   no loop-carried scalar or array dependences except recognized
+//!   reductions, no break/continue/return crossing the loop);
+//! * the **CPU↔GPU transfer plan** of [37]: per offload region, which arrays
+//!   must move in/out, and which can stay device-resident (`present`)
+//!   because no CPU code touches them between regions;
+//! * gene → [`ExecPlan`] construction: maximal offload regions, collapsed
+//!   perfectly-nested parallel chains (OpenACC `collapse` analogue).
+
+use crate::frontend::render::LoopDirective;
+use crate::ir::*;
+use crate::libs;
+use crate::vm::{ExecPlan, GpuRegion, RegionExec};
+use std::collections::{HashMap, HashSet};
+
+/// Everything the offloader knows about one `for` loop.
+#[derive(Debug, Clone)]
+pub struct LoopInfo {
+    pub id: LoopId,
+    /// enclosing IR function
+    pub func: String,
+    pub var: String,
+    /// 0 = outermost in its function
+    pub depth: usize,
+    pub parent: Option<LoopId>,
+    pub children: Vec<LoopId>,
+    /// scalar variables read in the body (transitively)
+    pub scalar_reads: HashSet<String>,
+    /// scalar variables written in the body
+    pub scalar_writes: HashSet<String>,
+    /// arrays read in the body
+    pub array_reads: HashSet<String>,
+    /// arrays written in the body
+    pub array_writes: HashSet<String>,
+    /// user/library calls inside the body
+    pub calls: Vec<String>,
+    /// recognized scalar reduction variables (`s += e`)
+    pub reductions: HashSet<String>,
+    /// result of the legality check
+    pub parallelizable: bool,
+    /// why the loop was rejected (for reports)
+    pub reject_reason: Option<String>,
+    /// statement count of the body (size heuristic for reports)
+    pub body_stmts: usize,
+    /// Some(child) if the body is exactly one `for` statement (perfect nest)
+    pub perfectly_nests_child: Option<LoopId>,
+}
+
+/// A library call site (function-block offload candidate).
+#[derive(Debug, Clone)]
+pub struct LibCallSite {
+    pub name: String,
+    /// argument variable names (`Var` args only; other exprs become None)
+    pub arg_vars: Vec<Option<String>>,
+    /// innermost enclosing loop, if any (func blocks inside loops execute
+    /// repeatedly — transfer hoisting matters most there)
+    pub enclosing_loop: Option<LoopId>,
+    pub func: String,
+}
+
+/// Whole-program analysis result.
+#[derive(Debug, Clone)]
+pub struct ProgramAnalysis {
+    pub loops: Vec<LoopInfo>,
+    pub lib_calls: Vec<LibCallSite>,
+}
+
+impl ProgramAnalysis {
+    /// Loop ids eligible for the GA gene, in id order. The gene's bit `k`
+    /// controls `gene_loops()[k]`.
+    pub fn gene_loops(&self) -> Vec<LoopId> {
+        self.loops.iter().filter(|l| l.parallelizable).map(|l| l.id).collect()
+    }
+
+    pub fn loop_info(&self, id: LoopId) -> &LoopInfo {
+        &self.loops[id]
+    }
+
+    /// Distinct library functions called anywhere in the program.
+    pub fn library_names_called(&self) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .lib_calls
+            .iter()
+            .map(|c| c.name.clone())
+            .collect::<HashSet<_>>()
+            .into_iter()
+            .collect();
+        names.sort();
+        names
+    }
+}
+
+/// Analyze a program: build the loop table and run the legality checks.
+pub fn analyze(prog: &Program) -> ProgramAnalysis {
+    let n = prog.loop_count();
+    let mut loops: Vec<Option<LoopInfo>> = vec![None; n];
+    let mut lib_calls = Vec::new();
+    for f in &prog.functions {
+        walk_block(&f.body, &f.name, None, 0, &mut loops, &mut lib_calls);
+    }
+    let mut loops: Vec<LoopInfo> = loops.into_iter().map(|l| l.expect("dense loop ids")).collect();
+    // wire children
+    let parent_of: Vec<Option<LoopId>> = loops.iter().map(|l| l.parent).collect();
+    for (id, p) in parent_of.iter().enumerate() {
+        if let Some(p) = p {
+            loops[*p].children.push(id);
+        }
+    }
+    ProgramAnalysis { loops, lib_calls }
+}
+
+fn walk_block(
+    body: &[Stmt],
+    func: &str,
+    parent: Option<LoopId>,
+    depth: usize,
+    loops: &mut Vec<Option<LoopInfo>>,
+    lib_calls: &mut Vec<LibCallSite>,
+) {
+    for s in body {
+        collect_lib_calls_stmt(s, func, parent, lib_calls);
+        match s {
+            Stmt::For { id, var, body: inner, .. } => {
+                let mut info = LoopInfo {
+                    id: *id,
+                    func: func.to_string(),
+                    var: var.clone(),
+                    depth,
+                    parent,
+                    children: vec![],
+                    scalar_reads: HashSet::new(),
+                    scalar_writes: HashSet::new(),
+                    array_reads: HashSet::new(),
+                    array_writes: HashSet::new(),
+                    calls: vec![],
+                    reductions: HashSet::new(),
+                    parallelizable: false,
+                    reject_reason: None,
+                    body_stmts: count_stmts(inner),
+                    perfectly_nests_child: match inner.as_slice() {
+                        [Stmt::For { id: cid, .. }] => Some(*cid),
+                        _ => None,
+                    },
+                };
+                collect_uses(inner, &mut info);
+                legality_check(&mut info, inner);
+                loops[*id] = Some(info);
+                walk_block(inner, func, Some(*id), depth + 1, loops, lib_calls);
+            }
+            Stmt::While { body: inner, .. } => {
+                walk_block(inner, func, parent, depth, loops, lib_calls)
+            }
+            Stmt::If { then_body, else_body, .. } => {
+                walk_block(then_body, func, parent, depth, loops, lib_calls);
+                walk_block(else_body, func, parent, depth, loops, lib_calls);
+            }
+            _ => {}
+        }
+    }
+}
+
+fn collect_lib_calls_stmt(s: &Stmt, func: &str, encl: Option<LoopId>, out: &mut Vec<LibCallSite>) {
+    match s {
+        Stmt::Call { name, args } => {
+            if libs::is_library(name) {
+                out.push(LibCallSite {
+                    name: name.clone(),
+                    arg_vars: args
+                        .iter()
+                        .map(|a| match a {
+                            Expr::Var(v) => Some(v.clone()),
+                            _ => None,
+                        })
+                        .collect(),
+                    enclosing_loop: encl,
+                    func: func.to_string(),
+                });
+            }
+            for a in args {
+                collect_expr_lib_calls(a, func, encl, out);
+            }
+        }
+        Stmt::Assign { value, .. } | Stmt::Print(value) => {
+            collect_expr_lib_calls(value, func, encl, out)
+        }
+        Stmt::Decl { init: Some(e), .. } => collect_expr_lib_calls(e, func, encl, out),
+        Stmt::Return(Some(e)) => collect_expr_lib_calls(e, func, encl, out),
+        _ => {}
+    }
+}
+
+fn collect_expr_lib_calls(e: &Expr, func: &str, encl: Option<LoopId>, out: &mut Vec<LibCallSite>) {
+    match e {
+        Expr::Call { name, args } => {
+            if libs::is_library(name) {
+                out.push(LibCallSite {
+                    name: name.clone(),
+                    arg_vars: args
+                        .iter()
+                        .map(|a| match a {
+                            Expr::Var(v) => Some(v.clone()),
+                            _ => None,
+                        })
+                        .collect(),
+                    enclosing_loop: encl,
+                    func: func.to_string(),
+                });
+            }
+            for a in args {
+                collect_expr_lib_calls(a, func, encl, out);
+            }
+        }
+        Expr::Binary { lhs, rhs, .. } => {
+            collect_expr_lib_calls(lhs, func, encl, out);
+            collect_expr_lib_calls(rhs, func, encl, out);
+        }
+        Expr::Unary { operand, .. } => collect_expr_lib_calls(operand, func, encl, out),
+        Expr::Intrinsic { args, .. } => {
+            for a in args {
+                collect_expr_lib_calls(a, func, encl, out);
+            }
+        }
+        Expr::Index { indices, .. } => {
+            for i in indices {
+                collect_expr_lib_calls(i, func, encl, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+fn count_stmts(body: &[Stmt]) -> usize {
+    let mut n = 0;
+    for s in body {
+        n += 1;
+        match s {
+            Stmt::For { body, .. } | Stmt::While { body, .. } => n += count_stmts(body),
+            Stmt::If { then_body, else_body, .. } => {
+                n += count_stmts(then_body) + count_stmts(else_body)
+            }
+            _ => {}
+        }
+    }
+    n
+}
+
+/// Accumulate reads/writes/calls over a loop body (transitively, including
+/// nested loops — a region offloads its whole nest).
+fn collect_uses(body: &[Stmt], info: &mut LoopInfo) {
+    for s in body {
+        match s {
+            Stmt::Decl { dims, init, .. } => {
+                for d in dims {
+                    expr_reads(d, info);
+                }
+                if let Some(e) = init {
+                    expr_reads(e, info);
+                }
+            }
+            Stmt::Assign { target, op, value } => {
+                expr_reads(value, info);
+                match target {
+                    LValue::Var(n) => {
+                        info.scalar_writes.insert(n.clone());
+                        if *op != AssignOp::Set {
+                            info.scalar_reads.insert(n.clone());
+                        }
+                    }
+                    LValue::Index { base, indices } => {
+                        info.array_writes.insert(base.clone());
+                        if *op != AssignOp::Set {
+                            info.array_reads.insert(base.clone());
+                        }
+                        for i in indices {
+                            expr_reads(i, info);
+                        }
+                    }
+                }
+            }
+            Stmt::For { var, start, end, step, body, .. } => {
+                expr_reads(start, info);
+                expr_reads(end, info);
+                expr_reads(step, info);
+                info.scalar_writes.insert(var.clone());
+                collect_uses(body, info);
+            }
+            Stmt::While { cond, body } => {
+                expr_reads(cond, info);
+                collect_uses(body, info);
+            }
+            Stmt::If { cond, then_body, else_body } => {
+                expr_reads(cond, info);
+                collect_uses(then_body, info);
+                collect_uses(else_body, info);
+            }
+            Stmt::Call { name, args } => {
+                info.calls.push(name.clone());
+                for a in args {
+                    expr_reads(a, info);
+                }
+            }
+            Stmt::Return(Some(e)) | Stmt::Print(e) => expr_reads(e, info),
+            _ => {}
+        }
+    }
+}
+
+fn expr_reads(e: &Expr, info: &mut LoopInfo) {
+    match e {
+        Expr::Var(n) => {
+            info.scalar_reads.insert(n.clone());
+        }
+        Expr::Index { base, indices } => {
+            info.array_reads.insert(base.clone());
+            for i in indices {
+                expr_reads(i, info);
+            }
+        }
+        Expr::Binary { lhs, rhs, .. } => {
+            expr_reads(lhs, info);
+            expr_reads(rhs, info);
+        }
+        Expr::Unary { operand, .. } => expr_reads(operand, info),
+        Expr::Intrinsic { args, .. } => {
+            for a in args {
+                expr_reads(a, info);
+            }
+        }
+        Expr::Call { name, args } => {
+            info.calls.push(name.clone());
+            for a in args {
+                expr_reads(a, info);
+            }
+        }
+        Expr::Len { base, .. } => {
+            info.array_reads.insert(base.clone());
+        }
+        _ => {}
+    }
+}
+
+// ---------------------------------------------------------------------------
+// legality
+// ---------------------------------------------------------------------------
+
+/// The paper's "directive insertion fails → exclude from GA" check,
+/// done statically. Sets `parallelizable` / `reject_reason`.
+fn legality_check(info: &mut LoopInfo, body: &[Stmt]) {
+    // Rule 1: no calls (OpenACC cannot offload arbitrary calls; library
+    // calls are function-block targets instead).
+    if !info.calls.is_empty() {
+        info.reject_reason = Some(format!("calls inside loop body: {:?}", info.calls));
+        return;
+    }
+    // Rule 2: no I/O, no control flow escaping the loop, no while.
+    if let Some(r) = escape_check(body, 0) {
+        info.reject_reason = Some(r);
+        return;
+    }
+    // Rule 3: scalar loop-carried dependences. A scalar written in the
+    // body is legal iff it is (a) privatizable — written before it is read
+    // within an iteration — or (b) a recognized reduction (`s += e`, `s`
+    // not otherwise accessed).
+    let mut comp_targets: HashMap<String, usize> = HashMap::new();
+    let mut other_access: HashSet<String> = HashSet::new();
+    scan_scalar_accesses(body, &mut comp_targets, &mut other_access);
+    for name in comp_targets.keys() {
+        if !other_access.contains(name) {
+            info.reductions.insert(name.clone());
+        }
+    }
+    let mut all_writes = HashSet::new();
+    collect_scalar_writes(body, &mut all_writes);
+    if let Err(name) =
+        ordered_scan(body, &mut HashSet::new(), &info.reductions, &all_writes)
+    {
+        info.reject_reason = Some(format!("loop-carried scalar dependence on `{name}`"));
+        return;
+    }
+    // Rule 4: array dependences.
+    if let Some(r) = array_dependence_check(info, body) {
+        info.reject_reason = Some(r);
+        return;
+    }
+    info.parallelizable = true;
+}
+
+/// Reject break/continue at the loop's own level, return/print anywhere,
+/// and `while` anywhere inside.
+fn escape_check(body: &[Stmt], depth: usize) -> Option<String> {
+    for s in body {
+        match s {
+            Stmt::Break | Stmt::Continue if depth == 0 => {
+                return Some("break/continue at loop level".into());
+            }
+            Stmt::Return(_) => return Some("return inside loop body".into()),
+            Stmt::Print(_) => return Some("I/O (print) inside loop body".into()),
+            Stmt::While { .. } => {
+                return Some("while loop inside body (unknown trip count)".into())
+            }
+            Stmt::For { body, .. } => {
+                if let Some(r) = escape_check(body, depth + 1) {
+                    // break/continue belonging to the inner for are fine
+                    if !r.contains("break/continue") {
+                        return Some(r);
+                    }
+                }
+            }
+            Stmt::If { then_body, else_body, .. } => {
+                if let Some(r) = escape_check(then_body, depth) {
+                    return Some(r);
+                }
+                if let Some(r) = escape_check(else_body, depth) {
+                    return Some(r);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn collect_scalar_writes(body: &[Stmt], out: &mut HashSet<String>) {
+    for s in body {
+        match s {
+            Stmt::Assign { target: LValue::Var(n), .. } => {
+                out.insert(n.clone());
+            }
+            Stmt::Decl { name, .. } => {
+                out.insert(name.clone());
+            }
+            Stmt::For { var, body, .. } => {
+                out.insert(var.clone());
+                collect_scalar_writes(body, out);
+            }
+            Stmt::While { body, .. } => collect_scalar_writes(body, out),
+            Stmt::If { then_body, else_body, .. } => {
+                collect_scalar_writes(then_body, out);
+                collect_scalar_writes(else_body, out);
+            }
+            _ => {}
+        }
+    }
+}
+
+fn scan_scalar_accesses(
+    body: &[Stmt],
+    comp: &mut HashMap<String, usize>,
+    other: &mut HashSet<String>,
+) {
+    for s in body {
+        match s {
+            Stmt::Assign { target: LValue::Var(n), op, value } => {
+                if matches!(op, AssignOp::Add | AssignOp::Sub) {
+                    *comp.entry(n.clone()).or_insert(0) += 1;
+                } else {
+                    other.insert(n.clone());
+                }
+                scalar_reads_of(value, other);
+            }
+            Stmt::Assign { target: LValue::Index { indices, .. }, value, .. } => {
+                for i in indices {
+                    scalar_reads_of(i, other);
+                }
+                scalar_reads_of(value, other);
+            }
+            Stmt::Decl { init, dims, .. } => {
+                for d in dims {
+                    scalar_reads_of(d, other);
+                }
+                if let Some(e) = init {
+                    scalar_reads_of(e, other);
+                }
+            }
+            Stmt::For { start, end, step, body, .. } => {
+                scalar_reads_of(start, other);
+                scalar_reads_of(end, other);
+                scalar_reads_of(step, other);
+                scan_scalar_accesses(body, comp, other);
+            }
+            Stmt::While { cond, body } => {
+                scalar_reads_of(cond, other);
+                scan_scalar_accesses(body, comp, other);
+            }
+            Stmt::If { cond, then_body, else_body } => {
+                scalar_reads_of(cond, other);
+                scan_scalar_accesses(then_body, comp, other);
+                scan_scalar_accesses(else_body, comp, other);
+            }
+            Stmt::Call { args, .. } => {
+                for a in args {
+                    scalar_reads_of(a, other);
+                }
+            }
+            Stmt::Return(Some(e)) | Stmt::Print(e) => scalar_reads_of(e, other),
+            _ => {}
+        }
+    }
+}
+
+fn scalar_reads_of(e: &Expr, out: &mut HashSet<String>) {
+    match e {
+        Expr::Var(n) => {
+            out.insert(n.clone());
+        }
+        Expr::Index { indices, .. } => {
+            for i in indices {
+                scalar_reads_of(i, out);
+            }
+        }
+        Expr::Binary { lhs, rhs, .. } => {
+            scalar_reads_of(lhs, out);
+            scalar_reads_of(rhs, out);
+        }
+        Expr::Unary { operand, .. } => scalar_reads_of(operand, out),
+        Expr::Intrinsic { args, .. } | Expr::Call { args, .. } => {
+            for a in args {
+                scalar_reads_of(a, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Ordered first-access scan: reading a scalar that will be written in the
+/// body but has not been written *yet* this iteration means its value flows
+/// in from a previous iteration → dependence (unless it is a reduction var,
+/// handled separately).
+fn ordered_scan(
+    body: &[Stmt],
+    written: &mut HashSet<String>,
+    reductions: &HashSet<String>,
+    all_writes: &HashSet<String>,
+) -> Result<(), String> {
+    let check =
+        |e: &Expr, written: &HashSet<String>| -> Result<(), String> {
+            let mut reads = HashSet::new();
+            scalar_reads_of(e, &mut reads);
+            for r in reads {
+                if all_writes.contains(&r) && !written.contains(&r) && !reductions.contains(&r) {
+                    return Err(r);
+                }
+            }
+            Ok(())
+        };
+    for s in body {
+        match s {
+            Stmt::Assign { target, op, value } => {
+                check(value, written)?;
+                match target {
+                    LValue::Var(n) => {
+                        if matches!(
+                            op,
+                            AssignOp::Add | AssignOp::Sub | AssignOp::Mul | AssignOp::Div
+                        ) && !written.contains(n)
+                            && !reductions.contains(n)
+                        {
+                            return Err(n.clone());
+                        }
+                        written.insert(n.clone());
+                    }
+                    LValue::Index { indices, .. } => {
+                        for i in indices {
+                            check(i, written)?;
+                        }
+                    }
+                }
+            }
+            Stmt::Decl { name, dims, init, .. } => {
+                for d in dims {
+                    check(d, written)?;
+                }
+                if let Some(e) = init {
+                    check(e, written)?;
+                }
+                written.insert(name.clone());
+            }
+            Stmt::For { var, start, end, step, body, .. } => {
+                check(start, written)?;
+                check(end, written)?;
+                check(step, written)?;
+                written.insert(var.clone());
+                ordered_scan(body, written, reductions, all_writes)?;
+            }
+            Stmt::If { cond, then_body, else_body } => {
+                check(cond, written)?;
+                // conditional writes only count if both branches write
+                let mut w1 = written.clone();
+                ordered_scan(then_body, &mut w1, reductions, all_writes)?;
+                let mut w2 = written.clone();
+                ordered_scan(else_body, &mut w2, reductions, all_writes)?;
+                for n in w1.intersection(&w2) {
+                    written.insert(n.clone());
+                }
+            }
+            Stmt::Call { args, .. } => {
+                for a in args {
+                    check(a, written)?;
+                }
+            }
+            Stmt::Return(Some(e)) | Stmt::Print(e) => check(e, written)?,
+            Stmt::While { cond, body } => {
+                check(cond, written)?;
+                ordered_scan(body, written, reductions, all_writes)?;
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+/// Array dependence check for loop L:
+/// * every array written inside L must use L's induction var in some index
+///   of every write (distinct iterations → distinct elements), and
+/// * an array both read and written must be read only at the same index
+///   expressions it is written at (no in-place `a[i] = a[i-1]` stencils).
+fn array_dependence_check(info: &LoopInfo, body: &[Stmt]) -> Option<String> {
+    let mut writes: HashMap<String, Vec<Vec<Expr>>> = HashMap::new();
+    let mut reads: HashMap<String, Vec<Vec<Expr>>> = HashMap::new();
+    collect_array_accesses(body, &mut writes, &mut reads);
+    for (arr, idxs) in &writes {
+        for idx in idxs {
+            // the induction variable must appear *directly* in the index
+            // expression — `hist[bucket[i]]` does NOT count: distinct i can
+            // still collide on the same bucket (indirect scatter).
+            let mut direct = Vec::new();
+            for e in idx {
+                collect_direct_vars(e, &mut direct);
+            }
+            if !direct.iter().any(|v| v == &info.var) {
+                return Some(format!(
+                    "array `{arr}` written without the induction variable `{}` directly in its index (indirect/scatter writes are not provably race-free)",
+                    info.var
+                ));
+            }
+        }
+        if let Some(ridxs) = reads.get(arr) {
+            for r in ridxs {
+                if !idxs.iter().any(|w| w == r) {
+                    return Some(format!(
+                        "array `{arr}` read at an index different from its write index (loop-carried)"
+                    ));
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Variables read by `e` *excluding* anything inside a nested array index
+/// (used to distinguish `a[i]` from `a[idx[i]]` scatter writes).
+fn collect_direct_vars(e: &Expr, out: &mut Vec<String>) {
+    match e {
+        Expr::Var(n) => out.push(n.clone()),
+        Expr::Index { .. } => {} // indirect — do not descend
+        Expr::Binary { lhs, rhs, .. } => {
+            collect_direct_vars(lhs, out);
+            collect_direct_vars(rhs, out);
+        }
+        Expr::Unary { operand, .. } => collect_direct_vars(operand, out),
+        Expr::Intrinsic { args, .. } | Expr::Call { args, .. } => {
+            for a in args {
+                collect_direct_vars(a, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+fn collect_array_accesses(
+    body: &[Stmt],
+    writes: &mut HashMap<String, Vec<Vec<Expr>>>,
+    reads: &mut HashMap<String, Vec<Vec<Expr>>>,
+) {
+    fn expr_arrays(e: &Expr, reads: &mut HashMap<String, Vec<Vec<Expr>>>) {
+        match e {
+            Expr::Index { base, indices } => {
+                reads.entry(base.clone()).or_default().push(indices.clone());
+                for i in indices {
+                    expr_arrays(i, reads);
+                }
+            }
+            Expr::Binary { lhs, rhs, .. } => {
+                expr_arrays(lhs, reads);
+                expr_arrays(rhs, reads);
+            }
+            Expr::Unary { operand, .. } => expr_arrays(operand, reads),
+            Expr::Intrinsic { args, .. } | Expr::Call { args, .. } => {
+                for a in args {
+                    expr_arrays(a, reads);
+                }
+            }
+            _ => {}
+        }
+    }
+    for s in body {
+        match s {
+            Stmt::Assign { target, op, value } => {
+                expr_arrays(value, reads);
+                if let LValue::Index { base, indices } = target {
+                    writes.entry(base.clone()).or_default().push(indices.clone());
+                    if *op != AssignOp::Set {
+                        reads.entry(base.clone()).or_default().push(indices.clone());
+                    }
+                    for i in indices {
+                        expr_arrays(i, reads);
+                    }
+                }
+            }
+            Stmt::Decl { init, dims, .. } => {
+                for d in dims {
+                    expr_arrays(d, reads);
+                }
+                if let Some(e) = init {
+                    expr_arrays(e, reads);
+                }
+            }
+            Stmt::For { start, end, step, body, .. } => {
+                expr_arrays(start, reads);
+                expr_arrays(end, reads);
+                expr_arrays(step, reads);
+                collect_array_accesses(body, writes, reads);
+            }
+            Stmt::While { cond, body } => {
+                expr_arrays(cond, reads);
+                collect_array_accesses(body, writes, reads);
+            }
+            Stmt::If { cond, then_body, else_body } => {
+                expr_arrays(cond, reads);
+                collect_array_accesses(then_body, writes, reads);
+                collect_array_accesses(else_body, writes, reads);
+            }
+            Stmt::Call { args, .. } => {
+                for a in args {
+                    expr_arrays(a, reads);
+                }
+            }
+            Stmt::Return(Some(e)) | Stmt::Print(e) => expr_arrays(e, reads),
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// gene → plan
+// ---------------------------------------------------------------------------
+
+/// Build the execution plan for a gene over `analysis.gene_loops()`.
+///
+/// A loop with bit 1 whose ancestors are all bit 0 roots an offload region.
+/// Bit-1 loops perfectly nested under the root join the region's collapsed
+/// parallel chain (OpenACC `collapse` analogue); other nested loops execute
+/// sequentially inside the kernel.
+pub fn build_plan(analysis: &ProgramAnalysis, gene: &[bool], naive_transfers: bool) -> ExecPlan {
+    let gene_loops = analysis.gene_loops();
+    assert_eq!(gene.len(), gene_loops.len(), "gene length != parallelizable loop count");
+    let on: HashSet<LoopId> =
+        gene_loops.iter().zip(gene).filter(|(_, &b)| b).map(|(id, _)| *id).collect();
+    let mut plan = ExecPlan { naive_transfers, ..Default::default() };
+    for &id in &on {
+        // region root iff no ancestor is also on
+        let mut anc = analysis.loops[id].parent;
+        let mut is_root = true;
+        while let Some(a) = anc {
+            if on.contains(&a) {
+                is_root = false;
+                break;
+            }
+            anc = analysis.loops[a].parent;
+        }
+        if !is_root {
+            continue;
+        }
+        let info = &analysis.loops[id];
+        // collapsed parallel chain through perfect nests
+        let mut parallel_ids = vec![id];
+        let mut cur = id;
+        while let Some(child) = analysis.loops[cur].perfectly_nests_child {
+            if on.contains(&child) && analysis.loops[child].parallelizable {
+                parallel_ids.push(child);
+                cur = child;
+            } else {
+                break;
+            }
+        }
+        let mut copy_in: Vec<String> = info.array_reads.iter().cloned().collect();
+        let mut copy_out: Vec<String> = info.array_writes.iter().cloned().collect();
+        copy_in.sort();
+        copy_out.sort();
+        plan.regions.insert(
+            id,
+            GpuRegion { root: id, copy_in, copy_out, exec: RegionExec::Generic { parallel_ids } },
+        );
+    }
+    plan
+}
+
+/// Render-ready directives for a plan ([37]'s `data` directive placement):
+/// arrays used by more than one region stay device-resident (`present`,
+/// transfer hoisted); the rest get `copyin`/`copyout`.
+pub fn plan_directives(
+    analysis: &ProgramAnalysis,
+    plan: &ExecPlan,
+) -> HashMap<LoopId, LoopDirective> {
+    let mut region_use: HashMap<&str, usize> = HashMap::new();
+    for r in plan.regions.values() {
+        for a in r.copy_in.iter().chain(&r.copy_out) {
+            *region_use.entry(a.as_str()).or_insert(0) += 1;
+        }
+    }
+    let _ = analysis;
+    let mut out = HashMap::new();
+    for (id, r) in &plan.regions {
+        let mut d = LoopDirective { offload: true, ..Default::default() };
+        for a in &r.copy_in {
+            if !plan.naive_transfers && region_use.get(a.as_str()).copied().unwrap_or(0) > 1 {
+                d.present.push(a.clone());
+            } else {
+                d.copy_in.push(a.clone());
+            }
+        }
+        for a in &r.copy_out {
+            if plan.naive_transfers || region_use.get(a.as_str()).copied().unwrap_or(0) <= 1 {
+                d.copy_out.push(a.clone());
+            }
+        }
+        out.insert(*id, d);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse;
+
+    fn analyze_c(src: &str) -> ProgramAnalysis {
+        let p = parse(src, Lang::C, "t").unwrap();
+        analyze(&p)
+    }
+
+    #[test]
+    fn elementwise_loop_is_parallelizable() {
+        let a = analyze_c(
+            "void main() { int n = 8; double a[n]; for (int i = 0; i < n; i++) { a[i] = i * 2.0; } }",
+        );
+        assert_eq!(a.loops.len(), 1);
+        assert!(a.loops[0].parallelizable, "{:?}", a.loops[0].reject_reason);
+        assert_eq!(a.gene_loops(), vec![0]);
+    }
+
+    #[test]
+    fn reduction_is_recognized_and_allowed() {
+        let a = analyze_c(
+            "void main() { int n = 8; double a[n]; double s = 0.0; for (int i = 0; i < n; i++) { s += a[i]; } }",
+        );
+        assert!(a.loops[0].parallelizable, "{:?}", a.loops[0].reject_reason);
+        assert!(a.loops[0].reductions.contains("s"));
+    }
+
+    #[test]
+    fn self_referential_set_assign_rejected() {
+        // x = x + 1 carries across iterations and is not a compound form
+        let a = analyze_c(
+            "void main() { int n = 8; double x = 0.0; double a[n]; for (int i = 0; i < n; i++) { x = x + 1.0; a[i] = x; } }",
+        );
+        assert!(!a.loops[0].parallelizable);
+        assert!(a.loops[0].reject_reason.as_ref().unwrap().contains("x"));
+    }
+
+    #[test]
+    fn stencil_in_place_rejected() {
+        let a = analyze_c(
+            "void main() { int n = 8; double a[n]; for (int i = 1; i < n - 1; i++) { a[i] = a[i - 1] + a[i + 1]; } }",
+        );
+        assert!(!a.loops[0].parallelizable);
+        assert!(a.loops[0].reject_reason.as_ref().unwrap().contains("loop-carried"));
+    }
+
+    #[test]
+    fn indirect_scatter_write_rejected() {
+        // hist[bucket[i]] += 1: i appears only *inside* the nested index —
+        // distinct iterations can collide on the same bucket
+        let a = analyze_c(
+            r#"void main() {
+                int n = 32;
+                double bucket[n]; double hist[n];
+                for (int i = 0; i < n; i++) { hist[bucket[i]] += 1.0; }
+            }"#,
+        );
+        assert!(!a.loops[0].parallelizable);
+        assert!(a.loops[0].reject_reason.as_ref().unwrap().contains("directly"));
+    }
+
+    #[test]
+    fn direct_affine_index_still_accepted() {
+        let a = analyze_c(
+            "void main() { int n = 32; double a[n]; double b[n]; for (int i = 0; i < n - 1; i++) { b[i + 1] = a[i]; } }",
+        );
+        // write index i+1 is direct; reads of a at [i] don't alias b
+        assert!(a.loops[0].parallelizable, "{:?}", a.loops[0].reject_reason);
+    }
+
+    #[test]
+    fn write_without_induction_var_rejected() {
+        let a = analyze_c(
+            "void main() { int n = 8; double b[n]; for (int i = 0; i < n; i++) { b[0] = i; } }",
+        );
+        assert!(!a.loops[0].parallelizable);
+    }
+
+    #[test]
+    fn outer_loop_of_broadcast_write_rejected_inner_ok() {
+        let a = analyze_c(
+            r#"void main() {
+                int n = 8;
+                double a[n];
+                for (int t = 0; t < 10; t++) {
+                    for (int j = 0; j < n; j++) {
+                        a[j] = a[j] + 1.0;
+                    }
+                }
+            }"#,
+        );
+        assert!(!a.loops[0].parallelizable, "outer should be rejected");
+        assert!(a.loops[1].parallelizable, "{:?}", a.loops[1].reject_reason);
+        assert_eq!(a.gene_loops(), vec![1]);
+    }
+
+    #[test]
+    fn print_and_calls_reject() {
+        let a = analyze_c(
+            r#"void main() {
+                int n = 4; double a[n];
+                for (int i = 0; i < n; i++) { printf("%d\n", i); }
+                for (int i = 0; i < n; i++) { seed_fill(a, i); }
+            }"#,
+        );
+        assert!(!a.loops[0].parallelizable);
+        assert!(a.loops[0].reject_reason.as_ref().unwrap().contains("I/O"));
+        assert!(!a.loops[1].parallelizable);
+        assert!(a.loops[1].reject_reason.as_ref().unwrap().contains("calls"));
+    }
+
+    #[test]
+    fn matmul_nest_all_three_parallelizable() {
+        let a = analyze_c(
+            r#"void main() {
+                int n = 8;
+                double a[n][n]; double b[n][n]; double c[n][n];
+                for (int i = 0; i < n; i++) {
+                    for (int j = 0; j < n; j++) {
+                        double s = 0.0;
+                        for (int k = 0; k < n; k++) {
+                            s += a[i][k] * b[k][j];
+                        }
+                        c[i][j] = s;
+                    }
+                }
+            }"#,
+        );
+        assert!(a.loops[0].parallelizable, "i: {:?}", a.loops[0].reject_reason);
+        assert!(a.loops[1].parallelizable, "j: {:?}", a.loops[1].reject_reason);
+        assert!(a.loops[2].parallelizable, "k: {:?}", a.loops[2].reject_reason);
+        assert_eq!(a.loops[0].children, vec![1]);
+        assert_eq!(a.loops[1].parent, Some(0));
+        assert_eq!(a.loops[0].depth, 0);
+        assert_eq!(a.loops[2].depth, 2);
+    }
+
+    #[test]
+    fn transfer_sets_cover_arrays() {
+        let a = analyze_c(
+            r#"void main() {
+                int n = 8;
+                double x[n]; double y[n];
+                for (int i = 0; i < n; i++) { y[i] = x[i] * 2.0; }
+            }"#,
+        );
+        let plan = build_plan(&a, &[true], false);
+        let r = plan.regions.get(&0).unwrap();
+        assert_eq!(r.copy_in, vec!["x".to_string()]);
+        assert_eq!(r.copy_out, vec!["y".to_string()]);
+    }
+
+    #[test]
+    fn nested_gene_collapses_perfect_nest() {
+        let a = analyze_c(
+            r#"void main() {
+                int n = 8;
+                double m[n][n];
+                for (int i = 0; i < n; i++)
+                    for (int j = 0; j < n; j++)
+                        m[i][j] = i + j;
+            }"#,
+        );
+        assert_eq!(a.gene_loops(), vec![0, 1]);
+        let plan = build_plan(&a, &[true, true], false);
+        assert_eq!(plan.regions.len(), 1, "inner loop absorbed into region");
+        match &plan.regions.get(&0).unwrap().exec {
+            RegionExec::Generic { parallel_ids } => assert_eq!(parallel_ids, &vec![0, 1]),
+            other => panic!("{other:?}"),
+        }
+        let plan2 = build_plan(&a, &[false, true], false);
+        assert_eq!(plan2.regions.len(), 1);
+        assert!(plan2.regions.contains_key(&1));
+    }
+
+    #[test]
+    fn lib_call_sites_found() {
+        let a = analyze_c(
+            r#"void main() {
+                int n = 8;
+                double a[n][n]; double b[n][n]; double c[n][n];
+                matmul(a, b, c, n);
+                double s = reduce_sum(c, n);
+            }"#,
+        );
+        let names = a.library_names_called();
+        assert_eq!(names, vec!["matmul".to_string(), "reduce_sum".to_string()]);
+        assert_eq!(a.lib_calls[0].arg_vars[0], Some("a".to_string()));
+        assert_eq!(a.lib_calls[0].arg_vars[3], Some("n".to_string()));
+        assert!(a.lib_calls[0].enclosing_loop.is_none());
+    }
+
+    #[test]
+    fn directives_mark_present_for_shared_arrays() {
+        let a = analyze_c(
+            r#"void main() {
+                int n = 8;
+                double x[n];
+                for (int i = 0; i < n; i++) { x[i] = i; }
+                for (int i = 0; i < n; i++) { x[i] = x[i] * 2.0; }
+            }"#,
+        );
+        let plan = build_plan(&a, &[true, true], false);
+        let dirs = plan_directives(&a, &plan);
+        assert_eq!(dirs.len(), 2);
+        assert!(dirs.values().any(|d| d.present.contains(&"x".to_string())));
+        // naive mode: no `present`, everything copied
+        let plan_naive = build_plan(&a, &[true, true], true);
+        let dirs_naive = plan_directives(&a, &plan_naive);
+        assert!(dirs_naive.values().all(|d| d.present.is_empty()));
+    }
+
+    #[test]
+    fn works_identically_across_languages() {
+        let c = analyze_c(
+            "void main() { int n = 8; double a[n]; for (int i = 0; i < n; i++) { a[i] = i; } }",
+        );
+        let py = analyze(
+            &parse(
+                "def main():\n    n = 8\n    a = zeros(n)\n    for i in range(n):\n        a[i] = i\n",
+                Lang::Python,
+                "t",
+            )
+            .unwrap(),
+        );
+        let j = analyze(
+            &parse(
+                "class T { public static void main(String[] args) { int n = 8; double[] a = new double[n]; for (int i = 0; i < n; i++) { a[i] = i; } } }",
+                Lang::Java,
+                "t",
+            )
+            .unwrap(),
+        );
+        for a in [&c, &py, &j] {
+            assert_eq!(a.gene_loops(), vec![0]);
+            assert_eq!(a.loops[0].array_writes.iter().collect::<Vec<_>>(), vec!["a"]);
+        }
+    }
+}

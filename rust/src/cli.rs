@@ -1,0 +1,292 @@
+//! Command-line interface (hand-rolled: no arg-parsing crates offline).
+//!
+//! ```text
+//! envadapt offload <file|app> [--lang c|python|java] [--pop N] [--gens N]
+//!                  [--target gpu|many-core|fpga|adaptive]
+//!                  [--naive-transfers] [--no-funcblock] [--sim] [--json]
+//!                  [--emit-annotated]
+//! envadapt analyze <file|app> [--lang ...]       loop table + candidates
+//! envadapt run <file|app> [--lang ...]           CPU-only execution
+//! envadapt workloads                             list built-in apps
+//! envadapt artifacts                             check PJRT + artifacts
+//! ```
+
+use crate::analysis;
+use crate::config::Config;
+use crate::coordinator::Coordinator;
+use crate::frontend;
+use crate::ir::Lang;
+use crate::runtime::Runtime;
+use crate::vm;
+use crate::workloads;
+use std::process::ExitCode;
+
+pub fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    };
+    std::process::exit(match code == ExitCode::SUCCESS {
+        true => 0,
+        false => 1,
+    });
+}
+
+struct Opts {
+    lang: Option<Lang>,
+    pop: Option<usize>,
+    gens: Option<usize>,
+    naive: bool,
+    no_funcblock: bool,
+    sim: bool,
+    json: bool,
+    emit_annotated: bool,
+    /// None = GPU; Some(vec) = adaptive over these targets
+    targets: Option<Vec<crate::device::TargetKind>>,
+}
+
+fn parse_opts(rest: &[String]) -> anyhow::Result<Opts> {
+    let mut o = Opts {
+        lang: None,
+        pop: None,
+        gens: None,
+        naive: false,
+        no_funcblock: false,
+        sim: false,
+        json: false,
+        emit_annotated: false,
+        targets: None,
+    };
+    let mut i = 0;
+    while i < rest.len() {
+        match rest[i].as_str() {
+            "--lang" => {
+                i += 1;
+                let v = rest.get(i).ok_or_else(|| anyhow::anyhow!("--lang needs a value"))?;
+                o.lang = Some(match v.as_str() {
+                    "c" => Lang::C,
+                    "python" | "py" => Lang::Python,
+                    "java" => Lang::Java,
+                    other => anyhow::bail!("unknown language {other:?}"),
+                });
+            }
+            "--pop" => {
+                i += 1;
+                o.pop = Some(rest.get(i).and_then(|v| v.parse().ok()).ok_or_else(|| anyhow::anyhow!("--pop needs a number"))?);
+            }
+            "--gens" => {
+                i += 1;
+                o.gens = Some(rest.get(i).and_then(|v| v.parse().ok()).ok_or_else(|| anyhow::anyhow!("--gens needs a number"))?);
+            }
+            "--target" => {
+                i += 1;
+                let v = rest.get(i).ok_or_else(|| anyhow::anyhow!("--target needs a value"))?;
+                use crate::device::TargetKind;
+                o.targets = Some(match v.as_str() {
+                    "gpu" => vec![TargetKind::Gpu],
+                    "many-core" | "manycore" => vec![TargetKind::ManyCore],
+                    "fpga" => vec![TargetKind::Fpga],
+                    "adaptive" | "all" => TargetKind::all().to_vec(),
+                    other => anyhow::bail!("unknown target {other:?} (gpu|many-core|fpga|adaptive)"),
+                });
+            }
+            "--naive-transfers" => o.naive = true,
+            "--no-funcblock" => o.no_funcblock = true,
+            "--sim" => o.sim = true,
+            "--json" => o.json = true,
+            "--emit-annotated" => o.emit_annotated = true,
+            other => anyhow::bail!("unknown option {other:?}"),
+        }
+        i += 1;
+    }
+    Ok(o)
+}
+
+/// Resolve `<file|app>` to (source, lang, name): a path with a known
+/// extension, or a built-in workload name (lang from `--lang`, default C).
+fn resolve(target: &str, opts: &Opts) -> anyhow::Result<(String, Lang, String)> {
+    let path = std::path::Path::new(target);
+    if path.exists() {
+        let ext = path.extension().and_then(|e| e.to_str()).unwrap_or("");
+        let lang = opts
+            .lang
+            .or_else(|| Lang::from_ext(ext))
+            .ok_or_else(|| anyhow::anyhow!("cannot infer language of {target}; pass --lang"))?;
+        let name =
+            path.file_stem().and_then(|s| s.to_str()).unwrap_or("program").to_string();
+        return Ok((std::fs::read_to_string(path)?, lang, name));
+    }
+    let lang = opts.lang.unwrap_or(Lang::C);
+    let src = workloads::get(target, lang)
+        .ok_or_else(|| anyhow::anyhow!("no file or built-in workload named {target:?}"))?;
+    Ok((src.code.to_string(), lang, target.to_string()))
+}
+
+fn config_from(opts: &Opts) -> Config {
+    let mut cfg = if opts.sim { Config::fast_sim() } else { Config::standard() };
+    if let Some(p) = opts.pop {
+        cfg.ga.population = p;
+    }
+    if let Some(g) = opts.gens {
+        cfg.ga.generations = g;
+    }
+    cfg.naive_transfers = opts.naive;
+    cfg.funcblock.enabled = !opts.no_funcblock;
+    cfg
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "offload" => {
+            let target = args.get(1).ok_or_else(|| anyhow::anyhow!("offload needs a target"))?;
+            let opts = parse_opts(&args[2..])?;
+            let (code, lang, name) = resolve(target, &opts)?;
+            let cfg = config_from(&opts);
+            if let Some(targets) = &opts.targets {
+                if targets.len() > 1 {
+                    // environment-adaptive: try each target, pick the best
+                    let r = crate::coordinator::offload_adaptive(&code, lang, &name, &cfg, targets)?;
+                    for (t, rep) in &r.per_target {
+                        println!("[{t:<9}] {}", rep.summary());
+                    }
+                    println!("→ chosen target: {}", r.chosen);
+                    return Ok(());
+                }
+                let mut tcfg = cfg.clone();
+                tcfg.cost = targets[0].cost_model();
+                tcfg.use_pjrt = cfg.use_pjrt && targets[0] == crate::device::TargetKind::Gpu;
+                let mut c = Coordinator::new(tcfg);
+                let r = c.offload_source(&code, lang, &name)?;
+                println!("[{}] {}", targets[0], r.summary());
+                return Ok(());
+            }
+            let mut c = Coordinator::new(cfg);
+            eprintln!(
+                "device: {}",
+                if c.device_is_pjrt() { "PJRT (real artifacts)" } else { "simulated cost model" }
+            );
+            let r = c.offload_source(&code, lang, &name)?;
+            if opts.json {
+                println!("{}", r.to_json().to_pretty());
+            } else {
+                println!("{}", r.summary());
+                if let Some(fb) = &r.funcblock {
+                    for &i in &fb.chosen {
+                        println!("  func-block: {}", fb.candidates[i].description);
+                    }
+                }
+                if let Some(ga) = &r.ga {
+                    println!(
+                        "  GA: {} gene bits, {} generations, {} distinct measurements",
+                        r.best_gene.len(),
+                        ga.history.len(),
+                        ga.evaluations
+                    );
+                    let gene: String =
+                        r.best_gene.iter().map(|&b| if b { '1' } else { '0' }).collect();
+                    println!("  best gene: {gene} over loops {:?}", r.gene_loops);
+                }
+            }
+            if opts.emit_annotated {
+                println!("--- annotated source ---\n{}", r.annotated_source);
+            }
+            Ok(())
+        }
+        "analyze" => {
+            let target = args.get(1).ok_or_else(|| anyhow::anyhow!("analyze needs a target"))?;
+            let opts = parse_opts(&args[2..])?;
+            let (code, lang, name) = resolve(target, &opts)?;
+            let prog = frontend::parse(&code, lang, &name)?;
+            let a = analysis::analyze(&prog);
+            println!("{name} [{lang}]: {} loops, {} library call sites", a.loops.len(), a.lib_calls.len());
+            for l in &a.loops {
+                println!(
+                    "  loop {:>2} `{}` depth {} in {}(): {}",
+                    l.id,
+                    l.var,
+                    l.depth,
+                    l.func,
+                    if l.parallelizable {
+                        "parallelizable".to_string()
+                    } else {
+                        format!("rejected — {}", l.reject_reason.as_deref().unwrap_or("?"))
+                    }
+                );
+            }
+            for c in &a.lib_calls {
+                println!("  lib call: {}({} args) in {}()", c.name, c.arg_vars.len(), c.func);
+            }
+            Ok(())
+        }
+        "run" => {
+            let target = args.get(1).ok_or_else(|| anyhow::anyhow!("run needs a target"))?;
+            let opts = parse_opts(&args[2..])?;
+            let (code, lang, name) = resolve(target, &opts)?;
+            let prog = frontend::parse(&code, lang, &name)?;
+            let o = vm::run_cpu(&prog, vm::VmConfig::default())?;
+            for p in &o.prints {
+                println!("{p}");
+            }
+            eprintln!(
+                "[{} ops, modeled {:.3} ms]",
+                o.cpu_ops,
+                o.modeled_seconds() * 1e3
+            );
+            Ok(())
+        }
+        "workloads" => {
+            for app in workloads::APPS {
+                println!("{app} (c, python, java)");
+            }
+            Ok(())
+        }
+        "artifacts" => {
+            let dir = Runtime::artifact_dir();
+            match Runtime::new(&dir) {
+                Ok(rt) => {
+                    println!("PJRT platform: {}", rt.platform());
+                    println!("artifact dir: {}", dir.display());
+                    for a in rt.available() {
+                        println!("  {a}");
+                    }
+                    if rt.available().is_empty() {
+                        println!("  (none — run `make artifacts`)");
+                    }
+                }
+                Err(e) => println!("PJRT unavailable: {e}"),
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?} (try `envadapt help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "envadapt — automatic GPU offloading from C, Python and Java applications
+
+USAGE:
+  envadapt offload <file|app> [--lang c|python|java] [--pop N] [--gens N]
+                   [--target gpu|many-core|fpga|adaptive]
+                   [--naive-transfers] [--no-funcblock] [--sim] [--json]
+                   [--emit-annotated]
+  envadapt analyze <file|app> [--lang ...]
+  envadapt run <file|app> [--lang ...]
+  envadapt workloads
+  envadapt artifacts
+
+Built-in workloads: mm fourier stencil blackscholes mixed smallloops"
+    );
+}

@@ -1,0 +1,98 @@
+//! Run configuration for the offloading coordinator.
+//!
+//! One struct gathers every knob of the flow (GA hyper-parameters, device
+//! cost model, VM limits, function-block policy) so examples, benches and
+//! the CLI share defaults, mirroring how the paper's implementation keeps
+//! one configuration for its Perl/Python driver.
+
+use crate::device::CostModel;
+use crate::ga::GaConfig;
+use crate::vm::VmConfig;
+
+/// Function-block offload policy.
+#[derive(Debug, Clone)]
+pub struct FuncBlockConfig {
+    /// master switch (§4.2: function blocks are tried before loops)
+    pub enabled: bool,
+    /// clone-similarity threshold (Deckard's proximity gate)
+    pub clone_threshold: f64,
+    /// auto-approve interface changes for clone replacements — the paper
+    /// asks the user when the replacement library's interface differs;
+    /// `true` simulates an approving user, `false` skips such candidates
+    pub auto_approve_interface: bool,
+    /// cap on candidate-subset trials (2^k grows fast; the paper measures
+    /// each block on/off and their combinations)
+    pub max_combination_trials: usize,
+}
+
+impl Default for FuncBlockConfig {
+    fn default() -> Self {
+        FuncBlockConfig {
+            enabled: true,
+            clone_threshold: 0.9,
+            auto_approve_interface: true,
+            max_combination_trials: 64,
+        }
+    }
+}
+
+/// Complete coordinator configuration.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub ga: GaConfig,
+    pub cost: CostModel,
+    pub vm: VmConfig,
+    pub funcblock: FuncBlockConfig,
+    /// relative tolerance of the PCAST-style results check
+    pub tolerance: f64,
+    /// disable transfer hoisting (ablation E4)
+    pub naive_transfers: bool,
+    /// use the PJRT-backed device (false = cost model only)
+    pub use_pjrt: bool,
+}
+
+impl Config {
+    /// Standard configuration: PJRT numerics, hoisted transfers.
+    pub fn standard() -> Config {
+        Config {
+            ga: GaConfig::default(),
+            cost: CostModel::default(),
+            vm: VmConfig::default(),
+            funcblock: FuncBlockConfig::default(),
+            tolerance: 2e-3,
+            naive_transfers: false,
+            use_pjrt: true,
+        }
+    }
+
+    /// Deterministic, dependency-free configuration for unit tests and
+    /// benches: simulated device, smaller GA.
+    pub fn fast_sim() -> Config {
+        Config {
+            ga: GaConfig { population: 8, generations: 10, ..Default::default() },
+            use_pjrt: false,
+            ..Config::standard()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_defaults_sane() {
+        let c = Config::standard();
+        assert!(c.funcblock.enabled);
+        assert!(c.tolerance > 0.0 && c.tolerance < 0.1);
+        assert!(c.use_pjrt);
+        assert!(!c.naive_transfers);
+    }
+
+    #[test]
+    fn fast_sim_is_simulated() {
+        let c = Config::fast_sim();
+        assert!(!c.use_pjrt);
+        assert!(c.ga.population <= 8);
+    }
+}

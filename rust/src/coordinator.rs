@@ -1,0 +1,530 @@
+//! The environment-adaptive offloading coordinator — Fig. 1's flow,
+//! end-to-end (the paper's system contribution).
+//!
+//! For one application in any supported language:
+//!
+//! 1. **Code analysis** — parse to the language-independent IR, build the
+//!    loop/variable/function-block tables (`frontend`, `analysis`).
+//! 2. **Function-block offload trial** (§4.2, tried *first* because
+//!    algorithm-tuned blocks beat per-loop parallelization): name-match +
+//!    clone-similarity candidates against the pattern DB, measured
+//!    individually and in combination.
+//! 3. **Loop-statement offload trial** — GA over the remaining
+//!    parallelizable loops (function-block-replaced nests are excluded,
+//!    §4.2: 機能ブロック部分を抜いたコードに対して試行), each gene measured
+//!    in the verification environment with transfer-hoisting applied.
+//! 4. **Final pattern selection** — fastest correct candidate wins; the
+//!    report carries per-language directive-annotated source (OpenACC /
+//!    PyCUDA / parallel-stream) plus every number the benches need.
+
+use crate::analysis::{self, ProgramAnalysis};
+use crate::config::Config;
+use crate::device::GpuDevice;
+use crate::frontend::{self, render};
+use crate::funcblock::{self, Candidate, FuncBlockReport};
+use crate::ga::{self, GaResult};
+use crate::ir::{Lang, LoopId, Program};
+use crate::measure::{Measurement, Measurer};
+use crate::patterndb::PatternDb;
+use crate::util::json::Json;
+use crate::vm::ExecPlan;
+use anyhow::Result;
+use std::collections::HashSet;
+
+/// Everything the coordinator learned about one application.
+#[derive(Debug, Clone)]
+pub struct OffloadReport {
+    pub app: String,
+    pub lang: Lang,
+    /// CPU-only modeled seconds
+    pub baseline_s: f64,
+    /// best offload pattern's modeled seconds
+    pub final_s: f64,
+    pub funcblock: Option<FuncBlockReport>,
+    pub ga: Option<GaResult>,
+    /// loop ids the gene indexes (after function-block exclusion)
+    pub gene_loops: Vec<LoopId>,
+    pub best_gene: Vec<bool>,
+    pub final_plan: ExecPlan,
+    /// final verification measurement
+    pub final_measurement: Measurement,
+    /// offload-directive-annotated source in the app's own language
+    pub annotated_source: String,
+    /// total distinct measurements spent (func-block trials + GA)
+    pub total_measurements: usize,
+    /// wall seconds the whole offload search took
+    pub search_wall_s: f64,
+}
+
+impl OffloadReport {
+    pub fn speedup(&self) -> f64 {
+        self.baseline_s / self.final_s.max(1e-300)
+    }
+
+    /// JSON rendering for logs / EXPERIMENTS.md tooling.
+    pub fn to_json(&self) -> Json {
+        let gene: String =
+            self.best_gene.iter().map(|&b| if b { '1' } else { '0' }).collect();
+        let mut j = Json::obj()
+            .set("app", self.app.as_str())
+            .set("lang", self.lang.name())
+            .set("baseline_s", self.baseline_s)
+            .set("final_s", self.final_s)
+            .set("speedup", self.speedup())
+            .set("gene", gene)
+            .set("gene_loops", Json::Arr(self.gene_loops.iter().map(|&l| Json::Int(l as i64)).collect()))
+            .set("measurements", self.total_measurements)
+            .set("search_wall_s", self.search_wall_s)
+            .set("gpu_regions", self.final_plan.regions.len())
+            .set("gpu_lib_calls", self.final_plan.gpu_calls.len());
+        if let Some(fb) = &self.funcblock {
+            j = j.set(
+                "funcblock_chosen",
+                Json::Arr(
+                    fb.chosen
+                        .iter()
+                        .map(|&i| Json::Str(fb.candidates[i].description.clone()))
+                        .collect(),
+                ),
+            );
+        }
+        if let Some(ga) = &self.ga {
+            j = j.set("ga_generations", ga.history.len()).set("ga_evaluations", ga.evaluations);
+        }
+        j
+    }
+
+    /// One-line summary for CLI output.
+    pub fn summary(&self) -> String {
+        use crate::util::bench::fmt_time;
+        format!(
+            "{:<14} [{:<6}] baseline {:>10} → offloaded {:>10}  speedup {:>6.2}x  ({} measurements)",
+            self.app,
+            self.lang.name(),
+            fmt_time(self.baseline_s),
+            fmt_time(self.final_s),
+            self.speedup(),
+            self.total_measurements
+        )
+    }
+}
+
+/// The coordinator: owns the device (PJRT executable cache persists across
+/// trials and applications) and the pattern DB.
+pub struct Coordinator {
+    pub cfg: Config,
+    pub db: PatternDb,
+    dev: GpuDevice,
+}
+
+impl Coordinator {
+    pub fn new(cfg: Config) -> Coordinator {
+        let dev = if cfg.use_pjrt {
+            GpuDevice::with_runtime(cfg.cost.clone())
+        } else {
+            GpuDevice::simulated(cfg.cost.clone())
+        };
+        Coordinator { cfg, db: PatternDb::builtin(), dev }
+    }
+
+    /// Whether library kernels run through real PJRT artifacts.
+    pub fn device_is_pjrt(&self) -> bool {
+        self.dev.is_pjrt()
+    }
+
+    /// Parse + offload one source string.
+    pub fn offload_source(&mut self, code: &str, lang: Lang, name: &str) -> Result<OffloadReport> {
+        let prog = frontend::parse(code, lang, name)?;
+        self.offload_program(&prog)
+    }
+
+    /// The full Fig. 1 flow over a parsed program.
+    pub fn offload_program(&mut self, prog: &Program) -> Result<OffloadReport> {
+        let t_start = std::time::Instant::now();
+        let analysis = analysis::analyze(prog);
+        let measurer = Measurer::new(prog, self.cfg.vm.clone(), self.cfg.tolerance)?;
+        let mut total_measurements = 0usize;
+
+        // ---- phase 1: function blocks (first, per §4.2) ------------------
+        let mut fb_report: Option<FuncBlockReport> = None;
+        let mut chosen_candidates: Vec<Candidate> = Vec::new();
+        if self.cfg.funcblock.enabled {
+            let candidates =
+                funcblock::find_candidates(prog, &analysis, &self.db, &self.cfg.funcblock);
+            if !candidates.is_empty() {
+                let report = funcblock::trial_combinations(
+                    prog,
+                    &analysis,
+                    &candidates,
+                    &measurer,
+                    &mut self.dev,
+                    &self.cfg.funcblock,
+                    self.cfg.naive_transfers,
+                );
+                total_measurements += report.trials.len();
+                chosen_candidates =
+                    report.chosen.iter().map(|&i| report.candidates[i].clone()).collect();
+                fb_report = Some(report);
+            }
+        }
+
+        // ---- phase 2: loop GA on the remaining code ----------------------
+        let excluded = self.excluded_loops(&analysis, &chosen_candidates);
+        let gene_loops: Vec<LoopId> = analysis
+            .gene_loops()
+            .into_iter()
+            .filter(|id| !excluded.contains(id))
+            .collect();
+
+        let chosen_refs: Vec<&Candidate> = chosen_candidates.iter().collect();
+        let build_full_plan = |gene: &[bool]| -> ExecPlan {
+            // expand the reduced gene back over all parallelizable loops
+            let all = analysis.gene_loops();
+            let mut full = vec![false; all.len()];
+            for (k, id) in gene_loops.iter().enumerate() {
+                let pos = all.iter().position(|x| x == id).unwrap();
+                full[pos] = gene[k];
+            }
+            let mut plan = analysis::build_plan(&analysis, &full, self.cfg.naive_transfers);
+            funcblock::apply(&mut plan, &analysis, &chosen_refs);
+            plan
+        };
+
+        let dev = &mut self.dev;
+        let mut ga_measure_count = 0usize;
+        let ga_result: GaResult = ga::optimize(gene_loops.len(), &self.cfg.ga, |gene| {
+            let plan = build_full_plan(gene);
+            dev.reset();
+            ga_measure_count += 1;
+            measurer.measure(prog, &plan, dev).ga_time()
+        });
+        total_measurements += ga_result.evaluations;
+
+        // ---- phase 3: final selection + verification ---------------------
+        let best_gene = ga_result.best_gene.clone();
+        let final_plan = build_full_plan(&best_gene);
+        self.dev.reset();
+        let final_measurement = measurer.measure(prog, &final_plan, &mut self.dev);
+        let final_s = if final_measurement.ok {
+            final_measurement.modeled_s
+        } else {
+            // should not happen (GA keeps the CPU gene) — fall back
+            measurer.baseline_modeled_s()
+        };
+
+        // ---- directive-annotated source -----------------------------------
+        let mut directives = analysis::plan_directives(&analysis, &final_plan);
+        // library-replaced regions render as offloaded loops too
+        for (id, region) in &final_plan.regions {
+            directives.entry(*id).or_insert_with(|| render::LoopDirective {
+                offload: true,
+                copy_in: region.copy_in.clone(),
+                copy_out: region.copy_out.clone(),
+                present: vec![],
+            });
+        }
+        let annotated_source = render::render(prog, &directives);
+
+        Ok(OffloadReport {
+            app: prog.name.clone(),
+            lang: prog.lang,
+            baseline_s: measurer.baseline_modeled_s(),
+            final_s,
+            funcblock: fb_report,
+            ga: Some(ga_result),
+            gene_loops,
+            best_gene,
+            final_plan,
+            final_measurement,
+            annotated_source,
+            total_measurements,
+            search_wall_s: t_start.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Loops the GA must not touch: inside a clone-replaced nest, or an
+    /// ancestor of one (offloading an ancestor would re-enter the replaced
+    /// region on the device).
+    fn excluded_loops(
+        &self,
+        analysis: &ProgramAnalysis,
+        chosen: &[Candidate],
+    ) -> HashSet<LoopId> {
+        let mut excluded = HashSet::new();
+        for c in chosen {
+            excluded.extend(c.swallowed_loops(analysis));
+            if let funcblock::CandidateKind::CloneNest { root, .. } = &c.kind {
+                let mut anc = analysis.loops[*root].parent;
+                while let Some(a) = anc {
+                    excluded.insert(a);
+                    anc = analysis.loops[a].parent;
+                }
+            }
+        }
+        excluded
+    }
+}
+
+// ---------------------------------------------------------------------------
+// environment-adaptive target selection (GPU / many-core / FPGA)
+// ---------------------------------------------------------------------------
+
+/// Result of trying every migration target the environment offers
+/// (the outer loop of the environment-adaptive concept: the same code is
+/// converted for whatever accelerator the deployment environment has, and
+/// the best-performing target is selected).
+#[derive(Debug)]
+pub struct AdaptiveReport {
+    pub per_target: Vec<(crate::device::TargetKind, OffloadReport)>,
+    pub chosen: crate::device::TargetKind,
+}
+
+impl AdaptiveReport {
+    pub fn chosen_report(&self) -> &OffloadReport {
+        &self.per_target.iter().find(|(t, _)| *t == self.chosen).unwrap().1
+    }
+}
+
+/// Offload `code` against every target in `targets`, returning all reports
+/// and the fastest target. PJRT artifacts are used for the GPU target
+/// (when `cfg.use_pjrt`); other targets use their cost models with CPU
+/// reference numerics (the substitution DESIGN.md documents).
+pub fn offload_adaptive(
+    code: &str,
+    lang: Lang,
+    name: &str,
+    cfg: &Config,
+    targets: &[crate::device::TargetKind],
+) -> Result<AdaptiveReport> {
+    anyhow::ensure!(!targets.is_empty(), "need at least one target");
+    let mut per_target = Vec::new();
+    for &t in targets {
+        let mut tcfg = cfg.clone();
+        tcfg.cost = t.cost_model();
+        tcfg.use_pjrt = cfg.use_pjrt && t == crate::device::TargetKind::Gpu;
+        let mut c = Coordinator::new(tcfg);
+        per_target.push((t, c.offload_source(code, lang, name)?));
+    }
+    let chosen = per_target
+        .iter()
+        .min_by(|a, b| a.1.final_s.partial_cmp(&b.1.final_s).unwrap())
+        .unwrap()
+        .0;
+    Ok(AdaptiveReport { per_target, chosen })
+}
+
+// ---------------------------------------------------------------------------
+// batch front end (the "application use request" loop of §4.2)
+// ---------------------------------------------------------------------------
+
+/// One offload request.
+#[derive(Debug, Clone)]
+pub struct BatchRequest {
+    pub name: String,
+    pub lang: Lang,
+    pub code: String,
+}
+
+impl BatchRequest {
+    pub fn workload(app: &str, lang: Lang) -> Option<BatchRequest> {
+        let s = crate::workloads::get(app, lang)?;
+        Some(BatchRequest { name: app.to_string(), lang, code: s.code.to_string() })
+    }
+}
+
+/// Serve a batch of offload requests over `workers` OS threads, each with
+/// its own coordinator (PJRT clients are not `Send`, so every worker owns
+/// its device; executable caches are per-worker). Result order matches
+/// request order.
+pub fn offload_batch(
+    requests: &[BatchRequest],
+    workers: usize,
+    cfg: &Config,
+) -> Vec<Result<OffloadReport>> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    let workers = workers.clamp(1, requests.len().max(1));
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<Result<OffloadReport>>>> =
+        Mutex::new((0..requests.len()).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                let mut c = Coordinator::new(cfg.clone());
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= requests.len() {
+                        break;
+                    }
+                    let r = &requests[i];
+                    let out = c.offload_source(&r.code, r.lang, &r.name);
+                    results.lock().unwrap()[i] = Some(out);
+                }
+            });
+        }
+    });
+    results.into_inner().unwrap().into_iter().map(|o| o.expect("worker filled slot")).collect()
+}
+
+/// Convenience: offload one workload app in one language with a config.
+pub fn offload_workload(app: &str, lang: Lang, cfg: Config) -> Result<OffloadReport> {
+    let src = crate::workloads::get(app, lang)
+        .ok_or_else(|| anyhow::anyhow!("unknown workload `{app}`"))?;
+    let mut c = Coordinator::new(cfg);
+    c.offload_source(src.code, lang, app)
+}
+
+/// Markdown summary table over several reports (E3-style output).
+pub fn markdown_summary(reports: &[OffloadReport]) -> String {
+    let rows: Vec<Vec<String>> = reports
+        .iter()
+        .map(|r| {
+            vec![
+                r.app.clone(),
+                r.lang.name().to_string(),
+                format!("{:.3}", r.baseline_s * 1e3),
+                format!("{:.3}", r.final_s * 1e3),
+                format!("{:.2}x", r.speedup()),
+                format!("{}", r.total_measurements),
+            ]
+        })
+        .collect();
+    crate::util::bench::markdown_table(
+        &["app", "lang", "CPU ms", "offloaded ms", "speedup", "measurements"],
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> Config {
+        Config::fast_sim()
+    }
+
+    #[test]
+    fn mm_offload_finds_clone_replacement_and_speedup() {
+        let r = offload_workload("mm", Lang::C, fast_cfg()).unwrap();
+        assert!(r.final_measurement.ok);
+        assert!(r.speedup() > 2.0, "speedup {}", r.speedup());
+        // the hand-written matmul nest must be library-replaced
+        let fb = r.funcblock.as_ref().unwrap();
+        assert!(!fb.chosen.is_empty(), "clone replacement should win");
+        assert!(
+            r.final_plan
+                .regions
+                .values()
+                .any(|g| matches!(g.exec, crate::vm::RegionExec::Library { .. })),
+            "final plan should contain a library region"
+        );
+    }
+
+    #[test]
+    fn smallloops_stays_on_cpu() {
+        let r = offload_workload("smallloops", Lang::C, fast_cfg()).unwrap();
+        // GA should learn that offloading tiny loops hurts
+        assert!(
+            r.best_gene.iter().all(|&b| !b),
+            "small loops must stay on CPU: {:?}",
+            r.best_gene
+        );
+        assert!((r.speedup() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn same_pattern_found_across_languages() {
+        // E7: semantically identical apps → same offload decisions
+        let mut speedups = Vec::new();
+        for lang in Lang::all() {
+            let r = offload_workload("blackscholes", lang, fast_cfg()).unwrap();
+            assert!(r.final_measurement.ok, "{lang}: {:?}", r.final_measurement.failure);
+            speedups.push((lang, r.best_gene.clone(), r.speedup()));
+        }
+        for w in speedups.windows(2) {
+            assert_eq!(w[0].1, w[1].1, "{} vs {} gene mismatch", w[0].0, w[1].0);
+            assert!((w[0].2 - w[1].2).abs() < 1e-9, "speedups differ");
+        }
+    }
+
+    #[test]
+    fn fourier_uses_name_matched_library() {
+        let r = offload_workload("fourier", Lang::Java, fast_cfg()).unwrap();
+        assert!(r.final_plan.gpu_calls.contains("dft"), "dft should be GPU-replaced");
+        assert!(r.speedup() > 1.5, "speedup {}", r.speedup());
+    }
+
+    #[test]
+    fn annotated_source_contains_directives() {
+        let r = offload_workload("blackscholes", Lang::C, fast_cfg()).unwrap();
+        assert!(
+            r.annotated_source.contains("#pragma acc"),
+            "annotated source should carry OpenACC directives:\n{}",
+            r.annotated_source
+        );
+        let rp = offload_workload("blackscholes", Lang::Python, fast_cfg()).unwrap();
+        assert!(rp.annotated_source.contains("# [pycuda]"));
+    }
+
+    #[test]
+    fn adaptive_target_selection_picks_many_core_for_small_loops() {
+        // small parallel loops: many-core (no transfers, cheap entry) must
+        // beat the GPU; heavy compute prefers the GPU
+        let src = crate::workloads::get("smallloops", Lang::C).unwrap();
+        let r = offload_adaptive(
+            src.code,
+            Lang::C,
+            "smallloops",
+            &fast_cfg(),
+            &crate::device::TargetKind::all(),
+        )
+        .unwrap();
+        assert_eq!(r.per_target.len(), 3);
+        // every target at least matches CPU (GA keeps the all-zero gene)
+        for (t, rep) in &r.per_target {
+            assert!(rep.speedup() >= 0.999, "{t}: {}", rep.speedup());
+        }
+        let heavy = crate::workloads::get("blackscholes", Lang::C).unwrap();
+        let r2 = offload_adaptive(
+            heavy.code,
+            Lang::C,
+            "blackscholes",
+            &fast_cfg(),
+            &crate::device::TargetKind::all(),
+        )
+        .unwrap();
+        // on the heavy elementwise app the accelerators must beat many-core
+        let get = |t: crate::device::TargetKind| {
+            r2.per_target.iter().find(|(x, _)| *x == t).unwrap().1.final_s
+        };
+        assert!(
+            get(crate::device::TargetKind::Gpu) < get(crate::device::TargetKind::ManyCore),
+            "GPU should win on heavy elementwise work"
+        );
+    }
+
+    #[test]
+    fn batch_offload_parallel_matches_sequential() {
+        let reqs: Vec<BatchRequest> = ["smallloops", "mixed", "fourier"]
+            .iter()
+            .flat_map(|app| Lang::all().map(|l| BatchRequest::workload(app, l).unwrap()))
+            .collect();
+        let seq = offload_batch(&reqs, 1, &fast_cfg());
+        let par = offload_batch(&reqs, 4, &fast_cfg());
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(a.app, b.app);
+            assert_eq!(a.best_gene, b.best_gene, "{}", a.app);
+            assert!((a.final_s - b.final_s).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn report_json_is_well_formed() {
+        let r = offload_workload("smallloops", Lang::Python, fast_cfg()).unwrap();
+        let s = r.to_json().to_string();
+        assert!(s.contains("\"app\":\"smallloops\""));
+        assert!(s.contains("\"speedup\":"));
+    }
+}

@@ -1,0 +1,609 @@
+//! C front end (the paper's Clang analogue).
+//!
+//! Supported subset: `#include`/`#define`-free translation units of
+//! functions over `int`, `double`/`float` scalars and rectangular arrays
+//! (`double a[n][m];`, VLA-style extents). Preprocessor lines are stripped.
+//! `printf("fmt", e1, e2, ...)` lowers to one `Print` per value argument.
+
+use super::lex::{Cursor, Lexer, Tok};
+use super::{PResult, ParseError};
+use crate::ir::*;
+
+pub fn parse(source: &str, name: &str) -> PResult<Program> {
+    // Strip preprocessor lines (the paper's flow runs after preprocessing).
+    let stripped: String = source
+        .lines()
+        .map(|l| if l.trim_start().starts_with('#') { "" } else { l })
+        .collect::<Vec<_>>()
+        .join("\n");
+    let toks = Lexer::new(&stripped, false).tokenize()?;
+    let mut p = CParser { cur: Cursor::new(toks) };
+    let mut functions = Vec::new();
+    while !p.cur.at_eof() {
+        functions.push(p.function()?);
+    }
+    Ok(Program { lang: Lang::C, name: name.to_string(), functions })
+}
+
+struct CParser {
+    cur: Cursor,
+}
+
+impl CParser {
+    fn err(&self, msg: impl Into<String>) -> ParseError {
+        self.cur.err(msg)
+    }
+
+    fn base_type(&mut self) -> PResult<Option<Type>> {
+        let t = if self.cur.eat_ident("void") {
+            Type::Void
+        } else if self.cur.eat_ident("int") || self.cur.eat_ident("long") {
+            Type::Int
+        } else if self.cur.eat_ident("double") || self.cur.eat_ident("float") {
+            Type::Float
+        } else {
+            return Ok(None);
+        };
+        Ok(Some(t))
+    }
+
+    fn function(&mut self) -> PResult<Function> {
+        // allow `static` qualifier
+        self.cur.eat_ident("static");
+        let ret = self
+            .base_type()?
+            .ok_or_else(|| self.err(format!("expected type, found {}", self.cur.peek().describe())))?;
+        let name = self.cur.expect_ident_any()?;
+        self.cur.expect_punct("(")?;
+        let mut params = Vec::new();
+        if !self.cur.at_punct(")") {
+            loop {
+                params.push(self.param()?);
+                if !self.cur.eat_punct(",") {
+                    break;
+                }
+            }
+        }
+        self.cur.expect_punct(")")?;
+        self.cur.expect_punct("{")?;
+        let body = self.block_until_brace()?;
+        Ok(Function { name, params, ret, body })
+    }
+
+    fn param(&mut self) -> PResult<Param> {
+        if self.cur.eat_ident("void") {
+            // `f(void)`
+            return Ok(Param { name: "_void".into(), ty: Type::Void });
+        }
+        let base = self
+            .base_type()?
+            .ok_or_else(|| self.err("expected parameter type"))?;
+        // pointer-style array param: double *a
+        let mut stars = 0;
+        while self.cur.eat_punct("*") {
+            stars += 1;
+        }
+        let name = self.cur.expect_ident_any()?;
+        // bracket-style: double a[] / a[][] / a[n][m] (extents ignored)
+        let mut brackets = 0;
+        while self.cur.eat_punct("[") {
+            if !self.cur.at_punct("]") {
+                let _ = self.expr()?; // extent, ignored for params
+            }
+            self.cur.expect_punct("]")?;
+            brackets += 1;
+        }
+        let rank = stars + brackets;
+        let ty = if rank > 0 { Type::array_of(base, rank) } else { base };
+        Ok(Param { name, ty })
+    }
+
+    fn block_until_brace(&mut self) -> PResult<Vec<Stmt>> {
+        let mut out = Vec::new();
+        while !self.cur.eat_punct("}") {
+            if self.cur.at_eof() {
+                return Err(self.err("unexpected end of input inside block"));
+            }
+            out.push(self.stmt()?);
+        }
+        Ok(out)
+    }
+
+    /// One statement or a braced block flattened into surrounding control.
+    fn stmt_or_block(&mut self) -> PResult<Vec<Stmt>> {
+        if self.cur.eat_punct("{") {
+            self.block_until_brace()
+        } else {
+            Ok(vec![self.stmt()?])
+        }
+    }
+
+    fn stmt(&mut self) -> PResult<Stmt> {
+        if self.cur.at_ident("for") {
+            return self.for_stmt();
+        }
+        if self.cur.eat_ident("while") {
+            self.cur.expect_punct("(")?;
+            let cond = self.expr()?;
+            self.cur.expect_punct(")")?;
+            let body = self.stmt_or_block()?;
+            return Ok(Stmt::While { cond, body });
+        }
+        if self.cur.eat_ident("if") {
+            self.cur.expect_punct("(")?;
+            let cond = self.expr()?;
+            self.cur.expect_punct(")")?;
+            let then_body = self.stmt_or_block()?;
+            let else_body = if self.cur.eat_ident("else") {
+                if self.cur.at_ident("if") {
+                    vec![self.stmt()?]
+                } else {
+                    self.stmt_or_block()?
+                }
+            } else {
+                vec![]
+            };
+            return Ok(Stmt::If { cond, then_body, else_body });
+        }
+        if self.cur.eat_ident("return") {
+            let e = if self.cur.at_punct(";") { None } else { Some(self.expr()?) };
+            self.cur.expect_punct(";")?;
+            return Ok(Stmt::Return(e));
+        }
+        if self.cur.eat_ident("break") {
+            self.cur.expect_punct(";")?;
+            return Ok(Stmt::Break);
+        }
+        if self.cur.eat_ident("continue") {
+            self.cur.expect_punct(";")?;
+            return Ok(Stmt::Continue);
+        }
+        if self.cur.at_ident("printf") {
+            return self.printf_stmt();
+        }
+        // declaration?
+        if self.cur.at_ident("int")
+            || self.cur.at_ident("long")
+            || self.cur.at_ident("double")
+            || self.cur.at_ident("float")
+        {
+            let s = self.decl()?;
+            self.cur.expect_punct(";")?;
+            return Ok(s);
+        }
+        // assignment / call / increment
+        let s = self.simple_stmt()?;
+        self.cur.expect_punct(";")?;
+        Ok(s)
+    }
+
+    fn decl(&mut self) -> PResult<Stmt> {
+        let base = self.base_type()?.unwrap();
+        let name = self.cur.expect_ident_any()?;
+        let mut dims = Vec::new();
+        while self.cur.eat_punct("[") {
+            dims.push(self.expr()?);
+            self.cur.expect_punct("]")?;
+        }
+        let ty = if dims.is_empty() {
+            base
+        } else {
+            Type::array_of(base, dims.len())
+        };
+        let init = if self.cur.eat_punct("=") { Some(self.expr()?) } else { None };
+        if ty.is_array() && init.is_some() {
+            return Err(self.err("array initializers are not supported"));
+        }
+        Ok(Stmt::Decl { name, ty, dims, init })
+    }
+
+    fn printf_stmt(&mut self) -> PResult<Stmt> {
+        self.cur.expect_kw("printf")?;
+        self.cur.expect_punct("(")?;
+        match self.cur.bump() {
+            Tok::Str(_) => {}
+            other => return Err(self.err(format!("printf expects a format string, found {}", other.describe()))),
+        }
+        let mut args = Vec::new();
+        while self.cur.eat_punct(",") {
+            args.push(self.expr()?);
+        }
+        self.cur.expect_punct(")")?;
+        self.cur.expect_punct(";")?;
+        match args.len() {
+            0 => Ok(Stmt::Print(Expr::IntLit(0))), // bare banner print: ignored value
+            1 => Ok(Stmt::Print(args.pop().unwrap())),
+            _ => Err(self.err("printf with more than one value argument is not supported; print one value per call")),
+        }
+    }
+
+    /// `for (init; cond; update) body`, normalized to a counted IR loop.
+    fn for_stmt(&mut self) -> PResult<Stmt> {
+        self.cur.expect_kw("for")?;
+        self.cur.expect_punct("(")?;
+        // init: `int i = e` | `i = e`
+        let declared = self.cur.eat_ident("int") || self.cur.eat_ident("long");
+        let var = self.cur.expect_ident_any()?;
+        let _ = declared;
+        self.cur.expect_punct("=")?;
+        let start = self.expr()?;
+        self.cur.expect_punct(";")?;
+        // cond: var < e | var <= e | var > e | var >= e
+        let cond_var = self.cur.expect_ident_any()?;
+        if cond_var != var {
+            return Err(self.err(format!(
+                "for-loop condition must test the induction variable `{var}`, found `{cond_var}`"
+            )));
+        }
+        let (upward, inclusive) = if self.cur.eat_punct("<") {
+            (true, false)
+        } else if self.cur.eat_punct("<=") {
+            (true, true)
+        } else if self.cur.eat_punct(">") {
+            (false, false)
+        } else if self.cur.eat_punct(">=") {
+            (false, true)
+        } else {
+            return Err(self.err("for-loop condition must be a comparison"));
+        };
+        let bound = self.expr()?;
+        self.cur.expect_punct(";")?;
+        // update: i++ | i-- | i += k | i -= k | i = i + k | i = i - k
+        let upd_var = self.cur.expect_ident_any()?;
+        if upd_var != var {
+            return Err(self.err("for-loop update must modify the induction variable"));
+        }
+        let step: Expr = if self.cur.eat_punct("++") {
+            Expr::int(1)
+        } else if self.cur.eat_punct("--") {
+            Expr::int(-1)
+        } else if self.cur.eat_punct("+=") {
+            self.expr()?
+        } else if self.cur.eat_punct("-=") {
+            let e = self.expr()?;
+            Expr::Unary { op: UnOp::Neg, operand: Box::new(e) }
+        } else if self.cur.eat_punct("=") {
+            // i = i + k / i = i - k
+            let v2 = self.cur.expect_ident_any()?;
+            if v2 != var {
+                return Err(self.err("for-loop update must be i = i ± k"));
+            }
+            if self.cur.eat_punct("+") {
+                self.expr()?
+            } else if self.cur.eat_punct("-") {
+                let e = self.expr()?;
+                Expr::Unary { op: UnOp::Neg, operand: Box::new(e) }
+            } else {
+                return Err(self.err("for-loop update must be i = i ± k"));
+            }
+        } else {
+            return Err(self.err("unsupported for-loop update"));
+        };
+        self.cur.expect_punct(")")?;
+        let body = self.stmt_or_block()?;
+        // Normalize to exclusive upper bound, matching `range()` semantics:
+        // upward `i <= b` → end = b + 1; downward `i >= b` → end = b - 1.
+        let end = match (upward, inclusive) {
+            (true, false) | (false, false) => bound,
+            (true, true) => Expr::bin(BinOp::Add, bound, Expr::int(1)),
+            (false, true) => Expr::bin(BinOp::Sub, bound, Expr::int(1)),
+        };
+        Ok(Stmt::For { id: 0, var, start, end, step, body })
+    }
+
+    fn simple_stmt(&mut self) -> PResult<Stmt> {
+        let name = self.cur.expect_ident_any()?;
+        // call statement
+        if self.cur.at_punct("(") {
+            let args = self.call_args()?;
+            return Ok(Stmt::Call { name, args });
+        }
+        // i++ / i--
+        if self.cur.eat_punct("++") {
+            return Ok(Stmt::Assign {
+                target: LValue::Var(name),
+                op: AssignOp::Add,
+                value: Expr::int(1),
+            });
+        }
+        if self.cur.eat_punct("--") {
+            return Ok(Stmt::Assign {
+                target: LValue::Var(name),
+                op: AssignOp::Sub,
+                value: Expr::int(1),
+            });
+        }
+        // lvalue: possibly indexed
+        let target = if self.cur.at_punct("[") {
+            let mut indices = Vec::new();
+            while self.cur.eat_punct("[") {
+                indices.push(self.expr()?);
+                self.cur.expect_punct("]")?;
+            }
+            LValue::Index { base: name, indices }
+        } else {
+            LValue::Var(name)
+        };
+        let op = if self.cur.eat_punct("=") {
+            AssignOp::Set
+        } else if self.cur.eat_punct("+=") {
+            AssignOp::Add
+        } else if self.cur.eat_punct("-=") {
+            AssignOp::Sub
+        } else if self.cur.eat_punct("*=") {
+            AssignOp::Mul
+        } else if self.cur.eat_punct("/=") {
+            AssignOp::Div
+        } else {
+            return Err(self.err(format!("expected assignment, found {}", self.cur.peek().describe())));
+        };
+        let value = self.expr()?;
+        Ok(Stmt::Assign { target, op, value })
+    }
+
+    fn call_args(&mut self) -> PResult<Vec<Expr>> {
+        self.cur.expect_punct("(")?;
+        let mut args = Vec::new();
+        if !self.cur.at_punct(")") {
+            loop {
+                args.push(self.expr()?);
+                if !self.cur.eat_punct(",") {
+                    break;
+                }
+            }
+        }
+        self.cur.expect_punct(")")?;
+        Ok(args)
+    }
+
+    // ---- expressions: precedence climbing ----
+
+    fn expr(&mut self) -> PResult<Expr> {
+        self.or_expr()
+    }
+
+    fn or_expr(&mut self) -> PResult<Expr> {
+        let mut lhs = self.and_expr()?;
+        while self.cur.eat_punct("||") {
+            let rhs = self.and_expr()?;
+            lhs = Expr::bin(BinOp::Or, lhs, rhs);
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> PResult<Expr> {
+        let mut lhs = self.cmp_expr()?;
+        while self.cur.eat_punct("&&") {
+            let rhs = self.cmp_expr()?;
+            lhs = Expr::bin(BinOp::And, lhs, rhs);
+        }
+        Ok(lhs)
+    }
+
+    fn cmp_expr(&mut self) -> PResult<Expr> {
+        let mut lhs = self.add_expr()?;
+        loop {
+            let op = if self.cur.eat_punct("==") {
+                BinOp::Eq
+            } else if self.cur.eat_punct("!=") {
+                BinOp::Ne
+            } else if self.cur.eat_punct("<=") {
+                BinOp::Le
+            } else if self.cur.eat_punct(">=") {
+                BinOp::Ge
+            } else if self.cur.eat_punct("<") {
+                BinOp::Lt
+            } else if self.cur.eat_punct(">") {
+                BinOp::Gt
+            } else {
+                return Ok(lhs);
+            };
+            let rhs = self.add_expr()?;
+            lhs = Expr::bin(op, lhs, rhs);
+        }
+    }
+
+    fn add_expr(&mut self) -> PResult<Expr> {
+        let mut lhs = self.mul_expr()?;
+        loop {
+            let op = if self.cur.eat_punct("+") {
+                BinOp::Add
+            } else if self.cur.eat_punct("-") {
+                BinOp::Sub
+            } else {
+                return Ok(lhs);
+            };
+            let rhs = self.mul_expr()?;
+            lhs = Expr::bin(op, lhs, rhs);
+        }
+    }
+
+    fn mul_expr(&mut self) -> PResult<Expr> {
+        let mut lhs = self.unary_expr()?;
+        loop {
+            let op = if self.cur.eat_punct("*") {
+                BinOp::Mul
+            } else if self.cur.eat_punct("/") {
+                BinOp::Div
+            } else if self.cur.eat_punct("%") {
+                BinOp::Mod
+            } else {
+                return Ok(lhs);
+            };
+            let rhs = self.unary_expr()?;
+            lhs = Expr::bin(op, lhs, rhs);
+        }
+    }
+
+    fn unary_expr(&mut self) -> PResult<Expr> {
+        if self.cur.eat_punct("-") {
+            let e = self.unary_expr()?;
+            return Ok(Expr::Unary { op: UnOp::Neg, operand: Box::new(e) });
+        }
+        if self.cur.eat_punct("!") {
+            let e = self.unary_expr()?;
+            return Ok(Expr::Unary { op: UnOp::Not, operand: Box::new(e) });
+        }
+        // C cast `(double) e` / `(int) e` — parse and keep the operand;
+        // the VM is dynamically typed (int→float promotion is automatic).
+        if self.cur.at_punct("(") {
+            if let Tok::Ident(id) = self.cur.peek2() {
+                if matches!(id.as_str(), "double" | "float" | "int" | "long") {
+                    self.cur.expect_punct("(")?;
+                    let _ = self.cur.expect_ident_any()?;
+                    self.cur.expect_punct(")")?;
+                    return self.unary_expr();
+                }
+            }
+        }
+        self.postfix_expr()
+    }
+
+    fn postfix_expr(&mut self) -> PResult<Expr> {
+        match self.cur.bump() {
+            Tok::Int(v) => Ok(Expr::IntLit(v)),
+            Tok::Float(v) => Ok(Expr::FloatLit(v)),
+            Tok::Punct("(") => {
+                let e = self.expr()?;
+                self.cur.expect_punct(")")?;
+                Ok(e)
+            }
+            Tok::Ident(name) => {
+                if self.cur.at_punct("(") {
+                    let args = self.call_args()?;
+                    return Ok(Expr::Call { name, args });
+                }
+                if self.cur.at_punct("[") {
+                    let mut indices = Vec::new();
+                    while self.cur.eat_punct("[") {
+                        indices.push(self.expr()?);
+                        self.cur.expect_punct("]")?;
+                    }
+                    return Ok(Expr::Index { base: name, indices });
+                }
+                Ok(Expr::Var(name))
+            }
+            other => Err(self.err(format!("unexpected {} in expression", other.describe()))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_ok(src: &str) -> Program {
+        let mut p = parse(src, "t").unwrap();
+        p.number_loops();
+        p
+    }
+
+    #[test]
+    fn parses_function_with_loop() {
+        let p = parse_ok(
+            r#"
+            #include <stdio.h>
+            void main() {
+                int n = 4;
+                double a[n];
+                for (int i = 0; i < n; i++) {
+                    a[i] = i * 1.5;
+                }
+                printf("%f\n", a[2]);
+            }
+            "#,
+        );
+        assert_eq!(p.functions.len(), 1);
+        assert_eq!(p.loop_count(), 1);
+        let f = p.entry().unwrap();
+        assert!(matches!(f.body[0], Stmt::Decl { .. }));
+        assert!(matches!(f.body.last().unwrap(), Stmt::Print(_)));
+    }
+
+    #[test]
+    fn for_inclusive_and_downward_bounds() {
+        let p = parse_ok(
+            "void main() { int s = 0; for (int i = 1; i <= 10; i++) { s += i; } for (int j = 10; j > 0; j--) { s -= j; } }",
+        );
+        let f = p.entry().unwrap();
+        let fors: Vec<_> = f
+            .body
+            .iter()
+            .filter_map(|s| match s {
+                Stmt::For { end, step, .. } => Some((end.clone(), step.clone())),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(fors.len(), 2);
+        // i <= 10 → end = 10 + 1
+        assert_eq!(fors[0].0, Expr::bin(BinOp::Add, Expr::int(10), Expr::int(1)));
+        // j-- → step = -1
+        assert_eq!(fors[1].1, Expr::int(-1));
+    }
+
+    #[test]
+    fn params_with_arrays_and_pointers() {
+        let p = parse_ok("void f(double *x, double a[][], int n) { } void main() { }");
+        let f = p.function("f").unwrap();
+        assert_eq!(f.params[0].ty, Type::array_of(Type::Float, 1));
+        assert_eq!(f.params[1].ty, Type::array_of(Type::Float, 2));
+        assert_eq!(f.params[2].ty, Type::Int);
+    }
+
+    #[test]
+    fn precedence() {
+        let p = parse_ok("void main() { int x = 1 + 2 * 3; }");
+        let f = p.entry().unwrap();
+        match &f.body[0] {
+            Stmt::Decl { init: Some(e), .. } => {
+                assert_eq!(
+                    *e,
+                    Expr::bin(
+                        BinOp::Add,
+                        Expr::int(1),
+                        Expr::bin(BinOp::Mul, Expr::int(2), Expr::int(3))
+                    )
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn casts_are_transparent() {
+        let p = parse_ok("void main() { double x = (double) 3 / (double)4; }");
+        let f = p.entry().unwrap();
+        match &f.body[0] {
+            Stmt::Decl { init: Some(e), .. } => {
+                assert_eq!(*e, Expr::bin(BinOp::Div, Expr::int(3), Expr::int(4)));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn error_reports_position() {
+        let err = parse("void main() { int x = ; }", "t").unwrap_err();
+        assert!(err.line >= 1);
+        assert!(err.msg.contains("unexpected"));
+    }
+
+    #[test]
+    fn rejects_multi_value_printf() {
+        assert!(parse(r#"void main() { printf("%f %f", 1.0, 2.0); }"#, "t").is_err());
+    }
+
+    #[test]
+    fn nested_loops_and_if() {
+        let p = parse_ok(
+            r#"void main() {
+                int n = 3;
+                double m[n][n];
+                for (int i = 0; i < n; i++)
+                    for (int j = 0; j < n; j++)
+                        if (i == j) { m[i][j] = 1.0; } else { m[i][j] = 0.0; }
+            }"#,
+        );
+        assert_eq!(p.loop_count(), 2);
+    }
+}

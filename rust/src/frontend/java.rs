@@ -1,0 +1,576 @@
+//! Java front end (the paper's JavaParser analogue).
+//!
+//! Supported subset: one class with static methods; `int`/`long`,
+//! `double`/`float` scalars; `double[]`/`double[][]` arrays created with
+//! `new double[n][m]`; `for (int i = 0; i < n; i++)`; `Math.sqrt` etc.;
+//! `System.out.println(x)` lowers to `Print`; qualified static calls
+//! `Lib.f(...)` lower to plain `f(...)` calls (the qualifier is the
+//! library namespace, which the pattern DB matches by method name).
+//! The `public static void main(String[] args)` entry point is normalized
+//! to the IR function `main` with no parameters.
+
+use super::lex::{Cursor, Lexer, Tok};
+use super::{PResult, ParseError};
+use crate::ir::*;
+
+pub fn parse(source: &str, name: &str) -> PResult<Program> {
+    let toks = Lexer::new(source, false).tokenize()?;
+    let mut p = JParser { cur: Cursor::new(toks) };
+    // class header
+    p.cur.eat_ident("public");
+    p.cur.eat_ident("final");
+    p.cur.expect_kw("class")?;
+    let _class_name = p.cur.expect_ident_any()?;
+    p.cur.expect_punct("{")?;
+    let mut functions = Vec::new();
+    while !p.cur.eat_punct("}") {
+        if p.cur.at_eof() {
+            return Err(p.err("unexpected end of input inside class body"));
+        }
+        functions.push(p.method()?);
+    }
+    Ok(Program { lang: Lang::Java, name: name.to_string(), functions })
+}
+
+struct JParser {
+    cur: Cursor,
+}
+
+impl JParser {
+    fn err(&self, msg: impl Into<String>) -> ParseError {
+        self.cur.err(msg)
+    }
+
+    /// `int` | `long` | `double` | `float` | `void` with `[]` suffixes.
+    fn jtype(&mut self) -> PResult<Option<Type>> {
+        let base = if self.cur.eat_ident("void") {
+            Type::Void
+        } else if self.cur.eat_ident("int") || self.cur.eat_ident("long") {
+            Type::Int
+        } else if self.cur.eat_ident("double") || self.cur.eat_ident("float") {
+            Type::Float
+        } else if self.cur.at_ident("String") {
+            self.cur.bump();
+            // String only appears in `main(String[] args)`; treat as opaque.
+            let mut rank = 0;
+            while self.cur.at_punct("[") {
+                self.cur.bump();
+                self.cur.expect_punct("]")?;
+                rank += 1;
+            }
+            let _ = rank;
+            return Ok(Some(Type::Void));
+        } else {
+            return Ok(None);
+        };
+        let mut rank = 0;
+        while self.cur.at_punct("[") {
+            self.cur.bump();
+            self.cur.expect_punct("]")?;
+            rank += 1;
+        }
+        Ok(Some(if rank > 0 { Type::array_of(base, rank) } else { base }))
+    }
+
+    fn method(&mut self) -> PResult<Function> {
+        self.cur.eat_ident("public");
+        self.cur.eat_ident("private");
+        self.cur.eat_ident("static");
+        self.cur.eat_ident("final");
+        let ret = self
+            .jtype()?
+            .ok_or_else(|| self.err(format!("expected return type, found {}", self.cur.peek().describe())))?;
+        let name = self.cur.expect_ident_any()?;
+        self.cur.expect_punct("(")?;
+        let mut params = Vec::new();
+        if !self.cur.at_punct(")") {
+            loop {
+                let ty = self
+                    .jtype()?
+                    .ok_or_else(|| self.err("expected parameter type"))?;
+                let pname = self.cur.expect_ident_any()?;
+                // Skip `String[] args`-style opaque params entirely.
+                if ty != Type::Void {
+                    params.push(Param { name: pname, ty });
+                }
+                if !self.cur.eat_punct(",") {
+                    break;
+                }
+            }
+        }
+        self.cur.expect_punct(")")?;
+        self.cur.expect_punct("{")?;
+        let body = self.block_until_brace()?;
+        Ok(Function { name, params, ret, body })
+    }
+
+    fn block_until_brace(&mut self) -> PResult<Vec<Stmt>> {
+        let mut out = Vec::new();
+        while !self.cur.eat_punct("}") {
+            if self.cur.at_eof() {
+                return Err(self.err("unexpected end of input inside block"));
+            }
+            out.push(self.stmt()?);
+        }
+        Ok(out)
+    }
+
+    fn stmt_or_block(&mut self) -> PResult<Vec<Stmt>> {
+        if self.cur.eat_punct("{") {
+            self.block_until_brace()
+        } else {
+            Ok(vec![self.stmt()?])
+        }
+    }
+
+    fn stmt(&mut self) -> PResult<Stmt> {
+        if self.cur.at_ident("for") {
+            return self.for_stmt();
+        }
+        if self.cur.eat_ident("while") {
+            self.cur.expect_punct("(")?;
+            let cond = self.expr()?;
+            self.cur.expect_punct(")")?;
+            let body = self.stmt_or_block()?;
+            return Ok(Stmt::While { cond, body });
+        }
+        if self.cur.eat_ident("if") {
+            self.cur.expect_punct("(")?;
+            let cond = self.expr()?;
+            self.cur.expect_punct(")")?;
+            let then_body = self.stmt_or_block()?;
+            let else_body = if self.cur.eat_ident("else") {
+                if self.cur.at_ident("if") {
+                    vec![self.stmt()?]
+                } else {
+                    self.stmt_or_block()?
+                }
+            } else {
+                vec![]
+            };
+            return Ok(Stmt::If { cond, then_body, else_body });
+        }
+        if self.cur.eat_ident("return") {
+            let e = if self.cur.at_punct(";") { None } else { Some(self.expr()?) };
+            self.cur.expect_punct(";")?;
+            return Ok(Stmt::Return(e));
+        }
+        if self.cur.eat_ident("break") {
+            self.cur.expect_punct(";")?;
+            return Ok(Stmt::Break);
+        }
+        if self.cur.eat_ident("continue") {
+            self.cur.expect_punct(";")?;
+            return Ok(Stmt::Continue);
+        }
+        // System.out.println(expr);
+        if self.cur.at_ident("System") {
+            self.cur.bump();
+            self.cur.expect_punct(".")?;
+            self.cur.expect_kw("out")?;
+            self.cur.expect_punct(".")?;
+            let m = self.cur.expect_ident_any()?;
+            if m != "println" && m != "print" {
+                return Err(self.err(format!("unsupported System.out method `{m}`")));
+            }
+            self.cur.expect_punct("(")?;
+            let e = if self.cur.at_punct(")") { Expr::IntLit(0) } else { self.expr()? };
+            self.cur.expect_punct(")")?;
+            self.cur.expect_punct(";")?;
+            return Ok(Stmt::Print(e));
+        }
+        // declaration?
+        if self.cur.at_ident("int")
+            || self.cur.at_ident("long")
+            || self.cur.at_ident("double")
+            || self.cur.at_ident("float")
+        {
+            let s = self.decl()?;
+            self.cur.expect_punct(";")?;
+            return Ok(s);
+        }
+        let s = self.simple_stmt()?;
+        self.cur.expect_punct(";")?;
+        Ok(s)
+    }
+
+    /// `double[][] a = new double[n][m];` | `int i = 0;` | `double x;`
+    fn decl(&mut self) -> PResult<Stmt> {
+        let ty = self.jtype()?.unwrap();
+        let name = self.cur.expect_ident_any()?;
+        if ty.is_array() {
+            self.cur.expect_punct("=")?;
+            self.cur.expect_kw("new")?;
+            // bare element type (extents follow as [e][e], so do not let
+            // jtype() swallow the brackets)
+            let elem_ok = self.cur.eat_ident("double")
+                || self.cur.eat_ident("float")
+                || self.cur.eat_ident("int")
+                || self.cur.eat_ident("long");
+            if !elem_ok {
+                return Err(self.err("expected element type after `new`"));
+            }
+            let mut dims = Vec::new();
+            while self.cur.eat_punct("[") {
+                dims.push(self.expr()?);
+                self.cur.expect_punct("]")?;
+            }
+            let rank = match &ty {
+                Type::Array { rank, .. } => *rank,
+                _ => unreachable!(),
+            };
+            if dims.len() != rank {
+                return Err(self.err(format!(
+                    "array `{name}` declared rank {rank} but `new` has {} extents",
+                    dims.len()
+                )));
+            }
+            return Ok(Stmt::Decl { name, ty, dims, init: None });
+        }
+        let init = if self.cur.eat_punct("=") { Some(self.expr()?) } else { None };
+        Ok(Stmt::Decl { name, ty, dims: vec![], init })
+    }
+
+    fn for_stmt(&mut self) -> PResult<Stmt> {
+        self.cur.expect_kw("for")?;
+        self.cur.expect_punct("(")?;
+        let declared = self.cur.eat_ident("int") || self.cur.eat_ident("long");
+        let _ = declared;
+        let var = self.cur.expect_ident_any()?;
+        self.cur.expect_punct("=")?;
+        let start = self.expr()?;
+        self.cur.expect_punct(";")?;
+        let cond_var = self.cur.expect_ident_any()?;
+        if cond_var != var {
+            return Err(self.err("for-loop condition must test the induction variable"));
+        }
+        let (upward, inclusive) = if self.cur.eat_punct("<") {
+            (true, false)
+        } else if self.cur.eat_punct("<=") {
+            (true, true)
+        } else if self.cur.eat_punct(">") {
+            (false, false)
+        } else if self.cur.eat_punct(">=") {
+            (false, true)
+        } else {
+            return Err(self.err("for-loop condition must be a comparison"));
+        };
+        let bound = self.expr()?;
+        self.cur.expect_punct(";")?;
+        let upd_var = self.cur.expect_ident_any()?;
+        if upd_var != var {
+            return Err(self.err("for-loop update must modify the induction variable"));
+        }
+        let step: Expr = if self.cur.eat_punct("++") {
+            Expr::int(1)
+        } else if self.cur.eat_punct("--") {
+            Expr::int(-1)
+        } else if self.cur.eat_punct("+=") {
+            self.expr()?
+        } else if self.cur.eat_punct("-=") {
+            let e = self.expr()?;
+            Expr::Unary { op: UnOp::Neg, operand: Box::new(e) }
+        } else {
+            return Err(self.err("unsupported for-loop update"));
+        };
+        self.cur.expect_punct(")")?;
+        let body = self.stmt_or_block()?;
+        let end = match (upward, inclusive) {
+            (true, false) | (false, false) => bound,
+            (true, true) => Expr::bin(BinOp::Add, bound, Expr::int(1)),
+            (false, true) => Expr::bin(BinOp::Sub, bound, Expr::int(1)),
+        };
+        Ok(Stmt::For { id: 0, var, start, end, step, body })
+    }
+
+    fn simple_stmt(&mut self) -> PResult<Stmt> {
+        let name = self.cur.expect_ident_any()?;
+        // qualified call `Lib.f(args)`
+        if self.cur.at_punct(".") {
+            self.cur.bump();
+            let method = self.cur.expect_ident_any()?;
+            let args = self.call_args()?;
+            return Ok(Stmt::Call { name: method, args });
+        }
+        if self.cur.at_punct("(") {
+            let args = self.call_args()?;
+            return Ok(Stmt::Call { name, args });
+        }
+        if self.cur.eat_punct("++") {
+            return Ok(Stmt::Assign {
+                target: LValue::Var(name),
+                op: AssignOp::Add,
+                value: Expr::int(1),
+            });
+        }
+        if self.cur.eat_punct("--") {
+            return Ok(Stmt::Assign {
+                target: LValue::Var(name),
+                op: AssignOp::Sub,
+                value: Expr::int(1),
+            });
+        }
+        let target = if self.cur.at_punct("[") {
+            let mut indices = Vec::new();
+            while self.cur.eat_punct("[") {
+                indices.push(self.expr()?);
+                self.cur.expect_punct("]")?;
+            }
+            LValue::Index { base: name, indices }
+        } else {
+            LValue::Var(name)
+        };
+        let op = if self.cur.eat_punct("=") {
+            AssignOp::Set
+        } else if self.cur.eat_punct("+=") {
+            AssignOp::Add
+        } else if self.cur.eat_punct("-=") {
+            AssignOp::Sub
+        } else if self.cur.eat_punct("*=") {
+            AssignOp::Mul
+        } else if self.cur.eat_punct("/=") {
+            AssignOp::Div
+        } else {
+            return Err(self.err(format!("expected assignment, found {}", self.cur.peek().describe())));
+        };
+        let value = self.expr()?;
+        Ok(Stmt::Assign { target, op, value })
+    }
+
+    fn call_args(&mut self) -> PResult<Vec<Expr>> {
+        self.cur.expect_punct("(")?;
+        let mut args = Vec::new();
+        if !self.cur.at_punct(")") {
+            loop {
+                args.push(self.expr()?);
+                if !self.cur.eat_punct(",") {
+                    break;
+                }
+            }
+        }
+        self.cur.expect_punct(")")?;
+        Ok(args)
+    }
+
+    // ---- expressions (same precedence as C) ----
+
+    fn expr(&mut self) -> PResult<Expr> {
+        self.or_expr()
+    }
+
+    fn or_expr(&mut self) -> PResult<Expr> {
+        let mut lhs = self.and_expr()?;
+        while self.cur.eat_punct("||") {
+            let rhs = self.and_expr()?;
+            lhs = Expr::bin(BinOp::Or, lhs, rhs);
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> PResult<Expr> {
+        let mut lhs = self.cmp_expr()?;
+        while self.cur.eat_punct("&&") {
+            let rhs = self.cmp_expr()?;
+            lhs = Expr::bin(BinOp::And, lhs, rhs);
+        }
+        Ok(lhs)
+    }
+
+    fn cmp_expr(&mut self) -> PResult<Expr> {
+        let mut lhs = self.add_expr()?;
+        loop {
+            let op = if self.cur.eat_punct("==") {
+                BinOp::Eq
+            } else if self.cur.eat_punct("!=") {
+                BinOp::Ne
+            } else if self.cur.eat_punct("<=") {
+                BinOp::Le
+            } else if self.cur.eat_punct(">=") {
+                BinOp::Ge
+            } else if self.cur.eat_punct("<") {
+                BinOp::Lt
+            } else if self.cur.eat_punct(">") {
+                BinOp::Gt
+            } else {
+                return Ok(lhs);
+            };
+            let rhs = self.add_expr()?;
+            lhs = Expr::bin(op, lhs, rhs);
+        }
+    }
+
+    fn add_expr(&mut self) -> PResult<Expr> {
+        let mut lhs = self.mul_expr()?;
+        loop {
+            let op = if self.cur.eat_punct("+") {
+                BinOp::Add
+            } else if self.cur.eat_punct("-") {
+                BinOp::Sub
+            } else {
+                return Ok(lhs);
+            };
+            let rhs = self.mul_expr()?;
+            lhs = Expr::bin(op, lhs, rhs);
+        }
+    }
+
+    fn mul_expr(&mut self) -> PResult<Expr> {
+        let mut lhs = self.unary_expr()?;
+        loop {
+            let op = if self.cur.eat_punct("*") {
+                BinOp::Mul
+            } else if self.cur.eat_punct("/") {
+                BinOp::Div
+            } else if self.cur.eat_punct("%") {
+                BinOp::Mod
+            } else {
+                return Ok(lhs);
+            };
+            let rhs = self.unary_expr()?;
+            lhs = Expr::bin(op, lhs, rhs);
+        }
+    }
+
+    fn unary_expr(&mut self) -> PResult<Expr> {
+        if self.cur.eat_punct("-") {
+            let e = self.unary_expr()?;
+            return Ok(Expr::Unary { op: UnOp::Neg, operand: Box::new(e) });
+        }
+        if self.cur.eat_punct("!") {
+            let e = self.unary_expr()?;
+            return Ok(Expr::Unary { op: UnOp::Not, operand: Box::new(e) });
+        }
+        // cast `(double) e`
+        if self.cur.at_punct("(") {
+            if let Tok::Ident(id) = self.cur.peek2() {
+                if matches!(id.as_str(), "double" | "float" | "int" | "long") {
+                    self.cur.expect_punct("(")?;
+                    let _ = self.cur.expect_ident_any()?;
+                    self.cur.expect_punct(")")?;
+                    return self.unary_expr();
+                }
+            }
+        }
+        self.postfix_expr()
+    }
+
+    fn postfix_expr(&mut self) -> PResult<Expr> {
+        match self.cur.bump() {
+            Tok::Int(v) => Ok(Expr::IntLit(v)),
+            Tok::Float(v) => Ok(Expr::FloatLit(v)),
+            Tok::Punct("(") => {
+                let e = self.expr()?;
+                self.cur.expect_punct(")")?;
+                Ok(e)
+            }
+            Tok::Ident(name) => {
+                // qualified call / field: `Math.sqrt(x)`, `a.length`
+                if self.cur.at_punct(".") {
+                    self.cur.bump();
+                    let member = self.cur.expect_ident_any()?;
+                    if self.cur.at_punct("(") {
+                        let args = self.call_args()?;
+                        return Ok(Expr::Call { name: member, args });
+                    }
+                    if member == "length" {
+                        return Ok(Expr::Len { base: name, dim: 0 });
+                    }
+                    if name == "Math" && member == "PI" {
+                        return Ok(Expr::FloatLit(std::f64::consts::PI));
+                    }
+                    return Err(self.err(format!("unsupported member access `{name}.{member}`")));
+                }
+                if self.cur.at_punct("(") {
+                    let args = self.call_args()?;
+                    return Ok(Expr::Call { name, args });
+                }
+                if self.cur.at_punct("[") {
+                    let mut indices = Vec::new();
+                    while self.cur.eat_punct("[") {
+                        indices.push(self.expr()?);
+                        self.cur.expect_punct("]")?;
+                    }
+                    return Ok(Expr::Index { base: name, indices });
+                }
+                Ok(Expr::Var(name))
+            }
+            other => Err(self.err(format!("unexpected {} in expression", other.describe()))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_ok(src: &str) -> Program {
+        let mut p = parse(src, "t").unwrap();
+        p.number_loops();
+        p
+    }
+
+    #[test]
+    fn class_with_main_and_array() {
+        let p = parse_ok(
+            r#"
+            public class MM {
+                public static void main(String[] args) {
+                    int n = 4;
+                    double[][] a = new double[n][n];
+                    for (int i = 0; i < n; i++) {
+                        for (int j = 0; j < n; j++) {
+                            a[i][j] = i + j;
+                        }
+                    }
+                    System.out.println(a[1][2]);
+                }
+            }
+            "#,
+        );
+        assert_eq!(p.loop_count(), 2);
+        let f = p.entry().unwrap();
+        assert!(f.params.is_empty(), "String[] args must be dropped");
+        assert!(matches!(f.body.last().unwrap(), Stmt::Print(_)));
+    }
+
+    #[test]
+    fn math_and_qualified_calls() {
+        let p = parse_ok(
+            r#"
+            class T {
+                static void main(String[] args) {
+                    double x = Math.sqrt(2.0);
+                    Lib.matmul(x);
+                }
+            }
+            "#,
+        );
+        let f = p.entry().unwrap();
+        assert!(matches!(&f.body[0], Stmt::Decl { init: Some(Expr::Call { name, .. }), .. } if name == "sqrt"));
+        assert!(matches!(&f.body[1], Stmt::Call { name, .. } if name == "matmul"));
+    }
+
+    #[test]
+    fn array_length_member() {
+        let p = parse_ok(
+            "class T { static void f(double[] a) { int n = a.length; } static void main(String[] args) { } }",
+        );
+        let f = p.function("f").unwrap();
+        assert!(matches!(&f.body[0], Stmt::Decl { init: Some(Expr::Len { .. }), .. }));
+    }
+
+    #[test]
+    fn rank_mismatch_in_new_errors() {
+        let src = "class T { static void main(String[] args) { double[][] a = new double[4]; } }";
+        assert!(parse(src, "t").is_err());
+    }
+
+    #[test]
+    fn methods_with_array_params() {
+        let p = parse_ok(
+            "class T { static void g(double[][] m, int n) { m[0][0] = n; } static void main(String[] args) { } }",
+        );
+        let g = p.function("g").unwrap();
+        assert_eq!(g.params[0].ty, Type::array_of(Type::Float, 2));
+    }
+}

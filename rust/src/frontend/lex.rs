@@ -1,0 +1,570 @@
+//! Shared tokenizer for the three front ends.
+//!
+//! One lexer, two modes: free-form (C, Java — whitespace insignificant)
+//! and line-form (Python — emits `Newline`/`Indent`/`Dedent`).
+
+use super::{PResult, ParseError};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    /// operator / punctuation, longest-match: `<=`, `==`, `+=`, `//`, ...
+    Punct(&'static str),
+    Newline,
+    Indent,
+    Dedent,
+    Eof,
+}
+
+impl Tok {
+    pub fn describe(&self) -> String {
+        match self {
+            Tok::Ident(s) => format!("identifier `{s}`"),
+            Tok::Int(v) => format!("integer {v}"),
+            Tok::Float(v) => format!("float {v}"),
+            Tok::Str(_) => "string literal".into(),
+            Tok::Punct(p) => format!("`{p}`"),
+            Tok::Newline => "newline".into(),
+            Tok::Indent => "indent".into(),
+            Tok::Dedent => "dedent".into(),
+            Tok::Eof => "end of input".into(),
+        }
+    }
+}
+
+/// A token with its source position (1-based).
+#[derive(Debug, Clone)]
+pub struct Spanned {
+    pub tok: Tok,
+    pub line: usize,
+    pub col: usize,
+}
+
+/// Multi-char operators, longest first so greedy matching works.
+const PUNCTS: &[&str] = &[
+    "<<=", ">>=", "**", "//", "==", "!=", "<=", ">=", "&&", "||", "+=", "-=", "*=", "/=", "%=",
+    "++", "--", "->", "+", "-", "*", "/", "%", "<", ">", "=", "(", ")", "[", "]", "{", "}", ",",
+    ";", ":", ".", "!", "&", "|", "#", "?",
+];
+
+pub struct Lexer<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: usize,
+    col: usize,
+    python_mode: bool,
+}
+
+impl<'a> Lexer<'a> {
+    pub fn new(src: &'a str, python_mode: bool) -> Lexer<'a> {
+        Lexer { src: src.as_bytes(), pos: 0, line: 1, col: 1, python_mode }
+    }
+
+    fn err(&self, msg: impl Into<String>) -> ParseError {
+        ParseError { line: self.line, col: self.col, msg: msg.into() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.src.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek()?;
+        self.pos += 1;
+        if c == b'\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+
+    /// Tokenize the whole input. In python mode, indentation tokens are
+    /// synthesized per the usual stack algorithm and comments (`#`) are
+    /// stripped; in free-form mode `//`- and `/* */`-comments are stripped.
+    pub fn tokenize(mut self) -> PResult<Vec<Spanned>> {
+        if self.python_mode {
+            self.tokenize_python()
+        } else {
+            self.tokenize_freeform()
+        }
+    }
+
+    fn tokenize_freeform(&mut self) -> PResult<Vec<Spanned>> {
+        let mut out = Vec::new();
+        loop {
+            self.skip_ws_and_comments_freeform()?;
+            if self.peek().is_none() {
+                out.push(Spanned { tok: Tok::Eof, line: self.line, col: self.col });
+                return Ok(out);
+            }
+            out.push(self.next_token()?);
+        }
+    }
+
+    fn skip_ws_and_comments_freeform(&mut self) -> PResult<()> {
+        loop {
+            match self.peek() {
+                Some(c) if (c as char).is_whitespace() => {
+                    self.bump();
+                }
+                Some(b'/') if self.src.get(self.pos + 1) == Some(&b'/') => {
+                    while let Some(c) = self.peek() {
+                        if c == b'\n' {
+                            break;
+                        }
+                        self.bump();
+                    }
+                }
+                Some(b'/') if self.src.get(self.pos + 1) == Some(&b'*') => {
+                    self.bump();
+                    self.bump();
+                    loop {
+                        match self.peek() {
+                            None => return Err(self.err("unterminated block comment")),
+                            Some(b'*') if self.src.get(self.pos + 1) == Some(&b'/') => {
+                                self.bump();
+                                self.bump();
+                                break;
+                            }
+                            _ => {
+                                self.bump();
+                            }
+                        }
+                    }
+                }
+                _ => return Ok(()),
+            }
+        }
+    }
+
+    fn tokenize_python(&mut self) -> PResult<Vec<Spanned>> {
+        let mut out = Vec::new();
+        let mut indents = vec![0usize];
+        let mut paren_depth = 0usize;
+        let mut at_line_start = true;
+        loop {
+            if at_line_start && paren_depth == 0 {
+                // Measure indentation; skip blank / comment-only lines.
+                let line_start_pos = self.pos;
+                let mut width = 0usize;
+                loop {
+                    match self.peek() {
+                        Some(b' ') => {
+                            width += 1;
+                            self.bump();
+                        }
+                        Some(b'\t') => {
+                            width += 8 - width % 8;
+                            self.bump();
+                        }
+                        _ => break,
+                    }
+                }
+                match self.peek() {
+                    None => break,
+                    Some(b'\n') => {
+                        self.bump();
+                        continue;
+                    }
+                    Some(b'#') => {
+                        while let Some(c) = self.peek() {
+                            if c == b'\n' {
+                                break;
+                            }
+                            self.bump();
+                        }
+                        continue;
+                    }
+                    Some(b'\r') => {
+                        self.bump();
+                        continue;
+                    }
+                    _ => {}
+                }
+                let _ = line_start_pos;
+                let cur = *indents.last().unwrap();
+                if width > cur {
+                    indents.push(width);
+                    out.push(Spanned { tok: Tok::Indent, line: self.line, col: 1 });
+                } else {
+                    while width < *indents.last().unwrap() {
+                        indents.pop();
+                        out.push(Spanned { tok: Tok::Dedent, line: self.line, col: 1 });
+                    }
+                    if width != *indents.last().unwrap() {
+                        return Err(self.err("inconsistent dedent"));
+                    }
+                }
+                at_line_start = false;
+            }
+            // Within a logical line.
+            match self.peek() {
+                None => break,
+                Some(b'\n') => {
+                    self.bump();
+                    if paren_depth == 0 {
+                        out.push(Spanned { tok: Tok::Newline, line: self.line - 1, col: self.col });
+                        at_line_start = true;
+                    }
+                }
+                Some(b'#') => {
+                    while let Some(c) = self.peek() {
+                        if c == b'\n' {
+                            break;
+                        }
+                        self.bump();
+                    }
+                }
+                Some(b'\\') if self.src.get(self.pos + 1) == Some(&b'\n') => {
+                    self.bump();
+                    self.bump();
+                }
+                Some(c) if c == b' ' || c == b'\t' || c == b'\r' => {
+                    self.bump();
+                }
+                Some(_) => {
+                    let t = self.next_token()?;
+                    match &t.tok {
+                        Tok::Punct("(") | Tok::Punct("[") => paren_depth += 1,
+                        Tok::Punct(")") | Tok::Punct("]") => {
+                            paren_depth = paren_depth.saturating_sub(1)
+                        }
+                        _ => {}
+                    }
+                    out.push(t);
+                }
+            }
+        }
+        if !at_line_start {
+            out.push(Spanned { tok: Tok::Newline, line: self.line, col: self.col });
+        }
+        while indents.len() > 1 {
+            indents.pop();
+            out.push(Spanned { tok: Tok::Dedent, line: self.line, col: self.col });
+        }
+        out.push(Spanned { tok: Tok::Eof, line: self.line, col: self.col });
+        Ok(out)
+    }
+
+    fn next_token(&mut self) -> PResult<Spanned> {
+        let (line, col) = (self.line, self.col);
+        let c = self.peek().ok_or_else(|| self.err("unexpected end of input"))?;
+        let tok = if c.is_ascii_alphabetic() || c == b'_' {
+            let mut s = String::new();
+            while let Some(c) = self.peek() {
+                if c.is_ascii_alphanumeric() || c == b'_' {
+                    s.push(c as char);
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+            Tok::Ident(s)
+        } else if c.is_ascii_digit()
+            || (c == b'.' && self.src.get(self.pos + 1).is_some_and(|d| d.is_ascii_digit()))
+        {
+            self.lex_number()?
+        } else if c == b'"' || c == b'\'' {
+            self.lex_string(c)?
+        } else {
+            let rest = &self.src[self.pos..];
+            let p = PUNCTS
+                .iter()
+                .find(|p| rest.starts_with(p.as_bytes()))
+                .ok_or_else(|| self.err(format!("unexpected character {:?}", c as char)))?;
+            for _ in 0..p.len() {
+                self.bump();
+            }
+            Tok::Punct(p)
+        };
+        Ok(Spanned { tok, line, col })
+    }
+
+    fn lex_number(&mut self) -> PResult<Tok> {
+        let start = self.pos;
+        let mut is_float = false;
+        while let Some(c) = self.peek() {
+            match c {
+                b'0'..=b'9' => {
+                    self.bump();
+                }
+                b'.' => {
+                    // a second '.' ends the number (e.g. range syntax not used here)
+                    if is_float {
+                        break;
+                    }
+                    // don't consume method-call dots after an int: `2.sqrt` not in our langs
+                    is_float = true;
+                    self.bump();
+                }
+                b'e' | b'E' => {
+                    // exponent only if followed by digit or sign+digit
+                    let next = self.src.get(self.pos + 1).copied();
+                    let next2 = self.src.get(self.pos + 2).copied();
+                    let ok = match next {
+                        Some(d) if d.is_ascii_digit() => true,
+                        Some(b'+') | Some(b'-') => next2.is_some_and(|d| d.is_ascii_digit()),
+                        _ => false,
+                    };
+                    if !ok {
+                        break;
+                    }
+                    is_float = true;
+                    self.bump(); // e
+                    self.bump(); // sign or digit
+                    while let Some(d) = self.peek() {
+                        if d.is_ascii_digit() {
+                            self.bump();
+                        } else {
+                            break;
+                        }
+                    }
+                    break;
+                }
+                b'f' | b'F' | b'L' | b'l' => {
+                    // C/Java literal suffix: consume and stop
+                    self.bump();
+                    let text = std::str::from_utf8(&self.src[start..self.pos - 1]).unwrap();
+                    return self.finish_number(text, is_float);
+                }
+                _ => break,
+            }
+        }
+        let text = std::str::from_utf8(&self.src[start..self.pos]).unwrap();
+        self.finish_number(text, is_float)
+    }
+
+    fn finish_number(&self, text: &str, is_float: bool) -> PResult<Tok> {
+        if is_float {
+            text.parse::<f64>()
+                .map(Tok::Float)
+                .map_err(|_| self.err(format!("bad float literal {text:?}")))
+        } else {
+            text.parse::<i64>()
+                .map(Tok::Int)
+                .map_err(|_| self.err(format!("bad int literal {text:?}")))
+        }
+    }
+
+    fn lex_string(&mut self, quote: u8) -> PResult<Tok> {
+        self.bump(); // opening quote
+        let mut s = String::new();
+        loop {
+            match self.bump() {
+                None => return Err(self.err("unterminated string literal")),
+                Some(c) if c == quote => break,
+                Some(b'\\') => {
+                    let esc = self.bump().ok_or_else(|| self.err("unterminated escape"))?;
+                    s.push(match esc {
+                        b'n' => '\n',
+                        b't' => '\t',
+                        b'r' => '\r',
+                        b'\\' => '\\',
+                        b'\'' => '\'',
+                        b'"' => '"',
+                        b'0' => '\0',
+                        other => other as char,
+                    });
+                }
+                Some(c) => s.push(c as char),
+            }
+        }
+        Ok(Tok::Str(s))
+    }
+}
+
+/// Token cursor shared by the three parsers.
+pub struct Cursor {
+    toks: Vec<Spanned>,
+    pos: usize,
+}
+
+impl Cursor {
+    pub fn new(toks: Vec<Spanned>) -> Cursor {
+        Cursor { toks, pos: 0 }
+    }
+
+    pub fn peek(&self) -> &Tok {
+        &self.toks[self.pos.min(self.toks.len() - 1)].tok
+    }
+
+    pub fn peek2(&self) -> &Tok {
+        &self.toks[(self.pos + 1).min(self.toks.len() - 1)].tok
+    }
+
+    pub fn here(&self) -> (usize, usize) {
+        let s = &self.toks[self.pos.min(self.toks.len() - 1)];
+        (s.line, s.col)
+    }
+
+    pub fn err(&self, msg: impl Into<String>) -> ParseError {
+        let (line, col) = self.here();
+        ParseError { line, col, msg: msg.into() }
+    }
+
+    pub fn bump(&mut self) -> Tok {
+        let t = self.toks[self.pos.min(self.toks.len() - 1)].tok.clone();
+        if self.pos < self.toks.len() - 1 {
+            self.pos += 1;
+        }
+        t
+    }
+
+    pub fn eat_punct(&mut self, p: &str) -> bool {
+        if matches!(self.peek(), Tok::Punct(q) if *q == p) {
+            self.bump();
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn expect_punct(&mut self, p: &str) -> PResult<()> {
+        if self.eat_punct(p) {
+            Ok(())
+        } else {
+            Err(self.err(format!("expected `{p}`, found {}", self.peek().describe())))
+        }
+    }
+
+    pub fn eat_ident(&mut self, kw: &str) -> bool {
+        if matches!(self.peek(), Tok::Ident(s) if s == kw) {
+            self.bump();
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn expect_ident_any(&mut self) -> PResult<String> {
+        match self.bump() {
+            Tok::Ident(s) => Ok(s),
+            other => Err(self.err(format!("expected identifier, found {}", other.describe()))),
+        }
+    }
+
+    pub fn expect_kw(&mut self, kw: &str) -> PResult<()> {
+        if self.eat_ident(kw) {
+            Ok(())
+        } else {
+            Err(self.err(format!("expected `{kw}`, found {}", self.peek().describe())))
+        }
+    }
+
+    pub fn at_ident(&self, kw: &str) -> bool {
+        matches!(self.peek(), Tok::Ident(s) if s == kw)
+    }
+
+    pub fn at_punct(&self, p: &str) -> bool {
+        matches!(self.peek(), Tok::Punct(q) if *q == p)
+    }
+
+    pub fn at_eof(&self) -> bool {
+        matches!(self.peek(), Tok::Eof)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(src: &str) -> Vec<Tok> {
+        Lexer::new(src, false).tokenize().unwrap().into_iter().map(|s| s.tok).collect()
+    }
+
+    #[test]
+    fn freeform_basics() {
+        assert_eq!(
+            toks("for (i = 0; i < 10; i++)"),
+            vec![
+                Tok::Ident("for".into()),
+                Tok::Punct("("),
+                Tok::Ident("i".into()),
+                Tok::Punct("="),
+                Tok::Int(0),
+                Tok::Punct(";"),
+                Tok::Ident("i".into()),
+                Tok::Punct("<"),
+                Tok::Int(10),
+                Tok::Punct(";"),
+                Tok::Ident("i".into()),
+                Tok::Punct("++"),
+                Tok::Punct(")"),
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn numbers() {
+        assert_eq!(toks("1 2.5 1e3 2.5e-2 3.0f 7L"), vec![
+            Tok::Int(1),
+            Tok::Float(2.5),
+            Tok::Float(1e3),
+            Tok::Float(2.5e-2),
+            Tok::Float(3.0),
+            Tok::Int(7),
+            Tok::Eof
+        ]);
+    }
+
+    #[test]
+    fn comments_stripped() {
+        assert_eq!(toks("a // x\n /* y \n z */ b"), vec![
+            Tok::Ident("a".into()),
+            Tok::Ident("b".into()),
+            Tok::Eof
+        ]);
+    }
+
+    #[test]
+    fn strings_and_escapes() {
+        assert_eq!(toks(r#""a\nb""#), vec![Tok::Str("a\nb".into()), Tok::Eof]);
+    }
+
+    #[test]
+    fn python_indent_dedent() {
+        let src = "def f():\n    x = 1\n    if x:\n        y = 2\nz = 3\n";
+        let ts: Vec<Tok> =
+            Lexer::new(src, true).tokenize().unwrap().into_iter().map(|s| s.tok).collect();
+        let indents = ts.iter().filter(|t| matches!(t, Tok::Indent)).count();
+        let dedents = ts.iter().filter(|t| matches!(t, Tok::Dedent)).count();
+        assert_eq!(indents, 2);
+        assert_eq!(dedents, 2);
+        assert!(ts.contains(&Tok::Ident("z".into())));
+    }
+
+    #[test]
+    fn python_parens_swallow_newlines() {
+        let src = "a = f(1,\n      2)\nb = 3\n";
+        let ts: Vec<Tok> =
+            Lexer::new(src, true).tokenize().unwrap().into_iter().map(|s| s.tok).collect();
+        let newlines = ts.iter().filter(|t| matches!(t, Tok::Newline)).count();
+        assert_eq!(newlines, 2);
+    }
+
+    #[test]
+    fn python_blank_and_comment_lines_ignored() {
+        let src = "x = 1\n\n# comment\n   \ny = 2\n";
+        let ts: Vec<Tok> =
+            Lexer::new(src, true).tokenize().unwrap().into_iter().map(|s| s.tok).collect();
+        let indents = ts.iter().filter(|t| matches!(t, Tok::Indent)).count();
+        assert_eq!(indents, 0);
+    }
+
+    #[test]
+    fn unterminated_comment_errors() {
+        assert!(Lexer::new("/* abc", false).tokenize().is_err());
+    }
+
+    #[test]
+    fn inconsistent_dedent_errors() {
+        let src = "if x:\n        a = 1\n    b = 2\n";
+        assert!(Lexer::new(src, true).tokenize().is_err());
+    }
+}

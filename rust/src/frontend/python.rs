@@ -1,0 +1,608 @@
+//! Python front end (the paper's `ast`-module analogue).
+//!
+//! Supported subset: module-level `def` functions; indentation blocks;
+//! `for v in range(...)`; `while`; `if`/`elif`/`else`; first assignment in
+//! a scope declares the variable; `zeros(n)` / `zeros((n, m))` allocate
+//! arrays; `math.sqrt` etc. normalize to intrinsics; `print(x)`;
+//! `x ** y` lowers to the `pow` intrinsic; `int(e)`/`float(e)` casts are
+//! transparent (the IR VM is dynamically typed).
+//!
+//! `import` lines are skipped, mirroring how the paper's flow only needs
+//! the loop/variable structure from `ast`.
+
+use super::lex::{Cursor, Lexer, Tok};
+use super::{PResult, ParseError};
+use crate::ir::*;
+use std::collections::HashSet;
+
+pub fn parse(source: &str, name: &str) -> PResult<Program> {
+    let stripped: String = source
+        .lines()
+        .map(|l| {
+            let t = l.trim_start();
+            if t.starts_with("import ") || t.starts_with("from ") {
+                ""
+            } else {
+                l
+            }
+        })
+        .collect::<Vec<_>>()
+        .join("\n");
+    let toks = Lexer::new(&stripped, true).tokenize()?;
+    let mut p = PyParser { cur: Cursor::new(toks), bound: HashSet::new() };
+    let mut functions = Vec::new();
+    loop {
+        // skip stray newlines between defs
+        while p.cur.eat_newline() {}
+        if p.cur.at_eof() {
+            break;
+        }
+        functions.push(p.function()?);
+    }
+    // `if __name__ == "__main__": main()` is not needed: entry is `main`.
+    Ok(Program { lang: Lang::Python, name: name.to_string(), functions })
+}
+
+trait PyCursor {
+    fn eat_newline(&mut self) -> bool;
+}
+
+impl PyCursor for Cursor {
+    fn eat_newline(&mut self) -> bool {
+        if matches!(self.peek(), Tok::Newline) {
+            self.bump();
+            true
+        } else {
+            false
+        }
+    }
+}
+
+struct PyParser {
+    cur: Cursor,
+    /// names bound so far in the current function scope
+    bound: HashSet<String>,
+}
+
+impl PyParser {
+    fn err(&self, msg: impl Into<String>) -> ParseError {
+        self.cur.err(msg)
+    }
+
+    fn function(&mut self) -> PResult<Function> {
+        self.cur.expect_kw("def")?;
+        let name = self.cur.expect_ident_any()?;
+        self.cur.expect_punct("(")?;
+        let mut params = Vec::new();
+        if !self.cur.at_punct(")") {
+            loop {
+                let pname = self.cur.expect_ident_any()?;
+                // Optional annotation `x: float` — records the type.
+                let ty = if self.cur.eat_punct(":") {
+                    match self.cur.expect_ident_any()?.as_str() {
+                        "int" => Type::Int,
+                        "float" => Type::Float,
+                        "list" => Type::array_of(Type::Float, 1),
+                        _ => Type::Float,
+                    }
+                } else {
+                    Type::Float
+                };
+                params.push(Param { name: pname, ty });
+                if !self.cur.eat_punct(",") {
+                    break;
+                }
+            }
+        }
+        self.cur.expect_punct(")")?;
+        self.cur.expect_punct(":")?;
+        self.bound = params.iter().map(|p| p.name.clone()).collect();
+        let body = self.block()?;
+        Ok(Function { name, params, ret: Type::Void, body })
+    }
+
+    /// NEWLINE INDENT stmt+ DEDENT
+    fn block(&mut self) -> PResult<Vec<Stmt>> {
+        if !self.cur.eat_newline() {
+            return Err(self.err("expected newline before indented block"));
+        }
+        if !matches!(self.cur.peek(), Tok::Indent) {
+            return Err(self.err("expected an indented block"));
+        }
+        self.cur.bump();
+        let mut out = Vec::new();
+        loop {
+            while self.cur.eat_newline() {}
+            if matches!(self.cur.peek(), Tok::Dedent) {
+                self.cur.bump();
+                break;
+            }
+            if self.cur.at_eof() {
+                break;
+            }
+            out.push(self.stmt()?);
+        }
+        Ok(out)
+    }
+
+    fn stmt(&mut self) -> PResult<Stmt> {
+        if self.cur.at_ident("for") {
+            return self.for_stmt();
+        }
+        if self.cur.eat_ident("while") {
+            let cond = self.expr()?;
+            self.cur.expect_punct(":")?;
+            let body = self.block()?;
+            return Ok(Stmt::While { cond, body });
+        }
+        if self.cur.at_ident("if") {
+            return self.if_stmt();
+        }
+        if self.cur.eat_ident("return") {
+            let e = if matches!(self.cur.peek(), Tok::Newline) { None } else { Some(self.expr()?) };
+            self.end_simple()?;
+            return Ok(Stmt::Return(e));
+        }
+        if self.cur.eat_ident("break") {
+            self.end_simple()?;
+            return Ok(Stmt::Break);
+        }
+        if self.cur.eat_ident("continue") {
+            self.end_simple()?;
+            return Ok(Stmt::Continue);
+        }
+        if self.cur.eat_ident("pass") {
+            self.end_simple()?;
+            // `pass` has no IR node; encode as empty If (never taken).
+            return Ok(Stmt::If { cond: Expr::IntLit(0), then_body: vec![], else_body: vec![] });
+        }
+        if self.cur.at_ident("print") {
+            self.cur.bump();
+            self.cur.expect_punct("(")?;
+            let e = self.expr()?;
+            self.cur.expect_punct(")")?;
+            self.end_simple()?;
+            return Ok(Stmt::Print(e));
+        }
+        let s = self.simple_stmt()?;
+        self.end_simple()?;
+        Ok(s)
+    }
+
+    fn end_simple(&mut self) -> PResult<()> {
+        if self.cur.eat_newline() || self.cur.at_eof() || matches!(self.cur.peek(), Tok::Dedent) {
+            Ok(())
+        } else {
+            Err(self.err(format!("expected end of statement, found {}", self.cur.peek().describe())))
+        }
+    }
+
+    fn if_stmt(&mut self) -> PResult<Stmt> {
+        self.cur.expect_kw("if")?;
+        let cond = self.expr()?;
+        self.cur.expect_punct(":")?;
+        let then_body = self.block()?;
+        let else_body = if self.cur.at_ident("elif") {
+            // rewrite `elif` → nested if
+            // consume `elif` by replacing it with `if` semantics
+            let saved = self.cur.at_ident("elif");
+            debug_assert!(saved);
+            // easiest: parse as if_stmt after renaming — emulate by eating
+            // "elif" and re-entering with a synthetic if.
+            self.cur.bump();
+            let cond2 = self.expr()?;
+            self.cur.expect_punct(":")?;
+            let tb = self.block()?;
+            let eb = if self.cur.at_ident("elif") || self.cur.at_ident("else") {
+                self.trailing_else()?
+            } else {
+                vec![]
+            };
+            vec![Stmt::If { cond: cond2, then_body: tb, else_body: eb }]
+        } else if self.cur.eat_ident("else") {
+            self.cur.expect_punct(":")?;
+            self.block()?
+        } else {
+            vec![]
+        };
+        Ok(Stmt::If { cond, then_body, else_body })
+    }
+
+    fn trailing_else(&mut self) -> PResult<Vec<Stmt>> {
+        if self.cur.at_ident("elif") {
+            self.cur.bump();
+            let cond = self.expr()?;
+            self.cur.expect_punct(":")?;
+            let tb = self.block()?;
+            let eb = if self.cur.at_ident("elif") || self.cur.at_ident("else") {
+                self.trailing_else()?
+            } else {
+                vec![]
+            };
+            Ok(vec![Stmt::If { cond, then_body: tb, else_body: eb }])
+        } else {
+            self.cur.expect_kw("else")?;
+            self.cur.expect_punct(":")?;
+            self.block()
+        }
+    }
+
+    /// `for v in range(...)`: 1/2/3-argument range.
+    fn for_stmt(&mut self) -> PResult<Stmt> {
+        self.cur.expect_kw("for")?;
+        let var = self.cur.expect_ident_any()?;
+        self.cur.expect_kw("in")?;
+        self.cur.expect_kw("range")?;
+        self.cur.expect_punct("(")?;
+        let first = self.expr()?;
+        let (start, end, step) = if self.cur.eat_punct(",") {
+            let second = self.expr()?;
+            if self.cur.eat_punct(",") {
+                let third = self.expr()?;
+                (first, second, third)
+            } else {
+                (first, second, Expr::int(1))
+            }
+        } else {
+            (Expr::int(0), first, Expr::int(1))
+        };
+        self.cur.expect_punct(")")?;
+        self.cur.expect_punct(":")?;
+        self.bound.insert(var.clone());
+        let body = self.block()?;
+        Ok(Stmt::For { id: 0, var, start, end, step, body })
+    }
+
+    fn simple_stmt(&mut self) -> PResult<Stmt> {
+        let name = self.cur.expect_ident_any()?;
+        // bare call statement (incl. attribute call like math.whatever)
+        if self.cur.at_punct("(") {
+            let args = self.call_args()?;
+            return Ok(Stmt::Call { name, args });
+        }
+        if self.cur.at_punct(".") {
+            // attribute call statement, e.g. `np.foo(...)` — strip qualifier
+            self.cur.bump();
+            let method = self.cur.expect_ident_any()?;
+            let args = self.call_args()?;
+            return Ok(Stmt::Call { name: method, args });
+        }
+        // assignment target
+        let target = if self.cur.at_punct("[") {
+            let mut indices = Vec::new();
+            while self.cur.eat_punct("[") {
+                indices.push(self.expr()?);
+                self.cur.expect_punct("]")?;
+            }
+            LValue::Index { base: name.clone(), indices }
+        } else {
+            LValue::Var(name.clone())
+        };
+        let op = if self.cur.eat_punct("=") {
+            AssignOp::Set
+        } else if self.cur.eat_punct("+=") {
+            AssignOp::Add
+        } else if self.cur.eat_punct("-=") {
+            AssignOp::Sub
+        } else if self.cur.eat_punct("*=") {
+            AssignOp::Mul
+        } else if self.cur.eat_punct("/=") {
+            AssignOp::Div
+        } else {
+            return Err(self.err(format!("expected assignment, found {}", self.cur.peek().describe())));
+        };
+
+        // `a = zeros(n)` / `a = zeros((n, m))` — array declaration.
+        if op == AssignOp::Set
+            && matches!(&target, LValue::Var(_))
+            && self.cur.at_ident("zeros")
+        {
+            self.cur.bump();
+            self.cur.expect_punct("(")?;
+            let mut dims = Vec::new();
+            if self.cur.eat_punct("(") {
+                loop {
+                    dims.push(self.expr()?);
+                    if !self.cur.eat_punct(",") {
+                        break;
+                    }
+                }
+                self.cur.expect_punct(")")?;
+            } else {
+                dims.push(self.expr()?);
+            }
+            self.cur.expect_punct(")")?;
+            self.bound.insert(name.clone());
+            return Ok(Stmt::Decl {
+                name,
+                ty: Type::array_of(Type::Float, dims.len()),
+                dims,
+                init: None,
+            });
+        }
+
+        let value = self.expr()?;
+        // First plain assignment to an unbound scalar name = declaration.
+        if op == AssignOp::Set && matches!(&target, LValue::Var(_)) && !self.bound.contains(&name)
+        {
+            self.bound.insert(name.clone());
+            let ty = if matches!(value, Expr::IntLit(_)) { Type::Int } else { Type::Float };
+            return Ok(Stmt::Decl { name, ty, dims: vec![], init: Some(value) });
+        }
+        Ok(Stmt::Assign { target, op, value })
+    }
+
+    fn call_args(&mut self) -> PResult<Vec<Expr>> {
+        self.cur.expect_punct("(")?;
+        let mut args = Vec::new();
+        if !self.cur.at_punct(")") {
+            loop {
+                args.push(self.expr()?);
+                if !self.cur.eat_punct(",") {
+                    break;
+                }
+            }
+        }
+        self.cur.expect_punct(")")?;
+        Ok(args)
+    }
+
+    // ---- expressions ----
+
+    fn expr(&mut self) -> PResult<Expr> {
+        self.or_expr()
+    }
+
+    fn or_expr(&mut self) -> PResult<Expr> {
+        let mut lhs = self.and_expr()?;
+        while self.cur.eat_ident("or") {
+            let rhs = self.and_expr()?;
+            lhs = Expr::bin(BinOp::Or, lhs, rhs);
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> PResult<Expr> {
+        let mut lhs = self.not_expr()?;
+        while self.cur.eat_ident("and") {
+            let rhs = self.not_expr()?;
+            lhs = Expr::bin(BinOp::And, lhs, rhs);
+        }
+        Ok(lhs)
+    }
+
+    fn not_expr(&mut self) -> PResult<Expr> {
+        if self.cur.eat_ident("not") {
+            let e = self.not_expr()?;
+            return Ok(Expr::Unary { op: UnOp::Not, operand: Box::new(e) });
+        }
+        self.cmp_expr()
+    }
+
+    fn cmp_expr(&mut self) -> PResult<Expr> {
+        let mut lhs = self.add_expr()?;
+        loop {
+            let op = if self.cur.eat_punct("==") {
+                BinOp::Eq
+            } else if self.cur.eat_punct("!=") {
+                BinOp::Ne
+            } else if self.cur.eat_punct("<=") {
+                BinOp::Le
+            } else if self.cur.eat_punct(">=") {
+                BinOp::Ge
+            } else if self.cur.eat_punct("<") {
+                BinOp::Lt
+            } else if self.cur.eat_punct(">") {
+                BinOp::Gt
+            } else {
+                return Ok(lhs);
+            };
+            let rhs = self.add_expr()?;
+            lhs = Expr::bin(op, lhs, rhs);
+        }
+    }
+
+    fn add_expr(&mut self) -> PResult<Expr> {
+        let mut lhs = self.mul_expr()?;
+        loop {
+            let op = if self.cur.eat_punct("+") {
+                BinOp::Add
+            } else if self.cur.eat_punct("-") {
+                BinOp::Sub
+            } else {
+                return Ok(lhs);
+            };
+            let rhs = self.mul_expr()?;
+            lhs = Expr::bin(op, lhs, rhs);
+        }
+    }
+
+    fn mul_expr(&mut self) -> PResult<Expr> {
+        let mut lhs = self.unary_expr()?;
+        loop {
+            let op = if self.cur.eat_punct("*") {
+                BinOp::Mul
+            } else if self.cur.eat_punct("//") {
+                BinOp::Div // floor-div on ints == IR integer Div
+            } else if self.cur.eat_punct("/") {
+                BinOp::Div
+            } else if self.cur.eat_punct("%") {
+                BinOp::Mod
+            } else {
+                return Ok(lhs);
+            };
+            let rhs = self.unary_expr()?;
+            lhs = Expr::bin(op, lhs, rhs);
+        }
+    }
+
+    fn unary_expr(&mut self) -> PResult<Expr> {
+        if self.cur.eat_punct("-") {
+            let e = self.unary_expr()?;
+            return Ok(Expr::Unary { op: UnOp::Neg, operand: Box::new(e) });
+        }
+        self.power_expr()
+    }
+
+    fn power_expr(&mut self) -> PResult<Expr> {
+        let base = self.postfix_expr()?;
+        if self.cur.eat_punct("**") {
+            // right-associative
+            let exp = self.unary_expr()?;
+            return Ok(Expr::Intrinsic { f: Intrinsic::Pow, args: vec![base, exp] });
+        }
+        Ok(base)
+    }
+
+    fn postfix_expr(&mut self) -> PResult<Expr> {
+        match self.cur.bump() {
+            Tok::Int(v) => Ok(Expr::IntLit(v)),
+            Tok::Float(v) => Ok(Expr::FloatLit(v)),
+            Tok::Punct("(") => {
+                let e = self.expr()?;
+                self.cur.expect_punct(")")?;
+                Ok(e)
+            }
+            Tok::Ident(name) => {
+                // attribute access: `math.sqrt(x)` etc. — strip qualifier
+                if self.cur.at_punct(".") {
+                    self.cur.bump();
+                    let method = self.cur.expect_ident_any()?;
+                    if self.cur.at_punct("(") {
+                        let args = self.call_args()?;
+                        return Ok(Expr::Call { name: method, args });
+                    }
+                    // math.pi
+                    if name == "math" && method == "pi" {
+                        return Ok(Expr::FloatLit(std::f64::consts::PI));
+                    }
+                    return Err(self.err(format!("unsupported attribute `{name}.{method}`")));
+                }
+                if self.cur.at_punct("(") {
+                    // len(a) → Len; int()/float() casts transparent
+                    let args = self.call_args()?;
+                    if name == "len" {
+                        if let [Expr::Var(base)] = args.as_slice() {
+                            return Ok(Expr::Len { base: base.clone(), dim: 0 });
+                        }
+                        return Err(self.err("len() takes a single array variable"));
+                    }
+                    if (name == "int" || name == "float") && args.len() == 1 {
+                        return Ok(args.into_iter().next().unwrap());
+                    }
+                    return Ok(Expr::Call { name, args });
+                }
+                if self.cur.at_punct("[") {
+                    let mut indices = Vec::new();
+                    while self.cur.eat_punct("[") {
+                        indices.push(self.expr()?);
+                        self.cur.expect_punct("]")?;
+                    }
+                    return Ok(Expr::Index { base: name, indices });
+                }
+                Ok(Expr::Var(name))
+            }
+            other => Err(self.err(format!("unexpected {} in expression", other.describe()))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_ok(src: &str) -> Program {
+        let mut p = parse(src, "t").unwrap();
+        p.number_loops();
+        p
+    }
+
+    #[test]
+    fn basic_function_with_loop() {
+        let p = parse_ok(
+            "import math\n\ndef main():\n    n = 8\n    a = zeros(n)\n    for i in range(n):\n        a[i] = i * 2.0\n    print(a[3])\n",
+        );
+        assert_eq!(p.loop_count(), 1);
+        let f = p.entry().unwrap();
+        assert!(matches!(&f.body[0], Stmt::Decl { name, ty: Type::Int, .. } if name == "n"));
+        assert!(matches!(&f.body[1], Stmt::Decl { ty: Type::Array { .. }, .. }));
+    }
+
+    #[test]
+    fn zeros_2d_and_range_forms() {
+        let p = parse_ok(
+            "def main():\n    m = zeros((4, 5))\n    for i in range(1, 4):\n        for j in range(0, 5, 2):\n            m[i][j] = 1.0\n",
+        );
+        let f = p.entry().unwrap();
+        match &f.body[0] {
+            Stmt::Decl { ty, dims, .. } => {
+                assert_eq!(*ty, Type::array_of(Type::Float, 2));
+                assert_eq!(dims.len(), 2);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(p.loop_count(), 2);
+    }
+
+    #[test]
+    fn first_assignment_declares_subsequent_assigns() {
+        let p = parse_ok("def main():\n    x = 1\n    x = 2\n    x += 3\n");
+        let f = p.entry().unwrap();
+        assert!(matches!(&f.body[0], Stmt::Decl { .. }));
+        assert!(matches!(&f.body[1], Stmt::Assign { op: AssignOp::Set, .. }));
+        assert!(matches!(&f.body[2], Stmt::Assign { op: AssignOp::Add, .. }));
+    }
+
+    #[test]
+    fn math_attr_and_power() {
+        let p = parse_ok("def main():\n    y = math.sqrt(2.0) + 2.0 ** 3.0\n");
+        let f = p.entry().unwrap();
+        match &f.body[0] {
+            Stmt::Decl { init: Some(Expr::Binary { lhs, rhs, .. }), .. } => {
+                assert!(matches!(**lhs, Expr::Call { ref name, .. } if name == "sqrt"));
+                assert!(
+                    matches!(**rhs, Expr::Intrinsic { f: Intrinsic::Pow, .. }),
+                    "** should lower to pow"
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn elif_chain() {
+        let p = parse_ok(
+            "def main():\n    x = 1\n    if x < 0:\n        x = 0\n    elif x < 10:\n        x = 1\n    else:\n        x = 2\n",
+        );
+        let f = p.entry().unwrap();
+        match &f.body[1] {
+            Stmt::If { else_body, .. } => {
+                assert_eq!(else_body.len(), 1);
+                assert!(matches!(&else_body[0], Stmt::If { else_body, .. } if else_body.len() == 1));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn multiple_functions_and_calls() {
+        let p = parse_ok(
+            "def helper(a, n):\n    for i in range(n):\n        a[i] = i\n\ndef main():\n    n = 4\n    a = zeros(n)\n    helper(a, n)\n",
+        );
+        assert_eq!(p.functions.len(), 2);
+        let f = p.entry().unwrap();
+        assert!(matches!(&f.body[2], Stmt::Call { name, .. } if name == "helper"));
+    }
+
+    #[test]
+    fn len_builtin() {
+        let p = parse_ok("def main():\n    a = zeros(5)\n    n = len(a)\n");
+        let f = p.entry().unwrap();
+        assert!(matches!(&f.body[1], Stmt::Decl { init: Some(Expr::Len { .. }), .. }));
+    }
+
+    #[test]
+    fn error_on_bad_indent_structure() {
+        assert!(parse("def main():\nx = 1\n", "t").is_err());
+    }
+}

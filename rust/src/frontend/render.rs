@@ -1,0 +1,691 @@
+//! Render IR back to per-language source, annotated with offload
+//! directives — the paper's "遺伝子情報のコード化" (encoding gene
+//! information into code) made visible.
+//!
+//! For a gene/plan the paper inserts, per language (§4.3):
+//! * C: `#pragma acc kernels` / `#pragma acc parallel loop` plus
+//!   `#pragma acc data copy(...)` / `present(...)` (OpenACC, PGI compiler)
+//! * Python: PyCUDA kernel dispatch — rendered as `# [pycuda] ...`
+//!   annotations on the loop
+//! * Java: `IntStream.range(0, n).parallel().forEach` lambda — rendered as
+//!   `// [gpu-lambda] ...` annotations (IBM JDK offload)
+//!
+//! The annotated source is for human inspection and reports; execution of
+//! the plan happens in the VM + device model.
+
+use crate::ir::*;
+use std::collections::HashMap;
+use std::fmt::Write;
+
+/// Directive annotations attached to one loop before rendering.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LoopDirective {
+    /// loop body runs on the GPU
+    pub offload: bool,
+    /// variables copied host→device at region entry
+    pub copy_in: Vec<String>,
+    /// variables copied device→host at region exit
+    pub copy_out: Vec<String>,
+    /// variables already resident (transfer hoisted to an outer level)
+    pub present: Vec<String>,
+}
+
+/// Render `prog` with per-loop directives as commented/pragma'd source in
+/// the program's own language.
+pub fn render(prog: &Program, directives: &HashMap<LoopId, LoopDirective>) -> String {
+    let mut out = String::new();
+    let r = Renderer { lang: prog.lang, directives };
+    match prog.lang {
+        Lang::C => {
+            for f in &prog.functions {
+                r.c_function(&mut out, f);
+                out.push('\n');
+            }
+        }
+        Lang::Python => {
+            for f in &prog.functions {
+                r.py_function(&mut out, f);
+                out.push('\n');
+            }
+        }
+        Lang::Java => {
+            let _ = writeln!(out, "class {} {{", sanitize_class(&prog.name));
+            for f in &prog.functions {
+                r.java_method(&mut out, f);
+            }
+            out.push_str("}\n");
+        }
+    }
+    out
+}
+
+fn sanitize_class(name: &str) -> String {
+    let mut s: String = name
+        .chars()
+        .map(|c| if c.is_alphanumeric() { c } else { '_' })
+        .collect();
+    if s.is_empty() {
+        s.push('P');
+    }
+    if s.chars().next().unwrap().is_ascii_digit() {
+        s.insert(0, '_');
+    }
+    // Java classes conventionally start uppercase.
+    let mut c = s.chars();
+    match c.next() {
+        Some(f) => f.to_uppercase().collect::<String>() + c.as_str(),
+        None => s,
+    }
+}
+
+struct Renderer<'a> {
+    lang: Lang,
+    directives: &'a HashMap<LoopId, LoopDirective>,
+}
+
+impl<'a> Renderer<'a> {
+    fn indent(out: &mut String, depth: usize) {
+        for _ in 0..depth {
+            out.push_str("    ");
+        }
+    }
+
+    fn directive_lines(&self, id: LoopId) -> Vec<String> {
+        let Some(d) = self.directives.get(&id) else { return vec![] };
+        if !d.offload && d.copy_in.is_empty() && d.copy_out.is_empty() && d.present.is_empty() {
+            return vec![];
+        }
+        let mut lines = Vec::new();
+        match self.lang {
+            Lang::C => {
+                if !d.copy_in.is_empty() {
+                    lines.push(format!("#pragma acc data copyin({})", d.copy_in.join(", ")));
+                }
+                if !d.copy_out.is_empty() {
+                    lines.push(format!("#pragma acc data copyout({})", d.copy_out.join(", ")));
+                }
+                if !d.present.is_empty() {
+                    lines.push(format!("#pragma acc data present({})", d.present.join(", ")));
+                }
+                if d.offload {
+                    lines.push("#pragma acc kernels".to_string());
+                    lines.push("#pragma acc parallel loop".to_string());
+                }
+            }
+            Lang::Python => {
+                if !d.copy_in.is_empty() {
+                    lines.push(format!("# [pycuda] memcpy_htod: {}", d.copy_in.join(", ")));
+                }
+                if !d.copy_out.is_empty() {
+                    lines.push(format!("# [pycuda] memcpy_dtoh: {}", d.copy_out.join(", ")));
+                }
+                if !d.present.is_empty() {
+                    lines.push(format!("# [pycuda] device-resident: {}", d.present.join(", ")));
+                }
+                if d.offload {
+                    lines.push("# [pycuda] SourceModule kernel launch for this loop".to_string());
+                }
+            }
+            Lang::Java => {
+                if !d.copy_in.is_empty() {
+                    lines.push(format!("// [gpu-lambda] host->device: {}", d.copy_in.join(", ")));
+                }
+                if !d.copy_out.is_empty() {
+                    lines.push(format!("// [gpu-lambda] device->host: {}", d.copy_out.join(", ")));
+                }
+                if !d.present.is_empty() {
+                    lines.push(format!("// [gpu-lambda] device-resident: {}", d.present.join(", ")));
+                }
+                if d.offload {
+                    lines.push(
+                        "// [gpu-lambda] IntStream.range(start, end).parallel().forEach (IBM JDK GPU)"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+        lines
+    }
+
+    // ---------- C ----------
+
+    fn c_type(ty: &Type) -> &'static str {
+        match ty {
+            Type::Int => "int",
+            Type::Float => "double",
+            Type::Void => "void",
+            Type::Array { elem, .. } => Self::c_type(elem),
+        }
+    }
+
+    fn c_function(&self, out: &mut String, f: &Function) {
+        let params: Vec<String> = f
+            .params
+            .iter()
+            .map(|p| match &p.ty {
+                Type::Array { elem, rank } => {
+                    format!("{} {}{}", Self::c_type(elem), p.name, "[]".repeat(*rank))
+                }
+                t => format!("{} {}", Self::c_type(t), p.name),
+            })
+            .collect();
+        let _ = writeln!(out, "{} {}({}) {{", Self::c_type(&f.ret), f.name, params.join(", "));
+        self.c_block(out, &f.body, 1);
+        out.push_str("}\n");
+    }
+
+    fn c_block(&self, out: &mut String, body: &[Stmt], depth: usize) {
+        for s in body {
+            self.c_stmt(out, s, depth);
+        }
+    }
+
+    fn c_stmt(&self, out: &mut String, s: &Stmt, depth: usize) {
+        match s {
+            Stmt::Decl { name, ty, dims, init } => {
+                Self::indent(out, depth);
+                if dims.is_empty() {
+                    match init {
+                        Some(e) => {
+                            let _ = writeln!(out, "{} {} = {};", Self::c_type(ty), name, expr(e, self.lang));
+                        }
+                        None => {
+                            let _ = writeln!(out, "{} {};", Self::c_type(ty), name);
+                        }
+                    }
+                } else {
+                    let d: String = dims.iter().map(|e| format!("[{}]", expr(e, self.lang))).collect();
+                    let _ = writeln!(out, "{} {}{};", Self::c_type(ty), name, d);
+                }
+            }
+            Stmt::Assign { target, op, value } => {
+                Self::indent(out, depth);
+                let _ = writeln!(out, "{} {} {};", lvalue(target, self.lang), assign_op(*op), expr(value, self.lang));
+            }
+            Stmt::For { id, var, start, end, step, body } => {
+                for line in self.directive_lines(*id) {
+                    Self::indent(out, depth);
+                    out.push_str(&line);
+                    out.push('\n');
+                }
+                Self::indent(out, depth);
+                let _ = writeln!(
+                    out,
+                    "for (int {v} = {s}; {v} < {e}; {v} += {st}) {{",
+                    v = var,
+                    s = expr(start, self.lang),
+                    e = expr(end, self.lang),
+                    st = expr(step, self.lang)
+                );
+                self.c_block(out, body, depth + 1);
+                Self::indent(out, depth);
+                out.push_str("}\n");
+            }
+            Stmt::While { cond, body } => {
+                Self::indent(out, depth);
+                let _ = writeln!(out, "while ({}) {{", expr(cond, self.lang));
+                self.c_block(out, body, depth + 1);
+                Self::indent(out, depth);
+                out.push_str("}\n");
+            }
+            Stmt::If { cond, then_body, else_body } => {
+                Self::indent(out, depth);
+                let _ = writeln!(out, "if ({}) {{", expr(cond, self.lang));
+                self.c_block(out, then_body, depth + 1);
+                Self::indent(out, depth);
+                if else_body.is_empty() {
+                    out.push_str("}\n");
+                } else {
+                    out.push_str("} else {\n");
+                    self.c_block(out, else_body, depth + 1);
+                    Self::indent(out, depth);
+                    out.push_str("}\n");
+                }
+            }
+            Stmt::Call { name, args } => {
+                Self::indent(out, depth);
+                let a: Vec<String> = args.iter().map(|e| expr(e, self.lang)).collect();
+                let _ = writeln!(out, "{}({});", name, a.join(", "));
+            }
+            Stmt::Return(e) => {
+                Self::indent(out, depth);
+                match e {
+                    Some(e) => {
+                        let _ = writeln!(out, "return {};", expr(e, self.lang));
+                    }
+                    None => out.push_str("return;\n"),
+                }
+            }
+            Stmt::Break => {
+                Self::indent(out, depth);
+                out.push_str("break;\n");
+            }
+            Stmt::Continue => {
+                Self::indent(out, depth);
+                out.push_str("continue;\n");
+            }
+            Stmt::Print(e) => {
+                Self::indent(out, depth);
+                let _ = writeln!(out, "printf(\"%f\\n\", {});", expr(e, self.lang));
+            }
+        }
+    }
+
+    // ---------- Python ----------
+
+    fn py_function(&self, out: &mut String, f: &Function) {
+        let params: Vec<&str> = f.params.iter().map(|p| p.name.as_str()).collect();
+        let _ = writeln!(out, "def {}({}):", f.name, params.join(", "));
+        if f.body.is_empty() {
+            Self::indent(out, 1);
+            out.push_str("pass\n");
+        }
+        self.py_block(out, &f.body, 1);
+    }
+
+    fn py_block(&self, out: &mut String, body: &[Stmt], depth: usize) {
+        for s in body {
+            self.py_stmt(out, s, depth);
+        }
+    }
+
+    fn py_stmt(&self, out: &mut String, s: &Stmt, depth: usize) {
+        match s {
+            Stmt::Decl { name, dims, init, .. } => {
+                Self::indent(out, depth);
+                if dims.is_empty() {
+                    let v = init.as_ref().map(|e| expr(e, self.lang)).unwrap_or_else(|| "0".into());
+                    let _ = writeln!(out, "{name} = {v}");
+                } else if dims.len() == 1 {
+                    let _ = writeln!(out, "{name} = zeros({})", expr(&dims[0], self.lang));
+                } else {
+                    let d: Vec<String> = dims.iter().map(|e| expr(e, self.lang)).collect();
+                    let _ = writeln!(out, "{name} = zeros(({}))", d.join(", "));
+                }
+            }
+            Stmt::Assign { target, op, value } => {
+                Self::indent(out, depth);
+                let _ = writeln!(out, "{} {} {}", lvalue(target, self.lang), assign_op(*op), expr(value, self.lang));
+            }
+            Stmt::For { id, var, start, end, step, body } => {
+                for line in self.directive_lines(*id) {
+                    Self::indent(out, depth);
+                    out.push_str(&line);
+                    out.push('\n');
+                }
+                Self::indent(out, depth);
+                let s_ = expr(start, self.lang);
+                let e_ = expr(end, self.lang);
+                let st = expr(step, self.lang);
+                if st == "1" && s_ == "0" {
+                    let _ = writeln!(out, "for {var} in range({e_}):");
+                } else if st == "1" {
+                    let _ = writeln!(out, "for {var} in range({s_}, {e_}):");
+                } else {
+                    let _ = writeln!(out, "for {var} in range({s_}, {e_}, {st}):");
+                }
+                if body.is_empty() {
+                    Self::indent(out, depth + 1);
+                    out.push_str("pass\n");
+                }
+                self.py_block(out, body, depth + 1);
+            }
+            Stmt::While { cond, body } => {
+                Self::indent(out, depth);
+                let _ = writeln!(out, "while {}:", expr(cond, self.lang));
+                self.py_block(out, body, depth + 1);
+            }
+            Stmt::If { cond, then_body, else_body } => {
+                Self::indent(out, depth);
+                let _ = writeln!(out, "if {}:", expr(cond, self.lang));
+                if then_body.is_empty() {
+                    Self::indent(out, depth + 1);
+                    out.push_str("pass\n");
+                }
+                self.py_block(out, then_body, depth + 1);
+                if !else_body.is_empty() {
+                    Self::indent(out, depth);
+                    out.push_str("else:\n");
+                    self.py_block(out, else_body, depth + 1);
+                }
+            }
+            Stmt::Call { name, args } => {
+                Self::indent(out, depth);
+                let a: Vec<String> = args.iter().map(|e| expr(e, self.lang)).collect();
+                let _ = writeln!(out, "{}({})", name, a.join(", "));
+            }
+            Stmt::Return(e) => {
+                Self::indent(out, depth);
+                match e {
+                    Some(e) => {
+                        let _ = writeln!(out, "return {}", expr(e, self.lang));
+                    }
+                    None => out.push_str("return\n"),
+                }
+            }
+            Stmt::Break => {
+                Self::indent(out, depth);
+                out.push_str("break\n");
+            }
+            Stmt::Continue => {
+                Self::indent(out, depth);
+                out.push_str("continue\n");
+            }
+            Stmt::Print(e) => {
+                Self::indent(out, depth);
+                let _ = writeln!(out, "print({})", expr(e, self.lang));
+            }
+        }
+    }
+
+    // ---------- Java ----------
+
+    fn java_type(ty: &Type) -> String {
+        match ty {
+            Type::Int => "int".into(),
+            Type::Float => "double".into(),
+            Type::Void => "void".into(),
+            Type::Array { elem, rank } => format!("{}{}", Self::java_type(elem), "[]".repeat(*rank)),
+        }
+    }
+
+    fn java_method(&self, out: &mut String, f: &Function) {
+        let params: Vec<String> = f
+            .params
+            .iter()
+            .map(|p| format!("{} {}", Self::java_type(&p.ty), p.name))
+            .collect();
+        Self::indent(out, 1);
+        if f.name == "main" {
+            out.push_str("public static void main(String[] args) {\n");
+        } else {
+            let _ = writeln!(out, "static {} {}({}) {{", Self::java_type(&f.ret), f.name, params.join(", "));
+        }
+        self.java_block(out, &f.body, 2);
+        Self::indent(out, 1);
+        out.push_str("}\n");
+    }
+
+    fn java_block(&self, out: &mut String, body: &[Stmt], depth: usize) {
+        for s in body {
+            self.java_stmt(out, s, depth);
+        }
+    }
+
+    fn java_stmt(&self, out: &mut String, s: &Stmt, depth: usize) {
+        match s {
+            Stmt::Decl { name, ty, dims, init } => {
+                Self::indent(out, depth);
+                if dims.is_empty() {
+                    match init {
+                        Some(e) => {
+                            let _ = writeln!(out, "{} {} = {};", Self::java_type(ty), name, expr(e, self.lang));
+                        }
+                        None => {
+                            let _ = writeln!(out, "{} {};", Self::java_type(ty), name);
+                        }
+                    }
+                } else {
+                    let elem = match ty {
+                        Type::Array { elem, .. } => Self::java_type(elem),
+                        _ => "double".into(),
+                    };
+                    let d: String = dims.iter().map(|e| format!("[{}]", expr(e, self.lang))).collect();
+                    let _ = writeln!(out, "{} {} = new {}{};", Self::java_type(ty), name, elem, d);
+                }
+            }
+            Stmt::Assign { target, op, value } => {
+                Self::indent(out, depth);
+                let _ = writeln!(out, "{} {} {};", lvalue(target, self.lang), assign_op(*op), expr(value, self.lang));
+            }
+            Stmt::For { id, var, start, end, step, body } => {
+                let d = self.directives.get(id);
+                for line in self.directive_lines(*id) {
+                    Self::indent(out, depth);
+                    out.push_str(&line);
+                    out.push('\n');
+                }
+                Self::indent(out, depth);
+                if d.map(|d| d.offload).unwrap_or(false) && step == &Expr::IntLit(1) {
+                    // The paper's Java offload form: parallel IntStream.
+                    let _ = writeln!(
+                        out,
+                        "java.util.stream.IntStream.range({}, {}).parallel().forEach({} -> {{",
+                        expr(start, self.lang),
+                        expr(end, self.lang),
+                        var
+                    );
+                } else {
+                    let _ = writeln!(
+                        out,
+                        "for (int {v} = {s}; {v} < {e}; {v} += {st}) {{",
+                        v = var,
+                        s = expr(start, self.lang),
+                        e = expr(end, self.lang),
+                        st = expr(step, self.lang)
+                    );
+                }
+                self.java_block(out, body, depth + 1);
+                Self::indent(out, depth);
+                if d.map(|d| d.offload).unwrap_or(false) && step == &Expr::IntLit(1) {
+                    out.push_str("});\n");
+                } else {
+                    out.push_str("}\n");
+                }
+            }
+            Stmt::While { cond, body } => {
+                Self::indent(out, depth);
+                let _ = writeln!(out, "while ({}) {{", expr(cond, self.lang));
+                self.java_block(out, body, depth + 1);
+                Self::indent(out, depth);
+                out.push_str("}\n");
+            }
+            Stmt::If { cond, then_body, else_body } => {
+                Self::indent(out, depth);
+                let _ = writeln!(out, "if ({}) {{", expr(cond, self.lang));
+                self.java_block(out, then_body, depth + 1);
+                Self::indent(out, depth);
+                if else_body.is_empty() {
+                    out.push_str("}\n");
+                } else {
+                    out.push_str("} else {\n");
+                    self.java_block(out, else_body, depth + 1);
+                    Self::indent(out, depth);
+                    out.push_str("}\n");
+                }
+            }
+            Stmt::Call { name, args } => {
+                Self::indent(out, depth);
+                let a: Vec<String> = args.iter().map(|e| expr(e, self.lang)).collect();
+                let _ = writeln!(out, "{}({});", name, a.join(", "));
+            }
+            Stmt::Return(e) => {
+                Self::indent(out, depth);
+                match e {
+                    Some(e) => {
+                        let _ = writeln!(out, "return {};", expr(e, self.lang));
+                    }
+                    None => out.push_str("return;\n"),
+                }
+            }
+            Stmt::Break => {
+                Self::indent(out, depth);
+                out.push_str("break;\n");
+            }
+            Stmt::Continue => {
+                Self::indent(out, depth);
+                out.push_str("continue;\n");
+            }
+            Stmt::Print(e) => {
+                Self::indent(out, depth);
+                let _ = writeln!(out, "System.out.println({});", expr(e, self.lang));
+            }
+        }
+    }
+}
+
+fn assign_op(op: AssignOp) -> &'static str {
+    match op {
+        AssignOp::Set => "=",
+        AssignOp::Add => "+=",
+        AssignOp::Sub => "-=",
+        AssignOp::Mul => "*=",
+        AssignOp::Div => "/=",
+    }
+}
+
+fn lvalue(lv: &LValue, lang: Lang) -> String {
+    match lv {
+        LValue::Var(n) => n.clone(),
+        LValue::Index { base, indices } => {
+            let idx: String = indices.iter().map(|e| format!("[{}]", expr(e, lang))).collect();
+            format!("{base}{idx}")
+        }
+    }
+}
+
+fn expr(e: &Expr, lang: Lang) -> String {
+    match e {
+        Expr::IntLit(v) => v.to_string(),
+        Expr::FloatLit(v) => {
+            if v.fract() == 0.0 && v.abs() < 1e15 {
+                format!("{v:.1}")
+            } else {
+                format!("{v}")
+            }
+        }
+        Expr::Var(n) => n.clone(),
+        Expr::Index { base, indices } => {
+            let idx: String = indices.iter().map(|e| format!("[{}]", expr(e, lang))).collect();
+            format!("{base}{idx}")
+        }
+        Expr::Binary { op, lhs, rhs } => {
+            let o = match (op, lang) {
+                (BinOp::And, Lang::Python) => "and",
+                (BinOp::Or, Lang::Python) => "or",
+                (o, _) => o.sym(),
+            };
+            format!("({} {} {})", expr(lhs, lang), o, expr(rhs, lang))
+        }
+        Expr::Unary { op, operand } => match (op, lang) {
+            (UnOp::Neg, _) => format!("(-{})", expr(operand, lang)),
+            (UnOp::Not, Lang::Python) => format!("(not {})", expr(operand, lang)),
+            (UnOp::Not, _) => format!("(!{})", expr(operand, lang)),
+        },
+        Expr::Intrinsic { f, args } => {
+            let a: Vec<String> = args.iter().map(|e| expr(e, lang)).collect();
+            let name = match lang {
+                Lang::C => f.name().to_string(),
+                Lang::Python => format!("math.{}", py_intrinsic(f)),
+                Lang::Java => format!("Math.{}", java_intrinsic(f)),
+            };
+            format!("{}({})", name, a.join(", "))
+        }
+        Expr::Call { name, args } => {
+            let a: Vec<String> = args.iter().map(|e| expr(e, lang)).collect();
+            format!("{}({})", name, a.join(", "))
+        }
+        Expr::Len { base, dim } => match lang {
+            Lang::C => format!("/*len*/{base}_len{dim}"),
+            Lang::Python => format!("len({base})"),
+            Lang::Java => format!("{base}.length"),
+        },
+    }
+}
+
+fn py_intrinsic(f: &Intrinsic) -> &'static str {
+    match f {
+        Intrinsic::Fabs => "fabs",
+        other => other.name(),
+    }
+}
+
+fn java_intrinsic(f: &Intrinsic) -> &'static str {
+    match f {
+        Intrinsic::Fabs => "abs",
+        Intrinsic::Min => "min",
+        Intrinsic::Max => "max",
+        other => other.name(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse;
+
+    const C_SRC: &str = r#"
+        void main() {
+            int n = 8;
+            double a[n];
+            for (int i = 0; i < n; i++) {
+                a[i] = sqrt(i * 2.0);
+            }
+            printf("%f\n", a[3]);
+        }
+    "#;
+
+    fn directives_for_loop0(offload: bool) -> HashMap<LoopId, LoopDirective> {
+        let mut m = HashMap::new();
+        m.insert(
+            0,
+            LoopDirective {
+                offload,
+                copy_in: vec!["a".into()],
+                copy_out: vec!["a".into()],
+                present: vec![],
+            },
+        );
+        m
+    }
+
+    #[test]
+    fn c_render_includes_openacc_pragmas() {
+        let p = parse(C_SRC, Lang::C, "t").unwrap();
+        let s = render(&p, &directives_for_loop0(true));
+        assert!(s.contains("#pragma acc kernels"), "{s}");
+        assert!(s.contains("#pragma acc parallel loop"), "{s}");
+        assert!(s.contains("#pragma acc data copyin(a)"), "{s}");
+        assert!(s.contains("for (int i = 0; i < n; i += 1)"), "{s}");
+    }
+
+    #[test]
+    fn python_render_has_pycuda_comments() {
+        let src = "def main():\n    n = 8\n    a = zeros(n)\n    for i in range(n):\n        a[i] = i * 2.0\n";
+        let p = parse(src, Lang::Python, "t").unwrap();
+        let s = render(&p, &directives_for_loop0(true));
+        assert!(s.contains("# [pycuda] SourceModule kernel launch"), "{s}");
+        assert!(s.contains("for i in range(n):"), "{s}");
+    }
+
+    #[test]
+    fn java_render_uses_parallel_stream_for_offloaded_loop() {
+        let src = r#"class T { public static void main(String[] args) {
+            int n = 8;
+            double[] a = new double[n];
+            for (int i = 0; i < n; i++) { a[i] = i * 2.0; }
+        } }"#;
+        let p = parse(src, Lang::Java, "t").unwrap();
+        let s = render(&p, &directives_for_loop0(true));
+        assert!(s.contains("IntStream.range(0, n).parallel().forEach(i -> {"), "{s}");
+        let s_plain = render(&p, &HashMap::new());
+        assert!(s_plain.contains("for (int i = 0; i < n; i += 1)"), "{s_plain}");
+    }
+
+    #[test]
+    fn rendered_c_reparses() {
+        let p = parse(C_SRC, Lang::C, "t").unwrap();
+        let s = render(&p, &HashMap::new());
+        let p2 = parse(&s, Lang::C, "t").unwrap();
+        assert_eq!(p.loop_count(), p2.loop_count());
+    }
+
+    #[test]
+    fn rendered_python_reparses() {
+        let src = "def main():\n    n = 8\n    a = zeros(n)\n    for i in range(n):\n        a[i] = i * 2.0\n    print(a[3])\n";
+        let p = parse(src, Lang::Python, "t").unwrap();
+        let s = render(&p, &HashMap::new());
+        let p2 = parse(&s, Lang::Python, "t").unwrap();
+        assert_eq!(p.entry().unwrap().body.len(), p2.entry().unwrap().body.len());
+    }
+}

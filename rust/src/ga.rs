@@ -1,0 +1,358 @@
+//! Genetic algorithm over offload patterns (§3.2.1, [29], Holland [41]).
+//!
+//! Gene: one bit per parallelizable loop — 1 = GPU, 0 = CPU. Fitness is
+//! derived from measured execution time in the verification environment;
+//! candidates whose results diverge from the CPU run (PCAST check) get
+//! time = ∞ and die out. Measured times are memoized per gene so each
+//! distinct pattern is compiled/measured once (the paper does the same —
+//! patterns are cached across generations).
+//!
+//! This module is **language-independent and measurement-agnostic**: the
+//! evaluator closure hides the whole parse→plan→VM→device pipeline.
+
+use crate::util::Rng;
+use std::collections::HashMap;
+
+/// GA hyper-parameters (defaults follow [29]'s scale: small populations,
+/// tens of generations).
+#[derive(Debug, Clone)]
+pub struct GaConfig {
+    pub population: usize,
+    pub generations: usize,
+    /// probability a selected pair is crossed (else copied)
+    pub crossover_p: f64,
+    /// per-bit mutation probability
+    pub mutation_p: f64,
+    /// individuals preserved unchanged per generation
+    pub elite: usize,
+    pub seed: u64,
+    /// stop early after this many generations without improvement
+    pub stagnation_stop: Option<usize>,
+    /// seed the initial population with the all-zero (CPU-only) gene so
+    /// the search result is never worse than the CPU baseline
+    pub seed_cpu_only: bool,
+}
+
+impl Default for GaConfig {
+    fn default() -> Self {
+        GaConfig {
+            population: 12,
+            generations: 15,
+            crossover_p: 0.9,
+            mutation_p: 0.05,
+            elite: 2,
+            seed: 0xC0FFEE,
+            stagnation_stop: Some(6),
+            seed_cpu_only: true,
+        }
+    }
+}
+
+/// Per-generation statistics (E2's convergence curves).
+#[derive(Debug, Clone)]
+pub struct GenStats {
+    pub generation: usize,
+    /// best measured time so far (seconds)
+    pub best_time: f64,
+    /// mean finite time of this generation's population
+    pub mean_time: f64,
+    /// cumulative distinct genes measured
+    pub evaluations: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct GaResult {
+    pub best_gene: Vec<bool>,
+    pub best_time: f64,
+    pub history: Vec<GenStats>,
+    /// distinct genes measured (the paper's 性能測定 count — the budget GA
+    /// spends vs exhaustive search)
+    pub evaluations: usize,
+}
+
+/// Run the GA. `measure` returns the candidate's execution time in seconds
+/// (`f64::INFINITY` for invalid/divergent candidates). With `len == 0` the
+/// CPU-only gene is returned immediately.
+pub fn optimize(len: usize, cfg: &GaConfig, mut measure: impl FnMut(&[bool]) -> f64) -> GaResult {
+    let mut memo: HashMap<Vec<bool>, f64> = HashMap::new();
+    let mut evals = 0usize;
+    let mut eval = |g: &[bool], memo: &mut HashMap<Vec<bool>, f64>, evals: &mut usize| -> f64 {
+        if let Some(&t) = memo.get(g) {
+            return t;
+        }
+        let t = measure(g);
+        memo.insert(g.to_vec(), t);
+        *evals += 1;
+        t
+    };
+
+    if len == 0 {
+        let g = vec![];
+        let t = eval(&g, &mut memo, &mut evals);
+        return GaResult {
+            best_gene: g,
+            best_time: t,
+            history: vec![GenStats { generation: 0, best_time: t, mean_time: t, evaluations: 1 }],
+            evaluations: evals,
+        };
+    }
+
+    let mut rng = Rng::new(cfg.seed);
+    let pop_n = cfg.population.max(2);
+    // initial population
+    let mut pop: Vec<Vec<bool>> = Vec::with_capacity(pop_n);
+    if cfg.seed_cpu_only {
+        pop.push(vec![false; len]);
+    }
+    while pop.len() < pop_n {
+        pop.push((0..len).map(|_| rng.bool()).collect());
+    }
+
+    let mut history = Vec::new();
+    let mut best_gene = pop[0].clone();
+    let mut best_time = f64::INFINITY;
+    let mut stale = 0usize;
+
+    for generation in 0..cfg.generations {
+        // measure population
+        let times: Vec<f64> = pop.iter().map(|g| eval(g, &mut memo, &mut evals)).collect();
+        // track best
+        let mut improved = false;
+        for (g, &t) in pop.iter().zip(&times) {
+            if t < best_time {
+                best_time = t;
+                best_gene = g.clone();
+                improved = true;
+            }
+        }
+        stale = if improved { 0 } else { stale + 1 };
+        let finite: Vec<f64> = times.iter().copied().filter(|t| t.is_finite()).collect();
+        let mean_time = if finite.is_empty() {
+            f64::INFINITY
+        } else {
+            finite.iter().sum::<f64>() / finite.len() as f64
+        };
+        history.push(GenStats { generation, best_time, mean_time, evaluations: evals });
+        if let Some(k) = cfg.stagnation_stop {
+            if stale >= k {
+                break;
+            }
+        }
+        if generation + 1 == cfg.generations {
+            break;
+        }
+
+        // fitness = 1/time (paper: 処理時間に応じて適合度を設定)
+        let fitness: Vec<f64> =
+            times.iter().map(|&t| if t.is_finite() { 1.0 / t.max(1e-12) } else { 0.0 }).collect();
+        let total_fit: f64 = fitness.iter().sum();
+
+        // sort indices by time for elitism
+        let mut order: Vec<usize> = (0..pop.len()).collect();
+        order.sort_by(|&a, &b| times[a].partial_cmp(&times[b]).unwrap());
+
+        let mut next: Vec<Vec<bool>> = Vec::with_capacity(pop_n);
+        for &i in order.iter().take(cfg.elite.min(pop.len())) {
+            next.push(pop[i].clone());
+        }
+        // roulette-select parents, crossover, mutate
+        let select = |rng: &mut Rng| -> usize {
+            if total_fit <= 0.0 {
+                return rng.below(pop.len());
+            }
+            let mut x = rng.f64() * total_fit;
+            for (i, f) in fitness.iter().enumerate() {
+                x -= f;
+                if x <= 0.0 {
+                    return i;
+                }
+            }
+            pop.len() - 1
+        };
+        while next.len() < pop_n {
+            let (pa, pb) = (select(&mut rng), select(&mut rng));
+            let (mut c1, mut c2) = (pop[pa].clone(), pop[pb].clone());
+            if rng.chance(cfg.crossover_p) && len >= 2 {
+                let point = 1 + rng.below(len - 1);
+                for k in point..len {
+                    std::mem::swap(&mut c1[k], &mut c2[k]);
+                }
+            }
+            for c in [&mut c1, &mut c2] {
+                for bit in c.iter_mut() {
+                    if rng.chance(cfg.mutation_p) {
+                        *bit = !*bit;
+                    }
+                }
+            }
+            next.push(c1);
+            if next.len() < pop_n {
+                next.push(c2);
+            }
+        }
+        pop = next;
+    }
+
+    GaResult { best_gene, best_time, history, evaluations: evals }
+}
+
+/// Exhaustive search baseline (E6): measure every gene. Only sane for
+/// small `len`; panics above 20 bits.
+pub fn exhaustive(len: usize, mut measure: impl FnMut(&[bool]) -> f64) -> GaResult {
+    assert!(len <= 20, "exhaustive search over 2^{len} genes is not sane");
+    let mut best_gene = vec![false; len];
+    let mut best_time = f64::INFINITY;
+    let total = 1usize << len;
+    for bits in 0..total {
+        let g: Vec<bool> = (0..len).map(|k| bits >> k & 1 == 1).collect();
+        let t = measure(&g);
+        if t < best_time {
+            best_time = t;
+            best_gene = g;
+        }
+    }
+    GaResult { best_gene, best_time, history: vec![], evaluations: total }
+}
+
+/// Random-search baseline (E6): `budget` random genes (deduplicated).
+pub fn random_search(
+    len: usize,
+    budget: usize,
+    seed: u64,
+    mut measure: impl FnMut(&[bool]) -> f64,
+) -> GaResult {
+    let mut rng = Rng::new(seed);
+    let mut memo: HashMap<Vec<bool>, f64> = HashMap::new();
+    let mut best_gene = vec![false; len];
+    let mut best_time = f64::INFINITY;
+    let mut history = Vec::new();
+    for i in 0..budget {
+        let g: Vec<bool> = (0..len).map(|_| rng.bool()).collect();
+        let t = *memo.entry(g.clone()).or_insert_with(|| measure(&g));
+        if t < best_time {
+            best_time = t;
+            best_gene = g;
+        }
+        history.push(GenStats {
+            generation: i,
+            best_time,
+            mean_time: best_time,
+            evaluations: memo.len(),
+        });
+    }
+    GaResult { best_gene, best_time, history, evaluations: memo.len() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy landscape: time = 10 - (number of bits matching a target) with a
+    /// poison bit that makes results diverge (∞).
+    fn toy_measure(target: &[bool], poison: Option<usize>) -> impl FnMut(&[bool]) -> f64 + '_ {
+        move |g: &[bool]| {
+            if let Some(p) = poison {
+                if g[p] {
+                    return f64::INFINITY;
+                }
+            }
+            let matches = g.iter().zip(target).filter(|(a, b)| a == b).count();
+            10.0 - matches as f64 + 0.001
+        }
+    }
+
+    #[test]
+    fn finds_target_pattern() {
+        let target = vec![true, false, true, true, false, false, true, false];
+        let r = optimize(
+            8,
+            &GaConfig {
+                generations: 40,
+                population: 16,
+                stagnation_stop: None,
+                ..Default::default()
+            },
+            toy_measure(&target, None),
+        );
+        assert_eq!(r.best_gene, target);
+        assert!(r.best_time < 2.1);
+    }
+
+    #[test]
+    fn poison_bit_never_in_solution() {
+        let target = vec![true; 6];
+        let r = optimize(
+            6,
+            &GaConfig { generations: 30, ..Default::default() },
+            toy_measure(&target, Some(3)),
+        );
+        assert!(!r.best_gene[3], "divergent bit must be selected out");
+        assert!(r.best_time.is_finite());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let target = vec![true, true, false, false, true];
+        let cfg = GaConfig::default();
+        let r1 = optimize(5, &cfg, toy_measure(&target, None));
+        let r2 = optimize(5, &cfg, toy_measure(&target, None));
+        assert_eq!(r1.best_gene, r2.best_gene);
+        assert_eq!(r1.evaluations, r2.evaluations);
+    }
+
+    #[test]
+    fn cpu_only_seed_bounds_result() {
+        // pathological landscape: every offload hurts
+        let r = optimize(
+            6,
+            &GaConfig { generations: 5, ..Default::default() },
+            |g: &[bool]| 1.0 + g.iter().filter(|&&b| b).count() as f64,
+        );
+        assert_eq!(r.best_gene, vec![false; 6]);
+        assert_eq!(r.best_time, 1.0);
+    }
+
+    #[test]
+    fn history_is_monotone_and_evals_bounded() {
+        let target = vec![true; 10];
+        let cfg = GaConfig { generations: 20, stagnation_stop: None, ..Default::default() };
+        let r = optimize(10, &cfg, toy_measure(&target, None));
+        for w in r.history.windows(2) {
+            assert!(w[1].best_time <= w[0].best_time);
+            assert!(w[1].evaluations >= w[0].evaluations);
+        }
+        assert!(r.evaluations <= 1 << 10);
+        assert!(r.evaluations <= cfg.population * cfg.generations);
+    }
+
+    #[test]
+    fn stagnation_stops_early() {
+        let r = optimize(
+            4,
+            &GaConfig { generations: 100, stagnation_stop: Some(3), ..Default::default() },
+            |_: &[bool]| 1.0, // flat landscape
+        );
+        assert!(r.history.len() <= 6, "stopped after {} gens", r.history.len());
+    }
+
+    #[test]
+    fn zero_length_gene() {
+        let r = optimize(0, &GaConfig::default(), |_: &[bool]| 7.0);
+        assert!(r.best_gene.is_empty());
+        assert_eq!(r.best_time, 7.0);
+    }
+
+    #[test]
+    fn exhaustive_finds_global_optimum() {
+        let target = vec![true, false, true, false];
+        let r = exhaustive(4, toy_measure(&target, None));
+        assert_eq!(r.best_gene, target);
+        assert_eq!(r.evaluations, 16);
+    }
+
+    #[test]
+    fn random_search_dedupes() {
+        let r = random_search(3, 100, 7, |_: &[bool]| 1.0);
+        assert!(r.evaluations <= 8);
+    }
+}

@@ -1,0 +1,694 @@
+//! Language-independent intermediate representation.
+//!
+//! The paper's common method hinges on managing "loops, variables and
+//! function blocks" abstractly, independent of the source language
+//! (§3.3: ループと変数の把握については…言語に非依存に抽象的に管理できる).
+//! Every front end (C, Python, Java) lowers to this IR; the analysis, GA,
+//! clone-detection and execution layers never see language syntax again.
+
+use std::fmt;
+
+/// Source language of a program (kept for reporting and directive rendering).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Lang {
+    C,
+    Python,
+    Java,
+}
+
+impl Lang {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Lang::C => "c",
+            Lang::Python => "python",
+            Lang::Java => "java",
+        }
+    }
+
+    /// Guess a language from a file extension.
+    pub fn from_ext(ext: &str) -> Option<Lang> {
+        match ext {
+            "c" | "h" | "cc" | "cpp" => Some(Lang::C),
+            "py" => Some(Lang::Python),
+            "java" => Some(Lang::Java),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Lang; 3] {
+        [Lang::C, Lang::Python, Lang::Java]
+    }
+}
+
+impl fmt::Display for Lang {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Scalar / array types. Front ends map `int`/`long` → `Int`,
+/// `float`/`double` → `Float`. Arrays are row-major f64 buffers with a
+/// static rank; extents are expressions evaluated at declaration time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Type {
+    Int,
+    Float,
+    /// element type + rank (number of dimensions).
+    Array { elem: Box<Type>, rank: usize },
+    Void,
+}
+
+impl Type {
+    pub fn array_of(elem: Type, rank: usize) -> Type {
+        Type::Array { elem: Box::new(elem), rank }
+    }
+    pub fn is_array(&self) -> bool {
+        matches!(self, Type::Array { .. })
+    }
+}
+
+/// Binary operators (normalized across languages).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+    And,
+    Or,
+}
+
+impl BinOp {
+    pub fn is_cmp(&self) -> bool {
+        matches!(self, BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge | BinOp::Eq | BinOp::Ne)
+    }
+    pub fn sym(&self) -> &'static str {
+        use BinOp::*;
+        match self {
+            Add => "+",
+            Sub => "-",
+            Mul => "*",
+            Div => "/",
+            Mod => "%",
+            Lt => "<",
+            Le => "<=",
+            Gt => ">",
+            Ge => ">=",
+            Eq => "==",
+            Ne => "!=",
+            And => "&&",
+            Or => "||",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UnOp {
+    Neg,
+    Not,
+}
+
+/// Math intrinsics available in all three source languages
+/// (`math.h`, `import math`, `java.lang.Math`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Intrinsic {
+    Sqrt,
+    Exp,
+    Log,
+    Sin,
+    Cos,
+    Fabs,
+    Pow,
+    Min,
+    Max,
+    Floor,
+}
+
+impl Intrinsic {
+    pub fn from_name(name: &str) -> Option<Intrinsic> {
+        Some(match name {
+            "sqrt" => Intrinsic::Sqrt,
+            "exp" => Intrinsic::Exp,
+            "log" => Intrinsic::Log,
+            "sin" => Intrinsic::Sin,
+            "cos" => Intrinsic::Cos,
+            "fabs" | "abs" | "fabsf" => Intrinsic::Fabs,
+            "pow" => Intrinsic::Pow,
+            "min" | "fmin" => Intrinsic::Min,
+            "max" | "fmax" => Intrinsic::Max,
+            "floor" => Intrinsic::Floor,
+            _ => return None,
+        })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Intrinsic::Sqrt => "sqrt",
+            Intrinsic::Exp => "exp",
+            Intrinsic::Log => "log",
+            Intrinsic::Sin => "sin",
+            Intrinsic::Cos => "cos",
+            Intrinsic::Fabs => "fabs",
+            Intrinsic::Pow => "pow",
+            Intrinsic::Min => "min",
+            Intrinsic::Max => "max",
+            Intrinsic::Floor => "floor",
+        }
+    }
+    pub fn arity(&self) -> usize {
+        match self {
+            Intrinsic::Pow | Intrinsic::Min | Intrinsic::Max => 2,
+            _ => 1,
+        }
+    }
+}
+
+/// Expressions. Variable references are by name; the VM resolves names to
+/// slots once per function (see `vm`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    IntLit(i64),
+    FloatLit(f64),
+    Var(String),
+    /// `a[i]`, `a[i][j]`, ... — row-major index into an array variable.
+    Index { base: String, indices: Vec<Expr> },
+    Binary { op: BinOp, lhs: Box<Expr>, rhs: Box<Expr> },
+    Unary { op: UnOp, operand: Box<Expr> },
+    Intrinsic { f: Intrinsic, args: Vec<Expr> },
+    /// User-function or library call in expression position.
+    Call { name: String, args: Vec<Expr> },
+    /// `len(a, dim)` — array extent along a dimension.
+    Len { base: String, dim: usize },
+}
+
+impl Expr {
+    pub fn int(v: i64) -> Expr {
+        Expr::IntLit(v)
+    }
+    pub fn var(n: &str) -> Expr {
+        Expr::Var(n.to_string())
+    }
+    pub fn bin(op: BinOp, l: Expr, r: Expr) -> Expr {
+        Expr::Binary { op, lhs: Box::new(l), rhs: Box::new(r) }
+    }
+
+    /// Collect every variable name referenced by this expression.
+    pub fn collect_vars(&self, out: &mut Vec<String>) {
+        match self {
+            Expr::IntLit(_) | Expr::FloatLit(_) => {}
+            Expr::Var(n) => out.push(n.clone()),
+            Expr::Index { base, indices } => {
+                out.push(base.clone());
+                for i in indices {
+                    i.collect_vars(out);
+                }
+            }
+            Expr::Binary { lhs, rhs, .. } => {
+                lhs.collect_vars(out);
+                rhs.collect_vars(out);
+            }
+            Expr::Unary { operand, .. } => operand.collect_vars(out),
+            Expr::Intrinsic { args, .. } | Expr::Call { args, .. } => {
+                for a in args {
+                    a.collect_vars(out);
+                }
+            }
+            Expr::Len { base, .. } => out.push(base.clone()),
+        }
+    }
+
+    /// Collect names of user/library functions called within.
+    pub fn collect_calls(&self, out: &mut Vec<String>) {
+        match self {
+            Expr::Call { name, args } => {
+                out.push(name.clone());
+                for a in args {
+                    a.collect_calls(out);
+                }
+            }
+            Expr::Binary { lhs, rhs, .. } => {
+                lhs.collect_calls(out);
+                rhs.collect_calls(out);
+            }
+            Expr::Unary { operand, .. } => operand.collect_calls(out),
+            Expr::Intrinsic { args, .. } => {
+                for a in args {
+                    a.collect_calls(out);
+                }
+            }
+            Expr::Index { indices, .. } => {
+                for i in indices {
+                    i.collect_calls(out);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Assignment targets.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LValue {
+    Var(String),
+    Index { base: String, indices: Vec<Expr> },
+}
+
+impl LValue {
+    pub fn base_name(&self) -> &str {
+        match self {
+            LValue::Var(n) => n,
+            LValue::Index { base, .. } => base,
+        }
+    }
+}
+
+/// Compound-assignment operators (`x += e` etc.). `Set` is plain `=`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AssignOp {
+    Set,
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+/// Stable identifier of a `for` loop within a program. Assigned in
+/// pre-order over all functions by `Program::number_loops`; the GA gene
+/// ("loop i offloaded?") indexes the *parallelizable subset* of these.
+pub type LoopId = usize;
+
+/// Statements.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// Variable declaration. For arrays, `dims` holds one extent expression
+    /// per dimension; `init` is an optional scalar initializer.
+    Decl { name: String, ty: Type, dims: Vec<Expr>, init: Option<Expr> },
+    Assign { target: LValue, op: AssignOp, value: Expr },
+    /// Counted loop `for v in [start, end) step step`. The only loop form
+    /// eligible for offload (the paper targets `for` statements).
+    For {
+        id: LoopId,
+        var: String,
+        start: Expr,
+        end: Expr,
+        step: Expr,
+        body: Vec<Stmt>,
+    },
+    While { cond: Expr, body: Vec<Stmt> },
+    If { cond: Expr, then_body: Vec<Stmt>, else_body: Vec<Stmt> },
+    /// Call in statement position (library calls live here:
+    /// `matmul(a,b,c,n)`).
+    Call { name: String, args: Vec<Expr> },
+    Return(Option<Expr>),
+    Break,
+    Continue,
+    /// `print(expr)` — output captured by the VM, used for result checks.
+    Print(Expr),
+}
+
+/// A function definition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Function {
+    pub name: String,
+    pub params: Vec<Param>,
+    pub ret: Type,
+    pub body: Vec<Stmt>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Param {
+    pub name: String,
+    pub ty: Type,
+}
+
+/// A whole translation unit in the language-independent IR.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Program {
+    pub lang: Lang,
+    pub name: String,
+    pub functions: Vec<Function>,
+}
+
+impl Program {
+    /// Entry function: `main` and its Python/Java equivalents are all
+    /// normalized to the IR name `main` by the front ends.
+    pub fn entry(&self) -> Option<&Function> {
+        self.functions.iter().find(|f| f.name == "main")
+    }
+
+    pub fn function(&self, name: &str) -> Option<&Function> {
+        self.functions.iter().find(|f| f.name == name)
+    }
+
+    /// Re-number every `For` loop in pre-order across all functions so that
+    /// `LoopId`s are dense and stable. Front ends call this after parsing.
+    pub fn number_loops(&mut self) -> usize {
+        let mut next = 0usize;
+        for f in &mut self.functions {
+            number_block(&mut f.body, &mut next);
+        }
+        next
+    }
+
+    /// Total number of `For` loops.
+    pub fn loop_count(&self) -> usize {
+        let mut n = 0;
+        for f in &self.functions {
+            count_block(&f.body, &mut n);
+        }
+        n
+    }
+
+    /// Visit every statement (pre-order), with the id of the innermost
+    /// enclosing `For` loop (if any).
+    pub fn visit_stmts<'a>(&'a self, mut f: impl FnMut(&'a Stmt, Option<LoopId>)) {
+        fn walk<'a>(
+            body: &'a [Stmt],
+            encl: Option<LoopId>,
+            f: &mut impl FnMut(&'a Stmt, Option<LoopId>),
+        ) {
+            for s in body {
+                f(s, encl);
+                match s {
+                    Stmt::For { id, body, .. } => walk(body, Some(*id), f),
+                    Stmt::While { body, .. } => walk(body, encl, f),
+                    Stmt::If { then_body, else_body, .. } => {
+                        walk(then_body, encl, f);
+                        walk(else_body, encl, f);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        for func in &self.functions {
+            walk(&func.body, None, &mut f);
+        }
+    }
+}
+
+impl Program {
+    /// Find the `For` statement with the given loop id.
+    pub fn find_for(&self, id: LoopId) -> Option<&Stmt> {
+        fn walk(body: &[Stmt], id: LoopId) -> Option<&Stmt> {
+            for s in body {
+                match s {
+                    Stmt::For { id: i, body: inner, .. } => {
+                        if *i == id {
+                            return Some(s);
+                        }
+                        if let Some(f) = walk(inner, id) {
+                            return Some(f);
+                        }
+                    }
+                    Stmt::While { body, .. } => {
+                        if let Some(f) = walk(body, id) {
+                            return Some(f);
+                        }
+                    }
+                    Stmt::If { then_body, else_body, .. } => {
+                        if let Some(f) = walk(then_body, id) {
+                            return Some(f);
+                        }
+                        if let Some(f) = walk(else_body, id) {
+                            return Some(f);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            None
+        }
+        for f in &self.functions {
+            if let Some(s) = walk(&f.body, id) {
+                return Some(s);
+            }
+        }
+        None
+    }
+}
+
+impl Program {
+    /// Rewrite every expression in the program bottom-up with `f`.
+    /// Used by the front-end post-pass that turns `Call("sqrt", ..)` into
+    /// `Intrinsic(Sqrt, ..)` when no user function shadows the name.
+    pub fn rewrite_exprs(&mut self, f: &mut impl FnMut(&mut Expr)) {
+        for func in &mut self.functions {
+            rewrite_block(&mut func.body, f);
+        }
+    }
+}
+
+fn rewrite_block(body: &mut [Stmt], f: &mut impl FnMut(&mut Expr)) {
+    for s in body {
+        match s {
+            Stmt::Decl { dims, init, .. } => {
+                for d in dims {
+                    rewrite_expr(d, f);
+                }
+                if let Some(e) = init {
+                    rewrite_expr(e, f);
+                }
+            }
+            Stmt::Assign { target, value, .. } => {
+                if let LValue::Index { indices, .. } = target {
+                    for i in indices {
+                        rewrite_expr(i, f);
+                    }
+                }
+                rewrite_expr(value, f);
+            }
+            Stmt::For { start, end, step, body, .. } => {
+                rewrite_expr(start, f);
+                rewrite_expr(end, f);
+                rewrite_expr(step, f);
+                rewrite_block(body, f);
+            }
+            Stmt::While { cond, body } => {
+                rewrite_expr(cond, f);
+                rewrite_block(body, f);
+            }
+            Stmt::If { cond, then_body, else_body } => {
+                rewrite_expr(cond, f);
+                rewrite_block(then_body, f);
+                rewrite_block(else_body, f);
+            }
+            Stmt::Call { args, .. } => {
+                for a in args {
+                    rewrite_expr(a, f);
+                }
+            }
+            Stmt::Return(Some(e)) | Stmt::Print(e) => rewrite_expr(e, f),
+            Stmt::Return(None) | Stmt::Break | Stmt::Continue => {}
+        }
+    }
+}
+
+fn rewrite_expr(e: &mut Expr, f: &mut impl FnMut(&mut Expr)) {
+    match e {
+        Expr::Index { indices, .. } => {
+            for i in indices {
+                rewrite_expr(i, f);
+            }
+        }
+        Expr::Binary { lhs, rhs, .. } => {
+            rewrite_expr(lhs, f);
+            rewrite_expr(rhs, f);
+        }
+        Expr::Unary { operand, .. } => rewrite_expr(operand, f),
+        Expr::Intrinsic { args, .. } | Expr::Call { args, .. } => {
+            for a in args {
+                rewrite_expr(a, f);
+            }
+        }
+        _ => {}
+    }
+    f(e);
+}
+
+fn number_block(body: &mut [Stmt], next: &mut usize) {
+    for s in body {
+        match s {
+            Stmt::For { id, body, .. } => {
+                *id = *next;
+                *next += 1;
+                number_block(body, next);
+            }
+            Stmt::While { body, .. } => number_block(body, next),
+            Stmt::If { then_body, else_body, .. } => {
+                number_block(then_body, next);
+                number_block(else_body, next);
+            }
+            _ => {}
+        }
+    }
+}
+
+fn count_block(body: &[Stmt], n: &mut usize) {
+    for s in body {
+        match s {
+            Stmt::For { body, .. } => {
+                *n += 1;
+                count_block(body, n);
+            }
+            Stmt::While { body, .. } => count_block(body, n),
+            Stmt::If { then_body, else_body, .. } => {
+                count_block(then_body, n);
+                count_block(else_body, n);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Node kinds used by the Deckard-style clone detector (`clone`): a fixed,
+/// language-independent alphabet over which characteristic vectors are
+/// computed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum NodeKind {
+    For = 0,
+    While,
+    If,
+    Assign,
+    CompoundAssign,
+    Decl,
+    CallStmt,
+    Return,
+    Print,
+    BreakContinue,
+    BinAdd,
+    BinSub,
+    BinMul,
+    BinDiv,
+    BinMod,
+    BinCmp,
+    BinLogic,
+    Unary,
+    IndexRead,
+    VarRead,
+    Literal,
+    IntrinsicSqrt,
+    IntrinsicExpLog,
+    IntrinsicTrig,
+    IntrinsicOther,
+    CallExpr,
+    Len,
+    IndexWrite,
+    ScalarWrite,
+    Reduction,
+}
+
+pub const NODE_KIND_COUNT: usize = NodeKind::Reduction as usize + 1;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_loop(id: LoopId, body: Vec<Stmt>) -> Stmt {
+        Stmt::For {
+            id,
+            var: "i".into(),
+            start: Expr::int(0),
+            end: Expr::var("n"),
+            step: Expr::int(1),
+            body,
+        }
+    }
+
+    #[test]
+    fn loop_numbering_is_preorder_and_dense() {
+        let mut p = Program {
+            lang: Lang::C,
+            name: "t".into(),
+            functions: vec![Function {
+                name: "main".into(),
+                params: vec![],
+                ret: Type::Void,
+                body: vec![
+                    sample_loop(99, vec![sample_loop(99, vec![])]),
+                    sample_loop(99, vec![]),
+                ],
+            }],
+        };
+        let n = p.number_loops();
+        assert_eq!(n, 3);
+        let mut ids = vec![];
+        p.visit_stmts(|s, _| {
+            if let Stmt::For { id, .. } = s {
+                ids.push(*id);
+            }
+        });
+        assert_eq!(ids, vec![0, 1, 2]);
+        assert_eq!(p.loop_count(), 3);
+    }
+
+    #[test]
+    fn visit_reports_enclosing_loop() {
+        let mut p = Program {
+            lang: Lang::Python,
+            name: "t".into(),
+            functions: vec![Function {
+                name: "main".into(),
+                params: vec![],
+                ret: Type::Void,
+                body: vec![sample_loop(
+                    0,
+                    vec![Stmt::Assign {
+                        target: LValue::Var("x".into()),
+                        op: AssignOp::Add,
+                        value: Expr::int(1),
+                    }],
+                )],
+            }],
+        };
+        p.number_loops();
+        let mut seen = None;
+        p.visit_stmts(|s, encl| {
+            if matches!(s, Stmt::Assign { .. }) {
+                seen = Some(encl);
+            }
+        });
+        assert_eq!(seen, Some(Some(0)));
+    }
+
+    #[test]
+    fn expr_var_and_call_collection() {
+        let e = Expr::Binary {
+            op: BinOp::Add,
+            lhs: Box::new(Expr::Index {
+                base: "a".into(),
+                indices: vec![Expr::var("i")],
+            }),
+            rhs: Box::new(Expr::Call { name: "f".into(), args: vec![Expr::var("x")] }),
+        };
+        let mut vars = vec![];
+        e.collect_vars(&mut vars);
+        assert_eq!(vars, vec!["a", "i", "x"]);
+        let mut calls = vec![];
+        e.collect_calls(&mut calls);
+        assert_eq!(calls, vec!["f"]);
+    }
+
+    #[test]
+    fn intrinsic_round_trip() {
+        for n in ["sqrt", "exp", "log", "sin", "cos", "fabs", "pow", "min", "max", "floor"] {
+            let i = Intrinsic::from_name(n).unwrap();
+            assert_eq!(Intrinsic::from_name(i.name()), Some(i));
+        }
+        assert!(Intrinsic::from_name("nope").is_none());
+    }
+
+    #[test]
+    fn lang_from_ext() {
+        assert_eq!(Lang::from_ext("c"), Some(Lang::C));
+        assert_eq!(Lang::from_ext("py"), Some(Lang::Python));
+        assert_eq!(Lang::from_ext("java"), Some(Lang::Java));
+        assert_eq!(Lang::from_ext("rs"), None);
+    }
+}

@@ -1,0 +1,43 @@
+//! # envadapt — environment-adaptive automatic GPU offloading
+//!
+//! Reproduction of Yamato, *"Study of Automatic GPU Offloading Method from
+//! Various Language Applications"* (IEICE/CS.DC 2020).
+//!
+//! The paper proposes a **common (language-independent) method** for
+//! automatically offloading applications written in C, Python and Java to a
+//! GPU, combining:
+//!
+//! 1. **Loop-statement offload** — a genetic algorithm searches the space of
+//!    "which parallelizable loops run on the GPU", with CPU↔GPU data-transfer
+//!    hoisting, measuring each candidate in a verification environment.
+//! 2. **Function-block offload** — library calls and clone-similar code
+//!    blocks are matched against a code-pattern DB and replaced by
+//!    device-tuned GPU library implementations.
+//!
+//! This crate is the Layer-3 coordinator of a three-layer stack:
+//! the "GPU" is a set of JAX/Pallas kernels AOT-compiled to HLO and executed
+//! through the PJRT C API (`runtime`); the source languages are parsed by
+//! from-scratch front ends (`frontend`) into a language-independent IR (`ir`)
+//! that is analyzed (`analysis`), interpreted on the "CPU" (`vm`) and
+//! selectively dispatched to the GPU device (`device`).
+//!
+//! See `DESIGN.md` for the full system inventory and the mapping from the
+//! paper's sections to modules.
+
+pub mod analysis;
+pub mod cli;
+pub mod clone;
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod frontend;
+pub mod funcblock;
+pub mod ga;
+pub mod ir;
+pub mod libs;
+pub mod measure;
+pub mod patterndb;
+pub mod runtime;
+pub mod util;
+pub mod vm;
+pub mod workloads;

@@ -1,0 +1,513 @@
+//! CPU reference implementations of the "library functions" applications
+//! call (the paper's置換元: the host-side libraries that the function-block
+//! offloader may replace with GPU-tuned equivalents — cuBLAS / cuFFT
+//! analogues live in `device`).
+//!
+//! Each library routine returns an estimated op count (flops) so the
+//! deterministic cost model can charge CPU time for un-offloaded calls.
+//! Numerics here are also the oracle the GPU path is checked against
+//! (the paper's PCAST results check).
+
+use crate::vm::{ArrayRef, Value};
+use anyhow::{anyhow, bail, Result};
+
+/// Names the pattern DB knows as offloadable function blocks.
+pub const LIBRARY_NAMES: &[&str] =
+    &["matmul", "dft", "conv1d", "saxpy", "reduce_sum", "blackscholes", "jacobi_step", "seed_fill"];
+
+pub fn is_library(name: &str) -> bool {
+    LIBRARY_NAMES.contains(&name)
+}
+
+/// Estimated floating-point work for a library call (used for CPU cost and
+/// for the GPU device model's kernel-time estimate).
+pub fn flops_estimate(name: &str, args: &[Value]) -> u64 {
+    let dim = |v: &Value| -> u64 {
+        match v {
+            Value::Int(n) => (*n).max(0) as u64,
+            Value::Float(f) => *f as u64,
+            Value::Arr(a) => a.borrow().data.len() as u64,
+        }
+    };
+    match name {
+        "matmul" => {
+            // c = a*b, n from 4th arg
+            let n = args.get(3).map(dim).unwrap_or(0);
+            2 * n * n * n
+        }
+        "dft" => {
+            let n = args.get(4).map(dim).unwrap_or(0);
+            8 * n * n
+        }
+        "conv1d" => {
+            let n = args.get(3).map(dim).unwrap_or(0);
+            let m = args.get(4).map(dim).unwrap_or(0);
+            2 * n * m
+        }
+        "saxpy" => 2 * args.get(1).map(dim).unwrap_or(0),
+        "reduce_sum" => args.first().map(dim).unwrap_or(0),
+        "blackscholes" => 60 * args.first().map(dim).unwrap_or(0),
+        "jacobi_step" => {
+            let n = args.get(2).map(dim).unwrap_or(0);
+            let m = args.get(3).map(dim).unwrap_or(0);
+            6 * n * m
+        }
+        "seed_fill" => 2 * args.first().map(dim).unwrap_or(0),
+        _ => 0,
+    }
+}
+
+fn arr(v: &Value, what: &str) -> Result<ArrayRef> {
+    match v {
+        Value::Arr(a) => Ok(a.clone()),
+        other => Err(anyhow!("{what}: expected array, got {other:?}")),
+    }
+}
+
+fn int(v: &Value, what: &str) -> Result<i64> {
+    match v {
+        Value::Int(n) => Ok(*n),
+        Value::Float(f) => Ok(*f as i64),
+        other => Err(anyhow!("{what}: expected scalar, got {other:?}")),
+    }
+}
+
+fn num(v: &Value, what: &str) -> Result<f64> {
+    match v {
+        Value::Int(n) => Ok(*n as f64),
+        Value::Float(f) => Ok(*f),
+        other => Err(anyhow!("{what}: expected scalar, got {other:?}")),
+    }
+}
+
+/// Execute a CPU library call. Returns `None` if `name` is not a library
+/// routine; `Some(Ok((ret, flops)))` on success.
+pub fn call(name: &str, args: &[Value]) -> Option<Result<(Value, u64)>> {
+    if !is_library(name) {
+        return None;
+    }
+    let flops = flops_estimate(name, args);
+    let r = dispatch(name, args).map(|v| (v, flops));
+    Some(r)
+}
+
+fn dispatch(name: &str, args: &[Value]) -> Result<Value> {
+    match name {
+        "matmul" => {
+            // matmul(a, b, c, n): c[n][n] = a[n][n] * b[n][n]
+            if args.len() != 4 {
+                bail!("matmul(a, b, c, n) takes 4 arguments");
+            }
+            let a = arr(&args[0], "matmul a")?;
+            let b = arr(&args[1], "matmul b")?;
+            let c = arr(&args[2], "matmul c")?;
+            let n = int(&args[3], "matmul n")? as usize;
+            let (a, b) = (a.borrow(), b.borrow());
+            let mut c = c.borrow_mut();
+            if a.data.len() < n * n || b.data.len() < n * n || c.data.len() < n * n {
+                bail!("matmul: arrays smaller than n*n = {}", n * n);
+            }
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = 0.0;
+                    for k in 0..n {
+                        s += a.data[i * n + k] * b.data[k * n + j];
+                    }
+                    c.data[i * n + j] = s;
+                }
+            }
+            Ok(Value::Int(0))
+        }
+        "dft" => {
+            // dft(re_in, im_in, re_out, im_out, n)
+            if args.len() != 5 {
+                bail!("dft(re_in, im_in, re_out, im_out, n) takes 5 arguments");
+            }
+            let re_in = arr(&args[0], "dft re_in")?;
+            let im_in = arr(&args[1], "dft im_in")?;
+            let re_out = arr(&args[2], "dft re_out")?;
+            let im_out = arr(&args[3], "dft im_out")?;
+            let n = int(&args[4], "dft n")? as usize;
+            let (re_in, im_in) = (re_in.borrow(), im_in.borrow());
+            let (mut re_out, mut im_out) = (re_out.borrow_mut(), im_out.borrow_mut());
+            if re_in.data.len() < n || im_in.data.len() < n || re_out.data.len() < n || im_out.data.len() < n {
+                bail!("dft: arrays smaller than n = {n}");
+            }
+            let w = -2.0 * std::f64::consts::PI / n as f64;
+            for k in 0..n {
+                let (mut sr, mut si) = (0.0, 0.0);
+                for t in 0..n {
+                    let ang = w * (k as f64) * (t as f64);
+                    let (c, s) = (ang.cos(), ang.sin());
+                    sr += re_in.data[t] * c - im_in.data[t] * s;
+                    si += re_in.data[t] * s + im_in.data[t] * c;
+                }
+                re_out.data[k] = sr;
+                im_out.data[k] = si;
+            }
+            Ok(Value::Int(0))
+        }
+        "conv1d" => {
+            // conv1d(x, k, y, n, m): y[i] = sum_j x[i+j]*k[j], y has n-m+1
+            if args.len() != 5 {
+                bail!("conv1d(x, k, y, n, m) takes 5 arguments");
+            }
+            let x = arr(&args[0], "conv1d x")?;
+            let kk = arr(&args[1], "conv1d k")?;
+            let y = arr(&args[2], "conv1d y")?;
+            let n = int(&args[3], "conv1d n")? as usize;
+            let m = int(&args[4], "conv1d m")? as usize;
+            if m == 0 || m > n {
+                bail!("conv1d: need 0 < m <= n");
+            }
+            let (x, kk) = (x.borrow(), kk.borrow());
+            let mut y = y.borrow_mut();
+            let out_len = n - m + 1;
+            if x.data.len() < n || kk.data.len() < m || y.data.len() < out_len {
+                bail!("conv1d: array extents too small");
+            }
+            for i in 0..out_len {
+                let mut s = 0.0;
+                for j in 0..m {
+                    s += x.data[i + j] * kk.data[j];
+                }
+                y.data[i] = s;
+            }
+            Ok(Value::Int(0))
+        }
+        "saxpy" => {
+            // saxpy(alpha, x, y, n): y = alpha*x + y
+            if args.len() != 4 {
+                bail!("saxpy(alpha, x, y, n) takes 4 arguments");
+            }
+            let alpha = num(&args[0], "saxpy alpha")?;
+            let x = arr(&args[1], "saxpy x")?;
+            let y = arr(&args[2], "saxpy y")?;
+            let n = int(&args[3], "saxpy n")? as usize;
+            let x = x.borrow();
+            let mut y = y.borrow_mut();
+            if x.data.len() < n || y.data.len() < n {
+                bail!("saxpy: arrays smaller than n = {n}");
+            }
+            for i in 0..n {
+                y.data[i] += alpha * x.data[i];
+            }
+            Ok(Value::Int(0))
+        }
+        "reduce_sum" => {
+            // reduce_sum(x, n) -> float
+            if args.len() != 2 {
+                bail!("reduce_sum(x, n) takes 2 arguments");
+            }
+            let x = arr(&args[0], "reduce_sum x")?;
+            let n = int(&args[1], "reduce_sum n")? as usize;
+            let x = x.borrow();
+            if x.data.len() < n {
+                bail!("reduce_sum: array smaller than n = {n}");
+            }
+            Ok(Value::Float(x.data[..n].iter().sum()))
+        }
+        "blackscholes" => {
+            // blackscholes(s, k, t, call, put, n): European option prices,
+            // fixed r = 0.02, sigma = 0.30 (matches the GPU kernel).
+            if args.len() != 6 {
+                bail!("blackscholes(s, k, t, call, put, n) takes 6 arguments");
+            }
+            let s = arr(&args[0], "bs s")?;
+            let k = arr(&args[1], "bs k")?;
+            let t = arr(&args[2], "bs t")?;
+            let call_out = arr(&args[3], "bs call")?;
+            let put_out = arr(&args[4], "bs put")?;
+            let n = int(&args[5], "bs n")? as usize;
+            let (s, k, t) = (s.borrow(), k.borrow(), t.borrow());
+            let (mut c_o, mut p_o) = (call_out.borrow_mut(), put_out.borrow_mut());
+            if s.data.len() < n || k.data.len() < n || t.data.len() < n || c_o.data.len() < n || p_o.data.len() < n {
+                bail!("blackscholes: arrays smaller than n = {n}");
+            }
+            let (r, sigma) = (0.02f64, 0.30f64);
+            for i in 0..n {
+                let (sp, kp, tp) = (s.data[i], k.data[i], t.data[i]);
+                let sq = sigma * tp.sqrt();
+                let d1 = ((sp / kp).ln() + (r + 0.5 * sigma * sigma) * tp) / sq;
+                let d2 = d1 - sq;
+                let call = sp * norm_cdf(d1) - kp * (-r * tp).exp() * norm_cdf(d2);
+                let put = kp * (-r * tp).exp() * norm_cdf(-d2) - sp * norm_cdf(-d1);
+                c_o.data[i] = call;
+                p_o.data[i] = put;
+            }
+            Ok(Value::Int(0))
+        }
+        "jacobi_step" => {
+            // jacobi_step(src, dst, n, m): 5-point average on interior.
+            if args.len() != 4 {
+                bail!("jacobi_step(src, dst, n, m) takes 4 arguments");
+            }
+            let src = arr(&args[0], "jacobi src")?;
+            let dst = arr(&args[1], "jacobi dst")?;
+            let n = int(&args[2], "jacobi n")? as usize;
+            let m = int(&args[3], "jacobi m")? as usize;
+            let src = src.borrow();
+            let mut dst = dst.borrow_mut();
+            if src.data.len() < n * m || dst.data.len() < n * m {
+                bail!("jacobi_step: arrays smaller than n*m");
+            }
+            for i in 0..n {
+                for j in 0..m {
+                    let idx = i * m + j;
+                    if i == 0 || j == 0 || i == n - 1 || j == m - 1 {
+                        dst.data[idx] = src.data[idx];
+                    } else {
+                        dst.data[idx] = 0.25
+                            * (src.data[idx - m] + src.data[idx + m] + src.data[idx - 1]
+                                + src.data[idx + 1]);
+                    }
+                }
+            }
+            Ok(Value::Int(0))
+        }
+        "seed_fill" => {
+            // seed_fill(a, seed): deterministic pseudo-random fill in [0,1).
+            if args.len() != 2 {
+                bail!("seed_fill(a, seed) takes 2 arguments");
+            }
+            let a = arr(&args[0], "seed_fill a")?;
+            let seed = int(&args[1], "seed_fill seed")? as u64;
+            let mut a = a.borrow_mut();
+            let mut state = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            for v in a.data.iter_mut() {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                *v = (state >> 11) as f64 / (1u64 << 53) as f64;
+            }
+            Ok(Value::Int(0))
+        }
+        _ => unreachable!("is_library checked"),
+    }
+}
+
+/// Standard normal CDF via erf (Abramowitz–Stegun 7.1.26 style erf is not
+/// precise enough for tests; use the erfc-free formulation with `erf`
+/// implemented by a high-accuracy rational approximation, W. J. Cody).
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Cody-style erf with ~1e-15 max error (enough to compare f32 GPU output).
+pub fn erf(x: f64) -> f64 {
+    // For |x| small use Taylor-accelerated continued series; else erfc tail.
+    let ax = x.abs();
+    if ax < 1.5 {
+        // series: erf(x) = 2/sqrt(pi) * sum_{k} (-1)^k x^{2k+1}/(k!(2k+1))
+        let t = x * x;
+        let mut term = x * 2.0 / std::f64::consts::PI.sqrt();
+        let mut sum = term;
+        for k in 1..40 {
+            term *= -t / k as f64;
+            let add = term / (2 * k + 1) as f64;
+            sum += add;
+            if add.abs() < 1e-18 * sum.abs() {
+                break;
+            }
+        }
+        sum
+    } else {
+        let v = 1.0 - lentz_erfc(ax);
+        if x < 0.0 {
+            -v
+        } else {
+            v
+        }
+    }
+}
+
+/// erfc via the Lentz continued-fraction evaluation, accurate for x >= 0.5.
+fn lentz_erfc(x: f64) -> f64 {
+    // erfc(x) = x*exp(-x^2)/sqrt(pi) * 1/(x^2 + 1/2/(1 + 1/(x^2 + 3/2/(1 + ...))))
+    let tiny = 1e-300;
+    let x2 = x * x;
+    let mut b = x2;
+    let mut c = 1.0 / tiny;
+    let mut d = 1.0 / b;
+    let mut h = d;
+    let mut an;
+    for i in 1..300 {
+        an = i as f64 / 2.0;
+        b = if i % 2 == 1 { 1.0 } else { x2 };
+        d = b + an * d;
+        if d.abs() < tiny {
+            d = tiny;
+        }
+        c = b + an / c;
+        if c.abs() < tiny {
+            c = tiny;
+        }
+        d = 1.0 / d;
+        let delta = d * c;
+        h *= delta;
+        if (delta - 1.0).abs() < 1e-16 {
+            break;
+        }
+    }
+    x * (-x2).exp() / std::f64::consts::PI.sqrt() * h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vm::{new_array, Value};
+
+    fn fvec(data: Vec<f64>, shape: Vec<usize>) -> Value {
+        Value::Arr(new_array(shape, data))
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let n = 3usize;
+        let mut eye = vec![0.0; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        let b: Vec<f64> = (0..n * n).map(|i| i as f64).collect();
+        let a = fvec(eye, vec![n, n]);
+        let bv = fvec(b.clone(), vec![n, n]);
+        let c = fvec(vec![0.0; n * n], vec![n, n]);
+        let (_, flops) =
+            call("matmul", &[a, bv, c.clone(), Value::Int(n as i64)]).unwrap().unwrap();
+        assert_eq!(flops, 2 * 27);
+        match c {
+            Value::Arr(c) => assert_eq!(c.borrow().data, b),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn dft_of_constant_signal() {
+        let n = 8usize;
+        let re = fvec(vec![1.0; n], vec![n]);
+        let im = fvec(vec![0.0; n], vec![n]);
+        let ro = fvec(vec![0.0; n], vec![n]);
+        let io = fvec(vec![0.0; n], vec![n]);
+        call("dft", &[re, im, ro.clone(), io.clone(), Value::Int(n as i64)]).unwrap().unwrap();
+        if let (Value::Arr(ro), Value::Arr(io)) = (ro, io) {
+            let (ro, io) = (ro.borrow(), io.borrow());
+            assert!((ro.data[0] - n as f64).abs() < 1e-9);
+            for k in 1..n {
+                assert!(ro.data[k].abs() < 1e-9, "re[{k}]={}", ro.data[k]);
+                assert!(io.data[k].abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn saxpy_basic() {
+        let x = fvec(vec![1.0, 2.0, 3.0], vec![3]);
+        let y = fvec(vec![10.0, 20.0, 30.0], vec![3]);
+        call("saxpy", &[Value::Float(2.0), x, y.clone(), Value::Int(3)]).unwrap().unwrap();
+        if let Value::Arr(y) = y {
+            assert_eq!(y.borrow().data, vec![12.0, 24.0, 36.0]);
+        }
+    }
+
+    #[test]
+    fn reduce_sum_returns_value() {
+        let x = fvec(vec![1.5, 2.5, 3.0], vec![3]);
+        let (v, _) = call("reduce_sum", &[x, Value::Int(3)]).unwrap().unwrap();
+        match v {
+            Value::Float(f) => assert!((f - 7.0).abs() < 1e-12),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn conv1d_matches_manual() {
+        let x = fvec(vec![1.0, 2.0, 3.0, 4.0], vec![4]);
+        let k = fvec(vec![1.0, -1.0], vec![2]);
+        let y = fvec(vec![0.0; 3], vec![3]);
+        call("conv1d", &[x, k, y.clone(), Value::Int(4), Value::Int(2)]).unwrap().unwrap();
+        if let Value::Arr(y) = y {
+            assert_eq!(y.borrow().data, vec![-1.0, -1.0, -1.0]);
+        }
+    }
+
+    #[test]
+    fn jacobi_preserves_boundary_and_averages_interior() {
+        let src = fvec(vec![1.0, 1.0, 1.0, 1.0, 0.0, 1.0, 1.0, 1.0, 1.0], vec![3, 3]);
+        let dst = fvec(vec![0.0; 9], vec![3, 3]);
+        call("jacobi_step", &[src, dst.clone(), Value::Int(3), Value::Int(3)]).unwrap().unwrap();
+        if let Value::Arr(d) = dst {
+            let d = d.borrow();
+            assert_eq!(d.data[4], 1.0); // avg of 4 ones
+            assert_eq!(d.data[0], 1.0); // boundary copied
+        }
+    }
+
+    #[test]
+    fn erf_known_values() {
+        // reference values from tables
+        assert!((erf(0.0) - 0.0).abs() < 1e-15);
+        assert!((erf(0.5) - 0.5204998778130465).abs() < 1e-12, "{}", erf(0.5));
+        assert!((erf(1.0) - 0.8427007929497149).abs() < 1e-12, "{}", erf(1.0));
+        assert!((erf(2.0) - 0.9953222650189527).abs() < 1e-12, "{}", erf(2.0));
+        assert!((erf(-1.0) + 0.8427007929497149).abs() < 1e-12);
+    }
+
+    #[test]
+    fn norm_cdf_symmetry() {
+        for x in [-2.0, -0.7, 0.0, 0.3, 1.9] {
+            assert!((norm_cdf(x) + norm_cdf(-x) - 1.0).abs() < 1e-12);
+        }
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn blackscholes_put_call_parity() {
+        let n = 4;
+        let s = fvec(vec![100.0, 90.0, 110.0, 100.0], vec![n]);
+        let k = fvec(vec![100.0, 100.0, 95.0, 120.0], vec![n]);
+        let t = fvec(vec![1.0, 0.5, 2.0, 0.25], vec![n]);
+        let c = fvec(vec![0.0; n], vec![n]);
+        let p = fvec(vec![0.0; n], vec![n]);
+        call(
+            "blackscholes",
+            &[s.clone(), k.clone(), t.clone(), c.clone(), p.clone(), Value::Int(n as i64)],
+        )
+        .unwrap()
+        .unwrap();
+        if let (Value::Arr(s), Value::Arr(k), Value::Arr(t), Value::Arr(c), Value::Arr(p)) =
+            (s, k, t, c, p)
+        {
+            let (s, k, t, c, p) = (s.borrow(), k.borrow(), t.borrow(), c.borrow(), p.borrow());
+            for i in 0..n {
+                // C - P = S - K e^{-rT}
+                let lhs = c.data[i] - p.data[i];
+                let rhs = s.data[i] - k.data[i] * (-0.02f64 * t.data[i]).exp();
+                assert!((lhs - rhs).abs() < 1e-9, "parity violated at {i}: {lhs} vs {rhs}");
+            }
+        }
+    }
+
+    #[test]
+    fn seed_fill_deterministic() {
+        let a = fvec(vec![0.0; 16], vec![16]);
+        let b = fvec(vec![0.0; 16], vec![16]);
+        call("seed_fill", &[a.clone(), Value::Int(7)]).unwrap().unwrap();
+        call("seed_fill", &[b.clone(), Value::Int(7)]).unwrap().unwrap();
+        if let (Value::Arr(a), Value::Arr(b)) = (a, b) {
+            assert_eq!(a.borrow().data, b.borrow().data);
+            assert!(a.borrow().data.iter().all(|x| (0.0..1.0).contains(x)));
+        }
+    }
+
+    #[test]
+    fn non_library_returns_none() {
+        assert!(call("notalib", &[]).is_none());
+    }
+
+    #[test]
+    fn size_validation_errors() {
+        let a = fvec(vec![0.0; 4], vec![2, 2]);
+        let b = fvec(vec![0.0; 4], vec![2, 2]);
+        let c = fvec(vec![0.0; 4], vec![2, 2]);
+        let r = call("matmul", &[a, b, c, Value::Int(3)]).unwrap();
+        assert!(r.is_err());
+    }
+}

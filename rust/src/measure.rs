@@ -1,0 +1,230 @@
+//! Verification-environment measurement harness (the paper's Jenkins role).
+//!
+//! Given a candidate offload plan, runs the program in the VM + device
+//! model, records modeled and wall time, and performs the results check
+//! (§4.2.2, PCAST): captured `print` output is compared against the
+//! CPU-only baseline with a relative tolerance sized for f32 GPU kernels;
+//! divergence or a runtime error marks the candidate invalid and the GA
+//! treats its time as ∞.
+
+use crate::vm::{self, Device, ExecPlan, Outcome, VmConfig};
+use crate::ir::Program;
+use anyhow::Result;
+
+/// Result of one measurement trial.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// deterministic modeled seconds (what the GA optimizes)
+    pub modeled_s: f64,
+    /// host wall-clock of the trial (reported alongside)
+    pub wall_s: f64,
+    /// passed the results check
+    pub ok: bool,
+    /// why the candidate failed (error or divergence), if it did
+    pub failure: Option<String>,
+    pub outcome: Option<Outcome>,
+}
+
+impl Measurement {
+    /// The GA's view: measured time, ∞ when invalid.
+    pub fn ga_time(&self) -> f64 {
+        if self.ok {
+            self.modeled_s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Harness bound to one program: runs the CPU baseline once, then measures
+/// candidates against it.
+pub struct Measurer {
+    baseline: Outcome,
+    baseline_wall_s: f64,
+    pub vm_cfg: VmConfig,
+    /// relative tolerance for the results check (f32 kernels vs f64 CPU)
+    pub tolerance: f64,
+}
+
+impl Measurer {
+    pub fn new(prog: &Program, vm_cfg: VmConfig, tolerance: f64) -> Result<Measurer> {
+        let t0 = std::time::Instant::now();
+        let baseline = vm::run_cpu(prog, vm_cfg.clone())?;
+        let baseline_wall_s = t0.elapsed().as_secs_f64();
+        Ok(Measurer { baseline, baseline_wall_s, vm_cfg, tolerance })
+    }
+
+    /// The CPU-only modeled time (denominator of every speedup).
+    pub fn baseline_modeled_s(&self) -> f64 {
+        self.baseline.modeled_seconds()
+    }
+
+    pub fn baseline_wall_s(&self) -> f64 {
+        self.baseline_wall_s
+    }
+
+    pub fn baseline_prints(&self) -> &[f64] {
+        &self.baseline.prints
+    }
+
+    /// Measure one candidate plan. `dev` should be `reset()` by the caller
+    /// between trials when reused (recommended — keeps the PJRT executable
+    /// cache warm).
+    pub fn measure(&self, prog: &Program, plan: &ExecPlan, dev: &mut dyn Device) -> Measurement {
+        let t0 = std::time::Instant::now();
+        match vm::run(prog, plan, dev, self.vm_cfg.clone()) {
+            Ok(outcome) => {
+                let wall_s = t0.elapsed().as_secs_f64();
+                match self.check(&outcome) {
+                    Ok(()) => Measurement {
+                        modeled_s: outcome.modeled_seconds(),
+                        wall_s,
+                        ok: true,
+                        failure: None,
+                        outcome: Some(outcome),
+                    },
+                    Err(why) => Measurement {
+                        modeled_s: f64::INFINITY,
+                        wall_s,
+                        ok: false,
+                        failure: Some(why),
+                        outcome: Some(outcome),
+                    },
+                }
+            }
+            Err(e) => Measurement {
+                modeled_s: f64::INFINITY,
+                wall_s: t0.elapsed().as_secs_f64(),
+                ok: false,
+                failure: Some(format!("execution error: {e}")),
+                outcome: None,
+            },
+        }
+    }
+
+    /// PCAST-style results check against the baseline prints.
+    fn check(&self, outcome: &Outcome) -> std::result::Result<(), String> {
+        if outcome.prints.len() != self.baseline.prints.len() {
+            return Err(format!(
+                "output count mismatch: {} vs baseline {}",
+                outcome.prints.len(),
+                self.baseline.prints.len()
+            ));
+        }
+        for (i, (got, want)) in outcome.prints.iter().zip(&self.baseline.prints).enumerate() {
+            let denom = want.abs().max(1.0);
+            let rel = (got - want).abs() / denom;
+            if !rel.is_finite() || rel > self.tolerance {
+                return Err(format!(
+                    "output {i} diverged: {got} vs {want} (rel {rel:.2e} > {:.0e})",
+                    self.tolerance
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{CostModel, GpuDevice};
+    use crate::frontend::parse;
+    use crate::ir::Lang;
+    use crate::{analysis, vm};
+
+    const SRC: &str = r#"void main() {
+        int n = 64;
+        double x[n]; double y[n];
+        seed_fill(x, 3);
+        for (int i = 0; i < n; i++) { y[i] = x[i] * 2.0 + 1.0; }
+        double s = 0.0;
+        for (int i = 0; i < n; i++) { s += y[i]; }
+        printf("%f\n", s);
+    }"#;
+
+    #[test]
+    fn cpu_only_plan_matches_baseline() {
+        let p = parse(SRC, Lang::C, "t").unwrap();
+        let m = Measurer::new(&p, VmConfig::default(), 1e-3).unwrap();
+        let plan = ExecPlan::cpu_only();
+        let mut dev = GpuDevice::simulated(CostModel::default());
+        let r = m.measure(&p, &plan, &mut dev);
+        assert!(r.ok, "{:?}", r.failure);
+        assert!((r.modeled_s - m.baseline_modeled_s()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn offloaded_plan_is_checked_and_ok() {
+        let p = parse(SRC, Lang::C, "t").unwrap();
+        let a = analysis::analyze(&p);
+        let genes = a.gene_loops();
+        assert_eq!(genes.len(), 2);
+        let plan = analysis::build_plan(&a, &[true, true], false);
+        let m = Measurer::new(&p, VmConfig::default(), 1e-3).unwrap();
+        let mut dev = GpuDevice::simulated(CostModel::default());
+        let r = m.measure(&p, &plan, &mut dev);
+        assert!(r.ok, "{:?}", r.failure);
+        let o = r.outcome.unwrap();
+        assert!(o.gpu_ops > 0, "work should run on the GPU");
+        assert!(o.transfers.1 > 0, "transfers should be charged");
+    }
+
+    #[test]
+    fn runtime_error_is_infinite_time() {
+        let bad = "void main() { double a[4]; for (int i = 0; i < 8; i++) { a[i] = i; } printf(\"%f\\n\", a[0]); }";
+        let p = parse(bad, Lang::C, "t").unwrap();
+        // CPU baseline itself errors → Measurer::new fails
+        assert!(Measurer::new(&p, VmConfig::default(), 1e-3).is_err());
+    }
+
+    #[test]
+    fn divergence_detected() {
+        // A device that corrupts library results would diverge; simulate by
+        // comparing against a different program's baseline.
+        let p1 = parse(SRC, Lang::C, "t").unwrap();
+        let p2 = parse(
+            &SRC.replace("* 2.0 + 1.0", "* 2.0 + 1.5"),
+            Lang::C,
+            "t",
+        )
+        .unwrap();
+        let m = Measurer::new(&p1, VmConfig::default(), 1e-6).unwrap();
+        let mut dev = GpuDevice::simulated(CostModel::default());
+        let r = m.measure(&p2, &ExecPlan::cpu_only(), &mut dev);
+        assert!(!r.ok);
+        assert!(r.failure.as_ref().unwrap().contains("diverged"));
+        assert!(r.ga_time().is_infinite());
+    }
+
+    #[test]
+    fn naive_transfers_cost_more() {
+        // two consecutive offloaded loops sharing an array: residency
+        // tracking (hoisted transfers) must be cheaper than naive
+        let src = r#"void main() {
+            int n = 4096;
+            double x[n];
+            for (int i = 0; i < n; i++) { x[i] = i * 0.5; }
+            for (int i = 0; i < n; i++) { x[i] = x[i] * 2.0; }
+            printf("%f\n", x[100]);
+        }"#;
+        let p = parse(src, Lang::C, "t").unwrap();
+        let a = analysis::analyze(&p);
+        let m = Measurer::new(&p, VmConfig::default(), 1e-3).unwrap();
+
+        let hoisted = analysis::build_plan(&a, &[true, true], false);
+        let naive = analysis::build_plan(&a, &[true, true], true);
+        let mut d1 = GpuDevice::simulated(CostModel::default());
+        let r1 = m.measure(&p, &hoisted, &mut d1);
+        let mut d2 = GpuDevice::simulated(CostModel::default());
+        let r2 = m.measure(&p, &naive, &mut d2);
+        assert!(r1.ok && r2.ok);
+        assert!(
+            r1.modeled_s < r2.modeled_s,
+            "hoisted {} !< naive {}",
+            r1.modeled_s,
+            r2.modeled_s
+        );
+        let _ = vm::run_cpu(&p, VmConfig::default()).unwrap();
+    }
+}

@@ -1,0 +1,280 @@
+//! Code-pattern DB (§4.1: コードパターン DB、MySQL8) — the catalogue of
+//! offloadable function blocks.
+//!
+//! Each record maps a host-side library function (or a *comparison code*
+//! snippet for clone detection) to the GPU kernel that replaces it and the
+//! artifact sizes available. The paper keeps this in MySQL; here it is an
+//! embedded store with plain-text persistence, exercising the same
+//! queries: lookup-by-name and lookup-by-similarity.
+
+use crate::clone::{char_vector_stmt, similarity, CharVec};
+use crate::frontend::parse;
+use crate::ir::{Lang, NODE_KIND_COUNT, Stmt};
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+
+/// One DB record: a replaceable function block.
+#[derive(Debug, Clone)]
+pub struct PatternRecord {
+    /// host library name (`matmul`, `dft`, ...)
+    pub key: String,
+    /// GPU kernel family (artifact prefix — usually same as key)
+    pub gpu_kernel: String,
+    /// artifact sizes lowered by `python/compile/model.py`
+    pub sizes: Vec<usize>,
+    /// characteristic vector of the comparison code (clone detection)
+    pub vector: CharVec,
+    /// human-readable description (reports)
+    pub description: String,
+}
+
+/// The pattern DB.
+#[derive(Debug, Clone, Default)]
+pub struct PatternDb {
+    records: Vec<PatternRecord>,
+}
+
+/// Comparison code: a canonical hand-written matmul nest. Clone detection
+/// matches user code against this (Deckard's "比較用コード").
+pub const MATMUL_COMPARISON_C: &str = r#"
+void block(double a[][], double b[][], double c[][], int n) {
+    for (int i = 0; i < n; i++) {
+        for (int j = 0; j < n; j++) {
+            double s = 0.0;
+            for (int k = 0; k < n; k++) {
+                s += a[i][k] * b[k][j];
+            }
+            c[i][j] = s;
+        }
+    }
+}
+void main() { }
+"#;
+
+/// Canonical Jacobi sweep (read `src`, write `dst`) comparison code.
+pub const JACOBI_COMPARISON_C: &str = r#"
+void block(double src[][], double dst[][], int n, int m) {
+    for (int i = 1; i < n - 1; i++) {
+        for (int j = 1; j < m - 1; j++) {
+            dst[i][j] = 0.25 * (src[i - 1][j] + src[i + 1][j] + src[i][j - 1] + src[i][j + 1]);
+        }
+    }
+}
+void main() { }
+"#;
+
+fn comparison_vector(src: &str) -> CharVec {
+    let prog = parse(src, Lang::C, "cmp").expect("comparison code parses");
+    let f = prog.function("block").expect("block fn");
+    let nest = f
+        .body
+        .iter()
+        .find(|s| matches!(s, Stmt::For { .. }))
+        .expect("comparison loop nest");
+    char_vector_stmt(nest)
+}
+
+impl PatternDb {
+    /// The built-in catalogue, kept in sync with `python/compile/model.py`
+    /// (`ARTIFACTS`) — the paper's DB rows for CUDA libraries.
+    pub fn builtin() -> PatternDb {
+        let rec = |key: &str, sizes: &[usize], vector: CharVec, desc: &str| PatternRecord {
+            key: key.to_string(),
+            gpu_kernel: key.to_string(),
+            sizes: sizes.to_vec(),
+            vector,
+            description: desc.to_string(),
+        };
+        let zero = [0.0; NODE_KIND_COUNT];
+        PatternDb {
+            records: vec![
+                rec(
+                    "matmul",
+                    &[32, 64, 96, 128, 256],
+                    comparison_vector(MATMUL_COMPARISON_C),
+                    "dense square matmul (cuBLAS gemm analogue)",
+                ),
+                rec("dft", &[128, 256, 512], zero, "dense DFT (cuFFT analogue)"),
+                rec("saxpy", &[1024, 4096, 65536], zero, "fused a*x+y"),
+                rec(
+                    "blackscholes",
+                    &[1024, 4096, 65536],
+                    zero,
+                    "European option pricing (elementwise)",
+                ),
+                {
+                    let mut r = rec(
+                        "jacobi_step",
+                        &[32, 64, 128],
+                        comparison_vector(JACOBI_COMPARISON_C),
+                        "5-point Jacobi relaxation step",
+                    );
+                    r.gpu_kernel = "jacobi".into();
+                    r
+                },
+                rec("conv1d", &[1024, 4096], zero, "valid 1-D convolution (m = 16)"),
+                {
+                    let mut r = rec("reduce_sum", &[1024, 4096, 65536], zero, "tree sum reduction");
+                    r.gpu_kernel = "reduce".into();
+                    r
+                },
+            ],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn records(&self) -> &[PatternRecord] {
+        &self.records
+    }
+
+    /// Name-match lookup (the paper's ライブラリ名一致).
+    pub fn lookup_name(&self, lib: &str) -> Option<&PatternRecord> {
+        self.records.iter().find(|r| r.key == lib)
+    }
+
+    /// Similarity lookup (the paper's 類似性検知): best record whose
+    /// comparison vector scores ≥ `threshold` against `v`.
+    pub fn lookup_similar(&self, v: &CharVec, threshold: f64) -> Option<(&PatternRecord, f64)> {
+        let mut best: Option<(&PatternRecord, f64)> = None;
+        for r in &self.records {
+            if r.vector.iter().all(|&x| x == 0.0) {
+                continue; // no comparison code registered
+            }
+            let s = similarity(v, &r.vector);
+            if s >= threshold && best.map(|(_, bs)| s > bs).unwrap_or(true) {
+                best = Some((r, s));
+            }
+        }
+        best
+    }
+
+    /// Does an artifact exist for (record, n)?
+    pub fn has_size(&self, record: &PatternRecord, n: usize) -> bool {
+        record.sizes.contains(&n)
+    }
+
+    // ---- persistence (line format: key|gpu|sizes|desc|vector) ------------
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut out = String::from("# envadapt pattern DB v1\n");
+        for r in &self.records {
+            let sizes: Vec<String> = r.sizes.iter().map(|s| s.to_string()).collect();
+            let vec: Vec<String> = r.vector.iter().map(|x| format!("{x}")).collect();
+            out.push_str(&format!(
+                "{}|{}|{}|{}|{}\n",
+                r.key,
+                r.gpu_kernel,
+                sizes.join(","),
+                r.description.replace('|', "/"),
+                vec.join(",")
+            ));
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<PatternDb> {
+        let text = std::fs::read_to_string(&path)?;
+        let mut records = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.starts_with('#') || line.trim().is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('|').collect();
+            if parts.len() != 5 {
+                bail!("pattern DB line {} malformed", lineno + 1);
+            }
+            let sizes: Vec<usize> = parts[2]
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.parse().map_err(|_| anyhow!("bad size {s:?}")))
+                .collect::<Result<_>>()?;
+            let vec_parts: Vec<f64> = parts[4]
+                .split(',')
+                .map(|s| s.parse().map_err(|_| anyhow!("bad vector element {s:?}")))
+                .collect::<Result<_>>()?;
+            if vec_parts.len() != NODE_KIND_COUNT {
+                bail!("pattern DB line {}: vector length {}", lineno + 1, vec_parts.len());
+            }
+            let mut vector = [0.0; NODE_KIND_COUNT];
+            vector.copy_from_slice(&vec_parts);
+            records.push(PatternRecord {
+                key: parts[0].to_string(),
+                gpu_kernel: parts[1].to_string(),
+                sizes,
+                vector,
+                description: parts[3].to_string(),
+            });
+        }
+        Ok(PatternDb { records })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_has_all_library_kernels() {
+        let db = PatternDb::builtin();
+        for key in ["matmul", "dft", "saxpy", "blackscholes", "jacobi_step", "conv1d", "reduce_sum"]
+        {
+            assert!(db.lookup_name(key).is_some(), "{key} missing");
+        }
+        assert!(db.lookup_name("seed_fill").is_none(), "seed_fill is not offloadable");
+    }
+
+    #[test]
+    fn matmul_comparison_vector_is_nonzero() {
+        let db = PatternDb::builtin();
+        let r = db.lookup_name("matmul").unwrap();
+        assert!(r.vector.iter().sum::<f64>() > 5.0);
+        assert_eq!(r.sizes, vec![32, 64, 96, 128, 256]);
+    }
+
+    #[test]
+    fn similarity_lookup_finds_matmul() {
+        let db = PatternDb::builtin();
+        let v = comparison_vector(MATMUL_COMPARISON_C);
+        let (r, s) = db.lookup_similar(&v, 0.9).unwrap();
+        assert_eq!(r.key, "matmul");
+        assert!(s > 0.999);
+    }
+
+    #[test]
+    fn similarity_lookup_distinguishes_jacobi_from_matmul() {
+        let db = PatternDb::builtin();
+        let v = comparison_vector(JACOBI_COMPARISON_C);
+        let (r, _) = db.lookup_similar(&v, 0.8).unwrap();
+        assert_eq!(r.key, "jacobi_step");
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let db = PatternDb::builtin();
+        let tmp = std::env::temp_dir().join("envadapt_patterndb_test.txt");
+        db.save(&tmp).unwrap();
+        let loaded = PatternDb::load(&tmp).unwrap();
+        assert_eq!(loaded.len(), db.len());
+        let a = db.lookup_name("matmul").unwrap();
+        let b = loaded.lookup_name("matmul").unwrap();
+        assert_eq!(a.sizes, b.sizes);
+        assert_eq!(a.vector, b.vector);
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn load_rejects_malformed() {
+        let tmp = std::env::temp_dir().join("envadapt_patterndb_bad.txt");
+        std::fs::write(&tmp, "only|three|fields\n").unwrap();
+        assert!(PatternDb::load(&tmp).is_err());
+        std::fs::remove_file(tmp).ok();
+    }
+}

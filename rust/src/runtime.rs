@@ -1,0 +1,214 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts and executes them.
+//!
+//! This is the bridge between the Rust coordinator and the Pallas/XLA
+//! kernel library (`python/compile/`): `make artifacts` lowers every GPU
+//! library kernel to `artifacts/<name>.hlo.txt`; this module compiles each
+//! text module once on the PJRT CPU client and caches the loaded
+//! executable, so the GA's measurement loop pays compile cost only on
+//! first use of a (kernel, size) pair — the paper's "実行ファイル作成"
+//! step. Python never runs at request time.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled-artifact cache over one PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// artifact names present on disk
+    available: Vec<String>,
+}
+
+impl Runtime {
+    /// Create a runtime over the artifact directory (usually `artifacts/`).
+    /// Fails if the PJRT client cannot start; a missing directory is
+    /// tolerated (no artifacts available → every lookup misses).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        let dir = dir.as_ref().to_path_buf();
+        let mut available = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(&dir) {
+            for entry in rd.flatten() {
+                let name = entry.file_name().to_string_lossy().to_string();
+                if let Some(stem) = name.strip_suffix(".hlo.txt") {
+                    available.push(stem.to_string());
+                }
+            }
+        }
+        available.sort();
+        Ok(Runtime { client, dir, cache: HashMap::new(), available })
+    }
+
+    /// Default artifact location: `$ENVADAPT_ARTIFACTS` or `./artifacts`.
+    pub fn artifact_dir() -> PathBuf {
+        std::env::var_os("ENVADAPT_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn available(&self) -> &[String] {
+        &self.available
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.available.iter().any(|a| a == name)
+    }
+
+    /// Number of executables compiled so far (cache size).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(self.cache.get(name).unwrap())
+    }
+
+    /// Execute artifact `name` on f32 tensor inputs `(shape, data)`;
+    /// returns one `Vec<f32>` per output (scalars become length-1).
+    pub fn execute(&mut self, name: &str, inputs: &[(&[usize], &[f32])]) -> Result<Vec<Vec<f32>>> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (shape, data) in inputs {
+            let expect: usize = shape.iter().product();
+            if expect != data.len() {
+                return Err(anyhow!(
+                    "input shape {shape:?} needs {expect} elements, got {}",
+                    data.len()
+                ));
+            }
+            let lit = xla::Literal::vec1(data);
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = if dims.len() == 1 {
+                lit
+            } else {
+                lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))?
+            };
+            lits.push(lit);
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → always a tuple.
+        let parts = out.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
+        let mut vecs = Vec::with_capacity(parts.len());
+        for p in parts {
+            vecs.push(p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?);
+        }
+        Ok(vecs)
+    }
+
+    /// Wall-clock one execution (used to calibrate the device model and by
+    /// EXPERIMENTS.md §Perf).
+    pub fn time_execution(
+        &mut self,
+        name: &str,
+        inputs: &[(&[usize], &[f32])],
+    ) -> Result<(Vec<Vec<f32>>, f64)> {
+        let t0 = std::time::Instant::now();
+        let out = self.execute(name, inputs)?;
+        Ok((out, t0.elapsed().as_secs_f64()))
+    }
+}
+
+/// Artifact naming helper: `matmul_64`, `dft_256`, ...
+pub fn artifact_name(kernel: &str, n: usize) -> String {
+    format!("{kernel}_{n}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = Runtime::artifact_dir();
+        if !dir.join("matmul_64.hlo.txt").exists() {
+            eprintln!("artifacts not built; skipping PJRT test");
+            return None;
+        }
+        Some(Runtime::new(dir).expect("pjrt client"))
+    }
+
+    #[test]
+    fn lists_available_artifacts() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.has("matmul_64"));
+        assert!(rt.has("pipeline_64"));
+        assert!(!rt.has("nonexistent_999"));
+    }
+
+    #[test]
+    fn matmul_identity_roundtrip() {
+        let Some(mut rt) = runtime() else { return };
+        let n = 64usize;
+        let mut eye = vec![0f32; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        let b: Vec<f32> = (0..n * n).map(|i| (i % 17) as f32 * 0.25).collect();
+        let out = rt
+            .execute("matmul_64", &[(&[n, n], &eye), (&[n, n], &b)])
+            .expect("execute");
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), n * n);
+        for (got, want) in out[0].iter().zip(&b) {
+            assert!((got - want).abs() < 1e-5, "{got} vs {want}");
+        }
+        // second call hits the executable cache
+        let _ = rt.execute("matmul_64", &[(&[n, n], &eye), (&[n, n], &b)]).unwrap();
+        assert_eq!(rt.compiled_count(), 1);
+    }
+
+    #[test]
+    fn multi_output_dft() {
+        let Some(mut rt) = runtime() else { return };
+        let n = 128usize;
+        let re = vec![1f32; n];
+        let im = vec![0f32; n];
+        let out = rt.execute("dft_128", &[(&[n], &re), (&[n], &im)]).expect("execute");
+        assert_eq!(out.len(), 2);
+        assert!((out[0][0] - n as f32).abs() < 1e-2, "DC bin = {}", out[0][0]);
+        assert!(out[0][1..].iter().all(|x| x.abs() < 1e-2));
+    }
+
+    #[test]
+    fn scalar_output_reduce() {
+        let Some(mut rt) = runtime() else { return };
+        let x = vec![0.5f32; 1024];
+        let out = rt.execute("reduce_1024", &[(&[1024], &x)]).expect("execute");
+        assert_eq!(out.len(), 1);
+        assert!((out[0][0] - 512.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn shape_mismatch_is_error() {
+        let Some(mut rt) = runtime() else { return };
+        let bad = vec![0f32; 10];
+        assert!(rt.execute("matmul_64", &[(&[64, 64], &bad), (&[64, 64], &bad)]).is_err());
+    }
+}

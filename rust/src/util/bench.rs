@@ -1,0 +1,118 @@
+//! Mini-criterion: warmup + timed iterations + summary statistics.
+//!
+//! `cargo bench` targets use `harness = false` and drive this directly.
+//! Output format is one line per benchmark:
+//! `name  mean ± stddev  [min .. max]  (n iters)` plus optional CSV rows
+//! for EXPERIMENTS.md tables.
+
+use super::stats::Summary;
+use std::time::Instant;
+
+/// One benchmark runner with fixed warmup/measure counts.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    results: Vec<(String, Summary)>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 2, measure_iters: 10, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup_iters: usize, measure_iters: usize) -> Bench {
+        Bench { warmup_iters, measure_iters, results: Vec::new() }
+    }
+
+    /// Time `f` (which should perform one complete operation) and record
+    /// the summary under `name`. Returns the summary.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> Summary {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.measure_iters);
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let s = Summary::of(&samples);
+        println!(
+            "{:<48} {:>10} ± {:>8}  [{} .. {}]  ({} iters)",
+            name,
+            fmt_time(s.mean),
+            fmt_time(s.stddev),
+            fmt_time(s.min),
+            fmt_time(s.max),
+            s.n
+        );
+        self.results.push((name.to_string(), s.clone()));
+        s
+    }
+
+    pub fn results(&self) -> &[(String, Summary)] {
+        &self.results
+    }
+}
+
+/// Human-readable duration (seconds input).
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3}µs", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+/// Render a Markdown table (used by bench binaries to emit
+/// EXPERIMENTS.md-ready blocks).
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = String::new();
+    s.push_str("| ");
+    s.push_str(&headers.join(" | "));
+    s.push_str(" |\n|");
+    for _ in headers {
+        s.push_str("---|");
+    }
+    s.push('\n');
+    for row in rows {
+        s.push_str("| ");
+        s.push_str(&row.join(" | "));
+        s.push_str(" |\n");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_records_result() {
+        let mut b = Bench::new(1, 3);
+        let s = b.run("noop", || 1 + 1);
+        assert_eq!(s.n, 3);
+        assert_eq!(b.results().len(), 1);
+        assert_eq!(b.results()[0].0, "noop");
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert_eq!(fmt_time(2.5), "2.500s");
+        assert_eq!(fmt_time(0.0025), "2.500ms");
+        assert_eq!(fmt_time(2.5e-6), "2.500µs");
+        assert_eq!(fmt_time(2.5e-9), "2.5ns");
+    }
+
+    #[test]
+    fn markdown_table_shape() {
+        let t = markdown_table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert_eq!(t, "| a | b |\n|---|---|\n| 1 | 2 |\n");
+    }
+}

@@ -1,0 +1,21 @@
+//! Self-contained utility substrates.
+//!
+//! The build environment is fully offline with only the `xla` crate
+//! vendored, so the usual ecosystem crates (rand, serde_json, criterion,
+//! proptest, clap) are unavailable. This module provides the small,
+//! well-tested subset of each that the rest of the crate needs:
+//!
+//! - [`rng`]  — xoshiro256** PRNG (GA, property tests, workload data)
+//! - [`stats`] — mean / stddev / percentiles for measurements
+//! - [`json`] — minimal JSON *writer* for reports and bench output
+//! - [`bench`] — mini-criterion: warmup + timed iterations + stats
+//! - [`prop`] — mini-proptest: randomized property checks with shrinking
+
+pub mod bench;
+pub mod fxhash;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

@@ -1,0 +1,114 @@
+//! Mini property-based tester (proptest is not vendored offline).
+//!
+//! Strategy: generate `cases` random inputs from a user generator, run the
+//! property, and on failure *shrink* by re-generating with smaller size
+//! hints, reporting the smallest failing case found. Deterministic per seed
+//! so CI failures reproduce.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// maximum "size" hint passed to generators (e.g. max array length)
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 100, seed: 0xDEC0DE, max_size: 64 }
+    }
+}
+
+/// Run `prop` on `cases` values from `gen`. `gen` receives (rng, size).
+/// Size ramps up from 1 to `max_size` over the run, proptest-style.
+/// On failure, tries up to 200 shrink attempts at decreasing sizes and
+/// panics with the smallest failing input's Debug rendering.
+pub fn check<T: std::fmt::Debug>(
+    cfg: &Config,
+    mut gen: impl FnMut(&mut Rng, usize) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let size = 1 + (cfg.max_size - 1) * case / cfg.cases.max(1);
+        let input = gen(&mut rng, size);
+        if !prop(&input) {
+            // Shrink: retry with smaller sizes, keep smallest failure.
+            let mut smallest_repr = format!("{input:?}");
+            let mut smallest_size = size;
+            for attempt in 0..200 {
+                let s = 1 + attempt % smallest_size.max(1);
+                if s >= smallest_size {
+                    continue;
+                }
+                let candidate = gen(&mut rng, s);
+                if !prop(&candidate) {
+                    smallest_size = s;
+                    smallest_repr = format!("{candidate:?}");
+                    if s == 1 {
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {:#x});\n  smallest failing input (size {smallest_size}): {smallest_repr}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Generate a random f64 vector with entries in [-scale, scale].
+pub fn vec_f64(rng: &mut Rng, len: usize, scale: f64) -> Vec<f64> {
+    (0..len).map(|_| (rng.f64() * 2.0 - 1.0) * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check(
+            &Config { cases: 50, ..Default::default() },
+            |rng, size| vec_f64(rng, size, 10.0),
+            |v| v.iter().all(|x| x.abs() <= 10.0),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_shrink() {
+        check(
+            &Config { cases: 50, ..Default::default() },
+            |rng, size| vec_f64(rng, size, 1.0),
+            |v| v.len() < 3, // fails once size ramps past 2
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut outs1 = vec![];
+        check(
+            &Config { cases: 10, seed: 77, max_size: 8 },
+            |rng, size| vec_f64(rng, size, 1.0),
+            |v| {
+                outs1.push(v.clone());
+                true
+            },
+        );
+        let mut outs2 = vec![];
+        check(
+            &Config { cases: 10, seed: 77, max_size: 8 },
+            |rng, size| vec_f64(rng, size, 1.0),
+            |v| {
+                outs2.push(v.clone());
+                true
+            },
+        );
+        assert_eq!(outs1, outs2);
+    }
+}

@@ -1,0 +1,1074 @@
+//! Tree-walking interpreter over the language-independent IR — the "CPU"
+//! of the verification environment, with GPU offload hooks.
+//!
+//! Execution serves two roles in the paper's flow:
+//!
+//! 1. **Verification-environment measurement** (§3.1: 検証環境の実機で性能
+//!    測定): the VM counts abstract operations; the deterministic cost model
+//!    in [`crate::device`] converts CPU ops / GPU region ops / transfers
+//!    into modeled seconds. Wall-clock is also recorded by `measure`.
+//! 2. **Results check** (§4.2.2, PCAST): `print` output is captured so a
+//!    candidate offload pattern's numerics can be compared against the
+//!    CPU-only run; divergence ⇒ fitness time = ∞.
+//!
+//! GPU semantics: when execution reaches a `for` loop that is the *root of
+//! an offload region* in the [`ExecPlan`], the VM performs the CPU↔GPU
+//! transfer accounting (with MSI-style residency tracking on each array —
+//! this is the dynamic equivalent of the paper's hoisted `#pragma acc data`
+//! directives), then either interprets the body while attributing ops to
+//! the GPU (generic OpenACC-style kernel) or dispatches a replaced
+//! function block to the GPU library (`device`, CUDA-library analogue,
+//! backed by AOT Pallas/XLA artifacts through PJRT).
+
+use crate::ir::*;
+use crate::libs;
+use anyhow::{anyhow, bail, Result};
+use std::cell::RefCell;
+use crate::util::fxhash::FxHashMap;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+// ---------------------------------------------------------------------------
+// values
+// ---------------------------------------------------------------------------
+
+/// Where an array's current contents live (MSI-style residency used for
+/// transfer accounting; `Both` = coherent copies on host and device).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Loc {
+    Host,
+    Device,
+    Both,
+}
+
+/// A rectangular f64 array (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayData {
+    pub shape: Vec<usize>,
+    pub data: Vec<f64>,
+    pub loc: Loc,
+}
+
+impl ArrayData {
+    pub fn bytes(&self) -> usize {
+        // modeled as f32 on the device wire (4 bytes/element), matching the
+        // f32 GPU kernel artifacts.
+        self.data.len() * 4
+    }
+
+    /// Row-major flat offset for `indices`; errors on rank/bounds mismatch.
+    pub fn offset(&self, indices: &[i64]) -> Result<usize> {
+        if indices.len() != self.shape.len() {
+            bail!("rank mismatch: {} indices for rank-{} array", indices.len(), self.shape.len());
+        }
+        let mut off = 0usize;
+        for (d, &i) in indices.iter().enumerate() {
+            let extent = self.shape[d];
+            if i < 0 || i as usize >= extent {
+                bail!("index {i} out of bounds for dimension {d} (extent {extent})");
+            }
+            off = off * extent + i as usize;
+        }
+        Ok(off)
+    }
+}
+
+pub type ArrayRef = Rc<RefCell<ArrayData>>;
+
+pub fn new_array(shape: Vec<usize>, data: Vec<f64>) -> ArrayRef {
+    debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    Rc::new(RefCell::new(ArrayData { shape, data, loc: Loc::Host }))
+}
+
+/// Runtime values. Scalars are copied; arrays have reference semantics
+/// (like C pointers, Java arrays and Python lists).
+#[derive(Debug, Clone)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Arr(ArrayRef),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Int(v) => Ok(*v as f64),
+            Value::Float(v) => Ok(*v),
+            Value::Arr(_) => bail!("expected scalar, found array"),
+        }
+    }
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            Value::Int(v) => Ok(*v),
+            Value::Float(v) => Ok(*v as i64),
+            Value::Arr(_) => bail!("expected integer, found array"),
+        }
+    }
+    pub fn truthy(&self) -> Result<bool> {
+        Ok(self.as_f64()? != 0.0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// offload plan
+// ---------------------------------------------------------------------------
+
+/// How an offload region executes on the device.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RegionExec {
+    /// OpenACC-style generic kernel: the body is interpreted with ops
+    /// attributed to the GPU; `parallel_ids` are the (collapsed) parallel
+    /// loops whose trip counts multiply into the parallelism degree.
+    Generic { parallel_ids: Vec<LoopId> },
+    /// The region was recognized as a known function block (clone
+    /// detection) and is replaced by a GPU library call with these
+    /// argument variable names.
+    Library { name: String, args: Vec<String> },
+}
+
+/// One GPU offload region rooted at a `for` loop.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuRegion {
+    pub root: LoopId,
+    /// array variables the region reads (host→device at entry if stale)
+    pub copy_in: Vec<String>,
+    /// array variables the region writes (device-resident afterwards)
+    pub copy_out: Vec<String>,
+    pub exec: RegionExec,
+}
+
+/// Complete execution plan for one measurement trial: which loops form GPU
+/// regions and which library calls are routed to the GPU library.
+#[derive(Debug, Clone, Default)]
+pub struct ExecPlan {
+    /// offload regions keyed by root loop id
+    pub regions: HashMap<LoopId, GpuRegion>,
+    /// statement-position library calls replaced by GPU implementations
+    pub gpu_calls: std::collections::HashSet<String>,
+    /// if true, disable residency tracking: every region entry/exit pays
+    /// full transfers (the ablation baseline of [37])
+    pub naive_transfers: bool,
+}
+
+impl ExecPlan {
+    pub fn cpu_only() -> ExecPlan {
+        ExecPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.regions.is_empty() && self.gpu_calls.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// device trait (implemented by crate::device)
+// ---------------------------------------------------------------------------
+
+/// The GPU seen from the VM: pure cost/residency accounting plus the GPU
+/// library (PJRT-backed). Object-safe so the VM stays device-agnostic.
+pub trait Device {
+    fn charge_h2d(&mut self, bytes: usize);
+    fn charge_d2h(&mut self, bytes: usize);
+    fn kernel_launch(&mut self);
+    /// charge a generic kernel's body work: `ops` interpreted operations
+    /// across `parallel` independent iterations.
+    fn charge_generic_kernel(&mut self, ops: u64, parallel: u64);
+    /// run + charge a GPU library kernel (numerics included); returns the
+    /// kernel's value for value-returning kernels (e.g. `reduce_sum`).
+    fn call_library(&mut self, name: &str, args: &[Value]) -> Result<Option<Value>>;
+    /// total modeled GPU seconds so far
+    fn gpu_seconds(&self) -> f64;
+    /// (h2d count, h2d bytes, d2h count, d2h bytes) so far
+    fn transfer_stats(&self) -> (u64, u64, u64, u64);
+}
+
+/// A no-GPU device for CPU-only runs: charging it is a logic error.
+pub struct NullDevice;
+
+impl Device for NullDevice {
+    fn charge_h2d(&mut self, _: usize) {
+        unreachable!("NullDevice used with an offload plan");
+    }
+    fn charge_d2h(&mut self, _: usize) {
+        unreachable!("NullDevice used with an offload plan");
+    }
+    fn kernel_launch(&mut self) {
+        unreachable!("NullDevice used with an offload plan");
+    }
+    fn charge_generic_kernel(&mut self, _: u64, _: u64) {
+        unreachable!("NullDevice used with an offload plan");
+    }
+    fn call_library(&mut self, name: &str, _: &[Value]) -> Result<Option<Value>> {
+        Err(anyhow!("NullDevice cannot run library kernel {name}"))
+    }
+    fn gpu_seconds(&self) -> f64 {
+        0.0
+    }
+    fn transfer_stats(&self) -> (u64, u64, u64, u64) {
+        (0, 0, 0, 0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// VM
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct VmConfig {
+    /// abort execution after this many interpreted operations
+    pub max_ops: u64,
+    /// modeled nanoseconds per interpreted CPU operation
+    pub cpu_op_ns: f64,
+}
+
+impl Default for VmConfig {
+    fn default() -> Self {
+        VmConfig { max_ops: 2_000_000_000, cpu_op_ns: 1.0 }
+    }
+}
+
+/// Result of one program execution.
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    /// ops attributed to the CPU
+    pub cpu_ops: u64,
+    /// ops attributed to GPU generic kernels (pre-parallelization)
+    pub gpu_ops: u64,
+    /// captured `print` values, in order
+    pub prints: Vec<f64>,
+    /// modeled CPU seconds (cpu_ops × cpu_op_ns)
+    pub cpu_seconds: f64,
+    /// modeled GPU seconds (launches + transfers + kernels)
+    pub gpu_seconds: f64,
+    /// h2d count, h2d bytes, d2h count, d2h bytes
+    pub transfers: (u64, u64, u64, u64),
+}
+
+impl Outcome {
+    /// Total modeled execution time — the "performance measurement" the GA
+    /// consumes.
+    pub fn modeled_seconds(&self) -> f64 {
+        self.cpu_seconds + self.gpu_seconds
+    }
+}
+
+enum Flow {
+    Normal,
+    Break,
+    Continue,
+    Return(Option<Value>),
+}
+
+type Env = FxHashMap<String, Value>;
+
+pub struct Vm<'a> {
+    prog: &'a Program,
+    plan: &'a ExecPlan,
+    dev: &'a mut dyn Device,
+    cfg: VmConfig,
+    cpu_ops: u64,
+    gpu_ops_total: u64,
+    /// inside a GPU region: ops go to `region_ops`
+    in_gpu_region: bool,
+    region_ops: u64,
+    /// first-encounter trip counts of parallel loops in the current region
+    region_parallel: HashMap<LoopId, u64>,
+    prints: Vec<f64>,
+    call_depth: usize,
+}
+
+/// Run `prog` under `plan` with `dev`; convenience wrapper.
+pub fn run(
+    prog: &Program,
+    plan: &ExecPlan,
+    dev: &mut dyn Device,
+    cfg: VmConfig,
+) -> Result<Outcome> {
+    Vm::new(prog, plan, dev, cfg).run()
+}
+
+/// Run CPU-only (no plan, no device).
+pub fn run_cpu(prog: &Program, cfg: VmConfig) -> Result<Outcome> {
+    let plan = ExecPlan::cpu_only();
+    let mut dev = NullDevice;
+    Vm::new(prog, &plan, &mut dev, cfg).run()
+}
+
+impl<'a> Vm<'a> {
+    pub fn new(
+        prog: &'a Program,
+        plan: &'a ExecPlan,
+        dev: &'a mut dyn Device,
+        cfg: VmConfig,
+    ) -> Vm<'a> {
+        Vm {
+            prog,
+            plan,
+            dev,
+            cfg,
+            cpu_ops: 0,
+            gpu_ops_total: 0,
+            in_gpu_region: false,
+            region_ops: 0,
+            region_parallel: HashMap::new(),
+            prints: Vec::new(),
+            call_depth: 0,
+        }
+    }
+
+    pub fn run(mut self) -> Result<Outcome> {
+        let entry = self
+            .prog
+            .entry()
+            .ok_or_else(|| anyhow!("program has no `main` function"))?;
+        if !entry.params.is_empty() {
+            bail!("`main` must take no parameters");
+        }
+        let mut env = Env::default();
+        let flow = self.exec_block(&entry.body, &mut env)?;
+        if let Flow::Break | Flow::Continue = flow {
+            bail!("break/continue escaped function body");
+        }
+        Ok(Outcome {
+            cpu_ops: self.cpu_ops,
+            gpu_ops: self.gpu_ops_total,
+            prints: self.prints,
+            cpu_seconds: self.cpu_ops as f64 * self.cfg.cpu_op_ns * 1e-9,
+            gpu_seconds: self.dev.gpu_seconds(),
+            transfers: self.dev.transfer_stats(),
+        })
+    }
+
+    #[inline]
+    fn charge(&mut self, n: u64) -> Result<()> {
+        if self.in_gpu_region {
+            self.region_ops += n;
+        } else {
+            self.cpu_ops += n;
+        }
+        if self.cpu_ops + self.region_ops + self.gpu_ops_total > self.cfg.max_ops {
+            bail!("operation budget exceeded ({} ops)", self.cfg.max_ops);
+        }
+        Ok(())
+    }
+
+    // ---- residency bookkeeping -------------------------------------------
+
+    /// CPU-side read of an array: pull from device if the only valid copy
+    /// is there.
+    fn host_read(&mut self, arr: &ArrayRef) {
+        let loc = arr.borrow().loc;
+        if loc == Loc::Device {
+            let bytes = arr.borrow().bytes();
+            self.dev.charge_d2h(bytes);
+            arr.borrow_mut().loc = Loc::Both;
+        }
+    }
+
+    /// CPU-side write: device copy becomes stale.
+    fn host_write(&mut self, arr: &ArrayRef) {
+        let loc = arr.borrow().loc;
+        if loc == Loc::Device {
+            // partial write to a device-resident array: fetch first
+            let bytes = arr.borrow().bytes();
+            self.dev.charge_d2h(bytes);
+        }
+        arr.borrow_mut().loc = Loc::Host;
+    }
+
+    /// Device-side read at region entry.
+    fn device_read(&mut self, arr: &ArrayRef, naive: bool) {
+        let loc = arr.borrow().loc;
+        if naive || loc == Loc::Host {
+            let bytes = arr.borrow().bytes();
+            self.dev.charge_h2d(bytes);
+            arr.borrow_mut().loc = Loc::Both;
+        }
+    }
+
+    /// Device-side write at region exit: host copy stale (unless naive
+    /// mode, which copies straight back like un-hoisted `copyout`).
+    fn device_write(&mut self, arr: &ArrayRef, naive: bool) {
+        if naive {
+            let bytes = arr.borrow().bytes();
+            self.dev.charge_d2h(bytes);
+            arr.borrow_mut().loc = Loc::Both;
+        } else {
+            arr.borrow_mut().loc = Loc::Device;
+        }
+    }
+
+    fn lookup_array(&self, env: &Env, name: &str) -> Result<ArrayRef> {
+        match env.get(name) {
+            Some(Value::Arr(a)) => Ok(a.clone()),
+            Some(_) => bail!("variable `{name}` is not an array"),
+            None => bail!("undefined variable `{name}`"),
+        }
+    }
+
+    // ---- statements -------------------------------------------------------
+
+    fn exec_block(&mut self, body: &[Stmt], env: &mut Env) -> Result<Flow> {
+        for s in body {
+            match self.exec_stmt(s, env)? {
+                Flow::Normal => {}
+                other => return Ok(other),
+            }
+        }
+        Ok(Flow::Normal)
+    }
+
+    fn exec_stmt(&mut self, s: &Stmt, env: &mut Env) -> Result<Flow> {
+        self.charge(1)?;
+        match s {
+            Stmt::Decl { name, ty, dims, init } => {
+                let v = if dims.is_empty() {
+                    match init {
+                        Some(e) => {
+                            let v = self.eval(e, env)?;
+                            match ty {
+                                Type::Int => Value::Int(v.as_i64()?),
+                                _ => v,
+                            }
+                        }
+                        None => match ty {
+                            Type::Int => Value::Int(0),
+                            _ => Value::Float(0.0),
+                        },
+                    }
+                } else {
+                    let mut shape = Vec::with_capacity(dims.len());
+                    for d in dims {
+                        let ext = self.eval(d, env)?.as_i64()?;
+                        if ext <= 0 {
+                            bail!("array `{name}` has non-positive extent {ext}");
+                        }
+                        shape.push(ext as usize);
+                    }
+                    let total: usize = shape.iter().product();
+                    if total > 64 * 1024 * 1024 {
+                        bail!("array `{name}` too large ({total} elements)");
+                    }
+                    Value::Arr(new_array(shape, vec![0.0; total]))
+                };
+                env.insert(name.clone(), v);
+                Ok(Flow::Normal)
+            }
+            Stmt::Assign { target, op, value } => {
+                let rhs = self.eval(value, env)?;
+                self.assign(target, *op, rhs, env)?;
+                Ok(Flow::Normal)
+            }
+            Stmt::For { .. } => self.exec_for(s, env),
+            Stmt::While { cond, body } => {
+                loop {
+                    self.charge(1)?;
+                    if !self.eval(cond, env)?.truthy()? {
+                        break;
+                    }
+                    match self.exec_block(body, env)? {
+                        Flow::Normal | Flow::Continue => {}
+                        Flow::Break => break,
+                        r @ Flow::Return(_) => return Ok(r),
+                    }
+                }
+                Ok(Flow::Normal)
+            }
+            Stmt::If { cond, then_body, else_body } => {
+                if self.eval(cond, env)?.truthy()? {
+                    self.exec_block(then_body, env)
+                } else {
+                    self.exec_block(else_body, env)
+                }
+            }
+            Stmt::Call { name, args } => {
+                let mut vals = Vec::with_capacity(args.len());
+                for a in args {
+                    vals.push(self.eval(a, env)?);
+                }
+                self.call_function(name, vals)?;
+                Ok(Flow::Normal)
+            }
+            Stmt::Return(e) => {
+                let v = match e {
+                    Some(e) => Some(self.eval(e, env)?),
+                    None => None,
+                };
+                Ok(Flow::Return(v))
+            }
+            Stmt::Break => Ok(Flow::Break),
+            Stmt::Continue => Ok(Flow::Continue),
+            Stmt::Print(e) => {
+                let v = self.eval(e, env)?.as_f64()?;
+                self.prints.push(v);
+                Ok(Flow::Normal)
+            }
+        }
+    }
+
+    fn exec_for(&mut self, s: &Stmt, env: &mut Env) -> Result<Flow> {
+        let Stmt::For { id, var, start, end, step, body } = s else { unreachable!() };
+        // GPU region root?
+        if !self.in_gpu_region {
+            if let Some(region) = self.plan.regions.get(id) {
+                let region = region.clone();
+                return self.exec_gpu_region(&region, s, env);
+            }
+        }
+        let start_v = self.eval(start, env)?.as_i64()?;
+        let end_v = self.eval(end, env)?.as_i64()?;
+        let step_v = self.eval(step, env)?.as_i64()?;
+        if step_v == 0 {
+            bail!("loop step is zero");
+        }
+        // trip count (for parallel accounting inside regions)
+        let trips = if step_v > 0 {
+            ((end_v - start_v).max(0) as u64).div_ceil(step_v as u64)
+        } else {
+            ((start_v - end_v).max(0) as u64).div_ceil((-step_v) as u64)
+        };
+        if self.in_gpu_region {
+            self.region_parallel.entry(*id).or_insert(trips.max(1));
+        }
+        let saved = env.get(var).cloned();
+        // bind once; per-iteration updates go through get_mut to avoid a
+        // String clone + rehash in the hottest loop of the interpreter
+        env.insert(var.clone(), Value::Int(start_v));
+        let mut i = start_v;
+        loop {
+            let done = if step_v > 0 { i >= end_v } else { i <= end_v };
+            if done {
+                break;
+            }
+            self.charge(1)?;
+            *env.get_mut(var).unwrap() = Value::Int(i);
+            match self.exec_block(body, env)? {
+                Flow::Normal | Flow::Continue => {}
+                Flow::Break => break,
+                r @ Flow::Return(_) => {
+                    if let Some(v) = saved {
+                        env.insert(var.clone(), v);
+                    }
+                    return Ok(r);
+                }
+            }
+            i += step_v;
+        }
+        match saved {
+            Some(v) => {
+                env.insert(var.clone(), v);
+            }
+            None => {
+                env.remove(var);
+            }
+        }
+        Ok(Flow::Normal)
+    }
+
+    fn exec_gpu_region(&mut self, region: &GpuRegion, s: &Stmt, env: &mut Env) -> Result<Flow> {
+        let naive = self.plan.naive_transfers;
+        // host→device transfers for read arrays
+        for name in &region.copy_in {
+            let arr = self.lookup_array(env, name)?;
+            self.device_read(&arr, naive);
+        }
+        self.dev.kernel_launch();
+        match &region.exec {
+            RegionExec::Generic { parallel_ids } => {
+                self.in_gpu_region = true;
+                self.region_ops = 0;
+                self.region_parallel.clear();
+                let r = self.exec_for(s, env);
+                // parallel degree from first-encounter trip counts
+                let parallel: u64 = parallel_ids
+                    .iter()
+                    .map(|pid| self.region_parallel.get(pid).copied().unwrap_or(1))
+                    .product::<u64>()
+                    .max(1);
+                let ops = self.region_ops;
+                self.gpu_ops_total += ops;
+                self.region_ops = 0;
+                self.in_gpu_region = false;
+                self.dev.charge_generic_kernel(ops, parallel);
+                let flow = r?;
+                if !matches!(flow, Flow::Normal) {
+                    bail!("break/continue/return escaped a GPU region");
+                }
+            }
+            RegionExec::Library { name, args } => {
+                let mut vals = Vec::with_capacity(args.len());
+                for a in args {
+                    vals.push(
+                        env.get(a)
+                            .cloned()
+                            .ok_or_else(|| anyhow!("library region arg `{a}` undefined"))?,
+                    );
+                }
+                self.dev.call_library(name, &vals)?;
+            }
+        }
+        // device-side writes
+        for name in &region.copy_out {
+            let arr = self.lookup_array(env, name)?;
+            self.device_write(&arr, naive);
+        }
+        Ok(Flow::Normal)
+    }
+
+    fn call_function(&mut self, name: &str, args: Vec<Value>) -> Result<Option<Value>> {
+        // GPU-replaced library call (function-block offload)?
+        if self.plan.gpu_calls.contains(name) {
+            if self.in_gpu_region {
+                bail!("GPU library call `{name}` inside a GPU region");
+            }
+            let arrs: Vec<ArrayRef> = args
+                .iter()
+                .filter_map(|v| match v {
+                    Value::Arr(a) => Some(a.clone()),
+                    _ => None,
+                })
+                .collect();
+            let naive = self.plan.naive_transfers;
+            for a in &arrs {
+                self.device_read(a, naive);
+            }
+            self.dev.kernel_launch();
+            let ret = self.dev.call_library(name, &args)?;
+            // all array args conservatively considered written
+            for a in &arrs {
+                self.device_write(a, naive);
+            }
+            return Ok(ret);
+        }
+        // CPU library?
+        if libs::is_library(name) {
+            if self.in_gpu_region {
+                bail!("library call `{name}` inside a GPU region");
+            }
+            let arrs: Vec<ArrayRef> = args
+                .iter()
+                .filter_map(|v| match v {
+                    Value::Arr(a) => Some(a.clone()),
+                    _ => None,
+                })
+                .collect();
+            for a in &arrs {
+                self.host_read(a);
+                self.host_write(a);
+            }
+            let (ret, flops) = libs::call(name, &args).unwrap()?;
+            self.charge(flops)?;
+            return Ok(Some(ret));
+        }
+        // user function
+        let f = self
+            .prog
+            .function(name)
+            .ok_or_else(|| anyhow!("call to undefined function `{name}`"))?;
+        if f.params.len() != args.len() {
+            bail!("function `{name}` takes {} arguments, got {}", f.params.len(), args.len());
+        }
+        if self.call_depth > 64 {
+            bail!("call depth limit exceeded (recursion?)");
+        }
+        let mut callee_env = Env::default();
+        for (p, v) in f.params.iter().zip(args) {
+            callee_env.insert(p.name.clone(), v);
+        }
+        self.call_depth += 1;
+        let body = &f.body;
+        let flow = self.exec_block(body, &mut callee_env);
+        self.call_depth -= 1;
+        match flow? {
+            Flow::Return(v) => Ok(v),
+            Flow::Normal => Ok(None),
+            _ => bail!("break/continue escaped function `{name}`"),
+        }
+    }
+
+    fn assign(&mut self, target: &LValue, op: AssignOp, rhs: Value, env: &mut Env) -> Result<()> {
+        match target {
+            LValue::Var(name) => {
+                let new = match op {
+                    AssignOp::Set => rhs,
+                    _ => {
+                        let old = env
+                            .get(name)
+                            .ok_or_else(|| anyhow!("undefined variable `{name}`"))?
+                            .clone();
+                        apply_compound(op, &old, &rhs)?
+                    }
+                };
+                env.insert(name.clone(), new);
+                Ok(())
+            }
+            LValue::Index { base, indices } => {
+                let mut buf = [0i64; 8];
+                let rank = indices.len().min(8);
+                for (k, e) in indices.iter().take(8).enumerate() {
+                    buf[k] = self.eval(e, env)?.as_i64()?;
+                }
+                let idx = &buf[..rank];
+                let arr = self.lookup_array(env, base)?;
+                if !self.in_gpu_region {
+                    if op != AssignOp::Set {
+                        self.host_read(&arr);
+                    }
+                    self.host_write(&arr);
+                }
+                let mut a = arr.borrow_mut();
+                let off = a.offset(idx).map_err(|e| anyhow!("array `{base}`: {e}"))?;
+                let rv = rhs.as_f64()?;
+                a.data[off] = match op {
+                    AssignOp::Set => rv,
+                    AssignOp::Add => a.data[off] + rv,
+                    AssignOp::Sub => a.data[off] - rv,
+                    AssignOp::Mul => a.data[off] * rv,
+                    AssignOp::Div => a.data[off] / rv,
+                };
+                Ok(())
+            }
+        }
+    }
+
+    // ---- expressions ------------------------------------------------------
+
+    fn eval(&mut self, e: &Expr, env: &mut Env) -> Result<Value> {
+        self.charge(1)?;
+        match e {
+            Expr::IntLit(v) => Ok(Value::Int(*v)),
+            Expr::FloatLit(v) => Ok(Value::Float(*v)),
+            Expr::Var(n) => env
+                .get(n)
+                .cloned()
+                .ok_or_else(|| anyhow!("undefined variable `{n}`")),
+            Expr::Index { base, indices } => {
+                let mut buf = [0i64; 8];
+                let rank = indices.len().min(8);
+                for (k, e) in indices.iter().take(8).enumerate() {
+                    buf[k] = self.eval(e, env)?.as_i64()?;
+                }
+                let arr = self.lookup_array(env, base)?;
+                if !self.in_gpu_region {
+                    self.host_read(&arr);
+                }
+                let a = arr.borrow();
+                let off =
+                    a.offset(&buf[..rank]).map_err(|e| anyhow!("array `{base}`: {e}"))?;
+                Ok(Value::Float(a.data[off]))
+            }
+            Expr::Binary { op, lhs, rhs } => {
+                // short-circuit logic
+                if *op == BinOp::And {
+                    let l = self.eval(lhs, env)?;
+                    if !l.truthy()? {
+                        return Ok(Value::Int(0));
+                    }
+                    let r = self.eval(rhs, env)?;
+                    return Ok(Value::Int(r.truthy()? as i64));
+                }
+                if *op == BinOp::Or {
+                    let l = self.eval(lhs, env)?;
+                    if l.truthy()? {
+                        return Ok(Value::Int(1));
+                    }
+                    let r = self.eval(rhs, env)?;
+                    return Ok(Value::Int(r.truthy()? as i64));
+                }
+                let l = self.eval(lhs, env)?;
+                let r = self.eval(rhs, env)?;
+                binary(*op, &l, &r)
+            }
+            Expr::Unary { op, operand } => {
+                let v = self.eval(operand, env)?;
+                match op {
+                    UnOp::Neg => Ok(match v {
+                        Value::Int(i) => Value::Int(-i),
+                        Value::Float(f) => Value::Float(-f),
+                        Value::Arr(_) => bail!("cannot negate an array"),
+                    }),
+                    UnOp::Not => Ok(Value::Int(!v.truthy()? as i64)),
+                }
+            }
+            Expr::Intrinsic { f, args } => {
+                let mut vals = Vec::with_capacity(args.len());
+                for a in args {
+                    vals.push(self.eval(a, env)?.as_f64()?);
+                }
+                let r = match f {
+                    Intrinsic::Sqrt => vals[0].sqrt(),
+                    Intrinsic::Exp => vals[0].exp(),
+                    Intrinsic::Log => vals[0].ln(),
+                    Intrinsic::Sin => vals[0].sin(),
+                    Intrinsic::Cos => vals[0].cos(),
+                    Intrinsic::Fabs => vals[0].abs(),
+                    Intrinsic::Pow => vals[0].powf(vals[1]),
+                    Intrinsic::Min => vals[0].min(vals[1]),
+                    Intrinsic::Max => vals[0].max(vals[1]),
+                    Intrinsic::Floor => vals[0].floor(),
+                };
+                Ok(Value::Float(r))
+            }
+            Expr::Call { name, args } => {
+                let mut vals = Vec::with_capacity(args.len());
+                for a in args {
+                    vals.push(self.eval(a, env)?);
+                }
+                match self.call_function(name, vals)? {
+                    Some(v) => Ok(v),
+                    None => Ok(Value::Int(0)),
+                }
+            }
+            Expr::Len { base, dim } => {
+                let arr = self.lookup_array(env, base)?;
+                let a = arr.borrow();
+                let d = *dim;
+                if d >= a.shape.len() {
+                    bail!("len: dimension {d} out of range for `{base}`");
+                }
+                Ok(Value::Int(a.shape[d] as i64))
+            }
+        }
+    }
+}
+
+fn apply_compound(op: AssignOp, old: &Value, rhs: &Value) -> Result<Value> {
+    let bop = match op {
+        AssignOp::Add => BinOp::Add,
+        AssignOp::Sub => BinOp::Sub,
+        AssignOp::Mul => BinOp::Mul,
+        AssignOp::Div => BinOp::Div,
+        AssignOp::Set => unreachable!(),
+    };
+    binary(bop, old, rhs)
+}
+
+fn binary(op: BinOp, l: &Value, r: &Value) -> Result<Value> {
+    use BinOp::*;
+    // integer arithmetic when both sides are ints (C/Java semantics)
+    if let (Value::Int(a), Value::Int(b)) = (l, r) {
+        let (a, b) = (*a, *b);
+        return Ok(match op {
+            Add => Value::Int(a.wrapping_add(b)),
+            Sub => Value::Int(a.wrapping_sub(b)),
+            Mul => Value::Int(a.wrapping_mul(b)),
+            Div => {
+                if b == 0 {
+                    bail!("integer division by zero");
+                }
+                Value::Int(a / b)
+            }
+            Mod => {
+                if b == 0 {
+                    bail!("integer modulo by zero");
+                }
+                Value::Int(a % b)
+            }
+            Lt => Value::Int((a < b) as i64),
+            Le => Value::Int((a <= b) as i64),
+            Gt => Value::Int((a > b) as i64),
+            Ge => Value::Int((a >= b) as i64),
+            Eq => Value::Int((a == b) as i64),
+            Ne => Value::Int((a != b) as i64),
+            And | Or => unreachable!("short-circuited"),
+        });
+    }
+    let a = l.as_f64()?;
+    let b = r.as_f64()?;
+    Ok(match op {
+        Add => Value::Float(a + b),
+        Sub => Value::Float(a - b),
+        Mul => Value::Float(a * b),
+        Div => Value::Float(a / b),
+        Mod => Value::Float(a % b),
+        Lt => Value::Int((a < b) as i64),
+        Le => Value::Int((a <= b) as i64),
+        Gt => Value::Int((a > b) as i64),
+        Ge => Value::Int((a >= b) as i64),
+        Eq => Value::Int((a == b) as i64),
+        Ne => Value::Int((a != b) as i64),
+        And | Or => unreachable!("short-circuited"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse;
+
+    fn run_c(src: &str) -> Outcome {
+        let p = parse(src, Lang::C, "t").unwrap();
+        run_cpu(&p, VmConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn arithmetic_and_print() {
+        let o = run_c("void main() { int x = 2 + 3 * 4; printf(\"%d\\n\", x); }");
+        assert_eq!(o.prints, vec![14.0]);
+    }
+
+    #[test]
+    fn loops_accumulate() {
+        let o = run_c(
+            "void main() { double s = 0.0; for (int i = 1; i <= 100; i++) { s += i; } printf(\"%f\\n\", s); }",
+        );
+        assert_eq!(o.prints, vec![5050.0]);
+    }
+
+    #[test]
+    fn arrays_2d_and_nesting() {
+        let o = run_c(
+            r#"void main() {
+                int n = 4;
+                double a[n][n];
+                for (int i = 0; i < n; i++)
+                    for (int j = 0; j < n; j++)
+                        a[i][j] = i * 10 + j;
+                printf("%f\n", a[2][3]);
+            }"#,
+        );
+        assert_eq!(o.prints, vec![23.0]);
+    }
+
+    #[test]
+    fn user_functions_and_array_reference_semantics() {
+        let o = run_c(
+            r#"
+            void fill(double a[], int n) {
+                for (int i = 0; i < n; i++) { a[i] = i * i; }
+            }
+            double total(double a[], int n) {
+                double s = 0.0;
+                for (int i = 0; i < n; i++) { s += a[i]; }
+                return s;
+            }
+            void main() {
+                int n = 5;
+                double a[n];
+                fill(a, n);
+                printf("%f\n", total(a, n));
+            }
+            "#,
+        );
+        assert_eq!(o.prints, vec![30.0]); // 0+1+4+9+16
+    }
+
+    #[test]
+    fn while_break_continue() {
+        let o = run_c(
+            r#"void main() {
+                int i = 0; int s = 0;
+                while (1) {
+                    i++;
+                    if (i % 2 == 0) { continue; }
+                    if (i > 9) { break; }
+                    s += i;
+                }
+                printf("%d\n", s);
+            }"#,
+        );
+        assert_eq!(o.prints, vec![25.0]); // 1+3+5+7+9
+    }
+
+    #[test]
+    fn intrinsics() {
+        let o = run_c(
+            "void main() { printf(\"%f\\n\", sqrt(16.0) + pow(2.0, 3.0) + fabs(0.0 - 2.0)); }",
+        );
+        assert_eq!(o.prints, vec![14.0]);
+    }
+
+    #[test]
+    fn library_call_counts_flops() {
+        let o = run_c(
+            r#"void main() {
+                int n = 8;
+                double a[n][n]; double b[n][n]; double c[n][n];
+                seed_fill(a, 1);
+                seed_fill(b, 2);
+                matmul(a, b, c, n);
+                printf("%f\n", c[0][0]);
+            }"#,
+        );
+        assert!(o.cpu_ops > 2 * 8 * 8 * 8, "flops charged: {}", o.cpu_ops);
+        assert!(o.prints[0].is_finite());
+    }
+
+    #[test]
+    fn out_of_bounds_errors() {
+        let p = parse("void main() { double a[4]; a[5] = 1.0; }", Lang::C, "t").unwrap();
+        let err = run_cpu(&p, VmConfig::default()).unwrap_err();
+        assert!(err.to_string().contains("out of bounds"), "{err}");
+    }
+
+    #[test]
+    fn op_budget_enforced() {
+        let p = parse("void main() { double s = 0.0; while (1) { s += 1.0; } }", Lang::C, "t")
+            .unwrap();
+        let err = run_cpu(&p, VmConfig { max_ops: 10_000, cpu_op_ns: 1.0 }).unwrap_err();
+        assert!(err.to_string().contains("budget"), "{err}");
+    }
+
+    #[test]
+    fn int_division_is_truncating_and_guarded() {
+        let o = run_c("void main() { printf(\"%d\\n\", 7 / 2); }");
+        assert_eq!(o.prints, vec![3.0]);
+        let p = parse("void main() { int x = 1 / 0; }", Lang::C, "t").unwrap();
+        assert!(run_cpu(&p, VmConfig::default()).is_err());
+    }
+
+    #[test]
+    fn python_and_java_execute_identically() {
+        let py = parse(
+            "def main():\n    n = 6\n    a = zeros(n)\n    for i in range(n):\n        a[i] = i * i\n    s = 0.0\n    for i in range(n):\n        s += a[i]\n    print(s)\n",
+            Lang::Python,
+            "t",
+        )
+        .unwrap();
+        let java = parse(
+            r#"class T { public static void main(String[] args) {
+                int n = 6;
+                double[] a = new double[n];
+                for (int i = 0; i < n; i++) { a[i] = i * i; }
+                double s = 0.0;
+                for (int i = 0; i < n; i++) { s += a[i]; }
+                System.out.println(s);
+            } }"#,
+            Lang::Java,
+            "t",
+        )
+        .unwrap();
+        let o1 = run_cpu(&py, VmConfig::default()).unwrap();
+        let o2 = run_cpu(&java, VmConfig::default()).unwrap();
+        assert_eq!(o1.prints, o2.prints);
+        assert_eq!(o1.prints, vec![55.0]);
+    }
+
+    #[test]
+    fn recursion_depth_guarded() {
+        let p = parse(
+            "int f(int x) { return f(x + 1); } void main() { int y = f(0); }",
+            Lang::C,
+            "t",
+        )
+        .unwrap();
+        let err = run_cpu(&p, VmConfig::default()).unwrap_err();
+        assert!(err.to_string().contains("depth"), "{err}");
+    }
+
+    #[test]
+    fn downward_loop() {
+        let o = run_c(
+            "void main() { int s = 0; for (int i = 10; i > 0; i--) { s += i; } printf(\"%d\\n\", s); }",
+        );
+        assert_eq!(o.prints, vec![55.0]);
+    }
+
+    #[test]
+    fn loop_var_restored_after_loop() {
+        let o = run_c(
+            "void main() { int i = 99; for (int i = 0; i < 3; i++) { } printf(\"%d\\n\", i); }",
+        );
+        assert_eq!(o.prints, vec![99.0]);
+    }
+}

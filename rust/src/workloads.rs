@@ -1,0 +1,769 @@
+//! Built-in sample applications — each authored in **all three source
+//! languages** (C, Python, Java), semantically identical.
+//!
+//! These are the paper's 既存アプリケーション: the workloads the common
+//! offload method is demonstrated on. Every app prints the same checksum
+//! values in every language, so (a) the PCAST-style results check works,
+//! and (b) E7 can assert that the *same* offload pattern is found from all
+//! three front ends.
+//!
+//! | app          | offload opportunities                                        |
+//! |--------------|--------------------------------------------------------------|
+//! | mm           | init loops, hand-written matmul nest (clone → GPU library)   |
+//! | fourier      | `dft` library call (name match), magnitude loop, CPU max-scan|
+//! | stencil      | Jacobi sweep inside a sequential time loop (clone + hoisting)|
+//! | blackscholes | one heavy elementwise loop (generic OpenACC-style offload)   |
+//! | mixed        | `matmul` library call + parallel post-loop + CPU-bound loop  |
+//! | signal       | FIR filter via `conv1d` library call (name match) + reduction|
+//! | smallloops   | loops too small to profit — GA must keep them on CPU         |
+
+use crate::ir::Lang;
+
+/// A workload source in one language.
+#[derive(Debug, Clone)]
+pub struct Source {
+    pub app: &'static str,
+    pub lang: Lang,
+    pub code: &'static str,
+}
+
+pub const APPS: &[&str] =
+    &["mm", "fourier", "stencil", "blackscholes", "mixed", "signal", "smallloops"];
+
+/// Fetch a workload. Returns `None` for unknown app names.
+pub fn get(app: &str, lang: Lang) -> Option<Source> {
+    let code = match (app, lang) {
+        ("mm", Lang::C) => MM_C,
+        ("mm", Lang::Python) => MM_PY,
+        ("mm", Lang::Java) => MM_JAVA,
+        ("fourier", Lang::C) => FOURIER_C,
+        ("fourier", Lang::Python) => FOURIER_PY,
+        ("fourier", Lang::Java) => FOURIER_JAVA,
+        ("stencil", Lang::C) => STENCIL_C,
+        ("stencil", Lang::Python) => STENCIL_PY,
+        ("stencil", Lang::Java) => STENCIL_JAVA,
+        ("blackscholes", Lang::C) => BS_C,
+        ("blackscholes", Lang::Python) => BS_PY,
+        ("blackscholes", Lang::Java) => BS_JAVA,
+        ("mixed", Lang::C) => MIXED_C,
+        ("mixed", Lang::Python) => MIXED_PY,
+        ("mixed", Lang::Java) => MIXED_JAVA,
+        ("signal", Lang::C) => SIGNAL_C,
+        ("signal", Lang::Python) => SIGNAL_PY,
+        ("signal", Lang::Java) => SIGNAL_JAVA,
+        ("smallloops", Lang::C) => SMALL_C,
+        ("smallloops", Lang::Python) => SMALL_PY,
+        ("smallloops", Lang::Java) => SMALL_JAVA,
+        _ => return None,
+    };
+    Some(Source { app: APPS.iter().find(|a| **a == app)?, lang, code })
+}
+
+/// All 18 (app, language) sources.
+pub fn all() -> Vec<Source> {
+    let mut out = Vec::new();
+    for app in APPS {
+        for lang in Lang::all() {
+            out.push(get(app, lang).unwrap());
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// mm — dense matmul, hand-written triple nest (n = 32)
+// ---------------------------------------------------------------------------
+
+const MM_C: &str = r#"
+#include <stdio.h>
+void main() {
+    int n = 32;
+    double a[n][n];
+    double b[n][n];
+    double c[n][n];
+    for (int i = 0; i < n; i++) {
+        for (int j = 0; j < n; j++) {
+            a[i][j] = ((i * 31 + j * 7) % 17) * 0.25;
+        }
+    }
+    for (int i = 0; i < n; i++) {
+        for (int j = 0; j < n; j++) {
+            b[i][j] = ((i * 13 + j * 3) % 23) * 0.125;
+        }
+    }
+    for (int i = 0; i < n; i++) {
+        for (int j = 0; j < n; j++) {
+            double s = 0.0;
+            for (int k = 0; k < n; k++) {
+                s += a[i][k] * b[k][j];
+            }
+            c[i][j] = s;
+        }
+    }
+    double total = 0.0;
+    for (int i = 0; i < n; i++) {
+        for (int j = 0; j < n; j++) {
+            total += c[i][j];
+        }
+    }
+    printf("%f\n", c[5][7]);
+    printf("%f\n", total);
+}
+"#;
+
+const MM_PY: &str = r#"
+def main():
+    n = 32
+    a = zeros((n, n))
+    b = zeros((n, n))
+    c = zeros((n, n))
+    for i in range(n):
+        for j in range(n):
+            a[i][j] = ((i * 31 + j * 7) % 17) * 0.25
+    for i in range(n):
+        for j in range(n):
+            b[i][j] = ((i * 13 + j * 3) % 23) * 0.125
+    for i in range(n):
+        for j in range(n):
+            s = 0.0
+            for k in range(n):
+                s += a[i][k] * b[k][j]
+            c[i][j] = s
+    total = 0.0
+    for i in range(n):
+        for j in range(n):
+            total += c[i][j]
+    print(c[5][7])
+    print(total)
+"#;
+
+const MM_JAVA: &str = r#"
+public class Mm {
+    public static void main(String[] args) {
+        int n = 32;
+        double[][] a = new double[n][n];
+        double[][] b = new double[n][n];
+        double[][] c = new double[n][n];
+        for (int i = 0; i < n; i++) {
+            for (int j = 0; j < n; j++) {
+                a[i][j] = ((i * 31 + j * 7) % 17) * 0.25;
+            }
+        }
+        for (int i = 0; i < n; i++) {
+            for (int j = 0; j < n; j++) {
+                b[i][j] = ((i * 13 + j * 3) % 23) * 0.125;
+            }
+        }
+        for (int i = 0; i < n; i++) {
+            for (int j = 0; j < n; j++) {
+                double s = 0.0;
+                for (int k = 0; k < n; k++) {
+                    s += a[i][k] * b[k][j];
+                }
+                c[i][j] = s;
+            }
+        }
+        double total = 0.0;
+        for (int i = 0; i < n; i++) {
+            for (int j = 0; j < n; j++) {
+                total += c[i][j];
+            }
+        }
+        System.out.println(c[5][7]);
+        System.out.println(total);
+    }
+}
+"#;
+
+// ---------------------------------------------------------------------------
+// fourier — DFT library call + magnitude loop + CPU max scan (n = 128)
+// ---------------------------------------------------------------------------
+
+const FOURIER_C: &str = r#"
+#include <stdio.h>
+#include <math.h>
+void main() {
+    int n = 512;
+    double re[n];
+    double im[n];
+    double ro[n];
+    double io[n];
+    double mag[n];
+    for (int i = 0; i < n; i++) {
+        re[i] = sin(i * 0.4908738521234052) + 0.5 * sin(i * 1.9634954084936207);
+        im[i] = 0.0;
+    }
+    dft(re, im, ro, io, n);
+    for (int i = 0; i < n; i++) {
+        mag[i] = sqrt(ro[i] * ro[i] + io[i] * io[i]);
+    }
+    double peak = 0.0;
+    for (int i = 0; i < n; i++) {
+        peak = max(peak, mag[i]);
+    }
+    double total = 0.0;
+    for (int i = 0; i < n; i++) {
+        total += mag[i];
+    }
+    printf("%f\n", peak);
+    printf("%f\n", total);
+}
+"#;
+
+const FOURIER_PY: &str = r#"
+import math
+def main():
+    n = 512
+    re = zeros(n)
+    im = zeros(n)
+    ro = zeros(n)
+    io = zeros(n)
+    mag = zeros(n)
+    for i in range(n):
+        re[i] = math.sin(i * 0.4908738521234052) + 0.5 * math.sin(i * 1.9634954084936207)
+        im[i] = 0.0
+    dft(re, im, ro, io, n)
+    for i in range(n):
+        mag[i] = math.sqrt(ro[i] * ro[i] + io[i] * io[i])
+    peak = 0.0
+    for i in range(n):
+        peak = max(peak, mag[i])
+    total = 0.0
+    for i in range(n):
+        total += mag[i]
+    print(peak)
+    print(total)
+"#;
+
+const FOURIER_JAVA: &str = r#"
+public class Fourier {
+    public static void main(String[] args) {
+        int n = 512;
+        double[] re = new double[n];
+        double[] im = new double[n];
+        double[] ro = new double[n];
+        double[] io = new double[n];
+        double[] mag = new double[n];
+        for (int i = 0; i < n; i++) {
+            re[i] = Math.sin(i * 0.4908738521234052) + 0.5 * Math.sin(i * 1.9634954084936207);
+            im[i] = 0.0;
+        }
+        Lib.dft(re, im, ro, io, n);
+        for (int i = 0; i < n; i++) {
+            mag[i] = Math.sqrt(ro[i] * ro[i] + io[i] * io[i]);
+        }
+        double peak = 0.0;
+        for (int i = 0; i < n; i++) {
+            peak = Math.max(peak, mag[i]);
+        }
+        double total = 0.0;
+        for (int i = 0; i < n; i++) {
+            total += mag[i];
+        }
+        System.out.println(peak);
+        System.out.println(total);
+    }
+}
+"#;
+
+// ---------------------------------------------------------------------------
+// stencil — Jacobi relaxation, sequential time loop (n = 64, 20 steps)
+// ---------------------------------------------------------------------------
+
+const STENCIL_C: &str = r#"
+#include <stdio.h>
+void main() {
+    int n = 64;
+    int m = 64;
+    int steps = 20;
+    double a[n][m];
+    double b[n][m];
+    for (int i = 0; i < n; i++) {
+        for (int j = 0; j < m; j++) {
+            a[i][j] = 0.0;
+            b[i][j] = 0.0;
+        }
+    }
+    for (int i = 1; i < n - 1; i++) {
+        for (int j = 1; j < m - 1; j++) {
+            a[i][j] = ((i * 7 + j * 11) % 13) * 1.0;
+        }
+    }
+    for (int t = 0; t < steps; t++) {
+        for (int i = 1; i < n - 1; i++) {
+            for (int j = 1; j < m - 1; j++) {
+                b[i][j] = 0.25 * (a[i - 1][j] + a[i + 1][j] + a[i][j - 1] + a[i][j + 1]);
+            }
+        }
+        for (int i = 1; i < n - 1; i++) {
+            for (int j = 1; j < m - 1; j++) {
+                a[i][j] = b[i][j];
+            }
+        }
+    }
+    double total = 0.0;
+    for (int i = 0; i < n; i++) {
+        for (int j = 0; j < m; j++) {
+            total += a[i][j];
+        }
+    }
+    printf("%f\n", a[30][30]);
+    printf("%f\n", total);
+}
+"#;
+
+const STENCIL_PY: &str = r#"
+def main():
+    n = 64
+    m = 64
+    steps = 20
+    a = zeros((n, m))
+    b = zeros((n, m))
+    for i in range(n):
+        for j in range(m):
+            a[i][j] = 0.0
+            b[i][j] = 0.0
+    for i in range(1, n - 1):
+        for j in range(1, m - 1):
+            a[i][j] = ((i * 7 + j * 11) % 13) * 1.0
+    for t in range(steps):
+        for i in range(1, n - 1):
+            for j in range(1, m - 1):
+                b[i][j] = 0.25 * (a[i - 1][j] + a[i + 1][j] + a[i][j - 1] + a[i][j + 1])
+        for i in range(1, n - 1):
+            for j in range(1, m - 1):
+                a[i][j] = b[i][j]
+    total = 0.0
+    for i in range(n):
+        for j in range(m):
+            total += a[i][j]
+    print(a[30][30])
+    print(total)
+"#;
+
+const STENCIL_JAVA: &str = r#"
+public class Stencil {
+    public static void main(String[] args) {
+        int n = 64;
+        int m = 64;
+        int steps = 20;
+        double[][] a = new double[n][m];
+        double[][] b = new double[n][m];
+        for (int i = 0; i < n; i++) {
+            for (int j = 0; j < m; j++) {
+                a[i][j] = 0.0;
+                b[i][j] = 0.0;
+            }
+        }
+        for (int i = 1; i < n - 1; i++) {
+            for (int j = 1; j < m - 1; j++) {
+                a[i][j] = ((i * 7 + j * 11) % 13) * 1.0;
+            }
+        }
+        for (int t = 0; t < steps; t++) {
+            for (int i = 1; i < n - 1; i++) {
+                for (int j = 1; j < m - 1; j++) {
+                    b[i][j] = 0.25 * (a[i - 1][j] + a[i + 1][j] + a[i][j - 1] + a[i][j + 1]);
+                }
+            }
+            for (int i = 1; i < n - 1; i++) {
+                for (int j = 1; j < m - 1; j++) {
+                    a[i][j] = b[i][j];
+                }
+            }
+        }
+        double total = 0.0;
+        for (int i = 0; i < n; i++) {
+            for (int j = 0; j < m; j++) {
+                total += a[i][j];
+            }
+        }
+        System.out.println(a[30][30]);
+        System.out.println(total);
+    }
+}
+"#;
+
+// ---------------------------------------------------------------------------
+// blackscholes — heavy elementwise loop (n = 16384)
+// logistic-approximation CDF, identical in every path
+// ---------------------------------------------------------------------------
+
+const BS_C: &str = r#"
+#include <stdio.h>
+#include <math.h>
+void main() {
+    int n = 16384;
+    double sp[n];
+    double kp[n];
+    double tp[n];
+    double call[n];
+    for (int i = 0; i < n; i++) {
+        sp[i] = 50.0 + ((i * 37) % 100) * 1.0;
+        kp[i] = 50.0 + ((i * 53) % 100) * 1.0;
+        tp[i] = 0.1 + ((i * 11) % 20) * 0.1;
+    }
+    for (int i = 0; i < n; i++) {
+        double sq = 0.3 * sqrt(tp[i]);
+        double d1 = (log(sp[i] / kp[i]) + (0.02 + 0.045) * tp[i]) / sq;
+        double d2 = d1 - sq;
+        double n1 = 1.0 / (1.0 + exp(0.0 - 1.702 * d1));
+        double n2 = 1.0 / (1.0 + exp(0.0 - 1.702 * d2));
+        call[i] = sp[i] * n1 - kp[i] * exp(0.0 - 0.02 * tp[i]) * n2;
+    }
+    double total = 0.0;
+    for (int i = 0; i < n; i++) {
+        total += call[i];
+    }
+    printf("%f\n", call[10]);
+    printf("%f\n", total);
+}
+"#;
+
+const BS_PY: &str = r#"
+import math
+def main():
+    n = 16384
+    sp = zeros(n)
+    kp = zeros(n)
+    tp = zeros(n)
+    call = zeros(n)
+    for i in range(n):
+        sp[i] = 50.0 + ((i * 37) % 100) * 1.0
+        kp[i] = 50.0 + ((i * 53) % 100) * 1.0
+        tp[i] = 0.1 + ((i * 11) % 20) * 0.1
+    for i in range(n):
+        sq = 0.3 * math.sqrt(tp[i])
+        d1 = (math.log(sp[i] / kp[i]) + (0.02 + 0.045) * tp[i]) / sq
+        d2 = d1 - sq
+        n1 = 1.0 / (1.0 + math.exp(0.0 - 1.702 * d1))
+        n2 = 1.0 / (1.0 + math.exp(0.0 - 1.702 * d2))
+        call[i] = sp[i] * n1 - kp[i] * math.exp(0.0 - 0.02 * tp[i]) * n2
+    total = 0.0
+    for i in range(n):
+        total += call[i]
+    print(call[10])
+    print(total)
+"#;
+
+const BS_JAVA: &str = r#"
+public class Blackscholes {
+    public static void main(String[] args) {
+        int n = 16384;
+        double[] sp = new double[n];
+        double[] kp = new double[n];
+        double[] tp = new double[n];
+        double[] call = new double[n];
+        for (int i = 0; i < n; i++) {
+            sp[i] = 50.0 + ((i * 37) % 100) * 1.0;
+            kp[i] = 50.0 + ((i * 53) % 100) * 1.0;
+            tp[i] = 0.1 + ((i * 11) % 20) * 0.1;
+        }
+        for (int i = 0; i < n; i++) {
+            double sq = 0.3 * Math.sqrt(tp[i]);
+            double d1 = (Math.log(sp[i] / kp[i]) + (0.02 + 0.045) * tp[i]) / sq;
+            double d2 = d1 - sq;
+            double n1 = 1.0 / (1.0 + Math.exp(0.0 - 1.702 * d1));
+            double n2 = 1.0 / (1.0 + Math.exp(0.0 - 1.702 * d2));
+            call[i] = sp[i] * n1 - kp[i] * Math.exp(0.0 - 0.02 * tp[i]) * n2;
+        }
+        double total = 0.0;
+        for (int i = 0; i < n; i++) {
+            total += call[i];
+        }
+        System.out.println(call[10]);
+        System.out.println(total);
+    }
+}
+"#;
+
+// ---------------------------------------------------------------------------
+// mixed — library call + parallel post-loop + CPU-bound recurrence (n = 64)
+// ---------------------------------------------------------------------------
+
+const MIXED_C: &str = r#"
+#include <stdio.h>
+#include <math.h>
+void main() {
+    int n = 64;
+    double a[n][n];
+    double b[n][n];
+    double c[n][n];
+    double d[n][n];
+    seed_fill(a, 1);
+    seed_fill(b, 2);
+    matmul(a, b, c, n);
+    for (int i = 0; i < n; i++) {
+        for (int j = 0; j < n; j++) {
+            d[i][j] = sqrt(fabs(c[i][j])) * 0.5;
+        }
+    }
+    double x = 1.0;
+    for (int i = 0; i < n; i++) {
+        x = x * 0.99 + d[i][i];
+    }
+    printf("%f\n", d[3][4]);
+    printf("%f\n", x);
+}
+"#;
+
+const MIXED_PY: &str = r#"
+import math
+def main():
+    n = 64
+    a = zeros((n, n))
+    b = zeros((n, n))
+    c = zeros((n, n))
+    d = zeros((n, n))
+    seed_fill(a, 1)
+    seed_fill(b, 2)
+    matmul(a, b, c, n)
+    for i in range(n):
+        for j in range(n):
+            d[i][j] = math.sqrt(math.fabs(c[i][j])) * 0.5
+    x = 1.0
+    for i in range(n):
+        x = x * 0.99 + d[i][i]
+    print(d[3][4])
+    print(x)
+"#;
+
+const MIXED_JAVA: &str = r#"
+public class Mixed {
+    public static void main(String[] args) {
+        int n = 64;
+        double[][] a = new double[n][n];
+        double[][] b = new double[n][n];
+        double[][] c = new double[n][n];
+        double[][] d = new double[n][n];
+        Lib.seed_fill(a, 1);
+        Lib.seed_fill(b, 2);
+        Lib.matmul(a, b, c, n);
+        for (int i = 0; i < n; i++) {
+            for (int j = 0; j < n; j++) {
+                d[i][j] = Math.sqrt(Math.abs(c[i][j])) * 0.5;
+            }
+        }
+        double x = 1.0;
+        for (int i = 0; i < n; i++) {
+            x = x * 0.99 + d[i][i];
+        }
+        System.out.println(d[3][4]);
+        System.out.println(x);
+    }
+}
+"#;
+
+// ---------------------------------------------------------------------------
+// signal — FIR filtering via the conv1d library (input 4111 → output 4096)
+// ---------------------------------------------------------------------------
+
+const SIGNAL_C: &str = r#"
+#include <stdio.h>
+#include <math.h>
+void main() {
+    int n = 4111;
+    int m = 16;
+    int out = 4096;
+    double x[n];
+    double k[m];
+    double y[out];
+    for (int i = 0; i < n; i++) {
+        x[i] = sin(i * 0.0306796157577128) + 0.3 * cos(i * 0.2454369260617026);
+    }
+    for (int j = 0; j < m; j++) {
+        k[j] = 1.0 / (1.0 + j);
+    }
+    conv1d(x, k, y, n, m);
+    double energy = 0.0;
+    for (int i = 0; i < out; i++) {
+        energy += y[i] * y[i];
+    }
+    printf("%f\n", y[100]);
+    printf("%f\n", energy);
+}
+"#;
+
+const SIGNAL_PY: &str = r#"
+import math
+def main():
+    n = 4111
+    m = 16
+    out = 4096
+    x = zeros(n)
+    k = zeros(m)
+    y = zeros(out)
+    for i in range(n):
+        x[i] = math.sin(i * 0.0306796157577128) + 0.3 * math.cos(i * 0.2454369260617026)
+    for j in range(m):
+        k[j] = 1.0 / (1.0 + j)
+    conv1d(x, k, y, n, m)
+    energy = 0.0
+    for i in range(out):
+        energy += y[i] * y[i]
+    print(y[100])
+    print(energy)
+"#;
+
+const SIGNAL_JAVA: &str = r#"
+public class Signal {
+    public static void main(String[] args) {
+        int n = 4111;
+        int m = 16;
+        int out = 4096;
+        double[] x = new double[n];
+        double[] k = new double[m];
+        double[] y = new double[out];
+        for (int i = 0; i < n; i++) {
+            x[i] = Math.sin(i * 0.0306796157577128) + 0.3 * Math.cos(i * 0.2454369260617026);
+        }
+        for (int j = 0; j < m; j++) {
+            k[j] = 1.0 / (1.0 + j);
+        }
+        Lib.conv1d(x, k, y, n, m);
+        double energy = 0.0;
+        for (int i = 0; i < out; i++) {
+            energy += y[i] * y[i];
+        }
+        System.out.println(y[100]);
+        System.out.println(energy);
+    }
+}
+"#;
+
+// ---------------------------------------------------------------------------
+// smallloops — nothing worth offloading (n = 8)
+// ---------------------------------------------------------------------------
+
+const SMALL_C: &str = r#"
+#include <stdio.h>
+void main() {
+    int n = 8;
+    double u[n];
+    double v[n];
+    double w[n];
+    for (int i = 0; i < n; i++) {
+        u[i] = i * 0.5;
+    }
+    for (int i = 0; i < n; i++) {
+        v[i] = u[i] + 1.0;
+    }
+    for (int i = 0; i < n; i++) {
+        w[i] = u[i] * v[i];
+    }
+    double s = 0.0;
+    for (int i = 0; i < n; i++) {
+        s += w[i];
+    }
+    printf("%f\n", s);
+}
+"#;
+
+const SMALL_PY: &str = r#"
+def main():
+    n = 8
+    u = zeros(n)
+    v = zeros(n)
+    w = zeros(n)
+    for i in range(n):
+        u[i] = i * 0.5
+    for i in range(n):
+        v[i] = u[i] + 1.0
+    for i in range(n):
+        w[i] = u[i] * v[i]
+    s = 0.0
+    for i in range(n):
+        s += w[i]
+    print(s)
+"#;
+
+const SMALL_JAVA: &str = r#"
+public class Smallloops {
+    public static void main(String[] args) {
+        int n = 8;
+        double[] u = new double[n];
+        double[] v = new double[n];
+        double[] w = new double[n];
+        for (int i = 0; i < n; i++) {
+            u[i] = i * 0.5;
+        }
+        for (int i = 0; i < n; i++) {
+            v[i] = u[i] + 1.0;
+        }
+        for (int i = 0; i < n; i++) {
+            w[i] = u[i] * v[i];
+        }
+        double s = 0.0;
+        for (int i = 0; i < n; i++) {
+            s += w[i];
+        }
+        System.out.println(s);
+    }
+}
+"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse;
+    use crate::vm::{run_cpu, VmConfig};
+
+    #[test]
+    fn all_18_sources_parse() {
+        for s in all() {
+            let p = parse(s.code, s.lang, s.app);
+            assert!(p.is_ok(), "{} [{}]: {:?}", s.app, s.lang, p.err());
+        }
+    }
+
+    #[test]
+    fn every_app_prints_identically_across_languages() {
+        for app in APPS {
+            let mut outputs = Vec::new();
+            for lang in Lang::all() {
+                let s = get(app, lang).unwrap();
+                let p = parse(s.code, lang, app).unwrap();
+                let o = run_cpu(&p, VmConfig::default())
+                    .unwrap_or_else(|e| panic!("{app} [{lang}]: {e}"));
+                outputs.push((lang, o.prints));
+            }
+            for w in outputs.windows(2) {
+                assert_eq!(
+                    w[0].1, w[1].1,
+                    "{app}: {} and {} outputs differ",
+                    w[0].0, w[1].0
+                );
+            }
+            assert!(!outputs[0].1.is_empty(), "{app} prints nothing");
+            assert!(outputs[0].1.iter().all(|x| x.is_finite()), "{app} prints non-finite");
+        }
+    }
+
+    #[test]
+    fn mm_has_the_expected_loop_structure() {
+        let s = get("mm", Lang::C).unwrap();
+        let p = parse(s.code, Lang::C, "mm").unwrap();
+        assert_eq!(p.loop_count(), 9); // 2+2 init, 3 mm, 2 sum
+        let a = crate::analysis::analyze(&p);
+        // the reduction double-loop's outer is NOT parallelizable (total
+        // accumulates across i and j is a recognized reduction → it is)
+        assert!(a.gene_loops().len() >= 7, "gene loops: {:?}", a.gene_loops());
+    }
+
+    #[test]
+    fn stencil_time_loop_is_sequential() {
+        let s = get("stencil", Lang::Python).unwrap();
+        let p = parse(s.code, Lang::Python, "stencil").unwrap();
+        let a = crate::analysis::analyze(&p);
+        // find the time loop: variable `t`
+        let t_loop = a.loops.iter().find(|l| l.var == "t").unwrap();
+        assert!(!t_loop.parallelizable, "time loop must be rejected");
+        // but the sweep loops under it are parallelizable
+        assert!(t_loop.children.iter().any(|&c| a.loops[c].parallelizable));
+    }
+
+    #[test]
+    fn unknown_app_is_none() {
+        assert!(get("nope", Lang::C).is_none());
+    }
+}

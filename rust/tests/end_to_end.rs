@@ -1,0 +1,137 @@
+//! End-to-end coordinator tests: the complete Fig. 1 flow on the built-in
+//! workloads, across all three source languages, with both the simulated
+//! and the PJRT-backed device.
+
+use envadapt::config::Config;
+use envadapt::coordinator::{offload_workload, Coordinator};
+use envadapt::ir::Lang;
+use envadapt::vm::RegionExec;
+use envadapt::workloads;
+
+fn sim_cfg() -> Config {
+    Config::fast_sim()
+}
+
+#[test]
+fn all_workloads_offload_correctly_in_all_languages() {
+    // The headline property: every app, every language → a valid (results
+    // check passing) final pattern that never regresses below CPU.
+    let mut coordinator = Coordinator::new(sim_cfg());
+    for app in workloads::APPS {
+        for lang in Lang::all() {
+            let s = workloads::get(app, lang).unwrap();
+            let r = coordinator.offload_source(s.code, lang, app).unwrap();
+            assert!(r.final_measurement.ok, "{app} [{lang}]: {:?}", r.final_measurement.failure);
+            assert!(
+                r.speedup() >= 0.999,
+                "{app} [{lang}]: regressed, speedup {}",
+                r.speedup()
+            );
+        }
+    }
+}
+
+#[test]
+fn language_independence_same_pattern_everywhere() {
+    // E7: for each app the chosen gene and the speedup are identical for
+    // C, Python and Java — the paper's common-method claim.
+    for app in workloads::APPS {
+        let mut genes = vec![];
+        for lang in Lang::all() {
+            let r = offload_workload(app, lang, sim_cfg()).unwrap();
+            genes.push((lang, r.best_gene.clone(), r.final_plan.gpu_calls.len(), r.speedup()));
+        }
+        for w in genes.windows(2) {
+            assert_eq!(w[0].1, w[1].1, "{app}: gene differs between {} and {}", w[0].0, w[1].0);
+            assert_eq!(w[0].2, w[1].2, "{app}: func-block count differs");
+            assert!(
+                (w[0].3 - w[1].3).abs() / w[0].3.max(1e-12) < 1e-9,
+                "{app}: speedup differs: {:?}",
+                genes
+            );
+        }
+    }
+}
+
+#[test]
+fn funcblock_beats_loop_only_on_mm() {
+    // E5's shape: algorithm-tuned function-block offload outperforms
+    // loop-statement offload on the same app ([40]).
+    let with_fb = offload_workload("mm", Lang::C, sim_cfg()).unwrap();
+    let mut cfg = sim_cfg();
+    cfg.funcblock.enabled = false;
+    let loops_only = offload_workload("mm", Lang::C, cfg).unwrap();
+    assert!(
+        with_fb.final_s < loops_only.final_s,
+        "func-block {} !< loop-only {}",
+        with_fb.final_s,
+        loops_only.final_s
+    );
+    // and loop-only still beats CPU
+    assert!(loops_only.speedup() >= 1.0);
+}
+
+#[test]
+fn hoisting_ablation_shapes_e4() {
+    // naive per-region transfers must cost measurably more on stencil
+    let hoisted = offload_workload("stencil", Lang::C, sim_cfg()).unwrap();
+    let mut cfg = sim_cfg();
+    cfg.naive_transfers = true;
+    let naive = offload_workload("stencil", Lang::C, cfg).unwrap();
+    assert!(
+        hoisted.final_s < naive.final_s,
+        "hoisted {} !< naive {}",
+        hoisted.final_s,
+        naive.final_s
+    );
+}
+
+#[test]
+fn pjrt_device_end_to_end() {
+    if !envadapt::runtime::Runtime::artifact_dir().join("matmul_32.hlo.txt").exists() {
+        eprintln!("artifacts not built; skipping");
+        return;
+    }
+    let mut cfg = Config::standard();
+    cfg.ga = envadapt::ga::GaConfig { population: 8, generations: 8, ..Default::default() };
+    let mut c = Coordinator::new(cfg);
+    assert!(c.device_is_pjrt());
+    let s = workloads::get("mm", Lang::Java).unwrap();
+    let r = c.offload_source(s.code, Lang::Java, "mm").unwrap();
+    assert!(r.final_measurement.ok, "{:?}", r.final_measurement.failure);
+    assert!(r.speedup() > 3.0, "speedup {}", r.speedup());
+    assert!(
+        r.final_plan
+            .regions
+            .values()
+            .any(|g| matches!(g.exec, RegionExec::Library { .. })),
+        "matmul nest should be replaced by the GPU library artifact"
+    );
+}
+
+#[test]
+fn deterministic_reports_per_seed() {
+    let r1 = offload_workload("blackscholes", Lang::C, sim_cfg()).unwrap();
+    let r2 = offload_workload("blackscholes", Lang::C, sim_cfg()).unwrap();
+    assert_eq!(r1.best_gene, r2.best_gene);
+    assert_eq!(r1.total_measurements, r2.total_measurements);
+    assert!((r1.final_s - r2.final_s).abs() < 1e-15);
+}
+
+#[test]
+fn ga_converges_within_budget_on_blackscholes() {
+    let r = offload_workload("blackscholes", Lang::Python, sim_cfg()).unwrap();
+    let ga = r.ga.as_ref().unwrap();
+    // the heavy elementwise loop must be offloaded in the winning gene
+    assert!(r.best_gene.iter().any(|&b| b), "some loop should be offloaded");
+    assert!(r.speedup() > 3.0, "speedup {}", r.speedup());
+    // convergence: the best-time curve is monotone non-increasing and the
+    // search ends at the final measured optimum
+    for w in ga.history.windows(2) {
+        assert!(w[1].best_time <= w[0].best_time);
+    }
+    assert!(
+        (ga.history.last().unwrap().best_time - ga.best_time).abs() < 1e-15,
+        "history end must equal the returned best"
+    );
+}

@@ -1,0 +1,289 @@
+//! Integration tests: cross-module behaviour (frontend → analysis → plan →
+//! VM → device), without the full coordinator (see end_to_end.rs for that).
+
+use envadapt::analysis;
+use envadapt::device::{CostModel, GpuDevice};
+use envadapt::frontend::{parse, render};
+use envadapt::ir::Lang;
+use envadapt::measure::Measurer;
+use envadapt::vm::{self, ExecPlan, RegionExec, VmConfig};
+use envadapt::workloads;
+use std::collections::HashMap;
+
+/// Helper: parse one workload.
+fn program(app: &str, lang: Lang) -> envadapt::ir::Program {
+    let s = workloads::get(app, lang).unwrap();
+    parse(s.code, lang, app).unwrap()
+}
+
+#[test]
+fn every_workload_analyzes_with_same_gene_length_across_languages() {
+    for app in workloads::APPS {
+        let mut lens = vec![];
+        for lang in Lang::all() {
+            let p = program(app, lang);
+            let a = analysis::analyze(&p);
+            lens.push((lang, a.gene_loops().len()));
+        }
+        assert!(
+            lens.windows(2).all(|w| w[0].1 == w[1].1),
+            "{app}: gene lengths differ across languages: {lens:?}"
+        );
+    }
+}
+
+#[test]
+fn offloaded_numerics_match_cpu_for_all_workloads_simulated() {
+    // all-ones gene (every parallelizable loop offloaded): numerics must
+    // still match the CPU baseline via the results check
+    for app in workloads::APPS {
+        let p = program(app, Lang::C);
+        let a = analysis::analyze(&p);
+        let gene = vec![true; a.gene_loops().len()];
+        let plan = analysis::build_plan(&a, &gene, false);
+        let m = Measurer::new(&p, VmConfig::default(), 1e-9).unwrap();
+        let mut dev = GpuDevice::simulated(CostModel::default());
+        let r = m.measure(&p, &plan, &mut dev);
+        assert!(r.ok, "{app}: {:?}", r.failure);
+    }
+}
+
+#[test]
+fn pjrt_library_numerics_pass_results_check() {
+    // function-block replacement through real artifacts must stay within
+    // the f32 tolerance of the f64 CPU baseline (the PCAST analogue)
+    if !envadapt::runtime::Runtime::artifact_dir().join("matmul_64.hlo.txt").exists() {
+        eprintln!("artifacts not built; skipping");
+        return;
+    }
+    let p = program("mixed", Lang::C);
+    let m = Measurer::new(&p, VmConfig::default(), 2e-3).unwrap();
+    let mut plan = ExecPlan::cpu_only();
+    plan.gpu_calls.insert("matmul".to_string());
+    let mut dev = GpuDevice::with_runtime(CostModel::default());
+    assert!(dev.is_pjrt());
+    let r = m.measure(&p, &plan, &mut dev);
+    assert!(r.ok, "{:?}", r.failure);
+    assert_eq!(dev.stats.simulated_lib_calls, 0, "matmul_64 must be a real artifact");
+    assert!(dev.stats.lib_wall_s > 0.0);
+}
+
+#[test]
+fn pjrt_f32_kernels_fail_an_unreasonably_tight_tolerance() {
+    // sanity that the result check has teeth: f32 artifacts cannot satisfy
+    // a 1e-12 relative tolerance against the f64 CPU oracle
+    if !envadapt::runtime::Runtime::artifact_dir().join("matmul_64.hlo.txt").exists() {
+        eprintln!("artifacts not built; skipping");
+        return;
+    }
+    let p = program("mixed", Lang::C);
+    let m = Measurer::new(&p, VmConfig::default(), 1e-13).unwrap();
+    let mut plan = ExecPlan::cpu_only();
+    plan.gpu_calls.insert("matmul".to_string());
+    let mut dev = GpuDevice::with_runtime(CostModel::default());
+    let r = m.measure(&p, &plan, &mut dev);
+    assert!(!r.ok, "f32 kernel should not satisfy 1e-13 relative tolerance");
+    assert!(r.ga_time().is_infinite());
+}
+
+#[test]
+fn transfer_hoisting_reduces_transfer_count_on_stencil() {
+    // [37]: the stencil's arrays should cross the bus O(1) times with
+    // residency tracking vs O(steps) without
+    let p = program("stencil", Lang::C);
+    let a = analysis::analyze(&p);
+    let gene = vec![true; a.gene_loops().len()];
+    let m = Measurer::new(&p, VmConfig::default(), 1e-9).unwrap();
+
+    let hoisted = analysis::build_plan(&a, &gene, false);
+    let mut d1 = GpuDevice::simulated(CostModel::default());
+    let r1 = m.measure(&p, &hoisted, &mut d1);
+
+    let naive = analysis::build_plan(&a, &gene, true);
+    let mut d2 = GpuDevice::simulated(CostModel::default());
+    let r2 = m.measure(&p, &naive, &mut d2);
+
+    assert!(r1.ok && r2.ok);
+    let (h2d_hoisted, ..) = d1.stats.h2d_count.overflowing_add(0);
+    let h2d_naive = d2.stats.h2d_count;
+    assert!(
+        h2d_hoisted * 4 < h2d_naive,
+        "hoisted {} transfers vs naive {}",
+        h2d_hoisted,
+        h2d_naive
+    );
+    assert!(r1.modeled_s < r2.modeled_s);
+}
+
+#[test]
+fn directive_rendering_round_trips_for_every_language() {
+    for app in workloads::APPS {
+        for lang in Lang::all() {
+            let p = program(app, lang);
+            let a = analysis::analyze(&p);
+            let gene = vec![true; a.gene_loops().len()];
+            let plan = analysis::build_plan(&a, &gene, false);
+            let dirs = analysis::plan_directives(&a, &plan);
+            let s = render::render(&p, &dirs);
+            assert!(!s.is_empty());
+            if !plan.regions.is_empty() {
+                let marker = match lang {
+                    Lang::C => "#pragma acc",
+                    Lang::Python => "# [pycuda]",
+                    Lang::Java => "gpu-lambda",
+                };
+                assert!(s.contains(marker) || s.contains("IntStream"), "{app} [{lang}]:\n{s}");
+            }
+        }
+    }
+}
+
+#[test]
+fn rendered_c_workloads_reparse_and_run_identically() {
+    // pretty-print (no directives) → reparse → identical prints
+    for app in workloads::APPS {
+        let p = program(app, Lang::C);
+        let s = render::render(&p, &HashMap::new());
+        let p2 = parse(&s, Lang::C, app).unwrap_or_else(|e| panic!("{app}: {e}\n{s}"));
+        let o1 = vm::run_cpu(&p, VmConfig::default()).unwrap();
+        let o2 = vm::run_cpu(&p2, VmConfig::default()).unwrap();
+        assert_eq!(o1.prints, o2.prints, "{app}");
+    }
+}
+
+#[test]
+fn library_region_exec_equivalent_to_inline_nest() {
+    // clone replacement (Library region) must produce the same numerics as
+    // the inline interpreted nest
+    let p = program("mm", Lang::Python);
+    let a = analysis::analyze(&p);
+    let baseline = vm::run_cpu(&p, VmConfig::default()).unwrap();
+
+    // loop 4 is the matmul nest root (after 2×2 init loops)
+    let nest = p.find_for(4).unwrap();
+    let args = envadapt::funcblock::extract_matmul(nest).expect("matmul extraction");
+    let mut plan = ExecPlan::cpu_only();
+    let info = &a.loops[4];
+    plan.regions.insert(
+        4,
+        envadapt::vm::GpuRegion {
+            root: 4,
+            copy_in: info.array_reads.iter().cloned().collect(),
+            copy_out: info.array_writes.iter().cloned().collect(),
+            exec: RegionExec::Library { name: "matmul".into(), args },
+        },
+    );
+    let mut dev = GpuDevice::simulated(CostModel::default());
+    let o = vm::run(&p, &plan, &mut dev, VmConfig::default()).unwrap();
+    for (a, b) in o.prints.iter().zip(&baseline.prints) {
+        assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+    }
+    assert_eq!(dev.stats.lib_calls, 1);
+}
+
+/// Failure injection: a device whose library kernels silently corrupt one
+/// output element — the results check must catch it and the GA must route
+/// around it (paper §4.2.2: PCAST divergence ⇒ 処理時間を∞).
+struct CorruptingDevice {
+    inner: GpuDevice,
+}
+
+impl envadapt::vm::Device for CorruptingDevice {
+    fn charge_h2d(&mut self, b: usize) {
+        self.inner.charge_h2d(b)
+    }
+    fn charge_d2h(&mut self, b: usize) {
+        self.inner.charge_d2h(b)
+    }
+    fn kernel_launch(&mut self) {
+        self.inner.kernel_launch()
+    }
+    fn charge_generic_kernel(&mut self, ops: u64, par: u64) {
+        self.inner.charge_generic_kernel(ops, par)
+    }
+    fn call_library(
+        &mut self,
+        name: &str,
+        args: &[envadapt::vm::Value],
+    ) -> anyhow::Result<Option<envadapt::vm::Value>> {
+        let r = self.inner.call_library(name, args)?;
+        // corrupt the output buffer (last array argument by the library
+        // calling convention) — the "faulty GPU"
+        if let Some(envadapt::vm::Value::Arr(a)) = args
+            .iter()
+            .rev()
+            .find(|v| matches!(v, envadapt::vm::Value::Arr(_)))
+        {
+            let mut a = a.borrow_mut();
+            if let Some(x) = a.data.first_mut() {
+                *x += 1000.0;
+            }
+        }
+        Ok(r)
+    }
+    fn gpu_seconds(&self) -> f64 {
+        self.inner.gpu_seconds()
+    }
+    fn transfer_stats(&self) -> (u64, u64, u64, u64) {
+        self.inner.transfer_stats()
+    }
+}
+
+#[test]
+fn faulty_gpu_library_is_caught_by_results_check() {
+    let p = program("mixed", Lang::C);
+    let m = Measurer::new(&p, VmConfig::default(), 2e-3).unwrap();
+    let mut plan = ExecPlan::cpu_only();
+    plan.gpu_calls.insert("matmul".to_string());
+    let mut dev = CorruptingDevice { inner: GpuDevice::simulated(CostModel::default()) };
+    let r = m.measure(&p, &plan, &mut dev);
+    assert!(!r.ok, "corrupted kernel output must fail the results check");
+    assert!(r.failure.as_ref().unwrap().contains("diverged"), "{:?}", r.failure);
+    assert!(r.ga_time().is_infinite());
+}
+
+#[test]
+fn gpu_region_inside_cpu_loop_launches_per_iteration() {
+    let src = r#"void main() {
+        int n = 256;
+        double x[n];
+        for (int t = 0; t < 5; t++) {
+            for (int i = 0; i < n; i++) { x[i] = x[i] + 1.0; }
+        }
+        printf("%f\n", x[0]);
+    }"#;
+    let p = parse(src, Lang::C, "t").unwrap();
+    let a = analysis::analyze(&p);
+    assert_eq!(a.gene_loops(), vec![1]);
+    let plan = analysis::build_plan(&a, &[true], false);
+    let mut dev = GpuDevice::simulated(CostModel::default());
+    let o = vm::run(&p, &plan, &mut dev, VmConfig::default()).unwrap();
+    assert_eq!(dev.stats.launches, 5, "one launch per time step");
+    assert_eq!(o.prints, vec![5.0]);
+    // residency: x transferred in once (never touched by CPU inside the t
+    // loop) and pulled back once for the print
+    assert_eq!(dev.stats.h2d_count, 1);
+    assert_eq!(dev.stats.d2h_count, 1);
+}
+
+#[test]
+fn cpu_touch_between_regions_forces_retransfer() {
+    let src = r#"void main() {
+        int n = 256;
+        double x[n];
+        for (int i = 0; i < n; i++) { x[i] = i; }
+        x[0] = 42.0;
+        for (int i = 0; i < n; i++) { x[i] = x[i] * 2.0; }
+        printf("%f\n", x[0]);
+    }"#;
+    let p = parse(src, Lang::C, "t").unwrap();
+    let a = analysis::analyze(&p);
+    let plan = analysis::build_plan(&a, &[true, true], false);
+    let mut dev = GpuDevice::simulated(CostModel::default());
+    let o = vm::run(&p, &plan, &mut dev, VmConfig::default()).unwrap();
+    assert_eq!(o.prints, vec![84.0]);
+    // CPU write to x between the two regions: d2h (fetch before the host
+    // write) + h2d (resend into region 2) + final d2h for the print
+    assert_eq!(dev.stats.h2d_count, 1, "h2d {}", dev.stats.h2d_count);
+    assert_eq!(dev.stats.d2h_count, 2, "d2h {}", dev.stats.d2h_count);
+}

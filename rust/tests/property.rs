@@ -1,0 +1,206 @@
+//! Property-based tests over coordinator invariants, using the in-crate
+//! mini property tester (`envadapt::util::prop`) — proptest is not
+//! available offline.
+
+use envadapt::analysis;
+use envadapt::device::{CostModel, GpuDevice};
+use envadapt::frontend::parse;
+use envadapt::ga::{self, GaConfig};
+use envadapt::ir::Lang;
+use envadapt::util::prop::{check, Config as PropConfig};
+use envadapt::util::Rng;
+use envadapt::vm::{self, VmConfig};
+
+/// Generate a random but valid C program: a chain of elementwise /
+/// reduction / broadcast loops over a few arrays.
+fn random_c_program(rng: &mut Rng, size: usize) -> String {
+    let n_loops = 1 + rng.below(size.min(8));
+    let n = 16 + rng.below(64);
+    let mut src = String::from("void main() {\n");
+    src.push_str(&format!("    int n = {n};\n"));
+    src.push_str("    double a[n]; double b[n]; double c[n];\n");
+    src.push_str("    double acc = 0.0;\n");
+    for k in 0..n_loops {
+        match rng.below(4) {
+            0 => src.push_str(&format!(
+                "    for (int i = 0; i < n; i++) {{ a[i] = i * {}.5; }}\n",
+                k + 1
+            )),
+            1 => src.push_str(
+                "    for (int i = 0; i < n; i++) { b[i] = a[i] * 2.0 + 1.0; }\n",
+            ),
+            2 => src.push_str("    for (int i = 0; i < n; i++) { c[i] = a[i] + b[i]; }\n"),
+            _ => src.push_str("    for (int i = 0; i < n; i++) { acc += a[i]; }\n"),
+        }
+    }
+    src.push_str("    printf(\"%f\\n\", acc + a[3] + b[5] + c[7]);\n}\n");
+    src
+}
+
+#[test]
+fn prop_any_gene_preserves_numerics() {
+    // For arbitrary programs and arbitrary genes, offloaded execution must
+    // produce exactly the CPU prints (generic kernels interpret the same
+    // IR, so even 0 tolerance holds).
+    check(
+        &PropConfig { cases: 60, seed: 0xA11CE, max_size: 8 },
+        |rng, size| {
+            let src = random_c_program(rng, size);
+            let gene_seed = rng.next_u64();
+            (src, gene_seed)
+        },
+        |(src, gene_seed)| {
+            let p = parse(src, Lang::C, "prop").unwrap();
+            let a = analysis::analyze(&p);
+            let len = a.gene_loops().len();
+            let mut grng = Rng::new(*gene_seed);
+            let gene: Vec<bool> = (0..len).map(|_| grng.bool()).collect();
+            let plan = analysis::build_plan(&a, &gene, grng.bool());
+            let baseline = vm::run_cpu(&p, VmConfig::default()).unwrap();
+            let mut dev = GpuDevice::simulated(CostModel::default());
+            let o = vm::run(&p, &plan, &mut dev, VmConfig::default()).unwrap();
+            o.prints == baseline.prints
+        },
+    );
+}
+
+#[test]
+fn prop_modeled_time_is_finite_and_positive() {
+    check(
+        &PropConfig { cases: 40, seed: 0xB0B, max_size: 8 },
+        |rng, size| {
+            let src = random_c_program(rng, size);
+            let gene_seed = rng.next_u64();
+            (src, gene_seed)
+        },
+        |(src, gene_seed)| {
+            let p = parse(src, Lang::C, "prop").unwrap();
+            let a = analysis::analyze(&p);
+            let len = a.gene_loops().len();
+            let mut grng = Rng::new(*gene_seed);
+            let gene: Vec<bool> = (0..len).map(|_| grng.bool()).collect();
+            let plan = analysis::build_plan(&a, &gene, false);
+            let mut dev = GpuDevice::simulated(CostModel::default());
+            let o = vm::run(&p, &plan, &mut dev, VmConfig::default()).unwrap();
+            o.modeled_seconds().is_finite() && o.modeled_seconds() > 0.0
+        },
+    );
+}
+
+#[test]
+fn prop_region_roots_are_never_nested() {
+    // plan invariant: no offload region root lies inside another region
+    check(
+        &PropConfig { cases: 60, seed: 0x5EED, max_size: 8 },
+        |rng, size| {
+            let src = random_nested_program(rng, size);
+            let gene_seed = rng.next_u64();
+            (src, gene_seed)
+        },
+        |(src, gene_seed)| {
+            let p = parse(src, Lang::C, "prop").unwrap();
+            let a = analysis::analyze(&p);
+            let len = a.gene_loops().len();
+            let mut grng = Rng::new(*gene_seed);
+            let gene: Vec<bool> = (0..len).map(|_| grng.bool()).collect();
+            let plan = analysis::build_plan(&a, &gene, false);
+            plan.regions.keys().all(|&root| {
+                let mut anc = a.loops[root].parent;
+                while let Some(x) = anc {
+                    if plan.regions.contains_key(&x) {
+                        return false;
+                    }
+                    anc = a.loops[x].parent;
+                }
+                true
+            })
+        },
+    );
+}
+
+/// Random programs with nested loop structure (for the nesting invariant).
+fn random_nested_program(rng: &mut Rng, size: usize) -> String {
+    let n = 8 + rng.below(24);
+    let depth = 1 + rng.below(size.min(3));
+    let mut src = String::from("void main() {\n");
+    src.push_str(&format!("    int n = {n};\n    double m[n][n];\n"));
+    match depth {
+        1 => src.push_str("    for (int i = 0; i < n; i++) { m[i][0] = i; }\n"),
+        2 => src.push_str(
+            "    for (int i = 0; i < n; i++) { for (int j = 0; j < n; j++) { m[i][j] = i + j; } }\n",
+        ),
+        _ => src.push_str(
+            "    for (int t = 0; t < 3; t++) { for (int i = 0; i < n; i++) { for (int j = 0; j < n; j++) { m[i][j] = m[i][j] + i * j; } } }\n",
+        ),
+    }
+    src.push_str("    printf(\"%f\\n\", m[2][0]);\n}\n");
+    src
+}
+
+#[test]
+fn prop_ga_never_worse_than_cpu_gene() {
+    // GA invariant: with seed_cpu_only, the returned best time never
+    // exceeds the all-zero gene's time, for arbitrary fitness landscapes.
+    check(
+        &PropConfig { cases: 40, seed: 0x6A6A, max_size: 10 },
+        |rng, size| {
+            let len = 1 + size.min(10);
+            let landscape_seed = rng.next_u64();
+            (len, landscape_seed)
+        },
+        |(len, landscape_seed)| {
+            let landscape = |g: &[bool]| -> f64 {
+                // deterministic pseudo-random landscape
+                let mut h = *landscape_seed;
+                for (i, &b) in g.iter().enumerate() {
+                    if b {
+                        h = h.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(i as u64);
+                    }
+                }
+                1.0 + (h % 1000) as f64 / 100.0
+            };
+            let cpu_time = landscape(&vec![false; *len]);
+            let r = ga::optimize(
+                *len,
+                &GaConfig { population: 6, generations: 6, ..Default::default() },
+                landscape,
+            );
+            r.best_time <= cpu_time + 1e-12
+        },
+    );
+}
+
+#[test]
+fn prop_parallelizable_loops_truly_have_no_dependences() {
+    // semantic validation of the legality checker: for loops it accepts,
+    // executing iterations in REVERSE order gives the same result.
+    check(
+        &PropConfig { cases: 40, seed: 0xFACADE, max_size: 8 },
+        |rng, size| random_c_program(rng, size),
+        |src| {
+            let p = parse(src, Lang::C, "prop").unwrap();
+            let a = analysis::analyze(&p);
+            if a.gene_loops().is_empty() {
+                return true;
+            }
+            let fwd = vm::run_cpu(&p, VmConfig::default()).unwrap();
+            // build a reversed program: for accepted loops, iterate n-1..=0
+            let rev_src = reverse_loops(src);
+            let pr = parse(&rev_src, Lang::C, "prop").unwrap();
+            let rev = vm::run_cpu(&pr, VmConfig::default()).unwrap();
+            fwd.prints
+                .iter()
+                .zip(&rev.prints)
+                .all(|(x, y)| (x - y).abs() < 1e-9)
+        },
+    );
+}
+
+/// Textual loop reversal for the generator's simple pattern:
+/// `for (int i = 0; i < n; i++)` → `for (int i = n - 1; i >= 0; i--)`.
+fn reverse_loops(src: &str) -> String {
+    src.replace(
+        "for (int i = 0; i < n; i++)",
+        "for (int i = n - 1; i >= 0; i--)",
+    )
+}
