@@ -63,8 +63,128 @@ fn main() {
     if want("e9") {
         e9_adaptive_targets();
     }
+    if want("engine") {
+        measurement_throughput();
+    }
     if want("micro") {
         micro_benchmarks();
+    }
+}
+
+/// measurement_throughput: evaluations/second of the parallel measurement
+/// engine at 1 / 4 / 8 workers over a 12-gene-loop workload, simulated
+/// device. Verifies the determinism contract on the way (identical times
+/// at every worker count) and records the baseline to BENCH_engine.json.
+fn measurement_throughput() {
+    use envadapt::device::{DeviceFactory, TargetKind};
+    use envadapt::engine::{self, MeasurementCache, MeasurementEngine};
+    use envadapt::util::json::Json;
+    use envadapt::util::Rng;
+
+    println!("## engine — parallel measurement throughput (evaluations/sec)\n");
+
+    // synthetic workload with 12 parallelizable loops (≥ 8 per the
+    // acceptance bar) over decently sized arrays, so one measurement costs
+    // real interpreter time
+    let mut src = String::from("void main() {\n    int n = 4096;\n    double a[n]; double b[n]; double c[n];\n    seed_fill(a, 7);\n");
+    for k in 0..12 {
+        let (dst, lhs) = match k % 3 {
+            0 => ("b", "a"),
+            1 => ("c", "b"),
+            _ => ("a", "c"),
+        };
+        src.push_str(&format!(
+            "    for (int i = 0; i < n; i++) {{ {dst}[i] = {lhs}[i] * 1.{k} + {k}.0; }}\n"
+        ));
+    }
+    src.push_str("    double s = 0.0;\n    for (int i = 0; i < n; i++) { s += a[i] + b[i] + c[i]; }\n    printf(\"%f\\n\", s);\n}\n");
+
+    let p = parse(&src, Lang::C, "engine_bench").unwrap();
+    let a = analysis::analyze(&p);
+    let len = a.gene_loops().len();
+    assert!(len >= 8, "workload must expose >= 8 gene loops, got {len}");
+    let measurer = Measurer::new(&p, VmConfig::default(), 1e-3).unwrap();
+    let plan = |g: &[bool]| analysis::build_plan(&a, g, false);
+    let cfg = Config::fast_sim();
+
+    // a GA-generation-like batch: 64 distinct random genes
+    let mut rng = Rng::new(0xBE_EF);
+    let mut genes: Vec<Vec<bool>> = Vec::new();
+    while genes.len() < 64 {
+        let g: Vec<bool> = (0..len).map(|_| rng.bool()).collect();
+        if !genes.contains(&g) {
+            genes.push(g);
+        }
+    }
+
+    let mut rows = Vec::new();
+    let mut results = Vec::new();
+    let mut baseline: Option<Vec<f64>> = None;
+    let mut serial_eps = 0.0;
+    for workers in [1usize, 4, 8] {
+        let fp = engine::fingerprint(&p, &cfg, "loops", &[]);
+        let factory = DeviceFactory::new(envadapt::device::CostModel::default(), false);
+        let mut dev = factory.build();
+        let mut eng = MeasurementEngine::new(
+            &p,
+            &measurer,
+            factory,
+            &plan,
+            workers,
+            TargetKind::Gpu,
+            fp,
+            engine::shared(MeasurementCache::in_memory()),
+            &mut dev,
+        );
+        let t0 = std::time::Instant::now();
+        let times = eng.measure_batch(&genes);
+        let wall = t0.elapsed().as_secs_f64();
+        match &baseline {
+            None => baseline = Some(times),
+            Some(b) => assert_eq!(b, &times, "worker count changed modeled times"),
+        }
+        let eps = genes.len() as f64 / wall;
+        if workers == 1 {
+            serial_eps = eps;
+        }
+        rows.push(vec![
+            workers.to_string(),
+            format!("{:.3}", wall * 1e3),
+            format!("{eps:.1}"),
+            format!("{:.2}x", eps / serial_eps),
+        ]);
+        results.push((workers, wall, eps));
+    }
+    println!(
+        "{}",
+        markdown_table(&["workers", "batch wall ms", "evals/sec", "speedup vs 1"], &rows)
+    );
+    println!(
+        "(host parallelism: {}; ≥ 2x at 8 workers requires ≥ 2 free cores)\n",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+
+    // record the baseline for regression tracking
+    let mut arr = Vec::new();
+    for (workers, wall, eps) in &results {
+        arr.push(
+            Json::obj()
+                .set("workers", *workers)
+                .set("batch_wall_s", *wall)
+                .set("evals_per_sec", *eps),
+        );
+    }
+    let j = Json::obj()
+        .set("bench", "measurement_throughput")
+        .set("gene_loops", len)
+        .set("batch_size", genes.len())
+        .set(
+            "host_parallelism",
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        )
+        .set("results", Json::Arr(arr));
+    if let Err(e) = std::fs::write("BENCH_engine.json", j.to_pretty() + "\n") {
+        eprintln!("warning: could not write BENCH_engine.json: {e}");
     }
 }
 
@@ -244,7 +364,7 @@ fn e6_search_strategies() {
         measurer.measure(&p, &plan, &mut dev).ga_time()
     };
 
-    let exhaustive = ga::exhaustive(len, &mut measure);
+    let exhaustive = ga::exhaustive(len, &mut measure).expect("mm gene space is small");
     let ga_r = ga::optimize(
         len,
         &GaConfig { population: 12, generations: 12, stagnation_stop: None, ..Default::default() },

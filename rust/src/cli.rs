@@ -3,6 +3,7 @@
 //! ```text
 //! envadapt offload <file|app> [--lang c|python|java] [--pop N] [--gens N]
 //!                  [--target gpu|many-core|fpga|adaptive]
+//!                  [--workers N] [--cache FILE]
 //!                  [--naive-transfers] [--no-funcblock] [--sim] [--json]
 //!                  [--emit-annotated]
 //! envadapt analyze <file|app> [--lang ...]       loop table + candidates
@@ -40,6 +41,10 @@ struct Opts {
     lang: Option<Lang>,
     pop: Option<usize>,
     gens: Option<usize>,
+    /// measurement-engine pool size (device workers per candidate batch)
+    workers: Option<usize>,
+    /// persistent measurement-cache file
+    cache: Option<std::path::PathBuf>,
     naive: bool,
     no_funcblock: bool,
     sim: bool,
@@ -54,6 +59,8 @@ fn parse_opts(rest: &[String]) -> anyhow::Result<Opts> {
         lang: None,
         pop: None,
         gens: None,
+        workers: None,
+        cache: None,
         naive: false,
         no_funcblock: false,
         sim: false,
@@ -81,6 +88,17 @@ fn parse_opts(rest: &[String]) -> anyhow::Result<Opts> {
             "--gens" => {
                 i += 1;
                 o.gens = Some(rest.get(i).and_then(|v| v.parse().ok()).ok_or_else(|| anyhow::anyhow!("--gens needs a number"))?);
+            }
+            "--workers" => {
+                i += 1;
+                let n: usize = rest.get(i).and_then(|v| v.parse().ok()).ok_or_else(|| anyhow::anyhow!("--workers needs a number"))?;
+                anyhow::ensure!(n >= 1, "--workers must be at least 1");
+                o.workers = Some(n);
+            }
+            "--cache" => {
+                i += 1;
+                let v = rest.get(i).ok_or_else(|| anyhow::anyhow!("--cache needs a file path"))?;
+                o.cache = Some(std::path::PathBuf::from(v));
             }
             "--target" => {
                 i += 1;
@@ -134,6 +152,10 @@ fn config_from(opts: &Opts) -> Config {
     if let Some(g) = opts.gens {
         cfg.ga.generations = g;
     }
+    if let Some(w) = opts.workers {
+        cfg.workers = w;
+    }
+    cfg.cache_path = opts.cache.clone();
     cfg.naive_transfers = opts.naive;
     cfg.funcblock.enabled = !opts.no_funcblock;
     cfg
@@ -161,6 +183,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     return Ok(());
                 }
                 let mut tcfg = cfg.clone();
+                tcfg.target = targets[0];
                 tcfg.cost = targets[0].cost_model();
                 tcfg.use_pjrt = cfg.use_pjrt && targets[0] == crate::device::TargetKind::Gpu;
                 let mut c = Coordinator::new(tcfg);
@@ -168,11 +191,19 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 println!("[{}] {}", targets[0], r.summary());
                 return Ok(());
             }
+            let workers = cfg.effective_workers();
             let mut c = Coordinator::new(cfg);
-            eprintln!(
-                "device: {}",
-                if c.device_is_pjrt() { "PJRT (real artifacts)" } else { "simulated cost model" }
-            );
+            if c.device_is_pjrt() {
+                // the measurement pool is simulated-only; PJRT measures
+                // serially on the warm device (see engine.rs)
+                eprintln!("device: PJRT (real artifacts) (serial measurement)");
+            } else {
+                eprintln!(
+                    "device: simulated cost model ({} measurement worker{})",
+                    workers,
+                    if workers == 1 { "" } else { "s" }
+                );
+            }
             let r = c.offload_source(&code, lang, &name)?;
             if opts.json {
                 println!("{}", r.to_json().to_pretty());
@@ -182,6 +213,9 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     for &i in &fb.chosen {
                         println!("  func-block: {}", fb.candidates[i].description);
                     }
+                }
+                if r.cache_hits > 0 {
+                    println!("  measurement cache: {} of {} answered without a device", r.cache_hits, r.total_measurements);
                 }
                 if let Some(ga) = &r.ga {
                     println!(
@@ -280,12 +314,21 @@ fn print_help() {
 USAGE:
   envadapt offload <file|app> [--lang c|python|java] [--pop N] [--gens N]
                    [--target gpu|many-core|fpga|adaptive]
+                   [--workers N] [--cache FILE]
                    [--naive-transfers] [--no-funcblock] [--sim] [--json]
                    [--emit-annotated]
   envadapt analyze <file|app> [--lang ...]
   envadapt run <file|app> [--lang ...]
   envadapt workloads
   envadapt artifacts
+
+OPTIONS:
+  --workers N   device workers measuring each candidate batch concurrently
+                (default: host parallelism, capped at 8; results are
+                bit-identical at any worker count; PJRT devices always
+                measure serially — the pool is simulated-only)
+  --cache FILE  persistent measurement cache: known (program, target,
+                pattern) measurements are reused across runs
 
 Built-in workloads: mm fourier stencil blackscholes mixed smallloops"
     );

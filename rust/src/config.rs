@@ -5,9 +5,10 @@
 //! the CLI share defaults, mirroring how the paper's implementation keeps
 //! one configuration for its Perl/Python driver.
 
-use crate::device::CostModel;
+use crate::device::{CostModel, TargetKind};
 use crate::ga::GaConfig;
 use crate::vm::VmConfig;
+use std::path::PathBuf;
 
 /// Function-block offload policy.
 #[derive(Debug, Clone)]
@@ -49,10 +50,20 @@ pub struct Config {
     pub naive_transfers: bool,
     /// use the PJRT-backed device (false = cost model only)
     pub use_pjrt: bool,
+    /// measurement-engine pool size: how many device workers evaluate one
+    /// GA generation's candidate batch concurrently (0 is treated as 1)
+    pub workers: usize,
+    /// migration target this configuration measures for — part of the
+    /// measurement-cache key, set by the adaptive loop and the CLI
+    pub target: TargetKind,
+    /// persistent measurement-cache file; `None` = in-memory only
+    pub cache_path: Option<PathBuf>,
 }
 
 impl Config {
-    /// Standard configuration: PJRT numerics, hoisted transfers.
+    /// Standard configuration: PJRT numerics, hoisted transfers, one
+    /// measurement worker per available core (capped — GA batches are
+    /// population-sized, so more workers than genes is waste).
     pub fn standard() -> Config {
         Config {
             ga: GaConfig::default(),
@@ -62,11 +73,15 @@ impl Config {
             tolerance: 2e-3,
             naive_transfers: false,
             use_pjrt: true,
+            workers: default_workers(),
+            target: TargetKind::Gpu,
+            cache_path: None,
         }
     }
 
     /// Deterministic, dependency-free configuration for unit tests and
-    /// benches: simulated device, smaller GA.
+    /// benches: simulated device, smaller GA. (Search results are
+    /// worker-count-invariant, so the inherited pool size is fine.)
     pub fn fast_sim() -> Config {
         Config {
             ga: GaConfig { population: 8, generations: 10, ..Default::default() },
@@ -74,6 +89,16 @@ impl Config {
             ..Config::standard()
         }
     }
+
+    /// Pool size with the zero-default of `derive(Default)` sanitized.
+    pub fn effective_workers(&self) -> usize {
+        self.workers.max(1)
+    }
+}
+
+/// Default measurement pool size: the host's parallelism, capped at 8.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
 }
 
 #[cfg(test)]
@@ -94,5 +119,16 @@ mod tests {
         let c = Config::fast_sim();
         assert!(!c.use_pjrt);
         assert!(c.ga.population <= 8);
+    }
+
+    #[test]
+    fn workers_default_sane_and_zero_sanitized() {
+        let c = Config::standard();
+        assert!((1..=8).contains(&c.workers));
+        let mut z = Config::standard();
+        z.workers = 0;
+        assert_eq!(z.effective_workers(), 1);
+        // derive(Default) leaves workers at 0; effective_workers covers it
+        assert_eq!(Config::default().effective_workers(), 1);
     }
 }

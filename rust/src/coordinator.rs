@@ -19,7 +19,8 @@
 
 use crate::analysis::{self, ProgramAnalysis};
 use crate::config::Config;
-use crate::device::GpuDevice;
+use crate::device::{DeviceFactory, DeviceStats, GpuDevice};
+use crate::engine::{self, MeasurementEngine, SharedCache};
 use crate::frontend::{self, render};
 use crate::funcblock::{self, Candidate, FuncBlockReport};
 use crate::ga::{self, GaResult};
@@ -52,6 +53,12 @@ pub struct OffloadReport {
     pub annotated_source: String,
     /// total distinct measurements spent (func-block trials + GA)
     pub total_measurements: usize,
+    /// measurements answered from the shared/persistent cache (subset of
+    /// `total_measurements` that cost no device time)
+    pub cache_hits: usize,
+    /// merged device counters across every search-phase measurement
+    /// (engine pool workers + serial device)
+    pub measure_stats: DeviceStats,
     /// wall seconds the whole offload search took
     pub search_wall_s: f64,
 }
@@ -74,6 +81,8 @@ impl OffloadReport {
             .set("gene", gene)
             .set("gene_loops", Json::Arr(self.gene_loops.iter().map(|&l| Json::Int(l as i64)).collect()))
             .set("measurements", self.total_measurements)
+            .set("cache_hits", self.cache_hits as i64)
+            .set("measure_launches", self.measure_stats.launches as i64)
             .set("search_wall_s", self.search_wall_s)
             .set("gpu_regions", self.final_plan.regions.len())
             .set("gpu_lib_calls", self.final_plan.gpu_calls.len());
@@ -109,22 +118,35 @@ impl OffloadReport {
     }
 }
 
-/// The coordinator: owns the device (PJRT executable cache persists across
-/// trials and applications) and the pattern DB.
+/// The coordinator: owns a long-lived device (serial measurement + final
+/// verification; its PJRT executable cache persists across trials and
+/// applications), the shared measurement cache, and the pattern DB. The
+/// measurement engines it builds per phase hand pool workers a
+/// [`DeviceFactory`] reflecting the backend this device actually runs.
 pub struct Coordinator {
     pub cfg: Config,
     pub db: PatternDb,
     dev: GpuDevice,
+    cache: SharedCache,
 }
 
 impl Coordinator {
     pub fn new(cfg: Config) -> Coordinator {
-        let dev = if cfg.use_pjrt {
-            GpuDevice::with_runtime(cfg.cost.clone())
-        } else {
-            GpuDevice::simulated(cfg.cost.clone())
-        };
-        Coordinator { cfg, db: PatternDb::builtin(), dev }
+        let cache = engine::cache_for(&cfg);
+        Coordinator::with_cache(cfg, cache)
+    }
+
+    /// Coordinator over an existing shared measurement cache — this is how
+    /// the adaptive per-target runs and the batch front end's workers
+    /// avoid re-measuring patterns another coordinator already tried.
+    pub fn with_cache(cfg: Config, cache: SharedCache) -> Coordinator {
+        let dev = DeviceFactory::new(cfg.cost.clone(), cfg.use_pjrt).build();
+        Coordinator { cfg, db: PatternDb::builtin(), dev, cache }
+    }
+
+    /// Handle on the shared measurement cache (clone to share).
+    pub fn cache(&self) -> SharedCache {
+        self.cache.clone()
     }
 
     /// Whether library kernels run through real PJRT artifacts.
@@ -138,12 +160,34 @@ impl Coordinator {
         self.offload_program(&prog)
     }
 
-    /// The full Fig. 1 flow over a parsed program.
+    /// The full Fig. 1 flow over a parsed program. Every search-phase
+    /// measurement goes through a [`MeasurementEngine`]: batched over the
+    /// device worker pool (`cfg.workers`) and memoized in the shared
+    /// cross-run cache.
     pub fn offload_program(&mut self, prog: &Program) -> Result<OffloadReport> {
         let t_start = std::time::Instant::now();
         let analysis = analysis::analyze(prog);
         let measurer = Measurer::new(prog, self.cfg.vm.clone(), self.cfg.tolerance)?;
+        let workers = self.cfg.effective_workers();
         let mut total_measurements = 0usize;
+        let mut cache_hits = 0usize;
+        let mut measure_stats = DeviceStats::default();
+
+        // Cache keys must reflect the numerics that actually ran:
+        // `with_runtime` silently falls back to simulation when PJRT or
+        // the artifacts are unavailable, and a later PJRT-capable run must
+        // not reuse times recorded by the fallback (f32 divergence would
+        // go undetected). The artifact inventory is folded in too, since
+        // library calls fall back per-kernel when an artifact is missing.
+        let mut fp_cfg = self.cfg.clone();
+        fp_cfg.use_pjrt = self.dev.is_pjrt();
+        let artifact_inventory: Vec<String> = self.dev.available_artifacts().to_vec();
+        let art_refs: Vec<&str> = artifact_inventory.iter().map(|s| s.as_str()).collect();
+        // Engines pool only for simulated backends; hand them a factory
+        // reflecting the probed backend, so a PJRT request that fell back
+        // to simulation still gets the worker pool instead of a silently
+        // serial search.
+        let engine_factory = DeviceFactory::new(self.cfg.cost.clone(), fp_cfg.use_pjrt);
 
         // ---- phase 1: function blocks (first, per §4.2) ------------------
         let mut fb_report: Option<FuncBlockReport> = None;
@@ -152,16 +196,33 @@ impl Coordinator {
             let candidates =
                 funcblock::find_candidates(prog, &analysis, &self.db, &self.cfg.funcblock);
             if !candidates.is_empty() {
-                let report = funcblock::trial_combinations(
+                let fb_plan =
+                    funcblock::mask_plan(&analysis, &candidates, self.cfg.naive_transfers);
+                // mask bit i means candidates[i], and the candidate list
+                // depends on the clone threshold / pattern DB — fold it
+                // into the fingerprint so differently-discovered lists
+                // never share cache entries
+                let cand_context: Vec<String> =
+                    candidates.iter().map(|c| c.description.clone()).collect();
+                let mut cand_refs: Vec<&str> =
+                    cand_context.iter().map(|s| s.as_str()).collect();
+                cand_refs.extend(art_refs.iter().copied());
+                let mut fb_engine = MeasurementEngine::new(
                     prog,
-                    &analysis,
-                    &candidates,
                     &measurer,
+                    engine_factory.clone(),
+                    &fb_plan,
+                    workers,
+                    self.cfg.target,
+                    engine::fingerprint(prog, &fp_cfg, "funcblock", &cand_refs),
+                    self.cache.clone(),
                     &mut self.dev,
-                    &self.cfg.funcblock,
-                    self.cfg.naive_transfers,
                 );
+                let report =
+                    funcblock::trial_combinations(&candidates, &mut fb_engine, &self.cfg.funcblock);
                 total_measurements += report.trials.len();
+                cache_hits += fb_engine.cache_hits();
+                measure_stats.merge(&fb_engine.stats());
                 chosen_candidates =
                     report.chosen.iter().map(|&i| report.candidates[i].clone()).collect();
                 fb_report = Some(report);
@@ -176,6 +237,7 @@ impl Coordinator {
             .filter(|id| !excluded.contains(id))
             .collect();
 
+        let naive_transfers = self.cfg.naive_transfers;
         let chosen_refs: Vec<&Candidate> = chosen_candidates.iter().collect();
         let build_full_plan = |gene: &[bool]| -> ExecPlan {
             // expand the reduced gene back over all parallelizable loops
@@ -185,20 +247,33 @@ impl Coordinator {
                 let pos = all.iter().position(|x| x == id).unwrap();
                 full[pos] = gene[k];
             }
-            let mut plan = analysis::build_plan(&analysis, &full, self.cfg.naive_transfers);
+            let mut plan = analysis::build_plan(&analysis, &full, naive_transfers);
             funcblock::apply(&mut plan, &analysis, &chosen_refs);
             plan
         };
 
-        let dev = &mut self.dev;
-        let mut ga_measure_count = 0usize;
-        let ga_result: GaResult = ga::optimize(gene_loops.len(), &self.cfg.ga, |gene| {
-            let plan = build_full_plan(gene);
-            dev.reset();
-            ga_measure_count += 1;
-            measurer.measure(prog, &plan, dev).ga_time()
-        });
+        // the gene→plan mapping depends on which function blocks were
+        // chosen, so that context is folded into the cache fingerprint
+        let fb_context: Vec<String> =
+            chosen_candidates.iter().map(|c| c.description.clone()).collect();
+        let mut fb_context_refs: Vec<&str> = fb_context.iter().map(|s| s.as_str()).collect();
+        fb_context_refs.extend(art_refs.iter().copied());
+        let mut ga_engine = MeasurementEngine::new(
+            prog,
+            &measurer,
+            engine_factory.clone(),
+            &build_full_plan,
+            workers,
+            self.cfg.target,
+            engine::fingerprint(prog, &fp_cfg, "loops", &fb_context_refs),
+            self.cache.clone(),
+            &mut self.dev,
+        );
+        let ga_result: GaResult = ga::optimize(gene_loops.len(), &self.cfg.ga, &mut ga_engine);
         total_measurements += ga_result.evaluations;
+        cache_hits += ga_engine.cache_hits();
+        measure_stats.merge(&ga_engine.stats());
+        drop(ga_engine);
 
         // ---- phase 3: final selection + verification ---------------------
         let best_gene = ga_result.best_gene.clone();
@@ -225,6 +300,13 @@ impl Coordinator {
         }
         let annotated_source = render::render(prog, &directives);
 
+        // persist the measurement cache so the next run starts warm
+        if self.cfg.cache_path.is_some() {
+            if let Err(e) = self.cache.lock().unwrap().save() {
+                eprintln!("warning: measurement cache not saved: {e}");
+            }
+        }
+
         Ok(OffloadReport {
             app: prog.name.clone(),
             lang: prog.lang,
@@ -238,6 +320,8 @@ impl Coordinator {
             final_measurement,
             annotated_source,
             total_measurements,
+            cache_hits,
+            measure_stats,
             search_wall_s: t_start.elapsed().as_secs_f64(),
         })
     }
@@ -297,12 +381,16 @@ pub fn offload_adaptive(
     targets: &[crate::device::TargetKind],
 ) -> Result<AdaptiveReport> {
     anyhow::ensure!(!targets.is_empty(), "need at least one target");
+    // one measurement cache across all targets: re-running a target (or
+    // the whole adaptive search) answers known patterns without a device
+    let cache = engine::cache_for(cfg);
     let mut per_target = Vec::new();
     for &t in targets {
         let mut tcfg = cfg.clone();
+        tcfg.target = t;
         tcfg.cost = t.cost_model();
         tcfg.use_pjrt = cfg.use_pjrt && t == crate::device::TargetKind::Gpu;
-        let mut c = Coordinator::new(tcfg);
+        let mut c = Coordinator::with_cache(tcfg, cache.clone());
         per_target.push((t, c.offload_source(code, lang, name)?));
     }
     let chosen = per_target
@@ -334,8 +422,9 @@ impl BatchRequest {
 
 /// Serve a batch of offload requests over `workers` OS threads, each with
 /// its own coordinator (PJRT clients are not `Send`, so every worker owns
-/// its device; executable caches are per-worker). Result order matches
-/// request order.
+/// its device; executable caches are per-worker). All workers share one
+/// measurement cache, so repeated requests for the same program answer
+/// from memory. Result order matches request order.
 pub fn offload_batch(
     requests: &[BatchRequest],
     workers: usize,
@@ -344,13 +433,22 @@ pub fn offload_batch(
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Mutex;
     let workers = workers.clamp(1, requests.len().max(1));
+    // split the measurement-worker budget across request workers so the
+    // two pool levels don't multiply into workers × cfg.workers threads
+    let mut wcfg = cfg.clone();
+    wcfg.workers = (cfg.effective_workers() / workers).max(1);
+    let cache = engine::cache_for(cfg);
     let next = AtomicUsize::new(0);
     let results: Mutex<Vec<Option<Result<OffloadReport>>>> =
         Mutex::new((0..requests.len()).map(|_| None).collect());
+    let wcfg = &wcfg;
     std::thread::scope(|scope| {
         for _ in 0..workers {
-            scope.spawn(|| {
-                let mut c = Coordinator::new(cfg.clone());
+            let cache = cache.clone();
+            let next = &next;
+            let results = &results;
+            scope.spawn(move || {
+                let mut c = Coordinator::with_cache(wcfg.clone(), cache);
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= requests.len() {

@@ -97,8 +97,9 @@ impl CostModel {
 }
 
 /// The migration targets of the environment-adaptive concept (Fig. 1).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum TargetKind {
+    #[default]
     Gpu,
     ManyCore,
     Fpga,
@@ -155,6 +156,60 @@ pub struct DeviceStats {
     pub lib_wall_s: f64,
 }
 
+impl DeviceStats {
+    /// Field-wise accumulation — the measurement engine merges each pool
+    /// worker's per-device counters into one aggregate per search phase.
+    pub fn merge(&mut self, other: &DeviceStats) {
+        self.h2d_count += other.h2d_count;
+        self.h2d_bytes += other.h2d_bytes;
+        self.d2h_count += other.d2h_count;
+        self.d2h_bytes += other.d2h_bytes;
+        self.launches += other.launches;
+        self.lib_calls += other.lib_calls;
+        self.simulated_lib_calls += other.simulated_lib_calls;
+        self.lib_wall_s += other.lib_wall_s;
+    }
+}
+
+/// Recipe for building per-worker [`GpuDevice`] instances.
+///
+/// PJRT clients are not `Send`, so a device can never migrate between the
+/// measurement engine's pool threads; instead each worker *builds* its own
+/// device from this factory inside its thread. The factory itself is plain
+/// data (`Send + Sync`), which is what lets a `std::thread::scope` worker
+/// pool share one by reference.
+#[derive(Debug, Clone)]
+pub struct DeviceFactory {
+    pub model: CostModel,
+    pub use_pjrt: bool,
+}
+
+impl DeviceFactory {
+    pub fn new(model: CostModel, use_pjrt: bool) -> DeviceFactory {
+        DeviceFactory { model, use_pjrt }
+    }
+
+    /// Factory for a [`TargetKind`]'s preset cost model. Only the GPU
+    /// target can execute real PJRT artifacts; other targets always use
+    /// CPU reference numerics with their own cost models.
+    pub fn for_target(target: TargetKind, use_pjrt: bool) -> DeviceFactory {
+        DeviceFactory {
+            model: target.cost_model(),
+            use_pjrt: use_pjrt && target == TargetKind::Gpu,
+        }
+    }
+
+    /// Build a fresh device (fresh stats, fresh executable cache). Called
+    /// once per pool worker, inside the worker's thread.
+    pub fn build(&self) -> GpuDevice {
+        if self.use_pjrt {
+            GpuDevice::with_runtime(self.model.clone())
+        } else {
+            GpuDevice::simulated(self.model.clone())
+        }
+    }
+}
+
 pub struct GpuDevice {
     pub model: CostModel,
     backend: Backend,
@@ -185,6 +240,18 @@ impl GpuDevice {
 
     pub fn is_pjrt(&self) -> bool {
         matches!(self.backend, Backend::Pjrt(_))
+    }
+
+    /// Names of the real AOT artifacts this device can execute (empty when
+    /// simulated), sorted. Library calls fall back to CPU reference
+    /// numerics per-kernel when an artifact is missing, so measured times
+    /// depend on this inventory — the measurement cache folds it into its
+    /// program fingerprint.
+    pub fn available_artifacts(&self) -> &[String] {
+        match &self.backend {
+            Backend::Pjrt(rt) => rt.available(),
+            Backend::Simulated => &[],
+        }
     }
 
     /// Reset per-run accumulators (keep the compiled-executable cache).
@@ -555,5 +622,56 @@ mod tests {
     fn unknown_kernel_is_error() {
         let mut d = GpuDevice::simulated(CostModel::default());
         assert!(d.call_library("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn stats_merge_accumulates_fieldwise() {
+        let mut a = DeviceStats {
+            h2d_count: 1,
+            h2d_bytes: 100,
+            d2h_count: 2,
+            d2h_bytes: 200,
+            launches: 3,
+            lib_calls: 4,
+            simulated_lib_calls: 1,
+            lib_wall_s: 0.5,
+        };
+        let b = DeviceStats {
+            h2d_count: 10,
+            h2d_bytes: 1000,
+            d2h_count: 20,
+            d2h_bytes: 2000,
+            launches: 30,
+            lib_calls: 40,
+            simulated_lib_calls: 2,
+            lib_wall_s: 1.5,
+        };
+        a.merge(&b);
+        assert_eq!(a.h2d_count, 11);
+        assert_eq!(a.h2d_bytes, 1100);
+        assert_eq!(a.d2h_count, 22);
+        assert_eq!(a.d2h_bytes, 2200);
+        assert_eq!(a.launches, 33);
+        assert_eq!(a.lib_calls, 44);
+        assert_eq!(a.simulated_lib_calls, 3);
+        assert!((a.lib_wall_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn factory_builds_independent_devices() {
+        let f = DeviceFactory::new(CostModel::default(), false);
+        let mut d1 = f.build();
+        let d2 = f.build();
+        d1.charge_h2d(1024);
+        assert!(d1.gpu_seconds() > 0.0);
+        assert_eq!(d2.gpu_seconds(), 0.0, "devices must not share accumulators");
+    }
+
+    #[test]
+    fn factory_for_target_gates_pjrt_to_gpu() {
+        assert!(DeviceFactory::for_target(TargetKind::Gpu, true).use_pjrt);
+        assert!(!DeviceFactory::for_target(TargetKind::ManyCore, true).use_pjrt);
+        assert!(!DeviceFactory::for_target(TargetKind::Fpga, true).use_pjrt);
+        assert!(!DeviceFactory::for_target(TargetKind::Gpu, false).use_pjrt);
     }
 }

@@ -18,9 +18,9 @@
 use crate::analysis::ProgramAnalysis;
 use crate::clone::{char_vector_stmt, similarity};
 use crate::config::FuncBlockConfig;
-use crate::device::GpuDevice;
+use crate::engine::MeasurementEngine;
 use crate::ir::*;
-use crate::measure::{Measurement, Measurer};
+use crate::measure::Measurement;
 use crate::patterndb::PatternDb;
 use crate::vm::{ExecPlan, GpuRegion, RegionExec};
 use std::collections::HashSet;
@@ -192,39 +192,59 @@ pub struct FuncBlockReport {
     pub trials: Vec<(u64, f64)>,
 }
 
-/// Measure candidate subsets (the paper's on/off + combination trials) and
-/// keep the fastest. The empty subset (pure CPU) is always included, so the
-/// phase never regresses.
-pub fn trial_combinations(
-    prog: &Program,
-    analysis: &ProgramAnalysis,
-    candidates: &[Candidate],
-    measurer: &Measurer,
-    dev: &mut GpuDevice,
-    cfg: &FuncBlockConfig,
+/// The candidate-subset → plan mapping for [`trial_combinations`]: a mask
+/// gene with one bit per candidate. Shared with the measurement engine's
+/// pool workers, so it is a `Sync` closure over borrowed analysis data —
+/// pass it to [`MeasurementEngine::new`] as the plan builder.
+pub fn mask_plan<'a>(
+    analysis: &'a ProgramAnalysis,
+    candidates: &'a [Candidate],
     naive_transfers: bool,
-) -> FuncBlockReport {
-    let k = candidates.len().min(16);
-    let subset_count = (1usize << k).min(cfg.max_combination_trials.max(1));
-    let mut best_mask = 0u64;
-    let mut best: Option<Measurement> = None;
-    let mut trials = Vec::new();
-    for mask in 0..subset_count as u64 {
-        let chosen: Vec<&Candidate> = (0..k).filter(|i| mask >> i & 1 == 1).map(|i| &candidates[i]).collect();
+) -> impl Fn(&[bool]) -> ExecPlan + Sync + 'a {
+    move |mask: &[bool]| {
+        let chosen: Vec<&Candidate> = mask
+            .iter()
+            .enumerate()
+            .filter(|&(_, &on)| on)
+            .map(|(i, _)| &candidates[i])
+            .collect();
         let mut plan = ExecPlan { naive_transfers, ..Default::default() };
         apply(&mut plan, analysis, &chosen);
-        dev.reset();
-        let m = measurer.measure(prog, &plan, dev);
-        trials.push((mask, m.ga_time()));
-        if best.as_ref().map(|b| m.ga_time() < b.ga_time()).unwrap_or(true) {
-            best_mask = mask;
-            best = Some(m);
+        plan
+    }
+}
+
+/// Measure candidate subsets (the paper's on/off + combination trials) and
+/// keep the fastest. The empty subset (pure CPU) is always included, so the
+/// phase never regresses. All subsets go to the engine as one batch, so
+/// the pool measures them concurrently; the winner is then re-verified on
+/// the engine's serial device to recover its full [`Measurement`].
+///
+/// The engine's plan builder must be [`mask_plan`] over the same
+/// `candidates` slice (same order).
+pub fn trial_combinations(
+    candidates: &[Candidate],
+    engine: &mut MeasurementEngine<'_>,
+    cfg: &FuncBlockConfig,
+) -> FuncBlockReport {
+    let k = candidates.len().min(16);
+    let subset_count = (1u64 << k).min(cfg.max_combination_trials.max(1) as u64);
+    let masks: Vec<Vec<bool>> =
+        (0..subset_count).map(|mask| (0..k).map(|i| mask >> i & 1 == 1).collect()).collect();
+    let times = engine.measure_batch(&masks);
+
+    let mut best_idx = 0usize;
+    for (i, &t) in times.iter().enumerate() {
+        if t < times[best_idx] {
+            best_idx = i;
         }
     }
+    let trials: Vec<(u64, f64)> = times.iter().enumerate().map(|(i, &t)| (i as u64, t)).collect();
+    let best: Measurement = engine.measure_full(&masks[best_idx]);
     FuncBlockReport {
         candidates: candidates.to_vec(),
-        chosen: (0..k).filter(|i| best_mask >> i & 1 == 1).collect(),
-        best: best.expect("at least the empty subset measured"),
+        chosen: (0..k).filter(|i| best_idx as u64 >> i & 1 == 1).collect(),
+        best,
         trials,
     }
 }
@@ -371,6 +391,7 @@ mod tests {
     use crate::analysis;
     use crate::device::CostModel;
     use crate::frontend::parse;
+    use crate::measure::Measurer;
     use crate::vm::VmConfig;
 
     const HANDWRITTEN_MM: &str = r#"
@@ -475,6 +496,28 @@ mod tests {
             .any(|c| matches!(&c.kind, CandidateKind::NameMatch { lib } if lib == "seed_fill")));
     }
 
+    fn trial_engine<'a>(
+        prog: &'a Program,
+        measurer: &'a crate::measure::Measurer,
+        plan: &'a (dyn Fn(&[bool]) -> ExecPlan + Sync),
+        workers: usize,
+        dev: &'a mut crate::device::GpuDevice,
+    ) -> MeasurementEngine<'a> {
+        let cfg = crate::config::Config::fast_sim();
+        let fp = crate::engine::fingerprint(prog, &cfg, "funcblock", &[]);
+        MeasurementEngine::new(
+            prog,
+            measurer,
+            crate::device::DeviceFactory::new(CostModel::default(), false),
+            plan,
+            workers,
+            crate::device::TargetKind::Gpu,
+            fp,
+            crate::engine::shared(crate::engine::MeasurementCache::in_memory()),
+            dev,
+        )
+    }
+
     #[test]
     fn combination_trial_picks_fastest_and_stays_correct() {
         let p = parse(HANDWRITTEN_MM, Lang::C, "t").unwrap();
@@ -484,9 +527,10 @@ mod tests {
         let cands = find_candidates(&p, &a, &db, &cfg);
         assert!(!cands.is_empty());
         let measurer = Measurer::new(&p, VmConfig::default(), 2e-3).unwrap();
-        let mut dev = GpuDevice::simulated(CostModel::default());
-        let report =
-            trial_combinations(&p, &a, &cands, &measurer, &mut dev, &cfg, false);
+        let plan = mask_plan(&a, &cands, false);
+        let mut dev = crate::device::DeviceFactory::new(CostModel::default(), false).build();
+        let mut engine = trial_engine(&p, &measurer, &plan, 2, &mut dev);
+        let report = trial_combinations(&cands, &mut engine, &cfg);
         assert!(report.best.ok);
         // replacing the handwritten nest must beat the interpreted CPU time
         assert!(
@@ -496,6 +540,26 @@ mod tests {
             measurer.baseline_modeled_s()
         );
         assert!(!report.chosen.is_empty(), "GPU replacement should win");
+        assert_eq!(report.trials.len(), 1 << cands.len().min(16).min(6));
+    }
+
+    #[test]
+    fn combination_trial_identical_across_worker_counts() {
+        let p = parse(HANDWRITTEN_MM, Lang::C, "t").unwrap();
+        let a = analysis::analyze(&p);
+        let cfg = FuncBlockConfig::default();
+        let cands = find_candidates(&p, &a, &PatternDb::builtin(), &cfg);
+        let measurer = Measurer::new(&p, VmConfig::default(), 2e-3).unwrap();
+        let plan = mask_plan(&a, &cands, false);
+        let mut d1 = crate::device::DeviceFactory::new(CostModel::default(), false).build();
+        let mut e1 = trial_engine(&p, &measurer, &plan, 1, &mut d1);
+        let r1 = trial_combinations(&cands, &mut e1, &cfg);
+        let mut d4 = crate::device::DeviceFactory::new(CostModel::default(), false).build();
+        let mut e4 = trial_engine(&p, &measurer, &plan, 4, &mut d4);
+        let r4 = trial_combinations(&cands, &mut e4, &cfg);
+        assert_eq!(r1.chosen, r4.chosen);
+        assert_eq!(r1.trials, r4.trials);
+        assert_eq!(r1.best.modeled_s, r4.best.modeled_s);
     }
 
     #[test]

@@ -8,10 +8,69 @@
 //! patterns are cached across generations).
 //!
 //! This module is **language-independent and measurement-agnostic**: the
-//! evaluator closure hides the whole parse→plan→VM→device pipeline.
+//! evaluator hides the whole parse→plan→VM→device pipeline.
+//!
+//! Evaluation is **batched**: each generation hands the evaluator every
+//! distinct not-yet-measured gene at once ([`BatchEvaluator`]), so a
+//! parallel measurement engine ([`crate::engine`]) can fan the batch out
+//! over a device worker pool. Plain `FnMut(&[bool]) -> f64` closures keep
+//! working through a blanket impl that measures serially. Selection is
+//! driven only by the returned time vector (indexed, never by completion
+//! order), so the search result is bit-identical at any worker count.
 
 use crate::util::Rng;
+use anyhow::Result;
 use std::collections::HashMap;
+
+/// A measurement backend for the search strategies: maps a batch of genes
+/// to their execution times (seconds; `f64::INFINITY` = invalid pattern).
+/// The returned vector must line up index-for-index with `genes`.
+///
+/// Callers guarantee the genes within one batch are distinct and
+/// unmeasured; implementations are free to evaluate them concurrently.
+pub trait BatchEvaluator {
+    fn measure_batch(&mut self, genes: &[Vec<bool>]) -> Vec<f64>;
+}
+
+/// Any per-gene closure is a (serial) batch evaluator.
+impl<F: FnMut(&[bool]) -> f64> BatchEvaluator for F {
+    fn measure_batch(&mut self, genes: &[Vec<bool>]) -> Vec<f64> {
+        genes.iter().map(|g| self(g)).collect()
+    }
+}
+
+/// Memoized batch evaluation of one population: measures every distinct
+/// unmemoized gene in a single batch, then reads all times back from the
+/// memo. Batch order is population order (first occurrence), so results
+/// are deterministic regardless of how the evaluator schedules the batch.
+fn eval_population(
+    pop: &[Vec<bool>],
+    memo: &mut HashMap<Vec<bool>, f64>,
+    evals: &mut usize,
+    evaluator: &mut impl BatchEvaluator,
+) -> Vec<f64> {
+    let mut pending: Vec<Vec<bool>> = Vec::new();
+    for g in pop {
+        if !memo.contains_key(g) && !pending.contains(g) {
+            pending.push(g.clone());
+        }
+    }
+    if !pending.is_empty() {
+        let times = evaluator.measure_batch(&pending);
+        assert_eq!(
+            times.len(),
+            pending.len(),
+            "evaluator returned {} times for {} genes",
+            times.len(),
+            pending.len()
+        );
+        *evals += pending.len();
+        for (g, t) in pending.into_iter().zip(times) {
+            memo.insert(g, t);
+        }
+    }
+    pop.iter().map(|g| memo[g]).collect()
+}
 
 /// GA hyper-parameters (defaults follow [29]'s scale: small populations,
 /// tens of generations).
@@ -70,27 +129,18 @@ pub struct GaResult {
     pub evaluations: usize,
 }
 
-/// Run the GA. `measure` returns the candidate's execution time in seconds
-/// (`f64::INFINITY` for invalid/divergent candidates). With `len == 0` the
-/// CPU-only gene is returned immediately.
-pub fn optimize(len: usize, cfg: &GaConfig, mut measure: impl FnMut(&[bool]) -> f64) -> GaResult {
+/// Run the GA. The evaluator returns each candidate's execution time in
+/// seconds (`f64::INFINITY` for invalid/divergent candidates). With
+/// `len == 0` the CPU-only gene is returned immediately.
+pub fn optimize(len: usize, cfg: &GaConfig, mut evaluator: impl BatchEvaluator) -> GaResult {
     let mut memo: HashMap<Vec<bool>, f64> = HashMap::new();
     let mut evals = 0usize;
-    let mut eval = |g: &[bool], memo: &mut HashMap<Vec<bool>, f64>, evals: &mut usize| -> f64 {
-        if let Some(&t) = memo.get(g) {
-            return t;
-        }
-        let t = measure(g);
-        memo.insert(g.to_vec(), t);
-        *evals += 1;
-        t
-    };
 
     if len == 0 {
-        let g = vec![];
-        let t = eval(&g, &mut memo, &mut evals);
+        let pop = vec![vec![]];
+        let t = eval_population(&pop, &mut memo, &mut evals, &mut evaluator)[0];
         return GaResult {
-            best_gene: g,
+            best_gene: vec![],
             best_time: t,
             history: vec![GenStats { generation: 0, best_time: t, mean_time: t, evaluations: 1 }],
             evaluations: evals,
@@ -114,8 +164,8 @@ pub fn optimize(len: usize, cfg: &GaConfig, mut measure: impl FnMut(&[bool]) -> 
     let mut stale = 0usize;
 
     for generation in 0..cfg.generations {
-        // measure population
-        let times: Vec<f64> = pop.iter().map(|g| eval(g, &mut memo, &mut evals)).collect();
+        // measure the population: all distinct new genes in one batch
+        let times = eval_population(&pop, &mut memo, &mut evals, &mut evaluator);
         // track best
         let mut improved = false;
         for (g, &t) in pop.iter().zip(&times) {
@@ -196,51 +246,83 @@ pub fn optimize(len: usize, cfg: &GaConfig, mut measure: impl FnMut(&[bool]) -> 
     GaResult { best_gene, best_time, history, evaluations: evals }
 }
 
-/// Exhaustive search baseline (E6): measure every gene. Only sane for
-/// small `len`; panics above 20 bits.
-pub fn exhaustive(len: usize, mut measure: impl FnMut(&[bool]) -> f64) -> GaResult {
-    assert!(len <= 20, "exhaustive search over 2^{len} genes is not sane");
+/// Hard cap for [`exhaustive`]: 2^20 ≈ 1M measurements is already far
+/// beyond any sane verification budget.
+pub const EXHAUSTIVE_MAX_BITS: usize = 20;
+
+/// Exhaustive search baseline (E6): measure every gene, batched in chunks
+/// so a parallel evaluator can overlap them. Errors (instead of silently
+/// wrapping `1usize << len` or panicking) when the gene space is too
+/// large: `len >= 64` would overflow the pattern counter outright, and
+/// anything above [`EXHAUSTIVE_MAX_BITS`] is an absurd measurement budget.
+pub fn exhaustive(len: usize, mut evaluator: impl BatchEvaluator) -> Result<GaResult> {
+    anyhow::ensure!(
+        len < 64,
+        "exhaustive search over a {len}-bit gene overflows the 2^{len} pattern count on this \
+         platform; use ga::optimize for large gene spaces"
+    );
+    anyhow::ensure!(
+        len <= EXHAUSTIVE_MAX_BITS,
+        "exhaustive search over 2^{len} genes is not sane (> {} measurements); \
+         use ga::optimize",
+        1u64 << EXHAUSTIVE_MAX_BITS
+    );
+    const CHUNK: usize = 4096;
+    let total = 1usize << len;
     let mut best_gene = vec![false; len];
     let mut best_time = f64::INFINITY;
-    let total = 1usize << len;
-    for bits in 0..total {
-        let g: Vec<bool> = (0..len).map(|k| bits >> k & 1 == 1).collect();
-        let t = measure(&g);
-        if t < best_time {
-            best_time = t;
-            best_gene = g;
+    let mut bits = 0usize;
+    while bits < total {
+        let n = CHUNK.min(total - bits);
+        let genes: Vec<Vec<bool>> =
+            (bits..bits + n).map(|b| (0..len).map(|k| b >> k & 1 == 1).collect()).collect();
+        let times = evaluator.measure_batch(&genes);
+        assert_eq!(times.len(), genes.len(), "evaluator must return one time per gene");
+        for (g, t) in genes.into_iter().zip(times) {
+            if t < best_time {
+                best_time = t;
+                best_gene = g;
+            }
         }
+        bits += n;
     }
-    GaResult { best_gene, best_time, history: vec![], evaluations: total }
+    Ok(GaResult { best_gene, best_time, history: vec![], evaluations: total })
 }
 
-/// Random-search baseline (E6): `budget` random genes (deduplicated).
+/// Random-search baseline (E6): `budget` random genes (deduplicated), all
+/// distinct samples measured in one batch. History is replayed in sample
+/// order, so the result is identical to the serial implementation.
 pub fn random_search(
     len: usize,
     budget: usize,
     seed: u64,
-    mut measure: impl FnMut(&[bool]) -> f64,
+    mut evaluator: impl BatchEvaluator,
 ) -> GaResult {
     let mut rng = Rng::new(seed);
+    let samples: Vec<Vec<bool>> =
+        (0..budget).map(|_| (0..len).map(|_| rng.bool()).collect()).collect();
     let mut memo: HashMap<Vec<bool>, f64> = HashMap::new();
+    let mut evals = 0usize;
+    let times_by_sample = eval_population(&samples, &mut memo, &mut evals, &mut evaluator);
+
     let mut best_gene = vec![false; len];
     let mut best_time = f64::INFINITY;
     let mut history = Vec::new();
-    for i in 0..budget {
-        let g: Vec<bool> = (0..len).map(|_| rng.bool()).collect();
-        let t = *memo.entry(g.clone()).or_insert_with(|| measure(&g));
+    let mut seen_set: std::collections::HashSet<&[bool]> = std::collections::HashSet::new();
+    for (i, (g, &t)) in samples.iter().zip(&times_by_sample).enumerate() {
+        seen_set.insert(g.as_slice());
         if t < best_time {
             best_time = t;
-            best_gene = g;
+            best_gene = g.clone();
         }
         history.push(GenStats {
             generation: i,
             best_time,
             mean_time: best_time,
-            evaluations: memo.len(),
+            evaluations: seen_set.len(),
         });
     }
-    GaResult { best_gene, best_time, history, evaluations: memo.len() }
+    GaResult { best_gene, best_time, history, evaluations: evals }
 }
 
 #[cfg(test)]
@@ -345,14 +427,84 @@ mod tests {
     #[test]
     fn exhaustive_finds_global_optimum() {
         let target = vec![true, false, true, false];
-        let r = exhaustive(4, toy_measure(&target, None));
+        let r = exhaustive(4, toy_measure(&target, None)).unwrap();
         assert_eq!(r.best_gene, target);
         assert_eq!(r.evaluations, 16);
+    }
+
+    #[test]
+    fn exhaustive_rejects_oversized_gene_spaces() {
+        // ≥ 64 bits would overflow `1usize << len`; must error, not wrap
+        let e = exhaustive(64, |_: &[bool]| 1.0).unwrap_err();
+        assert!(e.to_string().contains("overflow"), "{e}");
+        let e = exhaustive(200, |_: &[bool]| 1.0).unwrap_err();
+        assert!(e.to_string().contains("overflow"), "{e}");
+        // beyond the sanity budget but below overflow: clear message too
+        let e = exhaustive(EXHAUSTIVE_MAX_BITS + 1, |_: &[bool]| 1.0).unwrap_err();
+        assert!(e.to_string().contains("not sane"), "{e}");
     }
 
     #[test]
     fn random_search_dedupes() {
         let r = random_search(3, 100, 7, |_: &[bool]| 1.0);
         assert!(r.evaluations <= 8);
+        // history still has one entry per sample, with a monotone best
+        assert_eq!(r.history.len(), 100);
+        for w in r.history.windows(2) {
+            assert!(w[1].best_time <= w[0].best_time);
+            assert!(w[1].evaluations >= w[0].evaluations);
+        }
+    }
+
+    /// Batch evaluator that records every batch size it is handed.
+    struct Recording<'a, F> {
+        inner: F,
+        batches: &'a mut Vec<usize>,
+    }
+
+    impl<F: FnMut(&[bool]) -> f64> BatchEvaluator for Recording<'_, F> {
+        fn measure_batch(&mut self, genes: &[Vec<bool>]) -> Vec<f64> {
+            self.batches.push(genes.len());
+            genes.iter().map(|g| (self.inner)(g)).collect()
+        }
+    }
+
+    #[test]
+    fn batched_evaluation_matches_serial_closure() {
+        let target = vec![true, false, true, true, false, false, true, false];
+        let cfg = GaConfig { generations: 25, stagnation_stop: None, ..Default::default() };
+        let serial = optimize(8, &cfg, toy_measure(&target, None));
+        let mut batches = Vec::new();
+        let rec = Recording { inner: toy_measure(&target, None), batches: &mut batches };
+        let batched = optimize(8, &cfg, rec);
+        assert_eq!(serial.best_gene, batched.best_gene);
+        assert_eq!(serial.best_time, batched.best_time);
+        assert_eq!(serial.evaluations, batched.evaluations);
+        assert_eq!(serial.history.len(), batched.history.len());
+        for (a, b) in serial.history.iter().zip(&batched.history) {
+            assert_eq!(a.best_time, b.best_time);
+            assert_eq!(a.mean_time, b.mean_time);
+            assert_eq!(a.evaluations, b.evaluations);
+        }
+        // generations really do hand over multi-gene batches
+        assert!(batches.iter().any(|&n| n > 1), "batches: {batches:?}");
+        assert_eq!(batches.iter().sum::<usize>(), batched.evaluations);
+    }
+
+    #[test]
+    fn batches_contain_only_distinct_unmeasured_genes() {
+        let mut all: Vec<Vec<bool>> = Vec::new();
+        struct Collect<'a>(&'a mut Vec<Vec<bool>>);
+        impl BatchEvaluator for Collect<'_> {
+            fn measure_batch(&mut self, genes: &[Vec<bool>]) -> Vec<f64> {
+                self.0.extend(genes.iter().cloned());
+                genes.iter().map(|g| g.iter().filter(|&&b| b).count() as f64 + 1.0).collect()
+            }
+        }
+        let _ = optimize(6, &GaConfig::default(), Collect(&mut all));
+        let mut dedup = all.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), all.len(), "a gene was measured twice: {all:?}");
     }
 }

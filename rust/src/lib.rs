@@ -19,7 +19,10 @@
 //! through the PJRT C API (`runtime`); the source languages are parsed by
 //! from-scratch front ends (`frontend`) into a language-independent IR (`ir`)
 //! that is analyzed (`analysis`), interpreted on the "CPU" (`vm`) and
-//! selectively dispatched to the GPU device (`device`).
+//! selectively dispatched to the GPU device (`device`). Candidate
+//! measurements — the dominant cost of the whole search — are batched
+//! over a device worker pool with a persistent cross-run cache
+//! (`engine`).
 //!
 //! See `DESIGN.md` for the full system inventory and the mapping from the
 //! paper's sections to modules.
@@ -30,6 +33,7 @@ pub mod clone;
 pub mod config;
 pub mod coordinator;
 pub mod device;
+pub mod engine;
 pub mod frontend;
 pub mod funcblock;
 pub mod ga;

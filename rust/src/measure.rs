@@ -38,6 +38,11 @@ impl Measurement {
 
 /// Harness bound to one program: runs the CPU baseline once, then measures
 /// candidates against it.
+///
+/// Deliberately `Sync` (plain data only): the measurement engine's worker
+/// pool shares one `&Measurer` across threads, each worker pairing it with
+/// its own thread-local device. `measure` takes `&self`, so concurrent
+/// trials never contend.
 pub struct Measurer {
     baseline: Outcome,
     baseline_wall_s: f64,
@@ -123,6 +128,14 @@ impl Measurer {
         }
         Ok(())
     }
+}
+
+// The worker pool shares these across threads by reference.
+#[allow(dead_code)]
+fn _measurer_is_shareable() {
+    fn sync<T: Sync>() {}
+    sync::<Measurer>();
+    sync::<Measurement>();
 }
 
 #[cfg(test)]

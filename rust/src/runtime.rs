@@ -11,12 +11,20 @@
 //! Interchange is HLO *text*: jax ≥ 0.5 serializes protos with 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The real implementation needs the vendored `xla` crate and is gated
+//! behind the `pjrt` Cargo feature; without it a stub [`Runtime`] with an
+//! identical API stands in — its constructor errors, so every caller
+//! (device, CLI, examples) falls back to the simulated backend and the
+//! whole suite stays buildable on a registry-less toolchain.
 
 use anyhow::{anyhow, Result};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 /// A compiled-artifact cache over one PJRT client.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -25,6 +33,7 @@ pub struct Runtime {
     available: Vec<String>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a runtime over the artifact directory (usually `artifacts/`).
     /// Fails if the PJRT client cannot start; a missing directory is
@@ -43,13 +52,6 @@ impl Runtime {
         }
         available.sort();
         Ok(Runtime { client, dir, cache: HashMap::new(), available })
-    }
-
-    /// Default artifact location: `$ENVADAPT_ARTIFACTS` or `./artifacts`.
-    pub fn artifact_dir() -> PathBuf {
-        std::env::var_os("ENVADAPT_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|| PathBuf::from("artifacts"))
     }
 
     pub fn platform(&self) -> String {
@@ -136,12 +138,71 @@ impl Runtime {
     }
 }
 
+/// Stub runtime for builds without the `pjrt` feature: same API, but the
+/// constructor always errors, so [`crate::device::GpuDevice::with_runtime`]
+/// falls back to the simulated backend and `envadapt artifacts` reports
+/// PJRT as unavailable.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    #[allow(dead_code)]
+    _private: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let _ = dir.as_ref();
+        Err(anyhow!(
+            "PJRT support not compiled in: build with `--features pjrt` \
+             and the vendored `xla` crate (see Cargo.toml)"
+        ))
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn available(&self) -> &[String] {
+        &[]
+    }
+
+    pub fn has(&self, _name: &str) -> bool {
+        false
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        0
+    }
+
+    pub fn execute(&mut self, name: &str, _inputs: &[(&[usize], &[f32])]) -> Result<Vec<Vec<f32>>> {
+        Err(anyhow!("PJRT stub cannot execute `{name}`"))
+    }
+
+    pub fn time_execution(
+        &mut self,
+        name: &str,
+        inputs: &[(&[usize], &[f32])],
+    ) -> Result<(Vec<Vec<f32>>, f64)> {
+        let _ = inputs;
+        Err(anyhow!("PJRT stub cannot execute `{name}`"))
+    }
+}
+
+impl Runtime {
+    /// Default artifact location: `$ENVADAPT_ARTIFACTS` or `./artifacts`.
+    pub fn artifact_dir() -> PathBuf {
+        std::env::var_os("ENVADAPT_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
 /// Artifact naming helper: `matmul_64`, `dft_256`, ...
 pub fn artifact_name(kernel: &str, n: usize) -> String {
     format!("{kernel}_{n}")
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 

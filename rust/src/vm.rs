@@ -166,6 +166,13 @@ impl ExecPlan {
 
 /// The GPU seen from the VM: pure cost/residency accounting plus the GPU
 /// library (PJRT-backed). Object-safe so the VM stays device-agnostic.
+///
+/// Deliberately **not** `Send`: PJRT clients hold thread-affine state, so
+/// a device instance must live and die on one thread. The measurement
+/// engine's worker pool therefore shares a `Send + Sync`
+/// [`crate::device::DeviceFactory`] and builds one device per worker
+/// inside the worker's thread; only plans, times and
+/// [`crate::device::DeviceStats`] cross threads.
 pub trait Device {
     fn charge_h2d(&mut self, bytes: usize);
     fn charge_d2h(&mut self, bytes: usize);
@@ -180,6 +187,17 @@ pub trait Device {
     fn gpu_seconds(&self) -> f64;
     /// (h2d count, h2d bytes, d2h count, d2h bytes) so far
     fn transfer_stats(&self) -> (u64, u64, u64, u64);
+}
+
+// What the measurement pool ships between threads: the plan out, the
+// outcome's plain data back. Checked here so a future field (say an `Rc`
+// cached inside `ExecPlan`) fails at compile time, not in the pool.
+#[allow(dead_code)]
+fn _pool_sharing_contract() {
+    fn send_sync<T: Send + Sync>() {}
+    send_sync::<ExecPlan>();
+    send_sync::<Outcome>();
+    send_sync::<VmConfig>();
 }
 
 /// A no-GPU device for CPU-only runs: charging it is a logic error.

@@ -1,0 +1,144 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no registry access, so this in-tree shim
+//! provides exactly the subset of anyhow's API the workspace uses:
+//! [`Error`], [`Result`], and the [`anyhow!`], [`bail!`] and [`ensure!`]
+//! macros. Like the real crate, `Error` deliberately does **not**
+//! implement `std::error::Error`, which is what makes the blanket
+//! `From<E: std::error::Error>` conversion (and therefore `?` on any
+//! std error) coherent. Swapping in the real `anyhow` from a registry is
+//! a one-line Cargo change; no source edits are needed.
+
+use std::fmt;
+
+/// A dynamic error: a message plus an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// The root-cause chain, outermost first (shim: at most one level).
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn std::error::Error + 'static)> {
+        self.source.as_deref().map(|e| e as &(dyn std::error::Error + 'static)).into_iter()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if let Some(src) = &self.source {
+            write!(f, "\n\nCaused by:\n    {src}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// `anyhow::Result<T>` — a `Result` defaulting its error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($tt)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!(concat!(
+                "condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($tt:tt)*) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($($tt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/nonexistent/definitely/missing")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+        assert_eq!(e.chain().count(), 1);
+    }
+
+    #[test]
+    fn anyhow_macro_formats() {
+        let x = 42;
+        let e = anyhow!("value was {x}");
+        assert_eq!(e.to_string(), "value was 42");
+        let e = anyhow!("value was {}", x + 1);
+        assert_eq!(e.to_string(), "value was 43");
+    }
+
+    fn bails(flag: bool) -> Result<()> {
+        ensure!(!flag, "flag must be off, got {flag}");
+        if flag {
+            bail!("unreachable");
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn bail_and_ensure_return_errors() {
+        assert!(bails(false).is_ok());
+        let e = bails(true).unwrap_err();
+        assert!(e.to_string().contains("flag must be off"));
+    }
+
+    #[test]
+    fn debug_includes_source() {
+        let e = io_fail().unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by") || !dbg.is_empty());
+    }
+}
