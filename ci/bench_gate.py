@@ -1,0 +1,73 @@
+#!/usr/bin/env python3
+"""Engine-bench regression gate.
+
+Compares a fresh ``BENCH_engine.json`` (written by ``cargo bench --
+engine``) against the committed baseline and fails when measurement
+throughput (evals/sec) regressed by more than the threshold at any
+worker count.
+
+A placeholder baseline (``evals_per_sec: null`` — committed before the
+first toolchain-equipped run) skips the gate for that row, so the gate
+arms itself automatically once real numbers land in the repository.
+
+Usage: bench_gate.py BASELINE.json FRESH.json [--threshold 0.25]
+"""
+
+import json
+import sys
+
+THRESHOLD = 0.25  # fail when fresh < (1 - THRESHOLD) * baseline
+
+
+def rows(doc):
+    return {r.get("workers"): r.get("evals_per_sec") for r in doc.get("results", [])}
+
+
+def main(argv):
+    if len(argv) < 3:
+        sys.exit(__doc__)
+    threshold = THRESHOLD
+    if "--threshold" in argv:
+        threshold = float(argv[argv.index("--threshold") + 1])
+    with open(argv[1]) as f:
+        baseline = json.load(f)
+    with open(argv[2]) as f:
+        fresh = json.load(f)
+    base_rows, fresh_rows = rows(baseline), rows(fresh)
+    if not base_rows:
+        sys.exit("baseline has no results[] — malformed BENCH_engine.json")
+
+    failures = []
+    gated = 0
+    for workers in sorted(base_rows):
+        base_eps = base_rows[workers]
+        fresh_eps = fresh_rows.get(workers)
+        if base_eps is None:
+            print(f"workers={workers}: baseline pending (placeholder) — gate skipped")
+            continue
+        if fresh_eps is None:
+            failures.append(f"workers={workers}: missing from fresh results")
+            continue
+        gated += 1
+        ratio = fresh_eps / base_eps
+        status = "OK" if ratio >= 1.0 - threshold else "REGRESSION"
+        print(
+            f"workers={workers}: {base_eps:.1f} -> {fresh_eps:.1f} evals/sec "
+            f"({ratio:.2f}x) {status}"
+        )
+        if status == "REGRESSION":
+            failures.append(
+                f"workers={workers}: throughput fell to {ratio:.2f}x of baseline "
+                f"(limit {1.0 - threshold:.2f}x)"
+            )
+
+    if failures:
+        sys.exit("engine bench regression gate FAILED:\n  " + "\n  ".join(failures))
+    if gated:
+        print(f"engine throughput within {threshold:.0%} of baseline ({gated} rows gated)")
+    else:
+        print("no armed baseline rows — commit the fresh BENCH_engine.json to arm the gate")
+
+
+if __name__ == "__main__":
+    main(sys.argv)

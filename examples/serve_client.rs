@@ -1,0 +1,89 @@
+//! Offload-as-a-service quickstart: spawn the service in-process, then
+//! talk to it over TCP exactly as an external client would (the same
+//! wire protocol `envadapt serve` exposes).
+//!
+//! Demonstrates the learning pattern DB: the first round of requests
+//! runs real searches; the second round replays every pattern from the
+//! DB with **zero** new measurements.
+//!
+//! ```bash
+//! cargo run --release --example serve_client
+//! # against an external server instead:
+//! #   envadapt serve --sim --port 7747 &
+//! #   cargo run --release --example serve_client -- 127.0.0.1:7747
+//! ```
+
+use envadapt::config::Config;
+use envadapt::ir::Lang;
+use envadapt::proto::{self, Response};
+use envadapt::server::{self, ServeOptions};
+use envadapt::workloads;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+fn main() -> anyhow::Result<()> {
+    // spawn an in-process server unless an address was given
+    let external = std::env::args().nth(1);
+    let (addr, handle) = match &external {
+        Some(a) => (a.parse()?, None),
+        None => {
+            let h = server::spawn_tcp(
+                Config::fast_sim(),
+                ServeOptions { pool: 2, db_path: None },
+                "127.0.0.1:0",
+            )?;
+            (h.addr(), Some(h))
+        }
+    };
+    println!("offload service at {addr}\n");
+
+    let stream = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut id = 0i64;
+    let mut roundtrip = |line: &str| -> anyhow::Result<Response> {
+        writer.write_all(line.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        let mut resp = String::new();
+        reader.read_line(&mut resp)?;
+        Response::parse_line(&resp)
+    };
+
+    for round in 1..=2 {
+        println!("-- round {round} --");
+        for lang in Lang::all() {
+            let code = workloads::get("mm", lang).unwrap().code;
+            id += 1;
+            let r = roundtrip(&proto::offload_request(id, "mm", lang, code))?;
+            anyhow::ensure!(r.ok, "offload failed: {:?}", r.error);
+            let rep = r.report().expect("offload report");
+            let f = |k: &str| rep.get(k).and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+            let m = rep.get("measurements").and_then(|v| v.as_i64()).unwrap_or(-1);
+            let reused = rep
+                .get("pattern_reuse")
+                .and_then(|v| v.as_str())
+                .map(|s| format!("pattern DB: {s}"))
+                .unwrap_or_else(|| "full search".to_string());
+            println!(
+                "  mm [{lang:<6}] speedup {:>6.2}x  {m:>3} measurements  ({reused})",
+                f("speedup")
+            );
+        }
+    }
+
+    id += 1;
+    let stats = roundtrip(&format!("{{\"op\":\"stats\",\"id\":{id}}}"))?;
+    println!("\nservice stats: {}", stats.body.get("stats").unwrap().to_pretty());
+
+    // disconnect, then shut down the server if we spawned it ourselves
+    // (shutdown drains open connections before returning)
+    drop(roundtrip);
+    drop(reader);
+    drop(writer);
+    if let Some(h) = handle {
+        h.shutdown()?;
+        println!("service shut down cleanly");
+    }
+    Ok(())
+}

@@ -225,7 +225,12 @@ fn e9_adaptive_targets() {
 /// artifacts exist.
 fn e1_end_to_end() {
     println!("## E1 — end-to-end offload (Fig. 1 flow), every app × language\n");
-    let mut c = Coordinator::new(Config::standard());
+    // replay off: E1 measures the *search*, and one coordinator across
+    // languages would otherwise replay learned patterns (language-
+    // independent IR) instead of running the flow per language
+    let mut e1_cfg = Config::standard();
+    e1_cfg.reuse_patterns = false;
+    let mut c = Coordinator::new(e1_cfg);
     println!(
         "device: {}\n",
         if c.device_is_pjrt() { "PJRT artifacts" } else { "simulated" }

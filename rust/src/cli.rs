@@ -3,9 +3,12 @@
 //! ```text
 //! envadapt offload <file|app> [--lang c|python|java] [--pop N] [--gens N]
 //!                  [--target gpu|many-core|fpga|adaptive]
-//!                  [--workers N] [--cache FILE]
+//!                  [--workers N] [--cache FILE] [--db FILE]
+//!                  [--no-reuse] [--no-learn]
 //!                  [--naive-transfers] [--no-funcblock] [--sim] [--json]
 //!                  [--emit-annotated]
+//! envadapt serve [--port N | --stdio] [--pool N] [--db FILE]
+//!                [--workers N] [--cache FILE] [--sim] [...]
 //! envadapt analyze <file|app> [--lang ...]       loop table + candidates
 //! envadapt run <file|app> [--lang ...]           CPU-only execution
 //! envadapt workloads                             list built-in apps
@@ -18,6 +21,7 @@ use crate::coordinator::Coordinator;
 use crate::frontend;
 use crate::ir::Lang;
 use crate::runtime::Runtime;
+use crate::server;
 use crate::vm;
 use crate::workloads;
 use std::process::ExitCode;
@@ -45,6 +49,18 @@ struct Opts {
     workers: Option<usize>,
     /// persistent measurement-cache file
     cache: Option<std::path::PathBuf>,
+    /// persistent pattern-DB file (learned offload plans)
+    db: Option<std::path::PathBuf>,
+    /// disable the learned-pattern replay fast path
+    no_reuse: bool,
+    /// disable inserting learned patterns after a search
+    no_learn: bool,
+    /// serve: coordinator pool size
+    pool: Option<usize>,
+    /// serve: TCP port
+    port: Option<u16>,
+    /// serve: speak the protocol on stdin/stdout instead of TCP
+    stdio: bool,
     naive: bool,
     no_funcblock: bool,
     sim: bool,
@@ -61,6 +77,12 @@ fn parse_opts(rest: &[String]) -> anyhow::Result<Opts> {
         gens: None,
         workers: None,
         cache: None,
+        db: None,
+        no_reuse: false,
+        no_learn: false,
+        pool: None,
+        port: None,
+        stdio: false,
         naive: false,
         no_funcblock: false,
         sim: false,
@@ -74,12 +96,10 @@ fn parse_opts(rest: &[String]) -> anyhow::Result<Opts> {
             "--lang" => {
                 i += 1;
                 let v = rest.get(i).ok_or_else(|| anyhow::anyhow!("--lang needs a value"))?;
-                o.lang = Some(match v.as_str() {
-                    "c" => Lang::C,
-                    "python" | "py" => Lang::Python,
-                    "java" => Lang::Java,
-                    other => anyhow::bail!("unknown language {other:?}"),
-                });
+                o.lang = Some(
+                    Lang::from_name(v)
+                        .ok_or_else(|| anyhow::anyhow!("unknown language {v:?}"))?,
+                );
             }
             "--pop" => {
                 i += 1;
@@ -100,16 +120,34 @@ fn parse_opts(rest: &[String]) -> anyhow::Result<Opts> {
                 let v = rest.get(i).ok_or_else(|| anyhow::anyhow!("--cache needs a file path"))?;
                 o.cache = Some(std::path::PathBuf::from(v));
             }
+            "--db" => {
+                i += 1;
+                let v = rest.get(i).ok_or_else(|| anyhow::anyhow!("--db needs a file path"))?;
+                o.db = Some(std::path::PathBuf::from(v));
+            }
+            "--no-reuse" => o.no_reuse = true,
+            "--no-learn" => o.no_learn = true,
+            "--pool" => {
+                i += 1;
+                let n: usize = rest.get(i).and_then(|v| v.parse().ok()).ok_or_else(|| anyhow::anyhow!("--pool needs a number"))?;
+                anyhow::ensure!(n >= 1, "--pool must be at least 1");
+                o.pool = Some(n);
+            }
+            "--port" => {
+                i += 1;
+                let n: u16 = rest.get(i).and_then(|v| v.parse().ok()).ok_or_else(|| anyhow::anyhow!("--port needs a number (0-65535)"))?;
+                o.port = Some(n);
+            }
+            "--stdio" => o.stdio = true,
             "--target" => {
                 i += 1;
                 let v = rest.get(i).ok_or_else(|| anyhow::anyhow!("--target needs a value"))?;
                 use crate::device::TargetKind;
                 o.targets = Some(match v.as_str() {
-                    "gpu" => vec![TargetKind::Gpu],
-                    "many-core" | "manycore" => vec![TargetKind::ManyCore],
-                    "fpga" => vec![TargetKind::Fpga],
                     "adaptive" | "all" => TargetKind::all().to_vec(),
-                    other => anyhow::bail!("unknown target {other:?} (gpu|many-core|fpga|adaptive)"),
+                    name => vec![TargetKind::from_name(name).ok_or_else(|| {
+                        anyhow::anyhow!("unknown target {name:?} (gpu|many-core|fpga|adaptive)")
+                    })?],
                 });
             }
             "--naive-transfers" => o.naive = true,
@@ -156,6 +194,9 @@ fn config_from(opts: &Opts) -> Config {
         cfg.workers = w;
     }
     cfg.cache_path = opts.cache.clone();
+    cfg.pattern_db_path = opts.db.clone();
+    cfg.reuse_patterns = !opts.no_reuse;
+    cfg.learn_patterns = !opts.no_learn;
     cfg.naive_transfers = opts.naive;
     cfg.funcblock.enabled = !opts.no_funcblock;
     cfg
@@ -209,6 +250,12 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 println!("{}", r.to_json().to_pretty());
             } else {
                 println!("{}", r.summary());
+                if let Some(how) = &r.reused_pattern {
+                    println!("  pattern DB: replayed known pattern — {how} (search skipped)");
+                }
+                if r.learned_pattern {
+                    println!("  pattern DB: learned this pattern for future requests");
+                }
                 if let Some(fb) = &r.funcblock {
                     for &i in &fb.chosen {
                         println!("  func-block: {}", fb.candidates[i].description);
@@ -276,6 +323,32 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             );
             Ok(())
         }
+        "serve" => {
+            let opts = parse_opts(&args[1..])?;
+            let mut cfg = config_from(&opts);
+            if let Some(targets) = &opts.targets {
+                // the daemon's default target; per-request overrides come
+                // through the protocol's "target" field
+                anyhow::ensure!(
+                    targets.len() == 1,
+                    "serve takes a single --target (clients pick per request; \
+                     `adaptive` is an offload-command mode)"
+                );
+                cfg.target = targets[0];
+                cfg.cost = targets[0].cost_model();
+                cfg.use_pjrt = cfg.use_pjrt && targets[0] == crate::device::TargetKind::Gpu;
+            }
+            let sopts = server::ServeOptions {
+                pool: opts.pool.unwrap_or(0),
+                db_path: opts.db.clone(),
+            };
+            if opts.stdio {
+                server::serve_stdio(cfg, sopts)
+            } else {
+                let addr = format!("127.0.0.1:{}", opts.port.unwrap_or(7747));
+                server::serve_tcp(&addr, cfg, sopts)
+            }
+        }
         "workloads" => {
             for app in workloads::APPS {
                 println!("{app} (c, python, java)");
@@ -314,9 +387,13 @@ fn print_help() {
 USAGE:
   envadapt offload <file|app> [--lang c|python|java] [--pop N] [--gens N]
                    [--target gpu|many-core|fpga|adaptive]
-                   [--workers N] [--cache FILE]
+                   [--workers N] [--cache FILE] [--db FILE]
+                   [--no-reuse] [--no-learn]
                    [--naive-transfers] [--no-funcblock] [--sim] [--json]
                    [--emit-annotated]
+  envadapt serve   [--port N | --stdio] [--pool N] [--db FILE]
+                   [--workers N] [--cache FILE] [--sim] [--no-reuse]
+                   [--no-learn] [--pop N] [--gens N]
   envadapt analyze <file|app> [--lang ...]
   envadapt run <file|app> [--lang ...]
   envadapt workloads
@@ -329,6 +406,19 @@ OPTIONS:
                 measure serially — the pool is simulated-only)
   --cache FILE  persistent measurement cache: known (program, target,
                 pattern) measurements are reused across runs
+  --db FILE     persistent pattern DB: verified offload patterns learned
+                from every successful search; repeat or near-identical
+                requests replay the known plan with zero measurements
+  --no-reuse    always run the full search (skip the pattern-DB replay)
+  --no-learn    do not insert learned patterns after a search
+
+SERVE (the offload-as-a-service daemon, line-delimited JSON protocol):
+  --port N      listen on 127.0.0.1:N (default 7747; 0 = ephemeral)
+  --stdio       speak the protocol on stdin/stdout instead of TCP
+  --pool N      coordinator workers serving concurrent requests
+                (default: min(4, host parallelism))
+  request:  {{\"op\":\"offload\",\"id\":1,\"name\":\"mm\",\"lang\":\"c\",\"code\":\"...\"}}
+  also:     {{\"op\":\"stats\"|\"ping\"|\"shutdown\",\"id\":N}}
 
 Built-in workloads: mm fourier stencil blackscholes mixed smallloops"
     );

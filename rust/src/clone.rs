@@ -27,6 +27,19 @@ pub fn char_vector_stmt(s: &Stmt) -> CharVec {
     v
 }
 
+/// Characteristic vector of a whole program: the sum over every function
+/// body. The learning pattern DB uses this to recognize repeat or
+/// near-identical offload requests (the service's known-pattern fast
+/// path); because the front ends normalize all three languages into one
+/// IR, the same application has the same vector in C, Python and Java.
+pub fn char_vector_program(prog: &Program) -> CharVec {
+    let mut v = [0.0; NODE_KIND_COUNT];
+    for f in &prog.functions {
+        count_block(&f.body, &mut v);
+    }
+    v
+}
+
 fn bump(v: &mut CharVec, k: NodeKind) {
     v[k as usize] += 1.0;
 }

@@ -58,6 +58,19 @@ pub struct Config {
     pub target: TargetKind,
     /// persistent measurement-cache file; `None` = in-memory only
     pub cache_path: Option<PathBuf>,
+    /// replay a learned pattern (same/similar program already searched)
+    /// instead of re-running the search — the paper's production path
+    pub reuse_patterns: bool,
+    /// insert a learned `PatternRecord` into the pattern DB after every
+    /// successful search
+    pub learn_patterns: bool,
+    /// characteristic-vector similarity a near-identical program must
+    /// reach before its learned pattern is considered for replay (the
+    /// replay additionally requires a matching baseline, gene-loop set
+    /// and function-block candidates, and re-verifies the result)
+    pub reuse_similarity: f64,
+    /// persistent pattern-DB file; learned records survive restarts
+    pub pattern_db_path: Option<PathBuf>,
 }
 
 impl Config {
@@ -76,6 +89,10 @@ impl Config {
             workers: default_workers(),
             target: TargetKind::Gpu,
             cache_path: None,
+            reuse_patterns: true,
+            learn_patterns: true,
+            reuse_similarity: 0.98,
+            pattern_db_path: None,
         }
     }
 
@@ -112,6 +129,8 @@ mod tests {
         assert!(c.tolerance > 0.0 && c.tolerance < 0.1);
         assert!(c.use_pjrt);
         assert!(!c.naive_transfers);
+        assert!(c.reuse_patterns && c.learn_patterns);
+        assert!(c.reuse_similarity > 0.9 && c.reuse_similarity <= 1.0);
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //!    PyCUDA / parallel-stream) plus every number the benches need.
 
 use crate::analysis::{self, ProgramAnalysis};
+use crate::clone::char_vector_program;
 use crate::config::Config;
 use crate::device::{DeviceFactory, DeviceStats, GpuDevice};
 use crate::engine::{self, MeasurementEngine, SharedCache};
@@ -26,7 +27,7 @@ use crate::funcblock::{self, Candidate, FuncBlockReport};
 use crate::ga::{self, GaResult};
 use crate::ir::{Lang, LoopId, Program};
 use crate::measure::{Measurement, Measurer};
-use crate::patterndb::PatternDb;
+use crate::patterndb::{self, LearnedPlan, PatternDb, PatternRecord, SharedPatternDb};
 use crate::util::json::Json;
 use crate::vm::ExecPlan;
 use anyhow::Result;
@@ -61,6 +62,11 @@ pub struct OffloadReport {
     pub measure_stats: DeviceStats,
     /// wall seconds the whole offload search took
     pub search_wall_s: f64,
+    /// when the report came from the pattern DB's known-pattern fast
+    /// path (no search ran), how the pattern was matched
+    pub reused_pattern: Option<String>,
+    /// whether this search inserted a new learned record into the DB
+    pub learned_pattern: bool,
 }
 
 impl OffloadReport {
@@ -85,7 +91,11 @@ impl OffloadReport {
             .set("measure_launches", self.measure_stats.launches as i64)
             .set("search_wall_s", self.search_wall_s)
             .set("gpu_regions", self.final_plan.regions.len())
-            .set("gpu_lib_calls", self.final_plan.gpu_calls.len());
+            .set("gpu_lib_calls", self.final_plan.gpu_calls.len())
+            .set("learned_pattern", self.learned_pattern);
+        if let Some(how) = &self.reused_pattern {
+            j = j.set("pattern_reuse", how.as_str());
+        }
         if let Some(fb) = &self.funcblock {
             j = j.set(
                 "funcblock_chosen",
@@ -118,14 +128,53 @@ impl OffloadReport {
     }
 }
 
+/// Expand a reduced gene (over `gene_loops`, the parallelizable loops
+/// left after function-block exclusion) into a full [`ExecPlan`] with the
+/// chosen function blocks applied — shared by the search path's plan
+/// builder and the known-pattern replay path.
+fn assemble_plan(
+    analysis: &ProgramAnalysis,
+    gene_loops: &[LoopId],
+    gene: &[bool],
+    chosen: &[Candidate],
+    naive_transfers: bool,
+) -> ExecPlan {
+    let all = analysis.gene_loops();
+    let mut full = vec![false; all.len()];
+    for (k, id) in gene_loops.iter().enumerate() {
+        let pos = all.iter().position(|x| x == id).unwrap();
+        full[pos] = gene[k];
+    }
+    let mut plan = analysis::build_plan(analysis, &full, naive_transfers);
+    let refs: Vec<&Candidate> = chosen.iter().collect();
+    funcblock::apply(&mut plan, analysis, &refs);
+    plan
+}
+
+/// Offload-directive-annotated source for a final plan (library-replaced
+/// regions render as offloaded loops too).
+fn annotate(prog: &Program, analysis: &ProgramAnalysis, plan: &ExecPlan) -> String {
+    let mut directives = analysis::plan_directives(analysis, plan);
+    for (id, region) in &plan.regions {
+        directives.entry(*id).or_insert_with(|| render::LoopDirective {
+            offload: true,
+            copy_in: region.copy_in.clone(),
+            copy_out: region.copy_out.clone(),
+            present: vec![],
+        });
+    }
+    render::render(prog, &directives)
+}
+
 /// The coordinator: owns a long-lived device (serial measurement + final
 /// verification; its PJRT executable cache persists across trials and
-/// applications), the shared measurement cache, and the pattern DB. The
-/// measurement engines it builds per phase hand pool workers a
-/// [`DeviceFactory`] reflecting the backend this device actually runs.
+/// applications), the shared measurement cache, and a handle on the
+/// (possibly shared) pattern DB. The measurement engines it builds per
+/// phase hand pool workers a [`DeviceFactory`] reflecting the backend
+/// this device actually runs.
 pub struct Coordinator {
     pub cfg: Config,
-    pub db: PatternDb,
+    db: SharedPatternDb,
     dev: GpuDevice,
     cache: SharedCache,
 }
@@ -140,13 +189,26 @@ impl Coordinator {
     /// the adaptive per-target runs and the batch front end's workers
     /// avoid re-measuring patterns another coordinator already tried.
     pub fn with_cache(cfg: Config, cache: SharedCache) -> Coordinator {
+        let db = patterndb::shared(PatternDb::open_or_builtin(cfg.pattern_db_path.as_deref()));
+        Coordinator::with_shared(cfg, cache, db)
+    }
+
+    /// Coordinator over a shared measurement cache *and* a shared pattern
+    /// DB — the offload service's workers all learn into, and replay
+    /// from, one store.
+    pub fn with_shared(cfg: Config, cache: SharedCache, db: SharedPatternDb) -> Coordinator {
         let dev = DeviceFactory::new(cfg.cost.clone(), cfg.use_pjrt).build();
-        Coordinator { cfg, db: PatternDb::builtin(), dev, cache }
+        Coordinator { cfg, db, dev, cache }
     }
 
     /// Handle on the shared measurement cache (clone to share).
     pub fn cache(&self) -> SharedCache {
         self.cache.clone()
+    }
+
+    /// Handle on the (learning) pattern DB.
+    pub fn db(&self) -> SharedPatternDb {
+        self.db.clone()
     }
 
     /// Whether library kernels run through real PJRT artifacts.
@@ -164,6 +226,15 @@ impl Coordinator {
     /// measurement goes through a [`MeasurementEngine`]: batched over the
     /// device worker pool (`cfg.workers`) and memoized in the shared
     /// cross-run cache.
+    ///
+    /// Before searching, the pattern DB is consulted for a *learned*
+    /// pattern of the same (exact fingerprint) or a near-identical
+    /// (vector-similar) program: a hit replays the known plan with zero
+    /// search measurements — the production fast path of the paper's
+    /// service model. After a successful search the winning pattern is
+    /// inserted back into the DB (and persisted when
+    /// `cfg.pattern_db_path` is set), so the service gets faster with
+    /// every application it sees.
     pub fn offload_program(&mut self, prog: &Program) -> Result<OffloadReport> {
         let t_start = std::time::Instant::now();
         let analysis = analysis::analyze(prog);
@@ -183,6 +254,18 @@ impl Coordinator {
         fp_cfg.use_pjrt = self.dev.is_pjrt();
         let artifact_inventory: Vec<String> = self.dev.available_artifacts().to_vec();
         let art_refs: Vec<&str> = artifact_inventory.iter().map(|s| s.as_str()).collect();
+
+        // ---- phase 0: known-pattern fast path ----------------------------
+        // The learned fingerprint folds in the same backend/artifact
+        // context as the measurement cache, so a plan learned under
+        // simulation is never replayed as if it were PJRT-verified.
+        let learned_fp = engine::fingerprint(prog, &fp_cfg, "learned", &art_refs);
+        if self.cfg.reuse_patterns {
+            if let Some(report) = self.try_reuse(prog, &analysis, &measurer, learned_fp, t_start) {
+                return Ok(report);
+            }
+        }
+
         // Engines pool only for simulated backends; hand them a factory
         // reflecting the probed backend, so a PJRT request that fell back
         // to simulation still gets the worker pool instead of a silently
@@ -193,8 +276,10 @@ impl Coordinator {
         let mut fb_report: Option<FuncBlockReport> = None;
         let mut chosen_candidates: Vec<Candidate> = Vec::new();
         if self.cfg.funcblock.enabled {
-            let candidates =
-                funcblock::find_candidates(prog, &analysis, &self.db, &self.cfg.funcblock);
+            let candidates = {
+                let db = self.db.lock().unwrap();
+                funcblock::find_candidates(prog, &analysis, &db, &self.cfg.funcblock)
+            };
             if !candidates.is_empty() {
                 let fb_plan =
                     funcblock::mask_plan(&analysis, &candidates, self.cfg.naive_transfers);
@@ -238,18 +323,8 @@ impl Coordinator {
             .collect();
 
         let naive_transfers = self.cfg.naive_transfers;
-        let chosen_refs: Vec<&Candidate> = chosen_candidates.iter().collect();
         let build_full_plan = |gene: &[bool]| -> ExecPlan {
-            // expand the reduced gene back over all parallelizable loops
-            let all = analysis.gene_loops();
-            let mut full = vec![false; all.len()];
-            for (k, id) in gene_loops.iter().enumerate() {
-                let pos = all.iter().position(|x| x == id).unwrap();
-                full[pos] = gene[k];
-            }
-            let mut plan = analysis::build_plan(&analysis, &full, naive_transfers);
-            funcblock::apply(&mut plan, &analysis, &chosen_refs);
-            plan
+            assemble_plan(&analysis, &gene_loops, gene, &chosen_candidates, naive_transfers)
         };
 
         // the gene→plan mapping depends on which function blocks were
@@ -288,22 +363,45 @@ impl Coordinator {
         };
 
         // ---- directive-annotated source -----------------------------------
-        let mut directives = analysis::plan_directives(&analysis, &final_plan);
-        // library-replaced regions render as offloaded loops too
-        for (id, region) in &final_plan.regions {
-            directives.entry(*id).or_insert_with(|| render::LoopDirective {
-                offload: true,
-                copy_in: region.copy_in.clone(),
-                copy_out: region.copy_out.clone(),
-                present: vec![],
-            });
-        }
-        let annotated_source = render::render(prog, &directives);
+        let annotated_source = annotate(prog, &analysis, &final_plan);
 
         // persist the measurement cache so the next run starts warm
         if self.cfg.cache_path.is_some() {
             if let Err(e) = self.cache.lock().unwrap().save() {
                 eprintln!("warning: measurement cache not saved: {e}");
+            }
+        }
+
+        // ---- learning: remember the verified pattern ---------------------
+        let mut learned_pattern = false;
+        if self.cfg.learn_patterns && final_measurement.ok {
+            let plan = LearnedPlan {
+                fingerprint: learned_fp,
+                lang: prog.lang,
+                target: self.cfg.target,
+                gene: best_gene.clone(),
+                gene_loops: gene_loops.clone(),
+                funcblocks: chosen_candidates.iter().map(|c| c.description.clone()).collect(),
+                baseline_s: measurer.baseline_modeled_s(),
+                final_s,
+            };
+            let description = format!(
+                "learned: {} [{}] {:.2}x on {}",
+                prog.name,
+                prog.lang.name(),
+                plan.speedup(),
+                self.cfg.target
+            );
+            let record =
+                PatternRecord::from_learned(description, char_vector_program(prog), plan);
+            let mut db = self.db.lock().unwrap();
+            learned_pattern = db.insert_learned(record);
+            if learned_pattern {
+                if let Some(p) = &self.cfg.pattern_db_path {
+                    if let Err(e) = db.save(p) {
+                        eprintln!("warning: pattern DB not saved: {e}");
+                    }
+                }
             }
         }
 
@@ -323,6 +421,126 @@ impl Coordinator {
             cache_hits,
             measure_stats,
             search_wall_s: t_start.elapsed().as_secs_f64(),
+            reused_pattern: None,
+            learned_pattern,
+        })
+    }
+
+    /// The known-pattern fast path: find a learned plan for this exact
+    /// program (fingerprint) or a near-identical one (whole-program
+    /// characteristic-vector similarity + identical modeled baseline),
+    /// rebuild it against a fresh analysis, and re-verify it once on the
+    /// coordinator's device. Returns `None` — falling back to the full
+    /// search — whenever any step fails to line up: the replay is an
+    /// optimization, never a source of unverified answers.
+    ///
+    /// The returned report performs **zero search measurements**:
+    /// `total_measurements`, `cache_hits` and `measure_stats` are all
+    /// zero (the single verification run is deploy-time safety, the same
+    /// final check the search path does not count either).
+    fn try_reuse(
+        &mut self,
+        prog: &Program,
+        analysis: &ProgramAnalysis,
+        measurer: &Measurer,
+        learned_fp: u64,
+        t_start: std::time::Instant,
+    ) -> Option<OffloadReport> {
+        // snapshot the matching plan under the lock, then measure without
+        // holding it (other service workers keep going)
+        let (plan_rec, how) = {
+            let db = self.db.lock().unwrap();
+            if db.learned_len() == 0 {
+                return None;
+            }
+            if let Some(r) = db.lookup_learned(learned_fp, self.cfg.target) {
+                let how = format!("exact ({})", r.key);
+                (r.learned.clone().unwrap(), how)
+            } else {
+                let v = char_vector_program(prog);
+                let (r, score) =
+                    db.lookup_learned_similar(&v, self.cfg.target, self.cfg.reuse_similarity)?;
+                let p = r.learned.clone().unwrap();
+                // a near-identical program must also have an identical
+                // modeled baseline — structure AND workload must agree
+                let base = measurer.baseline_modeled_s();
+                if (p.baseline_s - base).abs() > 1e-9 * base.abs().max(1e-300) {
+                    return None;
+                }
+                let how = format!("similar (score {score:.4}, {})", r.key);
+                (p, how)
+            }
+        };
+
+        // rebuild the chosen function blocks from a fresh candidate scan
+        let mut chosen: Vec<Candidate> = Vec::new();
+        if !plan_rec.funcblocks.is_empty() {
+            if !self.cfg.funcblock.enabled {
+                return None;
+            }
+            let candidates = {
+                let db = self.db.lock().unwrap();
+                funcblock::find_candidates(prog, analysis, &db, &self.cfg.funcblock)
+            };
+            for want in &plan_rec.funcblocks {
+                match candidates.iter().find(|c| &c.description == want) {
+                    Some(c) => chosen.push(c.clone()),
+                    None => return None, // pattern no longer applies here
+                }
+            }
+        }
+        let excluded = self.excluded_loops(analysis, &chosen);
+        let gene_loops: Vec<LoopId> =
+            analysis.gene_loops().into_iter().filter(|id| !excluded.contains(id)).collect();
+        if gene_loops != plan_rec.gene_loops || plan_rec.gene.len() != gene_loops.len() {
+            return None;
+        }
+        let final_plan = assemble_plan(
+            analysis,
+            &gene_loops,
+            &plan_rec.gene,
+            &chosen,
+            self.cfg.naive_transfers,
+        );
+
+        // re-verify the replayed plan (PCAST results check) — a stale or
+        // mis-matched pattern falls back to the full search
+        self.dev.reset();
+        let final_measurement = measurer.measure(prog, &final_plan, &mut self.dev);
+        if !final_measurement.ok {
+            return None;
+        }
+        let annotated_source = annotate(prog, analysis, &final_plan);
+        // the replay applied the learned function blocks — report them
+        // (no trials ran, so the trial list is empty)
+        let funcblock = if chosen.is_empty() {
+            None
+        } else {
+            Some(FuncBlockReport {
+                chosen: (0..chosen.len()).collect(),
+                candidates: chosen,
+                best: final_measurement.clone(),
+                trials: Vec::new(),
+            })
+        };
+        Some(OffloadReport {
+            app: prog.name.clone(),
+            lang: prog.lang,
+            baseline_s: measurer.baseline_modeled_s(),
+            final_s: final_measurement.modeled_s,
+            funcblock,
+            ga: None,
+            gene_loops,
+            best_gene: plan_rec.gene,
+            final_plan,
+            final_measurement,
+            annotated_source,
+            total_measurements: 0,
+            cache_hits: 0,
+            measure_stats: DeviceStats::default(),
+            search_wall_s: t_start.elapsed().as_secs_f64(),
+            reused_pattern: Some(how),
+            learned_pattern: false,
         })
     }
 
@@ -381,16 +599,20 @@ pub fn offload_adaptive(
     targets: &[crate::device::TargetKind],
 ) -> Result<AdaptiveReport> {
     anyhow::ensure!(!targets.is_empty(), "need at least one target");
-    // one measurement cache across all targets: re-running a target (or
-    // the whole adaptive search) answers known patterns without a device
+    // one measurement cache and one pattern DB across all targets:
+    // re-running a target (or the whole adaptive search) answers known
+    // patterns without a device, and learned records never clobber each
+    // other on disk (learned keys carry the target, so no cross-target
+    // replay can happen)
     let cache = engine::cache_for(cfg);
+    let db = patterndb::shared(PatternDb::open_or_builtin(cfg.pattern_db_path.as_deref()));
     let mut per_target = Vec::new();
     for &t in targets {
         let mut tcfg = cfg.clone();
         tcfg.target = t;
         tcfg.cost = t.cost_model();
         tcfg.use_pjrt = cfg.use_pjrt && t == crate::device::TargetKind::Gpu;
-        let mut c = Coordinator::with_cache(tcfg, cache.clone());
+        let mut c = Coordinator::with_shared(tcfg, cache.clone(), db.clone());
         per_target.push((t, c.offload_source(code, lang, name)?));
     }
     let chosen = per_target
@@ -423,8 +645,10 @@ impl BatchRequest {
 /// Serve a batch of offload requests over `workers` OS threads, each with
 /// its own coordinator (PJRT clients are not `Send`, so every worker owns
 /// its device; executable caches are per-worker). All workers share one
-/// measurement cache, so repeated requests for the same program answer
-/// from memory. Result order matches request order.
+/// measurement cache and one pattern DB, so repeated requests for the
+/// same program answer from memory (and one worker's learned pattern is
+/// replayed — and persisted without clobbering — by every other).
+/// Result order matches request order.
 pub fn offload_batch(
     requests: &[BatchRequest],
     workers: usize,
@@ -438,6 +662,7 @@ pub fn offload_batch(
     let mut wcfg = cfg.clone();
     wcfg.workers = (cfg.effective_workers() / workers).max(1);
     let cache = engine::cache_for(cfg);
+    let db = patterndb::shared(PatternDb::open_or_builtin(cfg.pattern_db_path.as_deref()));
     let next = AtomicUsize::new(0);
     let results: Mutex<Vec<Option<Result<OffloadReport>>>> =
         Mutex::new((0..requests.len()).map(|_| None).collect());
@@ -445,10 +670,11 @@ pub fn offload_batch(
     std::thread::scope(|scope| {
         for _ in 0..workers {
             let cache = cache.clone();
+            let db = db.clone();
             let next = &next;
             let results = &results;
             scope.spawn(move || {
-                let mut c = Coordinator::with_cache(wcfg.clone(), cache);
+                let mut c = Coordinator::with_shared(wcfg.clone(), cache, db);
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= requests.len() {
@@ -624,5 +850,111 @@ mod tests {
         let s = r.to_json().to_string();
         assert!(s.contains("\"app\":\"smallloops\""));
         assert!(s.contains("\"speedup\":"));
+        assert!(s.contains("\"learned_pattern\":true"));
+    }
+
+    #[test]
+    fn second_identical_request_replays_learned_pattern() {
+        let mut c = Coordinator::new(fast_cfg());
+        let src = crate::workloads::get("mm", Lang::C).unwrap();
+        let r1 = c.offload_source(src.code, Lang::C, "mm").unwrap();
+        assert!(r1.reused_pattern.is_none(), "first request must search");
+        assert!(r1.learned_pattern, "successful search must learn");
+        assert!(r1.total_measurements > 0);
+
+        let r2 = c.offload_source(src.code, Lang::C, "mm").unwrap();
+        assert!(r2.reused_pattern.is_some(), "repeat request must hit the pattern DB");
+        assert!(r2.reused_pattern.as_ref().unwrap().starts_with("exact"));
+        assert_eq!(r2.total_measurements, 0, "replay performs zero search measurements");
+        assert_eq!(r2.cache_hits, 0);
+        assert_eq!(r2.measure_stats.launches, 0);
+        assert_eq!(r2.best_gene, r1.best_gene, "same plan as the search found");
+        assert_eq!(r2.gene_loops, r1.gene_loops);
+        assert_eq!(r2.final_s, r1.final_s);
+        assert_eq!(r2.final_plan.gpu_calls, r1.final_plan.gpu_calls);
+        assert_eq!(r2.annotated_source, r1.annotated_source);
+        assert!(!r2.learned_pattern, "an identical replay re-learns nothing");
+        // the replay reports the same chosen function blocks the search found
+        let chosen_descs = |r: &OffloadReport| -> Vec<String> {
+            let fb = r.funcblock.as_ref().expect("mm has function blocks");
+            fb.chosen.iter().map(|&i| fb.candidates[i].description.clone()).collect()
+        };
+        assert_eq!(chosen_descs(&r1), chosen_descs(&r2));
+    }
+
+    #[test]
+    fn renamed_variables_replay_via_similarity() {
+        // alpha-renaming keeps the characteristic vector and the modeled
+        // baseline identical but changes the program fingerprint — the
+        // similar-pattern path must pick it up
+        let src = r#"void main() {
+            int n = 512;
+            double x[n]; double y[n];
+            seed_fill(x, 3);
+            for (int i = 0; i < n; i++) { y[i] = x[i] * 2.0 + 1.0; }
+            double s = 0.0;
+            for (int i = 0; i < n; i++) { s += y[i] + x[i]; }
+            printf("%f\n", s);
+        }"#;
+        let renamed = src.replace('x', "u").replace('y', "w");
+        assert_ne!(src, renamed);
+        let mut c = Coordinator::new(fast_cfg());
+        let r1 = c.offload_source(src, Lang::C, "app1").unwrap();
+        assert!(r1.learned_pattern);
+        let r2 = c.offload_source(&renamed, Lang::C, "app2").unwrap();
+        assert!(
+            r2.reused_pattern.as_deref().is_some_and(|h| h.starts_with("similar")),
+            "renamed program should replay the learned pattern, got {:?}",
+            r2.reused_pattern
+        );
+        assert_eq!(r2.total_measurements, 0);
+        assert_eq!(r2.best_gene, r1.best_gene);
+        assert_eq!(r2.final_s, r1.final_s);
+    }
+
+    #[test]
+    fn reuse_and_learning_can_be_disabled() {
+        let mut cfg = fast_cfg();
+        cfg.learn_patterns = false;
+        let mut c = Coordinator::new(cfg);
+        let src = crate::workloads::get("smallloops", Lang::C).unwrap();
+        let r1 = c.offload_source(src.code, Lang::C, "smallloops").unwrap();
+        assert!(!r1.learned_pattern);
+        let r2 = c.offload_source(src.code, Lang::C, "smallloops").unwrap();
+        assert!(r2.reused_pattern.is_none(), "nothing learned, nothing to reuse");
+        assert!(r2.total_measurements > 0);
+
+        let mut cfg = fast_cfg();
+        cfg.reuse_patterns = false;
+        let mut c = Coordinator::new(cfg);
+        let r1 = c.offload_source(src.code, Lang::C, "smallloops").unwrap();
+        assert!(r1.learned_pattern, "learning still on");
+        let r2 = c.offload_source(src.code, Lang::C, "smallloops").unwrap();
+        assert!(r2.reused_pattern.is_none(), "reuse disabled: full search again");
+        assert!(r2.total_measurements > 0);
+    }
+
+    #[test]
+    fn pattern_db_persists_across_coordinators() {
+        let tmp = std::env::temp_dir()
+            .join(format!("envadapt_coord_db_{}.txt", std::process::id()));
+        let _ = std::fs::remove_file(&tmp);
+        let mut cfg = fast_cfg();
+        cfg.pattern_db_path = Some(tmp.clone());
+        let src = crate::workloads::get("fourier", Lang::Java).unwrap();
+        let r1 = {
+            let mut c = Coordinator::new(cfg.clone());
+            c.offload_source(src.code, Lang::Java, "fourier").unwrap()
+        };
+        assert!(r1.learned_pattern);
+        assert!(tmp.exists(), "learned pattern must be persisted");
+        // a brand-new coordinator (fresh process in real life) replays it
+        let mut c2 = Coordinator::new(cfg);
+        let r2 = c2.offload_source(src.code, Lang::Java, "fourier").unwrap();
+        assert!(r2.reused_pattern.is_some(), "persisted pattern must replay");
+        assert_eq!(r2.total_measurements, 0);
+        assert_eq!(r2.best_gene, r1.best_gene);
+        assert_eq!(r2.final_s, r1.final_s);
+        std::fs::remove_file(tmp).ok();
     }
 }

@@ -114,6 +114,17 @@ impl TargetKind {
         }
     }
 
+    /// Parse a target name (the inverse of [`TargetKind::name`]; used by
+    /// the CLI, the service protocol and pattern-DB persistence).
+    pub fn from_name(name: &str) -> Option<TargetKind> {
+        match name {
+            "gpu" => Some(TargetKind::Gpu),
+            "many-core" | "manycore" => Some(TargetKind::ManyCore),
+            "fpga" => Some(TargetKind::Fpga),
+            _ => None,
+        }
+    }
+
     pub fn cost_model(&self) -> CostModel {
         match self {
             TargetKind::Gpu => CostModel::gpu(),

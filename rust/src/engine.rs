@@ -90,6 +90,10 @@ pub struct MeasurementCache {
     entries: HashMap<String, f64>,
     path: Option<PathBuf>,
     dirty: bool,
+    /// lifetime lookup counters (not persisted) — the service's stats
+    /// endpoint reports these across every coordinator sharing the cache
+    hits: u64,
+    misses: u64,
 }
 
 impl MeasurementCache {
@@ -117,7 +121,7 @@ impl MeasurementCache {
                 }
             }
         }
-        MeasurementCache { entries, path: Some(path), dirty: false }
+        MeasurementCache { entries, path: Some(path), ..MeasurementCache::default() }
     }
 
     pub fn len(&self) -> usize {
@@ -130,6 +134,27 @@ impl MeasurementCache {
 
     pub fn get(&self, key: &str) -> Option<f64> {
         self.entries.get(key).copied()
+    }
+
+    /// Counted lookup: like [`MeasurementCache::get`] but bumps the
+    /// hit/miss counters (what the engines use, so shared-cache stats
+    /// reflect real traffic).
+    pub fn lookup(&mut self, key: &str) -> Option<f64> {
+        let r = self.entries.get(key).copied();
+        if r.is_some() {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+        r
+    }
+
+    pub fn hit_count(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn miss_count(&self) -> u64 {
+        self.misses
     }
 
     pub fn insert(&mut self, key: String, time: f64) {
@@ -342,10 +367,10 @@ impl<'a> MeasurementEngine<'a> {
         let mut todo: Vec<usize> = Vec::new();
         let mut dups: Vec<(usize, usize)> = Vec::new();
         {
-            let cache = self.cache.lock().unwrap();
+            let mut cache = self.cache.lock().unwrap();
             let mut first: HashMap<&str, usize> = HashMap::new();
             for (i, k) in keys.iter().enumerate() {
-                if let Some(t) = cache.get(k) {
+                if let Some(t) = cache.lookup(k) {
                     out[i] = t;
                     self.cache_hits += 1;
                 } else if let Some(&j) = first.get(k.as_str()) {
@@ -569,6 +594,29 @@ mod tests {
         assert_eq!(t1, t2);
         assert_eq!(second.measured(), 0, "everything should come from the cache");
         assert_eq!(second.cache_hits(), 2);
+    }
+
+    #[test]
+    fn cache_counters_track_hits_and_misses() {
+        let f = fixture();
+        let plan = |g: &[bool]| analysis::build_plan(&f.analysis, g, false);
+        let len = f.analysis.gene_loops().len();
+        let genes: Vec<Vec<bool>> = vec![vec![false; len], vec![true; len]];
+        let cache = shared(MeasurementCache::in_memory());
+        let mut d1 = sim_dev();
+        let mut first = engine(&f, &plan, 1, cache.clone(), &mut d1);
+        first.measure_batch(&genes);
+        {
+            let c = cache.lock().unwrap();
+            assert_eq!(c.miss_count(), 2);
+            assert_eq!(c.hit_count(), 0);
+        }
+        let mut d2 = sim_dev();
+        let mut second = engine(&f, &plan, 1, cache.clone(), &mut d2);
+        second.measure_batch(&genes);
+        let c = cache.lock().unwrap();
+        assert_eq!(c.miss_count(), 2);
+        assert_eq!(c.hit_count(), 2);
     }
 
     #[test]

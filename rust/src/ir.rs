@@ -25,6 +25,17 @@ impl Lang {
         }
     }
 
+    /// Parse a language name (the inverse of [`Lang::name`]; used by the
+    /// CLI, the service protocol and pattern-DB persistence).
+    pub fn from_name(name: &str) -> Option<Lang> {
+        match name {
+            "c" => Some(Lang::C),
+            "python" | "py" => Some(Lang::Python),
+            "java" => Some(Lang::Java),
+            _ => None,
+        }
+    }
+
     /// Guess a language from a file extension.
     pub fn from_ext(ext: &str) -> Option<Lang> {
         match ext {

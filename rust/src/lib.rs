@@ -24,6 +24,14 @@
 //! over a device worker pool with a persistent cross-run cache
 //! (`engine`).
 //!
+//! On top sits the **offload service** (`server`, `proto`; CLI:
+//! `envadapt serve`): a long-lived daemon accepting concurrent offload
+//! requests over a line-delimited JSON protocol, backed by a coordinator
+//! pool that shares one measurement cache and one *learning* pattern DB
+//! (`patterndb`) — every verified pattern is remembered, and repeat or
+//! near-identical requests replay the known plan with zero new
+//! measurements (the paper's production reuse path).
+//!
 //! See `DESIGN.md` for the full system inventory and the mapping from the
 //! paper's sections to modules.
 
@@ -41,7 +49,9 @@ pub mod ir;
 pub mod libs;
 pub mod measure;
 pub mod patterndb;
+pub mod proto;
 pub mod runtime;
+pub mod server;
 pub mod util;
 pub mod vm;
 pub mod workloads;

@@ -1,37 +1,111 @@
 //! Code-pattern DB (§4.1: コードパターン DB、MySQL8) — the catalogue of
-//! offloadable function blocks.
+//! offloadable function blocks, plus the *learned* offload plans the
+//! service accumulates.
 //!
-//! Each record maps a host-side library function (or a *comparison code*
-//! snippet for clone detection) to the GPU kernel that replaces it and the
-//! artifact sizes available. The paper keeps this in MySQL; here it is an
-//! embedded store with plain-text persistence, exercising the same
-//! queries: lookup-by-name and lookup-by-similarity.
+//! Each function-block record maps a host-side library function (or a
+//! *comparison code* snippet for clone detection) to the GPU kernel that
+//! replaces it and the artifact sizes available. The paper keeps this in
+//! MySQL; here it is an embedded store with plain-text persistence,
+//! exercising the same queries: lookup-by-name and lookup-by-similarity.
+//!
+//! On top of that catalogue sits the **learning** half (Yamato's
+//! function-block follow-ups make reuse of verified patterns the
+//! production path): after a successful search the coordinator inserts a
+//! [`PatternRecord`] whose [`LearnedPlan`] carries the program
+//! fingerprint, the chosen gene/function blocks and the measured times.
+//! A repeat request (exact fingerprint) or a near-identical one
+//! (characteristic-vector similarity) then replays the known plan with
+//! zero new search measurements. Learned records live in a separate
+//! store so clone detection over user loop nests never matches a
+//! whole-program vector.
 
 use crate::clone::{char_vector_stmt, similarity, CharVec};
+use crate::device::TargetKind;
 use crate::frontend::parse;
-use crate::ir::{Lang, NODE_KIND_COUNT, Stmt};
+use crate::ir::{Lang, LoopId, NODE_KIND_COUNT, Stmt};
 use anyhow::{anyhow, bail, Result};
 use std::path::Path;
+use std::sync::{Arc, Mutex};
 
-/// One DB record: a replaceable function block.
+/// A verified offload plan learned from a completed search — everything
+/// needed to rebuild and re-verify the final pattern without searching.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LearnedPlan {
+    /// `engine::fingerprint` of (program IR, measurement config, backend)
+    pub fingerprint: u64,
+    pub lang: Lang,
+    pub target: TargetKind,
+    /// winning gene over `gene_loops` (loop ids after function-block
+    /// exclusion, in gene order)
+    pub gene: Vec<bool>,
+    pub gene_loops: Vec<LoopId>,
+    /// descriptions of the chosen function-block candidates (matched
+    /// against a fresh `find_candidates` run at replay time)
+    pub funcblocks: Vec<String>,
+    /// CPU-only modeled seconds when the plan was learned
+    pub baseline_s: f64,
+    /// the plan's measured modeled seconds
+    pub final_s: f64,
+}
+
+impl LearnedPlan {
+    pub fn speedup(&self) -> f64 {
+        self.baseline_s / self.final_s.max(1e-300)
+    }
+}
+
+/// One DB record: a replaceable function block, or (when `learned` is
+/// set) a learned whole-program offload plan.
 #[derive(Debug, Clone)]
 pub struct PatternRecord {
-    /// host library name (`matmul`, `dft`, ...)
+    /// host library name (`matmul`, `dft`, ...) or `learned/<fp>/<target>`
     pub key: String,
-    /// GPU kernel family (artifact prefix — usually same as key)
+    /// GPU kernel family (artifact prefix — usually same as key; empty
+    /// for learned records)
     pub gpu_kernel: String,
     /// artifact sizes lowered by `python/compile/model.py`
     pub sizes: Vec<usize>,
-    /// characteristic vector of the comparison code (clone detection)
+    /// characteristic vector: of the comparison code (clone detection)
+    /// for function-block records, of the whole program for learned ones
     pub vector: CharVec,
     /// human-readable description (reports)
     pub description: String,
+    /// the learned offload plan, for records inserted by the coordinator
+    pub learned: Option<LearnedPlan>,
 }
 
-/// The pattern DB.
+impl PatternRecord {
+    /// The canonical key of a learned record.
+    pub fn learned_key(fingerprint: u64, target: TargetKind) -> String {
+        format!("learned/{fingerprint:016x}/{}", target.name())
+    }
+
+    /// Build a learned record from a completed search.
+    pub fn from_learned(description: String, vector: CharVec, plan: LearnedPlan) -> PatternRecord {
+        PatternRecord {
+            key: PatternRecord::learned_key(plan.fingerprint, plan.target),
+            gpu_kernel: String::new(),
+            sizes: Vec::new(),
+            vector,
+            description,
+            learned: Some(plan),
+        }
+    }
+}
+
+/// The pattern DB: the function-block catalogue plus learned plans.
 #[derive(Debug, Clone, Default)]
 pub struct PatternDb {
     records: Vec<PatternRecord>,
+    learned: Vec<PatternRecord>,
+}
+
+/// The DB as shared between service workers' coordinators: every worker
+/// learns into — and reuses from — the same store.
+pub type SharedPatternDb = Arc<Mutex<PatternDb>>;
+
+pub fn shared(db: PatternDb) -> SharedPatternDb {
+    Arc::new(Mutex::new(db))
 }
 
 /// Comparison code: a canonical hand-written matmul nest. Clone detection
@@ -84,9 +158,11 @@ impl PatternDb {
             sizes: sizes.to_vec(),
             vector,
             description: desc.to_string(),
+            learned: None,
         };
         let zero = [0.0; NODE_KIND_COUNT];
         PatternDb {
+            learned: Vec::new(),
             records: vec![
                 rec(
                     "matmul",
@@ -122,16 +198,114 @@ impl PatternDb {
         }
     }
 
+    /// Number of function-block records (learned records are counted by
+    /// [`PatternDb::learned_len`]).
     pub fn len(&self) -> usize {
         self.records.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.records.is_empty()
+        self.records.is_empty() && self.learned.is_empty()
     }
 
+    /// Function-block records only — this is what clone detection scans,
+    /// so learned whole-program vectors never shadow comparison code.
     pub fn records(&self) -> &[PatternRecord] {
         &self.records
+    }
+
+    pub fn learned_records(&self) -> &[PatternRecord] {
+        &self.learned
+    }
+
+    pub fn learned_len(&self) -> usize {
+        self.learned.len()
+    }
+
+    /// Insert a freshly measured learned plan. A fresh measurement is
+    /// newer ground truth than whatever is stored, so an existing record
+    /// with the same key is replaced. Returns whether the DB changed
+    /// (false only when an identical record is already present).
+    pub fn insert_learned(&mut self, rec: PatternRecord) -> bool {
+        debug_assert!(rec.learned.is_some(), "insert_learned needs a LearnedPlan");
+        match self.learned.iter().position(|r| r.key == rec.key) {
+            Some(pos) => {
+                if self.learned[pos].learned == rec.learned {
+                    false
+                } else {
+                    self.learned[pos] = rec;
+                    true
+                }
+            }
+            None => {
+                self.learned.push(rec);
+                true
+            }
+        }
+    }
+
+    /// Merge another DB (typically one loaded from disk) into this one.
+    /// Function-block records are added when their key is new; learned
+    /// records are added when new, and on a duplicate key the *faster*
+    /// plan (smaller `final_s`) wins. Returns how many records changed.
+    pub fn merge(&mut self, other: PatternDb) -> usize {
+        let mut changed = 0usize;
+        for r in other.records {
+            if self.lookup_name(&r.key).is_none() {
+                self.records.push(r);
+                changed += 1;
+            }
+        }
+        for r in other.learned {
+            let incoming_final =
+                r.learned.as_ref().expect("learned record carries a plan").final_s;
+            match self.learned.iter().position(|x| x.key == r.key) {
+                None => {
+                    self.learned.push(r);
+                    changed += 1;
+                }
+                Some(pos) => {
+                    let current_final = self.learned[pos].learned.as_ref().unwrap().final_s;
+                    if incoming_final < current_final {
+                        self.learned[pos] = r;
+                        changed += 1;
+                    }
+                }
+            }
+        }
+        changed
+    }
+
+    /// Exact learned-pattern lookup: same program fingerprint, same
+    /// target — the service's zero-measurement fast path.
+    pub fn lookup_learned(&self, fingerprint: u64, target: TargetKind) -> Option<&PatternRecord> {
+        let key = PatternRecord::learned_key(fingerprint, target);
+        self.learned.iter().find(|r| r.key == key)
+    }
+
+    /// Similarity lookup over *learned* records only: best record for
+    /// `target` whose whole-program vector scores ≥ `threshold` against
+    /// `v`. The caller must still validate the replayed plan against its
+    /// own analysis (gene-loop set, candidate descriptions) and re-verify
+    /// the result — similarity alone is a hint, not proof.
+    pub fn lookup_learned_similar(
+        &self,
+        v: &CharVec,
+        target: TargetKind,
+        threshold: f64,
+    ) -> Option<(&PatternRecord, f64)> {
+        let mut best: Option<(&PatternRecord, f64)> = None;
+        for r in &self.learned {
+            let Some(plan) = r.learned.as_ref() else { continue };
+            if plan.target != target || r.vector.iter().all(|&x| x == 0.0) {
+                continue;
+            }
+            let s = similarity(v, &r.vector);
+            if s >= threshold && best.map(|(_, bs)| s > bs).unwrap_or(true) {
+                best = Some((r, s));
+            }
+        }
+        best
     }
 
     /// Name-match lookup (the paper's ライブラリ名一致).
@@ -160,21 +334,83 @@ impl PatternDb {
         record.sizes.contains(&n)
     }
 
-    // ---- persistence (line format: key|gpu|sizes|desc|vector) ------------
+    // ---- persistence -----------------------------------------------------
+    //
+    // Line format (v2):
+    //   function block: key|gpu|sizes|desc|vector
+    //   learned plan:   key|gpu|sizes|desc|vector|fp|lang|target|gene|
+    //                   gene_loops|funcblocks|baseline_s|final_s
+    // (13 fields; `-` stands for an empty gene / loop list / block list.)
+    // v1 files (5 fields everywhere) still load.
+
+    /// Builtin catalogue merged with whatever `path` holds (when given
+    /// and present) — how a restarted service resumes its learned state.
+    /// An unreadable file is reported and ignored, never fatal.
+    pub fn open_or_builtin(path: Option<&Path>) -> PatternDb {
+        let mut db = PatternDb::builtin();
+        if let Some(p) = path {
+            if p.exists() {
+                match PatternDb::load(p) {
+                    Ok(other) => {
+                        db.merge(other);
+                    }
+                    Err(e) => {
+                        eprintln!("warning: pattern DB {} not loaded: {e}", p.display());
+                    }
+                }
+            }
+        }
+        db
+    }
 
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let mut out = String::from("# envadapt pattern DB v1\n");
-        for r in &self.records {
+        let mut out = String::from("# envadapt pattern DB v2\n");
+        for r in self.records.iter().chain(&self.learned) {
             let sizes: Vec<String> = r.sizes.iter().map(|s| s.to_string()).collect();
             let vec: Vec<String> = r.vector.iter().map(|x| format!("{x}")).collect();
+            // the description can embed user input (app names) — scrub
+            // everything that could corrupt or inject a record line
             out.push_str(&format!(
-                "{}|{}|{}|{}|{}\n",
+                "{}|{}|{}|{}|{}",
                 r.key,
                 r.gpu_kernel,
                 sizes.join(","),
-                r.description.replace('|', "/"),
+                r.description.replace(['|', '\n', '\r'], "/"),
                 vec.join(",")
             ));
+            if let Some(p) = &r.learned {
+                let gene: String = if p.gene.is_empty() {
+                    "-".to_string()
+                } else {
+                    p.gene.iter().map(|&b| if b { '1' } else { '0' }).collect()
+                };
+                let loops = if p.gene_loops.is_empty() {
+                    "-".to_string()
+                } else {
+                    p.gene_loops.iter().map(|l| l.to_string()).collect::<Vec<_>>().join(",")
+                };
+                let blocks = if p.funcblocks.is_empty() {
+                    "-".to_string()
+                } else {
+                    p.funcblocks
+                        .iter()
+                        .map(|b| b.replace(['|', ';', '\n', '\r'], "/"))
+                        .collect::<Vec<_>>()
+                        .join(";")
+                };
+                out.push_str(&format!(
+                    "|{:016x}|{}|{}|{}|{}|{}|{}|{}",
+                    p.fingerprint,
+                    p.lang.name(),
+                    p.target.name(),
+                    gene,
+                    loops,
+                    blocks,
+                    p.baseline_s,
+                    p.final_s
+                ));
+            }
+            out.push('\n');
         }
         std::fs::write(path, out)?;
         Ok(())
@@ -182,13 +418,13 @@ impl PatternDb {
 
     pub fn load(path: impl AsRef<Path>) -> Result<PatternDb> {
         let text = std::fs::read_to_string(&path)?;
-        let mut records = Vec::new();
+        let mut db = PatternDb::default();
         for (lineno, line) in text.lines().enumerate() {
             if line.starts_with('#') || line.trim().is_empty() {
                 continue;
             }
             let parts: Vec<&str> = line.split('|').collect();
-            if parts.len() != 5 {
+            if parts.len() != 5 && parts.len() != 13 {
                 bail!("pattern DB line {} malformed", lineno + 1);
             }
             let sizes: Vec<usize> = parts[2]
@@ -205,15 +441,71 @@ impl PatternDb {
             }
             let mut vector = [0.0; NODE_KIND_COUNT];
             vector.copy_from_slice(&vec_parts);
-            records.push(PatternRecord {
+            let learned = if parts.len() == 13 {
+                Some(Self::parse_learned(&parts, lineno)?)
+            } else {
+                None
+            };
+            let rec = PatternRecord {
                 key: parts[0].to_string(),
                 gpu_kernel: parts[1].to_string(),
                 sizes,
                 vector,
                 description: parts[3].to_string(),
-            });
+                learned,
+            };
+            if rec.learned.is_some() {
+                db.learned.push(rec);
+            } else {
+                db.records.push(rec);
+            }
         }
-        Ok(PatternDb { records })
+        Ok(db)
+    }
+
+    fn parse_learned(parts: &[&str], lineno: usize) -> Result<LearnedPlan> {
+        let bad = |what: &str| anyhow!("pattern DB line {}: bad {what}", lineno + 1);
+        let fingerprint =
+            u64::from_str_radix(parts[5], 16).map_err(|_| bad("fingerprint"))?;
+        let lang = Lang::from_name(parts[6]).ok_or_else(|| bad("language"))?;
+        let target = TargetKind::from_name(parts[7]).ok_or_else(|| bad("target"))?;
+        let gene: Vec<bool> = if parts[8] == "-" {
+            Vec::new()
+        } else {
+            parts[8]
+                .chars()
+                .map(|c| match c {
+                    '0' => Ok(false),
+                    '1' => Ok(true),
+                    _ => Err(bad("gene")),
+                })
+                .collect::<Result<_>>()?
+        };
+        let gene_loops: Vec<LoopId> = if parts[9] == "-" {
+            Vec::new()
+        } else {
+            parts[9]
+                .split(',')
+                .map(|s| s.parse().map_err(|_| bad("gene loop id")))
+                .collect::<Result<_>>()?
+        };
+        let funcblocks: Vec<String> = if parts[10] == "-" {
+            Vec::new()
+        } else {
+            parts[10].split(';').map(|s| s.to_string()).collect()
+        };
+        let baseline_s: f64 = parts[11].parse().map_err(|_| bad("baseline_s"))?;
+        let final_s: f64 = parts[12].parse().map_err(|_| bad("final_s"))?;
+        Ok(LearnedPlan {
+            fingerprint,
+            lang,
+            target,
+            gene,
+            gene_loops,
+            funcblocks,
+            baseline_s,
+            final_s,
+        })
     }
 }
 
@@ -275,6 +567,147 @@ mod tests {
         let tmp = std::env::temp_dir().join("envadapt_patterndb_bad.txt");
         std::fs::write(&tmp, "only|three|fields\n").unwrap();
         assert!(PatternDb::load(&tmp).is_err());
+        std::fs::remove_file(tmp).ok();
+    }
+
+    fn sample_plan(fingerprint: u64, final_s: f64) -> LearnedPlan {
+        LearnedPlan {
+            fingerprint,
+            lang: Lang::C,
+            target: TargetKind::Gpu,
+            gene: vec![true, false, true],
+            gene_loops: vec![2, 5, 7],
+            funcblocks: vec!["library call `matmul` → GPU dense square matmul".to_string()],
+            baseline_s: 0.5,
+            final_s,
+        }
+    }
+
+    fn sample_learned(fingerprint: u64, final_s: f64) -> PatternRecord {
+        let mut vector = [0.0; NODE_KIND_COUNT];
+        vector[0] = 3.0;
+        vector[1] = 2.0;
+        // hostile description: user-controlled app names can carry '|' and
+        // newlines — persistence must scrub them (see save())
+        PatternRecord::from_learned(
+            format!("learned: app|x\nfp={fingerprint:x}"),
+            vector,
+            sample_plan(fingerprint, final_s),
+        )
+    }
+
+    #[test]
+    fn learned_records_roundtrip_through_disk() {
+        let mut db = PatternDb::builtin();
+        assert!(db.insert_learned(sample_learned(0xABCD, 0.125)));
+        let mut empty_gene = sample_learned(0xEF01, 0.25);
+        let plan = empty_gene.learned.as_mut().unwrap();
+        plan.gene.clear();
+        plan.gene_loops.clear();
+        plan.funcblocks.clear();
+        assert!(db.insert_learned(empty_gene));
+        let tmp = std::env::temp_dir()
+            .join(format!("envadapt_patterndb_learned_{}.txt", std::process::id()));
+        db.save(&tmp).unwrap();
+        let loaded = PatternDb::load(&tmp).unwrap();
+        assert_eq!(loaded.len(), db.len(), "function-block records survive");
+        assert_eq!(loaded.learned_len(), 2);
+        let a = db.lookup_learned(0xABCD, TargetKind::Gpu).unwrap();
+        let b = loaded.lookup_learned(0xABCD, TargetKind::Gpu).unwrap();
+        assert_eq!(a.learned, b.learned, "learned plan fields must round-trip exactly");
+        assert_eq!(a.vector, b.vector);
+        let e = loaded.lookup_learned(0xEF01, TargetKind::Gpu).unwrap();
+        let p = e.learned.as_ref().unwrap();
+        assert!(p.gene.is_empty() && p.gene_loops.is_empty() && p.funcblocks.is_empty());
+        assert!(loaded.lookup_learned(0xABCD, TargetKind::Fpga).is_none(), "target is keyed");
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn insert_learned_replaces_same_key_and_reports_change() {
+        let mut db = PatternDb::default();
+        assert!(db.insert_learned(sample_learned(7, 0.2)));
+        // identical record: no change
+        assert!(!db.insert_learned(sample_learned(7, 0.2)));
+        assert_eq!(db.learned_len(), 1);
+        // same key, fresh (different) measurement: replaced even if slower
+        assert!(db.insert_learned(sample_learned(7, 0.3)));
+        assert_eq!(db.learned_len(), 1);
+        let p = db.lookup_learned(7, TargetKind::Gpu).unwrap().learned.as_ref().unwrap();
+        assert_eq!(p.final_s, 0.3);
+    }
+
+    #[test]
+    fn merge_keeps_faster_plan_on_duplicate_keys() {
+        let mut db = PatternDb::builtin();
+        let fb_count = db.len();
+        db.insert_learned(sample_learned(7, 0.2));
+        let mut other = PatternDb::default();
+        other.insert_learned(sample_learned(7, 0.4)); // slower duplicate
+        other.insert_learned(sample_learned(8, 0.1)); // new
+        assert_eq!(db.merge(other), 1, "only the new record lands");
+        assert_eq!(db.learned_len(), 2);
+        let p = db.lookup_learned(7, TargetKind::Gpu).unwrap().learned.as_ref().unwrap();
+        assert_eq!(p.final_s, 0.2, "slower duplicate must not replace");
+        // now merge a faster duplicate
+        let mut faster = PatternDb::default();
+        faster.insert_learned(sample_learned(7, 0.05));
+        assert_eq!(db.merge(faster), 1);
+        let p = db.lookup_learned(7, TargetKind::Gpu).unwrap().learned.as_ref().unwrap();
+        assert_eq!(p.final_s, 0.05);
+        assert_eq!(db.len(), fb_count, "merge never duplicates builtin records");
+    }
+
+    #[test]
+    fn lookup_similar_threshold_is_inclusive() {
+        let db = PatternDb::builtin();
+        let mut v = comparison_vector(MATMUL_COMPARISON_C);
+        // perturb one slot so the score is strictly below 1
+        v[0] += 1.0;
+        let (_, score) = db.lookup_similar(&v, 0.0).unwrap();
+        assert!(score < 1.0 && score > 0.5, "perturbed score {score}");
+        // exactly at the threshold: accepted (>=)
+        assert!(db.lookup_similar(&v, score).is_some());
+        // just above: rejected
+        assert!(db.lookup_similar(&v, score + 1e-9).is_none());
+    }
+
+    #[test]
+    fn learned_similarity_respects_target_and_threshold() {
+        let mut db = PatternDb::default();
+        db.insert_learned(sample_learned(7, 0.2));
+        let v = db.learned_records()[0].vector;
+        let (r, s) = db.lookup_learned_similar(&v, TargetKind::Gpu, 0.99).unwrap();
+        assert_eq!(r.learned.as_ref().unwrap().fingerprint, 7);
+        assert!(s > 0.999);
+        assert!(
+            db.lookup_learned_similar(&v, TargetKind::ManyCore, 0.99).is_none(),
+            "other targets must not reuse a GPU plan"
+        );
+        let mut far = v;
+        far[0] += 100.0;
+        assert!(db.lookup_learned_similar(&far, TargetKind::Gpu, 0.99).is_none());
+        // learned vectors must never leak into clone detection
+        assert!(db.lookup_similar(&v, 0.0).is_none());
+    }
+
+    #[test]
+    fn open_or_builtin_resumes_learned_state() {
+        let tmp = std::env::temp_dir()
+            .join(format!("envadapt_patterndb_resume_{}.txt", std::process::id()));
+        let _ = std::fs::remove_file(&tmp);
+        // missing file: plain builtin
+        let db = PatternDb::open_or_builtin(Some(&tmp));
+        assert_eq!(db.learned_len(), 0);
+        assert!(db.lookup_name("matmul").is_some());
+        // save a learned record, reopen: builtin + learned
+        let mut db = db;
+        db.insert_learned(sample_learned(42, 0.5));
+        db.save(&tmp).unwrap();
+        let resumed = PatternDb::open_or_builtin(Some(&tmp));
+        assert!(resumed.lookup_name("matmul").is_some());
+        assert_eq!(resumed.learned_len(), 1);
+        assert!(resumed.lookup_learned(42, TargetKind::Gpu).is_some());
         std::fs::remove_file(tmp).ok();
     }
 }

@@ -1,0 +1,274 @@
+//! Line-delimited JSON protocol for the offload service (`envadapt
+//! serve`) — the paper's "application use request" wire format.
+//!
+//! Every request and every response is one JSON object per line. The
+//! request `op` selects the operation; `id` is echoed back so clients can
+//! pipeline requests over one connection:
+//!
+//! ```text
+//! → {"op":"offload","id":1,"name":"mm","lang":"c","code":"...","target":"gpu"}
+//! ← {"id":1,"ok":true,"op":"offload","worker":0,"report":{...}}
+//! → {"op":"stats","id":2}
+//! ← {"id":2,"ok":true,"op":"stats","stats":{...}}
+//! → {"op":"ping","id":3}
+//! ← {"id":3,"ok":true,"op":"ping"}
+//! → {"op":"shutdown","id":4}
+//! ← {"id":4,"ok":true,"op":"shutdown"}
+//! ```
+//!
+//! Failures come back as `{"id":N,"ok":false,"error":"..."}` and never
+//! tear down the connection. The offload report payload is
+//! [`crate::coordinator::OffloadReport::to_json`]; its `measurements`,
+//! `cache_hits`, `measure_launches` and `pattern_reuse` fields are how a
+//! client observes the learned-pattern fast path (zero new measurements
+//! on a repeat request).
+
+use crate::coordinator::OffloadReport;
+use crate::device::TargetKind;
+use crate::ir::Lang;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// An `op: "offload"` request: convert + search (or replay) one program.
+#[derive(Debug, Clone)]
+pub struct OffloadRequest {
+    pub id: i64,
+    /// application name (reports/logs only)
+    pub name: String,
+    pub lang: Lang,
+    pub code: String,
+    /// migration target; `None` = the server's configured default
+    pub target: Option<TargetKind>,
+}
+
+/// One parsed protocol request.
+#[derive(Debug, Clone)]
+pub enum Request {
+    Offload(Box<OffloadRequest>),
+    Stats { id: i64 },
+    Ping { id: i64 },
+    Shutdown { id: i64 },
+}
+
+impl Request {
+    pub fn id(&self) -> i64 {
+        match self {
+            Request::Offload(r) => r.id,
+            Request::Stats { id } | Request::Ping { id } | Request::Shutdown { id } => *id,
+        }
+    }
+
+    /// Parse one request line.
+    pub fn parse_line(line: &str) -> Result<Request> {
+        let j = Json::parse(line.trim()).map_err(|e| anyhow!("bad request JSON: {e}"))?;
+        let id = j.get("id").and_then(|v| v.as_i64()).unwrap_or(0);
+        let op = j
+            .get("op")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("request needs a string `op` field"))?;
+        match op {
+            "offload" => {
+                let name =
+                    j.get("name").and_then(|v| v.as_str()).unwrap_or("request").to_string();
+                let lang_name = j
+                    .get("lang")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("offload needs a `lang` field"))?;
+                let lang = Lang::from_name(lang_name)
+                    .ok_or_else(|| anyhow!("unknown language {lang_name:?}"))?;
+                let code = j
+                    .get("code")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("offload needs a `code` field"))?
+                    .to_string();
+                let target = match j.get("target").and_then(|v| v.as_str()) {
+                    None => None,
+                    Some(t) => Some(
+                        TargetKind::from_name(t)
+                            .ok_or_else(|| anyhow!("unknown target {t:?}"))?,
+                    ),
+                };
+                Ok(Request::Offload(Box::new(OffloadRequest { id, name, lang, code, target })))
+            }
+            "stats" => Ok(Request::Stats { id }),
+            "ping" => Ok(Request::Ping { id }),
+            "shutdown" => Ok(Request::Shutdown { id }),
+            other => bail!("unknown op {other:?}"),
+        }
+    }
+
+    /// Client-side rendering: one line, newline not included.
+    pub fn to_line(&self) -> String {
+        match self {
+            Request::Offload(r) => {
+                let mut j = Json::obj()
+                    .set("op", "offload")
+                    .set("id", r.id)
+                    .set("name", r.name.as_str())
+                    .set("lang", r.lang.name())
+                    .set("code", r.code.as_str());
+                if let Some(t) = r.target {
+                    j = j.set("target", t.name());
+                }
+                j.to_string()
+            }
+            Request::Stats { id } => {
+                Json::obj().set("op", "stats").set("id", *id).to_string()
+            }
+            Request::Ping { id } => Json::obj().set("op", "ping").set("id", *id).to_string(),
+            Request::Shutdown { id } => {
+                Json::obj().set("op", "shutdown").set("id", *id).to_string()
+            }
+        }
+    }
+}
+
+/// Best-effort id extraction from a request line that failed to parse as
+/// a [`Request`] — error responses still echo the id so pipelining
+/// clients can match them (0 when the line isn't even JSON).
+pub fn line_id(line: &str) -> i64 {
+    Json::parse(line.trim())
+        .ok()
+        .and_then(|j| j.get("id").and_then(|v| v.as_i64()))
+        .unwrap_or(0)
+}
+
+/// Convenience for clients: render an offload request line.
+pub fn offload_request(id: i64, name: &str, lang: Lang, code: &str) -> String {
+    Request::Offload(Box::new(OffloadRequest {
+        id,
+        name: name.to_string(),
+        lang,
+        code: code.to_string(),
+        target: None,
+    }))
+    .to_line()
+}
+
+// ---------------------------------------------------------------------------
+// responses
+// ---------------------------------------------------------------------------
+
+/// Successful offload response (the worker id tells clients which pool
+/// member served them — useful when diagnosing warm-cache behaviour).
+pub fn ok_offload(id: i64, report: &OffloadReport, worker: usize) -> Json {
+    Json::obj()
+        .set("id", id)
+        .set("ok", true)
+        .set("op", "offload")
+        .set("worker", worker)
+        .set("report", report.to_json())
+}
+
+pub fn ok_simple(id: i64, op: &str) -> Json {
+    Json::obj().set("id", id).set("ok", true).set("op", op)
+}
+
+pub fn ok_stats(id: i64, stats: Json) -> Json {
+    Json::obj().set("id", id).set("ok", true).set("op", "stats").set("stats", stats)
+}
+
+pub fn err(id: i64, msg: &str) -> Json {
+    Json::obj().set("id", id).set("ok", false).set("error", msg)
+}
+
+/// A parsed response, for clients.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: i64,
+    pub ok: bool,
+    pub error: Option<String>,
+    /// the full response object (use `body.get("report")`, ...)
+    pub body: Json,
+}
+
+impl Response {
+    pub fn parse_line(line: &str) -> Result<Response> {
+        let body = Json::parse(line.trim()).map_err(|e| anyhow!("bad response JSON: {e}"))?;
+        let id = body.get("id").and_then(|v| v.as_i64()).unwrap_or(0);
+        let ok = body.get("ok").and_then(|v| v.as_bool()).unwrap_or(false);
+        let error = body.get("error").and_then(|v| v.as_str()).map(|s| s.to_string());
+        Ok(Response { id, ok, error, body })
+    }
+
+    /// The offload report object, when this is an offload response.
+    pub fn report(&self) -> Option<&Json> {
+        self.body.get("report")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offload_request_round_trips() {
+        let line = offload_request(7, "mm", Lang::Python, "def main():\n    pass\n");
+        let req = Request::parse_line(&line).unwrap();
+        match req {
+            Request::Offload(r) => {
+                assert_eq!(r.id, 7);
+                assert_eq!(r.name, "mm");
+                assert_eq!(r.lang, Lang::Python);
+                assert!(r.code.contains('\n'), "newlines must survive the wire");
+                assert!(r.target.is_none());
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn target_and_simple_ops_parse() {
+        let req = Request::parse_line(
+            r#"{"op":"offload","id":1,"lang":"c","code":"void main() { }","target":"fpga"}"#,
+        )
+        .unwrap();
+        match req {
+            Request::Offload(r) => {
+                assert_eq!(r.target, Some(TargetKind::Fpga));
+                assert_eq!(r.name, "request", "name defaults");
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+        for (line, id) in [
+            (r#"{"op":"stats","id":2}"#, 2),
+            (r#"{"op":"ping","id":3}"#, 3),
+            (r#"{"op":"shutdown","id":4}"#, 4),
+        ] {
+            let r = Request::parse_line(line).unwrap();
+            assert_eq!(r.id(), id);
+            assert_eq!(Request::parse_line(&r.to_line()).unwrap().id(), id);
+        }
+    }
+
+    #[test]
+    fn bad_requests_are_rejected() {
+        assert!(Request::parse_line("not json").is_err());
+        assert!(Request::parse_line(r#"{"id":1}"#).is_err(), "missing op");
+        assert!(Request::parse_line(r#"{"op":"dance","id":1}"#).is_err());
+        assert!(Request::parse_line(r#"{"op":"offload","id":1,"lang":"cobol","code":""}"#)
+            .is_err());
+        assert!(Request::parse_line(r#"{"op":"offload","id":1,"lang":"c"}"#).is_err());
+        assert!(Request::parse_line(
+            r#"{"op":"offload","id":1,"lang":"c","code":"","target":"abacus"}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn line_id_is_best_effort() {
+        assert_eq!(line_id(r#"{"op":"dance","id":42}"#), 42);
+        assert_eq!(line_id(r#"{"op":"offload","id":7,"lang":"cobol","code":""}"#), 7);
+        assert_eq!(line_id("not json at all"), 0);
+        assert_eq!(line_id(r#"{"op":"stats"}"#), 0);
+    }
+
+    #[test]
+    fn error_response_round_trips() {
+        let j = err(9, "boom");
+        let r = Response::parse_line(&j.to_string()).unwrap();
+        assert_eq!(r.id, 9);
+        assert!(!r.ok);
+        assert_eq!(r.error.as_deref(), Some("boom"));
+    }
+}

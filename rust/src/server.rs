@@ -1,0 +1,493 @@
+//! The offload service (`envadapt serve`): the long-lived, multi-tenant
+//! daemon the paper's commercial flow describes — user code in any
+//! supported language arrives as a request, is converted and verified,
+//! and every verified pattern is remembered so the next matching request
+//! skips the search entirely.
+//!
+//! Architecture (see `DESIGN.md` §6):
+//!
+//! * **Transport** — line-delimited JSON ([`crate::proto`]) over TCP
+//!   (`serve_tcp`, one thread per connection) or stdin/stdout
+//!   (`serve_stdio`). Connections only parse and route; they never touch
+//!   a device.
+//! * **Worker pool** — [`Service::start`] spawns `pool` OS threads, each
+//!   owning its coordinators (devices are not `Send`, so coordinators
+//!   are built inside their worker thread, one per migration target on
+//!   demand). Workers pull [`Job`]s from one shared queue; replies go
+//!   back over per-request channels, so slow searches never block other
+//!   connections. The per-coordinator measurement-worker budget is
+//!   `cfg.workers / pool`, the same non-multiplying policy as
+//!   `offload_batch`.
+//! * **Shared learning state** — all workers share one measurement cache
+//!   ([`crate::engine::SharedCache`]) and one pattern DB
+//!   ([`SharedPatternDb`]): a pattern learned by any worker is replayed
+//!   by every worker, and persists across restarts via
+//!   `ServeOptions::db_path`.
+
+use crate::config::Config;
+use crate::coordinator::Coordinator;
+use crate::device::TargetKind;
+use crate::engine::{self, SharedCache};
+use crate::patterndb::{self, PatternDb, SharedPatternDb};
+use crate::proto::{self, OffloadRequest, Request};
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Service-level options (everything else comes from [`Config`]).
+#[derive(Debug, Clone, Default)]
+pub struct ServeOptions {
+    /// coordinator pool size; 0 = min(4, host parallelism)
+    pub pool: usize,
+    /// pattern-DB persistence file: learned patterns are loaded at start
+    /// and saved after every insert, so the service resumes warm
+    pub db_path: Option<PathBuf>,
+}
+
+/// Cumulative request counters (one instance per service, shared).
+#[derive(Debug, Default)]
+pub struct ServiceStats {
+    pub requests: u64,
+    pub offloads: u64,
+    pub errors: u64,
+    /// offloads answered from the learned pattern DB (zero-search replay)
+    pub reuse_hits: u64,
+    /// offloads that inserted a new learned pattern
+    pub learned: u64,
+    /// search measurements spent across all offloads
+    pub measurements: u64,
+}
+
+struct Job {
+    req: OffloadRequest,
+    reply: Sender<Json>,
+}
+
+/// The shared service core: worker pool + job queue + learning state.
+/// (`Sender` sits behind a `Mutex` so `Service` is `Sync` on every
+/// supported toolchain; the lock covers only the enqueue, never the
+/// search itself.)
+pub struct Service {
+    jobs: Mutex<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    db: SharedPatternDb,
+    cache: SharedCache,
+    stats: Arc<Mutex<ServiceStats>>,
+    pool: usize,
+    started: std::time::Instant,
+}
+
+impl Service {
+    /// Build the shared state and spawn the coordinator worker pool.
+    pub fn start(cfg: Config, opts: &ServeOptions) -> Service {
+        let pool = if opts.pool == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4)
+        } else {
+            opts.pool
+        };
+        let mut cfg = cfg;
+        cfg.pattern_db_path = opts.db_path.clone();
+        // split the measurement-worker budget across the pool so the two
+        // pool levels don't multiply into pool × cfg.workers threads
+        let mut wcfg = cfg.clone();
+        wcfg.workers = (cfg.effective_workers() / pool).max(1);
+        let db = patterndb::shared(PatternDb::open_or_builtin(opts.db_path.as_deref()));
+        let cache = engine::cache_for(&cfg);
+        let stats = Arc::new(Mutex::new(ServiceStats::default()));
+        let (jobs, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(pool);
+        for wid in 0..pool {
+            let rx = rx.clone();
+            let wcfg = wcfg.clone();
+            let db = db.clone();
+            let cache = cache.clone();
+            let stats = stats.clone();
+            workers.push(std::thread::spawn(move || {
+                worker_loop(wid, wcfg, db, cache, rx, stats)
+            }));
+        }
+        Service {
+            jobs: Mutex::new(jobs),
+            workers,
+            db,
+            cache,
+            stats,
+            pool,
+            started: std::time::Instant::now(),
+        }
+    }
+
+    /// Handle one request line; returns the response and whether the
+    /// caller should shut the whole service down.
+    pub fn dispatch_line(&self, line: &str) -> (Json, bool) {
+        match Request::parse_line(line) {
+            Ok(req) => self.dispatch(req),
+            Err(e) => {
+                let mut s = self.stats.lock().unwrap();
+                s.requests += 1;
+                s.errors += 1;
+                // echo the id when the line was at least JSON, so
+                // pipelining clients can still match the error
+                (proto::err(proto::line_id(line), &e.to_string()), false)
+            }
+        }
+    }
+
+    /// Handle one parsed request.
+    pub fn dispatch(&self, req: Request) -> (Json, bool) {
+        self.stats.lock().unwrap().requests += 1;
+        match req {
+            Request::Offload(r) => {
+                let id = r.id;
+                let (tx, rx) = mpsc::channel();
+                let enqueued = self.jobs.lock().unwrap().send(Job { req: *r, reply: tx });
+                if enqueued.is_err() {
+                    self.stats.lock().unwrap().errors += 1;
+                    return (proto::err(id, "service is shutting down"), false);
+                }
+                match rx.recv() {
+                    Ok(resp) => (resp, false),
+                    Err(_) => {
+                        self.stats.lock().unwrap().errors += 1;
+                        (proto::err(id, "worker died before replying"), false)
+                    }
+                }
+            }
+            Request::Stats { id } => (proto::ok_stats(id, self.stats_json()), false),
+            Request::Ping { id } => (proto::ok_simple(id, "ping"), false),
+            Request::Shutdown { id } => (proto::ok_simple(id, "shutdown"), true),
+        }
+    }
+
+    /// The `stats` op payload: request counters plus the shared learning
+    /// state (pattern DB size, measurement-cache traffic).
+    pub fn stats_json(&self) -> Json {
+        let (requests, offloads, errors, reuse_hits, learned, measurements) = {
+            let s = self.stats.lock().unwrap();
+            (s.requests, s.offloads, s.errors, s.reuse_hits, s.learned, s.measurements)
+        };
+        let (cache_entries, cache_hits, cache_misses) = {
+            let c = self.cache.lock().unwrap();
+            (c.len(), c.hit_count(), c.miss_count())
+        };
+        let learned_records = self.db.lock().unwrap().learned_len();
+        Json::obj()
+            .set("workers", self.pool)
+            .set("uptime_s", self.started.elapsed().as_secs_f64())
+            .set("requests", requests as i64)
+            .set("offloads", offloads as i64)
+            .set("errors", errors as i64)
+            .set("pattern_reuse_hits", reuse_hits as i64)
+            .set("patterns_learned", learned as i64)
+            .set("learned_records", learned_records)
+            .set("search_measurements", measurements as i64)
+            .set("cache_entries", cache_entries)
+            .set("cache_hits", cache_hits as i64)
+            .set("cache_misses", cache_misses as i64)
+    }
+
+    /// Handle on the shared pattern DB (tests, introspection).
+    pub fn db(&self) -> SharedPatternDb {
+        self.db.clone()
+    }
+
+    /// Close the job queue and join the worker pool.
+    pub fn shutdown(self) {
+        drop(self.jobs);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    wid: usize,
+    cfg: Config,
+    db: SharedPatternDb,
+    cache: SharedCache,
+    rx: Arc<Mutex<Receiver<Job>>>,
+    stats: Arc<Mutex<ServiceStats>>,
+) {
+    // Coordinators are built lazily per migration target inside this
+    // thread (devices are not Send) and live for the whole service, so
+    // PJRT executable caches stay warm across requests.
+    let mut coords: HashMap<TargetKind, Coordinator> = HashMap::new();
+    loop {
+        let job = match rx.lock().unwrap().recv() {
+            Ok(j) => j,
+            Err(_) => break, // queue closed: service is shutting down
+        };
+        let resp = handle_offload(wid, &cfg, &db, &cache, &mut coords, &job.req, &stats);
+        // a dropped reply receiver just means the client went away
+        let _ = job.reply.send(resp);
+    }
+}
+
+fn handle_offload(
+    wid: usize,
+    cfg: &Config,
+    db: &SharedPatternDb,
+    cache: &SharedCache,
+    coords: &mut HashMap<TargetKind, Coordinator>,
+    req: &OffloadRequest,
+    stats: &Arc<Mutex<ServiceStats>>,
+) -> Json {
+    let target = req.target.unwrap_or(cfg.target);
+    let coord = coords.entry(target).or_insert_with(|| {
+        let mut tcfg = cfg.clone();
+        tcfg.target = target;
+        tcfg.cost = target.cost_model();
+        tcfg.use_pjrt = cfg.use_pjrt && target == TargetKind::Gpu;
+        Coordinator::with_shared(tcfg, cache.clone(), db.clone())
+    });
+    match coord.offload_source(&req.code, req.lang, &req.name) {
+        Ok(report) => {
+            {
+                let mut s = stats.lock().unwrap();
+                s.offloads += 1;
+                s.measurements += report.total_measurements as u64;
+                if report.reused_pattern.is_some() {
+                    s.reuse_hits += 1;
+                }
+                if report.learned_pattern {
+                    s.learned += 1;
+                }
+            }
+            proto::ok_offload(req.id, &report, wid)
+        }
+        Err(e) => {
+            stats.lock().unwrap().errors += 1;
+            proto::err(req.id, &e.to_string())
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// transports
+// ---------------------------------------------------------------------------
+
+/// Serve one client connection; returns whether the client requested
+/// service shutdown.
+fn handle_conn(stream: TcpStream, service: &Service) -> bool {
+    let Ok(read_half) = stream.try_clone() else { return false };
+    let reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (resp, quit) = service.dispatch_line(&line);
+        if writer.write_all(resp.to_string().as_bytes()).is_err()
+            || writer.write_all(b"\n").is_err()
+            || writer.flush().is_err()
+        {
+            break;
+        }
+        if quit {
+            return true;
+        }
+    }
+    false
+}
+
+/// Accept loop over an already-bound listener: one thread per connection,
+/// all feeding the shared [`Service`]. Returns when a client sends the
+/// `shutdown` op (after draining connections and joining the pool).
+pub fn serve_listener(listener: TcpListener, cfg: Config, opts: ServeOptions) -> Result<()> {
+    let service = Arc::new(Service::start(cfg, &opts));
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = listener.local_addr()?;
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let service = service.clone();
+        let stop = stop.clone();
+        // reap finished connections so a long-lived daemon doesn't
+        // accumulate one JoinHandle per client forever
+        conns.retain(|c| !c.is_finished());
+        conns.push(std::thread::spawn(move || {
+            if handle_conn(stream, &service) {
+                // shutdown requested: stop accepting, then wake the
+                // accept loop with a throwaway connection
+                stop.store(true, Ordering::SeqCst);
+                let _ = TcpStream::connect(addr);
+            }
+        }));
+    }
+    for c in conns {
+        let _ = c.join();
+    }
+    if let Ok(service) = Arc::try_unwrap(service) {
+        service.shutdown();
+    }
+    Ok(())
+}
+
+/// Bind `addr` (e.g. `127.0.0.1:7777`; port 0 picks an ephemeral port)
+/// and serve until a client sends `shutdown`. Blocking — this is what
+/// `envadapt serve` runs.
+pub fn serve_tcp(addr: &str, cfg: Config, opts: ServeOptions) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!("envadapt serve: listening on {}", listener.local_addr()?);
+    serve_listener(listener, cfg, opts)
+}
+
+/// Serve line-delimited JSON on stdin/stdout (single-client mode; offload
+/// work still runs on the coordinator pool). Returns at EOF or on the
+/// `shutdown` op.
+pub fn serve_stdio(cfg: Config, opts: ServeOptions) -> Result<()> {
+    let service = Service::start(cfg, &opts);
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    for line in stdin.lock().lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (resp, quit) = service.dispatch_line(&line);
+        out.write_all(resp.to_string().as_bytes())?;
+        out.write_all(b"\n")?;
+        out.flush()?;
+        if quit {
+            break;
+        }
+    }
+    service.shutdown();
+    Ok(())
+}
+
+/// Handle on a server running on a background thread (tests, examples,
+/// embedding).
+pub struct ServerHandle {
+    addr: SocketAddr,
+    thread: JoinHandle<Result<()>>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Ask the server to stop (a `shutdown` request over a fresh
+    /// connection) and wait for it to wind down. Graceful: open client
+    /// connections are drained first, so disconnect clients before
+    /// calling this for a prompt return.
+    pub fn shutdown(self) -> Result<()> {
+        let mut stream = TcpStream::connect(self.addr)?;
+        stream.write_all(b"{\"op\":\"shutdown\",\"id\":0}\n")?;
+        stream.flush()?;
+        let mut line = String::new();
+        let _ = BufReader::new(stream).read_line(&mut line);
+        match self.thread.join() {
+            Ok(r) => r,
+            Err(_) => Err(anyhow!("server thread panicked")),
+        }
+    }
+}
+
+/// Bind `addr` and serve on a background thread; the returned handle
+/// carries the bound address (bind port 0 for an ephemeral port).
+pub fn spawn_tcp(cfg: Config, opts: ServeOptions, addr: &str) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let addr = listener.local_addr()?;
+    let thread = std::thread::spawn(move || serve_listener(listener, cfg, opts));
+    Ok(ServerHandle { addr, thread })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Lang;
+
+    fn service() -> Service {
+        Service::start(Config::fast_sim(), &ServeOptions { pool: 2, db_path: None })
+    }
+
+    #[test]
+    fn dispatch_ping_stats_and_errors() {
+        let s = service();
+        let (resp, quit) = s.dispatch_line(r#"{"op":"ping","id":5}"#);
+        assert!(!quit);
+        assert_eq!(resp.get("id").and_then(|v| v.as_i64()), Some(5));
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+
+        let (resp, _) = s.dispatch_line("garbage");
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(false));
+
+        let (resp, quit) = s.dispatch_line(r#"{"op":"stats","id":6}"#);
+        assert!(!quit);
+        let stats = resp.get("stats").expect("stats payload");
+        assert_eq!(stats.get("requests").and_then(|v| v.as_i64()), Some(3));
+        assert_eq!(stats.get("errors").and_then(|v| v.as_i64()), Some(1));
+        assert_eq!(stats.get("workers").and_then(|v| v.as_i64()), Some(2));
+
+        let (_, quit) = s.dispatch_line(r#"{"op":"shutdown","id":7}"#);
+        assert!(quit);
+        s.shutdown();
+    }
+
+    #[test]
+    fn offload_learns_then_replays() {
+        let s = service();
+        let code = crate::workloads::get("smallloops", Lang::C).unwrap().code;
+        let line = proto::offload_request(1, "smallloops", Lang::C, code);
+        let (r1, _) = s.dispatch_line(&line);
+        assert_eq!(r1.get("ok").and_then(|v| v.as_bool()), Some(true), "{}", r1.to_string());
+        let rep1 = r1.get("report").unwrap();
+        assert!(rep1.get("measurements").and_then(|v| v.as_i64()).unwrap() > 0);
+        assert!(rep1.get("pattern_reuse").is_none());
+
+        let (r2, _) = s.dispatch_line(&line);
+        let rep2 = r2.get("report").unwrap();
+        assert_eq!(rep2.get("measurements").and_then(|v| v.as_i64()), Some(0));
+        assert!(rep2.get("pattern_reuse").is_some());
+        assert_eq!(rep2.get("gene"), rep1.get("gene"));
+
+        let (stats, _) = s.dispatch_line(r#"{"op":"stats","id":9}"#);
+        let stats = stats.get("stats").unwrap();
+        assert_eq!(stats.get("offloads").and_then(|v| v.as_i64()), Some(2));
+        assert_eq!(stats.get("pattern_reuse_hits").and_then(|v| v.as_i64()), Some(1));
+        assert_eq!(stats.get("patterns_learned").and_then(|v| v.as_i64()), Some(1));
+        assert_eq!(stats.get("learned_records").and_then(|v| v.as_i64()), Some(1));
+        s.shutdown();
+    }
+
+    #[test]
+    fn per_request_target_override() {
+        let s = service();
+        let code = crate::workloads::get("blackscholes", Lang::C).unwrap().code;
+        let req = Request::Offload(Box::new(OffloadRequest {
+            id: 1,
+            name: "blackscholes".to_string(),
+            lang: Lang::C,
+            code: code.to_string(),
+            target: Some(TargetKind::ManyCore),
+        }));
+        let (resp, _) = s.dispatch(req);
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+        // a GPU request for the same program must not reuse the
+        // many-core pattern (targets are keyed separately)
+        let line = proto::offload_request(2, "blackscholes", Lang::C, code);
+        let (resp2, _) = s.dispatch_line(&line);
+        let rep2 = resp2.get("report").unwrap();
+        assert!(rep2.get("pattern_reuse").is_none(), "{}", resp2.to_string());
+        assert!(rep2.get("measurements").and_then(|v| v.as_i64()).unwrap() > 0);
+        s.shutdown();
+    }
+}

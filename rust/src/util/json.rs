@@ -1,7 +1,11 @@
-//! Minimal JSON writer (no serde available offline).
+//! Minimal JSON writer + reader (no serde available offline).
 //!
-//! Only what reports and bench output need: objects, arrays, strings,
-//! numbers, bools. Escapes control characters and quotes correctly.
+//! The writer covers what reports and bench output need: objects, arrays,
+//! strings, numbers, bools; control characters and quotes are escaped
+//! correctly. The reader ([`Json::parse`]) is the inverse, added for the
+//! offload service's line-delimited JSON protocol (`proto`, `server`): a
+//! strict recursive-descent parser over the same value model, plus the
+//! field accessors (`get`, `as_str`, ...) request handlers need.
 
 use std::fmt::Write as _;
 
@@ -28,6 +32,64 @@ impl Json {
             _ => panic!("Json::set on non-object"),
         }
         self
+    }
+
+    /// First value stored under `key` (objects only).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kvs) => kvs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Numeric value: `Num` directly, `Int` widened.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            Json::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn items(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    /// Parse one JSON value from `text` (the whole string must be consumed,
+    /// modulo surrounding whitespace). Errors carry a byte offset.
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser { s: text, b: text.as_bytes(), i: 0, depth: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            return Err(format!("trailing characters at byte {}", p.i));
+        }
+        Ok(v)
     }
 
     pub fn to_string(&self) -> String {
@@ -100,6 +162,265 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// parser
+// ---------------------------------------------------------------------------
+
+/// Containers deeper than this are rejected — recursion must stay
+/// bounded, or one deeply nested line could overflow the stack of
+/// whatever thread parses untrusted input (the serve daemon's).
+const MAX_DEPTH: usize = 128;
+
+struct Parser<'a> {
+    /// the input as a str (for O(1) decoding of multi-byte characters —
+    /// `i` only ever rests on a character boundary)
+    s: &'a str,
+    b: &'a [u8],
+    i: usize,
+    /// current container nesting depth
+    depth: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected `{}` at byte {}", c as char, self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(format!("unexpected `{}` at byte {}", c as char, self.i)),
+            None => Err("unexpected end of input".to_string()),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn enter(&mut self) -> Result<(), String> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} at byte {}", self.i));
+        }
+        Ok(())
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.enter()?;
+        let r = self.object_body();
+        self.depth -= 1;
+        r
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.enter()?;
+        let r = self.array_body();
+        self.depth -= 1;
+        r
+    }
+
+    fn object_body(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut kvs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(kvs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            kvs.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(kvs));
+                }
+                _ => return Err(format!("expected `,` or `}}` at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn array_body(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(xs));
+        }
+        loop {
+            self.skip_ws();
+            xs.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(xs));
+                }
+                _ => return Err(format!("expected `,` or `]` at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        // `get` also rejects a slice ending inside a multi-byte character
+        let digits = self
+            .s
+            .get(self.i..self.i + 4)
+            .ok_or_else(|| format!("bad \\u escape at byte {}", self.i))?;
+        let v = u32::from_str_radix(digits, 16)
+            .map_err(|_| format!("bad \\u escape at byte {}", self.i))?;
+        self.i += 4;
+        Ok(v)
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".to_string()),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => {
+                            out.push('"');
+                            self.i += 1;
+                        }
+                        Some(b'\\') => {
+                            out.push('\\');
+                            self.i += 1;
+                        }
+                        Some(b'/') => {
+                            out.push('/');
+                            self.i += 1;
+                        }
+                        Some(b'n') => {
+                            out.push('\n');
+                            self.i += 1;
+                        }
+                        Some(b'r') => {
+                            out.push('\r');
+                            self.i += 1;
+                        }
+                        Some(b't') => {
+                            out.push('\t');
+                            self.i += 1;
+                        }
+                        Some(b'b') => {
+                            out.push('\u{8}');
+                            self.i += 1;
+                        }
+                        Some(b'f') => {
+                            out.push('\u{c}');
+                            self.i += 1;
+                        }
+                        Some(b'u') => {
+                            self.i += 1;
+                            let mut code = self.hex4()?;
+                            // surrogate pair: combine with a following \uXXXX
+                            if (0xD800..0xDC00).contains(&code)
+                                && self.b[self.i..].starts_with(b"\\u")
+                            {
+                                let save = self.i;
+                                self.i += 2;
+                                let lo = self.hex4()?;
+                                if (0xDC00..0xE000).contains(&lo) {
+                                    code = 0x10000
+                                        + ((code - 0xD800) << 10)
+                                        + (lo - 0xDC00);
+                                } else {
+                                    self.i = save;
+                                }
+                            }
+                            out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        }
+                        _ => return Err(format!("bad escape at byte {}", self.i)),
+                    }
+                }
+                Some(_) => {
+                    // consume one UTF-8 scalar — O(1): `i` is always on a
+                    // character boundary, so the str slice decodes the
+                    // next char without rescanning the remaining input
+                    let start = self.i;
+                    let c = self.s[start..].chars().next().unwrap();
+                    if (c as u32) < 0x20 {
+                        return Err(format!("raw control character at byte {start}"));
+                    }
+                    out.push(c);
+                    self.i += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        let mut float = false;
+        while let Some(c) = self.peek() {
+            match c {
+                b'0'..=b'9' => self.i += 1,
+                b'.' | b'e' | b'E' | b'+' | b'-' => {
+                    float = true;
+                    self.i += 1;
+                }
+                _ => break,
+            }
+        }
+        let tok = &self.s[start..self.i]; // ASCII-only span: boundaries hold
+        if !float {
+            if let Ok(i) = tok.parse::<i64>() {
+                return Ok(Json::Int(i));
+            }
+        }
+        tok.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("bad number `{tok}` at byte {start}"))
     }
 }
 
@@ -190,5 +511,78 @@ mod tests {
     fn pretty_prints() {
         let j = Json::obj().set("a", 1i64);
         assert_eq!(j.to_pretty(), "{\n  \"a\": 1\n}");
+    }
+
+    #[test]
+    fn parse_round_trips_writer_output() {
+        let j = Json::obj()
+            .set("name", "envadapt")
+            .set("n", 3usize)
+            .set("x", 1.25f64)
+            .set("neg", -7i64)
+            .set("ok", true)
+            .set("none", Json::Null)
+            .set("code", "line1\nline2\t\"quoted\"\\")
+            .set("xs", Json::Arr(vec![Json::Int(1), Json::Int(2), Json::Str("a".into())]));
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, j);
+        // and the pretty form parses to the same value
+        assert_eq!(Json::parse(&j.to_pretty()).unwrap(), j);
+    }
+
+    #[test]
+    fn parse_accessors() {
+        let j = Json::parse(r#"{"op":"offload","id":42,"f":2.5,"on":true,"xs":[1,2]}"#).unwrap();
+        assert_eq!(j.get("op").and_then(|v| v.as_str()), Some("offload"));
+        assert_eq!(j.get("id").and_then(|v| v.as_i64()), Some(42));
+        assert_eq!(j.get("id").and_then(|v| v.as_f64()), Some(42.0));
+        assert_eq!(j.get("f").and_then(|v| v.as_f64()), Some(2.5));
+        assert_eq!(j.get("on").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(j.get("xs").and_then(|v| v.items()).map(|x| x.len()), Some(2));
+        assert!(j.get("missing").is_none());
+    }
+
+    #[test]
+    fn parse_unicode_escapes() {
+        // raw multi-byte characters pass through
+        let j = Json::parse(r#""aAé😀b""#).unwrap();
+        assert_eq!(j.as_str(), Some("aAé😀b"));
+        // \uXXXX escapes, including a surrogate pair
+        let j = Json::parse("\"a\\u00e9\\ud83d\\ude00b\"").unwrap();
+        assert_eq!(j.as_str(), Some("aé😀b"));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("{\"a\":}").is_err());
+        assert!(Json::parse("[1,2,]").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+        assert!(Json::parse("{}extra").is_err());
+        assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn parse_bounds_nesting_depth() {
+        // pathological nesting must be an error, not a stack overflow
+        let deep = "[".repeat(100_000);
+        assert!(Json::parse(&deep).is_err());
+        let balanced = format!("{}1{}", "[".repeat(5_000), "]".repeat(5_000));
+        assert!(Json::parse(&balanced).is_err());
+        // reasonable nesting still parses
+        let ok = format!("{}1{}", "[".repeat(64), "]".repeat(64));
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn parse_numbers() {
+        assert_eq!(Json::parse("0").unwrap(), Json::Int(0));
+        assert_eq!(Json::parse("-12").unwrap(), Json::Int(-12));
+        assert_eq!(Json::parse("1e3").unwrap(), Json::Num(1000.0));
+        assert_eq!(Json::parse("2.5e-1").unwrap(), Json::Num(0.25));
+        // integers beyond i64 fall back to f64
+        assert!(matches!(Json::parse("99999999999999999999").unwrap(), Json::Num(_)));
     }
 }

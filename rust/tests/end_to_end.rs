@@ -16,7 +16,13 @@ fn sim_cfg() -> Config {
 fn all_workloads_offload_correctly_in_all_languages() {
     // The headline property: every app, every language → a valid (results
     // check passing) final pattern that never regresses below CPU.
-    let mut coordinator = Coordinator::new(sim_cfg());
+    // Pattern-DB replay off: the IR is language-independent, so with one
+    // coordinator the 2nd/3rd language of each app would replay the 1st
+    // language's learned pattern instead of exercising its own search
+    // (the replay path is covered by coordinator.rs / tests/serve.rs).
+    let mut cfg = sim_cfg();
+    cfg.reuse_patterns = false;
+    let mut coordinator = Coordinator::new(cfg);
     for app in workloads::APPS {
         for lang in Lang::all() {
             let s = workloads::get(app, lang).unwrap();

@@ -128,7 +128,12 @@ fn coordinator_reports_identical_across_worker_counts() {
 
 #[test]
 fn second_offload_of_same_program_is_all_cache_hits() {
-    let mut c = Coordinator::new(sim_cfg());
+    // pattern-DB replay off: this test exercises the *measurement cache*
+    // layer (the replay fast path would skip the search entirely —
+    // that path is covered in coordinator.rs / tests/serve.rs)
+    let mut cfg = sim_cfg();
+    cfg.reuse_patterns = false;
+    let mut c = Coordinator::new(cfg);
     let src = envadapt::workloads::get("mixed", Lang::C).unwrap();
     let r1 = c.offload_source(src.code, Lang::C, "mixed").unwrap();
     assert_eq!(r1.cache_hits, 0, "cold cache");
