@@ -76,7 +76,7 @@ fn main() {
 /// device. Verifies the determinism contract on the way (identical times
 /// at every worker count) and records the baseline to BENCH_engine.json.
 fn measurement_throughput() {
-    use envadapt::device::{DeviceFactory, TargetKind};
+    use envadapt::device::TargetKind;
     use envadapt::engine::{self, MeasurementCache, MeasurementEngine};
     use envadapt::util::json::Json;
     use envadapt::util::Rng;
@@ -123,7 +123,10 @@ fn measurement_throughput() {
     let mut serial_eps = 0.0;
     for workers in [1usize, 4, 8] {
         let fp = engine::fingerprint(&p, &cfg, "loops", &[]);
-        let factory = DeviceFactory::new(envadapt::device::CostModel::default(), false);
+        let factory = envadapt::device::MultiDeviceFactory::single(
+            envadapt::device::CostModel::default(),
+            false,
+        );
         let mut dev = factory.build();
         let mut eng = MeasurementEngine::new(
             &p,
@@ -135,6 +138,7 @@ fn measurement_throughput() {
             fp,
             engine::shared(MeasurementCache::in_memory()),
             &mut dev,
+            0.0,
         );
         let t0 = std::time::Instant::now();
         let times = eng.measure_batch(&genes);

@@ -19,7 +19,7 @@
 use crate::frontend::render::LoopDirective;
 use crate::ir::*;
 use crate::libs;
-use crate::vm::{ExecPlan, GpuRegion, RegionExec};
+use crate::vm::ExecPlan;
 use std::collections::{HashMap, HashSet};
 
 /// Everything the offloader knows about one `for` loop.
@@ -754,82 +754,71 @@ fn collect_array_accesses(
 // gene → plan
 // ---------------------------------------------------------------------------
 
-/// Build the execution plan for a gene over `analysis.gene_loops()`.
+/// Build the execution plan for a legacy single-GPU gene over
+/// `analysis.gene_loops()` (one bit per loop, 1 = offloaded).
 ///
 /// A loop with bit 1 whose ancestors are all bit 0 roots an offload region.
 /// Bit-1 loops perfectly nested under the root join the region's collapsed
 /// parallel chain (OpenACC `collapse` analogue); other nested loops execute
-/// sequentially inside the kernel.
+/// sequentially inside the kernel. This is the one-destination case of
+/// [`crate::placement::build_plan`], which it delegates to.
 pub fn build_plan(analysis: &ProgramAnalysis, gene: &[bool], naive_transfers: bool) -> ExecPlan {
-    let gene_loops = analysis.gene_loops();
-    assert_eq!(gene.len(), gene_loops.len(), "gene length != parallelizable loop count");
-    let on: HashSet<LoopId> =
-        gene_loops.iter().zip(gene).filter(|(_, &b)| b).map(|(id, _)| *id).collect();
-    let mut plan = ExecPlan { naive_transfers, ..Default::default() };
-    for &id in &on {
-        // region root iff no ancestor is also on
-        let mut anc = analysis.loops[id].parent;
-        let mut is_root = true;
-        while let Some(a) = anc {
-            if on.contains(&a) {
-                is_root = false;
-                break;
-            }
-            anc = analysis.loops[a].parent;
-        }
-        if !is_root {
-            continue;
-        }
-        let info = &analysis.loops[id];
-        // collapsed parallel chain through perfect nests
-        let mut parallel_ids = vec![id];
-        let mut cur = id;
-        while let Some(child) = analysis.loops[cur].perfectly_nests_child {
-            if on.contains(&child) && analysis.loops[child].parallelizable {
-                parallel_ids.push(child);
-                cur = child;
-            } else {
-                break;
-            }
-        }
-        let mut copy_in: Vec<String> = info.array_reads.iter().cloned().collect();
-        let mut copy_out: Vec<String> = info.array_writes.iter().cloned().collect();
-        copy_in.sort();
-        copy_out.sort();
-        plan.regions.insert(
-            id,
-            GpuRegion { root: id, copy_in, copy_out, exec: RegionExec::Generic { parallel_ids } },
-        );
-    }
-    plan
+    let placement: Vec<Option<crate::device::TargetKind>> = gene
+        .iter()
+        .map(|&b| b.then_some(crate::device::TargetKind::Gpu))
+        .collect();
+    crate::placement::build_plan(
+        analysis,
+        &crate::placement::DeviceSet::single(crate::device::TargetKind::Gpu),
+        &placement,
+        naive_transfers,
+    )
 }
 
 /// Render-ready directives for a plan ([37]'s `data` directive placement):
-/// arrays used by more than one region stay device-resident (`present`,
-/// transfer hoisted); the rest get `copyin`/`copyout`.
+/// arrays used by more than one region **on the same destination** stay
+/// device-resident (`present`, transfer hoisted); the rest get
+/// `copyin`/`copyout`. Hoisting is keyed per (array, destination)
+/// because the execution model stages an array through the host when
+/// consecutive regions run on different destinations — annotating such
+/// an array `present` would claim a residency the VM never models.
 pub fn plan_directives(
     analysis: &ProgramAnalysis,
     plan: &ExecPlan,
 ) -> HashMap<LoopId, LoopDirective> {
-    let mut region_use: HashMap<&str, usize> = HashMap::new();
+    let mut region_use: HashMap<(&str, usize), usize> = HashMap::new();
+    let mut dests_of: HashMap<&str, HashSet<usize>> = HashMap::new();
     for r in plan.regions.values() {
         for a in r.copy_in.iter().chain(&r.copy_out) {
-            *region_use.entry(a.as_str()).or_insert(0) += 1;
+            *region_use.entry((a.as_str(), r.dest)).or_insert(0) += 1;
+            dests_of.entry(a.as_str()).or_default().insert(r.dest);
         }
     }
     let _ = analysis;
     let mut out = HashMap::new();
     for (id, r) in &plan.regions {
         let mut d = LoopDirective { offload: true, ..Default::default() };
+        d.dest = plan.devices.get(r.dest).copied();
+        // hoist only when every region touching the array shares this
+        // destination: a use on any other destination stages the array
+        // through the host at some point, and this count-based heuristic
+        // is not order-aware enough to know which same-destination pair
+        // (if any) really stays resident
+        let uses = |a: &str| {
+            if dests_of.get(a).map(|s| s.len()).unwrap_or(0) > 1 {
+                return 1; // cross-destination: always copied
+            }
+            region_use.get(&(a, r.dest)).copied().unwrap_or(0)
+        };
         for a in &r.copy_in {
-            if !plan.naive_transfers && region_use.get(a.as_str()).copied().unwrap_or(0) > 1 {
+            if !plan.naive_transfers && uses(a.as_str()) > 1 {
                 d.present.push(a.clone());
             } else {
                 d.copy_in.push(a.clone());
             }
         }
         for a in &r.copy_out {
-            if plan.naive_transfers || region_use.get(a.as_str()).copied().unwrap_or(0) <= 1 {
+            if plan.naive_transfers || uses(a.as_str()) <= 1 {
                 d.copy_out.push(a.clone());
             }
         }
@@ -842,6 +831,7 @@ pub fn plan_directives(
 mod tests {
     use super::*;
     use crate::frontend::parse;
+    use crate::vm::RegionExec;
 
     fn analyze_c(src: &str) -> ProgramAnalysis {
         let p = parse(src, Lang::C, "t").unwrap();
@@ -1050,6 +1040,43 @@ mod tests {
         let plan_naive = build_plan(&a, &[true, true], true);
         let dirs_naive = plan_directives(&a, &plan_naive);
         assert!(dirs_naive.values().all(|d| d.present.is_empty()));
+    }
+
+    #[test]
+    fn no_present_hoisting_across_destinations() {
+        // the same two-region program, but the regions on *different*
+        // destinations: execution stages x through the host, so the
+        // annotations must show real transfers, not `present`
+        use crate::device::TargetKind;
+        use crate::placement::DeviceSet;
+        let a = analyze_c(
+            r#"void main() {
+                int n = 8;
+                double x[n];
+                for (int i = 0; i < n; i++) { x[i] = i; }
+                for (int i = 0; i < n; i++) { x[i] = x[i] * 2.0; }
+            }"#,
+        );
+        let set = DeviceSet::new(vec![TargetKind::Gpu, TargetKind::Fpga]).unwrap();
+        let plan = crate::placement::build_plan(
+            &a,
+            &set,
+            &[Some(TargetKind::Gpu), Some(TargetKind::Fpga)],
+            false,
+        );
+        let dirs = plan_directives(&a, &plan);
+        assert!(dirs.values().all(|d| d.present.is_empty()), "{dirs:?}");
+        assert!(dirs[&0].copy_out.contains(&"x".to_string()), "GPU region must copy x out");
+        assert!(dirs[&1].copy_in.contains(&"x".to_string()), "FPGA region must copy x in");
+        // same destinations: hoisting still applies
+        let same = crate::placement::build_plan(
+            &a,
+            &set,
+            &[Some(TargetKind::Fpga), Some(TargetKind::Fpga)],
+            false,
+        );
+        let dirs_same = plan_directives(&a, &same);
+        assert!(dirs_same.values().any(|d| d.present.contains(&"x".to_string())));
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! ```text
 //! envadapt offload <file|app> [--lang c|python|java] [--pop N] [--gens N]
 //!                  [--target gpu|many-core|fpga|adaptive]
+//!                  [--devices gpu,many-core,fpga|all] [--power-weight W]
 //!                  [--workers N] [--cache FILE] [--db FILE]
 //!                  [--no-reuse] [--no-learn]
 //!                  [--naive-transfers] [--no-funcblock] [--sim] [--json]
@@ -68,6 +69,11 @@ struct Opts {
     emit_annotated: bool,
     /// None = GPU; Some(vec) = adaptive over these targets
     targets: Option<Vec<crate::device::TargetKind>>,
+    /// mixed-destination placement: search one plan that may place each
+    /// loop/function block on any of these destinations
+    devices: Option<Vec<crate::device::TargetKind>>,
+    /// energy weight of the search fitness (0 = time only)
+    power_weight: Option<f64>,
 }
 
 fn parse_opts(rest: &[String]) -> anyhow::Result<Opts> {
@@ -89,6 +95,8 @@ fn parse_opts(rest: &[String]) -> anyhow::Result<Opts> {
         json: false,
         emit_annotated: false,
         targets: None,
+        devices: None,
+        power_weight: None,
     };
     let mut i = 0;
     while i < rest.len() {
@@ -150,6 +158,21 @@ fn parse_opts(rest: &[String]) -> anyhow::Result<Opts> {
                     })?],
                 });
             }
+            "--devices" => {
+                i += 1;
+                let v = rest.get(i).ok_or_else(|| {
+                    anyhow::anyhow!("--devices needs a value (e.g. gpu,many-core,fpga or all)")
+                })?;
+                o.devices = Some(crate::placement::DeviceSet::parse(v)?.devices().to_vec());
+            }
+            "--power-weight" => {
+                i += 1;
+                let w: f64 = rest.get(i).and_then(|v| v.parse().ok()).ok_or_else(|| {
+                    anyhow::anyhow!("--power-weight needs a number in [0, 1]")
+                })?;
+                anyhow::ensure!((0.0..=1.0).contains(&w), "--power-weight must be within [0, 1]");
+                o.power_weight = Some(w);
+            }
             "--naive-transfers" => o.naive = true,
             "--no-funcblock" => o.no_funcblock = true,
             "--sim" => o.sim = true,
@@ -193,6 +216,15 @@ fn config_from(opts: &Opts) -> Config {
     if let Some(w) = opts.workers {
         cfg.workers = w;
     }
+    if let Some(d) = &opts.devices {
+        cfg.devices = d.clone();
+        cfg.target = d[0];
+        cfg.cost = d[0].cost_model();
+        cfg.use_pjrt = cfg.use_pjrt && d.contains(&crate::device::TargetKind::Gpu);
+    }
+    if let Some(w) = opts.power_weight {
+        cfg.power_weight = w;
+    }
     cfg.cache_path = opts.cache.clone();
     cfg.pattern_db_path = opts.db.clone();
     cfg.reuse_patterns = !opts.no_reuse;
@@ -211,6 +243,11 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "offload" => {
             let target = args.get(1).ok_or_else(|| anyhow::anyhow!("offload needs a target"))?;
             let opts = parse_opts(&args[2..])?;
+            anyhow::ensure!(
+                opts.targets.is_none() || opts.devices.is_none(),
+                "--target and --devices are mutually exclusive (--target tries destinations \
+                 one at a time; --devices searches one mixed placement over the set)"
+            );
             let (code, lang, name) = resolve(target, &opts)?;
             let cfg = config_from(&opts);
             if let Some(targets) = &opts.targets {
@@ -274,6 +311,26 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     let gene: String =
                         r.best_gene.iter().map(|&b| if b { '1' } else { '0' }).collect();
                     println!("  best gene: {gene} over loops {:?}", r.gene_loops);
+                }
+                if r.devices.len() > 1 {
+                    let devs: Vec<&str> = r.devices.iter().map(|d| d.name()).collect();
+                    println!("  device set: {}", devs.join(" + "));
+                    for (id, p) in r.gene_loops.iter().zip(&r.placement) {
+                        println!(
+                            "  placement: loop {id} → {}",
+                            p.map(|t| t.name()).unwrap_or("cpu")
+                        );
+                    }
+                }
+                if r.power_weight > 0.0 {
+                    // energy shaped the selection even on a single-device
+                    // search — always say so
+                    println!(
+                        "  fitness: time·{:.2} + energy·{:.2} (final {:.3} mJ)",
+                        1.0 - r.power_weight,
+                        r.power_weight,
+                        r.energy_j * 1e3
+                    );
                 }
             }
             if opts.emit_annotated {
@@ -387,6 +444,7 @@ fn print_help() {
 USAGE:
   envadapt offload <file|app> [--lang c|python|java] [--pop N] [--gens N]
                    [--target gpu|many-core|fpga|adaptive]
+                   [--devices gpu,many-core,fpga|all] [--power-weight W]
                    [--workers N] [--cache FILE] [--db FILE]
                    [--no-reuse] [--no-learn]
                    [--naive-transfers] [--no-funcblock] [--sim] [--json]
@@ -400,11 +458,20 @@ USAGE:
   envadapt artifacts
 
 OPTIONS:
+  --devices D   mixed-destination placement: search ONE plan that may
+                place each loop/function block on any destination of the
+                comma-separated set (gpu, many-core, fpga; `all` = every
+                destination). Differs from --target adaptive, which
+                converts for one destination at a time and keeps the best
+                whole-program result.
+  --power-weight W
+                blend modeled energy into the fitness: score =
+                (1-W)·time + W·energy/100W (0 = pure time, default)
   --workers N   device workers measuring each candidate batch concurrently
                 (default: host parallelism, capped at 8; results are
                 bit-identical at any worker count; PJRT devices always
                 measure serially — the pool is simulated-only)
-  --cache FILE  persistent measurement cache: known (program, target,
+  --cache FILE  persistent measurement cache: known (program, device set,
                 pattern) measurements are reused across runs
   --db FILE     persistent pattern DB: verified offload patterns learned
                 from every successful search; repeat or near-identical
@@ -420,6 +487,6 @@ SERVE (the offload-as-a-service daemon, line-delimited JSON protocol):
   request:  {{\"op\":\"offload\",\"id\":1,\"name\":\"mm\",\"lang\":\"c\",\"code\":\"...\"}}
   also:     {{\"op\":\"stats\"|\"ping\"|\"shutdown\",\"id\":N}}
 
-Built-in workloads: mm fourier stencil blackscholes mixed smallloops"
+Built-in workloads: mm fourier stencil blackscholes mixed signal smallloops hetero"
     );
 }

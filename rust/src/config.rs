@@ -56,6 +56,16 @@ pub struct Config {
     /// migration target this configuration measures for — part of the
     /// measurement-cache key, set by the adaptive loop and the CLI
     pub target: TargetKind,
+    /// heterogeneous destination set for mixed placement: each
+    /// offloadable loop/function block is assigned one destination from
+    /// this set (or the CPU) by the search. Empty = `[target]`, the
+    /// legacy single-destination search — see
+    /// [`Config::effective_devices`].
+    pub devices: Vec<TargetKind>,
+    /// weight of modeled energy in the search fitness: 0 = pure time
+    /// (the default), 1 = pure energy; see
+    /// `crate::measure::Measurement::ga_score`
+    pub power_weight: f64,
     /// persistent measurement-cache file; `None` = in-memory only
     pub cache_path: Option<PathBuf>,
     /// replay a learned pattern (same/similar program already searched)
@@ -88,6 +98,8 @@ impl Config {
             use_pjrt: true,
             workers: default_workers(),
             target: TargetKind::Gpu,
+            devices: Vec::new(),
+            power_weight: 0.0,
             cache_path: None,
             reuse_patterns: true,
             learn_patterns: true,
@@ -110,6 +122,18 @@ impl Config {
     /// Pool size with the zero-default of `derive(Default)` sanitized.
     pub fn effective_workers(&self) -> usize {
         self.workers.max(1)
+    }
+
+    /// The destination set the search places loops onto: `devices` when
+    /// set, else the single configured `target` (legacy behaviour —
+    /// every pre-placement code path and cache entry is the one-element
+    /// case).
+    pub fn effective_devices(&self) -> Vec<TargetKind> {
+        if self.devices.is_empty() {
+            vec![self.target]
+        } else {
+            self.devices.clone()
+        }
     }
 }
 
@@ -138,6 +162,17 @@ mod tests {
         let c = Config::fast_sim();
         assert!(!c.use_pjrt);
         assert!(c.ga.population <= 8);
+    }
+
+    #[test]
+    fn effective_devices_defaults_to_the_single_target() {
+        let mut c = Config::standard();
+        assert_eq!(c.effective_devices(), vec![TargetKind::Gpu]);
+        c.target = TargetKind::Fpga;
+        assert_eq!(c.effective_devices(), vec![TargetKind::Fpga]);
+        c.devices = vec![TargetKind::Gpu, TargetKind::ManyCore];
+        assert_eq!(c.effective_devices().len(), 2);
+        assert_eq!(Config::standard().power_weight, 0.0, "time-only fitness by default");
     }
 
     #[test]

@@ -20,7 +20,9 @@
 use crate::analysis::{self, ProgramAnalysis};
 use crate::clone::char_vector_program;
 use crate::config::Config;
-use crate::device::{DeviceFactory, DeviceStats, GpuDevice};
+use crate::device::{
+    DeviceFactory, DeviceStats, MultiDevice, MultiDeviceFactory, TargetKind,
+};
 use crate::engine::{self, MeasurementEngine, SharedCache};
 use crate::frontend::{self, render};
 use crate::funcblock::{self, Candidate, FuncBlockReport};
@@ -28,6 +30,7 @@ use crate::ga::{self, GaResult};
 use crate::ir::{Lang, LoopId, Program};
 use crate::measure::{Measurement, Measurer};
 use crate::patterndb::{self, LearnedPlan, PatternDb, PatternRecord, SharedPatternDb};
+use crate::placement::DeviceSet;
 use crate::util::json::Json;
 use crate::vm::ExecPlan;
 use anyhow::Result;
@@ -46,7 +49,18 @@ pub struct OffloadReport {
     pub ga: Option<GaResult>,
     /// loop ids the gene indexes (after function-block exclusion)
     pub gene_loops: Vec<LoopId>,
+    /// winning placement gene: `devices`-dependent bits per loop slot
+    /// (one bit per loop in the single-destination case)
     pub best_gene: Vec<bool>,
+    /// the heterogeneous destination set the search placed onto
+    pub devices: Vec<TargetKind>,
+    /// decoded destination per gene loop (aligned with `gene_loops`;
+    /// `None` = stayed on the CPU)
+    pub placement: Vec<Option<TargetKind>>,
+    /// modeled energy of the final verified run (joules)
+    pub energy_j: f64,
+    /// the energy weight the fitness used (0 = pure time)
+    pub power_weight: f64,
     pub final_plan: ExecPlan,
     /// final verification measurement
     pub final_measurement: Measurement,
@@ -86,6 +100,21 @@ impl OffloadReport {
             .set("speedup", self.speedup())
             .set("gene", gene)
             .set("gene_loops", Json::Arr(self.gene_loops.iter().map(|&l| Json::Int(l as i64)).collect()))
+            .set(
+                "devices",
+                Json::Arr(self.devices.iter().map(|d| Json::Str(d.name().to_string())).collect()),
+            )
+            .set(
+                "placement",
+                Json::Arr(
+                    self.placement
+                        .iter()
+                        .map(|p| Json::Str(p.map(|t| t.name()).unwrap_or("cpu").to_string()))
+                        .collect(),
+                ),
+            )
+            .set("energy_j", self.energy_j)
+            .set("power_weight", self.power_weight)
             .set("measurements", self.total_measurements)
             .set("cache_hits", self.cache_hits as i64)
             .set("measure_launches", self.measure_stats.launches as i64)
@@ -128,25 +157,29 @@ impl OffloadReport {
     }
 }
 
-/// Expand a reduced gene (over `gene_loops`, the parallelizable loops
-/// left after function-block exclusion) into a full [`ExecPlan`] with the
-/// chosen function blocks applied — shared by the search path's plan
-/// builder and the known-pattern replay path.
+/// Expand a reduced placement gene (over `gene_loops`, the parallelizable
+/// loops left after function-block exclusion) into a full [`ExecPlan`]
+/// with the chosen function blocks applied on their destinations —
+/// shared by the search path's plan builder and the known-pattern replay
+/// path.
 fn assemble_plan(
     analysis: &ProgramAnalysis,
+    set: &DeviceSet,
     gene_loops: &[LoopId],
     gene: &[bool],
-    chosen: &[Candidate],
+    chosen: &[(Candidate, TargetKind)],
     naive_transfers: bool,
 ) -> ExecPlan {
+    let reduced = set.decode(gene, gene_loops.len());
     let all = analysis.gene_loops();
-    let mut full = vec![false; all.len()];
+    let mut full: Vec<Option<TargetKind>> = vec![None; all.len()];
     for (k, id) in gene_loops.iter().enumerate() {
         let pos = all.iter().position(|x| x == id).unwrap();
-        full[pos] = gene[k];
+        full[pos] = reduced[k];
     }
-    let mut plan = analysis::build_plan(analysis, &full, naive_transfers);
-    let refs: Vec<&Candidate> = chosen.iter().collect();
+    let mut plan = crate::placement::build_plan(analysis, set, &full, naive_transfers);
+    let refs: Vec<(&Candidate, usize)> =
+        chosen.iter().map(|(c, t)| (c, set.index_of(*t).unwrap_or(0))).collect();
     funcblock::apply(&mut plan, analysis, &refs);
     plan
 }
@@ -161,6 +194,7 @@ fn annotate(prog: &Program, analysis: &ProgramAnalysis, plan: &ExecPlan) -> Stri
             copy_in: region.copy_in.clone(),
             copy_out: region.copy_out.clone(),
             present: vec![],
+            dest: plan.devices.get(region.dest).copied(),
         });
     }
     render::render(prog, &directives)
@@ -175,8 +209,25 @@ fn annotate(prog: &Program, analysis: &ProgramAnalysis, plan: &ExecPlan) -> Stri
 pub struct Coordinator {
     pub cfg: Config,
     db: SharedPatternDb,
-    dev: GpuDevice,
+    dev: MultiDevice,
     cache: SharedCache,
+}
+
+/// Per-destination device factory for a configuration: the configured
+/// `cost` model for the primary target (so explicitly tuned models keep
+/// applying), the preset model for every other destination, PJRT gated
+/// to the GPU member.
+fn factory_for(cfg: &Config, use_pjrt: bool) -> MultiDeviceFactory {
+    let devices = cfg.effective_devices();
+    MultiDeviceFactory {
+        factories: devices
+            .iter()
+            .map(|&t| DeviceFactory {
+                model: if t == cfg.target { cfg.cost.clone() } else { t.cost_model() },
+                use_pjrt: use_pjrt && t == TargetKind::Gpu,
+            })
+            .collect(),
+    }
 }
 
 impl Coordinator {
@@ -197,7 +248,7 @@ impl Coordinator {
     /// DB — the offload service's workers all learn into, and replay
     /// from, one store.
     pub fn with_shared(cfg: Config, cache: SharedCache, db: SharedPatternDb) -> Coordinator {
-        let dev = DeviceFactory::new(cfg.cost.clone(), cfg.use_pjrt).build();
+        let dev = factory_for(&cfg, cfg.use_pjrt).build();
         Coordinator { cfg, db, dev, cache }
     }
 
@@ -240,6 +291,7 @@ impl Coordinator {
         let analysis = analysis::analyze(prog);
         let measurer = Measurer::new(prog, self.cfg.vm.clone(), self.cfg.tolerance)?;
         let workers = self.cfg.effective_workers();
+        let dset = DeviceSet::new(self.cfg.effective_devices())?;
         let mut total_measurements = 0usize;
         let mut cache_hits = 0usize;
         let mut measure_stats = DeviceStats::default();
@@ -261,7 +313,9 @@ impl Coordinator {
         // simulation is never replayed as if it were PJRT-verified.
         let learned_fp = engine::fingerprint(prog, &fp_cfg, "learned", &art_refs);
         if self.cfg.reuse_patterns {
-            if let Some(report) = self.try_reuse(prog, &analysis, &measurer, learned_fp, t_start) {
+            if let Some(report) =
+                self.try_reuse(prog, &analysis, &measurer, &dset, learned_fp, t_start)
+            {
                 return Ok(report);
             }
         }
@@ -270,20 +324,24 @@ impl Coordinator {
         // reflecting the probed backend, so a PJRT request that fell back
         // to simulation still gets the worker pool instead of a silently
         // serial search.
-        let engine_factory = DeviceFactory::new(self.cfg.cost.clone(), fp_cfg.use_pjrt);
+        let engine_factory = factory_for(&self.cfg, fp_cfg.use_pjrt);
 
         // ---- phase 1: function blocks (first, per §4.2) ------------------
         let mut fb_report: Option<FuncBlockReport> = None;
-        let mut chosen_candidates: Vec<Candidate> = Vec::new();
+        let mut chosen_candidates: Vec<(Candidate, TargetKind)> = Vec::new();
         if self.cfg.funcblock.enabled {
             let candidates = {
                 let db = self.db.lock().unwrap();
                 funcblock::find_candidates(prog, &analysis, &db, &self.cfg.funcblock)
             };
             if !candidates.is_empty() {
-                let fb_plan =
-                    funcblock::mask_plan(&analysis, &candidates, self.cfg.naive_transfers);
-                // mask bit i means candidates[i], and the candidate list
+                let fb_plan = funcblock::mask_plan(
+                    &analysis,
+                    &candidates,
+                    &dset,
+                    self.cfg.naive_transfers,
+                );
+                // mask slot i means candidates[i], and the candidate list
                 // depends on the clone threshold / pattern DB — fold it
                 // into the fingerprint so differently-discovered lists
                 // never share cache entries
@@ -302,14 +360,23 @@ impl Coordinator {
                     engine::fingerprint(prog, &fp_cfg, "funcblock", &cand_refs),
                     self.cache.clone(),
                     &mut self.dev,
+                    self.cfg.power_weight,
                 );
-                let report =
-                    funcblock::trial_combinations(&candidates, &mut fb_engine, &self.cfg.funcblock);
+                let report = funcblock::trial_combinations(
+                    &candidates,
+                    &dset,
+                    &mut fb_engine,
+                    &self.cfg.funcblock,
+                );
                 total_measurements += report.trials.len();
                 cache_hits += fb_engine.cache_hits();
                 measure_stats.merge(&fb_engine.stats());
-                chosen_candidates =
-                    report.chosen.iter().map(|&i| report.candidates[i].clone()).collect();
+                chosen_candidates = report
+                    .chosen
+                    .iter()
+                    .zip(&report.dests)
+                    .map(|(&i, &t)| (report.candidates[i].clone(), t))
+                    .collect();
                 fb_report = Some(report);
             }
         }
@@ -324,13 +391,16 @@ impl Coordinator {
 
         let naive_transfers = self.cfg.naive_transfers;
         let build_full_plan = |gene: &[bool]| -> ExecPlan {
-            assemble_plan(&analysis, &gene_loops, gene, &chosen_candidates, naive_transfers)
+            assemble_plan(&analysis, &dset, &gene_loops, gene, &chosen_candidates, naive_transfers)
         };
 
         // the gene→plan mapping depends on which function blocks were
-        // chosen, so that context is folded into the cache fingerprint
-        let fb_context: Vec<String> =
-            chosen_candidates.iter().map(|c| c.description.clone()).collect();
+        // chosen (and where they were placed), so that context is folded
+        // into the cache fingerprint
+        let fb_context: Vec<String> = chosen_candidates
+            .iter()
+            .map(|(c, t)| format!("{}@{}", c.description, t.name()))
+            .collect();
         let mut fb_context_refs: Vec<&str> = fb_context.iter().map(|s| s.as_str()).collect();
         fb_context_refs.extend(art_refs.iter().copied());
         let mut ga_engine = MeasurementEngine::new(
@@ -343,8 +413,10 @@ impl Coordinator {
             engine::fingerprint(prog, &fp_cfg, "loops", &fb_context_refs),
             self.cache.clone(),
             &mut self.dev,
+            self.cfg.power_weight,
         );
-        let ga_result: GaResult = ga::optimize(gene_loops.len(), &self.cfg.ga, &mut ga_engine);
+        let ga_result: GaResult =
+            ga::optimize(dset.gene_len(gene_loops.len()), &self.cfg.ga, &mut ga_engine);
         total_measurements += ga_result.evaluations;
         cache_hits += ga_engine.cache_hits();
         measure_stats.merge(&ga_engine.stats());
@@ -379,9 +451,14 @@ impl Coordinator {
                 fingerprint: learned_fp,
                 lang: prog.lang,
                 target: self.cfg.target,
+                devices: dset.devices().to_vec(),
                 gene: best_gene.clone(),
                 gene_loops: gene_loops.clone(),
-                funcblocks: chosen_candidates.iter().map(|c| c.description.clone()).collect(),
+                funcblocks: chosen_candidates
+                    .iter()
+                    .map(|(c, _)| c.description.clone())
+                    .collect(),
+                fb_dests: chosen_candidates.iter().map(|(_, t)| *t).collect(),
                 baseline_s: measurer.baseline_modeled_s(),
                 final_s,
             };
@@ -390,7 +467,7 @@ impl Coordinator {
                 prog.name,
                 prog.lang.name(),
                 plan.speedup(),
-                self.cfg.target
+                dset.name()
             );
             let record =
                 PatternRecord::from_learned(description, char_vector_program(prog), plan);
@@ -405,6 +482,7 @@ impl Coordinator {
             }
         }
 
+        let placement = dset.decode(&best_gene, gene_loops.len());
         Ok(OffloadReport {
             app: prog.name.clone(),
             lang: prog.lang,
@@ -414,6 +492,10 @@ impl Coordinator {
             ga: Some(ga_result),
             gene_loops,
             best_gene,
+            devices: dset.devices().to_vec(),
+            placement,
+            energy_j: final_measurement.energy_j,
+            power_weight: self.cfg.power_weight,
             final_plan,
             final_measurement,
             annotated_source,
@@ -443,6 +525,7 @@ impl Coordinator {
         prog: &Program,
         analysis: &ProgramAnalysis,
         measurer: &Measurer,
+        dset: &DeviceSet,
         learned_fp: u64,
         t_start: std::time::Instant,
     ) -> Option<OffloadReport> {
@@ -453,13 +536,16 @@ impl Coordinator {
             if db.learned_len() == 0 {
                 return None;
             }
-            if let Some(r) = db.lookup_learned(learned_fp, self.cfg.target) {
+            if let Some(r) = db.lookup_learned_set(learned_fp, dset.devices()) {
                 let how = format!("exact ({})", r.key);
                 (r.learned.clone().unwrap(), how)
             } else {
                 let v = char_vector_program(prog);
-                let (r, score) =
-                    db.lookup_learned_similar(&v, self.cfg.target, self.cfg.reuse_similarity)?;
+                let (r, score) = db.lookup_learned_similar(
+                    &v,
+                    dset.devices(),
+                    self.cfg.reuse_similarity,
+                )?;
                 let p = r.learned.clone().unwrap();
                 // a near-identical program must also have an identical
                 // modeled baseline — structure AND workload must agree
@@ -471,9 +557,14 @@ impl Coordinator {
                 (p, how)
             }
         };
+        // the learned gene only decodes against the set it was searched
+        // with (lookup keys guarantee this; re-check defensively)
+        if plan_rec.devices != dset.devices() {
+            return None;
+        }
 
         // rebuild the chosen function blocks from a fresh candidate scan
-        let mut chosen: Vec<Candidate> = Vec::new();
+        let mut chosen: Vec<(Candidate, TargetKind)> = Vec::new();
         if !plan_rec.funcblocks.is_empty() {
             if !self.cfg.funcblock.enabled {
                 return None;
@@ -482,9 +573,9 @@ impl Coordinator {
                 let db = self.db.lock().unwrap();
                 funcblock::find_candidates(prog, analysis, &db, &self.cfg.funcblock)
             };
-            for want in &plan_rec.funcblocks {
+            for (want, dest) in plan_rec.funcblocks.iter().zip(&plan_rec.fb_dests) {
                 match candidates.iter().find(|c| &c.description == want) {
-                    Some(c) => chosen.push(c.clone()),
+                    Some(c) => chosen.push((c.clone(), *dest)),
                     None => return None, // pattern no longer applies here
                 }
             }
@@ -492,11 +583,14 @@ impl Coordinator {
         let excluded = self.excluded_loops(analysis, &chosen);
         let gene_loops: Vec<LoopId> =
             analysis.gene_loops().into_iter().filter(|id| !excluded.contains(id)).collect();
-        if gene_loops != plan_rec.gene_loops || plan_rec.gene.len() != gene_loops.len() {
+        if gene_loops != plan_rec.gene_loops
+            || plan_rec.gene.len() != dset.gene_len(gene_loops.len())
+        {
             return None;
         }
         let final_plan = assemble_plan(
             analysis,
+            dset,
             &gene_loops,
             &plan_rec.gene,
             &chosen,
@@ -518,11 +612,13 @@ impl Coordinator {
         } else {
             Some(FuncBlockReport {
                 chosen: (0..chosen.len()).collect(),
-                candidates: chosen,
+                dests: chosen.iter().map(|(_, t)| *t).collect(),
+                candidates: chosen.into_iter().map(|(c, _)| c).collect(),
                 best: final_measurement.clone(),
                 trials: Vec::new(),
             })
         };
+        let placement = dset.decode(&plan_rec.gene, gene_loops.len());
         Some(OffloadReport {
             app: prog.name.clone(),
             lang: prog.lang,
@@ -532,6 +628,10 @@ impl Coordinator {
             ga: None,
             gene_loops,
             best_gene: plan_rec.gene,
+            devices: dset.devices().to_vec(),
+            placement,
+            energy_j: final_measurement.energy_j,
+            power_weight: self.cfg.power_weight,
             final_plan,
             final_measurement,
             annotated_source,
@@ -550,10 +650,10 @@ impl Coordinator {
     fn excluded_loops(
         &self,
         analysis: &ProgramAnalysis,
-        chosen: &[Candidate],
+        chosen: &[(Candidate, TargetKind)],
     ) -> HashSet<LoopId> {
         let mut excluded = HashSet::new();
-        for c in chosen {
+        for (c, _) in chosen {
             excluded.extend(c.swallowed_loops(analysis));
             if let funcblock::CandidateKind::CloneNest { root, .. } = &c.kind {
                 let mut anc = analysis.loops[*root].parent;
@@ -610,8 +710,9 @@ pub fn offload_adaptive(
     for &t in targets {
         let mut tcfg = cfg.clone();
         tcfg.target = t;
+        tcfg.devices = vec![t]; // one destination per adaptive trial
         tcfg.cost = t.cost_model();
-        tcfg.use_pjrt = cfg.use_pjrt && t == crate::device::TargetKind::Gpu;
+        tcfg.use_pjrt = cfg.use_pjrt && t == TargetKind::Gpu;
         let mut c = Coordinator::with_shared(tcfg, cache.clone(), db.clone());
         per_target.push((t, c.offload_source(code, lang, name)?));
     }

@@ -41,7 +41,20 @@ pub struct CostModel {
     pub gpu_op_ns: f64,
     /// nanoseconds per flop for tuned library kernels (cuBLAS analogue)
     pub lib_flop_ns: f64,
+    /// board power while executing, watts — the per-device power model of
+    /// the power-saving follow-up (arXiv 2110.11520). Modeled energy is
+    /// `device seconds × busy_watts`; the host CPU draws
+    /// [`HOST_CPU_WATTS`] over its own modeled seconds.
+    pub busy_watts: f64,
 }
+
+/// Modeled host-CPU draw (watts) while interpreting on the CPU.
+pub const HOST_CPU_WATTS: f64 = 65.0;
+
+/// Normalizer turning joules into "seconds at a reference board" so the
+/// power-weighted fitness stays in seconds-like units (see
+/// [`crate::measure::Measurement::ga_score`]).
+pub const REFERENCE_WATTS: f64 = 100.0;
 
 impl Default for CostModel {
     fn default() -> Self {
@@ -60,6 +73,7 @@ impl CostModel {
             gpu_lanes: 2048,
             gpu_op_ns: 4.0,
             lib_flop_ns: 0.01,
+            busy_watts: 250.0,
         }
     }
 
@@ -75,6 +89,7 @@ impl CostModel {
             gpu_lanes: 16,
             gpu_op_ns: 1.1, // near-native per-lane speed
             lib_flop_ns: 0.12,
+            busy_watts: 90.0,
         }
     }
 
@@ -92,6 +107,7 @@ impl CostModel {
             gpu_lanes: 64,
             gpu_op_ns: 8.0,
             lib_flop_ns: 0.004,
+            busy_watts: 35.0,
         }
     }
 }
@@ -500,8 +516,171 @@ impl Device for GpuDevice {
         self.gpu_secs
     }
 
+    fn energy_joules(&self) -> f64 {
+        self.gpu_secs * self.model.busy_watts
+    }
+
     fn transfer_stats(&self) -> (u64, u64, u64, u64) {
         (self.stats.h2d_count, self.stats.h2d_bytes, self.stats.d2h_count, self.stats.d2h_bytes)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// heterogeneous device pool (mixed-destination placement)
+// ---------------------------------------------------------------------------
+
+/// One device per destination in a heterogeneous device set, behind the
+/// single [`Device`] interface the VM drives.
+///
+/// The VM routes charges by calling [`Device::select_device`] with the
+/// region's destination index (an index into the plan's device set, in
+/// set order) before charging transfers, launches and kernels — so a
+/// mixed plan accumulates modeled time and energy on the device that
+/// actually runs each region. `gpu_seconds`, `energy_joules` and
+/// `transfer_stats` report the sum over all members: destinations
+/// execute sequentially in program order (the paper's flow offloads
+/// regions one at a time), so total offload time is additive.
+///
+/// With a single member this behaves bit-for-bit like the wrapped
+/// [`GpuDevice`] — the legacy single-target path is the one-element case.
+pub struct MultiDevice {
+    devs: Vec<GpuDevice>,
+    cur: usize,
+}
+
+impl MultiDevice {
+    pub fn new(devs: Vec<GpuDevice>) -> MultiDevice {
+        assert!(!devs.is_empty(), "MultiDevice needs at least one device");
+        MultiDevice { devs, cur: 0 }
+    }
+
+    /// Wrap a single device (the legacy single-target configuration).
+    pub fn single(dev: GpuDevice) -> MultiDevice {
+        MultiDevice::new(vec![dev])
+    }
+
+    /// Number of destinations.
+    pub fn len(&self) -> usize {
+        self.devs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // constructor guarantees at least one member
+    }
+
+    /// The member device for destination `dest` (clamped like
+    /// `select_device`).
+    pub fn device(&self, dest: usize) -> &GpuDevice {
+        &self.devs[dest.min(self.devs.len() - 1)]
+    }
+
+    /// Whether any member executes real PJRT artifacts (only the GPU
+    /// member ever can — see [`DeviceFactory::for_target`]).
+    pub fn is_pjrt(&self) -> bool {
+        self.devs.iter().any(|d| d.is_pjrt())
+    }
+
+    /// Artifact inventory of the PJRT-backed member, if any.
+    pub fn available_artifacts(&self) -> &[String] {
+        self.devs
+            .iter()
+            .find(|d| d.is_pjrt())
+            .map(|d| d.available_artifacts())
+            .unwrap_or(&[])
+    }
+
+    /// Reset every member's per-run accumulators (executable caches are
+    /// kept, exactly like [`GpuDevice::reset`]).
+    pub fn reset(&mut self) {
+        for d in &mut self.devs {
+            d.reset();
+        }
+        self.cur = 0;
+    }
+
+    /// Merged per-run counters over every member.
+    pub fn stats(&self) -> DeviceStats {
+        let mut out = DeviceStats::default();
+        for d in &self.devs {
+            out.merge(&d.stats);
+        }
+        out
+    }
+}
+
+impl Device for MultiDevice {
+    fn select_device(&mut self, dest: usize) {
+        // clamp out-of-range destinations (decode never produces them;
+        // this keeps a stale plan from panicking the pool)
+        self.cur = dest.min(self.devs.len() - 1);
+    }
+
+    fn charge_h2d(&mut self, bytes: usize) {
+        self.devs[self.cur].charge_h2d(bytes);
+    }
+
+    fn charge_d2h(&mut self, bytes: usize) {
+        self.devs[self.cur].charge_d2h(bytes);
+    }
+
+    fn kernel_launch(&mut self) {
+        self.devs[self.cur].kernel_launch();
+    }
+
+    fn charge_generic_kernel(&mut self, ops: u64, parallel: u64) {
+        self.devs[self.cur].charge_generic_kernel(ops, parallel);
+    }
+
+    fn call_library(&mut self, name: &str, args: &[Value]) -> Result<Option<Value>> {
+        self.devs[self.cur].call_library(name, args)
+    }
+
+    fn gpu_seconds(&self) -> f64 {
+        self.devs.iter().map(|d| d.gpu_seconds()).sum()
+    }
+
+    fn energy_joules(&self) -> f64 {
+        self.devs.iter().map(|d| d.energy_joules()).sum()
+    }
+
+    fn transfer_stats(&self) -> (u64, u64, u64, u64) {
+        let s = self.stats();
+        (s.h2d_count, s.h2d_bytes, s.d2h_count, s.d2h_bytes)
+    }
+}
+
+/// Factory for per-worker [`MultiDevice`] instances — one
+/// [`DeviceFactory`] per destination, in device-set order. Plain data
+/// (`Send + Sync`) for the same reason as [`DeviceFactory`].
+#[derive(Debug, Clone)]
+pub struct MultiDeviceFactory {
+    pub factories: Vec<DeviceFactory>,
+}
+
+impl MultiDeviceFactory {
+    /// One factory per target; PJRT is gated to the GPU member.
+    pub fn for_targets(targets: &[TargetKind], use_pjrt: bool) -> MultiDeviceFactory {
+        assert!(!targets.is_empty(), "need at least one target");
+        MultiDeviceFactory {
+            factories: targets.iter().map(|&t| DeviceFactory::for_target(t, use_pjrt)).collect(),
+        }
+    }
+
+    /// Single-destination factory with an explicit cost model (the legacy
+    /// configuration every pre-placement call site used).
+    pub fn single(model: CostModel, use_pjrt: bool) -> MultiDeviceFactory {
+        MultiDeviceFactory { factories: vec![DeviceFactory::new(model, use_pjrt)] }
+    }
+
+    /// Whether any member factory would build a PJRT-backed device.
+    pub fn use_pjrt(&self) -> bool {
+        self.factories.iter().any(|f| f.use_pjrt)
+    }
+
+    /// Build a fresh pool (fresh stats, fresh executable caches). Called
+    /// once per measurement-pool worker, inside the worker's thread.
+    pub fn build(&self) -> MultiDevice {
+        MultiDevice::new(self.factories.iter().map(|f| f.build()).collect())
     }
 }
 
@@ -676,6 +855,65 @@ mod tests {
         d1.charge_h2d(1024);
         assert!(d1.gpu_seconds() > 0.0);
         assert_eq!(d2.gpu_seconds(), 0.0, "devices must not share accumulators");
+    }
+
+    #[test]
+    fn multi_device_routes_charges_by_destination() {
+        let f = MultiDeviceFactory::for_targets(&[TargetKind::Gpu, TargetKind::ManyCore], false);
+        let mut md = f.build();
+        assert_eq!(md.len(), 2);
+        // destination 1 (many-core): free transfers, cheap launch
+        md.select_device(1);
+        md.charge_h2d(1 << 20);
+        md.kernel_launch();
+        let mc_secs = md.device(1).gpu_seconds();
+        assert_eq!(md.device(0).gpu_seconds(), 0.0, "GPU member untouched");
+        assert!(mc_secs > 0.0 && mc_secs < 5e-6, "shared-memory target: {mc_secs}");
+        // destination 0 (GPU): PCIe-priced transfer
+        md.select_device(0);
+        md.charge_h2d(1 << 20);
+        assert!(md.device(0).gpu_seconds() > 50e-6);
+        // totals are the sum over members
+        let total = md.device(0).gpu_seconds() + md.device(1).gpu_seconds();
+        assert!((md.gpu_seconds() - total).abs() < 1e-18);
+        assert_eq!(md.stats().h2d_count, 2);
+        // out-of-range destination clamps to the last member
+        md.select_device(99);
+        md.kernel_launch();
+        assert_eq!(md.device(1).stats.launches, 2);
+        md.reset();
+        assert_eq!(md.gpu_seconds(), 0.0);
+        assert_eq!(md.stats().launches, 0);
+    }
+
+    #[test]
+    fn single_member_multi_device_matches_plain_device() {
+        let mut plain = GpuDevice::simulated(CostModel::gpu());
+        plain.charge_h2d(4096);
+        plain.kernel_launch();
+        plain.charge_generic_kernel(10_000, 512);
+        let mut md = MultiDevice::single(GpuDevice::simulated(CostModel::gpu()));
+        md.select_device(0);
+        md.charge_h2d(4096);
+        md.kernel_launch();
+        md.charge_generic_kernel(10_000, 512);
+        assert_eq!(plain.gpu_seconds(), md.gpu_seconds());
+        assert_eq!(plain.energy_joules(), md.energy_joules());
+        assert_eq!(plain.transfer_stats(), md.transfer_stats());
+    }
+
+    #[test]
+    fn energy_model_tracks_busy_watts() {
+        let mut gpu = GpuDevice::simulated(CostModel::gpu());
+        gpu.charge_generic_kernel(2048 * 1000, 2048); // 1000 ops/lane × 4 ns
+        let secs = gpu.gpu_seconds();
+        assert!((gpu.energy_joules() - secs * 250.0).abs() < 1e-15);
+        // FPGA draws far less for the same modeled second
+        let mut fpga = GpuDevice::simulated(CostModel::fpga());
+        fpga.charge_generic_kernel(64 * 500, 64);
+        assert!(
+            fpga.energy_joules() / fpga.gpu_seconds() < gpu.energy_joules() / gpu.gpu_seconds()
+        );
     }
 
     #[test]

@@ -7,8 +7,10 @@
 //! that budget. This module is the reproduction's equivalent: the GA hands
 //! over each generation's distinct unmeasured genes as one batch
 //! ([`crate::ga::BatchEvaluator`]) and the engine fans the batch out over
-//! `workers` OS threads. Every worker owns its own device built from a
-//! [`DeviceFactory`] (PJRT clients are not `Send`, so devices never cross
+//! `workers` OS threads. Every worker owns its own device pool built from
+//! a [`MultiDeviceFactory`] — one member per destination of the
+//! heterogeneous device set, so mixed placements measure on the worker's
+//! own devices (PJRT clients are not `Send`, so devices never cross
 //! threads), while the program, the [`Measurer`] baseline and the
 //! gene→plan closure are shared read-only. The pool serves simulated
 //! backends; PJRT-backed engines measure serially on the caller's
@@ -26,12 +28,13 @@
 //! that can be shared between coordinators (the adaptive per-target runs,
 //! the batch front end's worker pool) and persisted to disk, so repeated
 //! offload requests for a known program never re-measure a known pattern.
-//! The fingerprint folds in every knob that affects a modeled time (cost
-//! model, VM limits, tolerance, transfer policy and the search space
-//! tag), which is what makes a cache hit semantically safe.
+//! The fingerprint folds in every knob that affects a recorded fitness
+//! (cost model, VM limits, tolerance, transfer policy, the search-space
+//! tag, the heterogeneous device set and the power weight), which is
+//! what makes a cache hit semantically safe.
 
 use crate::config::Config;
-use crate::device::{DeviceFactory, DeviceStats, GpuDevice, TargetKind};
+use crate::device::{DeviceStats, MultiDevice, MultiDeviceFactory, TargetKind};
 use crate::ga::BatchEvaluator;
 use crate::ir::Program;
 use crate::measure::{Measurement, Measurer};
@@ -57,7 +60,7 @@ fn _sharing_contract() {
     fn send<T: Send>() {}
     sync::<Program>();
     sync::<Measurer>();
-    sync::<DeviceFactory>();
+    sync::<MultiDeviceFactory>();
     send::<ExecPlan>();
     send::<DeviceStats>();
     send::<MeasurementCache>();
@@ -238,8 +241,10 @@ pub fn fingerprint(prog: &Program, cfg: &Config, space: &str, extra: &[&str]) ->
         c.transfer_latency_s,
         c.gpu_op_ns,
         c.lib_flop_ns,
+        c.busy_watts,
         cfg.vm.cpu_op_ns,
         cfg.tolerance,
+        cfg.power_weight,
     ] {
         h.write_u64(x.to_bits());
     }
@@ -247,6 +252,13 @@ pub fn fingerprint(prog: &Program, cfg: &Config, space: &str, extra: &[&str]) ->
     h.write_u64(cfg.vm.max_ops);
     h.write_u8(cfg.naive_transfers as u8);
     h.write_u8(cfg.use_pjrt as u8);
+    // the destination set defines what each gene bit *means* (slot width
+    // and device numbering), so two searches over different sets must
+    // never share cache entries even for identical bit strings
+    for d in cfg.effective_devices() {
+        h.write(d.name().as_bytes());
+        h.write_u8(0x1e);
+    }
     h.finish()
 }
 
@@ -261,18 +273,21 @@ pub fn fingerprint(prog: &Program, cfg: &Config, space: &str, extra: &[&str]) ->
 pub struct MeasurementEngine<'a> {
     prog: &'a Program,
     measurer: &'a Measurer,
-    factory: DeviceFactory,
+    factory: MultiDeviceFactory,
     plan: PlanBuilder<'a>,
     workers: usize,
     target: TargetKind,
     fingerprint: u64,
     cache: SharedCache,
-    /// the caller's long-lived device for the serial path and full
+    /// the caller's long-lived device pool for the serial path and full
     /// measurements. Borrowed (not built here) so the PJRT executable
     /// cache stays warm across phases and applications, exactly like the
     /// pre-engine single-device coordinator — and so the backend the
     /// caller probed for the fingerprint is the backend that measures.
-    serial_dev: &'a mut GpuDevice,
+    serial_dev: &'a mut MultiDevice,
+    /// weight of modeled energy in the recorded fitness (0 = pure time);
+    /// folded into the cache fingerprint by every caller
+    power_weight: f64,
     stats: DeviceStats,
     measured: usize,
     cache_hits: usize,
@@ -283,13 +298,14 @@ impl<'a> MeasurementEngine<'a> {
     pub fn new(
         prog: &'a Program,
         measurer: &'a Measurer,
-        factory: DeviceFactory,
+        factory: MultiDeviceFactory,
         plan: PlanBuilder<'a>,
         workers: usize,
         target: TargetKind,
         fingerprint: u64,
         cache: SharedCache,
-        serial_dev: &'a mut GpuDevice,
+        serial_dev: &'a mut MultiDevice,
+        power_weight: f64,
     ) -> MeasurementEngine<'a> {
         MeasurementEngine {
             prog,
@@ -301,6 +317,7 @@ impl<'a> MeasurementEngine<'a> {
             fingerprint,
             cache,
             serial_dev,
+            power_weight,
             stats: DeviceStats::default(),
             measured: 0,
             cache_hits: 0,
@@ -346,11 +363,11 @@ impl<'a> MeasurementEngine<'a> {
         let plan = (self.plan)(gene);
         self.serial_dev.reset();
         let m = self.measurer.measure(self.prog, &plan, &mut *self.serial_dev);
-        let dstats = self.serial_dev.stats;
+        let dstats = self.serial_dev.stats();
         self.stats.merge(&dstats);
         self.measured += 1;
         let key = cache_key(self.fingerprint, self.target, gene);
-        self.cache.lock().unwrap().insert(key, m.ga_time());
+        self.cache.lock().unwrap().insert(key, m.ga_score(self.power_weight));
         m
     }
 
@@ -389,7 +406,7 @@ impl<'a> MeasurementEngine<'a> {
             // cache with simulated times under a PJRT fingerprint. PJRT
             // measures serially on the caller's warm device, whose
             // executable cache beats thread parallelism there anyway.
-            let use_pool = self.workers > 1 && todo.len() > 1 && !self.factory.use_pjrt;
+            let use_pool = self.workers > 1 && todo.len() > 1 && !self.factory.use_pjrt();
             let results: Vec<(f64, DeviceStats)> = if use_pool {
                 self.measure_parallel(genes, &todo)
             } else {
@@ -413,7 +430,7 @@ impl<'a> MeasurementEngine<'a> {
         let plan = (self.plan)(gene);
         self.serial_dev.reset();
         let m = self.measurer.measure(self.prog, &plan, &mut *self.serial_dev);
-        (m.ga_time(), self.serial_dev.stats)
+        (m.ga_score(self.power_weight), self.serial_dev.stats())
     }
 
     /// Fan `todo` (indices into `genes`) out over the pool. Workers pull
@@ -433,6 +450,7 @@ impl<'a> MeasurementEngine<'a> {
         let plan = self.plan;
         let measurer = self.measurer;
         let prog = self.prog;
+        let power_weight = self.power_weight;
         let next = AtomicUsize::new(0);
         let slots: Vec<Mutex<Option<(f64, DeviceStats)>>> =
             (0..todo.len()).map(|_| Mutex::new(None)).collect();
@@ -453,7 +471,8 @@ impl<'a> MeasurementEngine<'a> {
                         let exec_plan = (plan)(gene);
                         dev.reset();
                         let m = measurer.measure(prog, &exec_plan, &mut dev);
-                        *slots[k].lock().unwrap() = Some((m.ga_time(), dev.stats));
+                        *slots[k].lock().unwrap() =
+                            Some((m.ga_score(power_weight), dev.stats()));
                     }
                 });
             }
@@ -513,8 +532,8 @@ mod tests {
         Fixture { prog, analysis, measurer, cfg }
     }
 
-    fn sim_dev() -> GpuDevice {
-        DeviceFactory::new(CostModel::default(), false).build()
+    fn sim_dev() -> MultiDevice {
+        MultiDeviceFactory::single(CostModel::default(), false).build()
     }
 
     fn engine<'a>(
@@ -522,19 +541,20 @@ mod tests {
         plan: PlanBuilder<'a>,
         workers: usize,
         cache: SharedCache,
-        dev: &'a mut GpuDevice,
+        dev: &'a mut MultiDevice,
     ) -> MeasurementEngine<'a> {
         let fp = fingerprint(&f.prog, &f.cfg, "loops", &[]);
         MeasurementEngine::new(
             &f.prog,
             &f.measurer,
-            DeviceFactory::new(CostModel::default(), false),
+            MultiDeviceFactory::single(CostModel::default(), false),
             plan,
             workers,
             TargetKind::Gpu,
             fp,
             cache,
             dev,
+            0.0,
         )
     }
 
@@ -628,7 +648,7 @@ mod tests {
         let cache = shared(MeasurementCache::in_memory());
         let fp = fingerprint(&f.prog, &f.cfg, "loops", &[]);
 
-        let gpu_factory = DeviceFactory::for_target(TargetKind::Gpu, false);
+        let gpu_factory = MultiDeviceFactory::for_targets(&[TargetKind::Gpu], false);
         let mut gpu_dev = gpu_factory.build();
         let mut gpu = MeasurementEngine::new(
             &f.prog,
@@ -640,9 +660,10 @@ mod tests {
             fp,
             cache.clone(),
             &mut gpu_dev,
+            0.0,
         );
         let t_gpu = gpu.measure_batch(&gene)[0];
-        let mc_factory = DeviceFactory::for_target(TargetKind::ManyCore, false);
+        let mc_factory = MultiDeviceFactory::for_targets(&[TargetKind::ManyCore], false);
         let mut mc_dev = mc_factory.build();
         let mut mc = MeasurementEngine::new(
             &f.prog,
@@ -654,6 +675,7 @@ mod tests {
             fp,
             cache,
             &mut mc_dev,
+            0.0,
         );
         let t_mc = mc.measure_batch(&gene)[0];
         assert_eq!(mc.measured(), 1, "many-core must not hit the GPU's entry");
@@ -733,6 +755,12 @@ mod tests {
         let mut cfg3 = f.cfg.clone();
         cfg3.cost.gpu_op_ns *= 2.0;
         assert_ne!(base, fingerprint(&f.prog, &cfg3, "loops", &[]), "cost model change");
+        let mut cfg4 = f.cfg.clone();
+        cfg4.devices = vec![TargetKind::Gpu, TargetKind::ManyCore];
+        assert_ne!(base, fingerprint(&f.prog, &cfg4, "loops", &[]), "device set change");
+        let mut cfg5 = f.cfg.clone();
+        cfg5.power_weight = 0.25;
+        assert_ne!(base, fingerprint(&f.prog, &cfg5, "loops", &[]), "power weight change");
         // extra-context concatenation must not be ambiguous
         assert_ne!(
             fingerprint(&f.prog, &f.cfg, "loops", &["ab", "c"]),

@@ -2,17 +2,25 @@
 //! directives — the paper's "遺伝子情報のコード化" (encoding gene
 //! information into code) made visible.
 //!
-//! For a gene/plan the paper inserts, per language (§4.3):
-//! * C: `#pragma acc kernels` / `#pragma acc parallel loop` plus
-//!   `#pragma acc data copy(...)` / `present(...)` (OpenACC, PGI compiler)
-//! * Python: PyCUDA kernel dispatch — rendered as `# [pycuda] ...`
-//!   annotations on the loop
-//! * Java: `IntStream.range(0, n).parallel().forEach` lambda — rendered as
-//!   `// [gpu-lambda] ...` annotations (IBM JDK offload)
+//! For a gene/plan the paper inserts, per language and destination
+//! (§4.3; the mixed-destination follow-up converts each region for the
+//! destination it was placed on):
+//! * C — GPU: `#pragma acc kernels` / `#pragma acc parallel loop` plus
+//!   `#pragma acc data copy(...)` / `present(...)` (OpenACC, PGI
+//!   compiler); many-core CPU: `#pragma omp parallel for` (shared
+//!   memory, no data directives); FPGA-sim: OpenACC data clauses with an
+//!   OpenCL-HLS kernel marker
+//! * Python — GPU: PyCUDA dispatch as `# [pycuda] ...` annotations;
+//!   many-core: `# [joblib] ...`; FPGA-sim: `# [pyopencl] ...`
+//! * Java — the offloaded loop renders as the
+//!   `IntStream.range(0, n).parallel().forEach` lambda on every
+//!   destination; the marker comment names the backend (IBM JDK GPU
+//!   lambda / multi-core parallel stream / Aparapi-style OpenCL)
 //!
 //! The annotated source is for human inspection and reports; execution of
 //! the plan happens in the VM + device model.
 
+use crate::device::TargetKind;
 use crate::ir::*;
 use std::collections::HashMap;
 use std::fmt::Write;
@@ -20,7 +28,7 @@ use std::fmt::Write;
 /// Directive annotations attached to one loop before rendering.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct LoopDirective {
-    /// loop body runs on the GPU
+    /// loop body runs on a device
     pub offload: bool,
     /// variables copied host→device at region entry
     pub copy_in: Vec<String>,
@@ -28,6 +36,9 @@ pub struct LoopDirective {
     pub copy_out: Vec<String>,
     /// variables already resident (transfer hoisted to an outer level)
     pub present: Vec<String>,
+    /// destination the loop was placed on; `None` renders as the GPU
+    /// (the legacy single-target annotation)
+    pub dest: Option<TargetKind>,
 }
 
 /// Render `prog` with per-loop directives as commented/pragma'd source in
@@ -95,9 +106,12 @@ impl<'a> Renderer<'a> {
         if !d.offload && d.copy_in.is_empty() && d.copy_out.is_empty() && d.present.is_empty() {
             return vec![];
         }
+        let dest = d.dest.unwrap_or(TargetKind::Gpu);
         let mut lines = Vec::new();
-        match self.lang {
-            Lang::C => {
+        match (self.lang, dest) {
+            // GPU and FPGA share the OpenACC data clauses; only the
+            // kernel marker differs
+            (Lang::C, TargetKind::Gpu | TargetKind::Fpga) => {
                 if !d.copy_in.is_empty() {
                     lines.push(format!("#pragma acc data copyin({})", d.copy_in.join(", ")));
                 }
@@ -108,11 +122,23 @@ impl<'a> Renderer<'a> {
                     lines.push(format!("#pragma acc data present({})", d.present.join(", ")));
                 }
                 if d.offload {
-                    lines.push("#pragma acc kernels".to_string());
-                    lines.push("#pragma acc parallel loop".to_string());
+                    if dest == TargetKind::Gpu {
+                        lines.push("#pragma acc kernels".to_string());
+                        lines.push("#pragma acc parallel loop".to_string());
+                    } else {
+                        lines.push(
+                            "// [fpga] OpenCL HLS pipelined kernel for this loop".to_string(),
+                        );
+                    }
                 }
             }
-            Lang::Python => {
+            (Lang::C, TargetKind::ManyCore) => {
+                // shared memory: no data-movement directives
+                if d.offload {
+                    lines.push("#pragma omp parallel for".to_string());
+                }
+            }
+            (Lang::Python, TargetKind::Gpu) => {
                 if !d.copy_in.is_empty() {
                     lines.push(format!("# [pycuda] memcpy_htod: {}", d.copy_in.join(", ")));
                 }
@@ -126,7 +152,32 @@ impl<'a> Renderer<'a> {
                     lines.push("# [pycuda] SourceModule kernel launch for this loop".to_string());
                 }
             }
-            Lang::Java => {
+            (Lang::Python, TargetKind::ManyCore) => {
+                if d.offload {
+                    lines.push("# [joblib] Parallel(n_jobs=-1) over this loop".to_string());
+                }
+            }
+            (Lang::Python, TargetKind::Fpga) => {
+                if !d.copy_in.is_empty() {
+                    lines.push(format!(
+                        "# [pyopencl] enqueue_write_buffer: {}",
+                        d.copy_in.join(", ")
+                    ));
+                }
+                if !d.copy_out.is_empty() {
+                    lines.push(format!(
+                        "# [pyopencl] enqueue_read_buffer: {}",
+                        d.copy_out.join(", ")
+                    ));
+                }
+                if !d.present.is_empty() {
+                    lines.push(format!("# [pyopencl] device-resident: {}", d.present.join(", ")));
+                }
+                if d.offload {
+                    lines.push("# [pyopencl] FPGA HLS kernel dispatch for this loop".to_string());
+                }
+            }
+            (Lang::Java, TargetKind::Gpu) => {
                 if !d.copy_in.is_empty() {
                     lines.push(format!("// [gpu-lambda] host->device: {}", d.copy_in.join(", ")));
                 }
@@ -140,6 +191,39 @@ impl<'a> Renderer<'a> {
                     lines.push(
                         "// [gpu-lambda] IntStream.range(start, end).parallel().forEach (IBM JDK GPU)"
                             .to_string(),
+                    );
+                }
+            }
+            (Lang::Java, TargetKind::ManyCore) => {
+                if d.offload {
+                    lines.push(
+                        "// [parallel-stream] multi-core IntStream.parallel() for this loop"
+                            .to_string(),
+                    );
+                }
+            }
+            (Lang::Java, TargetKind::Fpga) => {
+                if !d.copy_in.is_empty() {
+                    lines.push(format!(
+                        "// [aparapi-fpga] host->device: {}",
+                        d.copy_in.join(", ")
+                    ));
+                }
+                if !d.copy_out.is_empty() {
+                    lines.push(format!(
+                        "// [aparapi-fpga] device->host: {}",
+                        d.copy_out.join(", ")
+                    ));
+                }
+                if !d.present.is_empty() {
+                    lines.push(format!(
+                        "// [aparapi-fpga] device-resident: {}",
+                        d.present.join(", ")
+                    ));
+                }
+                if d.offload {
+                    lines.push(
+                        "// [aparapi-fpga] OpenCL kernel dispatch for this loop".to_string(),
                     );
                 }
             }
@@ -634,8 +718,15 @@ mod tests {
                 copy_in: vec!["a".into()],
                 copy_out: vec!["a".into()],
                 present: vec![],
+                dest: None,
             },
         );
+        m
+    }
+
+    fn directives_for_dest(dest: TargetKind) -> HashMap<LoopId, LoopDirective> {
+        let mut m = directives_for_loop0(true);
+        m.get_mut(&0).unwrap().dest = Some(dest);
         m
     }
 
@@ -670,6 +761,39 @@ mod tests {
         assert!(s.contains("IntStream.range(0, n).parallel().forEach(i -> {"), "{s}");
         let s_plain = render(&p, &HashMap::new());
         assert!(s_plain.contains("for (int i = 0; i < n; i += 1)"), "{s_plain}");
+    }
+
+    #[test]
+    fn destination_specific_markers_per_language() {
+        let p = parse(C_SRC, Lang::C, "t").unwrap();
+        let mc = render(&p, &directives_for_dest(TargetKind::ManyCore));
+        assert!(mc.contains("#pragma omp parallel for"), "{mc}");
+        assert!(!mc.contains("acc data"), "shared memory needs no data directives:\n{mc}");
+        let fpga = render(&p, &directives_for_dest(TargetKind::Fpga));
+        assert!(fpga.contains("// [fpga] OpenCL HLS"), "{fpga}");
+        assert!(fpga.contains("#pragma acc data copyin(a)"), "{fpga}");
+        // explicit GPU dest renders exactly like the legacy None dest
+        let gpu = render(&p, &directives_for_dest(TargetKind::Gpu));
+        assert_eq!(gpu, render(&p, &directives_for_loop0(true)));
+
+        let py_src = "def main():\n    n = 8\n    a = zeros(n)\n    for i in range(n):\n        a[i] = i * 2.0\n";
+        let pp = parse(py_src, Lang::Python, "t").unwrap();
+        assert!(render(&pp, &directives_for_dest(TargetKind::ManyCore))
+            .contains("# [joblib] Parallel(n_jobs=-1)"));
+        assert!(render(&pp, &directives_for_dest(TargetKind::Fpga))
+            .contains("# [pyopencl] FPGA HLS kernel dispatch"));
+
+        let j_src = r#"class T { public static void main(String[] args) {
+            int n = 8;
+            double[] a = new double[n];
+            for (int i = 0; i < n; i++) { a[i] = i * 2.0; }
+        } }"#;
+        let jp = parse(j_src, Lang::Java, "t").unwrap();
+        let jmc = render(&jp, &directives_for_dest(TargetKind::ManyCore));
+        assert!(jmc.contains("// [parallel-stream] multi-core"), "{jmc}");
+        assert!(jmc.contains("IntStream.range(0, n).parallel()"), "{jmc}");
+        assert!(render(&jp, &directives_for_dest(TargetKind::Fpga))
+            .contains("// [aparapi-fpga] OpenCL kernel dispatch"));
     }
 
     #[test]

@@ -18,10 +18,12 @@
 use crate::analysis::ProgramAnalysis;
 use crate::clone::{char_vector_stmt, similarity};
 use crate::config::FuncBlockConfig;
+use crate::device::TargetKind;
 use crate::engine::MeasurementEngine;
 use crate::ir::*;
 use crate::measure::Measurement;
 use crate::patterndb::PatternDb;
+use crate::placement::DeviceSet;
 use crate::vm::{ExecPlan, GpuRegion, RegionExec};
 use std::collections::HashSet;
 
@@ -154,12 +156,14 @@ fn db_lookup<'a>(
     best
 }
 
-/// Apply a chosen candidate set to a plan.
-pub fn apply(plan: &mut ExecPlan, analysis: &ProgramAnalysis, chosen: &[&Candidate]) {
-    for c in chosen {
+/// Apply a chosen candidate set to a plan, each candidate on its
+/// destination (an index into the plan's device set; 0 = primary).
+pub fn apply(plan: &mut ExecPlan, analysis: &ProgramAnalysis, chosen: &[(&Candidate, usize)]) {
+    for (c, dest) in chosen {
         match &c.kind {
             CandidateKind::NameMatch { lib } => {
                 plan.gpu_calls.insert(lib.clone());
+                plan.call_dest.insert(lib.clone(), *dest);
             }
             CandidateKind::CloneNest { root, kernel, args, .. } => {
                 let info = &analysis.loops[*root];
@@ -174,6 +178,7 @@ pub fn apply(plan: &mut ExecPlan, analysis: &ProgramAnalysis, chosen: &[&Candida
                         copy_in,
                         copy_out,
                         exec: RegionExec::Library { name: kernel.clone(), args: args.clone() },
+                        dest: *dest,
                     },
                 );
             }
@@ -185,52 +190,129 @@ pub fn apply(plan: &mut ExecPlan, analysis: &ProgramAnalysis, chosen: &[&Candida
 #[derive(Debug, Clone)]
 pub struct FuncBlockReport {
     pub candidates: Vec<Candidate>,
-    /// indices into `candidates` of the winning subset
+    /// indices into `candidates` of the winning assignment (candidates
+    /// placed on any destination)
     pub chosen: Vec<usize>,
+    /// destination of each chosen candidate, aligned with `chosen`
+    pub dests: Vec<TargetKind>,
     pub best: Measurement,
-    /// measurements per trial: (subset bitmask, ga_time)
+    /// measurements per trial: (assignment index in mixed-radix
+    /// `device-count + 1` digits, fitness score)
     pub trials: Vec<(u64, f64)>,
 }
 
-/// The candidate-subset → plan mapping for [`trial_combinations`]: a mask
-/// gene with one bit per candidate. Shared with the measurement engine's
-/// pool workers, so it is a `Sync` closure over borrowed analysis data —
-/// pass it to [`MeasurementEngine::new`] as the plan builder.
+/// The candidate-assignment → plan mapping for [`trial_combinations`]: a
+/// placement-gene with one [`DeviceSet`] slot per candidate (one bit per
+/// candidate in the single-destination case). Shared with the measurement
+/// engine's pool workers, so it is a `Sync` closure over borrowed
+/// analysis data — pass it to [`MeasurementEngine::new`] as the plan
+/// builder.
 pub fn mask_plan<'a>(
     analysis: &'a ProgramAnalysis,
     candidates: &'a [Candidate],
+    set: &'a DeviceSet,
     naive_transfers: bool,
 ) -> impl Fn(&[bool]) -> ExecPlan + Sync + 'a {
     move |mask: &[bool]| {
-        let chosen: Vec<&Candidate> = mask
+        // trial_combinations caps the mask at 16 slots, so derive the
+        // slot count from the mask itself (candidates beyond it stay off)
+        let slots = mask.len() / set.bits_per_slot();
+        debug_assert!(slots <= candidates.len());
+        let placement = set.decode(mask, slots);
+        let chosen: Vec<(&Candidate, usize)> = placement
             .iter()
             .enumerate()
-            .filter(|&(_, &on)| on)
-            .map(|(i, _)| &candidates[i])
+            .filter_map(|(i, p)| p.map(|t| (&candidates[i], set.index_of(t).unwrap_or(0))))
             .collect();
-        let mut plan = ExecPlan { naive_transfers, ..Default::default() };
+        let mut plan = ExecPlan {
+            naive_transfers,
+            devices: set.devices().to_vec(),
+            ..Default::default()
+        };
         apply(&mut plan, analysis, &chosen);
         plan
     }
 }
 
-/// Measure candidate subsets (the paper's on/off + combination trials) and
-/// keep the fastest. The empty subset (pure CPU) is always included, so the
-/// phase never regresses. All subsets go to the engine as one batch, so
-/// the pool measures them concurrently; the winner is then re-verified on
-/// the engine's serial device to recover its full [`Measurement`].
+/// Measure candidate destination assignments (the paper's on/off +
+/// combination trials, generalized to "off or any destination" per
+/// candidate) and keep the fastest. Assignment 0 (pure CPU) is always
+/// included, so the phase never regresses. All assignments go to the
+/// engine as one batch, so the pool measures them concurrently; the
+/// winner is then re-verified on the engine's serial device to recover
+/// its full [`Measurement`].
 ///
 /// The engine's plan builder must be [`mask_plan`] over the same
-/// `candidates` slice (same order).
+/// `candidates` slice and [`DeviceSet`] (same order).
+/// The assignment indices one trial phase measures: all `arity^k`
+/// mixed-radix combos when they fit the budget; otherwise the empty
+/// assignment, then the single-candidate × destination assignments, then
+/// the sequential prefix — all cut off at the budget. Spending the
+/// budget on the coverage tier first means no candidate is starved by
+/// prefix truncation as long as the budget admits the `1 + k·(arity−1)`
+/// singles (the default budget of 64 covers the full 16 × 3 worst case);
+/// below that, the budget itself is the bound and earlier candidates
+/// win. Deterministic, duplicate-free, and identical to the plain
+/// `0..total` enumeration whenever the budget is not exceeded (in
+/// particular: always, for the default budget with a single destination
+/// and ≤ 6 candidates).
+fn trial_assignments(k: usize, arity: u64, budget: u64) -> Vec<u64> {
+    let total = arity.checked_pow(k as u32).unwrap_or(u64::MAX);
+    if total <= budget {
+        return (0..total).collect();
+    }
+    let mut out: Vec<u64> = vec![0]; // the CPU-only assignment
+    let mut seen: std::collections::HashSet<u64> = out.iter().copied().collect();
+    let push = |out: &mut Vec<u64>, seen: &mut std::collections::HashSet<u64>, c: u64| {
+        if out.len() < budget as usize && seen.insert(c) {
+            out.push(c);
+        }
+    };
+    // coverage tier: candidate i alone on destination v
+    for i in 0..k {
+        let place = arity.pow(i as u32);
+        for v in 1..arity {
+            push(&mut out, &mut seen, v * place);
+        }
+    }
+    // fill the rest of the budget with the sequential prefix
+    let mut c = 1u64;
+    while out.len() < budget as usize && c < total {
+        push(&mut out, &mut seen, c);
+        c += 1;
+    }
+    out
+}
+
 pub fn trial_combinations(
     candidates: &[Candidate],
+    set: &DeviceSet,
     engine: &mut MeasurementEngine<'_>,
     cfg: &FuncBlockConfig,
 ) -> FuncBlockReport {
     let k = candidates.len().min(16);
-    let subset_count = (1u64 << k).min(cfg.max_combination_trials.max(1) as u64);
-    let masks: Vec<Vec<bool>> =
-        (0..subset_count).map(|mask| (0..k).map(|i| mask >> i & 1 == 1).collect()).collect();
+    let arity = (set.len() + 1) as u64; // off + one per destination
+    // arity ≤ 4 and k ≤ 16 keep arity^k within u64; the trial budget is
+    // what actually bounds the enumeration
+    let combos = trial_assignments(k, arity, cfg.max_combination_trials.max(1) as u64);
+    let bits = set.bits_per_slot();
+    let masks: Vec<Vec<bool>> = combos
+        .iter()
+        .map(|&combo| {
+            // mixed-radix digits, least-significant candidate first —
+            // with one destination this is exactly the old bitmask order
+            let mut gene = vec![false; k * bits];
+            let mut x = combo;
+            for slot in 0..k {
+                let v = (x % arity) as usize;
+                x /= arity;
+                for i in 0..bits {
+                    gene[slot * bits + i] = v >> i & 1 == 1;
+                }
+            }
+            gene
+        })
+        .collect();
     let times = engine.measure_batch(&masks);
 
     let mut best_idx = 0usize;
@@ -239,14 +321,19 @@ pub fn trial_combinations(
             best_idx = i;
         }
     }
-    let trials: Vec<(u64, f64)> = times.iter().enumerate().map(|(i, &t)| (i as u64, t)).collect();
+    let trials: Vec<(u64, f64)> =
+        combos.iter().zip(&times).map(|(&c, &t)| (c, t)).collect();
     let best: Measurement = engine.measure_full(&masks[best_idx]);
-    FuncBlockReport {
-        candidates: candidates.to_vec(),
-        chosen: (0..k).filter(|i| best_idx as u64 >> i & 1 == 1).collect(),
-        best,
-        trials,
+    let placement = set.decode(&masks[best_idx], k);
+    let mut chosen = Vec::new();
+    let mut dests = Vec::new();
+    for (i, p) in placement.iter().enumerate() {
+        if let Some(t) = p {
+            chosen.push(i);
+            dests.push(*t);
+        }
     }
+    FuncBlockReport { candidates: candidates.to_vec(), chosen, dests, best, trials }
 }
 
 // ---------------------------------------------------------------------------
@@ -501,21 +588,27 @@ mod tests {
         measurer: &'a crate::measure::Measurer,
         plan: &'a (dyn Fn(&[bool]) -> ExecPlan + Sync),
         workers: usize,
-        dev: &'a mut crate::device::GpuDevice,
+        factory: crate::device::MultiDeviceFactory,
+        dev: &'a mut crate::device::MultiDevice,
     ) -> MeasurementEngine<'a> {
         let cfg = crate::config::Config::fast_sim();
         let fp = crate::engine::fingerprint(prog, &cfg, "funcblock", &[]);
         MeasurementEngine::new(
             prog,
             measurer,
-            crate::device::DeviceFactory::new(CostModel::default(), false),
+            factory,
             plan,
             workers,
             crate::device::TargetKind::Gpu,
             fp,
             crate::engine::shared(crate::engine::MeasurementCache::in_memory()),
             dev,
+            0.0,
         )
+    }
+
+    fn gpu_factory() -> crate::device::MultiDeviceFactory {
+        crate::device::MultiDeviceFactory::single(CostModel::default(), false)
     }
 
     #[test]
@@ -527,10 +620,11 @@ mod tests {
         let cands = find_candidates(&p, &a, &db, &cfg);
         assert!(!cands.is_empty());
         let measurer = Measurer::new(&p, VmConfig::default(), 2e-3).unwrap();
-        let plan = mask_plan(&a, &cands, false);
-        let mut dev = crate::device::DeviceFactory::new(CostModel::default(), false).build();
-        let mut engine = trial_engine(&p, &measurer, &plan, 2, &mut dev);
-        let report = trial_combinations(&cands, &mut engine, &cfg);
+        let set = DeviceSet::single(crate::device::TargetKind::Gpu);
+        let plan = mask_plan(&a, &cands, &set, false);
+        let mut dev = gpu_factory().build();
+        let mut engine = trial_engine(&p, &measurer, &plan, 2, gpu_factory(), &mut dev);
+        let report = trial_combinations(&cands, &set, &mut engine, &cfg);
         assert!(report.best.ok);
         // replacing the handwritten nest must beat the interpreted CPU time
         assert!(
@@ -540,6 +634,8 @@ mod tests {
             measurer.baseline_modeled_s()
         );
         assert!(!report.chosen.is_empty(), "GPU replacement should win");
+        assert_eq!(report.chosen.len(), report.dests.len());
+        assert!(report.dests.iter().all(|&t| t == crate::device::TargetKind::Gpu));
         assert_eq!(report.trials.len(), 1 << cands.len().min(16).min(6));
     }
 
@@ -550,16 +646,78 @@ mod tests {
         let cfg = FuncBlockConfig::default();
         let cands = find_candidates(&p, &a, &PatternDb::builtin(), &cfg);
         let measurer = Measurer::new(&p, VmConfig::default(), 2e-3).unwrap();
-        let plan = mask_plan(&a, &cands, false);
-        let mut d1 = crate::device::DeviceFactory::new(CostModel::default(), false).build();
-        let mut e1 = trial_engine(&p, &measurer, &plan, 1, &mut d1);
-        let r1 = trial_combinations(&cands, &mut e1, &cfg);
-        let mut d4 = crate::device::DeviceFactory::new(CostModel::default(), false).build();
-        let mut e4 = trial_engine(&p, &measurer, &plan, 4, &mut d4);
-        let r4 = trial_combinations(&cands, &mut e4, &cfg);
+        let set = DeviceSet::single(crate::device::TargetKind::Gpu);
+        let plan = mask_plan(&a, &cands, &set, false);
+        let mut d1 = gpu_factory().build();
+        let mut e1 = trial_engine(&p, &measurer, &plan, 1, gpu_factory(), &mut d1);
+        let r1 = trial_combinations(&cands, &set, &mut e1, &cfg);
+        let mut d4 = gpu_factory().build();
+        let mut e4 = trial_engine(&p, &measurer, &plan, 4, gpu_factory(), &mut d4);
+        let r4 = trial_combinations(&cands, &set, &mut e4, &cfg);
         assert_eq!(r1.chosen, r4.chosen);
+        assert_eq!(r1.dests, r4.dests);
         assert_eq!(r1.trials, r4.trials);
         assert_eq!(r1.best.modeled_s, r4.best.modeled_s);
+    }
+
+    #[test]
+    fn truncated_trial_budget_still_covers_every_candidate() {
+        // untruncated: the plain sequential enumeration (legacy order)
+        assert_eq!(trial_assignments(3, 2, 64), (0..8).collect::<Vec<u64>>());
+        // truncated multi-device space (3^6 = 729 ≫ 64): every candidate
+        // must still be tried alone on every destination
+        let combos = trial_assignments(6, 3, 64);
+        assert_eq!(combos.len(), 64);
+        assert_eq!(combos[0], 0, "CPU-only assignment always first");
+        let mut sorted = combos.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), combos.len(), "no duplicate trials");
+        for i in 0..6u32 {
+            for v in 1..3u64 {
+                let single = v * 3u64.pow(i);
+                assert!(
+                    combos.contains(&single),
+                    "candidate {i} on destination {v} never tried"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn heterogeneous_trial_enumerates_every_destination() {
+        // one candidate × a two-destination set: the trial space is
+        // {off, dev0, dev1} — three assignments, best one re-verified
+        let src = r#"void main() {
+            int n = 64;
+            double re[n]; double im[n]; double ro[n]; double io[n];
+            seed_fill(re, 5);
+            dft(re, im, ro, io, n);
+            printf("%f\n", ro[3]);
+        }"#;
+        let p = parse(src, Lang::C, "t").unwrap();
+        let a = analysis::analyze(&p);
+        let cfg = FuncBlockConfig::default();
+        let cands = find_candidates(&p, &a, &PatternDb::builtin(), &cfg);
+        assert_eq!(cands.len(), 1, "{cands:?}");
+        let set = DeviceSet::new(vec![
+            crate::device::TargetKind::Gpu,
+            crate::device::TargetKind::Fpga,
+        ])
+        .unwrap();
+        let factory = crate::device::MultiDeviceFactory::for_targets(set.devices(), false);
+        let measurer = Measurer::new(&p, VmConfig::default(), 2e-3).unwrap();
+        let plan = mask_plan(&a, &cands, &set, false);
+        let mut dev = factory.build();
+        let mut engine = trial_engine(&p, &measurer, &plan, 2, factory, &mut dev);
+        let report = trial_combinations(&cands, &set, &mut engine, &cfg);
+        assert_eq!(report.trials.len(), 3, "off / gpu / fpga");
+        assert!(report.best.ok);
+        // all three scores are distinct: the destinations have different
+        // cost models, and "off" is the CPU time
+        let mut scores: Vec<f64> = report.trials.iter().map(|&(_, t)| t).collect();
+        scores.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!(scores.windows(2).all(|w| w[0] < w[1]), "{scores:?}");
     }
 
     #[test]

@@ -1,6 +1,11 @@
 //! Genetic algorithm over offload patterns (§3.2.1, [29], Holland [41]).
 //!
-//! Gene: one bit per parallelizable loop — 1 = GPU, 0 = CPU. Fitness is
+//! Gene: a plain bit-vector. In the single-target search each bit is one
+//! parallelizable loop (1 = offloaded, 0 = CPU); in the
+//! mixed-destination search ([`crate::placement`]) each loop owns a
+//! fixed-width group of bits whose value selects a destination from the
+//! heterogeneous device set — the GA itself never interprets the bits,
+//! so the same operators drive both encodings. Fitness is
 //! derived from measured execution time in the verification environment;
 //! candidates whose results diverge from the CPU run (PCAST check) get
 //! time = ∞ and die out. Measured times are memoized per gene so each

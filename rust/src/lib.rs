@@ -14,6 +14,13 @@
 //!    blocks are matched against a code-pattern DB and replaced by
 //!    device-tuned GPU library implementations.
 //!
+//! On top of the common method sits **mixed-destination placement**
+//! (`placement`): the gene generalizes from "which loops go to the GPU"
+//! to one destination per loop/function block out of a configurable
+//! heterogeneous device set (GPU / many-core CPU / FPGA-sim), with
+//! per-destination cost and power models and an optional energy-weighted
+//! fitness — the environment-adaptive end state of the paper series.
+//!
 //! This crate is the Layer-3 coordinator of a three-layer stack:
 //! the "GPU" is a set of JAX/Pallas kernels AOT-compiled to HLO and executed
 //! through the PJRT C API (`runtime`); the source languages are parsed by
@@ -49,6 +56,7 @@ pub mod ir;
 pub mod libs;
 pub mod measure;
 pub mod patterndb;
+pub mod placement;
 pub mod proto;
 pub mod runtime;
 pub mod server;

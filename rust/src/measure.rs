@@ -16,6 +16,9 @@ use anyhow::Result;
 pub struct Measurement {
     /// deterministic modeled seconds (what the GA optimizes)
     pub modeled_s: f64,
+    /// deterministic modeled energy of the trial, joules (host CPU +
+    /// per-device power model; 0 when the run failed outright)
+    pub energy_j: f64,
     /// host wall-clock of the trial (reported alongside)
     pub wall_s: f64,
     /// passed the results check
@@ -28,11 +31,24 @@ pub struct Measurement {
 impl Measurement {
     /// The GA's view: measured time, ∞ when invalid.
     pub fn ga_time(&self) -> f64 {
-        if self.ok {
-            self.modeled_s
-        } else {
-            f64::INFINITY
+        self.ga_score(0.0)
+    }
+
+    /// Multi-objective fitness: a convex blend of modeled time and
+    /// modeled energy (the power-saving follow-up's tradeoff,
+    /// arXiv 2110.11520). Energy is normalized by
+    /// [`crate::device::REFERENCE_WATTS`] so both terms are in seconds;
+    /// `power_weight` 0 is pure time (identical to [`Measurement::ga_time`]),
+    /// 1 is pure energy. Invalid candidates score ∞ regardless.
+    pub fn ga_score(&self, power_weight: f64) -> f64 {
+        if !self.ok {
+            return f64::INFINITY;
         }
+        if power_weight <= 0.0 {
+            return self.modeled_s;
+        }
+        let w = power_weight.min(1.0);
+        self.modeled_s * (1.0 - w) + w * self.energy_j / crate::device::REFERENCE_WATTS
     }
 }
 
@@ -83,6 +99,7 @@ impl Measurer {
                 match self.check(&outcome) {
                     Ok(()) => Measurement {
                         modeled_s: outcome.modeled_seconds(),
+                        energy_j: outcome.energy_j,
                         wall_s,
                         ok: true,
                         failure: None,
@@ -90,6 +107,7 @@ impl Measurer {
                     },
                     Err(why) => Measurement {
                         modeled_s: f64::INFINITY,
+                        energy_j: outcome.energy_j,
                         wall_s,
                         ok: false,
                         failure: Some(why),
@@ -99,6 +117,7 @@ impl Measurer {
             }
             Err(e) => Measurement {
                 modeled_s: f64::INFINITY,
+                energy_j: 0.0,
                 wall_s: t0.elapsed().as_secs_f64(),
                 ok: false,
                 failure: Some(format!("execution error: {e}")),
@@ -208,6 +227,23 @@ mod tests {
         assert!(!r.ok);
         assert!(r.failure.as_ref().unwrap().contains("diverged"));
         assert!(r.ga_time().is_infinite());
+    }
+
+    #[test]
+    fn power_weighted_score_blends_time_and_energy() {
+        let p = parse(SRC, Lang::C, "t").unwrap();
+        let a = analysis::analyze(&p);
+        let plan = analysis::build_plan(&a, &[true, true], false);
+        let m = Measurer::new(&p, VmConfig::default(), 1e-3).unwrap();
+        let mut dev = GpuDevice::simulated(CostModel::default());
+        let r = m.measure(&p, &plan, &mut dev);
+        assert!(r.ok, "{:?}", r.failure);
+        assert!(r.energy_j > 0.0, "offloaded run must draw modeled power");
+        assert_eq!(r.ga_score(0.0), r.modeled_s, "weight 0 is pure time");
+        assert_eq!(r.ga_time(), r.modeled_s);
+        let want = 0.5 * r.modeled_s + 0.5 * r.energy_j / crate::device::REFERENCE_WATTS;
+        assert!((r.ga_score(0.5) - want).abs() < 1e-15);
+        assert_eq!(r.ga_score(5.0), r.ga_score(1.0), "weight clamps at 1");
     }
 
     #[test]

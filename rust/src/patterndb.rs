@@ -34,14 +34,24 @@ pub struct LearnedPlan {
     /// `engine::fingerprint` of (program IR, measurement config, backend)
     pub fingerprint: u64,
     pub lang: Lang,
+    /// primary destination (the first device of `devices`; the whole key
+    /// for plans learned by the pre-placement single-target search)
     pub target: TargetKind,
-    /// winning gene over `gene_loops` (loop ids after function-block
-    /// exclusion, in gene order)
+    /// the heterogeneous destination set the gene decodes against, in
+    /// slot-value order — `[target]` for single-target plans (what every
+    /// v2 record loads as)
+    pub devices: Vec<TargetKind>,
+    /// winning placement gene over `gene_loops` (loop ids after
+    /// function-block exclusion, in gene order; `devices.bits_per_slot`
+    /// bits per loop — one bit in the single-target case)
     pub gene: Vec<bool>,
     pub gene_loops: Vec<LoopId>,
     /// descriptions of the chosen function-block candidates (matched
     /// against a fresh `find_candidates` run at replay time)
     pub funcblocks: Vec<String>,
+    /// destination of each chosen function block, aligned with
+    /// `funcblocks` (`target` for every v2 record)
+    pub fb_dests: Vec<TargetKind>,
     /// CPU-only modeled seconds when the plan was learned
     pub baseline_s: f64,
     /// the plan's measured modeled seconds
@@ -75,15 +85,22 @@ pub struct PatternRecord {
 }
 
 impl PatternRecord {
-    /// The canonical key of a learned record.
+    /// The canonical key of a learned single-target record.
     pub fn learned_key(fingerprint: u64, target: TargetKind) -> String {
-        format!("learned/{fingerprint:016x}/{}", target.name())
+        PatternRecord::learned_key_set(fingerprint, &[target])
+    }
+
+    /// The canonical key of a learned record for a heterogeneous
+    /// destination set, e.g. `learned/00..2a/gpu+many-core`. With one
+    /// device this is exactly the v2 key, so old DB files keep matching.
+    pub fn learned_key_set(fingerprint: u64, devices: &[TargetKind]) -> String {
+        format!("learned/{fingerprint:016x}/{}", crate::placement::set_name(devices))
     }
 
     /// Build a learned record from a completed search.
     pub fn from_learned(description: String, vector: CharVec, plan: LearnedPlan) -> PatternRecord {
         PatternRecord {
-            key: PatternRecord::learned_key(plan.fingerprint, plan.target),
+            key: PatternRecord::learned_key_set(plan.fingerprint, &plan.devices),
             gpu_kernel: String::new(),
             sizes: Vec::new(),
             vector,
@@ -277,27 +294,39 @@ impl PatternDb {
     }
 
     /// Exact learned-pattern lookup: same program fingerprint, same
-    /// target — the service's zero-measurement fast path.
+    /// single target — the service's zero-measurement fast path.
     pub fn lookup_learned(&self, fingerprint: u64, target: TargetKind) -> Option<&PatternRecord> {
-        let key = PatternRecord::learned_key(fingerprint, target);
+        self.lookup_learned_set(fingerprint, &[target])
+    }
+
+    /// Exact learned-pattern lookup keyed by the full heterogeneous
+    /// destination set (a mixed plan's gene only decodes against the set
+    /// it was searched with, so sets are part of the key).
+    pub fn lookup_learned_set(
+        &self,
+        fingerprint: u64,
+        devices: &[TargetKind],
+    ) -> Option<&PatternRecord> {
+        let key = PatternRecord::learned_key_set(fingerprint, devices);
         self.learned.iter().find(|r| r.key == key)
     }
 
-    /// Similarity lookup over *learned* records only: best record for
-    /// `target` whose whole-program vector scores ≥ `threshold` against
-    /// `v`. The caller must still validate the replayed plan against its
-    /// own analysis (gene-loop set, candidate descriptions) and re-verify
-    /// the result — similarity alone is a hint, not proof.
+    /// Similarity lookup over *learned* records only: best record for the
+    /// exact destination set `devices` whose whole-program vector scores
+    /// ≥ `threshold` against `v`. The caller must still validate the
+    /// replayed plan against its own analysis (gene-loop set, candidate
+    /// descriptions) and re-verify the result — similarity alone is a
+    /// hint, not proof.
     pub fn lookup_learned_similar(
         &self,
         v: &CharVec,
-        target: TargetKind,
+        devices: &[TargetKind],
         threshold: f64,
     ) -> Option<(&PatternRecord, f64)> {
         let mut best: Option<(&PatternRecord, f64)> = None;
         for r in &self.learned {
             let Some(plan) = r.learned.as_ref() else { continue };
-            if plan.target != target || r.vector.iter().all(|&x| x == 0.0) {
+            if plan.devices != devices || r.vector.iter().all(|&x| x == 0.0) {
                 continue;
             }
             let s = similarity(v, &r.vector);
@@ -336,12 +365,16 @@ impl PatternDb {
 
     // ---- persistence -----------------------------------------------------
     //
-    // Line format (v2):
+    // Line format (v3):
     //   function block: key|gpu|sizes|desc|vector
     //   learned plan:   key|gpu|sizes|desc|vector|fp|lang|target|gene|
-    //                   gene_loops|funcblocks|baseline_s|final_s
-    // (13 fields; `-` stands for an empty gene / loop list / block list.)
-    // v1 files (5 fields everywhere) still load.
+    //                   gene_loops|funcblocks|baseline_s|final_s|
+    //                   devices|fb_dests
+    // (15 fields; `-` stands for an empty gene / loop list / block list /
+    // fb_dest list; `devices` is `+`-joined destination names.)
+    // v2 learned lines (13 fields — no devices/fb_dests: a single-target
+    // plan, devices = [target], every block on the target) and v1 files
+    // (5 fields everywhere) still load.
 
     /// Builtin catalogue merged with whatever `path` holds (when given
     /// and present) — how a restarted service resumes its learned state.
@@ -364,7 +397,7 @@ impl PatternDb {
     }
 
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let mut out = String::from("# envadapt pattern DB v2\n");
+        let mut out = String::from("# envadapt pattern DB v3\n");
         for r in self.records.iter().chain(&self.learned) {
             let sizes: Vec<String> = r.sizes.iter().map(|s| s.to_string()).collect();
             let vec: Vec<String> = r.vector.iter().map(|x| format!("{x}")).collect();
@@ -398,8 +431,19 @@ impl PatternDb {
                         .collect::<Vec<_>>()
                         .join(";")
                 };
+                let devices = p
+                    .devices
+                    .iter()
+                    .map(|d| d.name())
+                    .collect::<Vec<_>>()
+                    .join("+");
+                let fb_dests = if p.fb_dests.is_empty() {
+                    "-".to_string()
+                } else {
+                    p.fb_dests.iter().map(|d| d.name()).collect::<Vec<_>>().join(",")
+                };
                 out.push_str(&format!(
-                    "|{:016x}|{}|{}|{}|{}|{}|{}|{}",
+                    "|{:016x}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
                     p.fingerprint,
                     p.lang.name(),
                     p.target.name(),
@@ -407,7 +451,9 @@ impl PatternDb {
                     loops,
                     blocks,
                     p.baseline_s,
-                    p.final_s
+                    p.final_s,
+                    devices,
+                    fb_dests
                 ));
             }
             out.push('\n');
@@ -424,7 +470,7 @@ impl PatternDb {
                 continue;
             }
             let parts: Vec<&str> = line.split('|').collect();
-            if parts.len() != 5 && parts.len() != 13 {
+            if parts.len() != 5 && parts.len() != 13 && parts.len() != 15 {
                 bail!("pattern DB line {} malformed", lineno + 1);
             }
             let sizes: Vec<usize> = parts[2]
@@ -441,7 +487,7 @@ impl PatternDb {
             }
             let mut vector = [0.0; NODE_KIND_COUNT];
             vector.copy_from_slice(&vec_parts);
-            let learned = if parts.len() == 13 {
+            let learned = if parts.len() >= 13 {
                 Some(Self::parse_learned(&parts, lineno)?)
             } else {
                 None
@@ -496,13 +542,43 @@ impl PatternDb {
         };
         let baseline_s: f64 = parts[11].parse().map_err(|_| bad("baseline_s"))?;
         let final_s: f64 = parts[12].parse().map_err(|_| bad("final_s"))?;
+        // v3 appends the destination set and per-block destinations; a v2
+        // line is a single-target plan with every block on the target
+        let devices: Vec<TargetKind> = if parts.len() >= 15 {
+            parts[13]
+                .split('+')
+                .map(|s| TargetKind::from_name(s).ok_or_else(|| bad("device set")))
+                .collect::<Result<_>>()?
+        } else {
+            vec![target]
+        };
+        if devices.is_empty() {
+            return Err(bad("device set"));
+        }
+        let fb_dests: Vec<TargetKind> = if parts.len() >= 15 {
+            if parts[14] == "-" {
+                Vec::new()
+            } else {
+                parts[14]
+                    .split(',')
+                    .map(|s| TargetKind::from_name(s).ok_or_else(|| bad("funcblock dest")))
+                    .collect::<Result<_>>()?
+            }
+        } else {
+            vec![target; funcblocks.len()]
+        };
+        if fb_dests.len() != funcblocks.len() {
+            return Err(bad("funcblock dest count"));
+        }
         Ok(LearnedPlan {
             fingerprint,
             lang,
             target,
+            devices,
             gene,
             gene_loops,
             funcblocks,
+            fb_dests,
             baseline_s,
             final_s,
         })
@@ -575,9 +651,11 @@ mod tests {
             fingerprint,
             lang: Lang::C,
             target: TargetKind::Gpu,
+            devices: vec![TargetKind::Gpu],
             gene: vec![true, false, true],
             gene_loops: vec![2, 5, 7],
             funcblocks: vec!["library call `matmul` → GPU dense square matmul".to_string()],
+            fb_dests: vec![TargetKind::Gpu],
             baseline_s: 0.5,
             final_s,
         }
@@ -605,6 +683,7 @@ mod tests {
         plan.gene.clear();
         plan.gene_loops.clear();
         plan.funcblocks.clear();
+        plan.fb_dests.clear();
         assert!(db.insert_learned(empty_gene));
         let tmp = std::env::temp_dir()
             .join(format!("envadapt_patterndb_learned_{}.txt", std::process::id()));
@@ -677,18 +756,100 @@ mod tests {
         let mut db = PatternDb::default();
         db.insert_learned(sample_learned(7, 0.2));
         let v = db.learned_records()[0].vector;
-        let (r, s) = db.lookup_learned_similar(&v, TargetKind::Gpu, 0.99).unwrap();
+        let (r, s) = db.lookup_learned_similar(&v, &[TargetKind::Gpu], 0.99).unwrap();
         assert_eq!(r.learned.as_ref().unwrap().fingerprint, 7);
         assert!(s > 0.999);
         assert!(
-            db.lookup_learned_similar(&v, TargetKind::ManyCore, 0.99).is_none(),
+            db.lookup_learned_similar(&v, &[TargetKind::ManyCore], 0.99).is_none(),
             "other targets must not reuse a GPU plan"
+        );
+        assert!(
+            db.lookup_learned_similar(&v, &[TargetKind::Gpu, TargetKind::ManyCore], 0.99)
+                .is_none(),
+            "a mixed-set request must not reuse a single-target plan"
         );
         let mut far = v;
         far[0] += 100.0;
-        assert!(db.lookup_learned_similar(&far, TargetKind::Gpu, 0.99).is_none());
+        assert!(db.lookup_learned_similar(&far, &[TargetKind::Gpu], 0.99).is_none());
         // learned vectors must never leak into clone detection
         assert!(db.lookup_similar(&v, 0.0).is_none());
+    }
+
+    /// A mixed-destination learned plan: the gene is 2 bits/slot over a
+    /// two-device set and the function block sits on the FPGA.
+    fn mixed_plan(fingerprint: u64) -> LearnedPlan {
+        LearnedPlan {
+            fingerprint,
+            lang: Lang::Python,
+            target: TargetKind::Gpu,
+            devices: vec![TargetKind::Gpu, TargetKind::Fpga],
+            gene: vec![true, false, false, true], // slot0 → gpu, slot1 → fpga
+            gene_loops: vec![1, 3],
+            funcblocks: vec!["library call `dft` → GPU dense DFT".to_string()],
+            fb_dests: vec![TargetKind::Fpga],
+            baseline_s: 0.25,
+            final_s: 0.03125,
+        }
+    }
+
+    #[test]
+    fn v3_mixed_destination_records_round_trip() {
+        let mut db = PatternDb::default();
+        let mut vector = [0.0; NODE_KIND_COUNT];
+        vector[2] = 4.0;
+        db.insert_learned(PatternRecord::from_learned(
+            "learned: mixed app".into(),
+            vector,
+            mixed_plan(0x51AB),
+        ));
+        let tmp = std::env::temp_dir()
+            .join(format!("envadapt_patterndb_v3_{}.txt", std::process::id()));
+        db.save(&tmp).unwrap();
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        assert!(text.starts_with("# envadapt pattern DB v3"));
+        assert!(text.contains("|gpu+fpga|"), "{text}");
+        let loaded = PatternDb::load(&tmp).unwrap();
+        let devices = [TargetKind::Gpu, TargetKind::Fpga];
+        let r = loaded.lookup_learned_set(0x51AB, &devices).expect("set-keyed lookup");
+        assert_eq!(r.learned.as_ref().unwrap(), &mixed_plan(0x51AB));
+        assert!(
+            loaded.lookup_learned(0x51AB, TargetKind::Gpu).is_none(),
+            "a single-target request must not replay a mixed-set plan"
+        );
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn v2_learned_lines_load_as_single_target_plans() {
+        // a learned line exactly as PR 2 wrote it: 13 fields, no
+        // devices/fb_dests columns
+        let vec0: Vec<String> =
+            (0..NODE_KIND_COUNT).map(|i| if i == 0 { "3".into() } else { "0".into() }).collect();
+        let line = format!(
+            "learned/00000000000000aa/gpu|||learned: old app|{}|00000000000000aa|c|gpu|101|2,5,7|library call `matmul` → GPU dense square matmul|0.5|0.125\n",
+            vec0.join(",")
+        );
+        let tmp = std::env::temp_dir()
+            .join(format!("envadapt_patterndb_v2compat_{}.txt", std::process::id()));
+        std::fs::write(&tmp, format!("# envadapt pattern DB v2\n{line}")).unwrap();
+        let db = PatternDb::load(&tmp).unwrap();
+        assert_eq!(db.learned_len(), 1);
+        let p = db.lookup_learned(0xAA, TargetKind::Gpu).unwrap().learned.as_ref().unwrap();
+        assert_eq!(p.devices, vec![TargetKind::Gpu], "v2 ⇒ single-target set");
+        assert_eq!(p.fb_dests, vec![TargetKind::Gpu], "v2 blocks sit on the target");
+        assert_eq!(p.gene, vec![true, false, true]);
+        assert_eq!(p.gene_loops, vec![2, 5, 7]);
+        // and re-saving upgrades the line to v3 without losing anything
+        let tmp2 = std::env::temp_dir()
+            .join(format!("envadapt_patterndb_v2to3_{}.txt", std::process::id()));
+        db.save(&tmp2).unwrap();
+        let again = PatternDb::load(&tmp2).unwrap();
+        assert_eq!(
+            again.lookup_learned(0xAA, TargetKind::Gpu).unwrap().learned,
+            db.lookup_learned(0xAA, TargetKind::Gpu).unwrap().learned
+        );
+        std::fs::remove_file(tmp).ok();
+        std::fs::remove_file(tmp2).ok();
     }
 
     #[test]

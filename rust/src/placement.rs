@@ -1,0 +1,438 @@
+//! Mixed-destination placement: the gene generalized from "which loops go
+//! to *the* GPU" to "which destination does each loop/function block run
+//! on" (the mixed-offloading-destination follow-up, arXiv 2011.12431).
+//!
+//! A [`DeviceSet`] is the ordered list of heterogeneous destinations the
+//! deployment environment offers (GPU, many-core CPU, FPGA-sim — any
+//! subset, any order). Each offloadable loop gets one *slot* of
+//! `bits_per_slot = ⌈log2(D+1)⌉` gene bits whose value selects CPU (0) or
+//! `devices[v-1]`; values above `D` also decode to CPU, so every bit
+//! pattern is a valid plan and the GA's crossover/mutation machinery
+//! ([`crate::ga`]) runs on plain `Vec<bool>` genes unchanged. With a
+//! single destination the encoding is bit-for-bit the legacy one-bit
+//! "offloaded?" gene, which is what keeps every pre-placement cache
+//! entry, learned pattern and test meaningful.
+//!
+//! [`build_plan`] turns a decoded placement into an [`ExecPlan`] whose
+//! regions carry destination indices; the VM routes each region's
+//! transfers/launches/kernels to that member of a
+//! [`crate::device::MultiDevice`], staging arrays through the host when
+//! consecutive regions run on different destinations.
+
+use crate::analysis::ProgramAnalysis;
+use crate::device::TargetKind;
+use crate::ir::LoopId;
+use crate::vm::{ExecPlan, GpuRegion, RegionExec};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// The canonical rendering of a destination list, e.g.
+/// `"gpu+many-core"` — the one spelling shared by [`DeviceSet::name`],
+/// learned-pattern keys and the service's coordinator routing, so the
+/// three can never drift apart.
+pub fn set_name(devices: &[TargetKind]) -> String {
+    devices.iter().map(|d| d.name()).collect::<Vec<_>>().join("+")
+}
+
+/// An ordered, duplicate-free set of migration destinations. Index order
+/// is significant: it is the `dest` numbering used by [`ExecPlan`]
+/// regions and the member order of the [`crate::device::MultiDevice`]
+/// that measures the plan.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeviceSet {
+    devices: Vec<TargetKind>,
+}
+
+impl DeviceSet {
+    /// Build a set; errors on an empty or duplicated list.
+    pub fn new(devices: Vec<TargetKind>) -> Result<DeviceSet> {
+        if devices.is_empty() {
+            bail!("device set must name at least one destination");
+        }
+        for (i, d) in devices.iter().enumerate() {
+            if devices[..i].contains(d) {
+                bail!("device set lists `{d}` twice");
+            }
+        }
+        Ok(DeviceSet { devices })
+    }
+
+    /// The one-destination set (the legacy single-target search).
+    pub fn single(target: TargetKind) -> DeviceSet {
+        DeviceSet { devices: vec![target] }
+    }
+
+    /// Every destination the environment-adaptive concept models.
+    pub fn full() -> DeviceSet {
+        DeviceSet { devices: TargetKind::all().to_vec() }
+    }
+
+    /// Parse `"gpu,many-core,fpga"` (`,` or `+` separated; `all` =
+    /// every destination).
+    pub fn parse(s: &str) -> Result<DeviceSet> {
+        let s = s.trim();
+        if s == "all" || s == "adaptive" {
+            return Ok(DeviceSet::full());
+        }
+        let mut devices = Vec::new();
+        for part in s.split(|c| c == ',' || c == '+') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            match TargetKind::from_name(part) {
+                Some(t) => devices.push(t),
+                None => bail!("unknown destination {part:?} (gpu|many-core|fpga)"),
+            }
+        }
+        DeviceSet::new(devices)
+    }
+
+    pub fn devices(&self) -> &[TargetKind] {
+        &self.devices
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // constructors guarantee at least one destination
+    }
+
+    /// Canonical name, e.g. `"gpu+many-core"` — used in learned-pattern
+    /// keys and cache-fingerprint context.
+    pub fn name(&self) -> String {
+        set_name(&self.devices)
+    }
+
+    pub fn index_of(&self, t: TargetKind) -> Option<usize> {
+        self.devices.iter().position(|&d| d == t)
+    }
+
+    /// Gene bits per placement slot: `⌈log2(len + 1)⌉` (one value for
+    /// "stay on CPU" plus one per destination). 1 for a single
+    /// destination — the legacy encoding.
+    pub fn bits_per_slot(&self) -> usize {
+        let mut bits = 0usize;
+        while (1usize << bits) < self.devices.len() + 1 {
+            bits += 1;
+        }
+        bits.max(1)
+    }
+
+    /// Total gene length for `slots` placement slots.
+    pub fn gene_len(&self, slots: usize) -> usize {
+        slots * self.bits_per_slot()
+    }
+
+    /// Decode a gene into one destination choice per slot. Slot values
+    /// are little-endian within their bit group; 0 and out-of-range
+    /// values mean "stay on CPU", so *every* bit pattern is valid.
+    pub fn decode(&self, gene: &[bool], slots: usize) -> Vec<Option<TargetKind>> {
+        let b = self.bits_per_slot();
+        assert_eq!(
+            gene.len(),
+            slots * b,
+            "gene length {} != {slots} slots × {b} bits",
+            gene.len()
+        );
+        (0..slots)
+            .map(|k| {
+                let mut v = 0usize;
+                for i in 0..b {
+                    if gene[k * b + i] {
+                        v |= 1 << i;
+                    }
+                }
+                if v == 0 || v > self.devices.len() {
+                    None
+                } else {
+                    Some(self.devices[v - 1])
+                }
+            })
+            .collect()
+    }
+
+    /// Inverse of [`DeviceSet::decode`] (destinations not in the set
+    /// encode as CPU).
+    pub fn encode(&self, placement: &[Option<TargetKind>]) -> Vec<bool> {
+        let b = self.bits_per_slot();
+        let mut gene = vec![false; placement.len() * b];
+        for (k, p) in placement.iter().enumerate() {
+            let v = p.and_then(|t| self.index_of(t)).map(|i| i + 1).unwrap_or(0);
+            for i in 0..b {
+                gene[k * b + i] = v >> i & 1 == 1;
+            }
+        }
+        gene
+    }
+}
+
+/// Build the execution plan for a placement over
+/// `analysis.gene_loops()` (one entry per parallelizable loop, in gene
+/// order; `None` = stay on CPU).
+///
+/// Region formation generalizes the single-target rule: a placed loop
+/// whose ancestors are all unplaced roots an offload region on its
+/// destination. Loops perfectly nested under the root join the region's
+/// collapsed parallel chain only when placed on the *same* destination
+/// (a region executes on exactly one device); any other nested loop runs
+/// sequentially inside the kernel, exactly as before.
+pub fn build_plan(
+    analysis: &ProgramAnalysis,
+    set: &DeviceSet,
+    placement: &[Option<TargetKind>],
+    naive_transfers: bool,
+) -> ExecPlan {
+    let gene_loops = analysis.gene_loops();
+    assert_eq!(
+        placement.len(),
+        gene_loops.len(),
+        "placement length != parallelizable loop count"
+    );
+    let on: HashMap<LoopId, TargetKind> = gene_loops
+        .iter()
+        .zip(placement)
+        .filter_map(|(id, p)| p.map(|t| (*id, t)))
+        .collect();
+    let mut plan = ExecPlan {
+        naive_transfers,
+        devices: set.devices().to_vec(),
+        ..Default::default()
+    };
+    for (&id, &t) in &on {
+        // region root iff no ancestor is also placed (on any destination)
+        let mut anc = analysis.loops[id].parent;
+        let mut is_root = true;
+        while let Some(a) = anc {
+            if on.contains_key(&a) {
+                is_root = false;
+                break;
+            }
+            anc = analysis.loops[a].parent;
+        }
+        if !is_root {
+            continue;
+        }
+        let info = &analysis.loops[id];
+        // collapsed parallel chain through perfect nests, same destination
+        let mut parallel_ids = vec![id];
+        let mut cur = id;
+        while let Some(child) = analysis.loops[cur].perfectly_nests_child {
+            if on.get(&child) == Some(&t) && analysis.loops[child].parallelizable {
+                parallel_ids.push(child);
+                cur = child;
+            } else {
+                break;
+            }
+        }
+        let mut copy_in: Vec<String> = info.array_reads.iter().cloned().collect();
+        let mut copy_out: Vec<String> = info.array_writes.iter().cloned().collect();
+        copy_in.sort();
+        copy_out.sort();
+        plan.regions.insert(
+            id,
+            GpuRegion {
+                root: id,
+                copy_in,
+                copy_out,
+                exec: RegionExec::Generic { parallel_ids },
+                dest: set.index_of(t).unwrap_or(0),
+            },
+        );
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis;
+    use crate::device::MultiDeviceFactory;
+    use crate::frontend::parse;
+    use crate::ir::Lang;
+    use crate::measure::Measurer;
+    use crate::vm::VmConfig;
+
+    #[test]
+    fn bits_per_slot_scales_with_set_size() {
+        assert_eq!(DeviceSet::single(TargetKind::Gpu).bits_per_slot(), 1);
+        let two =
+            DeviceSet::new(vec![TargetKind::Gpu, TargetKind::ManyCore]).unwrap();
+        assert_eq!(two.bits_per_slot(), 2);
+        assert_eq!(DeviceSet::full().bits_per_slot(), 2);
+        assert_eq!(DeviceSet::full().gene_len(5), 10);
+        assert_eq!(DeviceSet::single(TargetKind::Fpga).gene_len(5), 5);
+    }
+
+    #[test]
+    fn set_construction_validates() {
+        assert!(DeviceSet::new(vec![]).is_err());
+        assert!(DeviceSet::new(vec![TargetKind::Gpu, TargetKind::Gpu]).is_err());
+        assert_eq!(DeviceSet::parse("gpu,many-core").unwrap().len(), 2);
+        assert_eq!(DeviceSet::parse("gpu+fpga").unwrap().name(), "gpu+fpga");
+        assert_eq!(DeviceSet::parse("all").unwrap(), DeviceSet::full());
+        assert!(DeviceSet::parse("abacus").is_err());
+        assert!(DeviceSet::parse("").is_err());
+    }
+
+    #[test]
+    fn decode_encode_round_trip() {
+        let set = DeviceSet::full(); // gpu, many-core, fpga — 2 bits/slot
+        let placement = vec![
+            None,
+            Some(TargetKind::Gpu),
+            Some(TargetKind::ManyCore),
+            Some(TargetKind::Fpga),
+        ];
+        let gene = set.encode(&placement);
+        assert_eq!(gene.len(), 8);
+        assert_eq!(set.decode(&gene, 4), placement);
+        // every 2-bit value decodes to something valid (0..=3 with D=3)
+        for v in 0..4usize {
+            let g = [v & 1 == 1, v >> 1 & 1 == 1];
+            let d = set.decode(&g, 1);
+            match v {
+                0 => assert_eq!(d[0], None),
+                _ => assert_eq!(d[0], Some(TargetKind::all()[v - 1])),
+            }
+        }
+        // out-of-range slot value (3 with a 2-device set) decodes to CPU
+        let two = DeviceSet::new(vec![TargetKind::Gpu, TargetKind::ManyCore]).unwrap();
+        assert_eq!(two.decode(&[true, true], 1), vec![None]);
+    }
+
+    #[test]
+    fn single_device_encoding_is_the_legacy_bool_gene() {
+        let set = DeviceSet::single(TargetKind::Gpu);
+        assert_eq!(
+            set.decode(&[true, false, true], 3),
+            vec![Some(TargetKind::Gpu), None, Some(TargetKind::Gpu)]
+        );
+        assert_eq!(
+            set.encode(&[Some(TargetKind::Gpu), None]),
+            vec![true, false]
+        );
+    }
+
+    const TWO_LOOPS: &str = r#"void main() {
+        int n = 4096;
+        double x[n]; double y[n];
+        for (int i = 0; i < n; i++) { x[i] = i * 0.5; }
+        for (int i = 0; i < n; i++) { y[i] = x[i] * 2.0 + 1.0; }
+        printf("%f\n", y[7]);
+    }"#;
+
+    #[test]
+    fn regions_carry_their_destination() {
+        let p = parse(TWO_LOOPS, Lang::C, "t").unwrap();
+        let a = analysis::analyze(&p);
+        let set = DeviceSet::full();
+        let plan = build_plan(
+            &a,
+            &set,
+            &[Some(TargetKind::Fpga), Some(TargetKind::ManyCore)],
+            false,
+        );
+        assert_eq!(plan.devices, TargetKind::all().to_vec());
+        assert_eq!(plan.regions[&0].dest, set.index_of(TargetKind::Fpga).unwrap());
+        assert_eq!(plan.regions[&1].dest, set.index_of(TargetKind::ManyCore).unwrap());
+    }
+
+    #[test]
+    fn perfect_nest_collapses_only_on_matching_destination() {
+        let src = r#"void main() {
+            int n = 8;
+            double m[n][n];
+            for (int i = 0; i < n; i++)
+                for (int j = 0; j < n; j++)
+                    m[i][j] = i + j;
+        }"#;
+        let p = parse(src, Lang::C, "t").unwrap();
+        let a = analysis::analyze(&p);
+        let set = DeviceSet::full();
+        let same = build_plan(
+            &a,
+            &set,
+            &[Some(TargetKind::Gpu), Some(TargetKind::Gpu)],
+            false,
+        );
+        match &same.regions[&0].exec {
+            RegionExec::Generic { parallel_ids } => assert_eq!(parallel_ids, &vec![0, 1]),
+            other => panic!("{other:?}"),
+        }
+        // differing destinations: the inner loop cannot join the chain
+        // (it is swallowed sequentially by the outer region)
+        let differ = build_plan(
+            &a,
+            &set,
+            &[Some(TargetKind::Gpu), Some(TargetKind::ManyCore)],
+            false,
+        );
+        assert_eq!(differ.regions.len(), 1);
+        match &differ.regions[&0].exec {
+            RegionExec::Generic { parallel_ids } => assert_eq!(parallel_ids, &vec![0]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    /// The mixed-destination win, proven at the VM level with hand-built
+    /// plans (no search): on a transfer-dominated elementwise program the
+    /// many-core placement beats both the CPU baseline and the best
+    /// GPU-only plan, and a cross-device placement pays the staging
+    /// transfers between destinations.
+    #[test]
+    fn many_core_placement_beats_gpu_on_transfer_dominated_loops() {
+        let p = parse(TWO_LOOPS, Lang::C, "t").unwrap();
+        let a = analysis::analyze(&p);
+        let set = DeviceSet::new(vec![TargetKind::Gpu, TargetKind::ManyCore]).unwrap();
+        let factory = MultiDeviceFactory::for_targets(set.devices(), false);
+        let measurer = Measurer::new(&p, VmConfig::default(), 1e-9).unwrap();
+        let measure = |placement: &[Option<TargetKind>]| {
+            let plan = build_plan(&a, &set, placement, false);
+            let mut dev = factory.build();
+            let m = measurer.measure(&p, &plan, &mut dev);
+            assert!(m.ok, "{:?}", m.failure);
+            m.modeled_s
+        };
+        let cpu = measure(&[None, None]);
+        assert!((cpu - measurer.baseline_modeled_s()).abs() < 1e-15);
+        let gpu_both = measure(&[Some(TargetKind::Gpu), Some(TargetKind::Gpu)]);
+        let mc_both = measure(&[Some(TargetKind::ManyCore), Some(TargetKind::ManyCore)]);
+        assert!(
+            gpu_both > cpu,
+            "GPU must lose on transfer-dominated loops: {gpu_both} !> {cpu}"
+        );
+        assert!(mc_both < cpu, "many-core must win: {mc_both} !< {cpu}");
+        assert!(mc_both < gpu_both);
+    }
+
+    #[test]
+    fn cross_device_read_stages_through_the_host() {
+        let p = parse(TWO_LOOPS, Lang::C, "t").unwrap();
+        let a = analysis::analyze(&p);
+        let set = DeviceSet::new(vec![TargetKind::Gpu, TargetKind::ManyCore]).unwrap();
+        let factory = MultiDeviceFactory::for_targets(set.devices(), false);
+        let measurer = Measurer::new(&p, VmConfig::default(), 1e-9).unwrap();
+        // loop 0 writes x on the GPU; loop 1 reads x on the many-core —
+        // x must travel GPU → host → many-core
+        let plan = build_plan(
+            &a,
+            &set,
+            &[Some(TargetKind::Gpu), Some(TargetKind::ManyCore)],
+            false,
+        );
+        let mut dev = factory.build();
+        let m = measurer.measure(&p, &plan, &mut dev);
+        assert!(m.ok, "{:?}", m.failure);
+        let gpu = dev.device(0).stats;
+        let mc = dev.device(1).stats;
+        assert_eq!(gpu.launches, 1);
+        assert_eq!(mc.launches, 1);
+        assert_eq!(gpu.d2h_count, 1, "x pulled off the GPU for the many-core region");
+        assert_eq!(mc.h2d_count, 1, "x pushed to the many-core region");
+        // y is written on the many-core and read by the final print
+        assert_eq!(mc.d2h_count, 1, "y pulled back for the host print");
+    }
+}

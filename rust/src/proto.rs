@@ -39,6 +39,12 @@ pub struct OffloadRequest {
     pub code: String,
     /// migration target; `None` = the server's configured default
     pub target: Option<TargetKind>,
+    /// heterogeneous destination set for mixed placement (e.g.
+    /// `"gpu,many-core"`); overrides `target` when present
+    pub devices: Option<Vec<TargetKind>>,
+    /// energy weight of the search fitness (0 = pure time); `None` = the
+    /// server's configured default
+    pub power_weight: Option<f64>,
 }
 
 /// One parsed protocol request.
@@ -88,7 +94,41 @@ impl Request {
                             .ok_or_else(|| anyhow!("unknown target {t:?}"))?,
                     ),
                 };
-                Ok(Request::Offload(Box::new(OffloadRequest { id, name, lang, code, target })))
+                let devices = match j.get("devices") {
+                    None => None,
+                    Some(v) => {
+                        let s = v.as_str().ok_or_else(|| {
+                            anyhow!("devices must be a string like \"gpu,many-core\"")
+                        })?;
+                        Some(
+                            crate::placement::DeviceSet::parse(s)
+                                .map_err(|e| anyhow!("bad devices: {e}"))?
+                                .devices()
+                                .to_vec(),
+                        )
+                    }
+                };
+                let power_weight = match j.get("power_weight") {
+                    None => None,
+                    Some(v) => {
+                        let w = v
+                            .as_f64()
+                            .ok_or_else(|| anyhow!("power_weight must be a number"))?;
+                        if !(0.0..=1.0).contains(&w) {
+                            bail!("power_weight must be within [0, 1], got {w}");
+                        }
+                        Some(w)
+                    }
+                };
+                Ok(Request::Offload(Box::new(OffloadRequest {
+                    id,
+                    name,
+                    lang,
+                    code,
+                    target,
+                    devices,
+                    power_weight,
+                })))
             }
             "stats" => Ok(Request::Stats { id }),
             "ping" => Ok(Request::Ping { id }),
@@ -109,6 +149,13 @@ impl Request {
                     .set("code", r.code.as_str());
                 if let Some(t) = r.target {
                     j = j.set("target", t.name());
+                }
+                if let Some(d) = &r.devices {
+                    let names: Vec<&str> = d.iter().map(|t| t.name()).collect();
+                    j = j.set("devices", names.join(",").as_str());
+                }
+                if let Some(w) = r.power_weight {
+                    j = j.set("power_weight", w);
                 }
                 j.to_string()
             }
@@ -141,6 +188,8 @@ pub fn offload_request(id: i64, name: &str, lang: Lang, code: &str) -> String {
         lang,
         code: code.to_string(),
         target: None,
+        devices: None,
+        power_weight: None,
     }))
     .to_line()
 }
@@ -239,6 +288,44 @@ mod tests {
             assert_eq!(r.id(), id);
             assert_eq!(Request::parse_line(&r.to_line()).unwrap().id(), id);
         }
+    }
+
+    #[test]
+    fn devices_and_power_weight_round_trip() {
+        let req = Request::Offload(Box::new(OffloadRequest {
+            id: 11,
+            name: "hetero".to_string(),
+            lang: Lang::C,
+            code: "void main() { }".to_string(),
+            target: None,
+            devices: Some(vec![TargetKind::Gpu, TargetKind::ManyCore]),
+            power_weight: Some(0.25),
+        }));
+        let line = req.to_line();
+        assert!(line.contains("\"devices\":\"gpu,many-core\""), "{line}");
+        match Request::parse_line(&line).unwrap() {
+            Request::Offload(r) => {
+                assert_eq!(r.devices, Some(vec![TargetKind::Gpu, TargetKind::ManyCore]));
+                assert_eq!(r.power_weight, Some(0.25));
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+        // validation: unknown device / wrong type / out-of-range weight
+        assert!(Request::parse_line(
+            r#"{"op":"offload","id":1,"lang":"c","code":"","devices":"gpu,abacus"}"#
+        )
+        .is_err());
+        assert!(
+            Request::parse_line(
+                r#"{"op":"offload","id":1,"lang":"c","code":"","devices":["gpu","many-core"]}"#
+            )
+            .is_err(),
+            "a JSON-array devices value must be rejected, not silently ignored"
+        );
+        assert!(Request::parse_line(
+            r#"{"op":"offload","id":1,"lang":"c","code":"","power_weight":1.5}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -12,8 +12,8 @@
 //!   a device.
 //! * **Worker pool** — [`Service::start`] spawns `pool` OS threads, each
 //!   owning its coordinators (devices are not `Send`, so coordinators
-//!   are built inside their worker thread, one per migration target on
-//!   demand). Workers pull [`Job`]s from one shared queue; replies go
+//!   are built inside their worker thread, one per destination set on
+//!   demand). Workers pull `Job`s from one shared queue; replies go
 //!   back over per-request channels, so slow searches never block other
 //!   connections. The per-coordinator measurement-worker budget is
 //!   `cfg.workers / pool`, the same non-multiplying policy as
@@ -216,10 +216,10 @@ fn worker_loop(
     rx: Arc<Mutex<Receiver<Job>>>,
     stats: Arc<Mutex<ServiceStats>>,
 ) {
-    // Coordinators are built lazily per migration target inside this
-    // thread (devices are not Send) and live for the whole service, so
-    // PJRT executable caches stay warm across requests.
-    let mut coords: HashMap<TargetKind, Coordinator> = HashMap::new();
+    // Coordinators are built lazily per (destination set, power weight)
+    // inside this thread (devices are not Send) and live for the whole
+    // service, so PJRT executable caches stay warm across requests.
+    let mut coords: HashMap<String, Coordinator> = HashMap::new();
     loop {
         let job = match rx.lock().unwrap().recv() {
             Ok(j) => j,
@@ -236,16 +236,36 @@ fn handle_offload(
     cfg: &Config,
     db: &SharedPatternDb,
     cache: &SharedCache,
-    coords: &mut HashMap<TargetKind, Coordinator>,
+    coords: &mut HashMap<String, Coordinator>,
     req: &OffloadRequest,
     stats: &Arc<Mutex<ServiceStats>>,
 ) -> Json {
-    let target = req.target.unwrap_or(cfg.target);
-    let coord = coords.entry(target).or_insert_with(|| {
+    // a request-level `devices` set wins over `target`, which wins over
+    // the server's configured default (itself possibly a mixed set)
+    let devices = match &req.devices {
+        Some(d) => d.clone(),
+        None => match req.target {
+            Some(t) => vec![t],
+            None => cfg.effective_devices(),
+        },
+    };
+    let power_weight = req.power_weight.unwrap_or(cfg.power_weight);
+    let key = format!("{}|{power_weight}", crate::placement::set_name(&devices));
+    // the key embeds a client-controlled float, so the per-worker
+    // coordinator map is unbounded in principle — cap it (coordinators
+    // are cheap to rebuild; the measurement cache and pattern DB are
+    // shared, so only warm per-coordinator state is dropped)
+    const MAX_COORDS: usize = 16;
+    if coords.len() >= MAX_COORDS && !coords.contains_key(&key) {
+        coords.clear();
+    }
+    let coord = coords.entry(key).or_insert_with(|| {
         let mut tcfg = cfg.clone();
-        tcfg.target = target;
-        tcfg.cost = target.cost_model();
-        tcfg.use_pjrt = cfg.use_pjrt && target == TargetKind::Gpu;
+        tcfg.target = devices[0];
+        tcfg.devices = devices.clone();
+        tcfg.cost = devices[0].cost_model();
+        tcfg.power_weight = power_weight;
+        tcfg.use_pjrt = cfg.use_pjrt && devices.contains(&TargetKind::Gpu);
         Coordinator::with_shared(tcfg, cache.clone(), db.clone())
     });
     match coord.offload_source(&req.code, req.lang, &req.name) {
@@ -478,6 +498,8 @@ mod tests {
             lang: Lang::C,
             code: code.to_string(),
             target: Some(TargetKind::ManyCore),
+            devices: None,
+            power_weight: None,
         }));
         let (resp, _) = s.dispatch(req);
         assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
@@ -488,6 +510,33 @@ mod tests {
         let rep2 = resp2.get("report").unwrap();
         assert!(rep2.get("pattern_reuse").is_none(), "{}", resp2.to_string());
         assert!(rep2.get("measurements").and_then(|v| v.as_i64()).unwrap() > 0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn per_request_device_set_runs_mixed_placement() {
+        let s = service();
+        let code = crate::workloads::get("smallloops", Lang::C).unwrap().code;
+        let req = Request::Offload(Box::new(OffloadRequest {
+            id: 5,
+            name: "smallloops".to_string(),
+            lang: Lang::C,
+            code: code.to_string(),
+            target: None,
+            devices: Some(vec![TargetKind::Gpu, TargetKind::ManyCore]),
+            power_weight: None,
+        }));
+        let (resp, _) = s.dispatch(req);
+        assert_eq!(
+            resp.get("ok").and_then(|v| v.as_bool()),
+            Some(true),
+            "{}",
+            resp.to_string()
+        );
+        let rep = resp.get("report").unwrap();
+        let devices = rep.get("devices").expect("report carries the device set");
+        assert!(devices.to_string().contains("many-core"), "{}", devices.to_string());
+        assert!(rep.get("placement").is_some(), "report carries the placement");
         s.shutdown();
     }
 }

@@ -33,12 +33,18 @@ use std::rc::Rc;
 // ---------------------------------------------------------------------------
 
 /// Where an array's current contents live (MSI-style residency used for
-/// transfer accounting; `Both` = coherent copies on host and device).
+/// transfer accounting). With heterogeneous placement an array can be
+/// resident on any one destination of the plan's device set, so the
+/// device-side states carry the destination index: `Device(d)` = only
+/// device `d` holds the valid copy, `Both(d)` = host and device `d` are
+/// coherent. Reading on a *different* device stages the data through the
+/// host (d2h from the old owner, h2d to the new one) — the cross-device
+/// transfer penalty a mixed-destination plan must amortize.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Loc {
     Host,
-    Device,
-    Both,
+    Device(usize),
+    Both(usize),
 }
 
 /// A rectangular f64 array (row-major).
@@ -126,7 +132,7 @@ pub enum RegionExec {
     Library { name: String, args: Vec<String> },
 }
 
-/// One GPU offload region rooted at a `for` loop.
+/// One offload region rooted at a `for` loop.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GpuRegion {
     pub root: LoopId,
@@ -135,19 +141,29 @@ pub struct GpuRegion {
     /// array variables the region writes (device-resident afterwards)
     pub copy_out: Vec<String>,
     pub exec: RegionExec,
+    /// destination: index into the plan's device set ([`ExecPlan::devices`];
+    /// 0 = the primary device, which is all a single-target plan ever uses)
+    pub dest: usize,
 }
 
-/// Complete execution plan for one measurement trial: which loops form GPU
-/// regions and which library calls are routed to the GPU library.
+/// Complete execution plan for one measurement trial: which loops form
+/// offload regions (each with a destination), and which library calls are
+/// routed to a device library (each with a destination).
 #[derive(Debug, Clone, Default)]
 pub struct ExecPlan {
     /// offload regions keyed by root loop id
     pub regions: HashMap<LoopId, GpuRegion>,
-    /// statement-position library calls replaced by GPU implementations
+    /// statement-position library calls replaced by device implementations
     pub gpu_calls: std::collections::HashSet<String>,
+    /// destination (index into `devices`) per replaced library call;
+    /// calls absent from the map run on device 0
+    pub call_dest: HashMap<String, usize>,
     /// if true, disable residency tracking: every region entry/exit pays
     /// full transfers (the ablation baseline of [37])
     pub naive_transfers: bool,
+    /// the heterogeneous destination set `dest` indices refer to, in
+    /// index order; empty = legacy single-device plan (device 0 only)
+    pub devices: Vec<crate::device::TargetKind>,
 }
 
 impl ExecPlan {
@@ -174,6 +190,12 @@ impl ExecPlan {
 /// inside the worker's thread; only plans, times and
 /// [`crate::device::DeviceStats`] cross threads.
 pub trait Device {
+    /// Route subsequent charges and library calls to destination `dest`
+    /// (an index into the active plan's device set). Single-device
+    /// implementations ignore it; `crate::device::MultiDevice` switches
+    /// its member device. The VM calls this before every region entry,
+    /// replaced library call and residency transfer.
+    fn select_device(&mut self, _dest: usize) {}
     fn charge_h2d(&mut self, bytes: usize);
     fn charge_d2h(&mut self, bytes: usize);
     fn kernel_launch(&mut self);
@@ -183,8 +205,13 @@ pub trait Device {
     /// run + charge a GPU library kernel (numerics included); returns the
     /// kernel's value for value-returning kernels (e.g. `reduce_sum`).
     fn call_library(&mut self, name: &str, args: &[Value]) -> Result<Option<Value>>;
-    /// total modeled GPU seconds so far
+    /// total modeled device seconds so far (summed over destinations)
     fn gpu_seconds(&self) -> f64;
+    /// modeled energy drawn by the device side so far, joules (the
+    /// per-device power model; 0 for implementations without one)
+    fn energy_joules(&self) -> f64 {
+        0.0
+    }
     /// (h2d count, h2d bytes, d2h count, d2h bytes) so far
     fn transfer_stats(&self) -> (u64, u64, u64, u64);
 }
@@ -256,8 +283,12 @@ pub struct Outcome {
     pub prints: Vec<f64>,
     /// modeled CPU seconds (cpu_ops × cpu_op_ns)
     pub cpu_seconds: f64,
-    /// modeled GPU seconds (launches + transfers + kernels)
+    /// modeled device seconds (launches + transfers + kernels, summed
+    /// over every destination a mixed plan used)
     pub gpu_seconds: f64,
+    /// modeled energy: host CPU draw over `cpu_seconds` plus each
+    /// device's draw over its own busy seconds (joules)
+    pub energy_j: f64,
     /// h2d count, h2d bytes, d2h count, d2h bytes
     pub transfers: (u64, u64, u64, u64),
 }
@@ -347,12 +378,14 @@ impl<'a> Vm<'a> {
         if let Flow::Break | Flow::Continue = flow {
             bail!("break/continue escaped function body");
         }
+        let cpu_seconds = self.cpu_ops as f64 * self.cfg.cpu_op_ns * 1e-9;
         Ok(Outcome {
             cpu_ops: self.cpu_ops,
             gpu_ops: self.gpu_ops_total,
             prints: self.prints,
-            cpu_seconds: self.cpu_ops as f64 * self.cfg.cpu_op_ns * 1e-9,
+            cpu_seconds,
             gpu_seconds: self.dev.gpu_seconds(),
+            energy_j: cpu_seconds * crate::device::HOST_CPU_WATTS + self.dev.energy_joules(),
             transfers: self.dev.transfer_stats(),
         })
     }
@@ -372,47 +405,75 @@ impl<'a> Vm<'a> {
 
     // ---- residency bookkeeping -------------------------------------------
 
-    /// CPU-side read of an array: pull from device if the only valid copy
-    /// is there.
+    /// CPU-side read of an array: pull from the owning device if the only
+    /// valid copy is there.
     fn host_read(&mut self, arr: &ArrayRef) {
         let loc = arr.borrow().loc;
-        if loc == Loc::Device {
+        if let Loc::Device(d) = loc {
             let bytes = arr.borrow().bytes();
+            self.dev.select_device(d);
             self.dev.charge_d2h(bytes);
-            arr.borrow_mut().loc = Loc::Both;
+            arr.borrow_mut().loc = Loc::Both(d);
         }
     }
 
-    /// CPU-side write: device copy becomes stale.
+    /// CPU-side write: any device copy becomes stale.
     fn host_write(&mut self, arr: &ArrayRef) {
         let loc = arr.borrow().loc;
-        if loc == Loc::Device {
+        if let Loc::Device(d) = loc {
             // partial write to a device-resident array: fetch first
             let bytes = arr.borrow().bytes();
+            self.dev.select_device(d);
             self.dev.charge_d2h(bytes);
         }
         arr.borrow_mut().loc = Loc::Host;
     }
 
-    /// Device-side read at region entry.
-    fn device_read(&mut self, arr: &ArrayRef, naive: bool) {
+    /// Device-side read at region entry on destination `dest`. Data
+    /// resident on a *different* destination stages through the host
+    /// (d2h from the owner, then h2d to `dest`) — accelerators have no
+    /// direct link in this model.
+    fn device_read(&mut self, arr: &ArrayRef, dest: usize, naive: bool) {
         let loc = arr.borrow().loc;
-        if naive || loc == Loc::Host {
-            let bytes = arr.borrow().bytes();
-            self.dev.charge_h2d(bytes);
-            arr.borrow_mut().loc = Loc::Both;
+        let bytes = arr.borrow().bytes();
+        match loc {
+            Loc::Device(d) if d != dest => {
+                self.dev.select_device(d);
+                self.dev.charge_d2h(bytes);
+                self.dev.select_device(dest);
+                self.dev.charge_h2d(bytes);
+                arr.borrow_mut().loc = Loc::Both(dest);
+            }
+            Loc::Both(d) if d != dest => {
+                // host copy is valid: plain upload to the new destination
+                self.dev.select_device(dest);
+                self.dev.charge_h2d(bytes);
+                arr.borrow_mut().loc = Loc::Both(dest);
+            }
+            Loc::Host => {
+                self.dev.select_device(dest);
+                self.dev.charge_h2d(bytes);
+                arr.borrow_mut().loc = Loc::Both(dest);
+            }
+            _ if naive => {
+                self.dev.select_device(dest);
+                self.dev.charge_h2d(bytes);
+                arr.borrow_mut().loc = Loc::Both(dest);
+            }
+            _ => {}
         }
     }
 
     /// Device-side write at region exit: host copy stale (unless naive
     /// mode, which copies straight back like un-hoisted `copyout`).
-    fn device_write(&mut self, arr: &ArrayRef, naive: bool) {
+    fn device_write(&mut self, arr: &ArrayRef, dest: usize, naive: bool) {
         if naive {
             let bytes = arr.borrow().bytes();
+            self.dev.select_device(dest);
             self.dev.charge_d2h(bytes);
-            arr.borrow_mut().loc = Loc::Both;
+            arr.borrow_mut().loc = Loc::Both(dest);
         } else {
-            arr.borrow_mut().loc = Loc::Device;
+            arr.borrow_mut().loc = Loc::Device(dest);
         }
     }
 
@@ -585,11 +646,13 @@ impl<'a> Vm<'a> {
 
     fn exec_gpu_region(&mut self, region: &GpuRegion, s: &Stmt, env: &mut Env) -> Result<Flow> {
         let naive = self.plan.naive_transfers;
+        let dest = region.dest;
         // host→device transfers for read arrays
         for name in &region.copy_in {
             let arr = self.lookup_array(env, name)?;
-            self.device_read(&arr, naive);
+            self.device_read(&arr, dest, naive);
         }
+        self.dev.select_device(dest);
         self.dev.kernel_launch();
         match &region.exec {
             RegionExec::Generic { parallel_ids } => {
@@ -607,6 +670,7 @@ impl<'a> Vm<'a> {
                 self.gpu_ops_total += ops;
                 self.region_ops = 0;
                 self.in_gpu_region = false;
+                self.dev.select_device(dest);
                 self.dev.charge_generic_kernel(ops, parallel);
                 let flow = r?;
                 if !matches!(flow, Flow::Normal) {
@@ -622,13 +686,14 @@ impl<'a> Vm<'a> {
                             .ok_or_else(|| anyhow!("library region arg `{a}` undefined"))?,
                     );
                 }
+                self.dev.select_device(dest);
                 self.dev.call_library(name, &vals)?;
             }
         }
         // device-side writes
         for name in &region.copy_out {
             let arr = self.lookup_array(env, name)?;
-            self.device_write(&arr, naive);
+            self.device_write(&arr, dest, naive);
         }
         Ok(Flow::Normal)
     }
@@ -647,14 +712,16 @@ impl<'a> Vm<'a> {
                 })
                 .collect();
             let naive = self.plan.naive_transfers;
+            let dest = self.plan.call_dest.get(name).copied().unwrap_or(0);
             for a in &arrs {
-                self.device_read(a, naive);
+                self.device_read(a, dest, naive);
             }
+            self.dev.select_device(dest);
             self.dev.kernel_launch();
             let ret = self.dev.call_library(name, &args)?;
             // all array args conservatively considered written
             for a in &arrs {
-                self.device_write(a, naive);
+                self.device_write(a, dest, naive);
             }
             return Ok(ret);
         }

@@ -16,6 +16,8 @@
 //! | mixed        | `matmul` library call + parallel post-loop + CPU-bound loop  |
 //! | signal       | FIR filter via `conv1d` library call (name match) + reduction|
 //! | smallloops   | loops too small to profit — GA must keep them on CPU         |
+//! | hetero       | transfer-dominated medium loops: GPU offload loses to PCIe   |
+//! |              | costs, the many-core CPU wins — the mixed-destination case   |
 
 use crate::ir::Lang;
 
@@ -28,7 +30,7 @@ pub struct Source {
 }
 
 pub const APPS: &[&str] =
-    &["mm", "fourier", "stencil", "blackscholes", "mixed", "signal", "smallloops"];
+    &["mm", "fourier", "stencil", "blackscholes", "mixed", "signal", "smallloops", "hetero"];
 
 /// Fetch a workload. Returns `None` for unknown app names.
 pub fn get(app: &str, lang: Lang) -> Option<Source> {
@@ -54,12 +56,15 @@ pub fn get(app: &str, lang: Lang) -> Option<Source> {
         ("smallloops", Lang::C) => SMALL_C,
         ("smallloops", Lang::Python) => SMALL_PY,
         ("smallloops", Lang::Java) => SMALL_JAVA,
+        ("hetero", Lang::C) => HETERO_C,
+        ("hetero", Lang::Python) => HETERO_PY,
+        ("hetero", Lang::Java) => HETERO_JAVA,
         _ => return None,
     };
     Some(Source { app: APPS.iter().find(|a| **a == app)?, lang, code })
 }
 
-/// All 18 (app, language) sources.
+/// Every (app, language) source — `APPS.len() × 3` entries.
 pub fn all() -> Vec<Source> {
     let mut out = Vec::new();
     for app in APPS {
@@ -702,6 +707,95 @@ public class Smallloops {
 }
 "#;
 
+// ---------------------------------------------------------------------------
+// hetero — transfer-dominated parallel loops (n = 4096): every loop is
+// legal to offload, but PCIe-priced transfers + kernel launches make the
+// GPU *lose* to the CPU baseline while the shared-memory many-core target
+// wins big — the workload the mixed-destination placement search is
+// evaluated on.
+// ---------------------------------------------------------------------------
+
+const HETERO_C: &str = r#"
+#include <stdio.h>
+void main() {
+    int n = 4096;
+    double x[n];
+    double y[n];
+    double z[n];
+    double w[n];
+    for (int i = 0; i < n; i++) {
+        x[i] = ((i * 13) % 29) * 0.25 + 1.0;
+    }
+    for (int i = 0; i < n; i++) {
+        y[i] = x[i] * 1.5 + 2.0;
+    }
+    for (int i = 0; i < n; i++) {
+        z[i] = x[i] + y[i] * 0.5;
+    }
+    for (int i = 0; i < n; i++) {
+        w[i] = z[i] * z[i];
+    }
+    double s = 0.0;
+    for (int i = 0; i < n; i++) {
+        s += w[i] * 0.001;
+    }
+    printf("%f\n", z[100]);
+    printf("%f\n", s);
+}
+"#;
+
+const HETERO_PY: &str = r#"
+def main():
+    n = 4096
+    x = zeros(n)
+    y = zeros(n)
+    z = zeros(n)
+    w = zeros(n)
+    for i in range(n):
+        x[i] = ((i * 13) % 29) * 0.25 + 1.0
+    for i in range(n):
+        y[i] = x[i] * 1.5 + 2.0
+    for i in range(n):
+        z[i] = x[i] + y[i] * 0.5
+    for i in range(n):
+        w[i] = z[i] * z[i]
+    s = 0.0
+    for i in range(n):
+        s += w[i] * 0.001
+    print(z[100])
+    print(s)
+"#;
+
+const HETERO_JAVA: &str = r#"
+public class Hetero {
+    public static void main(String[] args) {
+        int n = 4096;
+        double[] x = new double[n];
+        double[] y = new double[n];
+        double[] z = new double[n];
+        double[] w = new double[n];
+        for (int i = 0; i < n; i++) {
+            x[i] = ((i * 13) % 29) * 0.25 + 1.0;
+        }
+        for (int i = 0; i < n; i++) {
+            y[i] = x[i] * 1.5 + 2.0;
+        }
+        for (int i = 0; i < n; i++) {
+            z[i] = x[i] + y[i] * 0.5;
+        }
+        for (int i = 0; i < n; i++) {
+            w[i] = z[i] * z[i];
+        }
+        double s = 0.0;
+        for (int i = 0; i < n; i++) {
+            s += w[i] * 0.001;
+        }
+        System.out.println(z[100]);
+        System.out.println(s);
+    }
+}
+"#;
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -709,7 +803,7 @@ mod tests {
     use crate::vm::{run_cpu, VmConfig};
 
     #[test]
-    fn all_18_sources_parse() {
+    fn all_sources_parse() {
         for s in all() {
             let p = parse(s.code, s.lang, s.app);
             assert!(p.is_ok(), "{} [{}]: {:?}", s.app, s.lang, p.err());
@@ -765,5 +859,21 @@ mod tests {
     #[test]
     fn unknown_app_is_none() {
         assert!(get("nope", Lang::C).is_none());
+    }
+
+    #[test]
+    fn hetero_loops_are_all_offloadable() {
+        // the mixed-destination workload: every loop must be a legal
+        // placement slot, so the whole app is in play for the placer
+        let s = get("hetero", Lang::C).unwrap();
+        let p = parse(s.code, Lang::C, "hetero").unwrap();
+        let a = crate::analysis::analyze(&p);
+        assert_eq!(a.loops.len(), 5);
+        assert_eq!(
+            a.gene_loops().len(),
+            5,
+            "{:?}",
+            a.loops.iter().map(|l| l.reject_reason.clone()).collect::<Vec<_>>()
+        );
     }
 }

@@ -5,7 +5,7 @@
 use envadapt::analysis;
 use envadapt::config::Config;
 use envadapt::coordinator::{offload_adaptive, offload_workload, Coordinator};
-use envadapt::device::{CostModel, DeviceFactory, TargetKind};
+use envadapt::device::{CostModel, MultiDeviceFactory, TargetKind};
 use envadapt::engine::{self, MeasurementCache, MeasurementEngine};
 use envadapt::frontend::parse;
 use envadapt::ga::{self, GaConfig};
@@ -79,7 +79,7 @@ fn prop_optimize_identical_at_1_and_8_workers() {
                 GaConfig { population: 6, generations: 5, seed: *ga_seed, ..Default::default() };
             let mut results = Vec::new();
             for workers in [1usize, 8] {
-                let factory = DeviceFactory::new(CostModel::default(), false);
+                let factory = MultiDeviceFactory::single(CostModel::default(), false);
                 let mut dev = factory.build();
                 let mut eng = MeasurementEngine::new(
                     &p,
@@ -91,6 +91,7 @@ fn prop_optimize_identical_at_1_and_8_workers() {
                     engine::fingerprint(&p, &cfg, "loops", &[]),
                     engine::shared(MeasurementCache::in_memory()),
                     &mut dev,
+                    0.0,
                 );
                 results.push(ga_signature(&ga::optimize(len, &ga_cfg, &mut eng)));
             }
@@ -223,7 +224,7 @@ fn eight_workers_at_least_twice_as_fast_as_one() {
         }
     }
     let mut run = |workers: usize| {
-        let factory = DeviceFactory::new(CostModel::default(), false);
+        let factory = MultiDeviceFactory::single(CostModel::default(), false);
         let mut dev = factory.build();
         let mut eng = MeasurementEngine::new(
             &p,
@@ -235,6 +236,7 @@ fn eight_workers_at_least_twice_as_fast_as_one() {
             engine::fingerprint(&p, &cfg, "loops", &[]),
             engine::shared(MeasurementCache::in_memory()),
             &mut dev,
+            0.0,
         );
         let t0 = std::time::Instant::now();
         let times = eng.measure_batch(&genes);

@@ -1,0 +1,213 @@
+//! Golden tests for the directive-annotated renderer: one exact expected
+//! output per (language × destination kind), so the emitted OpenACC /
+//! OpenMP / PyCUDA / joblib / pyopencl / parallel-stream / Aparapi
+//! annotations cannot silently drift.
+
+use envadapt::device::TargetKind;
+use envadapt::frontend::parse;
+use envadapt::frontend::render::{render, LoopDirective};
+use envadapt::ir::{Lang, LoopId};
+use std::collections::HashMap;
+
+const C_SRC: &str =
+    "void main() { int n = 4; double a[n]; for (int i = 0; i < n; i++) { a[i] = i * 2.0; } }";
+const PY_SRC: &str =
+    "def main():\n    n = 4\n    a = zeros(n)\n    for i in range(n):\n        a[i] = i * 2.0\n";
+const JAVA_SRC: &str = "class T { public static void main(String[] args) { int n = 4; double[] a = new double[n]; for (int i = 0; i < n; i++) { a[i] = i * 2.0; } } }";
+
+fn dirs(dest: TargetKind) -> HashMap<LoopId, LoopDirective> {
+    let mut m = HashMap::new();
+    m.insert(
+        0,
+        LoopDirective {
+            offload: true,
+            copy_in: vec!["a".into()],
+            copy_out: vec!["a".into()],
+            present: vec![],
+            dest: Some(dest),
+        },
+    );
+    m
+}
+
+fn golden(lines: &[&str]) -> String {
+    let mut s = lines.join("\n");
+    s.push('\n');
+    s
+}
+
+fn rendered(lang: Lang, dest: TargetKind) -> String {
+    let src = match lang {
+        Lang::C => C_SRC,
+        Lang::Python => PY_SRC,
+        Lang::Java => JAVA_SRC,
+    };
+    let p = parse(src, lang, "t").unwrap();
+    render(&p, &dirs(dest))
+}
+
+// ---------------------------------------------------------------------------
+// C
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_c_gpu() {
+    let want = golden(&[
+        "void main() {",
+        "    int n = 4;",
+        "    double a[n];",
+        "    #pragma acc data copyin(a)",
+        "    #pragma acc data copyout(a)",
+        "    #pragma acc kernels",
+        "    #pragma acc parallel loop",
+        "    for (int i = 0; i < n; i += 1) {",
+        "        a[i] = (i * 2.0);",
+        "    }",
+        "}",
+        "",
+    ]);
+    assert_eq!(rendered(Lang::C, TargetKind::Gpu), want);
+}
+
+#[test]
+fn golden_c_many_core() {
+    let want = golden(&[
+        "void main() {",
+        "    int n = 4;",
+        "    double a[n];",
+        "    #pragma omp parallel for",
+        "    for (int i = 0; i < n; i += 1) {",
+        "        a[i] = (i * 2.0);",
+        "    }",
+        "}",
+        "",
+    ]);
+    assert_eq!(rendered(Lang::C, TargetKind::ManyCore), want);
+}
+
+#[test]
+fn golden_c_fpga() {
+    let want = golden(&[
+        "void main() {",
+        "    int n = 4;",
+        "    double a[n];",
+        "    #pragma acc data copyin(a)",
+        "    #pragma acc data copyout(a)",
+        "    // [fpga] OpenCL HLS pipelined kernel for this loop",
+        "    for (int i = 0; i < n; i += 1) {",
+        "        a[i] = (i * 2.0);",
+        "    }",
+        "}",
+        "",
+    ]);
+    assert_eq!(rendered(Lang::C, TargetKind::Fpga), want);
+}
+
+// ---------------------------------------------------------------------------
+// Python
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_python_gpu() {
+    let want = golden(&[
+        "def main():",
+        "    n = 4",
+        "    a = zeros(n)",
+        "    # [pycuda] memcpy_htod: a",
+        "    # [pycuda] memcpy_dtoh: a",
+        "    # [pycuda] SourceModule kernel launch for this loop",
+        "    for i in range(n):",
+        "        a[i] = (i * 2.0)",
+        "",
+    ]);
+    assert_eq!(rendered(Lang::Python, TargetKind::Gpu), want);
+}
+
+#[test]
+fn golden_python_many_core() {
+    let want = golden(&[
+        "def main():",
+        "    n = 4",
+        "    a = zeros(n)",
+        "    # [joblib] Parallel(n_jobs=-1) over this loop",
+        "    for i in range(n):",
+        "        a[i] = (i * 2.0)",
+        "",
+    ]);
+    assert_eq!(rendered(Lang::Python, TargetKind::ManyCore), want);
+}
+
+#[test]
+fn golden_python_fpga() {
+    let want = golden(&[
+        "def main():",
+        "    n = 4",
+        "    a = zeros(n)",
+        "    # [pyopencl] enqueue_write_buffer: a",
+        "    # [pyopencl] enqueue_read_buffer: a",
+        "    # [pyopencl] FPGA HLS kernel dispatch for this loop",
+        "    for i in range(n):",
+        "        a[i] = (i * 2.0)",
+        "",
+    ]);
+    assert_eq!(rendered(Lang::Python, TargetKind::Fpga), want);
+}
+
+// ---------------------------------------------------------------------------
+// Java
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_java_gpu() {
+    let want = golden(&[
+        "class T {",
+        "    public static void main(String[] args) {",
+        "        int n = 4;",
+        "        double[] a = new double[n];",
+        "        // [gpu-lambda] host->device: a",
+        "        // [gpu-lambda] device->host: a",
+        "        // [gpu-lambda] IntStream.range(start, end).parallel().forEach (IBM JDK GPU)",
+        "        java.util.stream.IntStream.range(0, n).parallel().forEach(i -> {",
+        "            a[i] = (i * 2.0);",
+        "        });",
+        "    }",
+        "}",
+    ]);
+    assert_eq!(rendered(Lang::Java, TargetKind::Gpu), want);
+}
+
+#[test]
+fn golden_java_many_core() {
+    let want = golden(&[
+        "class T {",
+        "    public static void main(String[] args) {",
+        "        int n = 4;",
+        "        double[] a = new double[n];",
+        "        // [parallel-stream] multi-core IntStream.parallel() for this loop",
+        "        java.util.stream.IntStream.range(0, n).parallel().forEach(i -> {",
+        "            a[i] = (i * 2.0);",
+        "        });",
+        "    }",
+        "}",
+    ]);
+    assert_eq!(rendered(Lang::Java, TargetKind::ManyCore), want);
+}
+
+#[test]
+fn golden_java_fpga() {
+    let want = golden(&[
+        "class T {",
+        "    public static void main(String[] args) {",
+        "        int n = 4;",
+        "        double[] a = new double[n];",
+        "        // [aparapi-fpga] host->device: a",
+        "        // [aparapi-fpga] device->host: a",
+        "        // [aparapi-fpga] OpenCL kernel dispatch for this loop",
+        "        java.util.stream.IntStream.range(0, n).parallel().forEach(i -> {",
+        "            a[i] = (i * 2.0);",
+        "        });",
+        "    }",
+        "}",
+    ]);
+    assert_eq!(rendered(Lang::Java, TargetKind::Fpga), want);
+}

@@ -171,6 +171,7 @@ fn library_region_exec_equivalent_to_inline_nest() {
             copy_in: info.array_reads.iter().cloned().collect(),
             copy_out: info.array_writes.iter().cloned().collect(),
             exec: RegionExec::Library { name: "matmul".into(), args },
+            dest: 0,
         },
     );
     let mut dev = GpuDevice::simulated(CostModel::default());

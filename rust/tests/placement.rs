@@ -1,0 +1,197 @@
+//! Mixed-destination placement: end-to-end acceptance tests.
+//!
+//! The headline property (the mixed-offloading-destination follow-up,
+//! arXiv 2011.12431): on a transfer-dominated workload the placement
+//! search over a heterogeneous device set beats the best GPU-only plan —
+//! deterministically at any `--workers` count — and the learned placement
+//! replays from the pattern DB with zero new search measurements.
+
+use envadapt::config::Config;
+use envadapt::coordinator::Coordinator;
+use envadapt::device::{MultiDeviceFactory, TargetKind};
+use envadapt::frontend::parse;
+use envadapt::ga::GaConfig;
+use envadapt::ir::Lang;
+use envadapt::measure::Measurer;
+use envadapt::placement::{self, DeviceSet};
+use envadapt::vm::VmConfig;
+use envadapt::workloads;
+
+fn mixed_cfg(workers: usize) -> Config {
+    let mut cfg = Config::fast_sim();
+    cfg.devices = vec![TargetKind::Gpu, TargetKind::ManyCore];
+    cfg.workers = workers;
+    cfg.reuse_patterns = false; // every search below must actually search
+    // a little more budget than fast_sim: the placement gene is twice as
+    // wide as the single-target gene
+    cfg.ga = GaConfig { population: 10, generations: 14, ..Default::default() };
+    cfg
+}
+
+/// The acceptance criterion: on `hetero` (transfer-dominated — PCIe
+/// costs sink every GPU offload while the shared-memory many-core target
+/// wins), the mixed-destination plan beats the best GPU-only plan, at
+/// any worker count, bit-identically.
+#[test]
+fn mixed_destination_beats_gpu_only_on_transfer_dominated_workload() {
+    let src = workloads::get("hetero", Lang::C).unwrap();
+
+    // the best the single-destination GPU search can do
+    let mut gpu_cfg = mixed_cfg(1);
+    gpu_cfg.devices = vec![TargetKind::Gpu];
+    let gpu_only = Coordinator::new(gpu_cfg)
+        .offload_source(src.code, Lang::C, "hetero")
+        .unwrap();
+    assert!(gpu_only.final_measurement.ok);
+
+    // the mixed search at 1 / 4 / 8 measurement workers
+    let mut reports = Vec::new();
+    for workers in [1usize, 4, 8] {
+        let r = Coordinator::new(mixed_cfg(workers))
+            .offload_source(src.code, Lang::C, "hetero")
+            .unwrap();
+        assert!(r.final_measurement.ok, "workers {workers}: {:?}", r.final_measurement.failure);
+        reports.push(r);
+    }
+    for w in reports.windows(2) {
+        assert_eq!(w[0].best_gene, w[1].best_gene, "worker count changed the placement");
+        assert_eq!(w[0].placement, w[1].placement);
+        assert_eq!(w[0].final_s, w[1].final_s);
+        assert_eq!(w[0].total_measurements, w[1].total_measurements);
+    }
+
+    let mixed = &reports[0];
+    assert_eq!(mixed.devices, vec![TargetKind::Gpu, TargetKind::ManyCore]);
+    assert!(
+        mixed.final_s < gpu_only.final_s,
+        "mixed plan {} must beat the best GPU-only plan {}",
+        mixed.final_s,
+        gpu_only.final_s
+    );
+    assert!(
+        mixed.placement.iter().any(|p| *p == Some(TargetKind::ManyCore)),
+        "the win comes from placing loops on the many-core: {:?}",
+        mixed.placement
+    );
+    assert!(mixed.speedup() > 1.5, "speedup {}", mixed.speedup());
+}
+
+/// The learned mixed placement replays with zero search measurements,
+/// including across a coordinator restart through the v3 pattern-DB file
+/// — and a GPU-only request never replays a mixed-set plan.
+#[test]
+fn learned_placement_replays_with_zero_measurements() {
+    let tmp = std::env::temp_dir()
+        .join(format!("envadapt_placement_db_{}.txt", std::process::id()));
+    let _ = std::fs::remove_file(&tmp);
+    let src = workloads::get("hetero", Lang::Python).unwrap();
+
+    let mut cfg = Config::fast_sim();
+    cfg.devices = vec![TargetKind::Gpu, TargetKind::ManyCore];
+    cfg.pattern_db_path = Some(tmp.clone());
+    let r1 = Coordinator::new(cfg.clone())
+        .offload_source(src.code, Lang::Python, "hetero")
+        .unwrap();
+    assert!(r1.reused_pattern.is_none(), "first request must search");
+    assert!(r1.learned_pattern, "successful search must learn");
+    assert!(r1.total_measurements > 0);
+    assert!(tmp.exists());
+
+    // fresh coordinator (fresh process in spirit): replay from disk
+    let r2 = Coordinator::new(cfg)
+        .offload_source(src.code, Lang::Python, "hetero")
+        .unwrap();
+    assert!(
+        r2.reused_pattern.as_deref().is_some_and(|h| h.starts_with("exact")),
+        "got {:?}",
+        r2.reused_pattern
+    );
+    assert_eq!(r2.total_measurements, 0, "replay performs zero search measurements");
+    assert_eq!(r2.measure_stats.launches, 0);
+    assert_eq!(r2.best_gene, r1.best_gene);
+    assert_eq!(r2.placement, r1.placement);
+    assert_eq!(r2.final_s, r1.final_s);
+    assert_eq!(r2.annotated_source, r1.annotated_source);
+
+    // a single-target GPU request over the same DB must not replay the
+    // mixed-set plan (destination sets are part of the key)
+    let mut gpu_cfg = Config::fast_sim();
+    gpu_cfg.pattern_db_path = Some(tmp.clone());
+    let r3 = Coordinator::new(gpu_cfg)
+        .offload_source(src.code, Lang::Python, "hetero")
+        .unwrap();
+    assert!(r3.reused_pattern.is_none(), "mixed plan must not leak to a GPU-only request");
+    assert!(r3.total_measurements > 0);
+
+    std::fs::remove_file(tmp).ok();
+}
+
+/// A program with one compute-heavy loop and one transfer-dominated loop:
+/// the hand-built plan that splits them across the GPU *and* the
+/// many-core beats every single-destination plan — the genuinely mixed
+/// optimum, proven deterministically without a search.
+#[test]
+fn split_placement_beats_every_single_destination_plan() {
+    const SRC: &str = r#"void main() {
+        int n = 32768;
+        int m = 2048;
+        double p[n]; double t[n]; double out[n];
+        double x[m]; double y[m];
+        seed_fill(p, 1);
+        seed_fill(t, 2);
+        seed_fill(x, 3);
+        for (int i = 0; i < n; i++) {
+            double sq = sqrt(fabs(t[i]) + 1.0);
+            double d1 = (log(fabs(p[i]) + 2.0) + 0.065 * t[i]) / sq;
+            double d2 = d1 - sq;
+            double e1 = exp(0.0 - 1.702 * d1);
+            double e2 = exp(0.0 - 1.702 * d2);
+            double n1 = 1.0 / (1.0 + e1);
+            double n2 = 1.0 / (1.0 + e2);
+            double w = sin(d1) * cos(d2) + sqrt(n1 * n2 + 0.5);
+            out[i] = p[i] * n1 - t[i] * n2 + w * 0.125;
+        }
+        for (int i = 0; i < m; i++) {
+            y[i] = x[i] * 1.5 + 2.0;
+        }
+        printf("%f\n", out[123]);
+        printf("%f\n", y[77]);
+    }"#;
+    let prog = parse(SRC, Lang::C, "split").unwrap();
+    let a = envadapt::analysis::analyze(&prog);
+    assert_eq!(a.gene_loops().len(), 2, "both loops must be offloadable");
+    let set = DeviceSet::new(vec![TargetKind::Gpu, TargetKind::ManyCore]).unwrap();
+    let factory = MultiDeviceFactory::for_targets(set.devices(), false);
+    let measurer = Measurer::new(&prog, VmConfig::default(), 1e-9).unwrap();
+    let measure = |placement: &[Option<TargetKind>]| -> f64 {
+        let plan = placement::build_plan(&a, &set, placement, false);
+        let mut dev = factory.build();
+        let m = measurer.measure(&prog, &plan, &mut dev);
+        assert!(m.ok, "{placement:?}: {:?}", m.failure);
+        m.modeled_s
+    };
+
+    let gpu = Some(TargetKind::Gpu);
+    let mc = Some(TargetKind::ManyCore);
+    // the heavy loop alone: GPU must beat both the CPU and the many-core
+    let heavy_gpu = measure(&[gpu, None]);
+    let heavy_mc = measure(&[mc, None]);
+    let cpu = measure(&[None, None]);
+    assert!(heavy_gpu < heavy_mc, "heavy loop: gpu {heavy_gpu} !< mc {heavy_mc}");
+    assert!(heavy_gpu < cpu, "heavy loop: gpu {heavy_gpu} !< cpu {cpu}");
+    // the medium loop alone: many-core wins, the GPU loses to transfers
+    let med_mc = measure(&[None, mc]);
+    let med_gpu = measure(&[None, gpu]);
+    assert!(med_mc < cpu, "medium loop: mc {med_mc} !< cpu {cpu}");
+    assert!(med_gpu > cpu, "medium loop must be transfer-dominated on the GPU");
+
+    // the split placement beats every single-destination plan
+    let split = measure(&[gpu, mc]);
+    let gpu_both = measure(&[gpu, gpu]);
+    let mc_both = measure(&[mc, mc]);
+    for (name, t) in
+        [("cpu-only", cpu), ("gpu-best", heavy_gpu), ("gpu-both", gpu_both), ("mc-both", mc_both)]
+    {
+        assert!(split < t, "split {split} !< {name} {t}");
+    }
+}

@@ -159,6 +159,56 @@ fn serve_handles_concurrent_clients_and_bad_input() {
 }
 
 #[test]
+fn serve_learns_and_replays_mixed_placements() {
+    // a request with a heterogeneous `devices` set: the first search
+    // places loops across GPU/many-core; the identical second request
+    // replays the learned placement with zero search measurements
+    let handle = server::spawn_tcp(
+        Config::fast_sim(),
+        ServeOptions { pool: 2, db_path: None },
+        "127.0.0.1:0",
+    )
+    .expect("spawn server");
+    let mut client = Client::connect(handle.addr());
+    let code = workloads::get("hetero", Lang::C).unwrap().code;
+    let line = envadapt::util::json::Json::obj()
+        .set("op", "offload")
+        .set("id", 1i64)
+        .set("name", "hetero")
+        .set("lang", "c")
+        .set("code", code)
+        .set("devices", "gpu,many-core")
+        .to_string();
+
+    let r1 = client.roundtrip(&line);
+    assert!(r1.ok, "{:?}", r1.error);
+    assert!(i64_field(&r1, "measurements") > 0, "first request must search");
+    let placement1 = r1.report().and_then(|rep| rep.get("placement")).cloned().unwrap();
+    assert!(
+        placement1.to_string().contains("many-core"),
+        "transfer-dominated loops must land on the many-core: {}",
+        placement1.to_string()
+    );
+    let devices = r1.report().and_then(|rep| rep.get("devices")).cloned().unwrap();
+    assert!(devices.to_string().contains("gpu"), "{}", devices.to_string());
+
+    let line2 = line.replace("\"id\":1", "\"id\":2");
+    let r2 = client.roundtrip(&line2);
+    assert!(r2.ok, "{:?}", r2.error);
+    assert_eq!(i64_field(&r2, "measurements"), 0, "placement must replay from the DB");
+    assert_eq!(i64_field(&r2, "measure_launches"), 0);
+    assert!(r2.report().and_then(|rep| rep.get("pattern_reuse")).is_some());
+    assert_eq!(
+        r2.report().and_then(|rep| rep.get("placement")).cloned().unwrap(),
+        placement1,
+        "replayed placement must match the learned one"
+    );
+
+    drop(client);
+    handle.shutdown().expect("clean shutdown");
+}
+
+#[test]
 fn serve_resumes_learned_patterns_from_disk() {
     let db_path = std::env::temp_dir()
         .join(format!("envadapt_serve_db_{}.txt", std::process::id()));
