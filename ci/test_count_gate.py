@@ -1,0 +1,62 @@
+#!/usr/bin/env python3
+"""Test-count regression gate.
+
+Sums the `test result: ok. N passed; M failed; ...` lines of a captured
+`cargo test` run and fails when the total number of passing tests drops
+below the committed seed count — a deleted or silently-skipped test suite
+is a regression even when everything that still runs is green.
+
+Usage: test_count_gate.py CARGO_TEST_OUTPUT BASELINE_FILE
+
+BASELINE_FILE holds the seed count: the first non-comment token is the
+minimum allowed total of passing tests (`#` starts a comment). Ratchet it
+upward when a PR adds tests; never lower it without a removal rationale.
+"""
+
+import re
+import sys
+
+
+def read_baseline(path: str) -> int:
+    with open(path, encoding="utf-8") as fh:
+        for line in fh:
+            line = line.split("#", 1)[0].strip()
+            if line:
+                return int(line)
+    raise SystemExit(f"{path}: no baseline count found")
+
+
+def main() -> None:
+    if len(sys.argv) != 3:
+        raise SystemExit(__doc__)
+    out_path, baseline_path = sys.argv[1], sys.argv[2]
+    with open(out_path, encoding="utf-8", errors="replace") as fh:
+        text = fh.read()
+    results = re.findall(
+        r"test result: (\w+)\. (\d+) passed; (\d+) failed", text
+    )
+    if not results:
+        raise SystemExit(
+            f"{out_path}: no `test result:` lines found — did `cargo test` run?"
+        )
+    passed = sum(int(p) for _, p, _ in results)
+    failed = sum(int(f) for _, _, f in results)
+    baseline = read_baseline(baseline_path)
+    print(
+        f"test-count gate: {len(results)} suites, {passed} passed, "
+        f"{failed} failed (seed count {baseline})"
+    )
+    if failed:
+        raise SystemExit(f"{failed} tests failed")
+    if any(status != "ok" for status, _, _ in results):
+        raise SystemExit("a test suite did not finish ok")
+    if passed < baseline:
+        raise SystemExit(
+            f"test count regression: {passed} passing tests < seed count "
+            f"{baseline} — a suite disappeared or tests were deleted"
+        )
+    print("test-count gate OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,7 +15,7 @@ fn main() -> anyhow::Result<()> {
     let workers: usize =
         std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
 
-    // every workload in every language = 18 requests
+    // every workload in every language = 32 requests
     let requests: Vec<BatchRequest> = workloads::APPS
         .iter()
         .flat_map(|app| Lang::all().map(move |l| BatchRequest::workload(app, l).unwrap()))

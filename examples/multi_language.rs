@@ -1,6 +1,6 @@
 //! Multi-language demo — the paper's core claim (§3.3): the *same* common
-//! offload pipeline handles C, Python and Java, and finds the *same*
-//! offload pattern for semantically identical applications.
+//! offload pipeline handles C, Python, Java and JavaScript, and finds the
+//! *same* offload pattern for semantically identical applications.
 //!
 //! ```bash
 //! cargo run --release --example multi_language [app]
@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "\n→ {}",
         if all_same {
-            "identical offload pattern found from all three front ends ✓"
+            "identical offload pattern found from all four front ends ✓"
         } else {
             "patterns differ across languages ✗ (this should not happen)"
         }

@@ -1100,7 +1100,15 @@ mod tests {
             )
             .unwrap(),
         );
-        for a in [&c, &py, &j] {
+        let js = analyze(
+            &parse(
+                "function main() { let n = 8; let a = zeros(n); for (let i = 0; i < n; i++) { a[i] = i; } }",
+                Lang::JavaScript,
+                "t",
+            )
+            .unwrap(),
+        );
+        for a in [&c, &py, &j, &js] {
             assert_eq!(a.gene_loops(), vec![0]);
             assert_eq!(a.loops[0].array_writes.iter().collect::<Vec<_>>(), vec!["a"]);
         }

@@ -1,7 +1,7 @@
 //! Command-line interface (hand-rolled: no arg-parsing crates offline).
 //!
 //! ```text
-//! envadapt offload <file|app> [--lang c|python|java] [--pop N] [--gens N]
+//! envadapt offload <file|app> [--lang c|python|java|js] [--pop N] [--gens N]
 //!                  [--target gpu|many-core|fpga|adaptive]
 //!                  [--devices gpu,many-core,fpga|all] [--power-weight W]
 //!                  [--workers N] [--cache FILE] [--db FILE]
@@ -407,8 +407,10 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             }
         }
         "workloads" => {
+            let langs: Vec<&str> = Lang::all().iter().map(|l| l.name()).collect();
+            let langs = langs.join(", ");
             for app in workloads::APPS {
-                println!("{app} (c, python, java)");
+                println!("{app} ({langs})");
             }
             Ok(())
         }
@@ -439,10 +441,10 @@ fn run(args: &[String]) -> anyhow::Result<()> {
 
 fn print_help() {
     println!(
-        "envadapt — automatic GPU offloading from C, Python and Java applications
+        "envadapt — automatic GPU offloading from C, Python, Java and JavaScript applications
 
 USAGE:
-  envadapt offload <file|app> [--lang c|python|java] [--pop N] [--gens N]
+  envadapt offload <file|app> [--lang c|python|java|js] [--pop N] [--gens N]
                    [--target gpu|many-core|fpga|adaptive]
                    [--devices gpu,many-core,fpga|all] [--power-weight W]
                    [--workers N] [--cache FILE] [--db FILE]

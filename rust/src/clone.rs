@@ -4,9 +4,10 @@
 //! match but by *similarity detection* — Deckard for C/Java, CloneDigger
 //! for Python. Deckard's core idea is the **characteristic vector**: count
 //! occurrences of each AST node kind in a subtree and compare vectors with
-//! a proximity threshold. Because our front ends normalize all three
-//! languages into one IR, a single detector covers C, Python and Java
-//! (this is precisely the common-method payoff §3.3 argues for).
+//! a proximity threshold. Because our front ends normalize all four
+//! languages into one IR, a single detector covers C, Python, Java and
+//! JavaScript (this is precisely the common-method payoff §3.3 argues
+//! for).
 
 use crate::ir::*;
 
@@ -30,8 +31,10 @@ pub fn char_vector_stmt(s: &Stmt) -> CharVec {
 /// Characteristic vector of a whole program: the sum over every function
 /// body. The learning pattern DB uses this to recognize repeat or
 /// near-identical offload requests (the service's known-pattern fast
-/// path); because the front ends normalize all three languages into one
-/// IR, the same application has the same vector in C, Python and Java.
+/// path); because the front ends normalize all four languages into one
+/// IR, the same application has the same vector in every source
+/// language — which is why the learned-pattern similarity lookup gates
+/// on [`Lang`](crate::ir::Lang) explicitly (see `patterndb`).
 pub fn char_vector_program(prog: &Program) -> CharVec {
     let mut v = [0.0; NODE_KIND_COUNT];
     for f in &prog.functions {

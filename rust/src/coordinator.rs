@@ -541,8 +541,13 @@ impl Coordinator {
                 (r.learned.clone().unwrap(), how)
             } else {
                 let v = char_vector_program(prog);
+                // the similarity gate is per-language: the vector is
+                // computed on the language-independent IR, so the same
+                // app in another language scores 1.0 — and must still
+                // run its own search rather than replay a foreign record
                 let (r, score) = db.lookup_learned_similar(
                     &v,
+                    prog.lang,
                     dset.devices(),
                     self.cfg.reuse_similarity,
                 )?;
@@ -1011,6 +1016,30 @@ mod tests {
         assert_eq!(r2.total_measurements, 0);
         assert_eq!(r2.best_gene, r1.best_gene);
         assert_eq!(r2.final_s, r1.final_s);
+    }
+
+    #[test]
+    fn identical_program_in_another_language_never_replays() {
+        // the same app in two languages lowers to the same IR (identical
+        // characteristic vector AND identical modeled baseline), so this
+        // is exactly the cross-language collision the per-language
+        // learned keys must prevent
+        let mut c = Coordinator::new(fast_cfg());
+        let js = crate::workloads::get("smallloops", Lang::JavaScript).unwrap();
+        let r1 = c.offload_source(js.code, Lang::JavaScript, "smallloops").unwrap();
+        assert!(r1.learned_pattern, "JS search must learn");
+        let r2 = c.offload_source(js.code, Lang::JavaScript, "smallloops").unwrap();
+        assert!(r2.reused_pattern.is_some(), "same-language repeat replays");
+        let py = crate::workloads::get("smallloops", Lang::Python).unwrap();
+        let r3 = c.offload_source(py.code, Lang::Python, "smallloops").unwrap();
+        assert!(
+            r3.reused_pattern.is_none(),
+            "a different-language twin must run its own search, got {:?}",
+            r3.reused_pattern
+        );
+        assert!(r3.total_measurements > 0);
+        // same plan found independently — the method is language-agnostic
+        assert_eq!(r3.best_gene, r1.best_gene);
     }
 
     #[test]

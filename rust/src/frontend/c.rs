@@ -119,6 +119,13 @@ impl CParser {
     }
 
     fn stmt(&mut self) -> PResult<Stmt> {
+        self.cur.enter()?;
+        let r = self.stmt_inner();
+        self.cur.leave();
+        r
+    }
+
+    fn stmt_inner(&mut self) -> PResult<Stmt> {
         if self.cur.at_ident("for") {
             return self.for_stmt();
         }
@@ -359,7 +366,10 @@ impl CParser {
     // ---- expressions: precedence climbing ----
 
     fn expr(&mut self) -> PResult<Expr> {
-        self.or_expr()
+        self.cur.enter()?;
+        let r = self.or_expr();
+        self.cur.leave();
+        r
     }
 
     fn or_expr(&mut self) -> PResult<Expr> {
@@ -436,6 +446,13 @@ impl CParser {
     }
 
     fn unary_expr(&mut self) -> PResult<Expr> {
+        self.cur.enter()?;
+        let r = self.unary_expr_inner();
+        self.cur.leave();
+        r
+    }
+
+    fn unary_expr_inner(&mut self) -> PResult<Expr> {
         if self.cur.eat_punct("-") {
             let e = self.unary_expr()?;
             return Ok(Expr::Unary { op: UnOp::Neg, operand: Box::new(e) });

@@ -1,13 +1,21 @@
-//! Java front end (the paper's JavaParser analogue).
+//! JavaScript front end (a Node-flavored Esprima/acorn analogue).
 //!
-//! Supported subset: one class with static methods; `int`/`long`,
-//! `double`/`float` scalars; `double[]`/`double[][]` arrays created with
-//! `new double[n][m]`; `for (int i = 0; i < n; i++)`; `Math.sqrt` etc.;
-//! `System.out.println(x)` lowers to `Print`; qualified static calls
-//! `Lib.f(...)` lower to plain `f(...)` calls (the qualifier is the
-//! library namespace, which the pattern DB matches by method name).
-//! The `public static void main(String[] args)` entry point is normalized
-//! to the IR function `main` with no parameters.
+//! Supported subset: top-level `function f(a, b) { ... }` definitions
+//! (untyped parameters, like the Python front end); `let`/`const`/`var`
+//! declarations where the initializer decides the IR type (integer
+//! literal → `Int`, anything else → `Float`); array allocation through
+//! the `zeros(n)` / `zeros(n, m)` helper or `new Array(n)` /
+//! `new Float64Array(n)` (an optional `.fill(0)`/`.fill(0.0)` suffix is
+//! accepted — buffers are zero-initialized like every other front end,
+//! and any *non-zero* fill is rejected rather than silently ignored);
+//! counted `for (let i = 0; i < n; i++)`; `while`; `if`/`else`;
+//! compound assignment and `++`/`--`; `Math.sqrt` etc. normalize to the
+//! shared intrinsics (`Math.PI` is folded); `a.length` lowers to `Len`;
+//! `console.log(x)` lowers to `Print`; `===`/`!==` compare like
+//! `==`/`!=` (the IR is numeric); member calls `Lib.f(...)` lower to
+//! plain `f(...)` calls exactly as the Java front end does, so
+//! library-name matching for function-block offload works unchanged.
+//! The entry point is a plain `function main()`.
 
 use super::lex::{Cursor, Lexer, Tok};
 use super::{PResult, ParseError};
@@ -15,84 +23,34 @@ use crate::ir::*;
 
 pub fn parse(source: &str, name: &str) -> PResult<Program> {
     let toks = Lexer::new(source, false).tokenize()?;
-    let mut p = JParser { cur: Cursor::new(toks) };
-    // class header
-    p.cur.eat_ident("public");
-    p.cur.eat_ident("final");
-    p.cur.expect_kw("class")?;
-    let _class_name = p.cur.expect_ident_any()?;
-    p.cur.expect_punct("{")?;
+    let mut p = JsParser { cur: Cursor::new(toks) };
     let mut functions = Vec::new();
-    while !p.cur.eat_punct("}") {
-        if p.cur.at_eof() {
-            return Err(p.err("unexpected end of input inside class body"));
-        }
-        functions.push(p.method()?);
+    while !p.cur.at_eof() {
+        functions.push(p.function()?);
     }
-    Ok(Program { lang: Lang::Java, name: name.to_string(), functions })
+    Ok(Program { lang: Lang::JavaScript, name: name.to_string(), functions })
 }
 
-struct JParser {
+struct JsParser {
     cur: Cursor,
 }
 
-impl JParser {
+impl JsParser {
     fn err(&self, msg: impl Into<String>) -> ParseError {
         self.cur.err(msg)
     }
 
-    /// `int` | `long` | `double` | `float` | `void` with `[]` suffixes.
-    fn jtype(&mut self) -> PResult<Option<Type>> {
-        let base = if self.cur.eat_ident("void") {
-            Type::Void
-        } else if self.cur.eat_ident("int") || self.cur.eat_ident("long") {
-            Type::Int
-        } else if self.cur.eat_ident("double") || self.cur.eat_ident("float") {
-            Type::Float
-        } else if self.cur.at_ident("String") {
-            self.cur.bump();
-            // String only appears in `main(String[] args)`; treat as opaque.
-            let mut rank = 0;
-            while self.cur.at_punct("[") {
-                self.cur.bump();
-                self.cur.expect_punct("]")?;
-                rank += 1;
-            }
-            let _ = rank;
-            return Ok(Some(Type::Void));
-        } else {
-            return Ok(None);
-        };
-        let mut rank = 0;
-        while self.cur.at_punct("[") {
-            self.cur.bump();
-            self.cur.expect_punct("]")?;
-            rank += 1;
-        }
-        Ok(Some(if rank > 0 { Type::array_of(base, rank) } else { base }))
-    }
-
-    fn method(&mut self) -> PResult<Function> {
-        self.cur.eat_ident("public");
-        self.cur.eat_ident("private");
-        self.cur.eat_ident("static");
-        self.cur.eat_ident("final");
-        let ret = self
-            .jtype()?
-            .ok_or_else(|| self.err(format!("expected return type, found {}", self.cur.peek().describe())))?;
+    fn function(&mut self) -> PResult<Function> {
+        self.cur.expect_kw("function")?;
         let name = self.cur.expect_ident_any()?;
         self.cur.expect_punct("(")?;
         let mut params = Vec::new();
         if !self.cur.at_punct(")") {
             loop {
-                let ty = self
-                    .jtype()?
-                    .ok_or_else(|| self.err("expected parameter type"))?;
                 let pname = self.cur.expect_ident_any()?;
-                // Skip `String[] args`-style opaque params entirely.
-                if ty != Type::Void {
-                    params.push(Param { name: pname, ty });
-                }
+                // untyped, like Python: scalars default to Float and the
+                // dynamically typed VM resolves arrays at call time
+                params.push(Param { name: pname, ty: Type::Float });
                 if !self.cur.eat_punct(",") {
                     break;
                 }
@@ -101,7 +59,7 @@ impl JParser {
         self.cur.expect_punct(")")?;
         self.cur.expect_punct("{")?;
         let body = self.block_until_brace()?;
-        Ok(Function { name, params, ret, body })
+        Ok(Function { name, params, ret: Type::Void, body })
     }
 
     fn block_until_brace(&mut self) -> PResult<Vec<Stmt>> {
@@ -170,15 +128,13 @@ impl JParser {
             self.cur.expect_punct(";")?;
             return Ok(Stmt::Continue);
         }
-        // System.out.println(expr);
-        if self.cur.at_ident("System") {
+        // console.log(expr);
+        if self.cur.at_ident("console") {
             self.cur.bump();
             self.cur.expect_punct(".")?;
-            self.cur.expect_kw("out")?;
-            self.cur.expect_punct(".")?;
             let m = self.cur.expect_ident_any()?;
-            if m != "println" && m != "print" {
-                return Err(self.err(format!("unsupported System.out method `{m}`")));
+            if m != "log" {
+                return Err(self.err(format!("unsupported console method `{m}`")));
             }
             self.cur.expect_punct("(")?;
             let e = if self.cur.at_punct(")") { Expr::IntLit(0) } else { self.expr()? };
@@ -187,11 +143,7 @@ impl JParser {
             return Ok(Stmt::Print(e));
         }
         // declaration?
-        if self.cur.at_ident("int")
-            || self.cur.at_ident("long")
-            || self.cur.at_ident("double")
-            || self.cur.at_ident("float")
-        {
+        if self.cur.eat_ident("let") || self.cur.eat_ident("const") || self.cur.eat_ident("var") {
             let s = self.decl()?;
             self.cur.expect_punct(";")?;
             return Ok(s);
@@ -201,47 +153,79 @@ impl JParser {
         Ok(s)
     }
 
-    /// `double[][] a = new double[n][m];` | `int i = 0;` | `double x;`
+    /// `let a = zeros(n, m)` | `let a = new Array(n)` | `let x = e` |
+    /// `let x` — the initializer picks the IR type, mirroring the Python
+    /// front end's first-assignment rule.
     fn decl(&mut self) -> PResult<Stmt> {
-        let ty = self.jtype()?.unwrap();
         let name = self.cur.expect_ident_any()?;
-        if ty.is_array() {
-            self.cur.expect_punct("=")?;
-            self.cur.expect_kw("new")?;
-            // bare element type (extents follow as [e][e], so do not let
-            // jtype() swallow the brackets)
-            let elem_ok = self.cur.eat_ident("double")
-                || self.cur.eat_ident("float")
-                || self.cur.eat_ident("int")
-                || self.cur.eat_ident("long");
-            if !elem_ok {
-                return Err(self.err("expected element type after `new`"));
-            }
-            let mut dims = Vec::new();
-            while self.cur.eat_punct("[") {
-                dims.push(self.expr()?);
-                self.cur.expect_punct("]")?;
-            }
-            let rank = match &ty {
-                Type::Array { rank, .. } => *rank,
-                _ => unreachable!(),
-            };
-            if dims.len() != rank {
-                return Err(self.err(format!(
-                    "array `{name}` declared rank {rank} but `new` has {} extents",
-                    dims.len()
-                )));
-            }
-            return Ok(Stmt::Decl { name, ty, dims, init: None });
+        if !self.cur.eat_punct("=") {
+            return Ok(Stmt::Decl { name, ty: Type::Float, dims: vec![], init: None });
         }
-        let init = if self.cur.eat_punct("=") { Some(self.expr()?) } else { None };
-        Ok(Stmt::Decl { name, ty, dims: vec![], init })
+        // `new Array(n)` / `new Float64Array(n)`, optionally `.fill(v)`
+        if self.cur.eat_ident("new") {
+            let ctor = self.cur.expect_ident_any()?;
+            if ctor != "Array" && ctor != "Float64Array" {
+                return Err(self.err(format!("unsupported constructor `new {ctor}`")));
+            }
+            self.cur.expect_punct("(")?;
+            let extent = self.expr()?;
+            self.cur.expect_punct(")")?;
+            if self.cur.eat_punct(".") {
+                self.cur.expect_kw("fill")?;
+                self.cur.expect_punct("(")?;
+                let fill = self.expr()?;
+                self.cur.expect_punct(")")?;
+                // buffers are zero-initialized in every front end; a
+                // non-zero fill would silently change the program's
+                // numerics, so it must be rejected, not ignored
+                let is_zero = match &fill {
+                    Expr::IntLit(0) => true,
+                    Expr::FloatLit(v) => *v == 0.0,
+                    _ => false,
+                };
+                if !is_zero {
+                    return Err(self.err(
+                        "only .fill(0) / .fill(0.0) is supported (arrays are zero-initialized)",
+                    ));
+                }
+            }
+            return Ok(Stmt::Decl {
+                name,
+                ty: Type::array_of(Type::Float, 1),
+                dims: vec![extent],
+                init: None,
+            });
+        }
+        // `zeros(n)` / `zeros(n, m)` — the shared allocation helper
+        if self.cur.at_ident("zeros") && matches!(self.cur.peek2(), Tok::Punct(p) if *p == "(") {
+            self.cur.bump();
+            self.cur.expect_punct("(")?;
+            let mut dims = Vec::new();
+            loop {
+                dims.push(self.expr()?);
+                if !self.cur.eat_punct(",") {
+                    break;
+                }
+            }
+            self.cur.expect_punct(")")?;
+            return Ok(Stmt::Decl {
+                name,
+                ty: Type::array_of(Type::Float, dims.len()),
+                dims,
+                init: None,
+            });
+        }
+        let value = self.expr()?;
+        let ty = if matches!(value, Expr::IntLit(_)) { Type::Int } else { Type::Float };
+        Ok(Stmt::Decl { name, ty, dims: vec![], init: Some(value) })
     }
 
     fn for_stmt(&mut self) -> PResult<Stmt> {
         self.cur.expect_kw("for")?;
         self.cur.expect_punct("(")?;
-        let declared = self.cur.eat_ident("int") || self.cur.eat_ident("long");
+        let declared = self.cur.eat_ident("let")
+            || self.cur.eat_ident("const")
+            || self.cur.eat_ident("var");
         let _ = declared;
         let var = self.cur.expect_ident_any()?;
         self.cur.expect_punct("=")?;
@@ -292,7 +276,8 @@ impl JParser {
 
     fn simple_stmt(&mut self) -> PResult<Stmt> {
         let name = self.cur.expect_ident_any()?;
-        // qualified call `Lib.f(args)`
+        // member call `Lib.f(args)` — the qualifier is the library
+        // namespace, stripped exactly like the Java front end
         if self.cur.at_punct(".") {
             self.cur.bump();
             let method = self.cur.expect_ident_any()?;
@@ -389,9 +374,11 @@ impl JParser {
     fn cmp_expr(&mut self) -> PResult<Expr> {
         let mut lhs = self.add_expr()?;
         loop {
-            let op = if self.cur.eat_punct("==") {
+            // strict equality compares like loose equality: the IR only
+            // has numbers, so `===` and `==` coincide
+            let op = if self.cur.eat_punct("===") || self.cur.eat_punct("==") {
                 BinOp::Eq
-            } else if self.cur.eat_punct("!=") {
+            } else if self.cur.eat_punct("!==") || self.cur.eat_punct("!=") {
                 BinOp::Ne
             } else if self.cur.eat_punct("<=") {
                 BinOp::Le
@@ -457,17 +444,6 @@ impl JParser {
             let e = self.unary_expr()?;
             return Ok(Expr::Unary { op: UnOp::Not, operand: Box::new(e) });
         }
-        // cast `(double) e`
-        if self.cur.at_punct("(") {
-            if let Tok::Ident(id) = self.cur.peek2() {
-                if matches!(id.as_str(), "double" | "float" | "int" | "long") {
-                    self.cur.expect_punct("(")?;
-                    let _ = self.cur.expect_ident_any()?;
-                    self.cur.expect_punct(")")?;
-                    return self.unary_expr();
-                }
-            }
-        }
         self.postfix_expr()
     }
 
@@ -481,7 +457,7 @@ impl JParser {
                 Ok(e)
             }
             Tok::Ident(name) => {
-                // qualified call / field: `Math.sqrt(x)`, `a.length`
+                // member call / property: `Math.sqrt(x)`, `a.length`
                 if self.cur.at_punct(".") {
                     self.cur.bump();
                     let member = self.cur.expect_ident_any()?;
@@ -527,67 +503,126 @@ mod tests {
     }
 
     #[test]
-    fn class_with_main_and_array() {
+    fn function_with_loop_and_array() {
         let p = parse_ok(
             r#"
-            public class MM {
-                public static void main(String[] args) {
-                    int n = 4;
-                    double[][] a = new double[n][n];
-                    for (int i = 0; i < n; i++) {
-                        for (int j = 0; j < n; j++) {
-                            a[i][j] = i + j;
-                        }
+            function main() {
+                let n = 4;
+                let a = zeros(n, n);
+                for (let i = 0; i < n; i++) {
+                    for (let j = 0; j < n; j++) {
+                        a[i][j] = i + j;
                     }
-                    System.out.println(a[1][2]);
                 }
+                console.log(a[1][2]);
             }
             "#,
         );
         assert_eq!(p.loop_count(), 2);
         let f = p.entry().unwrap();
-        assert!(f.params.is_empty(), "String[] args must be dropped");
+        assert!(matches!(&f.body[0], Stmt::Decl { ty: Type::Int, .. }));
+        assert!(
+            matches!(&f.body[1], Stmt::Decl { ty, dims, .. }
+                if *ty == Type::array_of(Type::Float, 2) && dims.len() == 2)
+        );
         assert!(matches!(f.body.last().unwrap(), Stmt::Print(_)));
     }
 
     #[test]
-    fn math_and_qualified_calls() {
+    fn new_array_forms() {
+        let p = parse_ok(
+            "function main() { let n = 8; let a = new Array(n); let b = new Float64Array(n).fill(0.0); }",
+        );
+        let f = p.entry().unwrap();
+        for s in &f.body[1..] {
+            assert!(
+                matches!(s, Stmt::Decl { ty, dims, init: None, .. }
+                    if *ty == Type::array_of(Type::Float, 1) && dims.len() == 1),
+                "{s:?}"
+            );
+        }
+        assert!(parse("function main() { let a = new Map(); }", "t").is_err());
+        assert!(
+            parse("function main() { let a = new Array(4).fill(1.0); }", "t").is_err(),
+            "a non-zero fill would silently change numerics and must be rejected"
+        );
+    }
+
+    #[test]
+    fn math_members_and_library_calls() {
         let p = parse_ok(
             r#"
-            class T {
-                static void main(String[] args) {
-                    double x = Math.sqrt(2.0);
-                    Lib.matmul(x);
-                }
+            function main() {
+                let x = Math.sqrt(2.0) + Math.PI;
+                Lib.matmul(x);
+                seed_fill(x, 1);
             }
             "#,
         );
         let f = p.entry().unwrap();
-        assert!(matches!(&f.body[0], Stmt::Decl { init: Some(Expr::Call { name, .. }), .. } if name == "sqrt"));
+        match &f.body[0] {
+            Stmt::Decl { init: Some(Expr::Binary { lhs, rhs, .. }), .. } => {
+                assert!(matches!(**lhs, Expr::Call { ref name, .. } if name == "sqrt"));
+                assert!(matches!(**rhs, Expr::FloatLit(v) if v == std::f64::consts::PI));
+            }
+            other => panic!("{other:?}"),
+        }
         assert!(matches!(&f.body[1], Stmt::Call { name, .. } if name == "matmul"));
+        assert!(matches!(&f.body[2], Stmt::Call { name, .. } if name == "seed_fill"));
     }
 
     #[test]
     fn array_length_member() {
-        let p = parse_ok(
-            "class T { static void f(double[] a) { int n = a.length; } static void main(String[] args) { } }",
-        );
+        let p = parse_ok("function f(a) { let n = a.length; } function main() { }");
         let f = p.function("f").unwrap();
         assert!(matches!(&f.body[0], Stmt::Decl { init: Some(Expr::Len { .. }), .. }));
     }
 
     #[test]
-    fn rank_mismatch_in_new_errors() {
-        let src = "class T { static void main(String[] args) { double[][] a = new double[4]; } }";
-        assert!(parse(src, "t").is_err());
+    fn strict_equality_lowers_like_loose() {
+        let p = parse_ok(
+            "function main() { let x = 1; if (x === 1) { x = 2; } if (x !== 2) { x = 3; } }",
+        );
+        let f = p.entry().unwrap();
+        assert!(matches!(&f.body[1],
+            Stmt::If { cond: Expr::Binary { op: BinOp::Eq, .. }, .. }));
+        assert!(matches!(&f.body[2],
+            Stmt::If { cond: Expr::Binary { op: BinOp::Ne, .. }, .. }));
     }
 
     #[test]
-    fn methods_with_array_params() {
+    fn scalar_decl_type_follows_initializer() {
+        let p = parse_ok("function main() { let n = 3; let x = 0.5; let y = n * 2; let z; }");
+        let f = p.entry().unwrap();
+        assert!(matches!(&f.body[0], Stmt::Decl { ty: Type::Int, .. }));
+        assert!(matches!(&f.body[1], Stmt::Decl { ty: Type::Float, .. }));
+        assert!(matches!(&f.body[2], Stmt::Decl { ty: Type::Float, .. }));
+        assert!(matches!(&f.body[3], Stmt::Decl { ty: Type::Float, init: None, .. }));
+    }
+
+    #[test]
+    fn for_loop_bounds_normalize_like_c() {
         let p = parse_ok(
-            "class T { static void g(double[][] m, int n) { m[0][0] = n; } static void main(String[] args) { } }",
+            "function main() { let s = 0; for (let i = 1; i <= 10; i++) { s += i; } for (let j = 10; j > 0; j--) { s -= j; } }",
         );
-        let g = p.function("g").unwrap();
-        assert_eq!(g.params[0].ty, Type::array_of(Type::Float, 2));
+        let f = p.entry().unwrap();
+        let fors: Vec<_> = f
+            .body
+            .iter()
+            .filter_map(|s| match s {
+                Stmt::For { end, step, .. } => Some((end.clone(), step.clone())),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(fors[0].0, Expr::bin(BinOp::Add, Expr::int(10), Expr::int(1)));
+        assert_eq!(fors[1].1, Expr::int(-1));
+    }
+
+    #[test]
+    fn errors_are_clean() {
+        assert!(parse("function main() { let x = ; }", "t").is_err());
+        assert!(parse("function main() { x 1; }", "t").is_err());
+        assert!(parse("const x = 1;", "t").is_err(), "top level must be functions");
+        assert!(parse("function main() { console.error(1); }", "t").is_err());
     }
 }

@@ -1,7 +1,8 @@
-//! Shared tokenizer for the three front ends.
+//! Shared tokenizer for the four front ends.
 //!
-//! One lexer, two modes: free-form (C, Java — whitespace insignificant)
-//! and line-form (Python — emits `Newline`/`Indent`/`Dedent`).
+//! One lexer, two modes: free-form (C, Java, JavaScript — whitespace
+//! insignificant) and line-form (Python — emits
+//! `Newline`/`Indent`/`Dedent`).
 
 use super::{PResult, ParseError};
 
@@ -45,9 +46,9 @@ pub struct Spanned {
 
 /// Multi-char operators, longest first so greedy matching works.
 const PUNCTS: &[&str] = &[
-    "<<=", ">>=", "**", "//", "==", "!=", "<=", ">=", "&&", "||", "+=", "-=", "*=", "/=", "%=",
-    "++", "--", "->", "+", "-", "*", "/", "%", "<", ">", "=", "(", ")", "[", "]", "{", "}", ",",
-    ";", ":", ".", "!", "&", "|", "#", "?",
+    "===", "!==", "<<=", ">>=", "**", "//", "==", "!=", "<=", ">=", "&&", "||", "+=", "-=", "*=",
+    "/=", "%=", "++", "--", "->", "+", "-", "*", "/", "%", "<", ">", "=", "(", ")", "[", "]", "{",
+    "}", ",", ";", ":", ".", "!", "&", "|", "#", "?",
 ];
 
 pub struct Lexer<'a> {
@@ -378,15 +379,43 @@ impl<'a> Lexer<'a> {
     }
 }
 
-/// Token cursor shared by the three parsers.
+/// Maximum recursion depth any parser may reach while descending into
+/// nested statements/expressions. Real programs stay far below this; the
+/// bound exists so hostile inputs (`((((((...`, `if(1)if(1)if(1)...`)
+/// produce a clean [`ParseError`] instead of a stack overflow.
+pub const MAX_PARSE_DEPTH: usize = 160;
+
+/// Token cursor shared by the four parsers. Carries the recursion-depth
+/// counter: parsers call [`Cursor::enter`]/[`Cursor::leave`] around every
+/// self-recursive production (statements, expressions, unary chains).
 pub struct Cursor {
     toks: Vec<Spanned>,
     pos: usize,
+    depth: usize,
 }
 
 impl Cursor {
     pub fn new(toks: Vec<Spanned>) -> Cursor {
-        Cursor { toks, pos: 0 }
+        Cursor { toks, pos: 0, depth: 0 }
+    }
+
+    /// Descend one nesting level; errors once [`MAX_PARSE_DEPTH`] is
+    /// exceeded. On the error path the whole parse aborts, so a skipped
+    /// [`Cursor::leave`] is harmless.
+    pub fn enter(&mut self) -> PResult<()> {
+        self.depth += 1;
+        if self.depth > MAX_PARSE_DEPTH {
+            Err(self.err(format!(
+                "statement/expression nesting exceeds the supported depth of {MAX_PARSE_DEPTH}"
+            )))
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Leave one nesting level (paired with a successful [`Cursor::enter`]).
+    pub fn leave(&mut self) {
+        self.depth = self.depth.saturating_sub(1);
     }
 
     pub fn peek(&self) -> &Tok {
@@ -566,5 +595,18 @@ mod tests {
     fn inconsistent_dedent_errors() {
         let src = "if x:\n        a = 1\n    b = 2\n";
         assert!(Lexer::new(src, true).tokenize().is_err());
+    }
+
+    #[test]
+    fn depth_guard_trips_at_limit() {
+        let toks = Lexer::new("x", false).tokenize().unwrap();
+        let mut cur = Cursor::new(toks);
+        for _ in 0..MAX_PARSE_DEPTH {
+            cur.enter().unwrap();
+        }
+        assert!(cur.enter().is_err(), "depth {} must be rejected", MAX_PARSE_DEPTH + 1);
+        cur.leave();
+        cur.leave();
+        assert!(cur.enter().is_ok(), "leave() must free depth again");
     }
 }

@@ -1,16 +1,18 @@
 //! Source-language front ends.
 //!
 //! Paper §3.3 / §4.3: per-language *syntax analysis* (the paper uses
-//! Clang for C, `ast` for Python, JavaParser for Java) feeding a
+//! Clang for C, `ast` for Python, JavaParser for Java; the JavaScript
+//! front end plays the role an Esprima/acorn pass would) feeding a
 //! language-independent representation. This module provides from-scratch
-//! parsers for realistic subsets of all three languages, each lowering to
+//! parsers for realistic subsets of all four languages, each lowering to
 //! [`crate::ir::Program`], plus [`render`] which re-emits source annotated
 //! with the offload directives the paper inserts (OpenACC pragmas for C,
-//! PyCUDA comments for Python, parallel-stream comments for Java).
+//! PyCUDA comments for Python, parallel-stream comments for Java,
+//! gpu.js-style comments for JavaScript).
 //!
 //! ## Supported subsets
 //!
-//! All three subsets share the same semantic core (what the IR can
+//! All four subsets share the same semantic core (what the IR can
 //! express): functions, `int`/`double` scalars, rectangular f64/int arrays,
 //! counted `for` loops, `while`, `if`/`else`, compound assignment, math
 //! intrinsics, user-function and library calls, `print`.
@@ -26,9 +28,20 @@
 //! * **Java** — a single class with static methods;
 //!   `double[][] a = new double[n][m];`; `Math.sqrt`;
 //!   `System.out.println(x)`; entry point `public static void main`.
+//! * **JavaScript** — Node-flavored: top-level `function f(...)`;
+//!   `let`/`const`/`var` (the initializer picks the IR type);
+//!   `zeros(n, m)` or `new Array(n)`/`new Float64Array(n)` allocate
+//!   arrays; counted `for (let i = 0; i < n; i++)`; `Math.sqrt` etc.;
+//!   `===`/`!==` compare numerically; `console.log(x)`; entry point
+//!   `function main()`.
+//!
+//! Every parser shares [`lex::Cursor`]'s recursion-depth guard
+//! ([`lex::MAX_PARSE_DEPTH`]): pathologically nested inputs fail with a
+//! clean [`ParseError`] instead of overflowing the stack.
 
 pub mod c;
 pub mod java;
+pub mod js;
 pub mod lex;
 pub mod python;
 pub mod render;
@@ -60,6 +73,7 @@ pub fn parse(source: &str, lang: Lang, name: &str) -> PResult<Program> {
         Lang::C => c::parse(source, name)?,
         Lang::Python => python::parse(source, name)?,
         Lang::Java => java::parse(source, name)?,
+        Lang::JavaScript => js::parse(source, name)?,
     };
     resolve_intrinsics(&mut prog);
     prog.number_loops();
@@ -69,7 +83,7 @@ pub fn parse(source: &str, lang: Lang, name: &str) -> PResult<Program> {
 /// Post-pass shared by all front ends: calls whose name matches a math
 /// intrinsic and is not shadowed by a user-defined function become
 /// `Expr::Intrinsic` nodes (`sqrt` in C, `math.sqrt` in Python and
-/// `Math.sqrt` in Java all normalize to the same IR node).
+/// `Math.sqrt` in Java/JavaScript all normalize to the same IR node).
 fn resolve_intrinsics(prog: &mut Program) {
     use crate::ir::{Expr, Intrinsic};
     let user_fns: std::collections::HashSet<String> =
@@ -103,10 +117,10 @@ mod tests {
     use super::*;
     use crate::ir::Lang;
 
-    /// The same algorithm in all three languages must lower to the same
+    /// The same algorithm in all four languages must lower to the same
     /// loop structure — the crux of the paper's common method.
     #[test]
-    fn three_languages_same_loop_structure() {
+    fn four_languages_same_loop_structure() {
         let c_src = r#"
             void main() {
                 int n = 8;
@@ -134,15 +148,26 @@ def main():
                 }
             }
         "#;
+        let js_src = r#"
+            function main() {
+                let n = 8;
+                let a = zeros(n);
+                for (let i = 0; i < n; i++) {
+                    a[i] = i * 2.0;
+                }
+            }
+        "#;
         let pc = parse(c_src, Lang::C, "t").unwrap();
         let pp = parse(py_src, Lang::Python, "t").unwrap();
         let pj = parse(java_src, Lang::Java, "t").unwrap();
+        let pjs = parse(js_src, Lang::JavaScript, "t").unwrap();
         assert_eq!(pc.lang, Lang::C);
         assert_eq!(pp.lang, Lang::Python);
         assert_eq!(pj.lang, Lang::Java);
-        assert_eq!(pc.loop_count(), 1);
-        assert_eq!(pp.loop_count(), 1);
-        assert_eq!(pj.loop_count(), 1);
+        assert_eq!(pjs.lang, Lang::JavaScript);
+        for p in [&pc, &pp, &pj, &pjs] {
+            assert_eq!(p.loop_count(), 1);
+        }
         // The loop bodies must be structurally identical in the IR.
         let get_body = |p: &Program| {
             let f = p.entry().unwrap();
@@ -156,6 +181,7 @@ def main():
         };
         assert_eq!(get_body(&pc), get_body(&pp));
         assert_eq!(get_body(&pc), get_body(&pj));
+        assert_eq!(get_body(&pc), get_body(&pjs));
     }
 
     #[test]
@@ -170,6 +196,9 @@ def main():
         // Java: missing class wrapper
         let e = parse("void main() { }", Lang::Java, "t").unwrap_err();
         assert!(e.msg.contains("class"), "{e}");
+        // JavaScript: missing `function` keyword
+        let e = parse("main() { }", Lang::JavaScript, "t").unwrap_err();
+        assert!(e.msg.contains("function"), "{e}");
     }
 
     #[test]
@@ -200,12 +229,13 @@ def main():
 
     #[test]
     fn empty_and_garbage_inputs_error_cleanly() {
-        for lang in [Lang::C, Lang::Python, Lang::Java] {
+        for lang in Lang::all() {
             assert!(parse("@#$%^&", lang, "t").is_err(), "{lang}");
         }
-        // empty C/Python module is a valid (if useless) unit
+        // empty C/Python/JavaScript modules are valid (if useless) units
         assert!(parse("", Lang::C, "t").is_ok());
         assert!(parse("", Lang::Python, "t").is_ok());
+        assert!(parse("", Lang::JavaScript, "t").is_ok());
         // empty Java needs at least a class
         assert!(parse("class T { }", Lang::Java, "t").is_ok());
     }

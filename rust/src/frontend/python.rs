@@ -126,6 +126,13 @@ impl PyParser {
     }
 
     fn stmt(&mut self) -> PResult<Stmt> {
+        self.cur.enter()?;
+        let r = self.stmt_inner();
+        self.cur.leave();
+        r
+    }
+
+    fn stmt_inner(&mut self) -> PResult<Stmt> {
         if self.cur.at_ident("for") {
             return self.for_stmt();
         }
@@ -209,6 +216,13 @@ impl PyParser {
     }
 
     fn trailing_else(&mut self) -> PResult<Vec<Stmt>> {
+        self.cur.enter()?;
+        let r = self.trailing_else_inner();
+        self.cur.leave();
+        r
+    }
+
+    fn trailing_else_inner(&mut self) -> PResult<Vec<Stmt>> {
         if self.cur.at_ident("elif") {
             self.cur.bump();
             let cond = self.expr()?;
@@ -350,7 +364,10 @@ impl PyParser {
     // ---- expressions ----
 
     fn expr(&mut self) -> PResult<Expr> {
-        self.or_expr()
+        self.cur.enter()?;
+        let r = self.or_expr();
+        self.cur.leave();
+        r
     }
 
     fn or_expr(&mut self) -> PResult<Expr> {
@@ -372,11 +389,15 @@ impl PyParser {
     }
 
     fn not_expr(&mut self) -> PResult<Expr> {
-        if self.cur.eat_ident("not") {
-            let e = self.not_expr()?;
-            return Ok(Expr::Unary { op: UnOp::Not, operand: Box::new(e) });
-        }
-        self.cmp_expr()
+        self.cur.enter()?;
+        let r = if self.cur.eat_ident("not") {
+            self.not_expr()
+                .map(|e| Expr::Unary { op: UnOp::Not, operand: Box::new(e) })
+        } else {
+            self.cmp_expr()
+        };
+        self.cur.leave();
+        r
     }
 
     fn cmp_expr(&mut self) -> PResult<Expr> {
@@ -437,11 +458,15 @@ impl PyParser {
     }
 
     fn unary_expr(&mut self) -> PResult<Expr> {
-        if self.cur.eat_punct("-") {
-            let e = self.unary_expr()?;
-            return Ok(Expr::Unary { op: UnOp::Neg, operand: Box::new(e) });
-        }
-        self.power_expr()
+        self.cur.enter()?;
+        let r = if self.cur.eat_punct("-") {
+            self.unary_expr()
+                .map(|e| Expr::Unary { op: UnOp::Neg, operand: Box::new(e) })
+        } else {
+            self.power_expr()
+        };
+        self.cur.leave();
+        r
     }
 
     fn power_expr(&mut self) -> PResult<Expr> {

@@ -16,6 +16,9 @@
 //!   `IntStream.range(0, n).parallel().forEach` lambda on every
 //!   destination; the marker comment names the backend (IBM JDK GPU
 //!   lambda / multi-core parallel stream / Aparapi-style OpenCL)
+//! * JavaScript — GPU: gpu.js/CUDA-binding `// [gpu.js] ...` comment
+//!   directives; many-core: `// [worker_threads] ...`; FPGA-sim:
+//!   `// [node-opencl] ...` buffer/dispatch comments
 //!
 //! The annotated source is for human inspection and reports; execution of
 //! the plan happens in the VM + device model.
@@ -65,6 +68,12 @@ pub fn render(prog: &Program, directives: &HashMap<LoopId, LoopDirective>) -> St
                 r.java_method(&mut out, f);
             }
             out.push_str("}\n");
+        }
+        Lang::JavaScript => {
+            for f in &prog.functions {
+                r.js_function(&mut out, f);
+                out.push('\n');
+            }
         }
     }
     out
@@ -224,6 +233,57 @@ impl<'a> Renderer<'a> {
                 if d.offload {
                     lines.push(
                         "// [aparapi-fpga] OpenCL kernel dispatch for this loop".to_string(),
+                    );
+                }
+            }
+            (Lang::JavaScript, TargetKind::Gpu) => {
+                if !d.copy_in.is_empty() {
+                    lines.push(format!("// [gpu.js] host->device: {}", d.copy_in.join(", ")));
+                }
+                if !d.copy_out.is_empty() {
+                    lines.push(format!("// [gpu.js] device->host: {}", d.copy_out.join(", ")));
+                }
+                if !d.present.is_empty() {
+                    lines.push(format!(
+                        "// [gpu.js] device-resident: {}",
+                        d.present.join(", ")
+                    ));
+                }
+                if d.offload {
+                    lines.push(
+                        "// [gpu.js] createKernel CUDA-binding launch for this loop".to_string(),
+                    );
+                }
+            }
+            (Lang::JavaScript, TargetKind::ManyCore) => {
+                if d.offload {
+                    lines.push(
+                        "// [worker_threads] worker-pool partition of this loop".to_string(),
+                    );
+                }
+            }
+            (Lang::JavaScript, TargetKind::Fpga) => {
+                if !d.copy_in.is_empty() {
+                    lines.push(format!(
+                        "// [node-opencl] enqueueWriteBuffer: {}",
+                        d.copy_in.join(", ")
+                    ));
+                }
+                if !d.copy_out.is_empty() {
+                    lines.push(format!(
+                        "// [node-opencl] enqueueReadBuffer: {}",
+                        d.copy_out.join(", ")
+                    ));
+                }
+                if !d.present.is_empty() {
+                    lines.push(format!(
+                        "// [node-opencl] device-resident: {}",
+                        d.present.join(", ")
+                    ));
+                }
+                if d.offload {
+                    lines.push(
+                        "// [node-opencl] FPGA HLS kernel dispatch for this loop".to_string(),
                     );
                 }
             }
@@ -606,6 +666,118 @@ impl<'a> Renderer<'a> {
             }
         }
     }
+
+    // ---------- JavaScript ----------
+
+    fn js_function(&self, out: &mut String, f: &Function) {
+        let params: Vec<&str> = f.params.iter().map(|p| p.name.as_str()).collect();
+        let _ = writeln!(out, "function {}({}) {{", f.name, params.join(", "));
+        self.js_block(out, &f.body, 1);
+        out.push_str("}\n");
+    }
+
+    fn js_block(&self, out: &mut String, body: &[Stmt], depth: usize) {
+        for s in body {
+            self.js_stmt(out, s, depth);
+        }
+    }
+
+    fn js_stmt(&self, out: &mut String, s: &Stmt, depth: usize) {
+        match s {
+            Stmt::Decl { name, dims, init, .. } => {
+                Self::indent(out, depth);
+                if dims.is_empty() {
+                    match init {
+                        Some(e) => {
+                            let _ = writeln!(out, "let {} = {};", name, expr(e, self.lang));
+                        }
+                        None => {
+                            let _ = writeln!(out, "let {name};");
+                        }
+                    }
+                } else {
+                    let d: Vec<String> = dims.iter().map(|e| expr(e, self.lang)).collect();
+                    let _ = writeln!(out, "let {} = zeros({});", name, d.join(", "));
+                }
+            }
+            Stmt::Assign { target, op, value } => {
+                Self::indent(out, depth);
+                let _ = writeln!(
+                    out,
+                    "{} {} {};",
+                    lvalue(target, self.lang),
+                    assign_op(*op),
+                    expr(value, self.lang)
+                );
+            }
+            Stmt::For { id, var, start, end, step, body } => {
+                for line in self.directive_lines(*id) {
+                    Self::indent(out, depth);
+                    out.push_str(&line);
+                    out.push('\n');
+                }
+                Self::indent(out, depth);
+                let _ = writeln!(
+                    out,
+                    "for (let {v} = {s}; {v} < {e}; {v} += {st}) {{",
+                    v = var,
+                    s = expr(start, self.lang),
+                    e = expr(end, self.lang),
+                    st = expr(step, self.lang)
+                );
+                self.js_block(out, body, depth + 1);
+                Self::indent(out, depth);
+                out.push_str("}\n");
+            }
+            Stmt::While { cond, body } => {
+                Self::indent(out, depth);
+                let _ = writeln!(out, "while ({}) {{", expr(cond, self.lang));
+                self.js_block(out, body, depth + 1);
+                Self::indent(out, depth);
+                out.push_str("}\n");
+            }
+            Stmt::If { cond, then_body, else_body } => {
+                Self::indent(out, depth);
+                let _ = writeln!(out, "if ({}) {{", expr(cond, self.lang));
+                self.js_block(out, then_body, depth + 1);
+                Self::indent(out, depth);
+                if else_body.is_empty() {
+                    out.push_str("}\n");
+                } else {
+                    out.push_str("} else {\n");
+                    self.js_block(out, else_body, depth + 1);
+                    Self::indent(out, depth);
+                    out.push_str("}\n");
+                }
+            }
+            Stmt::Call { name, args } => {
+                Self::indent(out, depth);
+                let a: Vec<String> = args.iter().map(|e| expr(e, self.lang)).collect();
+                let _ = writeln!(out, "{}({});", name, a.join(", "));
+            }
+            Stmt::Return(e) => {
+                Self::indent(out, depth);
+                match e {
+                    Some(e) => {
+                        let _ = writeln!(out, "return {};", expr(e, self.lang));
+                    }
+                    None => out.push_str("return;\n"),
+                }
+            }
+            Stmt::Break => {
+                Self::indent(out, depth);
+                out.push_str("break;\n");
+            }
+            Stmt::Continue => {
+                Self::indent(out, depth);
+                out.push_str("continue;\n");
+            }
+            Stmt::Print(e) => {
+                Self::indent(out, depth);
+                let _ = writeln!(out, "console.log({});", expr(e, self.lang));
+            }
+        }
+    }
 }
 
 fn assign_op(op: AssignOp) -> &'static str {
@@ -661,7 +833,7 @@ fn expr(e: &Expr, lang: Lang) -> String {
             let name = match lang {
                 Lang::C => f.name().to_string(),
                 Lang::Python => format!("math.{}", py_intrinsic(f)),
-                Lang::Java => format!("Math.{}", java_intrinsic(f)),
+                Lang::Java | Lang::JavaScript => format!("Math.{}", java_intrinsic(f)),
             };
             format!("{}({})", name, a.join(", "))
         }
@@ -672,7 +844,7 @@ fn expr(e: &Expr, lang: Lang) -> String {
         Expr::Len { base, dim } => match lang {
             Lang::C => format!("/*len*/{base}_len{dim}"),
             Lang::Python => format!("len({base})"),
-            Lang::Java => format!("{base}.length"),
+            Lang::Java | Lang::JavaScript => format!("{base}.length"),
         },
     }
 }
@@ -811,5 +983,35 @@ mod tests {
         let s = render(&p, &HashMap::new());
         let p2 = parse(&s, Lang::Python, "t").unwrap();
         assert_eq!(p.entry().unwrap().body.len(), p2.entry().unwrap().body.len());
+    }
+
+    const JS_SRC: &str = "function main() {\n    let n = 8;\n    let a = zeros(n);\n    for (let i = 0; i < n; i++) {\n        a[i] = Math.sqrt(i * 2.0);\n    }\n    console.log(a[3]);\n}\n";
+
+    #[test]
+    fn js_render_has_gpu_js_comments_per_destination() {
+        let p = parse(JS_SRC, Lang::JavaScript, "t").unwrap();
+        let gpu = render(&p, &directives_for_loop0(true));
+        assert!(gpu.contains("// [gpu.js] createKernel CUDA-binding launch"), "{gpu}");
+        assert!(gpu.contains("// [gpu.js] host->device: a"), "{gpu}");
+        assert!(gpu.contains("for (let i = 0; i < n; i += 1)"), "{gpu}");
+        assert!(gpu.contains("Math.sqrt"), "{gpu}");
+        assert!(gpu.contains("console.log(a[3]);"), "{gpu}");
+        // explicit GPU dest renders exactly like the legacy None dest
+        assert_eq!(render(&p, &directives_for_dest(TargetKind::Gpu)), gpu);
+        let mc = render(&p, &directives_for_dest(TargetKind::ManyCore));
+        assert!(mc.contains("// [worker_threads] worker-pool partition"), "{mc}");
+        assert!(!mc.contains("host->device"), "shared memory needs no transfers:\n{mc}");
+        let fpga = render(&p, &directives_for_dest(TargetKind::Fpga));
+        assert!(fpga.contains("// [node-opencl] enqueueWriteBuffer: a"), "{fpga}");
+        assert!(fpga.contains("// [node-opencl] FPGA HLS kernel dispatch"), "{fpga}");
+    }
+
+    #[test]
+    fn rendered_js_reparses() {
+        let p = parse(JS_SRC, Lang::JavaScript, "t").unwrap();
+        let s = render(&p, &HashMap::new());
+        let p2 = parse(&s, Lang::JavaScript, "t").unwrap();
+        assert_eq!(p.loop_count(), p2.loop_count());
+        assert_eq!(p.entry().unwrap().body, p2.entry().unwrap().body);
     }
 }

@@ -3,8 +3,9 @@
 //! The paper's common method hinges on managing "loops, variables and
 //! function blocks" abstractly, independent of the source language
 //! (§3.3: ループと変数の把握については…言語に非依存に抽象的に管理できる).
-//! Every front end (C, Python, Java) lowers to this IR; the analysis, GA,
-//! clone-detection and execution layers never see language syntax again.
+//! Every front end (C, Python, Java, JavaScript) lowers to this IR; the
+//! analysis, GA, clone-detection and execution layers never see language
+//! syntax again.
 
 use std::fmt;
 
@@ -14,6 +15,7 @@ pub enum Lang {
     C,
     Python,
     Java,
+    JavaScript,
 }
 
 impl Lang {
@@ -22,6 +24,7 @@ impl Lang {
             Lang::C => "c",
             Lang::Python => "python",
             Lang::Java => "java",
+            Lang::JavaScript => "javascript",
         }
     }
 
@@ -32,6 +35,7 @@ impl Lang {
             "c" => Some(Lang::C),
             "python" | "py" => Some(Lang::Python),
             "java" => Some(Lang::Java),
+            "javascript" | "js" => Some(Lang::JavaScript),
             _ => None,
         }
     }
@@ -42,12 +46,13 @@ impl Lang {
             "c" | "h" | "cc" | "cpp" => Some(Lang::C),
             "py" => Some(Lang::Python),
             "java" => Some(Lang::Java),
+            "js" | "mjs" => Some(Lang::JavaScript),
             _ => None,
         }
     }
 
-    pub fn all() -> [Lang; 3] {
-        [Lang::C, Lang::Python, Lang::Java]
+    pub fn all() -> [Lang; 4] {
+        [Lang::C, Lang::Python, Lang::Java, Lang::JavaScript]
     }
 }
 
@@ -126,8 +131,8 @@ pub enum UnOp {
     Not,
 }
 
-/// Math intrinsics available in all three source languages
-/// (`math.h`, `import math`, `java.lang.Math`).
+/// Math intrinsics available in all four source languages
+/// (`math.h`, `import math`, `java.lang.Math`, JavaScript's `Math`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Intrinsic {
     Sqrt,
@@ -700,6 +705,17 @@ mod tests {
         assert_eq!(Lang::from_ext("c"), Some(Lang::C));
         assert_eq!(Lang::from_ext("py"), Some(Lang::Python));
         assert_eq!(Lang::from_ext("java"), Some(Lang::Java));
+        assert_eq!(Lang::from_ext("js"), Some(Lang::JavaScript));
+        assert_eq!(Lang::from_ext("mjs"), Some(Lang::JavaScript));
         assert_eq!(Lang::from_ext("rs"), None);
+    }
+
+    #[test]
+    fn lang_names_round_trip() {
+        for lang in Lang::all() {
+            assert_eq!(Lang::from_name(lang.name()), Some(lang));
+        }
+        assert_eq!(Lang::from_name("js"), Some(Lang::JavaScript));
+        assert!(Lang::from_name("cobol").is_none());
     }
 }

@@ -4,8 +4,9 @@
 //! Various Language Applications"* (IEICE/CS.DC 2020).
 //!
 //! The paper proposes a **common (language-independent) method** for
-//! automatically offloading applications written in C, Python and Java to a
-//! GPU, combining:
+//! automatically offloading applications written in C, Python and Java to
+//! a GPU — this reproduction adds a JavaScript front end as the
+//! fourth-language proof of that commonality — combining:
 //!
 //! 1. **Loop-statement offload** — a genetic algorithm searches the space of
 //!    "which parallelizable loops run on the GPU", with CPU↔GPU data-transfer

@@ -12,6 +12,12 @@ use crate::vm::{ArrayRef, Value};
 use anyhow::{anyhow, bail, Result};
 
 /// Names the pattern DB knows as offloadable function blocks.
+///
+/// Every front end lowers its own call syntax to the same bare IR call,
+/// so library-name matching is language-independent: C and Python call
+/// `matmul(...)` directly, Java calls `Lib.matmul(...)` (the qualifier
+/// is stripped), JavaScript accepts both the bare and the
+/// `Lib.`-member form.
 pub const LIBRARY_NAMES: &[&str] =
     &["matmul", "dft", "conv1d", "saxpy", "reduce_sum", "blackscholes", "jacobi_step", "seed_fill"];
 
@@ -500,6 +506,35 @@ mod tests {
     #[test]
     fn non_library_returns_none() {
         assert!(call("notalib", &[]).is_none());
+    }
+
+    #[test]
+    fn library_calls_lower_identically_from_all_front_ends() {
+        // name-matched function-block offload hinges on every front end
+        // lowering its call syntax to the same bare IR call statement
+        use crate::frontend::parse;
+        use crate::ir::{Lang, Stmt};
+        for name in super::LIBRARY_NAMES {
+            let sources = [
+                (Lang::C, format!("void main() {{ {name}(a, 1); }}")),
+                (Lang::Python, format!("def main():\n    {name}(a, 1)\n")),
+                (
+                    Lang::Java,
+                    format!("class T {{ static void main(String[] args) {{ Lib.{name}(a, 1); }} }}"),
+                ),
+                (Lang::JavaScript, format!("function main() {{ Lib.{name}(a, 1); }}")),
+                (Lang::JavaScript, format!("function main() {{ {name}(a, 1); }}")),
+            ];
+            for (lang, src) in sources {
+                let p = parse(&src, lang, "t").unwrap_or_else(|e| panic!("{name} [{lang}]: {e}"));
+                let f = p.entry().unwrap();
+                assert!(
+                    matches!(&f.body[0], Stmt::Call { name: n, args } if n == name && args.len() == 2),
+                    "{name} [{lang}]: {:?}",
+                    f.body[0]
+                );
+            }
+        }
     }
 
     #[test]

@@ -311,22 +311,29 @@ impl PatternDb {
         self.learned.iter().find(|r| r.key == key)
     }
 
-    /// Similarity lookup over *learned* records only: best record for the
-    /// exact destination set `devices` whose whole-program vector scores
-    /// ≥ `threshold` against `v`. The caller must still validate the
-    /// replayed plan against its own analysis (gene-loop set, candidate
-    /// descriptions) and re-verify the result — similarity alone is a
-    /// hint, not proof.
+    /// Similarity lookup over *learned* records only: best record in the
+    /// request's source language `lang` for the exact destination set
+    /// `devices` whose whole-program vector scores ≥ `threshold` against
+    /// `v`. The language gate keeps learned keys from colliding across
+    /// front ends: the characteristic vector of a program is computed on
+    /// the language-independent IR, so without it the *same* app
+    /// submitted in a different language would replay another language's
+    /// record (exact-fingerprint lookups already fold `lang` via the
+    /// program hash). The caller must still validate the replayed plan
+    /// against its own analysis (gene-loop set, candidate descriptions)
+    /// and re-verify the result — similarity alone is a hint, not proof.
     pub fn lookup_learned_similar(
         &self,
         v: &CharVec,
+        lang: Lang,
         devices: &[TargetKind],
         threshold: f64,
     ) -> Option<(&PatternRecord, f64)> {
         let mut best: Option<(&PatternRecord, f64)> = None;
         for r in &self.learned {
             let Some(plan) = r.learned.as_ref() else { continue };
-            if plan.devices != devices || r.vector.iter().all(|&x| x == 0.0) {
+            if plan.lang != lang || plan.devices != devices || r.vector.iter().all(|&x| x == 0.0)
+            {
                 continue;
             }
             let s = similarity(v, &r.vector);
@@ -752,27 +759,56 @@ mod tests {
     }
 
     #[test]
-    fn learned_similarity_respects_target_and_threshold() {
+    fn learned_similarity_respects_lang_target_and_threshold() {
         let mut db = PatternDb::default();
         db.insert_learned(sample_learned(7, 0.2));
         let v = db.learned_records()[0].vector;
-        let (r, s) = db.lookup_learned_similar(&v, &[TargetKind::Gpu], 0.99).unwrap();
+        let (r, s) = db.lookup_learned_similar(&v, Lang::C, &[TargetKind::Gpu], 0.99).unwrap();
         assert_eq!(r.learned.as_ref().unwrap().fingerprint, 7);
         assert!(s > 0.999);
+        for lang in [Lang::Python, Lang::Java, Lang::JavaScript] {
+            assert!(
+                db.lookup_learned_similar(&v, lang, &[TargetKind::Gpu], 0.99).is_none(),
+                "{lang}: an identical program in another language must not replay a C record"
+            );
+        }
         assert!(
-            db.lookup_learned_similar(&v, &[TargetKind::ManyCore], 0.99).is_none(),
+            db.lookup_learned_similar(&v, Lang::C, &[TargetKind::ManyCore], 0.99).is_none(),
             "other targets must not reuse a GPU plan"
         );
         assert!(
-            db.lookup_learned_similar(&v, &[TargetKind::Gpu, TargetKind::ManyCore], 0.99)
+            db.lookup_learned_similar(&v, Lang::C, &[TargetKind::Gpu, TargetKind::ManyCore], 0.99)
                 .is_none(),
             "a mixed-set request must not reuse a single-target plan"
         );
         let mut far = v;
         far[0] += 100.0;
-        assert!(db.lookup_learned_similar(&far, &[TargetKind::Gpu], 0.99).is_none());
+        assert!(db.lookup_learned_similar(&far, Lang::C, &[TargetKind::Gpu], 0.99).is_none());
         // learned vectors must never leak into clone detection
         assert!(db.lookup_similar(&v, 0.0).is_none());
+    }
+
+    #[test]
+    fn learned_records_round_trip_every_language() {
+        // pattern-DB persistence must carry all four language tags (a
+        // learned JavaScript plan written by `serve --db` has to resume
+        // as JavaScript, not fall back or fail to parse)
+        let mut db = PatternDb::default();
+        for (i, lang) in Lang::all().into_iter().enumerate() {
+            let mut rec = sample_learned(100 + i as u64, 0.1);
+            rec.learned.as_mut().unwrap().lang = lang;
+            db.insert_learned(rec);
+        }
+        let tmp = std::env::temp_dir()
+            .join(format!("envadapt_patterndb_langs_{}.txt", std::process::id()));
+        db.save(&tmp).unwrap();
+        let loaded = PatternDb::load(&tmp).unwrap();
+        assert_eq!(loaded.learned_len(), 4);
+        for (i, lang) in Lang::all().into_iter().enumerate() {
+            let r = loaded.lookup_learned(100 + i as u64, TargetKind::Gpu).unwrap();
+            assert_eq!(r.learned.as_ref().unwrap().lang, lang);
+        }
+        std::fs::remove_file(tmp).ok();
     }
 
     /// A mixed-destination learned plan: the gene is 2 bits/slot over a

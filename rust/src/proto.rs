@@ -5,6 +5,9 @@
 //! request `op` selects the operation; `id` is echoed back so clients can
 //! pipeline requests over one connection:
 //!
+//! `lang` accepts every [`Lang`] name (`c`, `python`, `java`,
+//! `javascript` — plus the `py`/`js` aliases):
+//!
 //! ```text
 //! → {"op":"offload","id":1,"name":"mm","lang":"c","code":"...","target":"gpu"}
 //! ← {"id":1,"ok":true,"op":"offload","worker":0,"report":{...}}

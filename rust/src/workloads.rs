@@ -1,11 +1,11 @@
-//! Built-in sample applications — each authored in **all three source
-//! languages** (C, Python, Java), semantically identical.
+//! Built-in sample applications — each authored in **all four source
+//! languages** (C, Python, Java, JavaScript), semantically identical.
 //!
 //! These are the paper's 既存アプリケーション: the workloads the common
 //! offload method is demonstrated on. Every app prints the same checksum
 //! values in every language, so (a) the PCAST-style results check works,
 //! and (b) E7 can assert that the *same* offload pattern is found from all
-//! three front ends.
+//! four front ends.
 //!
 //! | app          | offload opportunities                                        |
 //! |--------------|--------------------------------------------------------------|
@@ -59,12 +59,20 @@ pub fn get(app: &str, lang: Lang) -> Option<Source> {
         ("hetero", Lang::C) => HETERO_C,
         ("hetero", Lang::Python) => HETERO_PY,
         ("hetero", Lang::Java) => HETERO_JAVA,
+        ("mm", Lang::JavaScript) => MM_JS,
+        ("fourier", Lang::JavaScript) => FOURIER_JS,
+        ("stencil", Lang::JavaScript) => STENCIL_JS,
+        ("blackscholes", Lang::JavaScript) => BS_JS,
+        ("mixed", Lang::JavaScript) => MIXED_JS,
+        ("signal", Lang::JavaScript) => SIGNAL_JS,
+        ("smallloops", Lang::JavaScript) => SMALL_JS,
+        ("hetero", Lang::JavaScript) => HETERO_JS,
         _ => return None,
     };
     Some(Source { app: APPS.iter().find(|a| **a == app)?, lang, code })
 }
 
-/// Every (app, language) source — `APPS.len() × 3` entries.
+/// Every (app, language) source — `APPS.len() × 4` entries.
 pub fn all() -> Vec<Source> {
     let mut out = Vec::new();
     for app in APPS {
@@ -793,6 +801,246 @@ public class Hetero {
         System.out.println(z[100]);
         System.out.println(s);
     }
+}
+"#;
+
+// ---------------------------------------------------------------------------
+// JavaScript variants — semantically identical to the C/Python/Java
+// sources above (same literals, same expression shapes), so all four
+// front ends lower each app to the same IR and print the same checksums.
+// ---------------------------------------------------------------------------
+
+const MM_JS: &str = r#"
+function main() {
+    let n = 32;
+    let a = zeros(n, n);
+    let b = zeros(n, n);
+    let c = zeros(n, n);
+    for (let i = 0; i < n; i++) {
+        for (let j = 0; j < n; j++) {
+            a[i][j] = ((i * 31 + j * 7) % 17) * 0.25;
+        }
+    }
+    for (let i = 0; i < n; i++) {
+        for (let j = 0; j < n; j++) {
+            b[i][j] = ((i * 13 + j * 3) % 23) * 0.125;
+        }
+    }
+    for (let i = 0; i < n; i++) {
+        for (let j = 0; j < n; j++) {
+            let s = 0.0;
+            for (let k = 0; k < n; k++) {
+                s += a[i][k] * b[k][j];
+            }
+            c[i][j] = s;
+        }
+    }
+    let total = 0.0;
+    for (let i = 0; i < n; i++) {
+        for (let j = 0; j < n; j++) {
+            total += c[i][j];
+        }
+    }
+    console.log(c[5][7]);
+    console.log(total);
+}
+"#;
+
+const FOURIER_JS: &str = r#"
+function main() {
+    let n = 512;
+    let re = zeros(n);
+    let im = zeros(n);
+    let ro = zeros(n);
+    let io = zeros(n);
+    let mag = zeros(n);
+    for (let i = 0; i < n; i++) {
+        re[i] = Math.sin(i * 0.4908738521234052) + 0.5 * Math.sin(i * 1.9634954084936207);
+        im[i] = 0.0;
+    }
+    dft(re, im, ro, io, n);
+    for (let i = 0; i < n; i++) {
+        mag[i] = Math.sqrt(ro[i] * ro[i] + io[i] * io[i]);
+    }
+    let peak = 0.0;
+    for (let i = 0; i < n; i++) {
+        peak = Math.max(peak, mag[i]);
+    }
+    let total = 0.0;
+    for (let i = 0; i < n; i++) {
+        total += mag[i];
+    }
+    console.log(peak);
+    console.log(total);
+}
+"#;
+
+const STENCIL_JS: &str = r#"
+function main() {
+    let n = 64;
+    let m = 64;
+    let steps = 20;
+    let a = zeros(n, m);
+    let b = zeros(n, m);
+    for (let i = 0; i < n; i++) {
+        for (let j = 0; j < m; j++) {
+            a[i][j] = 0.0;
+            b[i][j] = 0.0;
+        }
+    }
+    for (let i = 1; i < n - 1; i++) {
+        for (let j = 1; j < m - 1; j++) {
+            a[i][j] = ((i * 7 + j * 11) % 13) * 1.0;
+        }
+    }
+    for (let t = 0; t < steps; t++) {
+        for (let i = 1; i < n - 1; i++) {
+            for (let j = 1; j < m - 1; j++) {
+                b[i][j] = 0.25 * (a[i - 1][j] + a[i + 1][j] + a[i][j - 1] + a[i][j + 1]);
+            }
+        }
+        for (let i = 1; i < n - 1; i++) {
+            for (let j = 1; j < m - 1; j++) {
+                a[i][j] = b[i][j];
+            }
+        }
+    }
+    let total = 0.0;
+    for (let i = 0; i < n; i++) {
+        for (let j = 0; j < m; j++) {
+            total += a[i][j];
+        }
+    }
+    console.log(a[30][30]);
+    console.log(total);
+}
+"#;
+
+const BS_JS: &str = r#"
+function main() {
+    let n = 16384;
+    let sp = zeros(n);
+    let kp = zeros(n);
+    let tp = zeros(n);
+    let call = zeros(n);
+    for (let i = 0; i < n; i++) {
+        sp[i] = 50.0 + ((i * 37) % 100) * 1.0;
+        kp[i] = 50.0 + ((i * 53) % 100) * 1.0;
+        tp[i] = 0.1 + ((i * 11) % 20) * 0.1;
+    }
+    for (let i = 0; i < n; i++) {
+        let sq = 0.3 * Math.sqrt(tp[i]);
+        let d1 = (Math.log(sp[i] / kp[i]) + (0.02 + 0.045) * tp[i]) / sq;
+        let d2 = d1 - sq;
+        let n1 = 1.0 / (1.0 + Math.exp(0.0 - 1.702 * d1));
+        let n2 = 1.0 / (1.0 + Math.exp(0.0 - 1.702 * d2));
+        call[i] = sp[i] * n1 - kp[i] * Math.exp(0.0 - 0.02 * tp[i]) * n2;
+    }
+    let total = 0.0;
+    for (let i = 0; i < n; i++) {
+        total += call[i];
+    }
+    console.log(call[10]);
+    console.log(total);
+}
+"#;
+
+const MIXED_JS: &str = r#"
+function main() {
+    let n = 64;
+    let a = zeros(n, n);
+    let b = zeros(n, n);
+    let c = zeros(n, n);
+    let d = zeros(n, n);
+    seed_fill(a, 1);
+    seed_fill(b, 2);
+    matmul(a, b, c, n);
+    for (let i = 0; i < n; i++) {
+        for (let j = 0; j < n; j++) {
+            d[i][j] = Math.sqrt(Math.abs(c[i][j])) * 0.5;
+        }
+    }
+    let x = 1.0;
+    for (let i = 0; i < n; i++) {
+        x = x * 0.99 + d[i][i];
+    }
+    console.log(d[3][4]);
+    console.log(x);
+}
+"#;
+
+const SIGNAL_JS: &str = r#"
+function main() {
+    let n = 4111;
+    let m = 16;
+    let out = 4096;
+    let x = zeros(n);
+    let k = zeros(m);
+    let y = zeros(out);
+    for (let i = 0; i < n; i++) {
+        x[i] = Math.sin(i * 0.0306796157577128) + 0.3 * Math.cos(i * 0.2454369260617026);
+    }
+    for (let j = 0; j < m; j++) {
+        k[j] = 1.0 / (1.0 + j);
+    }
+    conv1d(x, k, y, n, m);
+    let energy = 0.0;
+    for (let i = 0; i < out; i++) {
+        energy += y[i] * y[i];
+    }
+    console.log(y[100]);
+    console.log(energy);
+}
+"#;
+
+const SMALL_JS: &str = r#"
+function main() {
+    let n = 8;
+    let u = zeros(n);
+    let v = zeros(n);
+    let w = zeros(n);
+    for (let i = 0; i < n; i++) {
+        u[i] = i * 0.5;
+    }
+    for (let i = 0; i < n; i++) {
+        v[i] = u[i] + 1.0;
+    }
+    for (let i = 0; i < n; i++) {
+        w[i] = u[i] * v[i];
+    }
+    let s = 0.0;
+    for (let i = 0; i < n; i++) {
+        s += w[i];
+    }
+    console.log(s);
+}
+"#;
+
+const HETERO_JS: &str = r#"
+function main() {
+    let n = 4096;
+    let x = zeros(n);
+    let y = zeros(n);
+    let z = zeros(n);
+    let w = zeros(n);
+    for (let i = 0; i < n; i++) {
+        x[i] = ((i * 13) % 29) * 0.25 + 1.0;
+    }
+    for (let i = 0; i < n; i++) {
+        y[i] = x[i] * 1.5 + 2.0;
+    }
+    for (let i = 0; i < n; i++) {
+        z[i] = x[i] + y[i] * 0.5;
+    }
+    for (let i = 0; i < n; i++) {
+        w[i] = z[i] * z[i];
+    }
+    let s = 0.0;
+    for (let i = 0; i < n; i++) {
+        s += w[i] * 0.001;
+    }
+    console.log(z[100]);
+    console.log(s);
 }
 "#;
 

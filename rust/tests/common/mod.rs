@@ -1,0 +1,122 @@
+//! Shared test support: a random-program generator that emits the *same*
+//! program in every supported source language.
+//!
+//! The generator is split into a language-neutral [`ProgramSpec`] (what
+//! the random draws decide) and a per-language [`emit`] (pure
+//! pretty-printing), so one spec yields four sources that must lower to
+//! structurally identical IR — the backbone of the cross-language
+//! conformance suite (`tests/conformance.rs`) and of the single-language
+//! property tests (`tests/property.rs`, which emits the C rendering).
+//!
+//! Cargo only builds top-level files in `tests/` as test binaries, so
+//! this module lives in a subdirectory and is pulled in with `mod common;`.
+
+#![allow(dead_code)]
+
+use envadapt::ir::Lang;
+use envadapt::util::Rng;
+
+/// Language-neutral description of one generated program: a chain of
+/// elementwise / broadcast / reduction loops over three arrays `a`, `b`,
+/// `c` of extent `n`, accumulating into the scalar `acc`, followed by one
+/// checksum print.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProgramSpec {
+    pub n: usize,
+    /// loop kinds, each in `0..4` (fill / broadcast / zip / reduce)
+    pub loops: Vec<usize>,
+}
+
+/// Draw a random spec. Consumes the same RNG stream regardless of the
+/// language it is later emitted in, so equal seeds mean equal structure.
+pub fn random_spec(rng: &mut Rng, size: usize) -> ProgramSpec {
+    let n_loops = 1 + rng.below(size.min(8));
+    let n = 16 + rng.below(64);
+    let loops = (0..n_loops).map(|_| rng.below(4)).collect();
+    ProgramSpec { n, loops }
+}
+
+/// The loop body for kind `k` (loop index `idx` seeds the fill constant),
+/// shared verbatim by every language — C-style `a[i] = e` assignment
+/// syntax is valid in all four.
+fn body(k: usize, idx: usize) -> String {
+    match k {
+        0 => format!("a[i] = i * {}.5", idx + 1),
+        1 => "b[i] = a[i] * 2.0 + 1.0".to_string(),
+        2 => "c[i] = a[i] + b[i]".to_string(),
+        _ => "acc += a[i]".to_string(),
+    }
+}
+
+const CHECKSUM: &str = "acc + a[3] + b[5] + c[7]";
+
+/// Render `spec` as source in `lang`. All four renderings lower to the
+/// same IR modulo `Program::lang`.
+pub fn emit(spec: &ProgramSpec, lang: Lang) -> String {
+    let n = spec.n;
+    match lang {
+        Lang::C => {
+            let mut src = String::from("void main() {\n");
+            src.push_str(&format!("    int n = {n};\n"));
+            src.push_str("    double a[n]; double b[n]; double c[n];\n");
+            src.push_str("    double acc = 0.0;\n");
+            for (idx, &k) in spec.loops.iter().enumerate() {
+                src.push_str(&format!(
+                    "    for (int i = 0; i < n; i++) {{ {}; }}\n",
+                    body(k, idx)
+                ));
+            }
+            src.push_str(&format!("    printf(\"%f\\n\", {CHECKSUM});\n}}\n"));
+            src
+        }
+        Lang::Python => {
+            let mut src = String::from("def main():\n");
+            src.push_str(&format!("    n = {n}\n"));
+            src.push_str("    a = zeros(n)\n    b = zeros(n)\n    c = zeros(n)\n");
+            src.push_str("    acc = 0.0\n");
+            for (idx, &k) in spec.loops.iter().enumerate() {
+                src.push_str(&format!("    for i in range(n):\n        {}\n", body(k, idx)));
+            }
+            src.push_str(&format!("    print({CHECKSUM})\n"));
+            src
+        }
+        Lang::Java => {
+            let mut src = String::from(
+                "class Prop {\n    public static void main(String[] args) {\n",
+            );
+            src.push_str(&format!("        int n = {n};\n"));
+            src.push_str("        double[] a = new double[n];\n");
+            src.push_str("        double[] b = new double[n];\n");
+            src.push_str("        double[] c = new double[n];\n");
+            src.push_str("        double acc = 0.0;\n");
+            for (idx, &k) in spec.loops.iter().enumerate() {
+                src.push_str(&format!(
+                    "        for (int i = 0; i < n; i++) {{ {}; }}\n",
+                    body(k, idx)
+                ));
+            }
+            src.push_str(&format!("        System.out.println({CHECKSUM});\n    }}\n}}\n"));
+            src
+        }
+        Lang::JavaScript => {
+            let mut src = String::from("function main() {\n");
+            src.push_str(&format!("    let n = {n};\n"));
+            src.push_str("    let a = zeros(n);\n    let b = zeros(n);\n    let c = zeros(n);\n");
+            src.push_str("    let acc = 0.0;\n");
+            for (idx, &k) in spec.loops.iter().enumerate() {
+                src.push_str(&format!(
+                    "    for (let i = 0; i < n; i++) {{ {}; }}\n",
+                    body(k, idx)
+                ));
+            }
+            src.push_str(&format!("    console.log({CHECKSUM});\n}}\n"));
+            src
+        }
+    }
+}
+
+/// Convenience used by `tests/property.rs`: draw a spec and emit it in
+/// one language.
+pub fn random_program(rng: &mut Rng, size: usize, lang: Lang) -> String {
+    emit(&random_spec(rng, size), lang)
+}

@@ -1,5 +1,5 @@
 //! End-to-end coordinator tests: the complete Fig. 1 flow on the built-in
-//! workloads, across all three source languages, with both the simulated
+//! workloads, across all four source languages, with both the simulated
 //! and the PJRT-backed device.
 
 use envadapt::config::Config;
@@ -40,7 +40,7 @@ fn all_workloads_offload_correctly_in_all_languages() {
 #[test]
 fn language_independence_same_pattern_everywhere() {
     // E7: for each app the chosen gene and the speedup are identical for
-    // C, Python and Java — the paper's common-method claim.
+    // every source language — the paper's common-method claim.
     for app in workloads::APPS {
         let mut genes = vec![];
         for lang in Lang::all() {

@@ -1,0 +1,168 @@
+//! Parser robustness across all four front ends: hostile inputs must
+//! produce a clean `ParseError` — never a panic, never a stack overflow.
+//!
+//! The interesting class is *deep nesting* (`((((…`, `if(1)if(1)…`,
+//! towers of indentation): recursive-descent parsers walk those with the
+//! call stack, so `lex::MAX_PARSE_DEPTH` bounds the descent and these
+//! tests pin the behaviour on both sides of the bound.
+
+use envadapt::frontend::parse;
+use envadapt::ir::Lang;
+use envadapt::util::Rng;
+
+/// Wrap a statement (or expression-statement payload) in the smallest
+/// valid program scaffold of each language.
+fn in_main(lang: Lang, stmt: &str) -> String {
+    match lang {
+        Lang::C => format!("void main() {{ {stmt} }}"),
+        Lang::Python => format!("def main():\n    {stmt}\n"),
+        Lang::Java => format!("class T {{ static void main(String[] args) {{ {stmt} }} }}"),
+        Lang::JavaScript => format!("function main() {{ {stmt} }}"),
+    }
+}
+
+#[test]
+fn random_garbage_never_panics() {
+    // byte soup, including multi-byte UTF-8, quotes and every operator
+    // character: parsing must terminate (Ok or Err), never panic
+    let pool: Vec<char> =
+        "abc xyz019 .,;:(){}[]<>=+-*/%&|!#?\"'`@$^~\\\n\t\räπ€\u{0}".chars().collect();
+    let mut rng = Rng::new(0xF422);
+    for _case in 0..300 {
+        let len = rng.below(160) + 1;
+        let s: String = (0..len).map(|_| *rng.choose(&pool)).collect();
+        for lang in Lang::all() {
+            let _ = parse(&s, lang, "fuzz");
+            // also seed it past the function header so the statement
+            // parsers (not just the top level) see the garbage
+            let _ = parse(&in_main(lang, &s.replace('\n', " ")), lang, "fuzz");
+        }
+    }
+}
+
+#[test]
+fn deeply_nested_parens_error_cleanly() {
+    let deep = format!("{}1{}", "(".repeat(5000), ")".repeat(5000));
+    for lang in Lang::all() {
+        let stmt = match lang {
+            Lang::Python => format!("x = {deep}"),
+            _ => format!("x = {deep};"),
+        };
+        let e = parse(&in_main(lang, &stmt), lang, "fuzz");
+        assert!(e.is_err(), "[{lang}] pathological paren nesting must be rejected");
+    }
+}
+
+#[test]
+fn deep_unary_chains_error_cleanly() {
+    // "- " with a space: back-to-back minuses would lex as `--` tokens
+    // and fail shallowly instead of exercising the recursion guard
+    for (prefix, langs) in [
+        ("- ", Lang::all().to_vec()),
+        ("!", vec![Lang::C, Lang::Java, Lang::JavaScript]),
+        ("not ", vec![Lang::Python]),
+    ] {
+        let deep = format!("{}1", prefix.repeat(20_000));
+        for lang in langs {
+            let stmt = match lang {
+                Lang::Python => format!("x = {deep}"),
+                _ => format!("x = {deep};"),
+            };
+            let e = parse(&in_main(lang, &stmt), lang, "fuzz");
+            assert!(e.is_err(), "[{lang}] unary tower `{prefix}` must be rejected");
+        }
+    }
+}
+
+#[test]
+fn deeply_nested_blocks_error_cleanly() {
+    // braced languages: 5000 chained brace-less `if (1) ...`
+    let chain = format!("{}x = 1;", "if (1) ".repeat(5000));
+    for lang in [Lang::C, Lang::Java, Lang::JavaScript] {
+        let e = parse(&in_main(lang, &chain), lang, "fuzz");
+        assert!(e.is_err(), "[{lang}] if-chain nesting must be rejected");
+    }
+    // Python: a 1000-level indentation tower
+    let mut src = String::from("def main():\n");
+    for depth in 0..1000 {
+        src.push_str(&" ".repeat(depth + 1));
+        src.push_str("if 1:\n");
+    }
+    src.push_str(&" ".repeat(1001));
+    src.push_str("x = 1\n");
+    assert!(parse(&src, Lang::Python, "fuzz").is_err(), "indent tower must be rejected");
+}
+
+#[test]
+fn reasonable_nesting_still_parses() {
+    // the depth guard must not reject realistic programs: 30 nested
+    // parens and 30 nested ifs are far beyond anything the workloads or
+    // the generators produce, and far below the bound
+    let parens = format!("{}1{}", "(".repeat(30), ")".repeat(30));
+    let ifs = format!("{}x = 1;", "if (1) ".repeat(30));
+    for lang in Lang::all() {
+        let stmt = match lang {
+            Lang::Python => format!("x = {parens}"),
+            _ => format!("x = {parens};"),
+        };
+        parse(&in_main(lang, &stmt), lang, "fuzz")
+            .unwrap_or_else(|e| panic!("[{lang}] 30-deep parens must parse: {e}"));
+    }
+    for lang in [Lang::C, Lang::Java, Lang::JavaScript] {
+        parse(&in_main(lang, &ifs), lang, "fuzz")
+            .unwrap_or_else(|e| panic!("[{lang}] 30-deep ifs must parse: {e}"));
+    }
+    let mut src = String::from("def main():\n");
+    for depth in 0..30 {
+        src.push_str(&" ".repeat(depth + 1));
+        src.push_str("if 1:\n");
+    }
+    src.push_str(&" ".repeat(31));
+    src.push_str("x = 1\n");
+    parse(&src, Lang::Python, "fuzz").unwrap_or_else(|e| panic!("30-deep indents: {e}"));
+}
+
+#[test]
+fn unterminated_strings_and_comments_error_cleanly() {
+    for lang in Lang::all() {
+        let e = parse(&in_main(lang, "x = \"abc"), lang, "fuzz");
+        assert!(e.is_err(), "[{lang}] unterminated string must be rejected");
+    }
+    for lang in [Lang::C, Lang::Java, Lang::JavaScript] {
+        let e = parse(&in_main(lang, "x = 1; /* never closed"), lang, "fuzz");
+        assert!(e.is_err(), "[{lang}] unterminated block comment must be rejected");
+    }
+}
+
+#[test]
+fn huge_identifiers_do_not_crash() {
+    let name = "x".repeat(1 << 20);
+    for lang in Lang::all() {
+        let stmt = match lang {
+            Lang::C => format!("int {name} = 1;"),
+            Lang::Python => format!("{name} = 1"),
+            Lang::Java => format!("int {name} = 1;"),
+            Lang::JavaScript => format!("let {name} = 1;"),
+        };
+        let p = parse(&in_main(lang, &stmt), lang, "fuzz");
+        assert!(p.is_ok(), "[{lang}] a huge identifier is ugly but legal: {:?}", p.err());
+    }
+}
+
+#[test]
+fn truncated_real_programs_error_with_positions() {
+    // every prefix of a real workload either parses or errors cleanly,
+    // and errors always carry a plausible 1-based position
+    for lang in Lang::all() {
+        let code = envadapt::workloads::get("mm", lang).unwrap().code;
+        for cut in (0..code.len()).step_by(97) {
+            if !code.is_char_boundary(cut) {
+                continue;
+            }
+            match parse(&code[..cut], lang, "fuzz") {
+                Ok(_) => {}
+                Err(e) => assert!(e.line >= 1 && e.col >= 1, "[{lang}] cut {cut}: {e}"),
+            }
+        }
+    }
+}

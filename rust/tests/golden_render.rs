@@ -1,7 +1,8 @@
 //! Golden tests for the directive-annotated renderer: one exact expected
 //! output per (language × destination kind), so the emitted OpenACC /
-//! OpenMP / PyCUDA / joblib / pyopencl / parallel-stream / Aparapi
-//! annotations cannot silently drift.
+//! OpenMP / PyCUDA / joblib / pyopencl / parallel-stream / Aparapi /
+//! gpu.js / worker_threads / node-opencl annotations cannot silently
+//! drift.
 
 use envadapt::device::TargetKind;
 use envadapt::frontend::parse;
@@ -14,6 +15,8 @@ const C_SRC: &str =
 const PY_SRC: &str =
     "def main():\n    n = 4\n    a = zeros(n)\n    for i in range(n):\n        a[i] = i * 2.0\n";
 const JAVA_SRC: &str = "class T { public static void main(String[] args) { int n = 4; double[] a = new double[n]; for (int i = 0; i < n; i++) { a[i] = i * 2.0; } } }";
+const JS_SRC: &str =
+    "function main() { let n = 4; let a = zeros(n); for (let i = 0; i < n; i++) { a[i] = i * 2.0; } }";
 
 fn dirs(dest: TargetKind) -> HashMap<LoopId, LoopDirective> {
     let mut m = HashMap::new();
@@ -41,6 +44,7 @@ fn rendered(lang: Lang, dest: TargetKind) -> String {
         Lang::C => C_SRC,
         Lang::Python => PY_SRC,
         Lang::Java => JAVA_SRC,
+        Lang::JavaScript => JS_SRC,
     };
     let p = parse(src, lang, "t").unwrap();
     render(&p, &dirs(dest))
@@ -210,4 +214,60 @@ fn golden_java_fpga() {
         "}",
     ]);
     assert_eq!(rendered(Lang::Java, TargetKind::Fpga), want);
+}
+
+// ---------------------------------------------------------------------------
+// JavaScript
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_js_gpu() {
+    let want = golden(&[
+        "function main() {",
+        "    let n = 4;",
+        "    let a = zeros(n);",
+        "    // [gpu.js] host->device: a",
+        "    // [gpu.js] device->host: a",
+        "    // [gpu.js] createKernel CUDA-binding launch for this loop",
+        "    for (let i = 0; i < n; i += 1) {",
+        "        a[i] = (i * 2.0);",
+        "    }",
+        "}",
+        "",
+    ]);
+    assert_eq!(rendered(Lang::JavaScript, TargetKind::Gpu), want);
+}
+
+#[test]
+fn golden_js_many_core() {
+    let want = golden(&[
+        "function main() {",
+        "    let n = 4;",
+        "    let a = zeros(n);",
+        "    // [worker_threads] worker-pool partition of this loop",
+        "    for (let i = 0; i < n; i += 1) {",
+        "        a[i] = (i * 2.0);",
+        "    }",
+        "}",
+        "",
+    ]);
+    assert_eq!(rendered(Lang::JavaScript, TargetKind::ManyCore), want);
+}
+
+#[test]
+fn golden_js_fpga() {
+    let want = golden(&[
+        "function main() {",
+        "    let n = 4;",
+        "    let a = zeros(n);",
+        "    // [node-opencl] enqueueWriteBuffer: a",
+        "    // [node-opencl] enqueueReadBuffer: a",
+        "    // [node-opencl] FPGA HLS kernel dispatch for this loop",
+        "    for (let i = 0; i < n; i += 1) {",
+        "        a[i] = (i * 2.0);",
+        "    }",
+        "}",
+        "",
+    ]);
+    assert_eq!(rendered(Lang::JavaScript, TargetKind::Fpga), want);
 }

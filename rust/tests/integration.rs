@@ -131,6 +131,7 @@ fn directive_rendering_round_trips_for_every_language() {
                     Lang::C => "#pragma acc",
                     Lang::Python => "# [pycuda]",
                     Lang::Java => "gpu-lambda",
+                    Lang::JavaScript => "[gpu.js]",
                 };
                 assert!(s.contains(marker) || s.contains("IntStream"), "{app} [{lang}]:\n{s}");
             }

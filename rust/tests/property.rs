@@ -1,6 +1,12 @@
 //! Property-based tests over coordinator invariants, using the in-crate
 //! mini property tester (`envadapt::util::prop`) — proptest is not
 //! available offline.
+//!
+//! The random-program generator lives in `tests/common/` (it emits the
+//! same program in every supported language; `tests/conformance.rs`
+//! exercises all four renderings, this file uses the C one).
+
+mod common;
 
 use envadapt::analysis;
 use envadapt::device::{CostModel, GpuDevice};
@@ -11,30 +17,10 @@ use envadapt::util::prop::{check, Config as PropConfig};
 use envadapt::util::Rng;
 use envadapt::vm::{self, VmConfig};
 
-/// Generate a random but valid C program: a chain of elementwise /
-/// reduction / broadcast loops over a few arrays.
+/// A random but valid C program: a chain of elementwise / reduction /
+/// broadcast loops over a few arrays (the shared generator's C rendering).
 fn random_c_program(rng: &mut Rng, size: usize) -> String {
-    let n_loops = 1 + rng.below(size.min(8));
-    let n = 16 + rng.below(64);
-    let mut src = String::from("void main() {\n");
-    src.push_str(&format!("    int n = {n};\n"));
-    src.push_str("    double a[n]; double b[n]; double c[n];\n");
-    src.push_str("    double acc = 0.0;\n");
-    for k in 0..n_loops {
-        match rng.below(4) {
-            0 => src.push_str(&format!(
-                "    for (int i = 0; i < n; i++) {{ a[i] = i * {}.5; }}\n",
-                k + 1
-            )),
-            1 => src.push_str(
-                "    for (int i = 0; i < n; i++) { b[i] = a[i] * 2.0 + 1.0; }\n",
-            ),
-            2 => src.push_str("    for (int i = 0; i < n; i++) { c[i] = a[i] + b[i]; }\n"),
-            _ => src.push_str("    for (int i = 0; i < n; i++) { acc += a[i]; }\n"),
-        }
-    }
-    src.push_str("    printf(\"%f\\n\", acc + a[3] + b[5] + c[7]);\n}\n");
-    src
+    common::random_program(rng, size, Lang::C)
 }
 
 #[test]

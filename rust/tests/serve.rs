@@ -1,6 +1,6 @@
 //! End-to-end tests of the offload service: a real TCP server, real
 //! client connections, the line-delimited JSON protocol, and the learned
-//! pattern DB's zero-measurement fast path — in all three languages.
+//! pattern DB's zero-measurement fast path — in all four languages.
 
 use envadapt::config::Config;
 use envadapt::ir::Lang;
@@ -41,7 +41,7 @@ fn i64_field(r: &Response, report_key: &str) -> i64 {
 }
 
 #[test]
-fn serve_learns_and_replays_all_three_languages() {
+fn serve_learns_and_replays_all_four_languages() {
     let handle = server::spawn_tcp(
         Config::fast_sim(),
         ServeOptions { pool: 2, db_path: None },
@@ -50,12 +50,17 @@ fn serve_learns_and_replays_all_three_languages() {
     .expect("spawn server");
     let mut client = Client::connect(handle.addr());
 
-    // One app per language: the IR is language-independent, so the same
-    // app in a second language could legitimately replay the first
-    // language's pattern via similarity — distinct apps guarantee each
-    // language exercises a real first search AND a replay.
+    // One app per language: learned records are keyed per language (the
+    // fingerprint folds `lang` and the similarity path gates on it), but
+    // distinct apps also make each language's first search independent
+    // of request ordering.
     let mut id = 0i64;
-    for (lang, app) in [(Lang::C, "mm"), (Lang::Python, "fourier"), (Lang::Java, "stencil")] {
+    for (lang, app) in [
+        (Lang::C, "mm"),
+        (Lang::Python, "fourier"),
+        (Lang::Java, "stencil"),
+        (Lang::JavaScript, "blackscholes"),
+    ] {
         let code = workloads::get(app, lang).unwrap().code;
 
         // first request: a real search runs and the pattern is learned
@@ -92,13 +97,13 @@ fn serve_learns_and_replays_all_three_languages() {
         assert_eq!(speedup1, speedup2, "[{lang}] same measured speedup");
     }
 
-    // service-level stats agree: 6 offloads, 3 replays, 3 learned
+    // service-level stats agree: 8 offloads, 4 replays, 4 learned
     id += 1;
     let stats = client.roundtrip(&format!("{{\"op\":\"stats\",\"id\":{id}}}"));
     assert!(stats.ok);
     let s = stats.body.get("stats").expect("stats payload");
-    assert_eq!(s.get("offloads").and_then(|v| v.as_i64()), Some(6));
-    assert_eq!(s.get("pattern_reuse_hits").and_then(|v| v.as_i64()), Some(3));
+    assert_eq!(s.get("offloads").and_then(|v| v.as_i64()), Some(8));
+    assert_eq!(s.get("pattern_reuse_hits").and_then(|v| v.as_i64()), Some(4));
     assert!(s.get("learned_records").and_then(|v| v.as_i64()).unwrap() >= 1);
     assert_eq!(s.get("errors").and_then(|v| v.as_i64()), Some(0));
 
@@ -244,6 +249,86 @@ fn serve_resumes_learned_patterns_from_disk() {
     assert_eq!(i64_field(&r2, "measurements"), 0, "restarted service must replay");
     assert!(r2.report().and_then(|rep| rep.get("pattern_reuse")).is_some());
     assert_eq!(r2.report().and_then(|rep| rep.get("gene")).cloned(), gene1);
+    drop(c);
+    handle.shutdown().unwrap();
+    std::fs::remove_file(db_path).ok();
+}
+
+#[test]
+fn serve_js_learns_persists_and_never_replays_across_languages() {
+    // The fourth-language acceptance path: a JavaScript request learns,
+    // the record persists on disk (format v3, lang tag "javascript"),
+    // an identical JS request replays with zero search measurements, and
+    // the *same app in another language* — identical IR, identical
+    // characteristic vector, identical modeled baseline — still runs its
+    // own search instead of replaying the JS record.
+    let db_path = std::env::temp_dir()
+        .join(format!("envadapt_serve_js_db_{}.txt", std::process::id()));
+    let _ = std::fs::remove_file(&db_path);
+
+    let handle = server::spawn_tcp(
+        Config::fast_sim(),
+        ServeOptions { pool: 1, db_path: Some(db_path.clone()) },
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let js_code = workloads::get("hetero", Lang::JavaScript).unwrap().code;
+    let mut c = Client::connect(handle.addr());
+
+    // 1) first JS request: a real search that learns
+    let r1 = c.roundtrip(&proto::offload_request(1, "hetero", Lang::JavaScript, js_code));
+    assert!(r1.ok, "{:?}", r1.error);
+    assert!(i64_field(&r1, "measurements") > 0, "first JS request must search");
+    assert_eq!(
+        r1.report().and_then(|rep| rep.get("lang")).and_then(|v| v.as_str()),
+        Some("javascript")
+    );
+    let gene_js = r1.report().and_then(|rep| rep.get("gene")).cloned().unwrap();
+
+    // 2) identical JS request: zero-measurement replay
+    let r2 = c.roundtrip(&proto::offload_request(2, "hetero", Lang::JavaScript, js_code));
+    assert!(r2.ok, "{:?}", r2.error);
+    assert_eq!(i64_field(&r2, "measurements"), 0, "JS repeat must replay");
+    assert_eq!(i64_field(&r2, "measure_launches"), 0);
+    assert!(r2.report().and_then(|rep| rep.get("pattern_reuse")).is_some());
+    assert_eq!(r2.report().and_then(|rep| rep.get("gene")).cloned(), Some(gene_js.clone()));
+
+    // 3) the identical program in a different language must NOT replay
+    // from the JS record — learned keys are per-language
+    let py_code = workloads::get("hetero", Lang::Python).unwrap().code;
+    let r3 = c.roundtrip(&proto::offload_request(3, "hetero", Lang::Python, py_code));
+    assert!(r3.ok, "{:?}", r3.error);
+    assert!(
+        r3.report().and_then(|rep| rep.get("pattern_reuse")).is_none(),
+        "a Python twin must not replay the JavaScript record: {}",
+        r3.body.to_string()
+    );
+    assert!(i64_field(&r3, "measurements") > 0, "the Python twin runs its own search");
+    // the independent search still finds the same plan — that is the
+    // language-independence claim, verified rather than assumed
+    assert_eq!(r3.report().and_then(|rep| rep.get("gene")).cloned(), Some(gene_js.clone()));
+
+    drop(c);
+    handle.shutdown().unwrap();
+
+    // 4) the DB persisted as format v3 with the JavaScript lang tag
+    let text = std::fs::read_to_string(&db_path).unwrap();
+    assert!(text.starts_with("# envadapt pattern DB v3"), "{text}");
+    assert!(text.contains("|javascript|"), "JS lang tag must persist:\n{text}");
+
+    // 5) a restarted service replays the JS record from disk
+    let handle = server::spawn_tcp(
+        Config::fast_sim(),
+        ServeOptions { pool: 1, db_path: Some(db_path.clone()) },
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let mut c = Client::connect(handle.addr());
+    let r4 = c.roundtrip(&proto::offload_request(4, "hetero", Lang::JavaScript, js_code));
+    assert!(r4.ok, "{:?}", r4.error);
+    assert_eq!(i64_field(&r4, "measurements"), 0, "restarted service must replay JS");
+    assert!(r4.report().and_then(|rep| rep.get("pattern_reuse")).is_some());
+    assert_eq!(r4.report().and_then(|rep| rep.get("gene")).cloned(), Some(gene_js));
     drop(c);
     handle.shutdown().unwrap();
     std::fs::remove_file(db_path).ok();
