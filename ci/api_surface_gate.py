@@ -1,0 +1,106 @@
+#!/usr/bin/env python3
+"""Exported-API surface gate for the versioned offload API.
+
+Snapshots every `pub` item declaration of `rust/src/api.rs` (and any
+`rust/src/api/` submodules) and compares it against the committed seed
+`ci/api_surface_seed.txt`. The api module is the crate's documented
+embedding surface and the source of the wire protocol's canonical
+encoding, so any change to it — adding, removing or re-signaturing a
+public item — must be deliberate: update the seed in the same PR (and
+bump `SCHEMA_VERSION` / extend docs/PROTOCOL.md when the wire encoding
+is affected).
+
+Usage:
+    api_surface_gate.py CRATE_DIR SEED_FILE           # compare (CI)
+    api_surface_gate.py CRATE_DIR SEED_FILE --update  # rewrite the seed
+
+CRATE_DIR is the rust crate root (the directory holding src/api.rs).
+"""
+
+import pathlib
+import re
+import sys
+
+# One normalized line per exported item. Multi-line signatures are folded
+# to the declaration head — enough to catch additions, removals and
+# renames without re-implementing a Rust parser.
+PUB_ITEM = re.compile(
+    r"^\s*pub\s+(?:(?:unsafe|async|extern\s+\"[^\"]*\")\s+)*"
+    r"(fn|struct|enum|const|static|trait|type|mod|use)\s+(.+)$"
+)
+
+
+def surface_of(path: pathlib.Path) -> list[str]:
+    items = []
+    for raw in path.read_text(encoding="utf-8").splitlines():
+        m = PUB_ITEM.match(raw)
+        if not m:
+            continue
+        kind, rest = m.group(1), m.group(2)
+        # fold the declaration to its head: stop at the body/terminator
+        rest = re.split(r"[{;=]", rest, maxsplit=1)[0]
+        rest = re.sub(r"\s+", " ", rest).strip().rstrip(",(")
+        items.append(f"pub {kind} {rest}")
+    return items
+
+
+def collect(crate_dir: pathlib.Path) -> list[str]:
+    files = []
+    single = crate_dir / "src" / "api.rs"
+    if single.exists():
+        files.append(single)
+    subdir = crate_dir / "src" / "api"
+    if subdir.is_dir():
+        files.extend(sorted(subdir.rglob("*.rs")))
+    if not files:
+        raise SystemExit(f"no api module found under {crate_dir}/src")
+    out = []
+    for f in files:
+        rel = f.relative_to(crate_dir)
+        for item in surface_of(f):
+            out.append(f"{rel}: {item}")
+    return sorted(out)
+
+
+def main() -> None:
+    args = [a for a in sys.argv[1:] if a != "--update"]
+    update = "--update" in sys.argv[1:]
+    if len(args) != 2:
+        raise SystemExit(__doc__)
+    crate_dir, seed_path = pathlib.Path(args[0]), pathlib.Path(args[1])
+    current = collect(crate_dir)
+
+    if update:
+        header = (
+            "# Exported surface of the versioned offload API (rust/src/api.rs),\n"
+            "# snapshotted by ci/api_surface_gate.py. CI fails when the live\n"
+            "# surface differs — regenerate deliberately with:\n"
+            "#   python3 ci/api_surface_gate.py rust ci/api_surface_seed.txt --update\n"
+        )
+        seed_path.write_text(header + "\n".join(current) + "\n", encoding="utf-8")
+        print(f"api-surface gate: seed updated ({len(current)} items)")
+        return
+
+    seed = [
+        line
+        for line in seed_path.read_text(encoding="utf-8").splitlines()
+        if line.strip() and not line.lstrip().startswith("#")
+    ]
+    added = sorted(set(current) - set(seed))
+    removed = sorted(set(seed) - set(current))
+    print(f"api-surface gate: {len(current)} exported items (seed {len(seed)})")
+    if added or removed:
+        for line in added:
+            print(f"  + {line}")
+        for line in removed:
+            print(f"  - {line}")
+        raise SystemExit(
+            "the exported envadapt::api surface changed — if intentional, "
+            "regenerate the seed (see ci/api_surface_gate.py --update) and "
+            "review docs/PROTOCOL.md + SCHEMA_VERSION in the same PR"
+        )
+    print("api-surface gate OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,13 +1,15 @@
 //! Batch request serving: §4.2's "アプリケーションの利用依頼があると" loop —
-//! offload requests arrive in bulk and are served by a pool of coordinator
-//! workers, each owning its device and executable cache.
+//! offload requests arrive in bulk and are served by a pool of session
+//! workers, each owning its coordinators and device caches, all sharing
+//! one measurement cache and one learning pattern DB through
+//! [`envadapt::api::OffloadSession`].
 //!
 //! ```bash
 //! cargo run --release --example batch_offload [workers]
 //! ```
 
+use envadapt::api::{OffloadRequest, OffloadSession};
 use envadapt::config::Config;
-use envadapt::coordinator::{offload_batch, BatchRequest};
 use envadapt::ir::Lang;
 use envadapt::workloads;
 
@@ -15,16 +17,17 @@ fn main() -> anyhow::Result<()> {
     let workers: usize =
         std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
 
-    // every workload in every language = 32 requests
-    let requests: Vec<BatchRequest> = workloads::APPS
+    // every workload in every language = 32 requests — the same typed
+    // request the CLI and the serve daemon construct
+    let requests: Vec<OffloadRequest> = workloads::APPS
         .iter()
-        .flat_map(|app| Lang::all().map(move |l| BatchRequest::workload(app, l).unwrap()))
-        .collect();
+        .flat_map(|app| Lang::all().map(move |l| OffloadRequest::workload(app, l).build()))
+        .collect::<Result<_, _>>()?;
 
     println!("serving {} offload requests on {workers} workers…\n", requests.len());
     let t0 = std::time::Instant::now();
     let cfg = Config::fast_sim(); // per-worker simulated devices (deterministic)
-    let results = offload_batch(&requests, workers, &cfg);
+    let results = OffloadSession::new(cfg.clone()).offload_batch(&requests, workers);
     let wall = t0.elapsed().as_secs_f64();
 
     let mut ok = 0;
@@ -48,7 +51,7 @@ fn main() -> anyhow::Result<()> {
 
     // compare against a single worker for the throughput table
     let t1 = std::time::Instant::now();
-    let _ = offload_batch(&requests, 1, &cfg);
+    let _ = OffloadSession::new(cfg).offload_batch(&requests, 1);
     let wall1 = t1.elapsed().as_secs_f64();
     println!(
         "1-worker wall {:.2}s → {workers}-worker speedup {:.2}x (host has {} core(s); scaling requires > 1)",

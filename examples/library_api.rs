@@ -1,0 +1,78 @@
+//! Embedding envadapt as a library through the versioned offload API —
+//! no CLI, no wire protocol: just [`envadapt::api`].
+//!
+//! A long-lived [`OffloadSession`] owns the shared measurement cache,
+//! the learning pattern DB and the coordinator pool; every request is a
+//! typed [`OffloadRequest`] (the same type the CLI and the serve daemon
+//! construct), and every report renders to the one canonical,
+//! `schema_version`-tagged JSON.
+//!
+//! ```bash
+//! cargo run --release --example library_api
+//! ```
+
+use envadapt::api::{OffloadRequest, OffloadSession, SCHEMA_VERSION};
+use envadapt::config::Config;
+use envadapt::device::TargetKind;
+use envadapt::ir::Lang;
+
+const PROGRAM: &str = r#"
+void main() {
+    int n = 4096;
+    double prices[n]; double out[n];
+    seed_fill(prices, 11);
+    for (int i = 0; i < n; i++) {
+        out[i] = prices[i] * 1.07 + 2.5;
+    }
+    double acc = 0.0;
+    for (int i = 0; i < n; i++) { acc += out[i]; }
+    printf("%f\n", acc);
+}
+"#;
+
+fn main() -> anyhow::Result<()> {
+    // one session for the life of the embedding application
+    let mut session = OffloadSession::new(Config::fast_sim());
+
+    // 1) offload inline source text (any supported language)
+    let req = OffloadRequest::source(PROGRAM, Lang::C).name("pricing").build()?;
+    let first = session.offload(&req)?;
+    println!("first request : {}", first.summary());
+    println!("  learned pattern: {}", first.learned_pattern);
+
+    // 2) an identical repeat request replays the learned pattern with
+    //    zero new search measurements — the session remembers
+    let second = session.offload(&req)?;
+    println!("second request: {}", second.summary());
+    println!(
+        "  replayed: {} ({} search measurements)",
+        second.reused_pattern.as_deref().unwrap_or("-"),
+        second.total_measurements
+    );
+    anyhow::ensure!(second.total_measurements == 0, "repeat must replay");
+
+    // 3) the same request type drives mixed-destination placement and
+    //    every other knob — all fields defaulted, all validated
+    let hetero = OffloadRequest::workload("hetero", Lang::Python)
+        .devices(vec![TargetKind::Gpu, TargetKind::ManyCore])
+        .power_weight(0.1)
+        .build()?;
+    let placed = session.offload(&hetero)?;
+    println!("mixed request : {}", placed.summary());
+
+    // 4) adaptive target selection is a session method too
+    let adaptive = session
+        .offload_adaptive(&OffloadRequest::workload("blackscholes", Lang::Java).build()?,
+            &TargetKind::all())?;
+    println!("adaptive      : best target = {}", adaptive.chosen);
+
+    // 5) one canonical, versioned JSON encoding for every consumer
+    let json = first.to_json();
+    anyhow::ensure!(
+        json.get("schema_version").and_then(|v| v.as_i64()) == Some(SCHEMA_VERSION),
+        "report JSON must be versioned"
+    );
+    println!("\ncanonical report JSON (schema_version {SCHEMA_VERSION}):");
+    println!("{}", json.to_pretty());
+    Ok(())
+}

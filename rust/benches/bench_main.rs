@@ -14,7 +14,8 @@
 
 use envadapt::analysis;
 use envadapt::config::Config;
-use envadapt::coordinator::{markdown_summary, offload_workload, Coordinator};
+use envadapt::api::offload_workload;
+use envadapt::coordinator::{markdown_summary, Coordinator};
 use envadapt::device::{CostModel, GpuDevice};
 use envadapt::frontend::parse;
 use envadapt::ga::{self, GaConfig};
@@ -196,13 +197,15 @@ fn measurement_throughput() {
 /// offloaded to GPU, many-core CPU and FPGA models; the coordinator picks
 /// whatever the deployment environment does best (§3.1's three targets).
 fn e9_adaptive_targets() {
-    use envadapt::coordinator::offload_adaptive;
+    use envadapt::api::{OffloadRequest, OffloadSession};
     use envadapt::device::TargetKind;
     println!("## E9 — environment-adaptive target selection (GPU / many-core / FPGA)\n");
     let mut rows = Vec::new();
     for app in workloads::APPS {
-        let s = workloads::get(app, Lang::C).unwrap();
-        let r = offload_adaptive(s.code, Lang::C, app, &cfg(), &TargetKind::all()).unwrap();
+        let req = OffloadRequest::workload(app, Lang::C).build().unwrap();
+        let r = OffloadSession::new(cfg())
+            .offload_adaptive(&req, &TargetKind::all())
+            .unwrap();
         let get = |t: TargetKind| {
             r.per_target.iter().find(|(x, _)| *x == t).map(|(_, rep)| rep.final_s).unwrap()
         };

@@ -1,0 +1,1101 @@
+//! The one versioned offload API: every front end speaks this module.
+//!
+//! The paper's claim is a *common* offload method — one entry point that
+//! accepts code in any supported language and adapts it to whatever
+//! devices the environment offers. This module is that entry point for
+//! the whole crate:
+//!
+//! * [`OffloadRequest`] — one typed, fully-defaulted description of one
+//!   offload job (source text or a named built-in workload, the language,
+//!   the destination set, and the search / power / function-block knobs).
+//!   Built with [`OffloadRequest::source`] / [`OffloadRequest::workload`];
+//!   round-trips through a canonical JSON encoding
+//!   ([`OffloadRequest::to_json`] / [`OffloadRequest::from_json`]) tagged
+//!   with [`SCHEMA_VERSION`].
+//! * [`OffloadSession`] — the long-lived execution context: it owns the
+//!   shared measurement cache, the learning pattern DB, and a pool of
+//!   lazily-built per-destination-set coordinators, so repeat requests
+//!   replay learned patterns and warm caches. One-shot use is just a
+//!   session of one request.
+//! * [`OffloadResponse`] — the versioned response envelope every consumer
+//!   emits and parses (`schema_version`, `warnings`, the canonical
+//!   [`OffloadReport`] JSON).
+//!
+//! The CLI (`envadapt offload`), the serve daemon (`envadapt serve`, via
+//! [`crate::proto`]'s line-JSON codec), the batch front end
+//! ([`OffloadSession::offload_batch`]) and the adaptive target search
+//! ([`OffloadSession::offload_adaptive`]) all construct the same
+//! [`OffloadRequest`] and produce the same report JSON — there is exactly
+//! one spelling of every knob.
+//!
+//! # Embedding example
+//!
+//! ```no_run
+//! use envadapt::api::{OffloadRequest, OffloadSession};
+//! use envadapt::config::Config;
+//! use envadapt::ir::Lang;
+//!
+//! let mut session = OffloadSession::new(Config::fast_sim());
+//! let req = OffloadRequest::workload("mm", Lang::C).build().unwrap();
+//! let report = session.offload(&req).unwrap();
+//! println!("{}", report.to_json().to_string()); // canonical, versioned
+//! ```
+
+use crate::config::Config;
+use crate::coordinator::{Coordinator, OffloadReport};
+use crate::device::TargetKind;
+use crate::engine::{self, SharedCache};
+use crate::ir::Lang;
+use crate::patterndb::{self, PatternDb, SharedPatternDb};
+use crate::placement::DeviceSet;
+use crate::util::json::Json;
+use crate::workloads;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::collections::HashMap;
+
+/// Version of the canonical request/response/report JSON encoding. Wire
+/// protocol v2 (`docs/PROTOCOL.md`); v1 requests are still accepted via
+/// the compat decoder in [`OffloadRequest::from_wire`].
+pub const SCHEMA_VERSION: i64 = 2;
+
+// ---------------------------------------------------------------------------
+// request
+// ---------------------------------------------------------------------------
+
+/// What program an [`OffloadRequest`] carries: inline source text, or the
+/// name of a built-in workload (resolved against [`crate::workloads`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ProgramSource {
+    /// full source text in the request's language
+    Code(String),
+    /// a built-in workload name (`"mm"`, `"fourier"`, ...)
+    Workload(String),
+}
+
+/// One offload job, fully described. Every field beyond the program and
+/// its language is defaulted: `None` / empty means "use the session's
+/// configured default" ([`Config`]), so the same request type serves the
+/// CLI, the serve daemon, batch workers and library embedders without a
+/// per-consumer knob copy.
+///
+/// Construct with [`OffloadRequest::source`] or
+/// [`OffloadRequest::workload`] (the builder validates every field), and
+/// encode/decode with [`OffloadRequest::to_json`] /
+/// [`OffloadRequest::from_json`] — the canonical `schema_version`-tagged
+/// wire form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OffloadRequest {
+    /// application name (reports/logs only)
+    pub name: String,
+    pub lang: Lang,
+    pub source: ProgramSource,
+    /// heterogeneous destination set the search places loops onto;
+    /// empty = the session's default devices
+    pub devices: Vec<TargetKind>,
+    /// energy weight of the search fitness in `[0, 1]` (0 = pure time)
+    pub power_weight: Option<f64>,
+    /// GA population override
+    pub population: Option<usize>,
+    /// GA generation-count override
+    pub generations: Option<usize>,
+    /// enable/disable the function-block offload trial
+    pub funcblock: Option<bool>,
+    /// cap on function-block combination trials
+    pub funcblock_budget: Option<usize>,
+    /// disable transfer hoisting (ablation)
+    pub naive_transfers: Option<bool>,
+}
+
+impl OffloadRequest {
+    /// Build a request for inline source text.
+    pub fn source(code: impl Into<String>, lang: Lang) -> OffloadRequestBuilder {
+        OffloadRequestBuilder {
+            req: OffloadRequest {
+                name: "request".to_string(),
+                lang,
+                source: ProgramSource::Code(code.into()),
+                devices: Vec::new(),
+                power_weight: None,
+                population: None,
+                generations: None,
+                funcblock: None,
+                funcblock_budget: None,
+                naive_transfers: None,
+            },
+        }
+    }
+
+    /// Build a request for a built-in workload (name is validated at
+    /// `build()` time).
+    pub fn workload(app: &str, lang: Lang) -> OffloadRequestBuilder {
+        let mut b = OffloadRequest::source(String::new(), lang);
+        b.req.source = ProgramSource::Workload(app.to_string());
+        b.req.name = app.to_string();
+        b
+    }
+
+    /// The program text this request offloads (workload names resolve
+    /// against [`crate::workloads`]).
+    pub fn resolve_code(&self) -> Result<String> {
+        match &self.source {
+            ProgramSource::Code(c) => Ok(c.clone()),
+            ProgramSource::Workload(app) => Ok(workloads::get(app, self.lang)
+                .ok_or_else(|| {
+                    anyhow!("no built-in workload named {app:?} for language {}", self.lang)
+                })?
+                .code
+                .to_string()),
+        }
+    }
+
+    /// Canonical JSON encoding (wire v2 request body): always carries
+    /// `schema_version`; defaulted fields are omitted, so
+    /// `from_json(to_json(r)) == r` exactly.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("schema_version", SCHEMA_VERSION)
+            .set("name", self.name.as_str())
+            .set("lang", self.lang.name());
+        match &self.source {
+            ProgramSource::Code(c) => j = j.set("code", c.as_str()),
+            ProgramSource::Workload(app) => j = j.set("workload", app.as_str()),
+        }
+        if !self.devices.is_empty() {
+            j = j.set(
+                "devices",
+                Json::Arr(
+                    self.devices.iter().map(|d| Json::Str(d.name().to_string())).collect(),
+                ),
+            );
+        }
+        if let Some(w) = self.power_weight {
+            j = j.set("power_weight", w);
+        }
+        if let Some(p) = self.population {
+            j = j.set("population", p);
+        }
+        if let Some(g) = self.generations {
+            j = j.set("generations", g);
+        }
+        if let Some(f) = self.funcblock {
+            j = j.set("funcblock", f);
+        }
+        if let Some(b) = self.funcblock_budget {
+            j = j.set("funcblock_budget", b);
+        }
+        if let Some(n) = self.naive_transfers {
+            j = j.set("naive_transfers", n);
+        }
+        j
+    }
+
+    /// Decode the canonical (v2) encoding. Returns the request plus a
+    /// warning per unknown field — unknown fields are reported, never
+    /// silently dropped. Transport-envelope keys (`op`, `id`,
+    /// `schema_version`) are ignored so whole wire lines parse directly.
+    pub fn from_json(j: &Json) -> Result<(OffloadRequest, Vec<String>)> {
+        const KNOWN: &[&str] = &[
+            "op",
+            "id",
+            "schema_version",
+            "name",
+            "lang",
+            "code",
+            "workload",
+            "target", // v1 spelling, honored so an upgraded client never lands elsewhere
+            "devices",
+            "power_weight",
+            "population",
+            "generations",
+            "funcblock",
+            "funcblock_budget",
+            "naive_transfers",
+        ];
+        let warnings = unknown_field_warnings(j, KNOWN);
+        let lang = parse_lang(j)?;
+        let source = match (j.get("code"), j.get("workload")) {
+            (Some(_), Some(_)) => bail!("offload takes `code` or `workload`, not both"),
+            (Some(c), None) => ProgramSource::Code(
+                c.as_str().ok_or_else(|| anyhow!("code must be a string"))?.to_string(),
+            ),
+            (None, Some(w)) => ProgramSource::Workload(
+                w.as_str().ok_or_else(|| anyhow!("workload must be a string"))?.to_string(),
+            ),
+            (None, None) => bail!("offload needs a `code` or `workload` field"),
+        };
+        let mut b = OffloadRequest::source(String::new(), lang);
+        b.req.source = source;
+        b.req.name = parse_name(j, &b.req.source);
+        if let Some(v) = j.get("devices") {
+            let devices = parse_devices(v)?;
+            // an omitted field means "session default"; an *explicit*
+            // empty list is a client bug — reject it like v1 does
+            ensure!(!devices.is_empty(), "devices must name at least one destination");
+            b = b.devices(devices);
+        } else if let Some(v) = j.get("target") {
+            // the v1 spelling, still honored in v2 so an upgraded client
+            // that kept its `target` field never lands on the wrong set
+            let t = v.as_str().ok_or_else(|| anyhow!("target must be a string"))?;
+            b = b.devices(vec![
+                TargetKind::from_name(t).ok_or_else(|| anyhow!("unknown target {t:?}"))?,
+            ]);
+        }
+        if let Some(v) = j.get("power_weight") {
+            b = b.power_weight(
+                v.as_f64().ok_or_else(|| anyhow!("power_weight must be a number"))?,
+            );
+        }
+        if let Some(v) = j.get("population") {
+            b = b.population(parse_usize(v, "population")?);
+        }
+        if let Some(v) = j.get("generations") {
+            b = b.generations(parse_usize(v, "generations")?);
+        }
+        if let Some(v) = j.get("funcblock") {
+            b = b.funcblock(v.as_bool().ok_or_else(|| anyhow!("funcblock must be a boolean"))?);
+        }
+        if let Some(v) = j.get("funcblock_budget") {
+            b = b.funcblock_budget(parse_usize(v, "funcblock_budget")?);
+        }
+        if let Some(v) = j.get("naive_transfers") {
+            b = b.naive_transfers(
+                v.as_bool().ok_or_else(|| anyhow!("naive_transfers must be a boolean"))?,
+            );
+        }
+        Ok((b.build()?, warnings))
+    }
+
+    /// Decode a wire v1 request body (the pre-`schema_version` protocol:
+    /// `target` as a single name, `devices` as a comma-separated string,
+    /// no workload/search overrides). A v1 `target` becomes the
+    /// one-element device set; an explicit v1 `devices` set wins over
+    /// `target`, exactly as the v1 daemon resolved them.
+    pub fn from_json_v1(j: &Json) -> Result<(OffloadRequest, Vec<String>)> {
+        const KNOWN: &[&str] = &[
+            "op",
+            "id",
+            "schema_version", // an explicit `"schema_version": 1`
+            "name",
+            "lang",
+            "code",
+            "target",
+            "devices",
+            "power_weight",
+        ];
+        let warnings = unknown_field_warnings(j, KNOWN);
+        let lang = parse_lang(j)?;
+        let code = j
+            .get("code")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("offload needs a `code` field"))?
+            .to_string();
+        let mut b = OffloadRequest::source(code, lang);
+        b.req.name = parse_name(j, &b.req.source);
+        // the v1 parser ignored a present-but-non-string `target` (e.g.
+        // `"target": null` from serializers of unset optionals) — keep
+        // that leniency so v1 clients really do work unmodified; only an
+        // unknown target *name* is an error, as before
+        let target = match j.get("target") {
+            Some(Json::Str(t)) => Some(
+                TargetKind::from_name(t).ok_or_else(|| anyhow!("unknown target {t:?}"))?,
+            ),
+            _ => None,
+        };
+        match j.get("devices") {
+            Some(v) => {
+                let s = v.as_str().ok_or_else(|| {
+                    anyhow!("devices must be a string like \"gpu,many-core\"")
+                })?;
+                b = b.devices(
+                    DeviceSet::parse(s).map_err(|e| anyhow!("bad devices: {e}"))?
+                        .devices()
+                        .to_vec(),
+                );
+            }
+            None => {
+                if let Some(t) = target {
+                    b = b.devices(vec![t]);
+                }
+            }
+        }
+        if let Some(v) = j.get("power_weight") {
+            b = b.power_weight(
+                v.as_f64().ok_or_else(|| anyhow!("power_weight must be a number"))?,
+            );
+        }
+        Ok((b.build()?, warnings))
+    }
+
+    /// Decode a wire request body of either protocol version: a
+    /// `schema_version` field selects the canonical decoder (v2), its
+    /// absence the v1 compat decoder. Unknown versions are rejected with
+    /// a message naming what this build speaks.
+    pub fn from_wire(j: &Json) -> Result<(OffloadRequest, Vec<String>)> {
+        match j.get("schema_version") {
+            None => OffloadRequest::from_json_v1(j),
+            Some(v) => match v.as_i64() {
+                Some(1) => OffloadRequest::from_json_v1(j),
+                Some(n) if n == SCHEMA_VERSION => OffloadRequest::from_json(j),
+                Some(n) => bail!(
+                    "unsupported schema_version {n} (this server speaks v{SCHEMA_VERSION} \
+                     and accepts v1)"
+                ),
+                None => bail!("schema_version must be an integer"),
+            },
+        }
+    }
+}
+
+fn parse_lang(j: &Json) -> Result<Lang> {
+    let name = j
+        .get("lang")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("offload needs a `lang` field"))?;
+    Lang::from_name(name).ok_or_else(|| anyhow!("unknown language {name:?}"))
+}
+
+fn parse_name(j: &Json, source: &ProgramSource) -> String {
+    match j.get("name").and_then(|v| v.as_str()) {
+        Some(n) => n.to_string(),
+        None => match source {
+            ProgramSource::Workload(app) => app.clone(),
+            ProgramSource::Code(_) => "request".to_string(),
+        },
+    }
+}
+
+fn parse_devices(v: &Json) -> Result<Vec<TargetKind>> {
+    // canonical form: an array of destination names; a comma-separated
+    // string is accepted for hand-written requests
+    match v {
+        Json::Arr(items) => {
+            let mut out = Vec::new();
+            for it in items {
+                let name =
+                    it.as_str().ok_or_else(|| anyhow!("devices entries must be strings"))?;
+                out.push(
+                    TargetKind::from_name(name)
+                        .ok_or_else(|| anyhow!("unknown destination {name:?}"))?,
+                );
+            }
+            Ok(out)
+        }
+        Json::Str(s) => {
+            Ok(DeviceSet::parse(s).map_err(|e| anyhow!("bad devices: {e}"))?.devices().to_vec())
+        }
+        _ => bail!("devices must be an array of names or a comma-separated string"),
+    }
+}
+
+fn parse_usize(v: &Json, field: &str) -> Result<usize> {
+    let n = v.as_i64().ok_or_else(|| anyhow!("{field} must be an integer"))?;
+    ensure!(n >= 1, "{field} must be at least 1, got {n}");
+    Ok(n as usize)
+}
+
+/// One warning per object key not in `known` — shared by every request
+/// decoder (including `proto`'s report-less ops) so the wording and the
+/// envelope-key set can never drift between paths.
+pub(crate) fn unknown_field_warnings(j: &Json, known: &[&str]) -> Vec<String> {
+    match j {
+        Json::Obj(kvs) => kvs
+            .iter()
+            .filter(|(k, _)| !known.contains(&k.as_str()))
+            .map(|(k, _)| format!("unknown field {k:?} ignored"))
+            .collect(),
+        _ => Vec::new(),
+    }
+}
+
+/// Builder for [`OffloadRequest`] — chainable setters, validation in
+/// [`OffloadRequestBuilder::build`].
+#[derive(Debug, Clone)]
+pub struct OffloadRequestBuilder {
+    req: OffloadRequest,
+}
+
+impl OffloadRequestBuilder {
+    /// Application name used in reports and logs.
+    pub fn name(mut self, name: &str) -> Self {
+        self.req.name = name.to_string();
+        self
+    }
+
+    /// Heterogeneous destination set the search places loops onto
+    /// (empty = session default).
+    pub fn devices(mut self, devices: Vec<TargetKind>) -> Self {
+        self.req.devices = devices;
+        self
+    }
+
+    /// Energy weight of the search fitness (`[0, 1]`; 0 = pure time).
+    pub fn power_weight(mut self, w: f64) -> Self {
+        self.req.power_weight = Some(w);
+        self
+    }
+
+    /// GA population override.
+    pub fn population(mut self, p: usize) -> Self {
+        self.req.population = Some(p);
+        self
+    }
+
+    /// GA generation-count override.
+    pub fn generations(mut self, g: usize) -> Self {
+        self.req.generations = Some(g);
+        self
+    }
+
+    /// Enable/disable the function-block offload trial.
+    pub fn funcblock(mut self, enabled: bool) -> Self {
+        self.req.funcblock = Some(enabled);
+        self
+    }
+
+    /// Cap on function-block combination trials.
+    pub fn funcblock_budget(mut self, budget: usize) -> Self {
+        self.req.funcblock_budget = Some(budget);
+        self
+    }
+
+    /// Disable transfer hoisting (ablation).
+    pub fn naive_transfers(mut self, naive: bool) -> Self {
+        self.req.naive_transfers = Some(naive);
+        self
+    }
+
+    /// Validate every field and return the request.
+    pub fn build(self) -> Result<OffloadRequest> {
+        let r = self.req;
+        if let ProgramSource::Workload(app) = &r.source {
+            ensure!(
+                workloads::get(app, r.lang).is_some(),
+                "no built-in workload named {app:?} for language {}",
+                r.lang
+            );
+        }
+        if !r.devices.is_empty() {
+            // DeviceSet::new rejects duplicates; order is preserved
+            DeviceSet::new(r.devices.clone())?;
+        }
+        if let Some(w) = r.power_weight {
+            ensure!(
+                (0.0..=1.0).contains(&w),
+                "power_weight must be within [0, 1], got {w}"
+            );
+        }
+        if let Some(p) = r.population {
+            ensure!(p >= 1, "population must be at least 1");
+        }
+        if let Some(g) = r.generations {
+            ensure!(g >= 1, "generations must be at least 1");
+        }
+        if let Some(b) = r.funcblock_budget {
+            ensure!(b >= 1, "funcblock_budget must be at least 1");
+        }
+        Ok(r)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// effective configuration + worker-budget validation
+// ---------------------------------------------------------------------------
+
+/// The [`Config`] a coordinator actually runs with for one request: the
+/// session's base configuration with the request's overrides applied.
+/// This is the single place request knobs meet engine knobs — the CLI,
+/// the serve daemon and library embedders all resolve through it.
+pub fn effective_config(base: &Config, req: &OffloadRequest) -> Config {
+    let mut cfg = base.clone();
+    // spelling out the session's own set is a no-op, so an explicitly
+    // tuned base cost model keeps applying and the request shares the
+    // default variant's (warm) coordinator
+    if !req.devices.is_empty() && req.devices != base.effective_devices() {
+        cfg.devices = req.devices.clone();
+        cfg.target = req.devices[0];
+        cfg.cost = req.devices[0].cost_model();
+        cfg.use_pjrt = base.use_pjrt && req.devices.contains(&TargetKind::Gpu);
+    }
+    if let Some(w) = req.power_weight {
+        cfg.power_weight = w;
+    }
+    if let Some(p) = req.population {
+        cfg.ga.population = p;
+    }
+    if let Some(g) = req.generations {
+        cfg.ga.generations = g;
+    }
+    if let Some(f) = req.funcblock {
+        cfg.funcblock.enabled = f;
+    }
+    if let Some(b) = req.funcblock_budget {
+        cfg.funcblock.max_combination_trials = b;
+    }
+    if let Some(n) = req.naive_transfers {
+        cfg.naive_transfers = n;
+    }
+    cfg
+}
+
+/// Validate the two-level worker split before anything runs: `pool`
+/// request-serving coordinators each get `workers / pool` measurement
+/// workers, so a pool larger than the measurement-worker budget would
+/// degrade every coordinator to a starved single-worker search. The serve
+/// daemon used to divide silently; now an explicit oversubscribed pool is
+/// a request-build-time error.
+pub fn validate_worker_split(workers: usize, pool: usize) -> Result<()> {
+    ensure!(pool >= 1, "pool must be at least 1");
+    ensure!(workers >= 1, "workers must be at least 1");
+    ensure!(
+        pool <= workers,
+        "pool of {pool} coordinators exceeds the measurement-worker budget of {workers}: \
+         each coordinator would get {workers}/{pool} = 0 workers — raise --workers to at \
+         least {pool} or lower --pool to at most {workers}"
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// session
+// ---------------------------------------------------------------------------
+
+/// Coordinators a session keeps warm, keyed by the request variant
+/// (destination set + overrides). The key embeds client-controlled
+/// values, so the map is capped; coordinators are cheap to rebuild and
+/// the measurement cache / pattern DB are shared, so only warm
+/// per-coordinator state is dropped on eviction.
+const MAX_COORDS: usize = 16;
+
+/// A long-lived offload context: one shared measurement cache, one
+/// learning pattern DB, and lazily-built per-variant coordinators. Every
+/// entry path — CLI one-shot, serve worker, batch worker, adaptive
+/// search, library embedding — is an `OffloadSession` consuming
+/// [`OffloadRequest`]s.
+///
+/// Patterns learned by any request are replayed by every later matching
+/// request of the same session (and persist across sessions when
+/// `cfg.pattern_db_path` / `cfg.cache_path` are set).
+pub struct OffloadSession {
+    cfg: Config,
+    cache: SharedCache,
+    db: SharedPatternDb,
+    coords: HashMap<String, Coordinator>,
+}
+
+impl OffloadSession {
+    /// Session over fresh shared state derived from `cfg`
+    /// (`cfg.cache_path` / `cfg.pattern_db_path` select persistence).
+    pub fn new(cfg: Config) -> OffloadSession {
+        let cache = engine::cache_for(&cfg);
+        let db = patterndb::shared(PatternDb::open_or_builtin(cfg.pattern_db_path.as_deref()));
+        OffloadSession::with_shared(cfg, cache, db)
+    }
+
+    /// Session over an existing measurement cache and pattern DB — how
+    /// the serve daemon's workers and batch workers all learn into, and
+    /// replay from, one store.
+    pub fn with_shared(cfg: Config, cache: SharedCache, db: SharedPatternDb) -> OffloadSession {
+        OffloadSession { cfg, cache, db, coords: HashMap::new() }
+    }
+
+    /// The session's base configuration (request fields override it per
+    /// call via [`effective_config`]).
+    pub fn cfg(&self) -> &Config {
+        &self.cfg
+    }
+
+    /// Handle on the shared measurement cache (clone to share).
+    pub fn cache(&self) -> SharedCache {
+        self.cache.clone()
+    }
+
+    /// Handle on the (learning) pattern DB.
+    pub fn db(&self) -> SharedPatternDb {
+        self.db.clone()
+    }
+
+    /// The coordinator that serves `req`, built now if this variant has
+    /// not been seen yet (exposed so front ends can probe the device
+    /// backend before a long search).
+    pub fn coordinator_for(&mut self, req: &OffloadRequest) -> &mut Coordinator {
+        let cfg = effective_config(&self.cfg, req);
+        // keyed on *effective* values: a request that spells out the
+        // session default shares the default's (warm) coordinator
+        let key = format!(
+            "{}|{}|{}|{}|{}|{}|{}",
+            crate::placement::set_name(&cfg.effective_devices()),
+            cfg.power_weight,
+            cfg.ga.population,
+            cfg.ga.generations,
+            cfg.funcblock.enabled,
+            cfg.funcblock.max_combination_trials,
+            cfg.naive_transfers,
+        );
+        if self.coords.len() >= MAX_COORDS && !self.coords.contains_key(&key) {
+            self.coords.clear();
+        }
+        let cache = self.cache.clone();
+        let db = self.db.clone();
+        self.coords.entry(key).or_insert_with(|| Coordinator::with_shared(cfg, cache, db))
+    }
+
+    /// Whether `req` would measure through real PJRT artifacts (builds
+    /// the coordinator, so the probe is the backend that measures).
+    pub fn device_is_pjrt(&mut self, req: &OffloadRequest) -> bool {
+        self.coordinator_for(req).device_is_pjrt()
+    }
+
+    /// Offload one request: parse, consult the learned-pattern DB, search
+    /// (or replay), verify — the full coordinator flow, against this
+    /// session's shared state.
+    pub fn offload(&mut self, req: &OffloadRequest) -> Result<OffloadReport> {
+        let code = req.resolve_code()?;
+        let lang = req.lang;
+        let name = req.name.clone();
+        self.coordinator_for(req).offload_source(&code, lang, &name)
+    }
+
+    /// Serve a batch of requests over `pool` OS threads, each with its own
+    /// coordinators (devices are not `Send`), all sharing this session's
+    /// measurement cache and pattern DB. The measurement-worker budget is
+    /// split across the pool (`cfg.workers / pool`) so the two pool levels
+    /// don't multiply; `pool` is clamped to the batch size. Result order
+    /// matches request order.
+    pub fn offload_batch(
+        &self,
+        requests: &[OffloadRequest],
+        pool: usize,
+    ) -> Vec<Result<OffloadReport>> {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Mutex;
+        let pool = pool.clamp(1, requests.len().max(1));
+        let mut wcfg = self.cfg.clone();
+        wcfg.workers = (self.cfg.effective_workers() / pool).max(1);
+        let next = AtomicUsize::new(0);
+        let results: Mutex<Vec<Option<Result<OffloadReport>>>> =
+            Mutex::new((0..requests.len()).map(|_| None).collect());
+        let wcfg = &wcfg;
+        std::thread::scope(|scope| {
+            for _ in 0..pool {
+                let cache = self.cache.clone();
+                let db = self.db.clone();
+                let next = &next;
+                let results = &results;
+                scope.spawn(move || {
+                    let mut worker = OffloadSession::with_shared(wcfg.clone(), cache, db);
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= requests.len() {
+                            break;
+                        }
+                        let out = worker.offload(&requests[i]);
+                        results.lock().unwrap()[i] = Some(out);
+                    }
+                });
+            }
+        });
+        results
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|o| o.expect("worker filled slot"))
+            .collect()
+    }
+
+    /// Environment-adaptive target selection: convert and search the same
+    /// request once per destination in `targets` (each as a
+    /// single-destination set), then pick the fastest. All trials share
+    /// this session's measurement cache and pattern DB, so re-running a
+    /// target answers known patterns without a device.
+    pub fn offload_adaptive(
+        &mut self,
+        req: &OffloadRequest,
+        targets: &[TargetKind],
+    ) -> Result<AdaptiveReport> {
+        ensure!(!targets.is_empty(), "need at least one target");
+        let mut per_target = Vec::new();
+        for &t in targets {
+            let mut treq = req.clone();
+            treq.devices = vec![t];
+            per_target.push((t, self.offload(&treq)?));
+        }
+        let chosen = per_target
+            .iter()
+            .min_by(|a, b| a.1.final_s.partial_cmp(&b.1.final_s).unwrap())
+            .unwrap()
+            .0;
+        Ok(AdaptiveReport { per_target, chosen })
+    }
+}
+
+/// Result of trying every migration target the environment offers (the
+/// outer loop of the environment-adaptive concept: the same code is
+/// converted for whatever accelerator the deployment environment has, and
+/// the best-performing target is selected).
+#[derive(Debug)]
+pub struct AdaptiveReport {
+    pub per_target: Vec<(TargetKind, OffloadReport)>,
+    pub chosen: TargetKind,
+}
+
+impl AdaptiveReport {
+    pub fn chosen_report(&self) -> &OffloadReport {
+        &self.per_target.iter().find(|(t, _)| *t == self.chosen).unwrap().1
+    }
+}
+
+/// One-shot convenience: offload one built-in workload through a fresh
+/// session (the session-of-one case; tests and benches lean on it).
+pub fn offload_workload(app: &str, lang: Lang, cfg: Config) -> Result<OffloadReport> {
+    let req = OffloadRequest::workload(app, lang).build()?;
+    OffloadSession::new(cfg).offload(&req)
+}
+
+// ---------------------------------------------------------------------------
+// response
+// ---------------------------------------------------------------------------
+
+/// A parsed offload-service response: the versioned envelope every
+/// consumer reads. `body` keeps the full response object so callers can
+/// reach any field; the common ones are pre-extracted.
+#[derive(Debug, Clone)]
+pub struct OffloadResponse {
+    pub id: i64,
+    pub ok: bool,
+    /// encoding version the sender declared (1 when absent — the v1
+    /// protocol predates the field)
+    pub schema_version: i64,
+    pub error: Option<String>,
+    /// decoder warnings the server attached (unknown request fields, ...)
+    pub warnings: Vec<String>,
+    /// pool member that served an offload (diagnostics)
+    pub worker: Option<i64>,
+    /// the full response object (use `body.get(...)` for anything else)
+    pub body: Json,
+}
+
+impl OffloadResponse {
+    pub fn parse_line(line: &str) -> Result<OffloadResponse> {
+        let body = Json::parse(line.trim()).map_err(|e| anyhow!("bad response JSON: {e}"))?;
+        let id = body.get("id").and_then(|v| v.as_i64()).unwrap_or(0);
+        let ok = body.get("ok").and_then(|v| v.as_bool()).unwrap_or(false);
+        let schema_version =
+            body.get("schema_version").and_then(|v| v.as_i64()).unwrap_or(1);
+        let error = body.get("error").and_then(|v| v.as_str()).map(|s| s.to_string());
+        let warnings = body
+            .get("warnings")
+            .and_then(|v| v.items())
+            .map(|xs| {
+                xs.iter().filter_map(|x| x.as_str()).map(|s| s.to_string()).collect()
+            })
+            .unwrap_or_default();
+        let worker = body.get("worker").and_then(|v| v.as_i64());
+        Ok(OffloadResponse { id, ok, schema_version, error, warnings, worker, body })
+    }
+
+    /// The offload report object, when this is an offload response.
+    pub fn report(&self) -> Option<&Json> {
+        self.body.get("report")
+    }
+
+    // -- canonical encoders (every consumer emits through these) ----------
+
+    /// Successful offload response (the worker id tells clients which
+    /// pool member served them).
+    pub fn encode_offload(
+        id: i64,
+        report: &OffloadReport,
+        worker: usize,
+        warnings: &[String],
+    ) -> Json {
+        let j = Json::obj()
+            .set("id", id)
+            .set("ok", true)
+            .set("schema_version", SCHEMA_VERSION)
+            .set("op", "offload")
+            .set("worker", worker);
+        with_warnings(j, warnings).set("report", report.to_json())
+    }
+
+    /// Successful response for a report-less op (`ping`, `shutdown`).
+    pub fn encode_simple(id: i64, op: &str, warnings: &[String]) -> Json {
+        let j = Json::obj()
+            .set("id", id)
+            .set("ok", true)
+            .set("schema_version", SCHEMA_VERSION)
+            .set("op", op);
+        with_warnings(j, warnings)
+    }
+
+    /// Successful `stats` response.
+    pub fn encode_stats(id: i64, stats: Json, warnings: &[String]) -> Json {
+        let j = Json::obj()
+            .set("id", id)
+            .set("ok", true)
+            .set("schema_version", SCHEMA_VERSION)
+            .set("op", "stats");
+        with_warnings(j, warnings).set("stats", stats)
+    }
+
+    /// Failure response (never tears down a connection).
+    pub fn encode_error(id: i64, msg: &str) -> Json {
+        Json::obj()
+            .set("id", id)
+            .set("ok", false)
+            .set("schema_version", SCHEMA_VERSION)
+            .set("error", msg)
+    }
+}
+
+fn with_warnings(j: Json, warnings: &[String]) -> Json {
+    if warnings.is_empty() {
+        j
+    } else {
+        j.set(
+            "warnings",
+            Json::Arr(warnings.iter().map(|w| Json::Str(w.clone())).collect()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> Config {
+        Config::fast_sim()
+    }
+
+    #[test]
+    fn builder_defaults_and_validation() {
+        let r = OffloadRequest::workload("mm", Lang::C).build().unwrap();
+        assert_eq!(r.name, "mm");
+        assert!(r.devices.is_empty() && r.power_weight.is_none());
+        assert!(OffloadRequest::workload("nonesuch", Lang::C).build().is_err());
+        assert!(OffloadRequest::source("void main() { }", Lang::C)
+            .power_weight(1.5)
+            .build()
+            .is_err());
+        assert!(OffloadRequest::source("", Lang::C).population(0).build().is_err());
+        assert!(OffloadRequest::source("", Lang::C)
+            .devices(vec![TargetKind::Gpu, TargetKind::Gpu])
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn request_json_round_trips_exactly() {
+        let full = OffloadRequest::source("void main() { }", Lang::Java)
+            .name("app")
+            .devices(vec![TargetKind::Gpu, TargetKind::ManyCore])
+            .power_weight(0.25)
+            .population(6)
+            .generations(9)
+            .funcblock(false)
+            .funcblock_budget(32)
+            .naive_transfers(true)
+            .build()
+            .unwrap();
+        let (back, warnings) = OffloadRequest::from_json(&full.to_json()).unwrap();
+        assert_eq!(back, full);
+        assert!(warnings.is_empty());
+
+        // all-defaults round-trips too, through the workload spelling
+        let min = OffloadRequest::workload("hetero", Lang::JavaScript).build().unwrap();
+        let (back, warnings) = OffloadRequest::from_json(&min.to_json()).unwrap();
+        assert_eq!(back, min);
+        assert!(warnings.is_empty());
+    }
+
+    #[test]
+    fn unknown_fields_warn_instead_of_dropping_silently() {
+        let j = Json::parse(
+            r#"{"schema_version":2,"lang":"c","code":"void main() { }","powerweight":0.5}"#,
+        )
+        .unwrap();
+        let (_, warnings) = OffloadRequest::from_json(&j).unwrap();
+        assert_eq!(warnings.len(), 1, "{warnings:?}");
+        assert!(warnings[0].contains("powerweight"), "{warnings:?}");
+    }
+
+    #[test]
+    fn v1_and_v2_spellings_decode_identically() {
+        let v1 = Json::parse(
+            r#"{"op":"offload","id":1,"name":"bs","lang":"c","code":"void main() { }",
+                "devices":"gpu,many-core","power_weight":0.25}"#,
+        )
+        .unwrap();
+        let v2 = Json::parse(
+            r#"{"op":"offload","id":9,"schema_version":2,"name":"bs","lang":"c",
+                "code":"void main() { }","devices":["gpu","many-core"],"power_weight":0.25}"#,
+        )
+        .unwrap();
+        let (r1, w1) = OffloadRequest::from_wire(&v1).unwrap();
+        let (r2, w2) = OffloadRequest::from_wire(&v2).unwrap();
+        assert_eq!(r1, r2);
+        assert!(w1.is_empty() && w2.is_empty());
+
+        // v1 `target` becomes the one-element device set — in the v2
+        // decoder too, so an upgraded client that kept its `target`
+        // field never silently lands on the wrong destination
+        for line in [
+            r#"{"op":"offload","lang":"c","code":"void main() { }","target":"fpga"}"#,
+            r#"{"op":"offload","schema_version":2,"lang":"c","code":"void main() { }","target":"fpga"}"#,
+        ] {
+            let (rt, warnings) = OffloadRequest::from_wire(&Json::parse(line).unwrap()).unwrap();
+            assert_eq!(rt.devices, vec![TargetKind::Fpga], "{line}");
+            assert!(warnings.is_empty(), "{warnings:?}");
+        }
+        // an explicit `devices` wins over `target`; an explicitly empty
+        // v2 device list is a client bug, not "use the default"
+        let both = Json::parse(
+            r#"{"op":"offload","schema_version":2,"lang":"c","code":"",
+                "target":"fpga","devices":["gpu"]}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            OffloadRequest::from_wire(&both).unwrap().0.devices,
+            vec![TargetKind::Gpu]
+        );
+        let empty = Json::parse(
+            r#"{"op":"offload","schema_version":2,"lang":"c","code":"","devices":[]}"#,
+        )
+        .unwrap();
+        assert!(OffloadRequest::from_wire(&empty).is_err());
+
+        // v1 leniency: a present-but-non-string `target` (serializers
+        // emit null for unset optionals) is ignored, as the v1 daemon did
+        let v1null = Json::parse(
+            r#"{"op":"offload","lang":"c","code":"void main() { }","target":null}"#,
+        )
+        .unwrap();
+        let (rn, _) = OffloadRequest::from_wire(&v1null).unwrap();
+        assert!(rn.devices.is_empty(), "null target must fall back to the default");
+
+        // future versions are rejected with a clear message
+        let v9 = Json::parse(r#"{"op":"offload","schema_version":9,"lang":"c","code":""}"#)
+            .unwrap();
+        let err = OffloadRequest::from_wire(&v9).unwrap_err().to_string();
+        assert!(err.contains("unsupported schema_version 9"), "{err}");
+    }
+
+    #[test]
+    fn effective_config_applies_overrides() {
+        let base = fast_cfg();
+        let req = OffloadRequest::source("", Lang::C)
+            .devices(vec![TargetKind::ManyCore, TargetKind::Fpga])
+            .power_weight(0.5)
+            .population(3)
+            .generations(4)
+            .funcblock(false)
+            .funcblock_budget(7)
+            .naive_transfers(true)
+            .build()
+            .unwrap();
+        let cfg = effective_config(&base, &req);
+        assert_eq!(cfg.target, TargetKind::ManyCore);
+        assert_eq!(cfg.devices, vec![TargetKind::ManyCore, TargetKind::Fpga]);
+        assert!(!cfg.use_pjrt, "no GPU in the set");
+        assert_eq!(cfg.power_weight, 0.5);
+        assert_eq!(cfg.ga.population, 3);
+        assert_eq!(cfg.ga.generations, 4);
+        assert!(!cfg.funcblock.enabled);
+        assert_eq!(cfg.funcblock.max_combination_trials, 7);
+        assert!(cfg.naive_transfers);
+
+        // a default request leaves the base configuration untouched
+        let plain = OffloadRequest::source("", Lang::C).build().unwrap();
+        let cfg2 = effective_config(&base, &plain);
+        assert_eq!(cfg2.ga.population, base.ga.population);
+        assert_eq!(cfg2.effective_devices(), base.effective_devices());
+    }
+
+    #[test]
+    fn worker_split_validation() {
+        assert!(validate_worker_split(8, 4).is_ok());
+        assert!(validate_worker_split(4, 4).is_ok());
+        assert!(validate_worker_split(1, 1).is_ok());
+        let err = validate_worker_split(2, 4).unwrap_err().to_string();
+        assert!(err.contains("exceeds the measurement-worker budget"), "{err}");
+        assert!(validate_worker_split(0, 1).is_err());
+        assert!(validate_worker_split(1, 0).is_err());
+    }
+
+    #[test]
+    fn session_offloads_learns_and_replays() {
+        let mut s = OffloadSession::new(fast_cfg());
+        let req = OffloadRequest::workload("mm", Lang::C).build().unwrap();
+        let r1 = s.offload(&req).unwrap();
+        assert!(r1.reused_pattern.is_none() && r1.learned_pattern);
+        assert!(r1.total_measurements > 0);
+        let r2 = s.offload(&req).unwrap();
+        assert!(r2.reused_pattern.is_some(), "repeat request must replay");
+        assert_eq!(r2.total_measurements, 0);
+        assert_eq!(r2.best_gene, r1.best_gene);
+    }
+
+    #[test]
+    fn session_batch_matches_sequential() {
+        let reqs: Vec<OffloadRequest> = ["smallloops", "mixed", "fourier"]
+            .iter()
+            .flat_map(|app| {
+                Lang::all().map(|l| OffloadRequest::workload(app, l).build().unwrap())
+            })
+            .collect();
+        let seq = OffloadSession::new(fast_cfg()).offload_batch(&reqs, 1);
+        let par = OffloadSession::new(fast_cfg()).offload_batch(&reqs, 4);
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(a.app, b.app);
+            assert_eq!(a.best_gene, b.best_gene, "{}", a.app);
+            assert!((a.final_s - b.final_s).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn session_adaptive_picks_best_target() {
+        let mut s = OffloadSession::new(fast_cfg());
+        let req = OffloadRequest::workload("blackscholes", Lang::C).build().unwrap();
+        let r = s.offload_adaptive(&req, &TargetKind::all()).unwrap();
+        assert_eq!(r.per_target.len(), 3);
+        let chosen = r.chosen_report().final_s;
+        for (t, rep) in &r.per_target {
+            assert!(rep.final_s >= chosen, "{t} beats the chosen target");
+        }
+        let get = |t: TargetKind| r.per_target.iter().find(|(x, _)| *x == t).unwrap().1.final_s;
+        assert!(
+            get(TargetKind::Gpu) < get(TargetKind::ManyCore),
+            "GPU should win on heavy elementwise work"
+        );
+    }
+
+    #[test]
+    fn report_json_is_versioned() {
+        let r = offload_workload("smallloops", Lang::Python, fast_cfg()).unwrap();
+        let s = r.to_json().to_string();
+        assert!(s.contains("\"schema_version\":2"), "{s}");
+        assert!(s.contains("\"app\":\"smallloops\""));
+    }
+
+    #[test]
+    fn response_encodes_and_parses_with_warnings() {
+        let warnings = vec!["unknown field \"powerweight\" ignored".to_string()];
+        let j = OffloadResponse::encode_simple(7, "ping", &warnings);
+        let r = OffloadResponse::parse_line(&j.to_string()).unwrap();
+        assert_eq!(r.id, 7);
+        assert!(r.ok);
+        assert_eq!(r.schema_version, SCHEMA_VERSION);
+        assert_eq!(r.warnings, warnings);
+
+        let e = OffloadResponse::encode_error(9, "boom");
+        let r = OffloadResponse::parse_line(&e.to_string()).unwrap();
+        assert!(!r.ok);
+        assert_eq!(r.error.as_deref(), Some("boom"));
+        assert!(r.warnings.is_empty());
+
+        // a v1 response (no schema_version) reports version 1
+        let r = OffloadResponse::parse_line(r#"{"id":1,"ok":true,"op":"ping"}"#).unwrap();
+        assert_eq!(r.schema_version, 1);
+    }
+}

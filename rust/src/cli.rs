@@ -1,5 +1,12 @@
 //! Command-line interface (hand-rolled: no arg-parsing crates offline).
 //!
+//! Every subcommand is a thin shell over the versioned offload API
+//! ([`crate::api`]): flags parse straight into an
+//! [`api::OffloadRequest`] builder plus a session [`Config`], and the
+//! one-shot `offload` command is just an [`api::OffloadSession`] serving
+//! a single request — the same request type and report JSON the serve
+//! daemon, the batch front end and library embedders use.
+//!
 //! ```text
 //! envadapt offload <file|app> [--lang c|python|java|js] [--pop N] [--gens N]
 //!                  [--target gpu|many-core|fpga|adaptive]
@@ -17,8 +24,8 @@
 //! ```
 
 use crate::analysis;
+use crate::api::{self, OffloadRequest, OffloadSession};
 use crate::config::Config;
-use crate::coordinator::Coordinator;
 use crate::frontend;
 use crate::ir::Lang;
 use crate::runtime::Runtime;
@@ -205,33 +212,49 @@ fn resolve(target: &str, opts: &Opts) -> anyhow::Result<(String, Lang, String)> 
     Ok((src.code.to_string(), lang, target.to_string()))
 }
 
-fn config_from(opts: &Opts) -> Config {
+/// Session-level configuration from the flags: execution mode, worker
+/// budget, persistence, learning policy. Request-level knobs (pop, gens,
+/// devices, power weight, ...) ride on the [`OffloadRequest`] instead.
+fn session_config(opts: &Opts) -> Config {
     let mut cfg = if opts.sim { Config::fast_sim() } else { Config::standard() };
-    if let Some(p) = opts.pop {
-        cfg.ga.population = p;
-    }
-    if let Some(g) = opts.gens {
-        cfg.ga.generations = g;
-    }
     if let Some(w) = opts.workers {
         cfg.workers = w;
-    }
-    if let Some(d) = &opts.devices {
-        cfg.devices = d.clone();
-        cfg.target = d[0];
-        cfg.cost = d[0].cost_model();
-        cfg.use_pjrt = cfg.use_pjrt && d.contains(&crate::device::TargetKind::Gpu);
-    }
-    if let Some(w) = opts.power_weight {
-        cfg.power_weight = w;
     }
     cfg.cache_path = opts.cache.clone();
     cfg.pattern_db_path = opts.db.clone();
     cfg.reuse_patterns = !opts.no_reuse;
     cfg.learn_patterns = !opts.no_learn;
-    cfg.naive_transfers = opts.naive;
-    cfg.funcblock.enabled = !opts.no_funcblock;
     cfg
+}
+
+/// One typed request from the flags — the same builder every other entry
+/// path uses, so a flag spelling can never drift from the wire spelling.
+fn request_from(
+    opts: &Opts,
+    code: String,
+    lang: Lang,
+    name: &str,
+) -> anyhow::Result<OffloadRequest> {
+    let mut b = OffloadRequest::source(code, lang).name(name);
+    if let Some(p) = opts.pop {
+        b = b.population(p);
+    }
+    if let Some(g) = opts.gens {
+        b = b.generations(g);
+    }
+    if let Some(d) = &opts.devices {
+        b = b.devices(d.clone());
+    }
+    if let Some(w) = opts.power_weight {
+        b = b.power_weight(w);
+    }
+    if opts.naive {
+        b = b.naive_transfers(true);
+    }
+    if opts.no_funcblock {
+        b = b.funcblock(false);
+    }
+    b.build()
 }
 
 fn run(args: &[String]) -> anyhow::Result<()> {
@@ -249,29 +272,27 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                  one at a time; --devices searches one mixed placement over the set)"
             );
             let (code, lang, name) = resolve(target, &opts)?;
-            let cfg = config_from(&opts);
+            let cfg = session_config(&opts);
+            let req = request_from(&opts, code, lang, &name)?;
+            let mut session = OffloadSession::new(cfg);
             if let Some(targets) = &opts.targets {
                 if targets.len() > 1 {
                     // environment-adaptive: try each target, pick the best
-                    let r = crate::coordinator::offload_adaptive(&code, lang, &name, &cfg, targets)?;
+                    let r = session.offload_adaptive(&req, targets)?;
                     for (t, rep) in &r.per_target {
                         println!("[{t:<9}] {}", rep.summary());
                     }
                     println!("→ chosen target: {}", r.chosen);
                     return Ok(());
                 }
-                let mut tcfg = cfg.clone();
-                tcfg.target = targets[0];
-                tcfg.cost = targets[0].cost_model();
-                tcfg.use_pjrt = cfg.use_pjrt && targets[0] == crate::device::TargetKind::Gpu;
-                let mut c = Coordinator::new(tcfg);
-                let r = c.offload_source(&code, lang, &name)?;
+                let mut treq = req.clone();
+                treq.devices = vec![targets[0]];
+                let r = session.offload(&treq)?;
                 println!("[{}] {}", targets[0], r.summary());
                 return Ok(());
             }
-            let workers = cfg.effective_workers();
-            let mut c = Coordinator::new(cfg);
-            if c.device_is_pjrt() {
+            let workers = session.cfg().effective_workers();
+            if session.device_is_pjrt(&req) {
                 // the measurement pool is simulated-only; PJRT measures
                 // serially on the warm device (see engine.rs)
                 eprintln!("device: PJRT (real artifacts) (serial measurement)");
@@ -282,7 +303,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     if workers == 1 { "" } else { "s" }
                 );
             }
-            let r = c.offload_source(&code, lang, &name)?;
+            let r = session.offload(&req)?;
             if opts.json {
                 println!("{}", r.to_json().to_pretty());
             } else {
@@ -382,10 +403,16 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         }
         "serve" => {
             let opts = parse_opts(&args[1..])?;
-            let mut cfg = config_from(&opts);
+            let mut cfg = session_config(&opts);
+            // the daemon's defaults for request-level knobs come in
+            // through the same typed request the protocol decodes, so the
+            // flag spelling and the wire spelling can never drift
+            let defaults =
+                request_from(&opts, String::new(), Lang::C, "serve-defaults")?;
+            cfg = api::effective_config(&cfg, &defaults);
             if let Some(targets) = &opts.targets {
                 // the daemon's default target; per-request overrides come
-                // through the protocol's "target" field
+                // through the protocol's "target"/"devices" fields
                 anyhow::ensure!(
                     targets.len() == 1,
                     "serve takes a single --target (clients pick per request; \
@@ -394,6 +421,11 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 cfg.target = targets[0];
                 cfg.cost = targets[0].cost_model();
                 cfg.use_pjrt = cfg.use_pjrt && targets[0] == crate::device::TargetKind::Gpu;
+            }
+            // an explicitly oversubscribed pool is an error up front, not
+            // a silent degradation to starved coordinators
+            if let Some(pool) = opts.pool {
+                api::validate_worker_split(cfg.effective_workers(), pool)?;
             }
             let sopts = server::ServeOptions {
                 pool: opts.pool.unwrap_or(0),
@@ -481,12 +513,15 @@ OPTIONS:
   --no-reuse    always run the full search (skip the pattern-DB replay)
   --no-learn    do not insert learned patterns after a search
 
-SERVE (the offload-as-a-service daemon, line-delimited JSON protocol):
+SERVE (the offload-as-a-service daemon, line-delimited JSON, wire v2):
   --port N      listen on 127.0.0.1:N (default 7747; 0 = ephemeral)
   --stdio       speak the protocol on stdin/stdout instead of TCP
   --pool N      coordinator workers serving concurrent requests
-                (default: min(4, host parallelism))
-  request:  {{\"op\":\"offload\",\"id\":1,\"name\":\"mm\",\"lang\":\"c\",\"code\":\"...\"}}
+                (default: min(4, host parallelism, --workers budget);
+                an explicit N larger than the --workers budget is an
+                error — each coordinator would get 0 measurement workers)
+  request:  {{\"op\":\"offload\",\"id\":1,\"schema_version\":2,\"name\":\"mm\",
+             \"lang\":\"c\",\"code\":\"...\"}}  (v1 requests still accepted)
   also:     {{\"op\":\"stats\"|\"ping\"|\"shutdown\",\"id\":N}}
 
 Built-in workloads: mm fourier stencil blackscholes mixed signal smallloops hetero"

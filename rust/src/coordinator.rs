@@ -88,11 +88,15 @@ impl OffloadReport {
         self.baseline_s / self.final_s.max(1e-300)
     }
 
-    /// JSON rendering for logs / EXPERIMENTS.md tooling.
+    /// The canonical report JSON — one versioned encoding
+    /// (`schema_version` = [`crate::api::SCHEMA_VERSION`]) shared by the
+    /// CLI's `--json` output, the serve daemon's `report` payload and
+    /// library embedders.
     pub fn to_json(&self) -> Json {
         let gene: String =
             self.best_gene.iter().map(|&b| if b { '1' } else { '0' }).collect();
         let mut j = Json::obj()
+            .set("schema_version", crate::api::SCHEMA_VERSION)
             .set("app", self.app.as_str())
             .set("lang", self.lang.name())
             .set("baseline_s", self.baseline_s)
@@ -673,136 +677,15 @@ impl Coordinator {
 }
 
 // ---------------------------------------------------------------------------
-// environment-adaptive target selection (GPU / many-core / FPGA)
+// batch / adaptive front ends — moved to the versioned API layer
 // ---------------------------------------------------------------------------
-
-/// Result of trying every migration target the environment offers
-/// (the outer loop of the environment-adaptive concept: the same code is
-/// converted for whatever accelerator the deployment environment has, and
-/// the best-performing target is selected).
-#[derive(Debug)]
-pub struct AdaptiveReport {
-    pub per_target: Vec<(crate::device::TargetKind, OffloadReport)>,
-    pub chosen: crate::device::TargetKind,
-}
-
-impl AdaptiveReport {
-    pub fn chosen_report(&self) -> &OffloadReport {
-        &self.per_target.iter().find(|(t, _)| *t == self.chosen).unwrap().1
-    }
-}
-
-/// Offload `code` against every target in `targets`, returning all reports
-/// and the fastest target. PJRT artifacts are used for the GPU target
-/// (when `cfg.use_pjrt`); other targets use their cost models with CPU
-/// reference numerics (the substitution DESIGN.md documents).
-pub fn offload_adaptive(
-    code: &str,
-    lang: Lang,
-    name: &str,
-    cfg: &Config,
-    targets: &[crate::device::TargetKind],
-) -> Result<AdaptiveReport> {
-    anyhow::ensure!(!targets.is_empty(), "need at least one target");
-    // one measurement cache and one pattern DB across all targets:
-    // re-running a target (or the whole adaptive search) answers known
-    // patterns without a device, and learned records never clobber each
-    // other on disk (learned keys carry the target, so no cross-target
-    // replay can happen)
-    let cache = engine::cache_for(cfg);
-    let db = patterndb::shared(PatternDb::open_or_builtin(cfg.pattern_db_path.as_deref()));
-    let mut per_target = Vec::new();
-    for &t in targets {
-        let mut tcfg = cfg.clone();
-        tcfg.target = t;
-        tcfg.devices = vec![t]; // one destination per adaptive trial
-        tcfg.cost = t.cost_model();
-        tcfg.use_pjrt = cfg.use_pjrt && t == TargetKind::Gpu;
-        let mut c = Coordinator::with_shared(tcfg, cache.clone(), db.clone());
-        per_target.push((t, c.offload_source(code, lang, name)?));
-    }
-    let chosen = per_target
-        .iter()
-        .min_by(|a, b| a.1.final_s.partial_cmp(&b.1.final_s).unwrap())
-        .unwrap()
-        .0;
-    Ok(AdaptiveReport { per_target, chosen })
-}
-
-// ---------------------------------------------------------------------------
-// batch front end (the "application use request" loop of §4.2)
-// ---------------------------------------------------------------------------
-
-/// One offload request.
-#[derive(Debug, Clone)]
-pub struct BatchRequest {
-    pub name: String,
-    pub lang: Lang,
-    pub code: String,
-}
-
-impl BatchRequest {
-    pub fn workload(app: &str, lang: Lang) -> Option<BatchRequest> {
-        let s = crate::workloads::get(app, lang)?;
-        Some(BatchRequest { name: app.to_string(), lang, code: s.code.to_string() })
-    }
-}
-
-/// Serve a batch of offload requests over `workers` OS threads, each with
-/// its own coordinator (PJRT clients are not `Send`, so every worker owns
-/// its device; executable caches are per-worker). All workers share one
-/// measurement cache and one pattern DB, so repeated requests for the
-/// same program answer from memory (and one worker's learned pattern is
-/// replayed — and persisted without clobbering — by every other).
-/// Result order matches request order.
-pub fn offload_batch(
-    requests: &[BatchRequest],
-    workers: usize,
-    cfg: &Config,
-) -> Vec<Result<OffloadReport>> {
-    use std::sync::atomic::{AtomicUsize, Ordering};
-    use std::sync::Mutex;
-    let workers = workers.clamp(1, requests.len().max(1));
-    // split the measurement-worker budget across request workers so the
-    // two pool levels don't multiply into workers × cfg.workers threads
-    let mut wcfg = cfg.clone();
-    wcfg.workers = (cfg.effective_workers() / workers).max(1);
-    let cache = engine::cache_for(cfg);
-    let db = patterndb::shared(PatternDb::open_or_builtin(cfg.pattern_db_path.as_deref()));
-    let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<Result<OffloadReport>>>> =
-        Mutex::new((0..requests.len()).map(|_| None).collect());
-    let wcfg = &wcfg;
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            let cache = cache.clone();
-            let db = db.clone();
-            let next = &next;
-            let results = &results;
-            scope.spawn(move || {
-                let mut c = Coordinator::with_shared(wcfg.clone(), cache, db);
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= requests.len() {
-                        break;
-                    }
-                    let r = &requests[i];
-                    let out = c.offload_source(&r.code, r.lang, &r.name);
-                    results.lock().unwrap()[i] = Some(out);
-                }
-            });
-        }
-    });
-    results.into_inner().unwrap().into_iter().map(|o| o.expect("worker filled slot")).collect()
-}
-
-/// Convenience: offload one workload app in one language with a config.
-pub fn offload_workload(app: &str, lang: Lang, cfg: Config) -> Result<OffloadReport> {
-    let src = crate::workloads::get(app, lang)
-        .ok_or_else(|| anyhow::anyhow!("unknown workload `{app}`"))?;
-    let mut c = Coordinator::new(cfg);
-    c.offload_source(src.code, lang, app)
-}
+//
+// The free functions that used to live here (`offload_adaptive`,
+// `offload_batch` + `BatchRequest`, `offload_workload`) are now methods
+// of [`crate::api::OffloadSession`] consuming the one typed
+// [`crate::api::OffloadRequest`] — the same request type the CLI, the
+// serve daemon and library embedders construct. This module keeps only
+// the coordinator itself and its report.
 
 /// Markdown summary table over several reports (E3-style output).
 pub fn markdown_summary(reports: &[OffloadReport]) -> String {
@@ -828,6 +711,7 @@ pub fn markdown_summary(reports: &[OffloadReport]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::{offload_workload, OffloadRequest, OffloadSession};
 
     fn fast_cfg() -> Config {
         Config::fast_sim()
@@ -900,29 +784,17 @@ mod tests {
     fn adaptive_target_selection_picks_many_core_for_small_loops() {
         // small parallel loops: many-core (no transfers, cheap entry) must
         // beat the GPU; heavy compute prefers the GPU
-        let src = crate::workloads::get("smallloops", Lang::C).unwrap();
-        let r = offload_adaptive(
-            src.code,
-            Lang::C,
-            "smallloops",
-            &fast_cfg(),
-            &crate::device::TargetKind::all(),
-        )
-        .unwrap();
+        let mut session = OffloadSession::new(fast_cfg());
+        let req = OffloadRequest::workload("smallloops", Lang::C).build().unwrap();
+        let r = session.offload_adaptive(&req, &crate::device::TargetKind::all()).unwrap();
         assert_eq!(r.per_target.len(), 3);
         // every target at least matches CPU (GA keeps the all-zero gene)
         for (t, rep) in &r.per_target {
             assert!(rep.speedup() >= 0.999, "{t}: {}", rep.speedup());
         }
-        let heavy = crate::workloads::get("blackscholes", Lang::C).unwrap();
-        let r2 = offload_adaptive(
-            heavy.code,
-            Lang::C,
-            "blackscholes",
-            &fast_cfg(),
-            &crate::device::TargetKind::all(),
-        )
-        .unwrap();
+        let mut session = OffloadSession::new(fast_cfg());
+        let heavy = OffloadRequest::workload("blackscholes", Lang::C).build().unwrap();
+        let r2 = session.offload_adaptive(&heavy, &crate::device::TargetKind::all()).unwrap();
         // on the heavy elementwise app the accelerators must beat many-core
         let get = |t: crate::device::TargetKind| {
             r2.per_target.iter().find(|(x, _)| *x == t).unwrap().1.final_s
@@ -931,23 +803,6 @@ mod tests {
             get(crate::device::TargetKind::Gpu) < get(crate::device::TargetKind::ManyCore),
             "GPU should win on heavy elementwise work"
         );
-    }
-
-    #[test]
-    fn batch_offload_parallel_matches_sequential() {
-        let reqs: Vec<BatchRequest> = ["smallloops", "mixed", "fourier"]
-            .iter()
-            .flat_map(|app| Lang::all().map(|l| BatchRequest::workload(app, l).unwrap()))
-            .collect();
-        let seq = offload_batch(&reqs, 1, &fast_cfg());
-        let par = offload_batch(&reqs, 4, &fast_cfg());
-        assert_eq!(seq.len(), par.len());
-        for (a, b) in seq.iter().zip(&par) {
-            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
-            assert_eq!(a.app, b.app);
-            assert_eq!(a.best_gene, b.best_gene, "{}", a.app);
-            assert!((a.final_s - b.final_s).abs() < 1e-15);
-        }
     }
 
     #[test]

@@ -40,10 +40,25 @@
 //! near-identical requests replay the known plan with zero new
 //! measurements (the paper's production reuse path).
 //!
+//! # Embedding: the versioned offload API
+//!
+//! The **documented embedding surface is [`api`]**: a typed, versioned
+//! request/response layer every front end shares. Build an
+//! [`api::OffloadRequest`] (source text or a built-in workload, any
+//! field defaulted), feed it to a long-lived [`api::OffloadSession`]
+//! (owns the shared measurement cache, the learning pattern DB and the
+//! coordinator pool), and read back an [`coordinator::OffloadReport`]
+//! whose canonical JSON carries `schema_version` =
+//! [`api::SCHEMA_VERSION`]. The CLI, the serve daemon's wire protocol
+//! (`proto`, v2 with v1 compat), batch serving and the adaptive target
+//! search are all thin shells over this one API — see
+//! `examples/library_api.rs` for an end-to-end embedding.
+//!
 //! See `DESIGN.md` for the full system inventory and the mapping from the
 //! paper's sections to modules.
 
 pub mod analysis;
+pub mod api;
 pub mod cli;
 pub mod clone;
 pub mod config;

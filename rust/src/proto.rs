@@ -1,73 +1,72 @@
-//! Line-delimited JSON protocol for the offload service (`envadapt
-//! serve`) — the paper's "application use request" wire format.
+//! Line-delimited JSON wire codec for the offload service (`envadapt
+//! serve`) — a thin framing layer over the versioned API types in
+//! [`crate::api`].
 //!
 //! Every request and every response is one JSON object per line. The
 //! request `op` selects the operation; `id` is echoed back so clients can
-//! pipeline requests over one connection:
-//!
-//! `lang` accepts every [`Lang`] name (`c`, `python`, `java`,
-//! `javascript` — plus the `py`/`js` aliases):
+//! pipeline requests over one connection. Offload request bodies are the
+//! canonical [`OffloadRequest`] encoding (wire **v2**, tagged
+//! `"schema_version":2`); lines without a `schema_version` field decode
+//! through the v1 compat path ([`OffloadRequest::from_wire`]), so
+//! pre-v2 clients keep working unmodified:
 //!
 //! ```text
-//! → {"op":"offload","id":1,"name":"mm","lang":"c","code":"...","target":"gpu"}
-//! ← {"id":1,"ok":true,"op":"offload","worker":0,"report":{...}}
-//! → {"op":"stats","id":2}
-//! ← {"id":2,"ok":true,"op":"stats","stats":{...}}
-//! → {"op":"ping","id":3}
-//! ← {"id":3,"ok":true,"op":"ping"}
-//! → {"op":"shutdown","id":4}
-//! ← {"id":4,"ok":true,"op":"shutdown"}
+//! → {"op":"offload","id":1,"schema_version":2,"name":"mm","lang":"c",
+//!    "code":"...","devices":["gpu"]}
+//! ← {"id":1,"ok":true,"schema_version":2,"op":"offload","worker":0,"report":{...}}
+//! → {"op":"offload","id":2,"name":"mm","lang":"c","code":"..."}        # v1 compat
+//! ← {"id":2,"ok":true,"schema_version":2,"op":"offload","worker":1,"report":{...}}
+//! → {"op":"stats","id":3}
+//! ← {"id":3,"ok":true,"schema_version":2,"op":"stats","stats":{...}}
 //! ```
 //!
-//! Failures come back as `{"id":N,"ok":false,"error":"..."}` and never
-//! tear down the connection. The offload report payload is
-//! [`crate::coordinator::OffloadReport::to_json`]; its `measurements`,
-//! `cache_hits`, `measure_launches` and `pattern_reuse` fields are how a
-//! client observes the learned-pattern fast path (zero new measurements
-//! on a repeat request).
+//! Failures come back as `{"id":N,"ok":false,"schema_version":2,
+//! "error":"..."}` and never tear down the connection; an unknown `op`
+//! names the supported ones, and unknown request fields surface as a
+//! `warnings` array on the response instead of being dropped silently.
+//! The full wire reference is `docs/PROTOCOL.md`.
 
+use crate::api::{OffloadRequest, OffloadResponse};
 use crate::coordinator::OffloadReport;
-use crate::device::TargetKind;
 use crate::ir::Lang;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 
-/// An `op: "offload"` request: convert + search (or replay) one program.
+/// Client-side response view — the versioned envelope from
+/// [`crate::api`], re-exported under the protocol's historical name.
+pub use crate::api::OffloadResponse as Response;
+
+/// Every op this protocol version serves (named in unknown-op errors).
+pub const SUPPORTED_OPS: &[&str] = &["offload", "stats", "ping", "shutdown"];
+
+/// The operation one request line selects.
 #[derive(Debug, Clone)]
-pub struct OffloadRequest {
-    pub id: i64,
-    /// application name (reports/logs only)
-    pub name: String,
-    pub lang: Lang,
-    pub code: String,
-    /// migration target; `None` = the server's configured default
-    pub target: Option<TargetKind>,
-    /// heterogeneous destination set for mixed placement (e.g.
-    /// `"gpu,many-core"`); overrides `target` when present
-    pub devices: Option<Vec<TargetKind>>,
-    /// energy weight of the search fitness (0 = pure time); `None` = the
-    /// server's configured default
-    pub power_weight: Option<f64>,
+pub enum Op {
+    /// convert + search (or replay) one program
+    Offload(Box<OffloadRequest>),
+    Stats,
+    Ping,
+    Shutdown,
 }
 
-/// One parsed protocol request.
+/// One parsed protocol request: transport envelope (`id`) + operation +
+/// any decoder warnings to surface on the response.
 #[derive(Debug, Clone)]
-pub enum Request {
-    Offload(Box<OffloadRequest>),
-    Stats { id: i64 },
-    Ping { id: i64 },
-    Shutdown { id: i64 },
+pub struct Request {
+    pub id: i64,
+    pub op: Op,
+    /// unknown request fields noticed while decoding (echoed back as the
+    /// response's `warnings` array)
+    pub warnings: Vec<String>,
 }
 
 impl Request {
-    pub fn id(&self) -> i64 {
-        match self {
-            Request::Offload(r) => r.id,
-            Request::Stats { id } | Request::Ping { id } | Request::Shutdown { id } => *id,
-        }
+    /// An offload request with a clean envelope.
+    pub fn offload(id: i64, req: OffloadRequest) -> Request {
+        Request { id, op: Op::Offload(Box::new(req)), warnings: Vec::new() }
     }
 
-    /// Parse one request line.
+    /// Parse one request line (either protocol version).
     pub fn parse_line(line: &str) -> Result<Request> {
         let j = Json::parse(line.trim()).map_err(|e| anyhow!("bad request JSON: {e}"))?;
         let id = j.get("id").and_then(|v| v.as_i64()).unwrap_or(0);
@@ -77,100 +76,49 @@ impl Request {
             .ok_or_else(|| anyhow!("request needs a string `op` field"))?;
         match op {
             "offload" => {
-                let name =
-                    j.get("name").and_then(|v| v.as_str()).unwrap_or("request").to_string();
-                let lang_name = j
-                    .get("lang")
-                    .and_then(|v| v.as_str())
-                    .ok_or_else(|| anyhow!("offload needs a `lang` field"))?;
-                let lang = Lang::from_name(lang_name)
-                    .ok_or_else(|| anyhow!("unknown language {lang_name:?}"))?;
-                let code = j
-                    .get("code")
-                    .and_then(|v| v.as_str())
-                    .ok_or_else(|| anyhow!("offload needs a `code` field"))?
-                    .to_string();
-                let target = match j.get("target").and_then(|v| v.as_str()) {
-                    None => None,
-                    Some(t) => Some(
-                        TargetKind::from_name(t)
-                            .ok_or_else(|| anyhow!("unknown target {t:?}"))?,
-                    ),
-                };
-                let devices = match j.get("devices") {
-                    None => None,
-                    Some(v) => {
-                        let s = v.as_str().ok_or_else(|| {
-                            anyhow!("devices must be a string like \"gpu,many-core\"")
-                        })?;
-                        Some(
-                            crate::placement::DeviceSet::parse(s)
-                                .map_err(|e| anyhow!("bad devices: {e}"))?
-                                .devices()
-                                .to_vec(),
-                        )
-                    }
-                };
-                let power_weight = match j.get("power_weight") {
-                    None => None,
-                    Some(v) => {
-                        let w = v
-                            .as_f64()
-                            .ok_or_else(|| anyhow!("power_weight must be a number"))?;
-                        if !(0.0..=1.0).contains(&w) {
-                            bail!("power_weight must be within [0, 1], got {w}");
-                        }
-                        Some(w)
-                    }
-                };
-                Ok(Request::Offload(Box::new(OffloadRequest {
-                    id,
-                    name,
-                    lang,
-                    code,
-                    target,
-                    devices,
-                    power_weight,
-                })))
+                let (req, warnings) = OffloadRequest::from_wire(&j)?;
+                Ok(Request { id, op: Op::Offload(Box::new(req)), warnings })
             }
-            "stats" => Ok(Request::Stats { id }),
-            "ping" => Ok(Request::Ping { id }),
-            "shutdown" => Ok(Request::Shutdown { id }),
-            other => bail!("unknown op {other:?}"),
+            "stats" | "ping" | "shutdown" => {
+                let warnings =
+                    crate::api::unknown_field_warnings(&j, &["op", "id", "schema_version"]);
+                let op = match op {
+                    "stats" => Op::Stats,
+                    "ping" => Op::Ping,
+                    _ => Op::Shutdown,
+                };
+                Ok(Request { id, op, warnings })
+            }
+            other => bail!(
+                "unknown op {other:?} (supported: {})",
+                SUPPORTED_OPS.join(", ")
+            ),
         }
     }
 
-    /// Client-side rendering: one line, newline not included.
+    /// Client-side rendering in the canonical v2 encoding: one line,
+    /// newline not included.
     pub fn to_line(&self) -> String {
-        match self {
-            Request::Offload(r) => {
-                let mut j = Json::obj()
-                    .set("op", "offload")
-                    .set("id", r.id)
-                    .set("name", r.name.as_str())
-                    .set("lang", r.lang.name())
-                    .set("code", r.code.as_str());
-                if let Some(t) = r.target {
-                    j = j.set("target", t.name());
+        match &self.op {
+            Op::Offload(r) => {
+                let mut fields = vec![
+                    ("op".to_string(), Json::Str("offload".to_string())),
+                    ("id".to_string(), Json::Int(self.id)),
+                ];
+                if let Json::Obj(kvs) = r.to_json() {
+                    fields.extend(kvs);
                 }
-                if let Some(d) = &r.devices {
-                    let names: Vec<&str> = d.iter().map(|t| t.name()).collect();
-                    j = j.set("devices", names.join(",").as_str());
-                }
-                if let Some(w) = r.power_weight {
-                    j = j.set("power_weight", w);
-                }
-                j.to_string()
+                Json::Obj(fields).to_string()
             }
-            Request::Stats { id } => {
-                Json::obj().set("op", "stats").set("id", *id).to_string()
-            }
-            Request::Ping { id } => Json::obj().set("op", "ping").set("id", *id).to_string(),
-            Request::Shutdown { id } => {
-                Json::obj().set("op", "shutdown").set("id", *id).to_string()
-            }
+            Op::Stats => simple_line("stats", self.id),
+            Op::Ping => simple_line("ping", self.id),
+            Op::Shutdown => simple_line("shutdown", self.id),
         }
     }
+}
+
+fn simple_line(op: &str, id: i64) -> String {
+    Json::obj().set("op", op).set("id", id).to_string()
 }
 
 /// Best-effort id extraction from a request line that failed to parse as
@@ -183,88 +131,91 @@ pub fn line_id(line: &str) -> i64 {
         .unwrap_or(0)
 }
 
-/// Convenience for clients: render an offload request line.
+/// Convenience for clients: render an offload request line in the **v1**
+/// wire shape (no `schema_version`). Kept so pre-v2 clients have a
+/// reference spelling — and so the test suite permanently exercises the
+/// compat decoder against the v2 daemon.
 pub fn offload_request(id: i64, name: &str, lang: Lang, code: &str) -> String {
-    Request::Offload(Box::new(OffloadRequest {
-        id,
-        name: name.to_string(),
-        lang,
-        code: code.to_string(),
-        target: None,
-        devices: None,
-        power_weight: None,
-    }))
-    .to_line()
-}
-
-// ---------------------------------------------------------------------------
-// responses
-// ---------------------------------------------------------------------------
-
-/// Successful offload response (the worker id tells clients which pool
-/// member served them — useful when diagnosing warm-cache behaviour).
-pub fn ok_offload(id: i64, report: &OffloadReport, worker: usize) -> Json {
     Json::obj()
-        .set("id", id)
-        .set("ok", true)
         .set("op", "offload")
-        .set("worker", worker)
-        .set("report", report.to_json())
+        .set("id", id)
+        .set("name", name)
+        .set("lang", lang.name())
+        .set("code", code)
+        .to_string()
 }
 
-pub fn ok_simple(id: i64, op: &str) -> Json {
-    Json::obj().set("id", id).set("ok", true).set("op", op)
+/// Convenience for clients: render an offload request line in the
+/// canonical v2 encoding.
+pub fn offload_request_v2(id: i64, req: &OffloadRequest) -> String {
+    Request::offload(id, req.clone()).to_line()
 }
 
-pub fn ok_stats(id: i64, stats: Json) -> Json {
-    Json::obj().set("id", id).set("ok", true).set("op", "stats").set("stats", stats)
+// ---------------------------------------------------------------------------
+// response encoders (delegating to the canonical api encoders)
+// ---------------------------------------------------------------------------
+
+/// Successful offload response.
+pub fn ok_offload(id: i64, report: &OffloadReport, worker: usize, warnings: &[String]) -> Json {
+    OffloadResponse::encode_offload(id, report, worker, warnings)
 }
 
+/// Successful report-less response (`ping`, `shutdown`).
+pub fn ok_simple(id: i64, op: &str, warnings: &[String]) -> Json {
+    OffloadResponse::encode_simple(id, op, warnings)
+}
+
+/// Successful `stats` response.
+pub fn ok_stats(id: i64, stats: Json, warnings: &[String]) -> Json {
+    OffloadResponse::encode_stats(id, stats, warnings)
+}
+
+/// Failure response.
 pub fn err(id: i64, msg: &str) -> Json {
-    Json::obj().set("id", id).set("ok", false).set("error", msg)
-}
-
-/// A parsed response, for clients.
-#[derive(Debug, Clone)]
-pub struct Response {
-    pub id: i64,
-    pub ok: bool,
-    pub error: Option<String>,
-    /// the full response object (use `body.get("report")`, ...)
-    pub body: Json,
-}
-
-impl Response {
-    pub fn parse_line(line: &str) -> Result<Response> {
-        let body = Json::parse(line.trim()).map_err(|e| anyhow!("bad response JSON: {e}"))?;
-        let id = body.get("id").and_then(|v| v.as_i64()).unwrap_or(0);
-        let ok = body.get("ok").and_then(|v| v.as_bool()).unwrap_or(false);
-        let error = body.get("error").and_then(|v| v.as_str()).map(|s| s.to_string());
-        Ok(Response { id, ok, error, body })
-    }
-
-    /// The offload report object, when this is an offload response.
-    pub fn report(&self) -> Option<&Json> {
-        self.body.get("report")
-    }
+    OffloadResponse::encode_error(id, msg)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::device::TargetKind;
 
     #[test]
-    fn offload_request_round_trips() {
+    fn v1_offload_request_round_trips() {
         let line = offload_request(7, "mm", Lang::Python, "def main():\n    pass\n");
+        assert!(!line.contains("schema_version"), "v1 helper stays v1: {line}");
         let req = Request::parse_line(&line).unwrap();
-        match req {
-            Request::Offload(r) => {
-                assert_eq!(r.id, 7);
+        assert_eq!(req.id, 7);
+        assert!(req.warnings.is_empty());
+        match req.op {
+            Op::Offload(r) => {
                 assert_eq!(r.name, "mm");
                 assert_eq!(r.lang, Lang::Python);
-                assert!(r.code.contains('\n'), "newlines must survive the wire");
-                assert!(r.target.is_none());
+                let code = r.resolve_code().unwrap();
+                assert!(code.contains('\n'), "newlines must survive the wire");
+                assert!(r.devices.is_empty());
             }
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v2_offload_request_round_trips() {
+        let req = crate::api::OffloadRequest::source("void main() { }", Lang::C)
+            .name("hetero")
+            .devices(vec![TargetKind::Gpu, TargetKind::ManyCore])
+            .power_weight(0.25)
+            .population(6)
+            .build()
+            .unwrap();
+        let line = offload_request_v2(11, &req);
+        assert!(line.contains("\"schema_version\":2"), "{line}");
+        assert!(line.contains("\"devices\":[\"gpu\",\"many-core\"]"), "{line}");
+        let back = Request::parse_line(&line).unwrap();
+        assert_eq!(back.id, 11);
+        assert!(back.warnings.is_empty());
+        match back.op {
+            Op::Offload(r) => assert_eq!(*r, req),
             other => panic!("wrong request: {other:?}"),
         }
     }
@@ -275,9 +226,9 @@ mod tests {
             r#"{"op":"offload","id":1,"lang":"c","code":"void main() { }","target":"fpga"}"#,
         )
         .unwrap();
-        match req {
-            Request::Offload(r) => {
-                assert_eq!(r.target, Some(TargetKind::Fpga));
+        match req.op {
+            Op::Offload(r) => {
+                assert_eq!(r.devices, vec![TargetKind::Fpga]);
                 assert_eq!(r.name, "request", "name defaults");
             }
             other => panic!("wrong request: {other:?}"),
@@ -288,27 +239,19 @@ mod tests {
             (r#"{"op":"shutdown","id":4}"#, 4),
         ] {
             let r = Request::parse_line(line).unwrap();
-            assert_eq!(r.id(), id);
-            assert_eq!(Request::parse_line(&r.to_line()).unwrap().id(), id);
+            assert_eq!(r.id, id);
+            assert!(r.warnings.is_empty());
+            assert_eq!(Request::parse_line(&r.to_line()).unwrap().id, id);
         }
     }
 
     #[test]
-    fn devices_and_power_weight_round_trip() {
-        let req = Request::Offload(Box::new(OffloadRequest {
-            id: 11,
-            name: "hetero".to_string(),
-            lang: Lang::C,
-            code: "void main() { }".to_string(),
-            target: None,
-            devices: Some(vec![TargetKind::Gpu, TargetKind::ManyCore]),
-            power_weight: Some(0.25),
-        }));
-        let line = req.to_line();
-        assert!(line.contains("\"devices\":\"gpu,many-core\""), "{line}");
-        match Request::parse_line(&line).unwrap() {
-            Request::Offload(r) => {
-                assert_eq!(r.devices, Some(vec![TargetKind::Gpu, TargetKind::ManyCore]));
+    fn v1_devices_and_power_weight_decode() {
+        let line = r#"{"op":"offload","id":11,"name":"hetero","lang":"c",
+                       "code":"void main() { }","devices":"gpu,many-core","power_weight":0.25}"#;
+        match Request::parse_line(line).unwrap().op {
+            Op::Offload(r) => {
+                assert_eq!(r.devices, vec![TargetKind::Gpu, TargetKind::ManyCore]);
                 assert_eq!(r.power_weight, Some(0.25));
             }
             other => panic!("wrong request: {other:?}"),
@@ -323,7 +266,7 @@ mod tests {
                 r#"{"op":"offload","id":1,"lang":"c","code":"","devices":["gpu","many-core"]}"#
             )
             .is_err(),
-            "a JSON-array devices value must be rejected, not silently ignored"
+            "a JSON-array devices value is the v2 spelling — v1 must reject it"
         );
         assert!(Request::parse_line(
             r#"{"op":"offload","id":1,"lang":"c","code":"","power_weight":1.5}"#
@@ -332,10 +275,27 @@ mod tests {
     }
 
     #[test]
+    fn unknown_fields_become_warnings_not_drops() {
+        let r = Request::parse_line(
+            r#"{"op":"offload","id":1,"lang":"c","code":"","tarmget":"gpu"}"#,
+        )
+        .unwrap();
+        assert_eq!(r.warnings.len(), 1, "{:?}", r.warnings);
+        assert!(r.warnings[0].contains("tarmget"));
+        let r = Request::parse_line(r#"{"op":"ping","id":2,"verbose":true}"#).unwrap();
+        assert_eq!(r.warnings.len(), 1);
+        assert!(r.warnings[0].contains("verbose"));
+    }
+
+    #[test]
     fn bad_requests_are_rejected() {
         assert!(Request::parse_line("not json").is_err());
         assert!(Request::parse_line(r#"{"id":1}"#).is_err(), "missing op");
-        assert!(Request::parse_line(r#"{"op":"dance","id":1}"#).is_err());
+        let err = Request::parse_line(r#"{"op":"dance","id":1}"#).unwrap_err().to_string();
+        assert!(
+            err.contains("supported: offload, stats, ping, shutdown"),
+            "unknown-op error must list the supported ops: {err}"
+        );
         assert!(Request::parse_line(r#"{"op":"offload","id":1,"lang":"cobol","code":""}"#)
             .is_err());
         assert!(Request::parse_line(r#"{"op":"offload","id":1,"lang":"c"}"#).is_err());
@@ -360,5 +320,6 @@ mod tests {
         assert_eq!(r.id, 9);
         assert!(!r.ok);
         assert_eq!(r.error.as_deref(), Some("boom"));
+        assert_eq!(r.schema_version, crate::api::SCHEMA_VERSION);
     }
 }

@@ -4,35 +4,36 @@
 //! and every verified pattern is remembered so the next matching request
 //! skips the search entirely.
 //!
-//! Architecture (see `DESIGN.md` §6):
+//! Architecture (see `DESIGN.md` §6/§9):
 //!
-//! * **Transport** — line-delimited JSON ([`crate::proto`]) over TCP
-//!   (`serve_tcp`, one thread per connection) or stdin/stdout
-//!   (`serve_stdio`). Connections only parse and route; they never touch
-//!   a device.
+//! * **Transport** — line-delimited JSON ([`crate::proto`], wire v2 with
+//!   v1 compat) over TCP (`serve_tcp`, one thread per connection) or
+//!   stdin/stdout (`serve_stdio`). Connections only frame and route;
+//!   they never touch a device.
 //! * **Worker pool** — [`Service::start`] spawns `pool` OS threads, each
-//!   owning its coordinators (devices are not `Send`, so coordinators
-//!   are built inside their worker thread, one per destination set on
-//!   demand). Workers pull `Job`s from one shared queue; replies go
-//!   back over per-request channels, so slow searches never block other
-//!   connections. The per-coordinator measurement-worker budget is
-//!   `cfg.workers / pool`, the same non-multiplying policy as
-//!   `offload_batch`.
-//! * **Shared learning state** — all workers share one measurement cache
-//!   ([`crate::engine::SharedCache`]) and one pattern DB
-//!   ([`SharedPatternDb`]): a pattern learned by any worker is replayed
-//!   by every worker, and persists across restarts via
+//!   owning an [`OffloadSession`] (devices are not `Send`, so sessions
+//!   are built inside their worker thread; each lazily keeps one
+//!   coordinator per request variant). Workers pull `Job`s from one
+//!   shared queue; replies go back over per-request channels, so slow
+//!   searches never block other connections. The per-session
+//!   measurement-worker budget is `cfg.workers / pool`; the CLI rejects
+//!   an explicitly oversubscribed `--pool × --workers` split up front
+//!   via [`crate::api::validate_worker_split`] (embedders passing their
+//!   own `ServeOptions` should call it too), and an auto-sized pool
+//!   (`pool: 0`) is clamped to the budget so it never starves a session.
+//! * **Shared learning state** — all worker sessions share one
+//!   measurement cache ([`crate::engine::SharedCache`]) and one pattern
+//!   DB ([`SharedPatternDb`]): a pattern learned by any worker is
+//!   replayed by every worker, and persists across restarts via
 //!   `ServeOptions::db_path`.
 
+use crate::api::{OffloadRequest, OffloadSession};
 use crate::config::Config;
-use crate::coordinator::Coordinator;
-use crate::device::TargetKind;
 use crate::engine::{self, SharedCache};
 use crate::patterndb::{self, PatternDb, SharedPatternDb};
-use crate::proto::{self, OffloadRequest, Request};
+use crate::proto::{self, Op, Request};
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
-use std::collections::HashMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
@@ -44,7 +45,9 @@ use std::thread::JoinHandle;
 /// Service-level options (everything else comes from [`Config`]).
 #[derive(Debug, Clone, Default)]
 pub struct ServeOptions {
-    /// coordinator pool size; 0 = min(4, host parallelism)
+    /// coordinator pool size; 0 = min(4, host parallelism), clamped to
+    /// the measurement-worker budget so auto-sizing never starves a
+    /// session
     pub pool: usize,
     /// pattern-DB persistence file: learned patterns are loaded at start
     /// and saved after every insert, so the service resumes warm
@@ -66,7 +69,9 @@ pub struct ServiceStats {
 }
 
 struct Job {
+    id: i64,
     req: OffloadRequest,
+    warnings: Vec<String>,
     reply: Sender<Json>,
 }
 
@@ -85,10 +90,24 @@ pub struct Service {
 }
 
 impl Service {
-    /// Build the shared state and spawn the coordinator worker pool.
+    /// Build the shared state and spawn the session worker pool.
+    ///
+    /// An explicit `opts.pool` is honored as-is (the budget split
+    /// bottoms out at one measurement worker per session): the
+    /// measurement budget defaults to the *host's* parallelism, so
+    /// hard-failing here would make a fixed `pool` value start or not
+    /// start depending on the machine. Front ends that take both knobs
+    /// from a user should reject an oversubscribed split up front via
+    /// [`crate::api::validate_worker_split`], as the CLI does.
     pub fn start(cfg: Config, opts: &ServeOptions) -> Service {
+        let budget = cfg.effective_workers();
         let pool = if opts.pool == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4)
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(4)
+                .min(budget)
+                .max(1)
         } else {
             opts.pool
         };
@@ -97,7 +116,7 @@ impl Service {
         // split the measurement-worker budget across the pool so the two
         // pool levels don't multiply into pool × cfg.workers threads
         let mut wcfg = cfg.clone();
-        wcfg.workers = (cfg.effective_workers() / pool).max(1);
+        wcfg.workers = (budget / pool).max(1);
         let db = patterndb::shared(PatternDb::open_or_builtin(opts.db_path.as_deref()));
         let cache = engine::cache_for(&cfg);
         let stats = Arc::new(Mutex::new(ServiceStats::default()));
@@ -144,11 +163,12 @@ impl Service {
     /// Handle one parsed request.
     pub fn dispatch(&self, req: Request) -> (Json, bool) {
         self.stats.lock().unwrap().requests += 1;
-        match req {
-            Request::Offload(r) => {
-                let id = r.id;
+        let Request { id, op, warnings } = req;
+        match op {
+            Op::Offload(r) => {
                 let (tx, rx) = mpsc::channel();
-                let enqueued = self.jobs.lock().unwrap().send(Job { req: *r, reply: tx });
+                let enqueued =
+                    self.jobs.lock().unwrap().send(Job { id, req: *r, warnings, reply: tx });
                 if enqueued.is_err() {
                     self.stats.lock().unwrap().errors += 1;
                     return (proto::err(id, "service is shutting down"), false);
@@ -161,9 +181,9 @@ impl Service {
                     }
                 }
             }
-            Request::Stats { id } => (proto::ok_stats(id, self.stats_json()), false),
-            Request::Ping { id } => (proto::ok_simple(id, "ping"), false),
-            Request::Shutdown { id } => (proto::ok_simple(id, "shutdown"), true),
+            Op::Stats => (proto::ok_stats(id, self.stats_json(), &warnings), false),
+            Op::Ping => (proto::ok_simple(id, "ping", &warnings), false),
+            Op::Shutdown => (proto::ok_simple(id, "shutdown", &warnings), true),
         }
     }
 
@@ -216,16 +236,18 @@ fn worker_loop(
     rx: Arc<Mutex<Receiver<Job>>>,
     stats: Arc<Mutex<ServiceStats>>,
 ) {
-    // Coordinators are built lazily per (destination set, power weight)
-    // inside this thread (devices are not Send) and live for the whole
-    // service, so PJRT executable caches stay warm across requests.
-    let mut coords: HashMap<String, Coordinator> = HashMap::new();
+    // Each worker owns one OffloadSession, built inside this thread
+    // (devices are not Send) and living for the whole service, so PJRT
+    // executable caches stay warm across requests. The session keeps one
+    // coordinator per request variant; all sessions share the cache and
+    // pattern DB handed in here.
+    let mut session = OffloadSession::with_shared(cfg, cache, db);
     loop {
         let job = match rx.lock().unwrap().recv() {
             Ok(j) => j,
             Err(_) => break, // queue closed: service is shutting down
         };
-        let resp = handle_offload(wid, &cfg, &db, &cache, &mut coords, &job.req, &stats);
+        let resp = handle_offload(wid, &mut session, &job, &stats);
         // a dropped reply receiver just means the client went away
         let _ = job.reply.send(resp);
     }
@@ -233,42 +255,11 @@ fn worker_loop(
 
 fn handle_offload(
     wid: usize,
-    cfg: &Config,
-    db: &SharedPatternDb,
-    cache: &SharedCache,
-    coords: &mut HashMap<String, Coordinator>,
-    req: &OffloadRequest,
+    session: &mut OffloadSession,
+    job: &Job,
     stats: &Arc<Mutex<ServiceStats>>,
 ) -> Json {
-    // a request-level `devices` set wins over `target`, which wins over
-    // the server's configured default (itself possibly a mixed set)
-    let devices = match &req.devices {
-        Some(d) => d.clone(),
-        None => match req.target {
-            Some(t) => vec![t],
-            None => cfg.effective_devices(),
-        },
-    };
-    let power_weight = req.power_weight.unwrap_or(cfg.power_weight);
-    let key = format!("{}|{power_weight}", crate::placement::set_name(&devices));
-    // the key embeds a client-controlled float, so the per-worker
-    // coordinator map is unbounded in principle — cap it (coordinators
-    // are cheap to rebuild; the measurement cache and pattern DB are
-    // shared, so only warm per-coordinator state is dropped)
-    const MAX_COORDS: usize = 16;
-    if coords.len() >= MAX_COORDS && !coords.contains_key(&key) {
-        coords.clear();
-    }
-    let coord = coords.entry(key).or_insert_with(|| {
-        let mut tcfg = cfg.clone();
-        tcfg.target = devices[0];
-        tcfg.devices = devices.clone();
-        tcfg.cost = devices[0].cost_model();
-        tcfg.power_weight = power_weight;
-        tcfg.use_pjrt = cfg.use_pjrt && devices.contains(&TargetKind::Gpu);
-        Coordinator::with_shared(tcfg, cache.clone(), db.clone())
-    });
-    match coord.offload_source(&req.code, req.lang, &req.name) {
+    match session.offload(&job.req) {
         Ok(report) => {
             {
                 let mut s = stats.lock().unwrap();
@@ -281,11 +272,11 @@ fn handle_offload(
                     s.learned += 1;
                 }
             }
-            proto::ok_offload(req.id, &report, wid)
+            proto::ok_offload(job.id, &report, wid, &job.warnings)
         }
         Err(e) => {
             stats.lock().unwrap().errors += 1;
-            proto::err(req.id, &e.to_string())
+            proto::err(job.id, &e.to_string())
         }
     }
 }
@@ -368,7 +359,7 @@ pub fn serve_tcp(addr: &str, cfg: Config, opts: ServeOptions) -> Result<()> {
 }
 
 /// Serve line-delimited JSON on stdin/stdout (single-client mode; offload
-/// work still runs on the coordinator pool). Returns at EOF or on the
+/// work still runs on the session pool). Returns at EOF or on the
 /// `shutdown` op.
 pub fn serve_stdio(cfg: Config, opts: ServeOptions) -> Result<()> {
     let service = Service::start(cfg, &opts);
@@ -433,6 +424,7 @@ pub fn spawn_tcp(cfg: Config, opts: ServeOptions, addr: &str) -> Result<ServerHa
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::device::TargetKind;
     use crate::ir::Lang;
 
     fn service() -> Service {
@@ -446,6 +438,12 @@ mod tests {
         assert!(!quit);
         assert_eq!(resp.get("id").and_then(|v| v.as_i64()), Some(5));
         assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(
+            resp.get("schema_version").and_then(|v| v.as_i64()),
+            Some(crate::api::SCHEMA_VERSION),
+            "every response is versioned: {}",
+            resp.to_string()
+        );
 
         let (resp, _) = s.dispatch_line("garbage");
         assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(false));
@@ -459,6 +457,40 @@ mod tests {
 
         let (_, quit) = s.dispatch_line(r#"{"op":"shutdown","id":7}"#);
         assert!(quit);
+        s.shutdown();
+    }
+
+    #[test]
+    fn unknown_op_lists_supported_ops() {
+        let s = service();
+        let (resp, quit) = s.dispatch_line(r#"{"op":"dance","id":3}"#);
+        assert!(!quit);
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(false));
+        assert_eq!(resp.get("id").and_then(|v| v.as_i64()), Some(3));
+        let err = resp.get("error").and_then(|v| v.as_str()).unwrap();
+        assert!(
+            err.contains("supported: offload, stats, ping, shutdown"),
+            "unknown-op error must name the supported ops: {err}"
+        );
+        s.shutdown();
+    }
+
+    #[test]
+    fn unknown_request_fields_surface_as_warnings() {
+        let s = service();
+        let code = crate::workloads::get("smallloops", Lang::C).unwrap().code;
+        let line = format!(
+            r#"{{"op":"offload","id":4,"name":"smallloops","lang":"c","code":{},"tarmget":"gpu"}}"#,
+            Json::Str(code.to_string()).to_string()
+        );
+        let (resp, _) = s.dispatch_line(&line);
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "{}", resp.to_string());
+        let warnings = resp.get("warnings").and_then(|v| v.items()).expect("warnings array");
+        assert_eq!(warnings.len(), 1, "{}", resp.to_string());
+        assert!(warnings[0].as_str().unwrap().contains("tarmget"));
+        // well-formed requests carry no warnings array at all
+        let (resp, _) = s.dispatch_line(r#"{"op":"ping","id":5}"#);
+        assert!(resp.get("warnings").is_none());
         s.shutdown();
     }
 
@@ -492,16 +524,12 @@ mod tests {
     fn per_request_target_override() {
         let s = service();
         let code = crate::workloads::get("blackscholes", Lang::C).unwrap().code;
-        let req = Request::Offload(Box::new(OffloadRequest {
-            id: 1,
-            name: "blackscholes".to_string(),
-            lang: Lang::C,
-            code: code.to_string(),
-            target: Some(TargetKind::ManyCore),
-            devices: None,
-            power_weight: None,
-        }));
-        let (resp, _) = s.dispatch(req);
+        let req = OffloadRequest::source(code, Lang::C)
+            .name("blackscholes")
+            .devices(vec![TargetKind::ManyCore])
+            .build()
+            .unwrap();
+        let (resp, _) = s.dispatch(Request::offload(1, req));
         assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
         // a GPU request for the same program must not reuse the
         // many-core pattern (targets are keyed separately)
@@ -517,16 +545,12 @@ mod tests {
     fn per_request_device_set_runs_mixed_placement() {
         let s = service();
         let code = crate::workloads::get("smallloops", Lang::C).unwrap().code;
-        let req = Request::Offload(Box::new(OffloadRequest {
-            id: 5,
-            name: "smallloops".to_string(),
-            lang: Lang::C,
-            code: code.to_string(),
-            target: None,
-            devices: Some(vec![TargetKind::Gpu, TargetKind::ManyCore]),
-            power_weight: None,
-        }));
-        let (resp, _) = s.dispatch(req);
+        let req = OffloadRequest::source(code, Lang::C)
+            .name("smallloops")
+            .devices(vec![TargetKind::Gpu, TargetKind::ManyCore])
+            .build()
+            .unwrap();
+        let (resp, _) = s.dispatch(Request::offload(5, req));
         assert_eq!(
             resp.get("ok").and_then(|v| v.as_bool()),
             Some(true),

@@ -1,0 +1,212 @@
+//! The versioned-API contract, end to end:
+//!
+//! * CLI-flag-shaped requests → canonical JSON → parsed request must be
+//!   the identical [`OffloadRequest`] (lossless round-trip).
+//! * Golden wire fixtures: every v1 request line must decode to the same
+//!   [`OffloadRequest`] as its v2 equivalent (`tests/fixtures/*.jsonl`).
+//! * Every entry path — library session, serve daemon — emits the same
+//!   versioned report JSON for the same request.
+//! * A v2 client round-trips against the daemon (v1 client coverage
+//!   lives unmodified in `tests/serve.rs`).
+
+use envadapt::api::{OffloadRequest, OffloadSession, SCHEMA_VERSION};
+use envadapt::config::Config;
+use envadapt::device::TargetKind;
+use envadapt::ir::Lang;
+use envadapt::proto::{self, Op, Request, Response};
+use envadapt::server::{self, ServeOptions, Service};
+use envadapt::util::json::Json;
+use envadapt::workloads;
+
+/// The request shapes the CLI's flag combinations produce (each field
+/// exercised alone and in combination — a dropped or renamed field breaks
+/// the identity).
+fn cli_shaped_requests() -> Vec<OffloadRequest> {
+    vec![
+        // bare `envadapt offload mm`
+        OffloadRequest::workload("mm", Lang::C).build().unwrap(),
+        // --lang js + a source file
+        OffloadRequest::source("function main() { }", Lang::JavaScript)
+            .name("app")
+            .build()
+            .unwrap(),
+        // --pop/--gens
+        OffloadRequest::workload("fourier", Lang::Python)
+            .population(6)
+            .generations(9)
+            .build()
+            .unwrap(),
+        // --devices + --power-weight
+        OffloadRequest::workload("hetero", Lang::Java)
+            .devices(vec![TargetKind::Gpu, TargetKind::ManyCore])
+            .power_weight(0.25)
+            .build()
+            .unwrap(),
+        // --target fpga (one-element device set)
+        OffloadRequest::workload("stencil", Lang::C)
+            .devices(vec![TargetKind::Fpga])
+            .build()
+            .unwrap(),
+        // --naive-transfers --no-funcblock + every remaining knob
+        OffloadRequest::source("void main() { }", Lang::C)
+            .name("ablation")
+            .naive_transfers(true)
+            .funcblock(false)
+            .funcblock_budget(8)
+            .population(4)
+            .generations(3)
+            .power_weight(1.0)
+            .devices(vec![TargetKind::ManyCore])
+            .build()
+            .unwrap(),
+    ]
+}
+
+#[test]
+fn request_to_canonical_json_and_back_is_identity() {
+    for req in cli_shaped_requests() {
+        // canonical body encoding
+        let (back, warnings) = OffloadRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(back, req, "canonical JSON round-trip must be lossless");
+        assert!(warnings.is_empty());
+
+        // full wire line (envelope + body), through the protocol codec
+        let line = proto::offload_request_v2(42, &req);
+        let parsed = Request::parse_line(&line).unwrap();
+        assert_eq!(parsed.id, 42);
+        assert!(parsed.warnings.is_empty(), "{:?}", parsed.warnings);
+        match parsed.op {
+            Op::Offload(r) => assert_eq!(*r, req, "wire round-trip must be lossless"),
+            other => panic!("wrong op: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn golden_v1_fixtures_decode_like_their_v2_equivalents() {
+    let v1 = include_str!("fixtures/wire_v1.jsonl");
+    let v2 = include_str!("fixtures/wire_v2.jsonl");
+    let v1: Vec<&str> = v1.lines().filter(|l| !l.trim().is_empty()).collect();
+    let v2: Vec<&str> = v2.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert_eq!(v1.len(), v2.len(), "fixture files must pair line for line");
+    assert!(v1.len() >= 5, "keep a meaningful corpus");
+    for (i, (l1, l2)) in v1.iter().zip(&v2).enumerate() {
+        assert!(!l1.contains("schema_version"), "line {i}: v1 fixtures are v1");
+        assert!(l2.contains("\"schema_version\":2"), "line {i}: v2 fixtures are v2");
+        let r1 = Request::parse_line(l1).unwrap_or_else(|e| panic!("v1 line {i}: {e}"));
+        let r2 = Request::parse_line(l2).unwrap_or_else(|e| panic!("v2 line {i}: {e}"));
+        assert_eq!(r1.id, r2.id, "line {i}");
+        assert!(r1.warnings.is_empty() && r2.warnings.is_empty(), "line {i}");
+        match (r1.op, r2.op) {
+            (Op::Offload(a), Op::Offload(b)) => {
+                assert_eq!(a, b, "fixture line {i}: v1 and v2 must decode identically")
+            }
+            other => panic!("fixture line {i}: wrong ops {other:?}"),
+        }
+        // and the v1 request re-encodes canonically to a line that parses
+        // back to the same request (v1 → v2 upgrade path)
+        let r1 = Request::parse_line(l1).unwrap();
+        let upgraded = Request::parse_line(&r1.to_line()).unwrap();
+        match (r1.op, upgraded.op) {
+            (Op::Offload(a), Op::Offload(b)) => assert_eq!(a, b, "line {i}"),
+            other => panic!("fixture line {i}: wrong ops {other:?}"),
+        }
+    }
+}
+
+/// Report JSON with the wall-clock field removed (the only
+/// non-deterministic report field).
+fn stable_report(rep: &Json) -> Json {
+    match rep {
+        Json::Obj(kvs) => Json::Obj(
+            kvs.iter().filter(|(k, _)| k != "search_wall_s").cloned().collect(),
+        ),
+        other => other.clone(),
+    }
+}
+
+#[test]
+fn library_session_and_serve_daemon_emit_the_same_report_json() {
+    let req = OffloadRequest::workload("smallloops", Lang::Python).build().unwrap();
+
+    // entry path 1: library embedding (OffloadSession)
+    let report = OffloadSession::new(Config::fast_sim()).offload(&req).unwrap();
+    let lib_json = report.to_json();
+    assert_eq!(
+        lib_json.get("schema_version").and_then(|v| v.as_i64()),
+        Some(SCHEMA_VERSION)
+    );
+
+    // entry path 2: the serve daemon, same request over the wire
+    let service = Service::start(Config::fast_sim(), &ServeOptions { pool: 1, db_path: None });
+    let (resp, _) = service.dispatch_line(&proto::offload_request_v2(1, &req));
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "{}", resp.to_string());
+    let served = resp.get("report").expect("offload response carries the report");
+
+    assert_eq!(
+        stable_report(served),
+        stable_report(&lib_json),
+        "every entry path must emit the identical versioned report JSON"
+    );
+    service.shutdown();
+}
+
+#[test]
+fn batch_and_adaptive_reports_are_the_same_versioned_json() {
+    let req = OffloadRequest::workload("smallloops", Lang::C).build().unwrap();
+
+    // entry path 3: batch
+    let batch = OffloadSession::new(Config::fast_sim()).offload_batch(&[req.clone()], 2);
+    let batch_json = batch[0].as_ref().unwrap().to_json();
+
+    // entry path 4: adaptive (single target = the same search)
+    let mut session = OffloadSession::new(Config::fast_sim());
+    let adaptive = session.offload_adaptive(&req, &[TargetKind::Gpu]).unwrap();
+    let adaptive_json = adaptive.chosen_report().to_json();
+
+    assert_eq!(stable_report(&batch_json), stable_report(&adaptive_json));
+    assert_eq!(
+        batch_json.get("schema_version").and_then(|v| v.as_i64()),
+        Some(SCHEMA_VERSION)
+    );
+}
+
+#[test]
+fn v2_client_round_trips_against_the_daemon() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    let handle = server::spawn_tcp(
+        Config::fast_sim(),
+        ServeOptions { pool: 1, db_path: None },
+        "127.0.0.1:0",
+    )
+    .expect("spawn server");
+    let stream = TcpStream::connect(handle.addr()).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut writer = stream;
+
+    let code = workloads::get("mixed", Lang::JavaScript).unwrap().code;
+    let req = OffloadRequest::source(code, Lang::JavaScript)
+        .name("mixed")
+        .devices(vec![TargetKind::Gpu])
+        .build()
+        .unwrap();
+    let line = proto::offload_request_v2(7, &req);
+    writer.write_all(line.as_bytes()).unwrap();
+    writer.write_all(b"\n").unwrap();
+    writer.flush().unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let r = Response::parse_line(&resp).unwrap();
+    assert!(r.ok, "{:?}", r.error);
+    assert_eq!(r.id, 7);
+    assert_eq!(r.schema_version, SCHEMA_VERSION);
+    let rep = r.report().expect("report payload");
+    assert_eq!(rep.get("schema_version").and_then(|v| v.as_i64()), Some(SCHEMA_VERSION));
+    assert_eq!(rep.get("app").and_then(|v| v.as_str()), Some("mixed"));
+    assert_eq!(rep.get("lang").and_then(|v| v.as_str()), Some("javascript"));
+
+    drop(reader);
+    drop(writer);
+    handle.shutdown().expect("clean shutdown");
+}

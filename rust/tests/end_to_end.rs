@@ -3,7 +3,8 @@
 //! and the PJRT-backed device.
 
 use envadapt::config::Config;
-use envadapt::coordinator::{offload_workload, Coordinator};
+use envadapt::api::offload_workload;
+use envadapt::coordinator::Coordinator;
 use envadapt::ir::Lang;
 use envadapt::vm::RegionExec;
 use envadapt::workloads;

@@ -4,7 +4,8 @@
 
 use envadapt::analysis;
 use envadapt::config::Config;
-use envadapt::coordinator::{offload_adaptive, offload_workload, Coordinator};
+use envadapt::api::{offload_workload, OffloadRequest, OffloadSession};
+use envadapt::coordinator::Coordinator;
 use envadapt::device::{CostModel, MultiDeviceFactory, TargetKind};
 use envadapt::engine::{self, MeasurementCache, MeasurementEngine};
 use envadapt::frontend::parse;
@@ -177,8 +178,14 @@ fn adaptive_rerun_reuses_the_shared_cache_per_target() {
     cfg.cache_path = Some(path.clone());
     let src = envadapt::workloads::get("smallloops", Lang::C).unwrap();
 
-    let r1 = offload_adaptive(src.code, Lang::C, "smallloops", &cfg, &TargetKind::all()).unwrap();
-    let r2 = offload_adaptive(src.code, Lang::C, "smallloops", &cfg, &TargetKind::all()).unwrap();
+    // fresh session per run (fresh process in spirit): only the
+    // persistent cache file carries warmth across the two runs
+    let adaptive = || {
+        let req = OffloadRequest::source(src.code, Lang::C).name("smallloops").build().unwrap();
+        OffloadSession::new(cfg.clone()).offload_adaptive(&req, &TargetKind::all()).unwrap()
+    };
+    let r1 = adaptive();
+    let r2 = adaptive();
     assert_eq!(r1.chosen, r2.chosen);
     for ((t1, a), (t2, b)) in r1.per_target.iter().zip(&r2.per_target) {
         assert_eq!(t1, t2);
