@@ -1,10 +1,11 @@
 #!/usr/bin/env python3
-"""Engine-bench regression gate.
+"""Bench regression gate.
 
-Compares a fresh ``BENCH_engine.json`` (written by ``cargo bench --
-engine``) against the committed baseline and fails when measurement
-throughput (evals/sec) regressed by more than the threshold at any
-worker count.
+Compares a fresh bench JSON against the committed baseline and fails
+when throughput (evals/sec) regressed by more than the threshold on any
+row. Covers both bench files: ``BENCH_engine.json`` (rows keyed by
+``workers``; ``cargo bench -- engine``) and ``BENCH_vm.json`` (rows
+keyed by ``workload``; ``cargo bench -- vm``).
 
 A placeholder baseline (``evals_per_sec: null`` — committed before the
 first toolchain-equipped run) skips the gate for that row, so the gate
@@ -19,8 +20,14 @@ import sys
 THRESHOLD = 0.25  # fail when fresh < (1 - THRESHOLD) * baseline
 
 
+def row_key(r):
+    # BENCH_engine.json rows are per worker count, BENCH_vm.json rows per
+    # workload family; either value is a stable row identity
+    return r.get("workers") if r.get("workers") is not None else r.get("workload")
+
+
 def rows(doc):
-    return {r.get("workers"): r.get("evals_per_sec") for r in doc.get("results", [])}
+    return {row_key(r): r.get("evals_per_sec") for r in doc.get("results", [])}
 
 
 def main(argv):
@@ -35,38 +42,39 @@ def main(argv):
         fresh = json.load(f)
     base_rows, fresh_rows = rows(baseline), rows(fresh)
     if not base_rows:
-        sys.exit("baseline has no results[] — malformed BENCH_engine.json")
+        sys.exit("baseline has no results[] — malformed bench JSON")
+    bench = baseline.get("bench", "bench")
 
     failures = []
     gated = 0
-    for workers in sorted(base_rows):
-        base_eps = base_rows[workers]
-        fresh_eps = fresh_rows.get(workers)
+    for key in sorted(base_rows, key=str):
+        base_eps = base_rows[key]
+        fresh_eps = fresh_rows.get(key)
         if base_eps is None:
-            print(f"workers={workers}: baseline pending (placeholder) — gate skipped")
+            print(f"{key}: baseline pending (placeholder) — gate skipped")
             continue
         if fresh_eps is None:
-            failures.append(f"workers={workers}: missing from fresh results")
+            failures.append(f"{key}: missing from fresh results")
             continue
         gated += 1
         ratio = fresh_eps / base_eps
         status = "OK" if ratio >= 1.0 - threshold else "REGRESSION"
         print(
-            f"workers={workers}: {base_eps:.1f} -> {fresh_eps:.1f} evals/sec "
+            f"{key}: {base_eps:.1f} -> {fresh_eps:.1f} evals/sec "
             f"({ratio:.2f}x) {status}"
         )
         if status == "REGRESSION":
             failures.append(
-                f"workers={workers}: throughput fell to {ratio:.2f}x of baseline "
+                f"{key}: throughput fell to {ratio:.2f}x of baseline "
                 f"(limit {1.0 - threshold:.2f}x)"
             )
 
     if failures:
-        sys.exit("engine bench regression gate FAILED:\n  " + "\n  ".join(failures))
+        sys.exit(f"{bench} regression gate FAILED:\n  " + "\n  ".join(failures))
     if gated:
-        print(f"engine throughput within {threshold:.0%} of baseline ({gated} rows gated)")
+        print(f"{bench} within {threshold:.0%} of baseline ({gated} rows gated)")
     else:
-        print("no armed baseline rows — commit the fresh BENCH_engine.json to arm the gate")
+        print(f"no armed baseline rows — commit the fresh {bench} JSON to arm the gate")
 
 
 if __name__ == "__main__":

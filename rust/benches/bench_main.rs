@@ -67,6 +67,9 @@ fn main() {
     if want("engine") {
         measurement_throughput();
     }
+    if want("vm") {
+        vm_throughput();
+    }
     if want("micro") {
         micro_benchmarks();
     }
@@ -190,6 +193,79 @@ fn measurement_throughput() {
         .set("results", Json::Arr(arr));
     if let Err(e) = std::fs::write("BENCH_engine.json", j.to_pretty() + "\n") {
         eprintln!("warning: could not write BENCH_engine.json: {e}");
+    }
+}
+
+/// vm_throughput: single-measurement evaluations/second of the
+/// tree-walking interpreter vs the bytecode VM, per workload family —
+/// the raw-speed lever behind the whole measurement engine. Asserts
+/// bit-identical Outcomes on the way (the equivalence contract) and
+/// records the comparison to BENCH_vm.json.
+fn vm_throughput() {
+    use envadapt::bytecode;
+    use envadapt::util::json::Json;
+    use envadapt::vm;
+
+    println!("## vm — interpreter vs bytecode measurement throughput (evals/sec)\n");
+
+    let mut rows = Vec::new();
+    let mut arr = Vec::new();
+    let mut speedups = Vec::new();
+    for &app in workloads::APPS {
+        let s = workloads::get(app, Lang::C).unwrap();
+        let p = parse(s.code, Lang::C, app).unwrap();
+        let a = analysis::analyze(&p);
+        let gene = vec![true; a.gene_loops().len()];
+        let plan = analysis::build_plan(&a, &gene, false);
+        let compiled = bytecode::compile(&p).unwrap();
+
+        // equivalence spot-check before timing anything
+        let mut d1 = GpuDevice::simulated(CostModel::default());
+        let mut d2 = GpuDevice::simulated(CostModel::default());
+        let t = vm::run(&p, &plan, &mut d1, VmConfig::default()).unwrap();
+        let b = bytecode::run(&compiled, &plan, &mut d2, VmConfig::default()).unwrap();
+        assert_eq!(t.cpu_ops, b.cpu_ops, "{app}: engines diverge");
+        assert_eq!(t.prints, b.prints, "{app}: engines diverge");
+
+        // time repeated single-gene measurements, the engine's unit of work
+        let reps = 20;
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            let mut dev = GpuDevice::simulated(CostModel::default());
+            vm::run(&p, &plan, &mut dev, VmConfig::default()).unwrap();
+        }
+        let interp_eps = reps as f64 / t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            let mut dev = GpuDevice::simulated(CostModel::default());
+            bytecode::run(&compiled, &plan, &mut dev, VmConfig::default()).unwrap();
+        }
+        let byte_eps = reps as f64 / t0.elapsed().as_secs_f64();
+
+        let speedup = byte_eps / interp_eps;
+        speedups.push(speedup);
+        rows.push(vec![
+            app.to_string(),
+            format!("{interp_eps:.1}"),
+            format!("{byte_eps:.1}"),
+            format!("{speedup:.2}x"),
+        ]);
+        arr.push(
+            Json::obj()
+                .set("workload", app)
+                .set("interp_evals_per_sec", interp_eps)
+                .set("evals_per_sec", byte_eps),
+        );
+    }
+    println!(
+        "{}",
+        markdown_table(&["workload", "interp evals/sec", "bytecode evals/sec", "speedup"], &rows)
+    );
+    println!("(geomean speedup: {:.2}x)\n", geomean(&speedups));
+
+    let j = Json::obj().set("bench", "vm_throughput").set("results", Json::Arr(arr));
+    if let Err(e) = std::fs::write("BENCH_vm.json", j.to_pretty() + "\n") {
+        eprintln!("warning: could not write BENCH_vm.json: {e}");
     }
 }
 

@@ -44,7 +44,7 @@
 use crate::config::Config;
 use crate::coordinator::{Coordinator, OffloadReport};
 use crate::device::TargetKind;
-use crate::engine::{self, SharedCache};
+use crate::engine::{self, SharedCache, SharedCompiledCache};
 use crate::ir::Lang;
 use crate::patterndb::{self, PatternDb, SharedPatternDb};
 use crate::placement::DeviceSet;
@@ -578,6 +578,9 @@ const MAX_COORDS: usize = 16;
 pub struct OffloadSession {
     cfg: Config,
     cache: SharedCache,
+    /// compiled-bytecode cache shared across this session's coordinators
+    /// and batch workers: one IR→bytecode compilation per program, ever
+    compiled: SharedCompiledCache,
     db: SharedPatternDb,
     coords: HashMap<String, Coordinator>,
 }
@@ -595,7 +598,13 @@ impl OffloadSession {
     /// the serve daemon's workers and batch workers all learn into, and
     /// replay from, one store.
     pub fn with_shared(cfg: Config, cache: SharedCache, db: SharedPatternDb) -> OffloadSession {
-        OffloadSession { cfg, cache, db, coords: HashMap::new() }
+        OffloadSession {
+            cfg,
+            cache,
+            compiled: engine::compiled_shared(),
+            db,
+            coords: HashMap::new(),
+        }
     }
 
     /// The session's base configuration (request fields override it per
@@ -635,8 +644,11 @@ impl OffloadSession {
             self.coords.clear();
         }
         let cache = self.cache.clone();
+        let compiled = self.compiled.clone();
         let db = self.db.clone();
-        self.coords.entry(key).or_insert_with(|| Coordinator::with_shared(cfg, cache, db))
+        self.coords
+            .entry(key)
+            .or_insert_with(|| Coordinator::with_caches(cfg, cache, compiled, db))
     }
 
     /// Whether `req` would measure through real PJRT artifacts (builds
@@ -678,11 +690,13 @@ impl OffloadSession {
         std::thread::scope(|scope| {
             for _ in 0..pool {
                 let cache = self.cache.clone();
+                let compiled = self.compiled.clone();
                 let db = self.db.clone();
                 let next = &next;
                 let results = &results;
                 scope.spawn(move || {
                     let mut worker = OffloadSession::with_shared(wcfg.clone(), cache, db);
+                    worker.compiled = compiled;
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         if i >= requests.len() {

@@ -1,0 +1,1555 @@
+//! Register-bytecode engine for the measurement hot path.
+//!
+//! The GA evaluates thousands of candidate genes against one program; the
+//! tree-walking interpreter in [`crate::vm`] re-walks the IR and re-hashes
+//! string-keyed environments for every one of them. This module compiles a
+//! [`Program`] **once** into a flat register bytecode — locals resolved to
+//! frame slots, loop bounds constant-folded, statement charges batched —
+//! and executes it with a tight dispatch loop. The [`crate::vm::ExecPlan`]
+//! (the placement gene's rendering) is consulted only at region-boundary
+//! ops, so one compiled artifact serves every gene evaluation.
+//!
+//! The contract is **bit-identical semantics** with the tree-walker: the
+//! same [`Outcome`] (prints, `cpu_ops`, `gpu_ops`, seconds, energy,
+//! transfers, residency staging) for every program/plan pair on which both
+//! engines succeed, and failure on the same program/plan pairs (error
+//! *messages* and partially-accumulated state may differ on the failure
+//! path — outcomes of failed runs are discarded by the measurement layer).
+//! `tests/bytecode_differential.rs` and `tests/property.rs` prove the
+//! contract differentially; the tree-walker remains the semantic reference
+//! and stays reachable via [`crate::vm::ExecEngine::TreeWalk`].
+//!
+//! Programs that exceed the compiler's nesting or register budgets fail to
+//! compile; callers (see [`crate::measure::Measurer`]) fall back to the
+//! reference interpreter, so pathological inputs lose speed, never
+//! correctness.
+
+use crate::ir::*;
+use crate::libs;
+use crate::util::fxhash::FxHashMap;
+use crate::vm::{
+    self, new_array, ArrayRef, Device, ExecPlan, GpuRegion, NullDevice, Outcome, RegionExec,
+    Value, VmConfig,
+};
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+
+/// Compiler recursion guard. The front ends already bound nesting at
+/// `MAX_PARSE_DEPTH` (160); this slightly larger bound exists for
+/// programmatically built IR, so deep trees fail with a clean error
+/// instead of overflowing the compiler's stack.
+pub const MAX_COMPILE_DEPTH: usize = 200;
+
+/// Per-function frame-register ceiling — bounds register allocation on
+/// adversarial inputs (compile error → reference-interpreter fallback).
+pub const MAX_FRAME_REGS: usize = 1 << 16;
+
+type Reg = u32;
+
+/// A counted-loop bound: folded literal or register (satellite bugfix —
+/// literal bounds never touch the environment at run time).
+#[derive(Debug, Clone, Copy)]
+enum Bound {
+    Const(i64),
+    Reg(Reg),
+}
+
+/// One bytecode instruction. Register operands index the frame; jump
+/// targets are absolute instruction indices within the function.
+#[derive(Debug, Clone)]
+enum Instr {
+    /// batched op-count charge (sum of per-node charges since the last
+    /// flush point; flushed before every label and control transfer so
+    /// both engines agree on totals at every observable point)
+    Charge(u64),
+    /// bump the `VmConfig` bound-eval test counter by `n` (number of
+    /// loop bounds at this site that still need dynamic evaluation)
+    BoundEvals(u64),
+    LoadInt { dst: Reg, v: i64 },
+    LoadFloat { dst: Reg, v: f64 },
+    /// `dst = as_i64(src)` — `int` declaration coercion
+    CastInt { dst: Reg, src: Reg },
+    Copy { dst: Reg, src: Reg },
+    Bin { op: BinOp, dst: Reg, a: Reg, b: Reg },
+    Neg { dst: Reg, src: Reg },
+    Not { dst: Reg, src: Reg },
+    /// `dst = Int(truthy(src))` — the joining write of `&&` / `||`
+    Truthy { dst: Reg, src: Reg },
+    Intr { f: Intrinsic, dst: Reg, a: Reg, b: Reg },
+    Len { dst: Reg, base: Reg, dim: usize },
+    LoadIdx { dst: Reg, base: Reg, idx: Box<[Reg]> },
+    StoreIdx { base: Reg, idx: Box<[Reg]>, op: AssignOp, src: Reg },
+    AllocArr { dst: Reg, dims: Box<[Reg]> },
+    Print { src: Reg },
+    Jump(u32),
+    JumpIfFalsy { cond: Reg, to: u32 },
+    JumpIfTruthy { cond: Reg, to: u32 },
+    /// call in statement (`dst: None`) or expression position; `user` is a
+    /// pre-resolved function index, `is_lib` a pre-resolved library-name
+    /// check — the plan's `gpu_calls` routing stays a run-time decision
+    Call { name: Box<str>, user: Option<u32>, is_lib: bool, args: Box<[Reg]>, dst: Option<Reg> },
+    /// region-boundary marker at a `for` statement: consults the plan; a
+    /// `Library` region executes entirely here and jumps to `after`
+    RegionEnter { id: LoopId, after: u32 },
+    /// counted-loop entry: resolve bounds, record region parallelism,
+    /// save the loop variable, bind it, or jump to `exit` when zero-trip
+    LoopInit {
+        site: u32,
+        id: LoopId,
+        var: Reg,
+        save: Reg,
+        start: Bound,
+        end: Bound,
+        step: Bound,
+        exit: u32,
+    },
+    /// counted-loop back edge: advance, re-check, re-bind
+    LoopNext { site: u32, var: Reg, body: u32 },
+    /// restore the loop variable's pre-loop binding
+    LoopRestore { var: Reg, save: Reg },
+    /// region-boundary marker at loop exit: flush generic-kernel charges
+    RegionExit { id: LoopId },
+    /// explicit `return` (checked against active-region escape)
+    Ret { src: Option<Reg> },
+    /// implicit fall-off end of a function body
+    End,
+    /// compile-time-known run-time error (e.g. `break` outside any loop)
+    Fail(Box<str>),
+}
+
+/// Per-frame state of one `for` site. A site is re-initialized by
+/// `LoopInit` on every entry, and a frame never runs the same site
+/// concurrently with itself, so one state per site suffices.
+#[derive(Debug, Clone, Copy)]
+struct LoopState {
+    i: i64,
+    end: i64,
+    step: i64,
+}
+
+#[derive(Debug)]
+struct CompiledFunc {
+    name: String,
+    n_params: usize,
+    /// names of the named slots (`slot_names[r]` labels register `r` for
+    /// error messages; temps sit above and have no names)
+    slot_names: Vec<String>,
+    /// name → named-slot register, for plan-supplied names (region copy
+    /// lists, library-region args)
+    slots: FxHashMap<String, Reg>,
+    /// total frame registers: named slots, then one save register per
+    /// `for` site, then statement temporaries
+    frame: usize,
+    /// number of `for` sites (extent of the frame's loop-state array)
+    sites: usize,
+    code: Vec<Instr>,
+}
+
+/// A program compiled to register bytecode. Plain data (`Send + Sync`):
+/// the measurement pool shares one artifact across worker threads via
+/// `Arc` — see `crate::engine::CompiledCache`.
+#[derive(Debug)]
+pub struct CompiledProgram {
+    funcs: Vec<CompiledFunc>,
+    entry: usize,
+}
+
+impl CompiledProgram {
+    /// Total instruction count across all functions (diagnostics/tests).
+    pub fn instr_count(&self) -> usize {
+        self.funcs.iter().map(|f| f.code.len()).sum()
+    }
+
+    /// Number of compiled functions.
+    pub fn func_count(&self) -> usize {
+        self.funcs.len()
+    }
+}
+
+// Shared across the measurement pool by Arc; must stay plain data.
+#[allow(dead_code)]
+fn _compiled_is_shareable() {
+    fn send_sync<T: Send + Sync>() {}
+    send_sync::<CompiledProgram>();
+}
+
+// ---------------------------------------------------------------------------
+// compiler
+// ---------------------------------------------------------------------------
+
+/// Compile `prog` to bytecode. Fails (cleanly) on IR that exceeds the
+/// nesting or register budgets, on intrinsic arity mismatches, or when no
+/// `main` exists — callers fall back to the reference interpreter.
+pub fn compile(prog: &Program) -> Result<CompiledProgram> {
+    let entry = prog
+        .functions
+        .iter()
+        .position(|f| f.name == "main")
+        .ok_or_else(|| anyhow!("program has no `main` function"))?;
+    let funcs = prog
+        .functions
+        .iter()
+        .map(|f| compile_func(prog, f))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(CompiledProgram { funcs, entry })
+}
+
+/// Ordered name → slot assignment for one function.
+#[derive(Default)]
+struct NameSet {
+    names: Vec<String>,
+    index: FxHashMap<String, Reg>,
+}
+
+impl NameSet {
+    fn add(&mut self, n: &str) -> Result<()> {
+        if !self.index.contains_key(n) {
+            if self.names.len() >= MAX_FRAME_REGS {
+                bail!("function uses too many variables");
+            }
+            self.index.insert(n.to_string(), self.names.len() as Reg);
+            self.names.push(n.to_string());
+        }
+        Ok(())
+    }
+}
+
+fn scan_stmt(s: &Stmt, ns: &mut NameSet, sites: &mut usize, d: usize) -> Result<()> {
+    if d > MAX_COMPILE_DEPTH {
+        bail!("program nests too deeply to compile (depth > {MAX_COMPILE_DEPTH})");
+    }
+    match s {
+        Stmt::Decl { name, dims, init, .. } => {
+            ns.add(name)?;
+            for e in dims {
+                scan_expr(e, ns, d + 1)?;
+            }
+            if let Some(e) = init {
+                scan_expr(e, ns, d + 1)?;
+            }
+        }
+        Stmt::Assign { target, value, .. } => {
+            ns.add(target.base_name())?;
+            if let LValue::Index { indices, .. } = target {
+                for e in indices {
+                    scan_expr(e, ns, d + 1)?;
+                }
+            }
+            scan_expr(value, ns, d + 1)?;
+        }
+        Stmt::For { var, start, end, step, body, .. } => {
+            *sites += 1;
+            ns.add(var)?;
+            scan_expr(start, ns, d + 1)?;
+            scan_expr(end, ns, d + 1)?;
+            scan_expr(step, ns, d + 1)?;
+            for s in body {
+                scan_stmt(s, ns, sites, d + 1)?;
+            }
+        }
+        Stmt::While { cond, body } => {
+            scan_expr(cond, ns, d + 1)?;
+            for s in body {
+                scan_stmt(s, ns, sites, d + 1)?;
+            }
+        }
+        Stmt::If { cond, then_body, else_body } => {
+            scan_expr(cond, ns, d + 1)?;
+            for s in then_body.iter().chain(else_body) {
+                scan_stmt(s, ns, sites, d + 1)?;
+            }
+        }
+        Stmt::Call { args, .. } => {
+            for e in args {
+                scan_expr(e, ns, d + 1)?;
+            }
+        }
+        Stmt::Return(Some(e)) | Stmt::Print(e) => scan_expr(e, ns, d + 1)?,
+        Stmt::Return(None) | Stmt::Break | Stmt::Continue => {}
+    }
+    Ok(())
+}
+
+fn scan_expr(e: &Expr, ns: &mut NameSet, d: usize) -> Result<()> {
+    if d > MAX_COMPILE_DEPTH {
+        bail!("expression nests too deeply to compile (depth > {MAX_COMPILE_DEPTH})");
+    }
+    match e {
+        Expr::IntLit(_) | Expr::FloatLit(_) => {}
+        Expr::Var(n) => ns.add(n)?,
+        Expr::Index { base, indices } => {
+            ns.add(base)?;
+            for i in indices {
+                scan_expr(i, ns, d + 1)?;
+            }
+        }
+        Expr::Binary { lhs, rhs, .. } => {
+            scan_expr(lhs, ns, d + 1)?;
+            scan_expr(rhs, ns, d + 1)?;
+        }
+        Expr::Unary { operand, .. } => scan_expr(operand, ns, d + 1)?,
+        Expr::Intrinsic { args, .. } | Expr::Call { args, .. } => {
+            for a in args {
+                scan_expr(a, ns, d + 1)?;
+            }
+        }
+        Expr::Len { base, .. } => ns.add(base)?,
+    }
+    Ok(())
+}
+
+/// Break/continue patch lists of one enclosing loop.
+#[derive(Default)]
+struct LoopCtx {
+    breaks: Vec<usize>,
+    continues: Vec<usize>,
+}
+
+struct FnCompiler<'a> {
+    prog: &'a Program,
+    fname: &'a str,
+    slots: FxHashMap<String, Reg>,
+    /// first temp register (named slots + save registers sit below)
+    tmp_base: usize,
+    tmp_next: usize,
+    tmp_max: usize,
+    save_base: usize,
+    next_site: u32,
+    code: Vec<Instr>,
+    /// charges accumulated since the last flush point
+    pending: u64,
+    loops: Vec<LoopCtx>,
+}
+
+fn compile_func(prog: &Program, f: &Function) -> Result<CompiledFunc> {
+    let mut ns = NameSet::default();
+    for p in &f.params {
+        ns.add(&p.name)?;
+    }
+    let mut sites = 0usize;
+    for s in &f.body {
+        scan_stmt(s, &mut ns, &mut sites, 0)?;
+    }
+    let n_named = ns.names.len();
+    let tmp_base = n_named + sites;
+    if tmp_base >= MAX_FRAME_REGS {
+        bail!("function frame exceeds the register budget");
+    }
+    let mut c = FnCompiler {
+        prog,
+        fname: &f.name,
+        slots: ns.index,
+        tmp_base,
+        tmp_next: tmp_base,
+        tmp_max: tmp_base,
+        save_base: n_named,
+        next_site: 0,
+        code: Vec::new(),
+        pending: 0,
+        loops: Vec::new(),
+    };
+    for s in &f.body {
+        c.stmt(s, 0)?;
+    }
+    c.flush();
+    c.code.push(Instr::End);
+    debug_assert_eq!(c.next_site as usize, sites);
+    Ok(CompiledFunc {
+        name: f.name.clone(),
+        n_params: f.params.len(),
+        slot_names: ns.names,
+        slots: c.slots,
+        frame: c.tmp_max,
+        sites,
+        code: c.code,
+    })
+}
+
+impl<'a> FnCompiler<'a> {
+    fn flush(&mut self) {
+        if self.pending > 0 {
+            self.code.push(Instr::Charge(self.pending));
+            self.pending = 0;
+        }
+    }
+
+    /// Flush pending charges and return the next instruction index — every
+    /// jump target must be created through here so batched charges never
+    /// straddle a label.
+    fn label(&mut self) -> u32 {
+        self.flush();
+        self.code.len() as u32
+    }
+
+    /// Emit an instruction whose jump target is patched later.
+    fn emit_patch(&mut self, i: Instr) -> usize {
+        self.code.push(i);
+        self.code.len() - 1
+    }
+
+    fn patch(&mut self, at: usize, to: u32) {
+        match &mut self.code[at] {
+            Instr::Jump(t)
+            | Instr::JumpIfFalsy { to: t, .. }
+            | Instr::JumpIfTruthy { to: t, .. }
+            | Instr::RegionEnter { after: t, .. }
+            | Instr::LoopInit { exit: t, .. } => *t = to,
+            other => unreachable!("patching non-jump instruction {other:?}"),
+        }
+    }
+
+    fn slot(&self, name: &str) -> Reg {
+        // the scan pre-pass registered every name that can appear
+        self.slots[name]
+    }
+
+    fn tmp(&mut self) -> Result<Reg> {
+        let r = self.tmp_next;
+        if r >= MAX_FRAME_REGS {
+            bail!("expression needs too many registers");
+        }
+        self.tmp_next += 1;
+        self.tmp_max = self.tmp_max.max(self.tmp_next);
+        Ok(r as Reg)
+    }
+
+    // ---- statements -------------------------------------------------------
+
+    fn stmt(&mut self, s: &Stmt, d: usize) -> Result<()> {
+        if d > MAX_COMPILE_DEPTH {
+            bail!("program nests too deeply to compile (depth > {MAX_COMPILE_DEPTH})");
+        }
+        // temporaries never live across statements
+        self.tmp_next = self.tmp_base;
+        // the tree-walker charges 1 per executed statement
+        self.pending += 1;
+        match s {
+            Stmt::Decl { name, ty, dims, init } => {
+                let dst = self.slot(name);
+                if dims.is_empty() {
+                    match init {
+                        Some(e) => {
+                            let r = self.expr(e, d + 1)?;
+                            match ty {
+                                Type::Int => self.code.push(Instr::CastInt { dst, src: r }),
+                                _ => self.code.push(Instr::Copy { dst, src: r }),
+                            }
+                        }
+                        None => match ty {
+                            Type::Int => self.code.push(Instr::LoadInt { dst, v: 0 }),
+                            _ => self.code.push(Instr::LoadFloat { dst, v: 0.0 }),
+                        },
+                    }
+                } else {
+                    let mut regs = Vec::with_capacity(dims.len());
+                    for e in dims {
+                        regs.push(self.expr(e, d + 1)?);
+                    }
+                    self.code.push(Instr::AllocArr { dst, dims: regs.into_boxed_slice() });
+                }
+                Ok(())
+            }
+            Stmt::Assign { target, op, value } => {
+                let rhs = self.expr(value, d + 1)?;
+                match target {
+                    LValue::Var(name) => {
+                        let dst = self.slot(name);
+                        match op {
+                            AssignOp::Set => self.code.push(Instr::Copy { dst, src: rhs }),
+                            _ => self.code.push(Instr::Bin {
+                                op: compound_binop(*op),
+                                dst,
+                                a: dst,
+                                b: rhs,
+                            }),
+                        }
+                    }
+                    LValue::Index { base, indices } => {
+                        let mut regs = Vec::with_capacity(indices.len().min(8));
+                        for e in indices.iter().take(8) {
+                            regs.push(self.expr(e, d + 1)?);
+                        }
+                        self.code.push(Instr::StoreIdx {
+                            base: self.slot(base),
+                            idx: regs.into_boxed_slice(),
+                            op: *op,
+                            src: rhs,
+                        });
+                    }
+                }
+                Ok(())
+            }
+            Stmt::For { .. } => self.for_stmt(s, d),
+            Stmt::While { cond, body } => {
+                let head = self.label();
+                self.pending += 1; // per-iteration loop check
+                let c = self.expr(cond, d + 1)?;
+                self.flush();
+                let jexit = self.emit_patch(Instr::JumpIfFalsy { cond: c, to: u32::MAX });
+                self.loops.push(LoopCtx::default());
+                for s in body {
+                    self.stmt(s, d + 1)?;
+                }
+                self.flush();
+                self.code.push(Instr::Jump(head));
+                let ctx = self.loops.pop().unwrap();
+                let end = self.label();
+                self.patch(jexit, end);
+                for j in ctx.breaks {
+                    self.patch(j, end);
+                }
+                for j in ctx.continues {
+                    self.patch(j, head);
+                }
+                Ok(())
+            }
+            Stmt::If { cond, then_body, else_body } => {
+                let c = self.expr(cond, d + 1)?;
+                self.flush();
+                let jelse = self.emit_patch(Instr::JumpIfFalsy { cond: c, to: u32::MAX });
+                for s in then_body {
+                    self.stmt(s, d + 1)?;
+                }
+                if else_body.is_empty() {
+                    let end = self.label();
+                    self.patch(jelse, end);
+                } else {
+                    self.flush();
+                    let jend = self.emit_patch(Instr::Jump(u32::MAX));
+                    let lelse = self.label();
+                    self.patch(jelse, lelse);
+                    for s in else_body {
+                        self.stmt(s, d + 1)?;
+                    }
+                    let end = self.label();
+                    self.patch(jend, end);
+                }
+                Ok(())
+            }
+            Stmt::Call { name, args } => {
+                let regs = self.arg_regs(args, d)?;
+                self.flush();
+                self.code.push(self.make_call(name, regs, None));
+                Ok(())
+            }
+            Stmt::Return(e) => {
+                let src = match e {
+                    Some(e) => Some(self.expr(e, d + 1)?),
+                    None => None,
+                };
+                self.flush();
+                self.code.push(Instr::Ret { src });
+                Ok(())
+            }
+            Stmt::Break | Stmt::Continue => {
+                let is_break = matches!(s, Stmt::Break);
+                self.flush();
+                if self.loops.is_empty() {
+                    // same run-time error the tree-walker raises when the
+                    // flow escapes the function body
+                    let msg = if self.fname == "main" {
+                        "break/continue escaped function body".to_string()
+                    } else {
+                        format!("break/continue escaped function `{}`", self.fname)
+                    };
+                    self.code.push(Instr::Fail(msg.into_boxed_str()));
+                } else {
+                    let j = self.emit_patch(Instr::Jump(u32::MAX));
+                    let ctx = self.loops.last_mut().unwrap();
+                    if is_break {
+                        ctx.breaks.push(j);
+                    } else {
+                        ctx.continues.push(j);
+                    }
+                }
+                Ok(())
+            }
+            Stmt::Print(e) => {
+                let r = self.expr(e, d + 1)?;
+                self.code.push(Instr::Print { src: r });
+                Ok(())
+            }
+        }
+    }
+
+    /// `for` layout:
+    ///
+    /// ```text
+    ///   Charge(..)                  ← statement charge, pre-entry mode
+    ///   RegionEnter{id, after}      ← Library regions run here, jump after
+    ///   <dynamic bound evals>       ← literals folded into LoopInit
+    ///   BoundEvals(n_dynamic)
+    ///   LoopInit{.., exit}          ← zero-trip jumps to exit
+    /// body:
+    ///   <body stmts>                ← break → exit, continue → next
+    /// next:
+    ///   LoopNext{.., body}
+    /// exit:
+    ///   LoopRestore
+    ///   RegionExit{id}              ← generic-kernel flush + copy-out
+    /// after:
+    /// ```
+    fn for_stmt(&mut self, s: &Stmt, d: usize) -> Result<()> {
+        let Stmt::For { id, var, start, end, step, body } = s else { unreachable!() };
+        let site = self.next_site;
+        self.next_site += 1;
+        let save = (self.save_base + site as usize) as Reg;
+        let var_slot = self.slot(var);
+        self.flush();
+        let re = self.emit_patch(Instr::RegionEnter { id: *id, after: u32::MAX });
+        let mut dynamic = 0u64;
+        let sb = self.bound(start, &mut dynamic, d)?;
+        let eb = self.bound(end, &mut dynamic, d)?;
+        let pb = self.bound(step, &mut dynamic, d)?;
+        if dynamic > 0 {
+            self.code.push(Instr::BoundEvals(dynamic));
+        }
+        self.flush();
+        let li = self.emit_patch(Instr::LoopInit {
+            site,
+            id: *id,
+            var: var_slot,
+            save,
+            start: sb,
+            end: eb,
+            step: pb,
+            exit: u32::MAX,
+        });
+        let body_head = self.label();
+        self.loops.push(LoopCtx::default());
+        for s in body {
+            self.stmt(s, d + 1)?;
+        }
+        self.flush();
+        let next = self.code.len();
+        self.code.push(Instr::LoopNext { site, var: var_slot, body: body_head });
+        let ctx = self.loops.pop().unwrap();
+        let exit = self.label();
+        self.code.push(Instr::LoopRestore { var: var_slot, save });
+        self.code.push(Instr::RegionExit { id: *id });
+        let after = self.label();
+        self.patch(re, after);
+        self.patch(li, exit);
+        for j in ctx.breaks {
+            self.patch(j, exit);
+        }
+        for j in ctx.continues {
+            self.patch(j, next as u32);
+        }
+        Ok(())
+    }
+
+    /// A loop bound: literals fold to a constant (still charged — the
+    /// tree-walker pays one op per bound node); everything else evaluates
+    /// through the generic path into a register.
+    fn bound(&mut self, e: &Expr, dynamic: &mut u64, d: usize) -> Result<Bound> {
+        match e {
+            Expr::IntLit(v) => {
+                self.pending += 1;
+                Ok(Bound::Const(*v))
+            }
+            // same truncating/saturating cast `as_i64` applies at run time
+            Expr::FloatLit(v) => {
+                self.pending += 1;
+                Ok(Bound::Const(*v as i64))
+            }
+            _ => {
+                *dynamic += 1;
+                let r = self.expr(e, d + 1)?;
+                Ok(Bound::Reg(r))
+            }
+        }
+    }
+
+    fn arg_regs(&mut self, args: &[Expr], d: usize) -> Result<Box<[Reg]>> {
+        let mut regs = Vec::with_capacity(args.len());
+        for a in args {
+            regs.push(self.expr(a, d + 1)?);
+        }
+        Ok(regs.into_boxed_slice())
+    }
+
+    fn make_call(&self, name: &str, args: Box<[Reg]>, dst: Option<Reg>) -> Instr {
+        let user = self
+            .prog
+            .functions
+            .iter()
+            .position(|f| f.name == name)
+            .map(|i| i as u32);
+        Instr::Call {
+            name: name.to_string().into_boxed_str(),
+            user,
+            is_lib: libs::is_library(name),
+            args,
+            dst,
+        }
+    }
+
+    // ---- expressions ------------------------------------------------------
+
+    /// Compile `e`; returns the register holding its value. Charges one op
+    /// per IR node into `pending`, exactly like the tree-walker's `eval`.
+    fn expr(&mut self, e: &Expr, d: usize) -> Result<Reg> {
+        if d > MAX_COMPILE_DEPTH {
+            bail!("expression nests too deeply to compile (depth > {MAX_COMPILE_DEPTH})");
+        }
+        self.pending += 1;
+        match e {
+            Expr::IntLit(v) => {
+                let t = self.tmp()?;
+                self.code.push(Instr::LoadInt { dst: t, v: *v });
+                Ok(t)
+            }
+            Expr::FloatLit(v) => {
+                let t = self.tmp()?;
+                self.code.push(Instr::LoadFloat { dst: t, v: *v });
+                Ok(t)
+            }
+            Expr::Var(n) => Ok(self.slot(n)),
+            Expr::Index { base, indices } => {
+                let mut regs = Vec::with_capacity(indices.len().min(8));
+                for e in indices.iter().take(8) {
+                    regs.push(self.expr(e, d + 1)?);
+                }
+                let t = self.tmp()?;
+                self.code.push(Instr::LoadIdx {
+                    dst: t,
+                    base: self.slot(base),
+                    idx: regs.into_boxed_slice(),
+                });
+                Ok(t)
+            }
+            Expr::Binary { op: op @ (BinOp::And | BinOp::Or), lhs, rhs } => {
+                // short-circuit: the rhs (and its charges) only run when
+                // the lhs doesn't decide — hence the in-branch flush
+                let a = self.expr(lhs, d + 1)?;
+                let t = self.tmp()?;
+                self.flush();
+                let jshort = if *op == BinOp::And {
+                    self.emit_patch(Instr::JumpIfFalsy { cond: a, to: u32::MAX })
+                } else {
+                    self.emit_patch(Instr::JumpIfTruthy { cond: a, to: u32::MAX })
+                };
+                let b = self.expr(rhs, d + 1)?;
+                self.flush();
+                self.code.push(Instr::Truthy { dst: t, src: b });
+                let jend = self.emit_patch(Instr::Jump(u32::MAX));
+                let lshort = self.label();
+                let v = if *op == BinOp::And { 0 } else { 1 };
+                self.code.push(Instr::LoadInt { dst: t, v });
+                let end = self.label();
+                self.patch(jshort, lshort);
+                self.patch(jend, end);
+                Ok(t)
+            }
+            Expr::Binary { op, lhs, rhs } => {
+                let a = self.expr(lhs, d + 1)?;
+                let b = self.expr(rhs, d + 1)?;
+                let t = self.tmp()?;
+                self.code.push(Instr::Bin { op: *op, dst: t, a, b });
+                Ok(t)
+            }
+            Expr::Unary { op, operand } => {
+                let r = self.expr(operand, d + 1)?;
+                let t = self.tmp()?;
+                match op {
+                    UnOp::Neg => self.code.push(Instr::Neg { dst: t, src: r }),
+                    UnOp::Not => self.code.push(Instr::Not { dst: t, src: r }),
+                }
+                Ok(t)
+            }
+            Expr::Intrinsic { f, args } => {
+                if args.len() < f.arity() {
+                    bail!(
+                        "intrinsic `{}` needs {} arguments, got {}",
+                        f.name(),
+                        f.arity(),
+                        args.len()
+                    );
+                }
+                // the tree-walker evaluates (and charges) every argument
+                let regs = self.arg_regs(args, d)?;
+                let a = regs[0];
+                let b = if f.arity() == 2 { regs[1] } else { a };
+                let t = self.tmp()?;
+                self.code.push(Instr::Intr { f: *f, dst: t, a, b });
+                Ok(t)
+            }
+            Expr::Call { name, args } => {
+                let regs = self.arg_regs(args, d)?;
+                let t = self.tmp()?;
+                self.flush();
+                self.code.push(self.make_call(name, regs, Some(t)));
+                Ok(t)
+            }
+            Expr::Len { base, dim } => {
+                let t = self.tmp()?;
+                self.code.push(Instr::Len { dst: t, base: self.slot(base), dim: *dim });
+                Ok(t)
+            }
+        }
+    }
+}
+
+fn compound_binop(op: AssignOp) -> BinOp {
+    match op {
+        AssignOp::Add => BinOp::Add,
+        AssignOp::Sub => BinOp::Sub,
+        AssignOp::Mul => BinOp::Mul,
+        AssignOp::Div => BinOp::Div,
+        AssignOp::Set => unreachable!("plain assignment compiles to Copy"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// executor
+// ---------------------------------------------------------------------------
+
+/// The generic-kernel region currently being interpreted.
+#[derive(Debug)]
+struct ActiveRegion {
+    region: GpuRegion,
+    /// call depth at entry: a `return` unwinding this frame escapes
+    depth: usize,
+}
+
+struct Exec<'a> {
+    prog: &'a CompiledProgram,
+    plan: &'a ExecPlan,
+    dev: &'a mut dyn Device,
+    cfg: VmConfig,
+    cpu_ops: u64,
+    gpu_ops_total: u64,
+    in_region: bool,
+    region_ops: u64,
+    region_parallel: HashMap<LoopId, u64>,
+    region: Option<ActiveRegion>,
+    prints: Vec<f64>,
+    call_depth: usize,
+}
+
+/// Run compiled `prog` under `plan` with `dev` — the bytecode counterpart
+/// of [`vm::run`], producing a bit-identical [`Outcome`].
+pub fn run(
+    prog: &CompiledProgram,
+    plan: &ExecPlan,
+    dev: &mut dyn Device,
+    cfg: VmConfig,
+) -> Result<Outcome> {
+    let mut ex = Exec {
+        prog,
+        plan,
+        dev,
+        cfg,
+        cpu_ops: 0,
+        gpu_ops_total: 0,
+        in_region: false,
+        region_ops: 0,
+        region_parallel: HashMap::new(),
+        region: None,
+        prints: Vec::new(),
+        call_depth: 0,
+    };
+    let entry = &prog.funcs[prog.entry];
+    if entry.n_params != 0 {
+        bail!("`main` must take no parameters");
+    }
+    ex.exec_func(prog.entry, Vec::new())?;
+    let cpu_seconds = ex.cpu_ops as f64 * ex.cfg.cpu_op_ns * 1e-9;
+    Ok(Outcome {
+        cpu_ops: ex.cpu_ops,
+        gpu_ops: ex.gpu_ops_total,
+        prints: ex.prints,
+        cpu_seconds,
+        gpu_seconds: ex.dev.gpu_seconds(),
+        energy_j: cpu_seconds * crate::device::HOST_CPU_WATTS + ex.dev.energy_joules(),
+        transfers: ex.dev.transfer_stats(),
+    })
+}
+
+/// CPU-only bytecode run — the counterpart of [`vm::run_cpu`].
+pub fn run_cpu(prog: &CompiledProgram, cfg: VmConfig) -> Result<Outcome> {
+    let plan = ExecPlan::cpu_only();
+    let mut dev = NullDevice;
+    run(prog, &plan, &mut dev, cfg)
+}
+
+/// Read register `r`, mapping an unset named slot to the tree-walker's
+/// "undefined variable" error.
+fn reg<'v>(f: &CompiledFunc, regs: &'v [Option<Value>], r: Reg) -> Result<&'v Value> {
+    match &regs[r as usize] {
+        Some(v) => Ok(v),
+        None => {
+            let name = f.slot_names.get(r as usize).map(|s| s.as_str()).unwrap_or("?");
+            bail!("undefined variable `{name}`")
+        }
+    }
+}
+
+fn array_at(f: &CompiledFunc, regs: &[Option<Value>], r: Reg) -> Result<ArrayRef> {
+    let name = f.slot_names.get(r as usize).map(|s| s.as_str()).unwrap_or("?");
+    match &regs[r as usize] {
+        Some(Value::Arr(a)) => Ok(a.clone()),
+        Some(_) => bail!("variable `{name}` is not an array"),
+        None => bail!("undefined variable `{name}`"),
+    }
+}
+
+/// Look up a plan-supplied array name (region copy lists).
+fn array_by_name(f: &CompiledFunc, regs: &[Option<Value>], name: &str) -> Result<ArrayRef> {
+    match f.slots.get(name).and_then(|&s| regs[s as usize].as_ref()) {
+        Some(Value::Arr(a)) => Ok(a.clone()),
+        Some(_) => bail!("variable `{name}` is not an array"),
+        None => bail!("undefined variable `{name}`"),
+    }
+}
+
+impl<'a> Exec<'a> {
+    #[inline]
+    fn charge(&mut self, n: u64) -> Result<()> {
+        if self.in_region {
+            self.region_ops += n;
+        } else {
+            self.cpu_ops += n;
+        }
+        if self.cpu_ops + self.region_ops + self.gpu_ops_total > self.cfg.max_ops {
+            bail!("operation budget exceeded ({} ops)", self.cfg.max_ops);
+        }
+        Ok(())
+    }
+
+    /// Resolve a loop bound to an `i64` (folded constants skip the frame).
+    #[inline]
+    fn bound_val(&self, f: &CompiledFunc, regs: &[Option<Value>], b: Bound) -> Result<i64> {
+        match b {
+            Bound::Const(v) => Ok(v),
+            Bound::Reg(r) => reg(f, regs, r)?.as_i64(),
+        }
+    }
+
+    fn exec_func(&mut self, fi: usize, args: Vec<Value>) -> Result<Option<Value>> {
+        let prog = self.prog;
+        let f = &prog.funcs[fi];
+        let mut regs: Vec<Option<Value>> = vec![None; f.frame];
+        for (i, v) in args.into_iter().enumerate() {
+            regs[i] = Some(v);
+        }
+        let mut loops = vec![LoopState { i: 0, end: 0, step: 1 }; f.sites];
+        let mut pc = 0usize;
+        loop {
+            let instr = &f.code[pc];
+            pc += 1;
+            match instr {
+                Instr::Charge(n) => self.charge(*n)?,
+                Instr::BoundEvals(n) => {
+                    if let Some(c) = &self.cfg.bound_eval_counter {
+                        c.fetch_add(*n, Ordering::Relaxed);
+                    }
+                }
+                Instr::LoadInt { dst, v } => regs[*dst as usize] = Some(Value::Int(*v)),
+                Instr::LoadFloat { dst, v } => regs[*dst as usize] = Some(Value::Float(*v)),
+                Instr::CastInt { dst, src } => {
+                    let v = reg(f, &regs, *src)?.as_i64()?;
+                    regs[*dst as usize] = Some(Value::Int(v));
+                }
+                Instr::Copy { dst, src } => {
+                    let v = reg(f, &regs, *src)?.clone();
+                    regs[*dst as usize] = Some(v);
+                }
+                Instr::Bin { op, dst, a, b } => {
+                    let x = reg(f, &regs, *a)?;
+                    let y = reg(f, &regs, *b)?;
+                    let v = vm::binary(*op, x, y)?;
+                    regs[*dst as usize] = Some(v);
+                }
+                Instr::Neg { dst, src } => {
+                    let v = match reg(f, &regs, *src)? {
+                        Value::Int(i) => Value::Int(-i),
+                        Value::Float(x) => Value::Float(-x),
+                        Value::Arr(_) => bail!("cannot negate an array"),
+                    };
+                    regs[*dst as usize] = Some(v);
+                }
+                Instr::Not { dst, src } => {
+                    let v = !reg(f, &regs, *src)?.truthy()? as i64;
+                    regs[*dst as usize] = Some(Value::Int(v));
+                }
+                Instr::Truthy { dst, src } => {
+                    let v = reg(f, &regs, *src)?.truthy()? as i64;
+                    regs[*dst as usize] = Some(Value::Int(v));
+                }
+                Instr::Intr { f: func, dst, a, b } => {
+                    let x = reg(f, &regs, *a)?.as_f64()?;
+                    let v = match func {
+                        Intrinsic::Sqrt => x.sqrt(),
+                        Intrinsic::Exp => x.exp(),
+                        Intrinsic::Log => x.ln(),
+                        Intrinsic::Sin => x.sin(),
+                        Intrinsic::Cos => x.cos(),
+                        Intrinsic::Fabs => x.abs(),
+                        Intrinsic::Pow => x.powf(reg(f, &regs, *b)?.as_f64()?),
+                        Intrinsic::Min => x.min(reg(f, &regs, *b)?.as_f64()?),
+                        Intrinsic::Max => x.max(reg(f, &regs, *b)?.as_f64()?),
+                        Intrinsic::Floor => x.floor(),
+                    };
+                    regs[*dst as usize] = Some(Value::Float(v));
+                }
+                Instr::Len { dst, base, dim } => {
+                    let arr = array_at(f, &regs, *base)?;
+                    let a = arr.borrow();
+                    if *dim >= a.shape.len() {
+                        let name = &f.slot_names[*base as usize];
+                        bail!("len: dimension {dim} out of range for `{name}`");
+                    }
+                    let v = a.shape[*dim] as i64;
+                    drop(a);
+                    regs[*dst as usize] = Some(Value::Int(v));
+                }
+                Instr::LoadIdx { dst, base, idx } => {
+                    let mut buf = [0i64; 8];
+                    for (k, &r) in idx.iter().enumerate() {
+                        buf[k] = reg(f, &regs, r)?.as_i64()?;
+                    }
+                    let arr = array_at(f, &regs, *base)?;
+                    if !self.in_region {
+                        vm::host_read(&mut *self.dev, &arr);
+                    }
+                    let a = arr.borrow();
+                    let off = a.offset(&buf[..idx.len()]).map_err(|e| {
+                        anyhow!("array `{}`: {e}", f.slot_names[*base as usize])
+                    })?;
+                    let v = a.data[off];
+                    drop(a);
+                    regs[*dst as usize] = Some(Value::Float(v));
+                }
+                Instr::StoreIdx { base, idx, op, src } => {
+                    let mut buf = [0i64; 8];
+                    for (k, &r) in idx.iter().enumerate() {
+                        buf[k] = reg(f, &regs, r)?.as_i64()?;
+                    }
+                    let arr = array_at(f, &regs, *base)?;
+                    if !self.in_region {
+                        if *op != AssignOp::Set {
+                            vm::host_read(&mut *self.dev, &arr);
+                        }
+                        vm::host_write(&mut *self.dev, &arr);
+                    }
+                    let mut a = arr.borrow_mut();
+                    let off = a.offset(&buf[..idx.len()]).map_err(|e| {
+                        anyhow!("array `{}`: {e}", f.slot_names[*base as usize])
+                    })?;
+                    let rv = reg(f, &regs, *src)?.as_f64()?;
+                    a.data[off] = match op {
+                        AssignOp::Set => rv,
+                        AssignOp::Add => a.data[off] + rv,
+                        AssignOp::Sub => a.data[off] - rv,
+                        AssignOp::Mul => a.data[off] * rv,
+                        AssignOp::Div => a.data[off] / rv,
+                    };
+                }
+                Instr::AllocArr { dst, dims } => {
+                    let name = &f.slot_names[*dst as usize];
+                    let mut shape = Vec::with_capacity(dims.len());
+                    for &r in dims.iter() {
+                        let ext = reg(f, &regs, r)?.as_i64()?;
+                        if ext <= 0 {
+                            bail!("array `{name}` has non-positive extent {ext}");
+                        }
+                        shape.push(ext as usize);
+                    }
+                    let total: usize = shape.iter().product();
+                    if total > 64 * 1024 * 1024 {
+                        bail!("array `{name}` too large ({total} elements)");
+                    }
+                    regs[*dst as usize] = Some(Value::Arr(new_array(shape, vec![0.0; total])));
+                }
+                Instr::Print { src } => {
+                    let v = reg(f, &regs, *src)?.as_f64()?;
+                    self.prints.push(v);
+                }
+                Instr::Jump(to) => pc = *to as usize,
+                Instr::JumpIfFalsy { cond, to } => {
+                    if !reg(f, &regs, *cond)?.truthy()? {
+                        pc = *to as usize;
+                    }
+                }
+                Instr::JumpIfTruthy { cond, to } => {
+                    if reg(f, &regs, *cond)?.truthy()? {
+                        pc = *to as usize;
+                    }
+                }
+                Instr::Call { name, user, is_lib, args, dst } => {
+                    let mut vals = Vec::with_capacity(args.len());
+                    for &r in args.iter() {
+                        vals.push(reg(f, &regs, r)?.clone());
+                    }
+                    let ret = self.call(name, *user, *is_lib, vals)?;
+                    if let Some(d) = dst {
+                        regs[*d as usize] = Some(ret.unwrap_or(Value::Int(0)));
+                    }
+                }
+                Instr::RegionEnter { id, after } => {
+                    if !self.in_region {
+                        if let Some(region) = self.plan.regions.get(id) {
+                            let region = region.clone();
+                            if self.enter_region(f, &regs, region)? {
+                                // Library region: executed in full
+                                pc = *after as usize;
+                            }
+                        }
+                    }
+                }
+                Instr::LoopInit { site, id, var, save, start, end, step, exit } => {
+                    let start_v = self.bound_val(f, &regs, *start)?;
+                    let end_v = self.bound_val(f, &regs, *end)?;
+                    let step_v = self.bound_val(f, &regs, *step)?;
+                    if step_v == 0 {
+                        bail!("loop step is zero");
+                    }
+                    let trips = if step_v > 0 {
+                        ((end_v - start_v).max(0) as u64).div_ceil(step_v as u64)
+                    } else {
+                        ((start_v - end_v).max(0) as u64).div_ceil((-step_v) as u64)
+                    };
+                    if self.in_region {
+                        self.region_parallel.entry(*id).or_insert(trips.max(1));
+                    }
+                    regs[*save as usize] = regs[*var as usize].clone();
+                    loops[*site as usize] = LoopState { i: start_v, end: end_v, step: step_v };
+                    let done = if step_v > 0 { start_v >= end_v } else { start_v <= end_v };
+                    if done {
+                        pc = *exit as usize;
+                    } else {
+                        self.charge(1)?;
+                        regs[*var as usize] = Some(Value::Int(start_v));
+                    }
+                }
+                Instr::LoopNext { site, var, body } => {
+                    let st = &mut loops[*site as usize];
+                    st.i += st.step;
+                    let done = if st.step > 0 { st.i >= st.end } else { st.i <= st.end };
+                    if !done {
+                        let i = st.i;
+                        self.charge(1)?;
+                        regs[*var as usize] = Some(Value::Int(i));
+                        pc = *body as usize;
+                    }
+                }
+                Instr::LoopRestore { var, save } => {
+                    let saved = regs[*save as usize].take();
+                    regs[*var as usize] = saved;
+                }
+                Instr::RegionExit { id } => {
+                    if self.region.as_ref().is_some_and(|r| r.region.root == *id) {
+                        self.exit_region(f, &regs)?;
+                    }
+                }
+                Instr::Ret { src } => {
+                    if let Some(ar) = &self.region {
+                        if ar.depth == self.call_depth {
+                            bail!("break/continue/return escaped a GPU region");
+                        }
+                    }
+                    let v = match src {
+                        Some(r) => Some(reg(f, &regs, *r)?.clone()),
+                        None => None,
+                    };
+                    return Ok(v);
+                }
+                Instr::End => return Ok(None),
+                Instr::Fail(msg) => bail!("{msg}"),
+            }
+        }
+    }
+
+    /// Region entry at a plan-marked `for` root. Returns `true` when the
+    /// region was a `Library` replacement and has executed completely
+    /// (the caller jumps over the loop); `false` when a `Generic` region
+    /// is now active and the loop body should be interpreted in-region.
+    fn enter_region(
+        &mut self,
+        f: &CompiledFunc,
+        regs: &[Option<Value>],
+        region: GpuRegion,
+    ) -> Result<bool> {
+        let naive = self.plan.naive_transfers;
+        let dest = region.dest;
+        for name in &region.copy_in {
+            let arr = array_by_name(f, regs, name)?;
+            vm::device_read(&mut *self.dev, &arr, dest, naive);
+        }
+        self.dev.select_device(dest);
+        self.dev.kernel_launch();
+        match &region.exec {
+            RegionExec::Generic { .. } => {
+                self.in_region = true;
+                self.region_ops = 0;
+                self.region_parallel.clear();
+                self.region = Some(ActiveRegion { region, depth: self.call_depth });
+                Ok(false)
+            }
+            RegionExec::Library { name, args } => {
+                let mut vals = Vec::with_capacity(args.len());
+                for a in args {
+                    let v = f
+                        .slots
+                        .get(a)
+                        .and_then(|&s| regs[s as usize].clone())
+                        .ok_or_else(|| anyhow!("library region arg `{a}` undefined"))?;
+                    vals.push(v);
+                }
+                self.dev.select_device(dest);
+                self.dev.call_library(name, &vals)?;
+                for name in &region.copy_out {
+                    let arr = array_by_name(f, regs, name)?;
+                    vm::device_write(&mut *self.dev, &arr, dest, naive);
+                }
+                Ok(true)
+            }
+        }
+    }
+
+    /// Generic-region exit: parallel degree from first-encounter trip
+    /// counts, kernel charge, residency updates for the copy-out set.
+    fn exit_region(&mut self, f: &CompiledFunc, regs: &[Option<Value>]) -> Result<()> {
+        let ar = self.region.take().expect("exit_region without an active region");
+        let region = ar.region;
+        let parallel: u64 = match &region.exec {
+            RegionExec::Generic { parallel_ids } => parallel_ids
+                .iter()
+                .map(|pid| self.region_parallel.get(pid).copied().unwrap_or(1))
+                .product::<u64>()
+                .max(1),
+            RegionExec::Library { .. } => unreachable!("library regions never activate"),
+        };
+        let ops = self.region_ops;
+        self.gpu_ops_total += ops;
+        self.region_ops = 0;
+        self.in_region = false;
+        self.dev.select_device(region.dest);
+        self.dev.charge_generic_kernel(ops, parallel);
+        let naive = self.plan.naive_transfers;
+        for name in &region.copy_out {
+            let arr = array_by_name(f, regs, name)?;
+            vm::device_write(&mut *self.dev, &arr, region.dest, naive);
+        }
+        Ok(())
+    }
+
+    /// Call dispatch — same resolution order as the tree-walker: the
+    /// plan's GPU-replaced calls first, then the CPU library, then user
+    /// functions.
+    fn call(
+        &mut self,
+        name: &str,
+        user: Option<u32>,
+        is_lib: bool,
+        args: Vec<Value>,
+    ) -> Result<Option<Value>> {
+        if self.plan.gpu_calls.contains(name) {
+            if self.in_region {
+                bail!("GPU library call `{name}` inside a GPU region");
+            }
+            let arrs: Vec<ArrayRef> = args
+                .iter()
+                .filter_map(|v| match v {
+                    Value::Arr(a) => Some(a.clone()),
+                    _ => None,
+                })
+                .collect();
+            let naive = self.plan.naive_transfers;
+            let dest = self.plan.call_dest.get(name).copied().unwrap_or(0);
+            for a in &arrs {
+                vm::device_read(&mut *self.dev, a, dest, naive);
+            }
+            self.dev.select_device(dest);
+            self.dev.kernel_launch();
+            let ret = self.dev.call_library(name, &args)?;
+            for a in &arrs {
+                vm::device_write(&mut *self.dev, a, dest, naive);
+            }
+            return Ok(ret);
+        }
+        if is_lib {
+            if self.in_region {
+                bail!("library call `{name}` inside a GPU region");
+            }
+            let arrs: Vec<ArrayRef> = args
+                .iter()
+                .filter_map(|v| match v {
+                    Value::Arr(a) => Some(a.clone()),
+                    _ => None,
+                })
+                .collect();
+            for a in &arrs {
+                vm::host_read(&mut *self.dev, a);
+                vm::host_write(&mut *self.dev, a);
+            }
+            let (ret, flops) = libs::call(name, &args).unwrap()?;
+            self.charge(flops)?;
+            return Ok(Some(ret));
+        }
+        let Some(fi) = user else {
+            bail!("call to undefined function `{name}`");
+        };
+        let g = &self.prog.funcs[fi as usize];
+        if g.n_params != args.len() {
+            bail!("function `{name}` takes {} arguments, got {}", g.n_params, args.len());
+        }
+        if self.call_depth > 64 {
+            bail!("call depth limit exceeded (recursion?)");
+        }
+        self.call_depth += 1;
+        let r = self.exec_func(fi as usize, args);
+        self.call_depth -= 1;
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse;
+    use crate::workloads;
+    use crate::{analysis, vm};
+    use std::sync::atomic::AtomicU64;
+    use std::sync::Arc;
+
+    fn compile_c(src: &str) -> CompiledProgram {
+        let p = parse(src, Lang::C, "t").unwrap();
+        compile(&p).unwrap()
+    }
+
+    fn assert_same_outcome(a: &Outcome, b: &Outcome) {
+        assert_eq!(a.cpu_ops, b.cpu_ops, "cpu_ops");
+        assert_eq!(a.gpu_ops, b.gpu_ops, "gpu_ops");
+        assert_eq!(a.prints, b.prints, "prints");
+        assert_eq!(a.cpu_seconds.to_bits(), b.cpu_seconds.to_bits(), "cpu_seconds");
+        assert_eq!(a.gpu_seconds.to_bits(), b.gpu_seconds.to_bits(), "gpu_seconds");
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "energy_j");
+        assert_eq!(a.transfers, b.transfers, "transfers");
+    }
+
+    #[test]
+    fn all_workload_sources_compile() {
+        for src in workloads::all() {
+            let p = parse(src.code, src.lang, src.app).unwrap();
+            let c = compile(&p).unwrap_or_else(|e| panic!("{}/{}: {e}", src.app, src.lang));
+            assert!(c.instr_count() > 0);
+            assert!(c.func_count() >= 1);
+        }
+    }
+
+    #[test]
+    fn simple_program_matches_tree_walker_bit_for_bit() {
+        let src = r#"void main() {
+            int n = 32;
+            double a[n]; double b[n];
+            for (int i = 0; i < n; i++) { a[i] = i * 1.5; }
+            for (int i = 0; i < n; i++) { b[i] = a[i] + sqrt(a[i]); }
+            double s = 0.0;
+            for (int i = 0; i < n; i++) { s += b[i]; }
+            printf("%f\n", s);
+        }"#;
+        let p = parse(src, Lang::C, "t").unwrap();
+        let c = compile(&p).unwrap();
+        let o1 = vm::run_cpu(&p, VmConfig::default()).unwrap();
+        let o2 = run_cpu(&c, VmConfig::default()).unwrap();
+        assert_same_outcome(&o1, &o2);
+    }
+
+    #[test]
+    fn offloaded_plan_matches_tree_walker_bit_for_bit() {
+        use crate::device::{CostModel, GpuDevice};
+        for src in workloads::all() {
+            let p = parse(src.code, src.lang, src.app).unwrap();
+            let a = analysis::analyze(&p);
+            let gene = vec![true; a.gene_loops().len()];
+            for naive in [false, true] {
+                let plan = analysis::build_plan(&a, &gene, naive);
+                let c = compile(&p).unwrap();
+                let mut d1 = GpuDevice::simulated(CostModel::default());
+                let o1 = vm::run(&p, &plan, &mut d1, VmConfig::default()).unwrap();
+                let mut d2 = GpuDevice::simulated(CostModel::default());
+                let o2 = run(&c, &plan, &mut d2, VmConfig::default()).unwrap();
+                assert_same_outcome(&o1, &o2);
+            }
+        }
+    }
+
+    #[test]
+    fn literal_loop_bounds_fold_to_zero_dynamic_evals() {
+        // satellite bugfix regression: a 10k-iteration counted loop with
+        // literal bounds must perform zero dynamic bound evaluations in
+        // the bytecode engine; the tree-walker's generic eval path pays
+        // them on every loop entry.
+        let src = r#"void main() {
+            double s = 0.0;
+            for (int r = 0; r < 100; r++) {
+                for (int i = 0; i < 100; i++) { s += 1.0; }
+            }
+            printf("%f\n", s);
+        }"#;
+        let p = parse(src, Lang::C, "t").unwrap();
+        let c = compile(&p).unwrap();
+
+        let counter = Arc::new(AtomicU64::new(0));
+        let cfg = VmConfig { bound_eval_counter: Some(counter.clone()), ..Default::default() };
+        let o = run_cpu(&c, cfg).unwrap();
+        assert_eq!(o.prints, vec![10_000.0]);
+        assert_eq!(
+            counter.load(Ordering::Relaxed),
+            0,
+            "literal bounds must be folded at compile time"
+        );
+
+        let tree_counter = Arc::new(AtomicU64::new(0));
+        let cfg = VmConfig { bound_eval_counter: Some(tree_counter.clone()), ..Default::default() };
+        let o2 = vm::run_cpu(&p, cfg).unwrap();
+        assert_eq!(o.prints, o2.prints);
+        // outer entry (3 bounds) + 100 inner entries (3 bounds each)
+        assert_eq!(tree_counter.load(Ordering::Relaxed), 303);
+    }
+
+    #[test]
+    fn dynamic_loop_bounds_are_counted() {
+        let src = r#"void main() {
+            int n = 50;
+            double s = 0.0;
+            for (int i = 0; i < n; i++) { s += 1.0; }
+            printf("%f\n", s);
+        }"#;
+        let c = compile_c(src);
+        let counter = Arc::new(AtomicU64::new(0));
+        let cfg = VmConfig { bound_eval_counter: Some(counter.clone()), ..Default::default() };
+        run_cpu(&c, cfg).unwrap();
+        // start and step are literals; only `n` needs a dynamic eval
+        assert_eq!(counter.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn deeply_nested_ir_fails_to_compile_cleanly() {
+        // programmatically built IR deeper than any front end emits: the
+        // compiler must error, not overflow its stack
+        let mut e = Expr::int(1);
+        for _ in 0..100_000 {
+            e = Expr::Unary { op: UnOp::Neg, operand: Box::new(e) };
+        }
+        let p = Program {
+            lang: Lang::C,
+            name: "deep".into(),
+            functions: vec![Function {
+                name: "main".into(),
+                params: vec![],
+                ret: Type::Void,
+                body: vec![Stmt::Print(e)],
+            }],
+        };
+        let err = compile(&p).unwrap_err();
+        assert!(err.to_string().contains("deep"), "{err}");
+    }
+
+    #[test]
+    fn break_continue_and_while_semantics_match() {
+        let src = r#"void main() {
+            int i = 0; int s = 0;
+            while (1) {
+                i++;
+                if (i % 2 == 0) { continue; }
+                if (i > 9) { break; }
+                s += i;
+            }
+            for (int j = 0; j < 10; j++) {
+                if (j == 5) { break; }
+                s += j;
+            }
+            printf("%d\n", s);
+        }"#;
+        let p = parse(src, Lang::C, "t").unwrap();
+        let c = compile(&p).unwrap();
+        let o1 = vm::run_cpu(&p, VmConfig::default()).unwrap();
+        let o2 = run_cpu(&c, VmConfig::default()).unwrap();
+        assert_same_outcome(&o1, &o2);
+        assert_eq!(o2.prints, vec![35.0]); // 25 + (0+1+2+3+4)
+    }
+
+    #[test]
+    fn loop_var_save_restore_matches() {
+        let src = r#"void main() {
+            int i = 99;
+            for (int i = 0; i < 3; i++) { }
+            printf("%d\n", i);
+        }"#;
+        let c = compile_c(src);
+        let o = run_cpu(&c, VmConfig::default()).unwrap();
+        assert_eq!(o.prints, vec![99.0]);
+    }
+
+    #[test]
+    fn errors_match_tree_walker() {
+        for src in [
+            "void main() { double a[4]; a[5] = 1.0; }",
+            "void main() { int x = 1 / 0; }",
+            "void main() { for (int i = 0; i < 10; i = i + 0) { } }",
+            "void main() { printf(\"%f\\n\", nothere); }",
+            "int f(int x) { return f(x + 1); } void main() { int y = f(0); }",
+        ] {
+            let p = parse(src, Lang::C, "t").unwrap();
+            let c = compile(&p).unwrap();
+            let e1 = vm::run_cpu(&p, VmConfig::default()).unwrap_err();
+            let e2 = run_cpu(&c, VmConfig::default()).unwrap_err();
+            assert_eq!(e1.to_string(), e2.to_string(), "src: {src}");
+        }
+    }
+
+    #[test]
+    fn op_budget_enforced_in_bytecode() {
+        let c = compile_c("void main() { double s = 0.0; while (1) { s += 1.0; } }");
+        let err = run_cpu(&c, VmConfig { max_ops: 10_000, ..Default::default() }).unwrap_err();
+        assert!(err.to_string().contains("budget"), "{err}");
+    }
+
+    #[test]
+    fn short_circuit_charges_match() {
+        let src = r#"void main() {
+            int n = 20;
+            int hits = 0;
+            for (int i = 0; i < n; i++) {
+                if (i % 2 == 0 && i % 3 == 0) { hits += 1; }
+                if (i % 5 == 0 || i % 7 == 0) { hits += 1; }
+            }
+            printf("%d\n", hits);
+        }"#;
+        let p = parse(src, Lang::C, "t").unwrap();
+        let c = compile(&p).unwrap();
+        let o1 = vm::run_cpu(&p, VmConfig::default()).unwrap();
+        let o2 = run_cpu(&c, VmConfig::default()).unwrap();
+        assert_same_outcome(&o1, &o2);
+    }
+
+    #[test]
+    fn user_functions_and_library_calls_match() {
+        let src = r#"
+        double total(double a[], int n) {
+            double s = 0.0;
+            for (int i = 0; i < n; i++) { s += a[i]; }
+            return s;
+        }
+        void main() {
+            int n = 8;
+            double a[n][n]; double b[n][n]; double c[n][n];
+            seed_fill(a, 1);
+            seed_fill(b, 2);
+            matmul(a, b, c, n);
+            double x[4];
+            x[0] = 1.0; x[1] = 2.0; x[2] = 3.0; x[3] = 4.0;
+            printf("%f\n", total(x, 4) + c[0][0]);
+        }"#;
+        let p = parse(src, Lang::C, "t").unwrap();
+        let c = compile(&p).unwrap();
+        let o1 = vm::run_cpu(&p, VmConfig::default()).unwrap();
+        let o2 = run_cpu(&c, VmConfig::default()).unwrap();
+        assert_same_outcome(&o1, &o2);
+    }
+}

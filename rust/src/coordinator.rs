@@ -23,7 +23,7 @@ use crate::config::Config;
 use crate::device::{
     DeviceFactory, DeviceStats, MultiDevice, MultiDeviceFactory, TargetKind,
 };
-use crate::engine::{self, MeasurementEngine, SharedCache};
+use crate::engine::{self, MeasurementEngine, SharedCache, SharedCompiledCache};
 use crate::frontend::{self, render};
 use crate::funcblock::{self, Candidate, FuncBlockReport};
 use crate::ga::{self, GaResult};
@@ -32,7 +32,7 @@ use crate::measure::{Measurement, Measurer};
 use crate::patterndb::{self, LearnedPlan, PatternDb, PatternRecord, SharedPatternDb};
 use crate::placement::DeviceSet;
 use crate::util::json::Json;
-use crate::vm::ExecPlan;
+use crate::vm::{ExecEngine, ExecPlan};
 use anyhow::Result;
 use std::collections::HashSet;
 
@@ -215,6 +215,7 @@ pub struct Coordinator {
     db: SharedPatternDb,
     dev: MultiDevice,
     cache: SharedCache,
+    compiled: SharedCompiledCache,
 }
 
 /// Per-destination device factory for a configuration: the configured
@@ -252,8 +253,20 @@ impl Coordinator {
     /// DB — the offload service's workers all learn into, and replay
     /// from, one store.
     pub fn with_shared(cfg: Config, cache: SharedCache, db: SharedPatternDb) -> Coordinator {
+        Coordinator::with_caches(cfg, cache, engine::compiled_shared(), db)
+    }
+
+    /// Coordinator additionally sharing a compiled-bytecode cache — one
+    /// compiled artifact serves every session worker and every repeat
+    /// request for the same program.
+    pub fn with_caches(
+        cfg: Config,
+        cache: SharedCache,
+        compiled: SharedCompiledCache,
+        db: SharedPatternDb,
+    ) -> Coordinator {
         let dev = factory_for(&cfg, cfg.use_pjrt).build();
-        Coordinator { cfg, db, dev, cache }
+        Coordinator { cfg, db, dev, cache, compiled }
     }
 
     /// Handle on the shared measurement cache (clone to share).
@@ -293,7 +306,16 @@ impl Coordinator {
     pub fn offload_program(&mut self, prog: &Program) -> Result<OffloadReport> {
         let t_start = std::time::Instant::now();
         let analysis = analysis::analyze(prog);
-        let measurer = Measurer::new(prog, self.cfg.vm.clone(), self.cfg.tolerance)?;
+        // Compile once per program (shared across sessions/requests); the
+        // gene is consulted only at region markers, so this one artifact
+        // serves every candidate measurement below. A compiler refusal
+        // (depth guard) falls back to the tree-walker inside the measurer.
+        let compiled = match self.cfg.vm.engine {
+            ExecEngine::Bytecode => self.compiled.lock().unwrap().get_or_compile(prog),
+            ExecEngine::TreeWalk => None,
+        };
+        let measurer =
+            Measurer::with_compiled(prog, compiled, self.cfg.vm.clone(), self.cfg.tolerance)?;
         let workers = self.cfg.effective_workers();
         let dset = DeviceSet::new(self.cfg.effective_devices())?;
         let mut total_measurements = 0usize;

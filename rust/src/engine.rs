@@ -33,6 +33,7 @@
 //! tag, the heterogeneous device set and the power weight), which is
 //! what makes a cache hit semantically safe.
 
+use crate::bytecode::CompiledProgram;
 use crate::config::Config;
 use crate::device::{DeviceStats, MultiDevice, MultiDeviceFactory, TargetKind};
 use crate::ga::BatchEvaluator;
@@ -64,6 +65,8 @@ fn _sharing_contract() {
     send::<ExecPlan>();
     send::<DeviceStats>();
     send::<MeasurementCache>();
+    send::<CompiledCache>();
+    sync::<CompiledProgram>();
 }
 
 // ---------------------------------------------------------------------------
@@ -205,6 +208,77 @@ pub fn cache_for(cfg: &Config) -> SharedCache {
         Some(p) => shared(MeasurementCache::open(p)),
         None => shared(MeasurementCache::in_memory()),
     }
+}
+
+// ---------------------------------------------------------------------------
+// compiled-program cache
+// ---------------------------------------------------------------------------
+
+/// Hash of the program structure alone — the compiled bytecode depends on
+/// nothing else (the `ExecPlan`/gene is consulted only at region-marker
+/// ops at run time), so unlike [`fingerprint`] this key deliberately
+/// ignores every cost-model and VM knob.
+pub fn program_hash(prog: &Program) -> u64 {
+    let mut h = FxHasher::default();
+    h.write(format!("{prog:?}").as_bytes());
+    h.finish()
+}
+
+/// Memoized IR→bytecode compilations, keyed by [`program_hash`]. One
+/// compiled artifact serves every gene evaluation, every search phase and
+/// every repeat request for the same program; uncompilable programs (the
+/// depth guard) are remembered as `None` so the measurer's tree-walker
+/// fallback is not re-attempted through the compiler on every request.
+#[derive(Default)]
+pub struct CompiledCache {
+    entries: HashMap<u64, Option<Arc<CompiledProgram>>>,
+    hits: usize,
+    compiles: usize,
+}
+
+impl CompiledCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The compiled form of `prog`, compiling on first sight. `None` means
+    /// the compiler declined (callers fall back to the tree-walker).
+    pub fn get_or_compile(&mut self, prog: &Program) -> Option<Arc<CompiledProgram>> {
+        let key = program_hash(prog);
+        if let Some(c) = self.entries.get(&key) {
+            self.hits += 1;
+            return c.clone();
+        }
+        self.compiles += 1;
+        let compiled = crate::bytecode::compile(prog).ok().map(Arc::new);
+        self.entries.insert(key, compiled.clone());
+        compiled
+    }
+
+    /// Cache hits since creation (test/diagnostic hook).
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    /// Compilation attempts since creation (test/diagnostic hook).
+    pub fn compiles(&self) -> usize {
+        self.compiles
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// The compiled-program cache as shared between coordinators and sessions.
+pub type SharedCompiledCache = Arc<Mutex<CompiledCache>>;
+
+pub fn compiled_shared() -> SharedCompiledCache {
+    Arc::new(Mutex::new(CompiledCache::new()))
 }
 
 // ---------------------------------------------------------------------------
@@ -832,5 +906,24 @@ mod tests {
         let t = eng.measure_one(&gene);
         assert_eq!(t, m.ga_time());
         assert_eq!(eng.cache_hits(), 1);
+    }
+
+    #[test]
+    fn compiled_cache_compiles_once_per_program() {
+        let f = fixture();
+        let mut cache = CompiledCache::new();
+        let first = cache.get_or_compile(&f.prog).expect("fixture must compile");
+        let again = cache.get_or_compile(&f.prog).expect("fixture must compile");
+        assert!(Arc::ptr_eq(&first, &again), "second lookup must reuse the artifact");
+        assert_eq!(cache.compiles(), 1);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.len(), 1);
+        // a different program is a different entry, not a collision
+        let other = parse("void main() { int a = 1; printf(\"%d\\n\", a); }", Lang::C, "other")
+            .unwrap();
+        cache.get_or_compile(&other).expect("trivial program must compile");
+        assert_eq!(cache.compiles(), 2);
+        assert_eq!(cache.len(), 2);
+        assert_ne!(program_hash(&f.prog), program_hash(&other));
     }
 }

@@ -59,6 +59,7 @@
 
 pub mod analysis;
 pub mod api;
+pub mod bytecode;
 pub mod cli;
 pub mod clone;
 pub mod config;

@@ -7,9 +7,11 @@
 //! divergence or a runtime error marks the candidate invalid and the GA
 //! treats its time as ∞.
 
-use crate::vm::{self, Device, ExecPlan, Outcome, VmConfig};
+use crate::bytecode::{self, CompiledProgram};
 use crate::ir::Program;
+use crate::vm::{self, Device, ExecEngine, ExecPlan, Outcome, VmConfig};
 use anyhow::Result;
+use std::sync::Arc;
 
 /// Result of one measurement trial.
 #[derive(Debug, Clone)]
@@ -65,14 +67,44 @@ pub struct Measurer {
     pub vm_cfg: VmConfig,
     /// relative tolerance for the results check (f32 kernels vs f64 CPU)
     pub tolerance: f64,
+    /// bytecode artifact every trial executes (`None` = reference
+    /// tree-walker, selected by config or compile-failure fallback)
+    compiled: Option<Arc<CompiledProgram>>,
 }
 
 impl Measurer {
     pub fn new(prog: &Program, vm_cfg: VmConfig, tolerance: f64) -> Result<Measurer> {
+        let compiled = match vm_cfg.engine {
+            // a compile failure falls back to the reference interpreter:
+            // pathological programs lose speed, never correctness
+            ExecEngine::Bytecode => bytecode::compile(prog).ok().map(Arc::new),
+            ExecEngine::TreeWalk => None,
+        };
+        Measurer::with_compiled(prog, compiled, vm_cfg, tolerance)
+    }
+
+    /// Build a measurer around a pre-compiled bytecode artifact (shared
+    /// via the engine-level compiled-program cache so the GA, funcblock
+    /// trials and final verification all reuse one compilation). `None`
+    /// selects the reference tree-walker.
+    pub fn with_compiled(
+        prog: &Program,
+        compiled: Option<Arc<CompiledProgram>>,
+        vm_cfg: VmConfig,
+        tolerance: f64,
+    ) -> Result<Measurer> {
         let t0 = std::time::Instant::now();
-        let baseline = vm::run_cpu(prog, vm_cfg.clone())?;
+        let baseline = match &compiled {
+            Some(c) => bytecode::run_cpu(c, vm_cfg.clone())?,
+            None => vm::run_cpu(prog, vm_cfg.clone())?,
+        };
         let baseline_wall_s = t0.elapsed().as_secs_f64();
-        Ok(Measurer { baseline, baseline_wall_s, vm_cfg, tolerance })
+        Ok(Measurer { baseline, baseline_wall_s, vm_cfg, tolerance, compiled })
+    }
+
+    /// Whether trials run on the bytecode engine (false = tree-walker).
+    pub fn uses_bytecode(&self) -> bool {
+        self.compiled.is_some()
     }
 
     /// The CPU-only modeled time (denominator of every speedup).
@@ -93,7 +125,11 @@ impl Measurer {
     /// cache warm).
     pub fn measure(&self, prog: &Program, plan: &ExecPlan, dev: &mut dyn Device) -> Measurement {
         let t0 = std::time::Instant::now();
-        match vm::run(prog, plan, dev, self.vm_cfg.clone()) {
+        let run = match &self.compiled {
+            Some(c) => bytecode::run(c, plan, dev, self.vm_cfg.clone()),
+            None => vm::run(prog, plan, dev, self.vm_cfg.clone()),
+        };
+        match run {
             Ok(outcome) => {
                 let wall_s = t0.elapsed().as_secs_f64();
                 match self.check(&outcome) {
@@ -244,6 +280,31 @@ mod tests {
         let want = 0.5 * r.modeled_s + 0.5 * r.energy_j / crate::device::REFERENCE_WATTS;
         assert!((r.ga_score(0.5) - want).abs() < 1e-15);
         assert_eq!(r.ga_score(5.0), r.ga_score(1.0), "weight clamps at 1");
+    }
+
+    #[test]
+    fn engines_produce_identical_measurements() {
+        // the Measurer defaults to the bytecode engine; the tree-walker
+        // config must yield bit-identical measurements
+        let p = parse(SRC, Lang::C, "t").unwrap();
+        let a = analysis::analyze(&p);
+        let plan = analysis::build_plan(&a, &[true, true], false);
+        let mb = Measurer::new(&p, VmConfig::default(), 1e-3).unwrap();
+        assert!(mb.uses_bytecode());
+        let tw = VmConfig { engine: ExecEngine::TreeWalk, ..Default::default() };
+        let mt = Measurer::new(&p, tw, 1e-3).unwrap();
+        assert!(!mt.uses_bytecode());
+        assert_eq!(
+            mb.baseline_modeled_s().to_bits(),
+            mt.baseline_modeled_s().to_bits()
+        );
+        let mut d1 = GpuDevice::simulated(CostModel::default());
+        let r1 = mb.measure(&p, &plan, &mut d1);
+        let mut d2 = GpuDevice::simulated(CostModel::default());
+        let r2 = mt.measure(&p, &plan, &mut d2);
+        assert!(r1.ok && r2.ok);
+        assert_eq!(r1.modeled_s.to_bits(), r2.modeled_s.to_bits());
+        assert_eq!(r1.energy_j.to_bits(), r2.energy_j.to_bits());
     }
 
     #[test]

@@ -258,17 +258,44 @@ impl Device for NullDevice {
 // VM
 // ---------------------------------------------------------------------------
 
+/// Which engine executes measurement trials. The bytecode engine is the
+/// default hot path; this tree-walker remains the semantic reference the
+/// bytecode is differentially tested against (and the fallback for
+/// programs the compiler rejects).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecEngine {
+    /// register bytecode compiled once per program (`crate::bytecode`)
+    #[default]
+    Bytecode,
+    /// this module's reference tree-walking interpreter
+    TreeWalk,
+}
+
 #[derive(Debug, Clone)]
 pub struct VmConfig {
     /// abort execution after this many interpreted operations
     pub max_ops: u64,
     /// modeled nanoseconds per interpreted CPU operation
     pub cpu_op_ns: f64,
+    /// which engine the measurement path runs (`Outcome`s are
+    /// bit-identical either way; see `crate::bytecode`)
+    pub engine: ExecEngine,
+    /// test hook: counts loop bounds evaluated through the generic
+    /// dynamic-eval path at loop entry. The tree-walker pays all three
+    /// bounds on every entry; the bytecode engine constant-folds literal
+    /// bounds at compile time and only counts the rest. `None` (the
+    /// default) costs nothing on the hot path.
+    pub bound_eval_counter: Option<std::sync::Arc<std::sync::atomic::AtomicU64>>,
 }
 
 impl Default for VmConfig {
     fn default() -> Self {
-        VmConfig { max_ops: 2_000_000_000, cpu_op_ns: 1.0 }
+        VmConfig {
+            max_ops: 2_000_000_000,
+            cpu_op_ns: 1.0,
+            engine: ExecEngine::Bytecode,
+            bound_eval_counter: None,
+        }
     }
 }
 
@@ -404,77 +431,28 @@ impl<'a> Vm<'a> {
     }
 
     // ---- residency bookkeeping -------------------------------------------
+    // (shared free functions below — the bytecode engine charges the exact
+    // same transfers through them; these methods just bind `self.dev`)
 
     /// CPU-side read of an array: pull from the owning device if the only
     /// valid copy is there.
     fn host_read(&mut self, arr: &ArrayRef) {
-        let loc = arr.borrow().loc;
-        if let Loc::Device(d) = loc {
-            let bytes = arr.borrow().bytes();
-            self.dev.select_device(d);
-            self.dev.charge_d2h(bytes);
-            arr.borrow_mut().loc = Loc::Both(d);
-        }
+        host_read(&mut *self.dev, arr);
     }
 
     /// CPU-side write: any device copy becomes stale.
     fn host_write(&mut self, arr: &ArrayRef) {
-        let loc = arr.borrow().loc;
-        if let Loc::Device(d) = loc {
-            // partial write to a device-resident array: fetch first
-            let bytes = arr.borrow().bytes();
-            self.dev.select_device(d);
-            self.dev.charge_d2h(bytes);
-        }
-        arr.borrow_mut().loc = Loc::Host;
+        host_write(&mut *self.dev, arr);
     }
 
-    /// Device-side read at region entry on destination `dest`. Data
-    /// resident on a *different* destination stages through the host
-    /// (d2h from the owner, then h2d to `dest`) — accelerators have no
-    /// direct link in this model.
+    /// Device-side read at region entry on destination `dest`.
     fn device_read(&mut self, arr: &ArrayRef, dest: usize, naive: bool) {
-        let loc = arr.borrow().loc;
-        let bytes = arr.borrow().bytes();
-        match loc {
-            Loc::Device(d) if d != dest => {
-                self.dev.select_device(d);
-                self.dev.charge_d2h(bytes);
-                self.dev.select_device(dest);
-                self.dev.charge_h2d(bytes);
-                arr.borrow_mut().loc = Loc::Both(dest);
-            }
-            Loc::Both(d) if d != dest => {
-                // host copy is valid: plain upload to the new destination
-                self.dev.select_device(dest);
-                self.dev.charge_h2d(bytes);
-                arr.borrow_mut().loc = Loc::Both(dest);
-            }
-            Loc::Host => {
-                self.dev.select_device(dest);
-                self.dev.charge_h2d(bytes);
-                arr.borrow_mut().loc = Loc::Both(dest);
-            }
-            _ if naive => {
-                self.dev.select_device(dest);
-                self.dev.charge_h2d(bytes);
-                arr.borrow_mut().loc = Loc::Both(dest);
-            }
-            _ => {}
-        }
+        device_read(&mut *self.dev, arr, dest, naive);
     }
 
-    /// Device-side write at region exit: host copy stale (unless naive
-    /// mode, which copies straight back like un-hoisted `copyout`).
+    /// Device-side write at region exit.
     fn device_write(&mut self, arr: &ArrayRef, dest: usize, naive: bool) {
-        if naive {
-            let bytes = arr.borrow().bytes();
-            self.dev.select_device(dest);
-            self.dev.charge_d2h(bytes);
-            arr.borrow_mut().loc = Loc::Both(dest);
-        } else {
-            arr.borrow_mut().loc = Loc::Device(dest);
-        }
+        device_write(&mut *self.dev, arr, dest, naive);
     }
 
     fn lookup_array(&self, env: &Env, name: &str) -> Result<ArrayRef> {
@@ -593,6 +571,12 @@ impl<'a> Vm<'a> {
                 let region = region.clone();
                 return self.exec_gpu_region(&region, s, env);
             }
+        }
+        if let Some(c) = &self.cfg.bound_eval_counter {
+            // all three bounds re-evaluate through the generic path on
+            // every loop entry, literal or not (the bytecode engine folds
+            // the literal ones — see `crate::bytecode`)
+            c.fetch_add(3, std::sync::atomic::Ordering::Relaxed);
         }
         let start_v = self.eval(start, env)?.as_i64()?;
         let end_v = self.eval(end, env)?.as_i64()?;
@@ -928,7 +912,83 @@ fn apply_compound(op: AssignOp, old: &Value, rhs: &Value) -> Result<Value> {
     binary(bop, old, rhs)
 }
 
-fn binary(op: BinOp, l: &Value, r: &Value) -> Result<Value> {
+// ---------------------------------------------------------------------------
+// residency accounting shared by both engines
+// ---------------------------------------------------------------------------
+
+/// CPU-side read: pull from the owning device if the only valid copy is
+/// there (MSI-style residency; see [`Loc`]).
+pub(crate) fn host_read(dev: &mut dyn Device, arr: &ArrayRef) {
+    let loc = arr.borrow().loc;
+    if let Loc::Device(d) = loc {
+        let bytes = arr.borrow().bytes();
+        dev.select_device(d);
+        dev.charge_d2h(bytes);
+        arr.borrow_mut().loc = Loc::Both(d);
+    }
+}
+
+/// CPU-side write: any device copy becomes stale.
+pub(crate) fn host_write(dev: &mut dyn Device, arr: &ArrayRef) {
+    let loc = arr.borrow().loc;
+    if let Loc::Device(d) = loc {
+        // partial write to a device-resident array: fetch first
+        let bytes = arr.borrow().bytes();
+        dev.select_device(d);
+        dev.charge_d2h(bytes);
+    }
+    arr.borrow_mut().loc = Loc::Host;
+}
+
+/// Device-side read at region entry on destination `dest`. Data resident
+/// on a *different* destination stages through the host (d2h from the
+/// owner, then h2d to `dest`) — accelerators have no direct link in this
+/// model.
+pub(crate) fn device_read(dev: &mut dyn Device, arr: &ArrayRef, dest: usize, naive: bool) {
+    let loc = arr.borrow().loc;
+    let bytes = arr.borrow().bytes();
+    match loc {
+        Loc::Device(d) if d != dest => {
+            dev.select_device(d);
+            dev.charge_d2h(bytes);
+            dev.select_device(dest);
+            dev.charge_h2d(bytes);
+            arr.borrow_mut().loc = Loc::Both(dest);
+        }
+        Loc::Both(d) if d != dest => {
+            // host copy is valid: plain upload to the new destination
+            dev.select_device(dest);
+            dev.charge_h2d(bytes);
+            arr.borrow_mut().loc = Loc::Both(dest);
+        }
+        Loc::Host => {
+            dev.select_device(dest);
+            dev.charge_h2d(bytes);
+            arr.borrow_mut().loc = Loc::Both(dest);
+        }
+        _ if naive => {
+            dev.select_device(dest);
+            dev.charge_h2d(bytes);
+            arr.borrow_mut().loc = Loc::Both(dest);
+        }
+        _ => {}
+    }
+}
+
+/// Device-side write at region exit: host copy stale (unless naive mode,
+/// which copies straight back like un-hoisted `copyout`).
+pub(crate) fn device_write(dev: &mut dyn Device, arr: &ArrayRef, dest: usize, naive: bool) {
+    if naive {
+        let bytes = arr.borrow().bytes();
+        dev.select_device(dest);
+        dev.charge_d2h(bytes);
+        arr.borrow_mut().loc = Loc::Both(dest);
+    } else {
+        arr.borrow_mut().loc = Loc::Device(dest);
+    }
+}
+
+pub(crate) fn binary(op: BinOp, l: &Value, r: &Value) -> Result<Value> {
     use BinOp::*;
     // integer arithmetic when both sides are ints (C/Java semantics)
     if let (Value::Int(a), Value::Int(b)) = (l, r) {
@@ -1090,7 +1150,7 @@ mod tests {
     fn op_budget_enforced() {
         let p = parse("void main() { double s = 0.0; while (1) { s += 1.0; } }", Lang::C, "t")
             .unwrap();
-        let err = run_cpu(&p, VmConfig { max_ops: 10_000, cpu_op_ns: 1.0 }).unwrap_err();
+        let err = run_cpu(&p, VmConfig { max_ops: 10_000, ..Default::default() }).unwrap_err();
         assert!(err.to_string().contains("budget"), "{err}");
     }
 

@@ -1,0 +1,170 @@
+//! Differential equivalence suite: the bytecode VM (`envadapt::bytecode`)
+//! must produce **bit-identical** `Outcome`s to the tree-walking
+//! reference interpreter (`envadapt::vm`) — same prints, same op counts,
+//! same modeled seconds, same energy, same transfer stats — on every
+//! built-in workload in every language, on hundreds of generated
+//! conformance programs, and through the full GA search at any worker
+//! count. This is the contract that lets the measurement hot path switch
+//! engines without invalidating a single cached measurement.
+//!
+//! The suite is also the `--no-default-features` CI smoke leg: it depends
+//! only on the simulated device backend.
+
+mod common;
+
+use envadapt::analysis;
+use envadapt::bytecode;
+use envadapt::config::Config;
+use envadapt::coordinator::Coordinator;
+use envadapt::device::{CostModel, GpuDevice};
+use envadapt::frontend::parse;
+use envadapt::ga::GaConfig;
+use envadapt::ir::{Lang, Program};
+use envadapt::util::Rng;
+use envadapt::vm::{self, ExecEngine, Outcome, VmConfig};
+use envadapt::workloads;
+
+/// Full-field bit-exact `Outcome` comparison (floats via `to_bits`, so
+/// even sign-of-zero or NaN-payload drift would fail).
+fn assert_same_outcome(tag: &str, tree: &Outcome, byte: &Outcome) {
+    assert_eq!(tree.cpu_ops, byte.cpu_ops, "{tag}: cpu_ops");
+    assert_eq!(tree.gpu_ops, byte.gpu_ops, "{tag}: gpu_ops");
+    assert_eq!(tree.prints.len(), byte.prints.len(), "{tag}: print count");
+    for (i, (a, b)) in tree.prints.iter().zip(&byte.prints).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: print[{i}] {a} vs {b}");
+    }
+    assert_eq!(
+        tree.cpu_seconds.to_bits(),
+        byte.cpu_seconds.to_bits(),
+        "{tag}: cpu_seconds {} vs {}",
+        tree.cpu_seconds,
+        byte.cpu_seconds
+    );
+    assert_eq!(
+        tree.gpu_seconds.to_bits(),
+        byte.gpu_seconds.to_bits(),
+        "{tag}: gpu_seconds {} vs {}",
+        tree.gpu_seconds,
+        byte.gpu_seconds
+    );
+    assert_eq!(
+        tree.energy_j.to_bits(),
+        byte.energy_j.to_bits(),
+        "{tag}: energy_j {} vs {}",
+        tree.energy_j,
+        byte.energy_j
+    );
+    assert_eq!(tree.transfers, byte.transfers, "{tag}: transfers");
+}
+
+/// Compare both engines on one program under one gene (CPU-only when
+/// `gene` is `None`, offloaded via `build_plan` otherwise).
+fn check_program(tag: &str, p: &Program, gene: Option<(&[bool], bool)>) {
+    let compiled = bytecode::compile(p).unwrap_or_else(|e| panic!("{tag}: compile: {e}"));
+    let (tree, byte) = match gene {
+        None => (
+            vm::run_cpu(p, VmConfig::default()),
+            bytecode::run_cpu(&compiled, VmConfig::default()),
+        ),
+        Some((bits, naive)) => {
+            let a = analysis::analyze(p);
+            let plan = analysis::build_plan(&a, bits, naive);
+            let mut d1 = GpuDevice::simulated(CostModel::default());
+            let mut d2 = GpuDevice::simulated(CostModel::default());
+            (
+                vm::run(p, &plan, &mut d1, VmConfig::default()),
+                bytecode::run(&compiled, &plan, &mut d2, VmConfig::default()),
+            )
+        }
+    };
+    match (tree, byte) {
+        (Ok(t), Ok(b)) => assert_same_outcome(tag, &t, &b),
+        (Err(t), Err(b)) => assert_eq!(t.to_string(), b.to_string(), "{tag}: error text"),
+        (t, b) => panic!("{tag}: engines disagree on success: tree={t:?} bytecode={b:?}"),
+    }
+}
+
+#[test]
+fn all_32_workload_sources_cpu_bit_identical() {
+    let sources = workloads::all();
+    assert_eq!(sources.len(), 32, "expected 8 apps x 4 languages");
+    for s in &sources {
+        let p = parse(s.code, s.lang, s.app).unwrap();
+        check_program(&format!("{}/{:?} cpu", s.app, s.lang), &p, None);
+    }
+}
+
+#[test]
+fn all_32_workload_sources_offloaded_bit_identical() {
+    for s in &workloads::all() {
+        let p = parse(s.code, s.lang, s.app).unwrap();
+        let a = analysis::analyze(&p);
+        let gene = vec![true; a.gene_loops().len()];
+        for naive in [false, true] {
+            check_program(
+                &format!("{}/{:?} offloaded naive={naive}", s.app, s.lang),
+                &p,
+                Some((&gene, naive)),
+            );
+        }
+    }
+}
+
+#[test]
+fn generated_conformance_programs_bit_identical() {
+    // >= 200 generated programs: 60 shared specs, each emitted in all four
+    // languages (the conformance generator guarantees identical structure),
+    // each run CPU-only and under a random gene.
+    let mut rng = Rng::new(0xD1FF);
+    let mut checked = 0usize;
+    for case in 0..60 {
+        let spec = common::random_spec(&mut rng, 8);
+        let gene_seed = rng.next_u64();
+        for lang in Lang::all() {
+            let src = common::emit(&spec, lang);
+            let p = parse(&src, lang, "diff").unwrap();
+            let a = analysis::analyze(&p);
+            let mut grng = Rng::new(gene_seed);
+            let gene: Vec<bool> = (0..a.gene_loops().len()).map(|_| grng.bool()).collect();
+            let tag = format!("case {case} {lang:?}");
+            check_program(&format!("{tag} cpu"), &p, None);
+            check_program(&format!("{tag} gene"), &p, Some((&gene, grng.bool())));
+            checked += 1;
+        }
+    }
+    assert!(checked >= 200, "only {checked} generated programs checked");
+}
+
+/// The two engines through the *full* coordinator search must select the
+/// same gene, the same placement and the same modeled cost — at any
+/// worker count. (The measurement cache key deliberately excludes the
+/// engine: bit-identity is what makes sharing those entries safe.)
+#[test]
+fn ga_search_results_identical_across_engines_and_worker_counts() {
+    for workers in [1usize, 4] {
+        let mut reports = Vec::new();
+        for engine in [ExecEngine::TreeWalk, ExecEngine::Bytecode] {
+            let mut cfg = Config::fast_sim();
+            cfg.ga = GaConfig { population: 6, generations: 6, ..Default::default() };
+            cfg.workers = workers;
+            cfg.vm.engine = engine;
+            let mut c = Coordinator::new(cfg);
+            let s = workloads::get("mm", Lang::C).unwrap();
+            reports.push(c.offload_source(s.code, Lang::C, "mm").unwrap());
+        }
+        let (t, b) = (&reports[0], &reports[1]);
+        assert_eq!(t.best_gene, b.best_gene, "workers={workers}: best gene");
+        assert_eq!(t.placement, b.placement, "workers={workers}: placement");
+        assert_eq!(
+            t.baseline_s.to_bits(),
+            b.baseline_s.to_bits(),
+            "workers={workers}: baseline"
+        );
+        assert_eq!(t.final_s.to_bits(), b.final_s.to_bits(), "workers={workers}: final cost");
+        assert_eq!(t.energy_j.to_bits(), b.energy_j.to_bits(), "workers={workers}: energy");
+        assert_eq!(
+            t.total_measurements, b.total_measurements,
+            "workers={workers}: measurement count"
+        );
+    }
+}

@@ -6,9 +6,11 @@
 //! call stack, so `lex::MAX_PARSE_DEPTH` bounds the descent and these
 //! tests pin the behaviour on both sides of the bound.
 
+use envadapt::bytecode;
 use envadapt::frontend::parse;
 use envadapt::ir::Lang;
 use envadapt::util::Rng;
+use envadapt::vm::{self, VmConfig};
 
 /// Wrap a statement (or expression-statement payload) in the smallest
 /// valid program scaffold of each language.
@@ -146,6 +148,75 @@ fn huge_identifiers_do_not_crash() {
         };
         let p = parse(&in_main(lang, &stmt), lang, "fuzz");
         assert!(p.is_ok(), "[{lang}] a huge identifier is ugly but legal: {:?}", p.err());
+    }
+}
+
+#[test]
+fn fuzz_programs_that_parse_also_compile_and_run() {
+    // Anything the front ends accept must flow through the bytecode
+    // compiler and executor without a panic — and the two engines must
+    // agree on success, with bit-identical prints when they succeed.
+    let cfg = || VmConfig { max_ops: 10_000, ..Default::default() };
+    let pool: Vec<char> =
+        "abc xyz019 .,;:(){}[]<>=+-*/%&|!#?\"'`@$^~\\\n\t\räπ€\u{0}".chars().collect();
+    let mut rng = Rng::new(0xC0DE);
+    let mut executed = 0usize;
+    for _case in 0..300 {
+        let len = rng.below(160) + 1;
+        let s: String = (0..len).map(|_| *rng.choose(&pool)).collect();
+        for lang in Lang::all() {
+            for src in [s.clone(), in_main(lang, &s.replace('\n', " "))] {
+                let Ok(p) = parse(&src, lang, "fuzz") else { continue };
+                let compiled = match bytecode::compile(&p) {
+                    Ok(c) => c,
+                    Err(_) => {
+                        // only no-`main` programs are uncompilable at this
+                        // size — the reference must reject those too
+                        assert!(vm::run_cpu(&p, cfg()).is_err(), "[{lang}] parity\n{src}");
+                        continue;
+                    }
+                };
+                let tree = vm::run_cpu(&p, cfg());
+                let byte = bytecode::run_cpu(&compiled, cfg());
+                match (tree, byte) {
+                    (Ok(t), Ok(b)) => {
+                        assert_eq!(t.prints.len(), b.prints.len(), "[{lang}] print count");
+                        for (x, y) in t.prints.iter().zip(&b.prints) {
+                            assert_eq!(x.to_bits(), y.to_bits(), "[{lang}] print drift");
+                        }
+                    }
+                    (Err(_), Err(_)) => {}
+                    (t, b) => {
+                        panic!("[{lang}] engines disagree on success: {t:?} vs {b:?}\n{src}")
+                    }
+                }
+                executed += 1;
+            }
+        }
+    }
+    assert!(executed > 0, "the corpus must exercise at least one parseable program");
+}
+
+#[test]
+fn deep_but_parseable_nesting_compiles_cleanly() {
+    // The compiler's own descent guard must sit *beyond* the parsers'
+    // (MAX_PARSE_DEPTH): every program the front ends accept compiles —
+    // deep nesting hits a clean guard path, never a stack overflow or
+    // unbounded register growth.
+    assert!(bytecode::MAX_COMPILE_DEPTH > envadapt::frontend::lex::MAX_PARSE_DEPTH);
+    let depth = envadapt::frontend::lex::MAX_PARSE_DEPTH - 10;
+    let parens = format!("{}1{}", "(".repeat(depth), ")".repeat(depth));
+    for lang in Lang::all() {
+        let stmt = match lang {
+            Lang::Python => format!("x = {parens}"),
+            _ => format!("x = {parens};"),
+        };
+        let p = parse(&in_main(lang, &stmt), lang, "fuzz")
+            .unwrap_or_else(|e| panic!("[{lang}] {depth}-deep parens must parse: {e}"));
+        let c = bytecode::compile(&p)
+            .unwrap_or_else(|e| panic!("[{lang}] {depth}-deep parens must compile: {e}"));
+        bytecode::run_cpu(&c, VmConfig::default())
+            .unwrap_or_else(|e| panic!("[{lang}] {depth}-deep parens must run: {e}"));
     }
 }
 

@@ -190,3 +190,40 @@ fn reverse_loops(src: &str) -> String {
         "for (int i = n - 1; i >= 0; i--)",
     )
 }
+
+#[test]
+fn prop_bytecode_outcome_bit_identical_to_tree_walker() {
+    // For arbitrary programs and arbitrary gene plans, the bytecode VM
+    // must reproduce the tree-walker's Outcome *bit for bit* — op counts,
+    // prints, modeled seconds, energy and transfer stats (the equivalence
+    // contract that lets both engines share one measurement cache).
+    check(
+        &PropConfig { cases: 60, seed: 0xB17E, max_size: 8 },
+        |rng, size| {
+            let src = random_c_program(rng, size);
+            let gene_seed = rng.next_u64();
+            (src, gene_seed)
+        },
+        |(src, gene_seed)| {
+            let p = parse(src, Lang::C, "prop").unwrap();
+            let compiled = envadapt::bytecode::compile(&p).unwrap();
+            let a = analysis::analyze(&p);
+            let mut grng = Rng::new(*gene_seed);
+            let gene: Vec<bool> = (0..a.gene_loops().len()).map(|_| grng.bool()).collect();
+            let plan = analysis::build_plan(&a, &gene, grng.bool());
+            let mut d1 = GpuDevice::simulated(CostModel::default());
+            let mut d2 = GpuDevice::simulated(CostModel::default());
+            let t = vm::run(&p, &plan, &mut d1, VmConfig::default()).unwrap();
+            let b =
+                envadapt::bytecode::run(&compiled, &plan, &mut d2, VmConfig::default()).unwrap();
+            t.cpu_ops == b.cpu_ops
+                && t.gpu_ops == b.gpu_ops
+                && t.prints.len() == b.prints.len()
+                && t.prints.iter().zip(&b.prints).all(|(x, y)| x.to_bits() == y.to_bits())
+                && t.cpu_seconds.to_bits() == b.cpu_seconds.to_bits()
+                && t.gpu_seconds.to_bits() == b.gpu_seconds.to_bits()
+                && t.energy_j.to_bits() == b.energy_j.to_bits()
+                && t.transfers == b.transfers
+        },
+    );
+}
