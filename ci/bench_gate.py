@@ -2,12 +2,15 @@
 """Bench regression gate.
 
 Compares a fresh bench JSON against the committed baseline and fails
-when throughput (evals/sec) regressed by more than the threshold on any
-row. Covers both bench files: ``BENCH_engine.json`` (rows keyed by
-``workers``; ``cargo bench -- engine``) and ``BENCH_vm.json`` (rows
-keyed by ``workload``; ``cargo bench -- vm``).
+when throughput regressed by more than the threshold on any row. Covers
+the three bench files: ``BENCH_engine.json`` (rows keyed by ``workers``,
+valued in ``evals_per_sec``; ``cargo bench -- engine``),
+``BENCH_vm.json`` (rows keyed by ``workload``, valued in
+``evals_per_sec``; ``cargo bench -- vm``) and ``BENCH_serve.json``
+(rows keyed by ``clients``, valued in ``requests_per_sec``;
+``cargo bench -- serve``).
 
-A placeholder baseline (``evals_per_sec: null`` — committed before the
+A placeholder baseline (a ``null`` throughput — committed before the
 first toolchain-equipped run) skips the gate for that row, so the gate
 arms itself automatically once real numbers land in the repository.
 
@@ -22,12 +25,23 @@ THRESHOLD = 0.25  # fail when fresh < (1 - THRESHOLD) * baseline
 
 def row_key(r):
     # BENCH_engine.json rows are per worker count, BENCH_vm.json rows per
-    # workload family; either value is a stable row identity
-    return r.get("workers") if r.get("workers") is not None else r.get("workload")
+    # workload family, BENCH_serve.json rows per concurrent-client count;
+    # any of those values is a stable row identity
+    for key in ("workers", "workload", "clients"):
+        if r.get(key) is not None:
+            return r.get(key)
+    return None
+
+
+def row_value(r):
+    # engine/vm rows carry evals_per_sec, serve rows requests_per_sec
+    if "requests_per_sec" in r:
+        return r.get("requests_per_sec")
+    return r.get("evals_per_sec")
 
 
 def rows(doc):
-    return {row_key(r): r.get("evals_per_sec") for r in doc.get("results", [])}
+    return {row_key(r): row_value(r) for r in doc.get("results", [])}
 
 
 def main(argv):
@@ -60,7 +74,7 @@ def main(argv):
         ratio = fresh_eps / base_eps
         status = "OK" if ratio >= 1.0 - threshold else "REGRESSION"
         print(
-            f"{key}: {base_eps:.1f} -> {fresh_eps:.1f} evals/sec "
+            f"{key}: {base_eps:.1f} -> {fresh_eps:.1f} per sec "
             f"({ratio:.2f}x) {status}"
         )
         if status == "REGRESSION":

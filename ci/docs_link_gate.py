@@ -1,0 +1,101 @@
+#!/usr/bin/env python3
+"""Docs link gate.
+
+Walks the repository's markdown (README.md, docs/*.md, rust/DESIGN.md,
+and anything else passed on the command line), extracts every inline
+markdown link, and fails when a *relative* link points at a file that
+does not exist (resolved against the linking file's directory) or at a
+heading anchor the target file does not define. External links
+(http/https/mailto) are not fetched — this gate is offline and only
+keeps the repo-internal documentation web from rotting as files move.
+
+Anchor checking uses the GitHub slug rule: lowercase, spaces to dashes,
+punctuation dropped (a close-enough approximation that has no false
+negatives on plain ASCII headings).
+
+Usage: docs_link_gate.py [FILE.md ...]   (no args = the default set)
+"""
+
+import os
+import re
+import sys
+
+DEFAULT_DOCS = [
+    "README.md",
+    "ROADMAP.md",
+    "CHANGES.md",
+    "docs/PROTOCOL.md",
+    "docs/OPERATIONS.md",
+    "rust/DESIGN.md",
+]
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def github_slug(heading):
+    heading = heading.strip().lower()
+    # drop inline-code backticks and markdown emphasis, keep the text
+    heading = heading.replace("`", "").replace("*", "")
+    out = []
+    for ch in heading:
+        if ch.isalnum():
+            out.append(ch)
+        elif ch in (" ", "-"):
+            out.append("-")
+        # other punctuation is dropped
+    return "".join(out)
+
+
+def anchors_of(path, cache={}):
+    if path not in cache:
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        cache[path] = {github_slug(h) for h in HEADING_RE.findall(text)}
+    return cache[path]
+
+
+def check_file(md_path, repo_root):
+    failures = []
+    with open(md_path, encoding="utf-8") as f:
+        text = f.read()
+    base = os.path.dirname(md_path)
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        if path_part:
+            resolved = os.path.normpath(os.path.join(base, path_part))
+            if not os.path.exists(resolved):
+                failures.append(f"{md_path}: broken link -> {target}")
+                continue
+            anchor_target = resolved
+        else:
+            anchor_target = md_path  # same-file anchor
+        if anchor and anchor_target.endswith(".md"):
+            if github_slug(anchor) not in anchors_of(anchor_target):
+                failures.append(
+                    f"{md_path}: missing anchor -> {target} "
+                    f"(no heading slugs to '{anchor}' in {anchor_target})"
+                )
+    return failures
+
+
+def main(argv):
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    docs = argv[1:] or [
+        os.path.join(repo_root, d) for d in DEFAULT_DOCS if os.path.exists(os.path.join(repo_root, d))
+    ]
+    failures = []
+    checked = 0
+    for doc in docs:
+        checked += 1
+        failures.extend(check_file(doc, repo_root))
+    if failures:
+        sys.exit("docs link gate FAILED:\n  " + "\n  ".join(failures))
+    print(f"docs link gate OK ({checked} files, no broken relative links)")
+
+
+if __name__ == "__main__":
+    main(sys.argv)

@@ -1,0 +1,118 @@
+//! A tiny metrics poller for the serve daemon: hits the `metrics` op on
+//! an interval and prints one-line summaries — the minimal "exporter"
+//! sketch from `docs/OPERATIONS.md`, useful for watching a service drain
+//! a backlog or warm its pattern DB in real time.
+//!
+//! ```bash
+//! # against a self-spawned in-process service (generates demo traffic):
+//! cargo run --release --example metrics_scrape
+//! # against an external server, 1 s interval, 10 scrapes:
+//! #   envadapt serve --sim --port 7747 &
+//! #   cargo run --release --example metrics_scrape -- 127.0.0.1:7747 1000 10
+//! ```
+
+use envadapt::config::Config;
+use envadapt::ir::Lang;
+use envadapt::proto::{self, Response};
+use envadapt::server::{self, ServeOptions};
+use envadapt::util::json::Json;
+use envadapt::workloads;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+fn scrape(addr: std::net::SocketAddr, id: i64) -> anyhow::Result<Json> {
+    // one short-lived connection per scrape, like an external poller
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(format!("{{\"op\":\"metrics\",\"id\":{id}}}\n").as_bytes())?;
+    stream.flush()?;
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line)?;
+    let r = Response::parse_line(&line)?;
+    anyhow::ensure!(r.ok, "metrics op failed: {:?}", r.error);
+    Ok(r.body.get("metrics").expect("metrics payload").clone())
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let external = args.next();
+    let interval_ms: u64 = args.next().and_then(|v| v.parse().ok()).unwrap_or(500);
+    let scrapes: usize = args.next().and_then(|v| v.parse().ok()).unwrap_or(6);
+
+    let (addr, handle) = match &external {
+        Some(a) => (a.parse()?, None),
+        None => {
+            let h = server::spawn_tcp(
+                Config::fast_sim(),
+                ServeOptions { pool: 2, ..Default::default() },
+                "127.0.0.1:0",
+            )?;
+            (h.addr(), Some(h))
+        }
+    };
+    println!("scraping metrics from {addr} every {interval_ms} ms ({scrapes} scrapes)\n");
+
+    // self-spawned mode: put some traffic on the service from a client
+    // thread so the counters move while we watch
+    let traffic = handle.as_ref().map(|_| {
+        std::thread::spawn(move || {
+            let Ok(stream) = TcpStream::connect(addr) else { return };
+            let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+            let mut writer = stream;
+            let mut id = 100i64;
+            for _ in 0..3 {
+                for lang in Lang::all() {
+                    let code = workloads::get("mm", lang).unwrap().code;
+                    id += 1;
+                    let line = proto::offload_request(id, "mm", lang, code);
+                    if writer.write_all(line.as_bytes()).is_err() {
+                        return;
+                    }
+                    let _ = writer.write_all(b"\n");
+                    let _ = writer.flush();
+                    let mut resp = String::new();
+                    let _ = reader.read_line(&mut resp);
+                }
+            }
+        })
+    });
+
+    let i64_at = |m: &Json, group: &str, leaf: &str| {
+        m.get(group).and_then(|g| g.get(leaf)).and_then(|v| v.as_i64()).unwrap_or(0)
+    };
+    for n in 1..=scrapes {
+        let m = scrape(addr, n as i64)?;
+        let f = |k: &str| m.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let evals_per_sec = m
+            .get("search")
+            .and_then(|s| s.get("evals_per_sec"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0);
+        println!(
+            "[{n:>2}] up {:>6.1}s  req {:>4}  ok {:>4}  busy {:>3}  err {:>3}  \
+             offloads {:>4} ({:>3} replayed)  evals/s {:>9.1}  queue {}/{}",
+            f("uptime_s"),
+            m.get("requests_total").and_then(|v| v.as_i64()).unwrap_or(0),
+            i64_at(&m, "responses", "ok"),
+            i64_at(&m, "responses", "busy"),
+            i64_at(&m, "responses", "error"),
+            i64_at(&m, "offloads", "total"),
+            i64_at(&m, "offloads", "replayed"),
+            evals_per_sec,
+            m.get("queue_depth").and_then(|v| v.as_i64()).unwrap_or(0),
+            m.get("queue_capacity").and_then(|v| v.as_i64()).unwrap_or(0),
+        );
+        if n < scrapes {
+            std::thread::sleep(Duration::from_millis(interval_ms));
+        }
+    }
+
+    if let Some(t) = traffic {
+        let _ = t.join();
+    }
+    if let Some(h) = handle {
+        h.shutdown()?;
+        println!("\nservice shut down cleanly");
+    }
+    Ok(())
+}

@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
         None => {
             let h = server::spawn_tcp(
                 Config::fast_sim(),
-                ServeOptions { pool: 2, db_path: None },
+                ServeOptions { pool: 2, db_path: None, ..Default::default() },
                 "127.0.0.1:0",
             )?;
             (h.addr(), Some(h))

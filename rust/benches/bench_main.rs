@@ -70,6 +70,9 @@ fn main() {
     if want("vm") {
         vm_throughput();
     }
+    if want("serve") {
+        serve_throughput();
+    }
     if want("micro") {
         micro_benchmarks();
     }
@@ -267,6 +270,116 @@ fn vm_throughput() {
     if let Err(e) = std::fs::write("BENCH_vm.json", j.to_pretty() + "\n") {
         eprintln!("warning: could not write BENCH_vm.json: {e}");
     }
+}
+
+/// serve_throughput: requests/second through the event-loop serve daemon
+/// on the learned-pattern replay path (the daemon's steady state) at
+/// 1 / 4 / 16 concurrent TCP clients. One priming request runs the real
+/// search; every measured request replays the learned pattern with zero
+/// measurements, so this isolates the serving stack itself — framing,
+/// admission queue, worker handoff, completion routing. Records the
+/// baseline to BENCH_serve.json for the CI regression gate.
+fn serve_throughput() {
+    use envadapt::proto::{self, Response};
+    use envadapt::server::{self, ServeOptions};
+    use envadapt::util::json::Json;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::{Arc, Barrier};
+
+    println!("## serve — event-loop daemon replay throughput (requests/sec)\n");
+
+    let handle = server::spawn_tcp(
+        Config::fast_sim(),
+        ServeOptions { pool: 2, ..Default::default() },
+        "127.0.0.1:0",
+    )
+    .expect("spawn server");
+    let addr = handle.addr();
+    let code = workloads::get("smallloops", Lang::C).unwrap().code;
+
+    let roundtrip = |line: &str| -> Response {
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        stream.write_all(line.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        stream.flush().unwrap();
+        let mut resp = String::new();
+        BufReader::new(stream).read_line(&mut resp).unwrap();
+        Response::parse_line(&resp).unwrap()
+    };
+
+    // prime: one real search learns the pattern; everything measured
+    // after replays it with zero measurements
+    let primed = roundtrip(&proto::offload_request(0, "smallloops", Lang::C, code));
+    assert!(primed.ok, "priming offload failed: {:?}", primed.error);
+
+    const REQS_PER_CLIENT: usize = 50;
+    let mut rows = Vec::new();
+    let mut arr = Vec::new();
+    for clients in [1usize, 4, 16] {
+        let barrier = Arc::new(Barrier::new(clients + 1));
+        let mut threads = Vec::new();
+        for c in 0..clients {
+            let barrier = barrier.clone();
+            threads.push(std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).expect("connect");
+                let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+                let mut writer = stream;
+                let line = proto::offload_request(c as i64, "smallloops", Lang::C, code);
+                barrier.wait();
+                for _ in 0..REQS_PER_CLIENT {
+                    writer.write_all(line.as_bytes()).unwrap();
+                    writer.write_all(b"\n").unwrap();
+                    writer.flush().unwrap();
+                    let mut resp = String::new();
+                    reader.read_line(&mut resp).unwrap();
+                    let r = Response::parse_line(&resp).unwrap();
+                    assert!(r.ok, "replay request failed: {:?}", r.error);
+                }
+            }));
+        }
+        barrier.wait();
+        let t0 = std::time::Instant::now();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let total = (clients * REQS_PER_CLIENT) as f64;
+        let rps = total / wall;
+        rows.push(vec![
+            clients.to_string(),
+            format!("{:.3}", wall * 1e3),
+            format!("{rps:.1}"),
+        ]);
+        arr.push(
+            Json::obj()
+                .set("clients", clients)
+                .set("batch_wall_s", wall)
+                .set("requests_per_sec", rps),
+        );
+    }
+    println!(
+        "{}",
+        markdown_table(&["clients", "batch wall ms", "requests/sec"], &rows)
+    );
+
+    let stats = roundtrip(r#"{"op":"stats","id":9}"#);
+    let replays = stats
+        .body
+        .get("stats")
+        .and_then(|s| s.get("pattern_reuse_hits"))
+        .and_then(|v| v.as_i64())
+        .unwrap_or(-1);
+    println!("(pattern replays served: {replays}; every measured request hit the fast path)\n");
+
+    let j = Json::obj()
+        .set("bench", "serve_throughput")
+        .set("reqs_per_client", REQS_PER_CLIENT)
+        .set("results", Json::Arr(arr));
+    if let Err(e) = std::fs::write("BENCH_serve.json", j.to_pretty() + "\n") {
+        eprintln!("warning: could not write BENCH_serve.json: {e}");
+    }
+    handle.shutdown().expect("clean shutdown");
 }
 
 /// E9 (extension): environment-adaptive target selection — the same app

@@ -46,6 +46,7 @@ use crate::coordinator::{Coordinator, OffloadReport};
 use crate::device::TargetKind;
 use crate::engine::{self, SharedCache, SharedCompiledCache};
 use crate::ir::Lang;
+use crate::metrics::{Gauges, Metrics, SharedMetrics};
 use crate::patterndb::{self, PatternDb, SharedPatternDb};
 use crate::placement::DeviceSet;
 use crate::util::json::Json;
@@ -583,6 +584,11 @@ pub struct OffloadSession {
     compiled: SharedCompiledCache,
     db: SharedPatternDb,
     coords: HashMap<String, Coordinator>,
+    /// observability registry every offload records into; the serve
+    /// daemon swaps in one shared instance across its whole pool
+    /// ([`OffloadSession::set_metrics`]), so CLI, batch and served
+    /// requests all report the same numbers the same way
+    metrics: SharedMetrics,
 }
 
 impl OffloadSession {
@@ -604,6 +610,7 @@ impl OffloadSession {
             compiled: engine::compiled_shared(),
             db,
             coords: HashMap::new(),
+            metrics: Metrics::shared(),
         }
     }
 
@@ -621,6 +628,37 @@ impl OffloadSession {
     /// Handle on the (learning) pattern DB.
     pub fn db(&self) -> SharedPatternDb {
         self.db.clone()
+    }
+
+    /// Handle on the observability registry this session records into.
+    pub fn metrics(&self) -> SharedMetrics {
+        self.metrics.clone()
+    }
+
+    /// Replace the observability registry (how the serve daemon points a
+    /// whole worker pool at one shared registry).
+    pub fn set_metrics(&mut self, metrics: SharedMetrics) {
+        self.metrics = metrics;
+    }
+
+    /// The `metrics` snapshot from this session's point of view: offload
+    /// counters from the registry plus learning-state gauges from the
+    /// session's own cache and pattern DB. Serve-only gauges (pool,
+    /// queue, connections) stay zero outside the daemon — the daemon
+    /// snapshots through its own service instead.
+    pub fn metrics_json(&self) -> Json {
+        let (cache_entries, cache_hits, cache_misses) = {
+            let c = self.cache.lock().unwrap();
+            (c.len(), c.hit_count(), c.miss_count())
+        };
+        let learned_records = self.db.lock().unwrap().learned_len();
+        self.metrics.snapshot(&Gauges {
+            learned_records,
+            cache_entries,
+            cache_hits,
+            cache_misses,
+            ..Gauges::default()
+        })
     }
 
     /// The coordinator that serves `req`, built now if this variant has
@@ -664,7 +702,11 @@ impl OffloadSession {
         let code = req.resolve_code()?;
         let lang = req.lang;
         let name = req.name.clone();
-        self.coordinator_for(req).offload_source(&code, lang, &name)
+        let result = self.coordinator_for(req).offload_source(&code, lang, &name);
+        if let Ok(report) = &result {
+            self.metrics.record_offload(report);
+        }
+        result
     }
 
     /// Serve a batch of requests over `pool` OS threads, each with its own
@@ -692,11 +734,13 @@ impl OffloadSession {
                 let cache = self.cache.clone();
                 let compiled = self.compiled.clone();
                 let db = self.db.clone();
+                let metrics = self.metrics.clone();
                 let next = &next;
                 let results = &results;
                 scope.spawn(move || {
                     let mut worker = OffloadSession::with_shared(wcfg.clone(), cache, db);
                     worker.compiled = compiled;
+                    worker.metrics = metrics;
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         if i >= requests.len() {
@@ -780,6 +824,14 @@ pub struct OffloadResponse {
     /// protocol predates the field)
     pub schema_version: i64,
     pub error: Option<String>,
+    /// the service shed this request (admission queue full); back off for
+    /// `retry_after_ms` and retry
+    pub busy: bool,
+    /// backoff hint attached to `busy` responses (milliseconds)
+    pub retry_after_ms: Option<i64>,
+    /// the request exceeded the service's per-request timeout (the
+    /// request must be treated as failed; it will not be answered later)
+    pub timed_out: bool,
     /// decoder warnings the server attached (unknown request fields, ...)
     pub warnings: Vec<String>,
     /// pool member that served an offload (diagnostics)
@@ -796,6 +848,9 @@ impl OffloadResponse {
         let schema_version =
             body.get("schema_version").and_then(|v| v.as_i64()).unwrap_or(1);
         let error = body.get("error").and_then(|v| v.as_str()).map(|s| s.to_string());
+        let busy = body.get("busy").and_then(|v| v.as_bool()).unwrap_or(false);
+        let retry_after_ms = body.get("retry_after_ms").and_then(|v| v.as_i64());
+        let timed_out = body.get("timed_out").and_then(|v| v.as_bool()).unwrap_or(false);
         let warnings = body
             .get("warnings")
             .and_then(|v| v.items())
@@ -804,7 +859,18 @@ impl OffloadResponse {
             })
             .unwrap_or_default();
         let worker = body.get("worker").and_then(|v| v.as_i64());
-        Ok(OffloadResponse { id, ok, schema_version, error, warnings, worker, body })
+        Ok(OffloadResponse {
+            id,
+            ok,
+            schema_version,
+            error,
+            busy,
+            retry_after_ms,
+            timed_out,
+            warnings,
+            worker,
+            body,
+        })
     }
 
     /// The offload report object, when this is an offload response.
@@ -851,6 +917,17 @@ impl OffloadResponse {
         with_warnings(j, warnings).set("stats", stats)
     }
 
+    /// Successful `metrics` response (the full observability snapshot;
+    /// see `docs/OPERATIONS.md` for the field reference).
+    pub fn encode_metrics(id: i64, metrics: Json, warnings: &[String]) -> Json {
+        let j = Json::obj()
+            .set("id", id)
+            .set("ok", true)
+            .set("schema_version", SCHEMA_VERSION)
+            .set("op", "metrics");
+        with_warnings(j, warnings).set("metrics", metrics)
+    }
+
     /// Failure response (never tears down a connection).
     pub fn encode_error(id: i64, msg: &str) -> Json {
         Json::obj()
@@ -858,6 +935,31 @@ impl OffloadResponse {
             .set("ok", false)
             .set("schema_version", SCHEMA_VERSION)
             .set("error", msg)
+    }
+
+    /// Load-shed response: the admission queue is full. Flagged
+    /// `"busy":true` with a `retry_after_ms` backoff hint so clients can
+    /// distinguish transient overload from request errors.
+    pub fn encode_busy(id: i64, retry_after_ms: u64) -> Json {
+        Json::obj()
+            .set("id", id)
+            .set("ok", false)
+            .set("schema_version", SCHEMA_VERSION)
+            .set("busy", true)
+            .set("retry_after_ms", retry_after_ms as i64)
+            .set("error", "service busy: admission queue full")
+    }
+
+    /// Per-request-timeout response, flagged `"timed_out":true`. The
+    /// request will not be answered later; any in-progress work for it is
+    /// cancelled or discarded.
+    pub fn encode_timeout(id: i64, timeout_ms: u64) -> Json {
+        Json::obj()
+            .set("id", id)
+            .set("ok", false)
+            .set("schema_version", SCHEMA_VERSION)
+            .set("timed_out", true)
+            .set("error", format!("request timed out after {timeout_ms} ms"))
     }
 }
 

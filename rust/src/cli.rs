@@ -16,6 +16,7 @@
 //!                  [--naive-transfers] [--no-funcblock] [--sim] [--json]
 //!                  [--emit-annotated]
 //! envadapt serve [--port N | --stdio] [--pool N] [--db FILE]
+//!                [--queue N] [--timeout-ms N]
 //!                [--workers N] [--cache FILE] [--sim] [...]
 //! envadapt analyze <file|app> [--lang ...]       loop table + candidates
 //! envadapt run <file|app> [--lang ...]           CPU-only execution
@@ -69,6 +70,12 @@ struct Opts {
     port: Option<u16>,
     /// serve: speak the protocol on stdin/stdout instead of TCP
     stdio: bool,
+    /// serve: admission-queue capacity (0/None = auto)
+    queue: Option<usize>,
+    /// serve: per-request timeout in ms (None = disabled)
+    timeout_ms: Option<u64>,
+    /// offload: print the session metrics snapshot after the report
+    metrics: bool,
     naive: bool,
     no_funcblock: bool,
     sim: bool,
@@ -96,6 +103,9 @@ fn parse_opts(rest: &[String]) -> anyhow::Result<Opts> {
         pool: None,
         port: None,
         stdio: false,
+        queue: None,
+        timeout_ms: None,
+        metrics: false,
         naive: false,
         no_funcblock: false,
         sim: false,
@@ -154,6 +164,19 @@ fn parse_opts(rest: &[String]) -> anyhow::Result<Opts> {
                 o.port = Some(n);
             }
             "--stdio" => o.stdio = true,
+            "--queue" => {
+                i += 1;
+                let n: usize = rest.get(i).and_then(|v| v.parse().ok()).ok_or_else(|| anyhow::anyhow!("--queue needs a number"))?;
+                anyhow::ensure!(n >= 1, "--queue must be at least 1");
+                o.queue = Some(n);
+            }
+            "--timeout-ms" => {
+                i += 1;
+                let n: u64 = rest.get(i).and_then(|v| v.parse().ok()).ok_or_else(|| anyhow::anyhow!("--timeout-ms needs a number of milliseconds"))?;
+                anyhow::ensure!(n >= 1, "--timeout-ms must be at least 1");
+                o.timeout_ms = Some(n);
+            }
+            "--metrics" => o.metrics = true,
             "--target" => {
                 i += 1;
                 let v = rest.get(i).ok_or_else(|| anyhow::anyhow!("--target needs a value"))?;
@@ -357,6 +380,12 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             if opts.emit_annotated {
                 println!("--- annotated source ---\n{}", r.annotated_source);
             }
+            if opts.metrics {
+                // the same fixed-schema snapshot the serve daemon's
+                // `metrics` op returns (docs/OPERATIONS.md), so one-shot
+                // runs and served traffic are compared field-for-field
+                println!("--- session metrics ---\n{}", session.metrics_json().to_pretty());
+            }
             Ok(())
         }
         "analyze" => {
@@ -430,10 +459,18 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             let sopts = server::ServeOptions {
                 pool: opts.pool.unwrap_or(0),
                 db_path: opts.db.clone(),
+                queue: opts.queue.unwrap_or(0),
+                request_timeout_ms: opts.timeout_ms.unwrap_or(0),
+                ..Default::default()
             };
             if opts.stdio {
+                // stdio stays on default signal disposition: the loop
+                // blocks in read_line and could never poll a drain flag
                 server::serve_stdio(cfg, sopts)
             } else {
+                // foreground daemon: SIGTERM/SIGINT trigger graceful
+                // drain (finish in-flight, flush learned state)
+                server::install_signal_handlers();
                 let addr = format!("127.0.0.1:{}", opts.port.unwrap_or(7747));
                 server::serve_tcp(&addr, cfg, sopts)
             }
@@ -482,8 +519,9 @@ USAGE:
                    [--workers N] [--cache FILE] [--db FILE]
                    [--no-reuse] [--no-learn]
                    [--naive-transfers] [--no-funcblock] [--sim] [--json]
-                   [--emit-annotated]
+                   [--emit-annotated] [--metrics]
   envadapt serve   [--port N | --stdio] [--pool N] [--db FILE]
+                   [--queue N] [--timeout-ms N]
                    [--workers N] [--cache FILE] [--sim] [--no-reuse]
                    [--no-learn] [--pop N] [--gens N]
   envadapt analyze <file|app> [--lang ...]
@@ -512,17 +550,28 @@ OPTIONS:
                 requests replay the known plan with zero measurements
   --no-reuse    always run the full search (skip the pattern-DB replay)
   --no-learn    do not insert learned patterns after a search
+  --metrics     offload: print the session's metrics snapshot after the
+                report (same schema as the serve daemon's `metrics` op)
 
-SERVE (the offload-as-a-service daemon, line-delimited JSON, wire v2):
+SERVE (the offload-as-a-service daemon, line-delimited JSON, wire v2;
+       operations manual: docs/OPERATIONS.md):
   --port N      listen on 127.0.0.1:N (default 7747; 0 = ephemeral)
   --stdio       speak the protocol on stdin/stdout instead of TCP
   --pool N      coordinator workers serving concurrent requests
                 (default: min(4, host parallelism, --workers budget);
                 an explicit N larger than the --workers budget is an
                 error — each coordinator would get 0 measurement workers)
+  --queue N     admission-queue capacity (default max(16, 4×pool));
+                offloads past it are shed with a `busy` response carrying
+                a retry_after_ms backoff hint instead of queuing unboundedly
+  --timeout-ms N
+                per-request timeout, admission → response (default: none);
+                expired requests get a versioned `timed_out` error
+  SIGTERM/SIGINT (TCP mode) drain gracefully: stop accepting, finish
+  in-flight requests, flush the pattern DB and measurement cache, exit.
   request:  {{\"op\":\"offload\",\"id\":1,\"schema_version\":2,\"name\":\"mm\",
              \"lang\":\"c\",\"code\":\"...\"}}  (v1 requests still accepted)
-  also:     {{\"op\":\"stats\"|\"ping\"|\"shutdown\",\"id\":N}}
+  also:     {{\"op\":\"stats\"|\"metrics\"|\"ping\"|\"shutdown\",\"id\":N}}
 
 Built-in workloads: mm fourier stencil blackscholes mixed signal smallloops hetero"
     );

@@ -72,6 +72,7 @@ pub mod ga;
 pub mod ir;
 pub mod libs;
 pub mod measure;
+pub mod metrics;
 pub mod patterndb;
 pub mod placement;
 pub mod proto;

@@ -1,0 +1,508 @@
+//! Service observability: the counters, gauges and histograms behind the
+//! wire protocol's `metrics` op (and the `stats` summary), shared by
+//! every entry path.
+//!
+//! One [`Metrics`] instance is threaded through every
+//! [`crate::api::OffloadSession`] that should report into it — the serve
+//! daemon hands one shared instance to all pool workers, and the CLI /
+//! batch / embedding paths record into their session's own instance — so
+//! the same numbers mean the same thing no matter how a request arrived.
+//!
+//! Two recording layers write here:
+//!
+//! * **Transport** (the serve daemon): requests by op, response outcome
+//!   classes (`ok` / `error` / `busy` / `timeout`), worker panics.
+//! * **Offload outcome** ([`crate::api::OffloadSession::offload`]):
+//!   search-vs-replay split, measurements and cache traffic, learned
+//!   patterns, per-destination placement counts, search wall time.
+//!
+//! [`Metrics::snapshot`] renders the whole surface as one flat-ish JSON
+//! object with a **fixed schema**: every field is always present (zero
+//! when untouched), so scrapers never need existence checks. The field
+//! list is documented in `docs/OPERATIONS.md` and a test diffs that
+//! document against the serialized struct, so the two cannot drift.
+//!
+//! All counters are relaxed atomics: recording never takes a lock, and a
+//! snapshot is a consistent-enough read for monitoring (counters may be
+//! mid-update across fields, never torn within one).
+
+use crate::coordinator::OffloadReport;
+use crate::device::TargetKind;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Shared handle: clone freely, record from any thread.
+pub type SharedMetrics = Arc<Metrics>;
+
+/// Which op a request line selected (`Invalid` = the line failed to
+/// parse or named an unknown op).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    Offload,
+    Stats,
+    Metrics,
+    Ping,
+    Shutdown,
+    Invalid,
+}
+
+/// Upper bucket bounds (milliseconds) of the `offload_wall_ms`
+/// histogram. Buckets are cumulative (`le_X` counts offloads that took
+/// at most `X` ms), Prometheus-style.
+pub const WALL_MS_BUCKETS: [u64; 5] = [1, 10, 100, 1000, 10000];
+
+/// The service-wide metric registry. Construct with [`Metrics::new`],
+/// share as [`SharedMetrics`].
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    // requests by op
+    req_offload: AtomicU64,
+    req_stats: AtomicU64,
+    req_metrics: AtomicU64,
+    req_ping: AtomicU64,
+    req_shutdown: AtomicU64,
+    req_invalid: AtomicU64,
+    // responses by outcome class (mutually exclusive)
+    resp_ok: AtomicU64,
+    resp_error: AtomicU64,
+    resp_busy: AtomicU64,
+    resp_timeout: AtomicU64,
+    worker_panics: AtomicU64,
+    // offload outcomes (recorded by OffloadSession::offload)
+    offloads_searched: AtomicU64,
+    offloads_replayed: AtomicU64,
+    patterns_learned: AtomicU64,
+    search_measurements: AtomicU64,
+    search_cache_hits: AtomicU64,
+    search_wall_us: AtomicU64,
+    // winning placement destinations across all offloads (loop slots)
+    placed_cpu: AtomicU64,
+    placed_gpu: AtomicU64,
+    placed_many_core: AtomicU64,
+    placed_fpga: AtomicU64,
+    // offload wall-time histogram (cumulative le buckets, see
+    // WALL_MS_BUCKETS) + count + sum
+    wall_le: [AtomicU64; WALL_MS_BUCKETS.len()],
+    wall_count: AtomicU64,
+    wall_sum_us: AtomicU64,
+}
+
+/// Point-in-time gauges the owner of the metrics fills at snapshot time
+/// (they live in the service / session, not in the counter registry).
+/// Paths that are not serving (CLI one-shot, embedding) leave the
+/// serve-only fields at zero.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Gauges {
+    pub pool: usize,
+    pub queue_depth: usize,
+    pub queue_capacity: usize,
+    pub connections_open: usize,
+    pub learned_records: usize,
+    pub cache_entries: usize,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            started: Instant::now(),
+            req_offload: AtomicU64::new(0),
+            req_stats: AtomicU64::new(0),
+            req_metrics: AtomicU64::new(0),
+            req_ping: AtomicU64::new(0),
+            req_shutdown: AtomicU64::new(0),
+            req_invalid: AtomicU64::new(0),
+            resp_ok: AtomicU64::new(0),
+            resp_error: AtomicU64::new(0),
+            resp_busy: AtomicU64::new(0),
+            resp_timeout: AtomicU64::new(0),
+            worker_panics: AtomicU64::new(0),
+            offloads_searched: AtomicU64::new(0),
+            offloads_replayed: AtomicU64::new(0),
+            patterns_learned: AtomicU64::new(0),
+            search_measurements: AtomicU64::new(0),
+            search_cache_hits: AtomicU64::new(0),
+            search_wall_us: AtomicU64::new(0),
+            placed_cpu: AtomicU64::new(0),
+            placed_gpu: AtomicU64::new(0),
+            placed_many_core: AtomicU64::new(0),
+            placed_fpga: AtomicU64::new(0),
+            wall_le: std::array::from_fn(|_| AtomicU64::new(0)),
+            wall_count: AtomicU64::new(0),
+            wall_sum_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Fresh shared registry.
+    pub fn shared() -> SharedMetrics {
+        Arc::new(Metrics::new())
+    }
+
+    /// Seconds since this registry was created (the service's uptime when
+    /// the registry is the service's).
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    // -- transport-layer recording ---------------------------------------
+
+    /// Count one request line by the op it selected.
+    pub fn note_op(&self, op: OpKind) {
+        let c = match op {
+            OpKind::Offload => &self.req_offload,
+            OpKind::Stats => &self.req_stats,
+            OpKind::Metrics => &self.req_metrics,
+            OpKind::Ping => &self.req_ping,
+            OpKind::Shutdown => &self.req_shutdown,
+            OpKind::Invalid => &self.req_invalid,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Classify and count one response object: `busy` and `timed_out`
+    /// responses are their own outcome classes; everything else is `ok`
+    /// or `error` by the `ok` field. Classes are mutually exclusive, so
+    /// `responses.*` sums to the number of responses produced.
+    pub fn note_response(&self, resp: &Json) {
+        let flag = |k: &str| resp.get(k).and_then(|v| v.as_bool()).unwrap_or(false);
+        let c = if flag("busy") {
+            &self.resp_busy
+        } else if flag("timed_out") {
+            &self.resp_timeout
+        } else if flag("ok") {
+            &self.resp_ok
+        } else {
+            &self.resp_error
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one caught worker panic (the serve pool's crash containment).
+    pub fn record_worker_panic(&self) {
+        self.worker_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    // -- offload-outcome recording ---------------------------------------
+
+    /// Record one completed offload from its report (called by
+    /// [`crate::api::OffloadSession::offload`] on every success, whatever
+    /// the entry path).
+    pub fn record_offload(&self, report: &OffloadReport) {
+        self.record_offload_parts(
+            report.reused_pattern.is_some(),
+            report.learned_pattern,
+            report.total_measurements,
+            report.cache_hits,
+            report.search_wall_s,
+            &report.placement,
+        );
+    }
+
+    /// The raw recording behind [`Metrics::record_offload`] (separated so
+    /// it is testable without fabricating a full report).
+    pub fn record_offload_parts(
+        &self,
+        replayed: bool,
+        learned: bool,
+        measurements: usize,
+        cache_hits: usize,
+        wall_s: f64,
+        placement: &[Option<TargetKind>],
+    ) {
+        if replayed {
+            self.offloads_replayed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.offloads_searched.fetch_add(1, Ordering::Relaxed);
+        }
+        if learned {
+            self.patterns_learned.fetch_add(1, Ordering::Relaxed);
+        }
+        self.search_measurements.fetch_add(measurements as u64, Ordering::Relaxed);
+        self.search_cache_hits.fetch_add(cache_hits as u64, Ordering::Relaxed);
+        let us = (wall_s * 1e6).max(0.0) as u64;
+        self.search_wall_us.fetch_add(us, Ordering::Relaxed);
+        for slot in placement {
+            let c = match slot {
+                None => &self.placed_cpu,
+                Some(TargetKind::Gpu) => &self.placed_gpu,
+                Some(TargetKind::ManyCore) => &self.placed_many_core,
+                Some(TargetKind::Fpga) => &self.placed_fpga,
+            };
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+        let ms = wall_s * 1e3;
+        for (i, bound) in WALL_MS_BUCKETS.iter().enumerate() {
+            if ms <= *bound as f64 {
+                self.wall_le[i].fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.wall_count.fetch_add(1, Ordering::Relaxed);
+        self.wall_sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    // -- accessors the legacy `stats` summary reads -----------------------
+
+    pub fn requests_total(&self) -> u64 {
+        self.req_offload.load(Ordering::Relaxed)
+            + self.req_stats.load(Ordering::Relaxed)
+            + self.req_metrics.load(Ordering::Relaxed)
+            + self.req_ping.load(Ordering::Relaxed)
+            + self.req_shutdown.load(Ordering::Relaxed)
+            + self.req_invalid.load(Ordering::Relaxed)
+    }
+
+    pub fn offloads_total(&self) -> u64 {
+        self.offloads_searched.load(Ordering::Relaxed)
+            + self.offloads_replayed.load(Ordering::Relaxed)
+    }
+
+    pub fn offloads_replayed(&self) -> u64 {
+        self.offloads_replayed.load(Ordering::Relaxed)
+    }
+
+    pub fn patterns_learned(&self) -> u64 {
+        self.patterns_learned.load(Ordering::Relaxed)
+    }
+
+    pub fn search_measurements(&self) -> u64 {
+        self.search_measurements.load(Ordering::Relaxed)
+    }
+
+    pub fn responses_error(&self) -> u64 {
+        self.resp_error.load(Ordering::Relaxed)
+    }
+
+    pub fn responses_busy(&self) -> u64 {
+        self.resp_busy.load(Ordering::Relaxed)
+    }
+
+    pub fn responses_timeout(&self) -> u64 {
+        self.resp_timeout.load(Ordering::Relaxed)
+    }
+
+    pub fn worker_panics(&self) -> u64 {
+        self.worker_panics.load(Ordering::Relaxed)
+    }
+
+    // -- snapshot ---------------------------------------------------------
+
+    /// Render the full observability surface as JSON with a fixed schema
+    /// (every field always present; see `docs/OPERATIONS.md` for the
+    /// field reference — a test keeps the two in sync).
+    pub fn snapshot(&self, g: &Gauges) -> Json {
+        let ld = |c: &AtomicU64| c.load(Ordering::Relaxed) as i64;
+        let searched = ld(&self.offloads_searched);
+        let replayed = ld(&self.offloads_replayed);
+        let offloads_total = searched + replayed;
+        let replay_ratio =
+            if offloads_total > 0 { replayed as f64 / offloads_total as f64 } else { 0.0 };
+        let measurements = ld(&self.search_measurements);
+        let cache_hits_search = ld(&self.search_cache_hits);
+        let wall_s = self.search_wall_us.load(Ordering::Relaxed) as f64 / 1e6;
+        // measurements the shared cache did not answer cost one bytecode-VM
+        // evaluation each; per wall second that is the service's eval rate
+        let evals = (measurements - cache_hits_search).max(0) as f64;
+        let evals_per_sec = if wall_s > 0.0 { evals / wall_s } else { 0.0 };
+        let lookups = g.cache_hits + g.cache_misses;
+        let hit_rate =
+            if lookups > 0 { g.cache_hits as f64 / lookups as f64 } else { 0.0 };
+        let mut wall = Json::obj();
+        for (i, bound) in WALL_MS_BUCKETS.iter().enumerate() {
+            wall = wall.set(format!("le_{bound}").as_str(), ld(&self.wall_le[i]));
+        }
+        let wall = wall
+            .set("count", ld(&self.wall_count))
+            .set("sum_ms", self.wall_sum_us.load(Ordering::Relaxed) as f64 / 1e3);
+        Json::obj()
+            .set("schema_version", crate::api::SCHEMA_VERSION)
+            .set("uptime_s", self.uptime_s())
+            .set("pool", g.pool)
+            .set("queue_capacity", g.queue_capacity)
+            .set("queue_depth", g.queue_depth)
+            .set("connections_open", g.connections_open)
+            .set("requests_total", self.requests_total() as i64)
+            .set(
+                "requests_by_op",
+                Json::obj()
+                    .set("offload", ld(&self.req_offload))
+                    .set("stats", ld(&self.req_stats))
+                    .set("metrics", ld(&self.req_metrics))
+                    .set("ping", ld(&self.req_ping))
+                    .set("shutdown", ld(&self.req_shutdown))
+                    .set("invalid", ld(&self.req_invalid)),
+            )
+            .set(
+                "responses",
+                Json::obj()
+                    .set("ok", ld(&self.resp_ok))
+                    .set("error", ld(&self.resp_error))
+                    .set("busy", ld(&self.resp_busy))
+                    .set("timeout", ld(&self.resp_timeout)),
+            )
+            .set("worker_panics", ld(&self.worker_panics))
+            .set(
+                "offloads",
+                Json::obj()
+                    .set("total", offloads_total)
+                    .set("searched", searched)
+                    .set("replayed", replayed)
+                    .set("replay_ratio", replay_ratio),
+            )
+            .set(
+                "patterns",
+                Json::obj()
+                    .set("learned_total", ld(&self.patterns_learned))
+                    .set("records", g.learned_records),
+            )
+            .set(
+                "search",
+                Json::obj()
+                    .set("measurements", measurements)
+                    .set("cache_hits", cache_hits_search)
+                    .set("wall_s", wall_s)
+                    .set("evals_per_sec", evals_per_sec),
+            )
+            .set(
+                "cache",
+                Json::obj()
+                    .set("entries", g.cache_entries)
+                    .set("hits", g.cache_hits as i64)
+                    .set("misses", g.cache_misses as i64)
+                    .set("hit_rate", hit_rate),
+            )
+            .set(
+                "placements",
+                Json::obj()
+                    .set("cpu", ld(&self.placed_cpu))
+                    .set("gpu", ld(&self.placed_gpu))
+                    .set("many-core", ld(&self.placed_many_core))
+                    .set("fpga", ld(&self.placed_fpga)),
+            )
+            .set("offload_wall_ms", wall)
+    }
+}
+
+/// Flatten a metrics snapshot to `group.leaf` key paths (doc/test
+/// tooling; also handy for exporters that want flat keys).
+pub fn flatten_keys(j: &Json) -> Vec<String> {
+    let mut out = Vec::new();
+    if let Json::Obj(kvs) = j {
+        for (k, v) in kvs {
+            match v {
+                Json::Obj(inner) => {
+                    for (ik, _) in inner {
+                        out.push(format!("{k}.{ik}"));
+                    }
+                }
+                _ => out.push(k.clone()),
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_schema_is_fixed_and_zeroed() {
+        let m = Metrics::new();
+        let j = m.snapshot(&Gauges::default());
+        let keys = flatten_keys(&j);
+        // the contract: every field present from the first snapshot on
+        for k in [
+            "schema_version",
+            "uptime_s",
+            "queue_depth",
+            "requests_by_op.offload",
+            "requests_by_op.invalid",
+            "responses.busy",
+            "worker_panics",
+            "offloads.replay_ratio",
+            "patterns.records",
+            "search.evals_per_sec",
+            "cache.hit_rate",
+            "placements.many-core",
+            "offload_wall_ms.le_1",
+            "offload_wall_ms.sum_ms",
+        ] {
+            assert!(keys.iter().any(|x| x == k), "missing {k} in {keys:?}");
+        }
+        assert_eq!(
+            j.get("requests_total").and_then(|v| v.as_i64()),
+            Some(0),
+            "fresh registry is all zeros"
+        );
+        assert_eq!(
+            j.get("responses").and_then(|r| r.get("busy")).and_then(|v| v.as_i64()),
+            Some(0)
+        );
+    }
+
+    #[test]
+    fn response_classes_are_mutually_exclusive() {
+        let m = Metrics::new();
+        m.note_response(&Json::obj().set("ok", true));
+        m.note_response(&Json::obj().set("ok", false));
+        m.note_response(&Json::obj().set("ok", false).set("busy", true));
+        m.note_response(&Json::obj().set("ok", false).set("timed_out", true));
+        let j = m.snapshot(&Gauges::default());
+        let r = j.get("responses").unwrap();
+        assert_eq!(r.get("ok").and_then(|v| v.as_i64()), Some(1));
+        assert_eq!(r.get("error").and_then(|v| v.as_i64()), Some(1));
+        assert_eq!(r.get("busy").and_then(|v| v.as_i64()), Some(1));
+        assert_eq!(r.get("timeout").and_then(|v| v.as_i64()), Some(1));
+    }
+
+    #[test]
+    fn offload_recording_feeds_ratios_and_histogram() {
+        let m = Metrics::new();
+        // one searched offload: 50 ms, 10 measurements (4 from cache),
+        // mixed placement
+        m.record_offload_parts(
+            false,
+            true,
+            10,
+            4,
+            0.050,
+            &[None, Some(TargetKind::Gpu), Some(TargetKind::ManyCore)],
+        );
+        // one replay: sub-millisecond, zero measurements
+        m.record_offload_parts(true, false, 0, 0, 0.0005, &[Some(TargetKind::Gpu)]);
+        let j = m.snapshot(&Gauges::default());
+        let o = j.get("offloads").unwrap();
+        assert_eq!(o.get("total").and_then(|v| v.as_i64()), Some(2));
+        assert_eq!(o.get("searched").and_then(|v| v.as_i64()), Some(1));
+        assert_eq!(o.get("replayed").and_then(|v| v.as_i64()), Some(1));
+        assert!((o.get("replay_ratio").and_then(|v| v.as_f64()).unwrap() - 0.5).abs() < 1e-9);
+        let p = j.get("placements").unwrap();
+        assert_eq!(p.get("cpu").and_then(|v| v.as_i64()), Some(1));
+        assert_eq!(p.get("gpu").and_then(|v| v.as_i64()), Some(2));
+        assert_eq!(p.get("many-core").and_then(|v| v.as_i64()), Some(1));
+        assert_eq!(p.get("fpga").and_then(|v| v.as_i64()), Some(0));
+        let s = j.get("search").unwrap();
+        assert_eq!(s.get("measurements").and_then(|v| v.as_i64()), Some(10));
+        assert_eq!(s.get("cache_hits").and_then(|v| v.as_i64()), Some(4));
+        // 6 device evals over ~50.5 ms of wall
+        assert!(s.get("evals_per_sec").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        let h = j.get("offload_wall_ms").unwrap();
+        // cumulative: the 0.5 ms replay lands in every bucket, the 50 ms
+        // search only from le_100 up
+        assert_eq!(h.get("le_1").and_then(|v| v.as_i64()), Some(1));
+        assert_eq!(h.get("le_10").and_then(|v| v.as_i64()), Some(1));
+        assert_eq!(h.get("le_100").and_then(|v| v.as_i64()), Some(2));
+        assert_eq!(h.get("le_10000").and_then(|v| v.as_i64()), Some(2));
+        assert_eq!(h.get("count").and_then(|v| v.as_i64()), Some(2));
+    }
+}

@@ -24,7 +24,12 @@
 //! "error":"..."}` and never tear down the connection; an unknown `op`
 //! names the supported ones, and unknown request fields surface as a
 //! `warnings` array on the response instead of being dropped silently.
-//! The full wire reference is `docs/PROTOCOL.md`.
+//! Two failure shapes carry extra flags: a load-shed response is tagged
+//! `"busy":true` with a `retry_after_ms` backoff hint, and a
+//! per-request-timeout response is tagged `"timed_out":true`. The
+//! `metrics` op returns the full observability snapshot. On a pipelined
+//! connection responses are matched by `id` and may arrive out of
+//! order. The full wire reference is `docs/PROTOCOL.md`.
 
 use crate::api::{OffloadRequest, OffloadResponse};
 use crate::coordinator::OffloadReport;
@@ -37,7 +42,7 @@ use anyhow::{anyhow, bail, Result};
 pub use crate::api::OffloadResponse as Response;
 
 /// Every op this protocol version serves (named in unknown-op errors).
-pub const SUPPORTED_OPS: &[&str] = &["offload", "stats", "ping", "shutdown"];
+pub const SUPPORTED_OPS: &[&str] = &["offload", "stats", "metrics", "ping", "shutdown"];
 
 /// The operation one request line selects.
 #[derive(Debug, Clone)]
@@ -45,6 +50,9 @@ pub enum Op {
     /// convert + search (or replay) one program
     Offload(Box<OffloadRequest>),
     Stats,
+    /// full observability snapshot (counters/gauges/histograms; see
+    /// `docs/OPERATIONS.md` for the field reference)
+    Metrics,
     Ping,
     Shutdown,
 }
@@ -79,11 +87,12 @@ impl Request {
                 let (req, warnings) = OffloadRequest::from_wire(&j)?;
                 Ok(Request { id, op: Op::Offload(Box::new(req)), warnings })
             }
-            "stats" | "ping" | "shutdown" => {
+            "stats" | "metrics" | "ping" | "shutdown" => {
                 let warnings =
                     crate::api::unknown_field_warnings(&j, &["op", "id", "schema_version"]);
                 let op = match op {
                     "stats" => Op::Stats,
+                    "metrics" => Op::Metrics,
                     "ping" => Op::Ping,
                     _ => Op::Shutdown,
                 };
@@ -111,6 +120,7 @@ impl Request {
                 Json::Obj(fields).to_string()
             }
             Op::Stats => simple_line("stats", self.id),
+            Op::Metrics => simple_line("metrics", self.id),
             Op::Ping => simple_line("ping", self.id),
             Op::Shutdown => simple_line("shutdown", self.id),
         }
@@ -170,9 +180,24 @@ pub fn ok_stats(id: i64, stats: Json, warnings: &[String]) -> Json {
     OffloadResponse::encode_stats(id, stats, warnings)
 }
 
+/// Successful `metrics` response.
+pub fn ok_metrics(id: i64, metrics: Json, warnings: &[String]) -> Json {
+    OffloadResponse::encode_metrics(id, metrics, warnings)
+}
+
 /// Failure response.
 pub fn err(id: i64, msg: &str) -> Json {
     OffloadResponse::encode_error(id, msg)
+}
+
+/// Load-shed response (`"busy":true` + backoff hint).
+pub fn busy(id: i64, retry_after_ms: u64) -> Json {
+    OffloadResponse::encode_busy(id, retry_after_ms)
+}
+
+/// Per-request-timeout response (`"timed_out":true`).
+pub fn timeout(id: i64, timeout_ms: u64) -> Json {
+    OffloadResponse::encode_timeout(id, timeout_ms)
 }
 
 #[cfg(test)]
@@ -235,6 +260,7 @@ mod tests {
         }
         for (line, id) in [
             (r#"{"op":"stats","id":2}"#, 2),
+            (r#"{"op":"metrics","id":5}"#, 5),
             (r#"{"op":"ping","id":3}"#, 3),
             (r#"{"op":"shutdown","id":4}"#, 4),
         ] {
@@ -293,7 +319,7 @@ mod tests {
         assert!(Request::parse_line(r#"{"id":1}"#).is_err(), "missing op");
         let err = Request::parse_line(r#"{"op":"dance","id":1}"#).unwrap_err().to_string();
         assert!(
-            err.contains("supported: offload, stats, ping, shutdown"),
+            err.contains("supported: offload, stats, metrics, ping, shutdown"),
             "unknown-op error must list the supported ops: {err}"
         );
         assert!(Request::parse_line(r#"{"op":"offload","id":1,"lang":"cobol","code":""}"#)
@@ -319,7 +345,25 @@ mod tests {
         let r = Response::parse_line(&j.to_string()).unwrap();
         assert_eq!(r.id, 9);
         assert!(!r.ok);
+        assert!(!r.busy && !r.timed_out, "plain errors carry no outcome flags");
         assert_eq!(r.error.as_deref(), Some("boom"));
         assert_eq!(r.schema_version, crate::api::SCHEMA_VERSION);
+    }
+
+    #[test]
+    fn busy_and_timeout_responses_round_trip() {
+        let r = Response::parse_line(&busy(3, 150).to_string()).unwrap();
+        assert_eq!(r.id, 3);
+        assert!(!r.ok && r.busy && !r.timed_out);
+        assert_eq!(r.retry_after_ms, Some(150));
+        assert_eq!(r.schema_version, crate::api::SCHEMA_VERSION);
+        assert!(r.error.unwrap().contains("busy"));
+
+        let r = Response::parse_line(&timeout(4, 2500).to_string()).unwrap();
+        assert_eq!(r.id, 4);
+        assert!(!r.ok && r.timed_out && !r.busy);
+        assert!(r.retry_after_ms.is_none());
+        assert_eq!(r.schema_version, crate::api::SCHEMA_VERSION);
+        assert!(r.error.unwrap().contains("timed out after 2500 ms"));
     }
 }

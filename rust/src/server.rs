@@ -4,23 +4,39 @@
 //! and every verified pattern is remembered so the next matching request
 //! skips the search entirely.
 //!
-//! Architecture (see `DESIGN.md` §6/§9):
+//! Architecture (see `DESIGN.md` §11 and `docs/OPERATIONS.md`):
 //!
-//! * **Transport** — line-delimited JSON ([`crate::proto`], wire v2 with
-//!   v1 compat) over TCP (`serve_tcp`, one thread per connection) or
-//!   stdin/stdout (`serve_stdio`). Connections only frame and route;
-//!   they never touch a device.
+//! * **Event loop** — one thread owns the listener and every client
+//!   connection, all non-blocking (`run_event_loop`): it accepts, frames
+//!   request lines, answers cheap ops (`ping`/`stats`/`metrics`) inline,
+//!   admits offloads into a bounded queue, routes worker completions
+//!   back to the right connection by token, enforces per-request
+//!   timeouts, and drives graceful drain. No thread-per-connection:
+//!   thousands of idle connections cost one poller thread.
+//! * **Bounded admission queue** — offloads queue up to
+//!   `ServeOptions::queue` deep; beyond that the service *sheds load*
+//!   with a versioned `busy` response carrying a `retry_after_ms` hint
+//!   instead of buffering unboundedly (`docs/PROTOCOL.md`).
 //! * **Worker pool** — [`Service::start`] spawns `pool` OS threads, each
 //!   owning an [`OffloadSession`] (devices are not `Send`, so sessions
-//!   are built inside their worker thread; each lazily keeps one
-//!   coordinator per request variant). Workers pull `Job`s from one
-//!   shared queue; replies go back over per-request channels, so slow
-//!   searches never block other connections. The per-session
-//!   measurement-worker budget is `cfg.workers / pool`; the CLI rejects
-//!   an explicitly oversubscribed `--pool × --workers` split up front
-//!   via [`crate::api::validate_worker_split`] (embedders passing their
-//!   own `ServeOptions` should call it too), and an auto-sized pool
+//!   are built inside their worker thread). A panicking request is
+//!   caught ([`std::panic::catch_unwind`]), counted in metrics and
+//!   answered with a versioned error; the worker rebuilds its session
+//!   and keeps serving. The per-session measurement-worker budget is
+//!   `cfg.workers / pool`; the CLI rejects an explicitly oversubscribed
+//!   `--pool × --workers` split up front via
+//!   [`crate::api::validate_worker_split`] (embedders passing their own
+//!   `ServeOptions` should call it too), and an auto-sized pool
 //!   (`pool: 0`) is clamped to the budget so it never starves a session.
+//! * **Graceful drain** — on the `shutdown` op (or SIGTERM/SIGINT under
+//!   `envadapt serve`): stop accepting, refuse new offloads with
+//!   `"service is shutting down"`, finish every admitted request, flush
+//!   replies, then flush the pattern DB and measurement cache and join
+//!   the pool. No accepted request is dropped.
+//! * **Observability** — one shared [`crate::metrics::Metrics`] registry
+//!   across the pool (threaded through every session), exposed by the
+//!   `metrics` op and summarized by `stats`; the field reference lives
+//!   in `docs/OPERATIONS.md`.
 //! * **Shared learning state** — all worker sessions share one
 //!   measurement cache ([`crate::engine::SharedCache`]) and one pattern
 //!   DB ([`SharedPatternDb`]): a pattern learned by any worker is
@@ -30,17 +46,28 @@
 use crate::api::{OffloadRequest, OffloadSession};
 use crate::config::Config;
 use crate::engine::{self, SharedCache};
+use crate::metrics::{Gauges, Metrics, OpKind, SharedMetrics};
 use crate::patterndb::{self, PatternDb, SharedPatternDb};
 use crate::proto::{self, Op, Request};
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{Receiver, Sender};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Longest accepted request line (a line past this answers an error and
+/// closes the connection — a framing bug, not a request).
+const MAX_LINE: usize = 16 * 1024 * 1024;
+
+/// Idle tick of the event loop: how long it sleeps when no socket made
+/// progress (bounds added latency at idle; under load it never sleeps).
+const IDLE_TICK: Duration = Duration::from_millis(1);
 
 /// Service-level options (everything else comes from [`Config`]).
 #[derive(Debug, Clone, Default)]
@@ -52,41 +79,132 @@ pub struct ServeOptions {
     /// pattern-DB persistence file: learned patterns are loaded at start
     /// and saved after every insert, so the service resumes warm
     pub db_path: Option<PathBuf>,
+    /// admission-queue capacity (queued offloads beyond the ones
+    /// executing); 0 = `max(16, 4 × pool)`. When the queue is full the
+    /// service sheds load with a `busy` response instead of buffering.
+    pub queue: usize,
+    /// per-request timeout in milliseconds (admission → response);
+    /// 0 = no timeout. Expired requests get a `timed_out` error and any
+    /// still-queued work is cancelled.
+    pub request_timeout_ms: u64,
+    /// backoff hint attached to `busy` responses; 0 = 100 ms
+    pub retry_after_ms: u64,
 }
 
-/// Cumulative request counters (one instance per service, shared).
-#[derive(Debug, Default)]
-pub struct ServiceStats {
-    pub requests: u64,
-    pub offloads: u64,
-    pub errors: u64,
-    /// offloads answered from the learned pattern DB (zero-search replay)
-    pub reuse_hits: u64,
-    /// offloads that inserted a new learned pattern
-    pub learned: u64,
-    /// search measurements spent across all offloads
-    pub measurements: u64,
+impl ServeOptions {
+    fn queue_capacity(&self, pool: usize) -> usize {
+        if self.queue == 0 {
+            (4 * pool).max(16)
+        } else {
+            self.queue
+        }
+    }
+
+    fn retry_hint_ms(&self) -> u64 {
+        if self.retry_after_ms == 0 {
+            100
+        } else {
+            self.retry_after_ms
+        }
+    }
+}
+
+/// Where a finished job's response goes.
+enum ReplySink {
+    /// synchronous dispatch ([`Service::dispatch`], stdio transport)
+    Channel(Sender<Json>),
+    /// the event loop's completion channel, keyed by admission token
+    Loop { tx: Sender<Completion>, token: u64 },
+}
+
+struct Completion {
+    token: u64,
+    resp: Json,
 }
 
 struct Job {
     id: i64,
     req: OffloadRequest,
     warnings: Vec<String>,
-    reply: Sender<Json>,
+    /// set by whoever answered for the job already (timeout, dead
+    /// connection): workers skip cancelled jobs instead of searching
+    cancelled: Arc<AtomicBool>,
+    reply: ReplySink,
 }
 
-/// The shared service core: worker pool + job queue + learning state.
-/// (`Sender` sits behind a `Mutex` so `Service` is `Sync` on every
-/// supported toolchain; the lock covers only the enqueue, never the
-/// search itself.)
-pub struct Service {
-    jobs: Mutex<Sender<Job>>,
-    workers: Vec<JoinHandle<()>>,
+struct QueueState {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+/// What admission decided for one offload request.
+enum Admission {
+    Queued,
+    Busy { retry_after_ms: u64 },
+    ShuttingDown,
+}
+
+/// Shared core state: the bounded queue, the learning state, the metrics
+/// registry and the serve limits. Workers and the event loop both hold
+/// an `Arc` of this.
+struct Inner {
+    queue: Mutex<QueueState>,
+    ready: Condvar,
+    metrics: SharedMetrics,
     db: SharedPatternDb,
     cache: SharedCache,
-    stats: Arc<Mutex<ServiceStats>>,
     pool: usize,
-    started: std::time::Instant,
+    queue_capacity: usize,
+    retry_after_ms: u64,
+    request_timeout_ms: u64,
+    db_path: Option<PathBuf>,
+    /// open client connections (event-loop gauge)
+    connections: AtomicU64,
+    /// drain in progress: stop admitting offloads
+    draining: AtomicBool,
+}
+
+impl Inner {
+    fn admit(&self, job: Job) -> Admission {
+        if self.draining.load(Ordering::SeqCst) {
+            return Admission::ShuttingDown;
+        }
+        let mut q = self.queue.lock().unwrap();
+        if q.closed {
+            return Admission::ShuttingDown;
+        }
+        if q.jobs.len() >= self.queue_capacity {
+            return Admission::Busy { retry_after_ms: self.retry_after_ms };
+        }
+        q.jobs.push_back(job);
+        drop(q);
+        self.ready.notify_one();
+        Admission::Queued
+    }
+
+    fn gauges(&self) -> Gauges {
+        let (cache_entries, cache_hits, cache_misses) = {
+            let c = self.cache.lock().unwrap();
+            (c.len(), c.hit_count(), c.miss_count())
+        };
+        Gauges {
+            pool: self.pool,
+            queue_depth: self.queue.lock().unwrap().jobs.len(),
+            queue_capacity: self.queue_capacity,
+            connections_open: self.connections.load(Ordering::Relaxed) as usize,
+            learned_records: self.db.lock().unwrap().learned_len(),
+            cache_entries,
+            cache_hits,
+            cache_misses,
+        }
+    }
+}
+
+/// The shared service core: event-loop-ready admission queue + worker
+/// pool + learning state + metrics.
+pub struct Service {
+    inner: Arc<Inner>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl Service {
@@ -119,239 +237,643 @@ impl Service {
         wcfg.workers = (budget / pool).max(1);
         let db = patterndb::shared(PatternDb::open_or_builtin(opts.db_path.as_deref()));
         let cache = engine::cache_for(&cfg);
-        let stats = Arc::new(Mutex::new(ServiceStats::default()));
-        let (jobs, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let mut workers = Vec::with_capacity(pool);
-        for wid in 0..pool {
-            let rx = rx.clone();
-            let wcfg = wcfg.clone();
-            let db = db.clone();
-            let cache = cache.clone();
-            let stats = stats.clone();
-            workers.push(std::thread::spawn(move || {
-                worker_loop(wid, wcfg, db, cache, rx, stats)
-            }));
-        }
-        Service {
-            jobs: Mutex::new(jobs),
-            workers,
+        let inner = Arc::new(Inner {
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+            metrics: Metrics::shared(),
             db,
             cache,
-            stats,
             pool,
-            started: std::time::Instant::now(),
+            queue_capacity: opts.queue_capacity(pool),
+            retry_after_ms: opts.retry_hint_ms(),
+            request_timeout_ms: opts.request_timeout_ms,
+            db_path: opts.db_path.clone(),
+            connections: AtomicU64::new(0),
+            draining: AtomicBool::new(false),
+        });
+        let mut workers = Vec::with_capacity(pool);
+        for wid in 0..pool {
+            let wcfg = wcfg.clone();
+            let inner = inner.clone();
+            workers.push(std::thread::spawn(move || worker_loop(wid, wcfg, inner)));
         }
+        Service { inner, workers }
     }
 
     /// Handle one request line; returns the response and whether the
-    /// caller should shut the whole service down.
+    /// caller should shut the whole service down. Synchronous: offloads
+    /// block until served, shed (`busy`) or timed out — this is the
+    /// stdio transport and the embedding entry; the TCP event loop
+    /// multiplexes through the queue directly instead.
     pub fn dispatch_line(&self, line: &str) -> (Json, bool) {
         match Request::parse_line(line) {
             Ok(req) => self.dispatch(req),
             Err(e) => {
-                let mut s = self.stats.lock().unwrap();
-                s.requests += 1;
-                s.errors += 1;
+                self.inner.metrics.note_op(OpKind::Invalid);
                 // echo the id when the line was at least JSON, so
                 // pipelining clients can still match the error
-                (proto::err(proto::line_id(line), &e.to_string()), false)
+                let resp = proto::err(proto::line_id(line), &e.to_string());
+                self.inner.metrics.note_response(&resp);
+                (resp, false)
             }
         }
     }
 
-    /// Handle one parsed request.
+    /// Handle one parsed request (synchronous; see
+    /// [`Service::dispatch_line`]).
     pub fn dispatch(&self, req: Request) -> (Json, bool) {
-        self.stats.lock().unwrap().requests += 1;
         let Request { id, op, warnings } = req;
-        match op {
-            Op::Offload(r) => {
-                let (tx, rx) = mpsc::channel();
-                let enqueued =
-                    self.jobs.lock().unwrap().send(Job { id, req: *r, warnings, reply: tx });
-                if enqueued.is_err() {
-                    self.stats.lock().unwrap().errors += 1;
-                    return (proto::err(id, "service is shutting down"), false);
-                }
-                match rx.recv() {
-                    Ok(resp) => (resp, false),
-                    Err(_) => {
-                        self.stats.lock().unwrap().errors += 1;
-                        (proto::err(id, "worker died before replying"), false)
+        self.inner.metrics.note_op(op_kind(&op));
+        let (resp, quit) = match op {
+            Op::Offload(r) => (self.offload_blocking(id, *r, warnings), false),
+            Op::Stats => (proto::ok_stats(id, self.stats_json(), &warnings), false),
+            Op::Metrics => (proto::ok_metrics(id, self.metrics_json(), &warnings), false),
+            Op::Ping => (proto::ok_simple(id, "ping", &warnings), false),
+            Op::Shutdown => {
+                self.inner.draining.store(true, Ordering::SeqCst);
+                (proto::ok_simple(id, "shutdown", &warnings), true)
+            }
+        };
+        self.inner.metrics.note_response(&resp);
+        (resp, quit)
+    }
+
+    fn offload_blocking(&self, id: i64, req: OffloadRequest, warnings: Vec<String>) -> Json {
+        let (tx, rx) = mpsc::channel();
+        let cancelled = Arc::new(AtomicBool::new(false));
+        let job =
+            Job { id, req, warnings, cancelled: cancelled.clone(), reply: ReplySink::Channel(tx) };
+        match self.inner.admit(job) {
+            Admission::Busy { retry_after_ms } => proto::busy(id, retry_after_ms),
+            Admission::ShuttingDown => proto::err(id, "service is shutting down"),
+            Admission::Queued => {
+                let timeout_ms = self.inner.request_timeout_ms;
+                if timeout_ms == 0 {
+                    rx.recv().unwrap_or_else(|_| proto::err(id, "worker died before replying"))
+                } else {
+                    match rx.recv_timeout(Duration::from_millis(timeout_ms)) {
+                        Ok(resp) => resp,
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            cancelled.store(true, Ordering::SeqCst);
+                            proto::timeout(id, timeout_ms)
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            proto::err(id, "worker died before replying")
+                        }
                     }
                 }
             }
-            Op::Stats => (proto::ok_stats(id, self.stats_json(), &warnings), false),
-            Op::Ping => (proto::ok_simple(id, "ping", &warnings), false),
-            Op::Shutdown => (proto::ok_simple(id, "shutdown", &warnings), true),
         }
     }
 
-    /// The `stats` op payload: request counters plus the shared learning
-    /// state (pattern DB size, measurement-cache traffic).
+    /// The `stats` op payload: the legacy summary counters plus the
+    /// admission-control counters (the `metrics` op carries the full
+    /// structured surface).
     pub fn stats_json(&self) -> Json {
-        let (requests, offloads, errors, reuse_hits, learned, measurements) = {
-            let s = self.stats.lock().unwrap();
-            (s.requests, s.offloads, s.errors, s.reuse_hits, s.learned, s.measurements)
-        };
-        let (cache_entries, cache_hits, cache_misses) = {
-            let c = self.cache.lock().unwrap();
-            (c.len(), c.hit_count(), c.miss_count())
-        };
-        let learned_records = self.db.lock().unwrap().learned_len();
+        let m = &self.inner.metrics;
+        let g = self.inner.gauges();
         Json::obj()
-            .set("workers", self.pool)
-            .set("uptime_s", self.started.elapsed().as_secs_f64())
-            .set("requests", requests as i64)
-            .set("offloads", offloads as i64)
-            .set("errors", errors as i64)
-            .set("pattern_reuse_hits", reuse_hits as i64)
-            .set("patterns_learned", learned as i64)
-            .set("learned_records", learned_records)
-            .set("search_measurements", measurements as i64)
-            .set("cache_entries", cache_entries)
-            .set("cache_hits", cache_hits as i64)
-            .set("cache_misses", cache_misses as i64)
+            .set("workers", self.inner.pool)
+            .set("uptime_s", m.uptime_s())
+            .set("requests", m.requests_total() as i64)
+            .set("offloads", m.offloads_total() as i64)
+            .set("errors", m.responses_error() as i64)
+            .set("pattern_reuse_hits", m.offloads_replayed() as i64)
+            .set("patterns_learned", m.patterns_learned() as i64)
+            .set("learned_records", g.learned_records)
+            .set("search_measurements", m.search_measurements() as i64)
+            .set("cache_entries", g.cache_entries)
+            .set("cache_hits", g.cache_hits as i64)
+            .set("cache_misses", g.cache_misses as i64)
+            .set("queue_depth", g.queue_depth)
+            .set("queue_capacity", g.queue_capacity)
+            .set("busy_rejections", m.responses_busy() as i64)
+            .set("timeouts", m.responses_timeout() as i64)
+            .set("worker_panics", m.worker_panics() as i64)
+    }
+
+    /// The `metrics` op payload (full fixed-schema snapshot; field
+    /// reference in `docs/OPERATIONS.md`).
+    pub fn metrics_json(&self) -> Json {
+        self.inner.metrics.snapshot(&self.inner.gauges())
+    }
+
+    /// Handle on the shared metrics registry (tests, embedding).
+    pub fn metrics(&self) -> SharedMetrics {
+        self.inner.metrics.clone()
     }
 
     /// Handle on the shared pattern DB (tests, introspection).
     pub fn db(&self) -> SharedPatternDb {
-        self.db.clone()
+        self.inner.db.clone()
     }
 
-    /// Close the job queue and join the worker pool.
+    /// Close the job queue, join the worker pool and flush learned state
+    /// (pattern DB + measurement cache) to disk.
     pub fn shutdown(self) {
-        drop(self.jobs);
+        {
+            let mut q = self.inner.queue.lock().unwrap();
+            q.closed = true;
+        }
+        self.inner.ready.notify_all();
         for w in self.workers {
             let _ = w.join();
         }
+        // drain contract: learned state is durable once shutdown returns
+        // (inserts already save incrementally; this covers the tail)
+        if let Some(path) = &self.inner.db_path {
+            let _ = self.inner.db.lock().unwrap().save(path);
+        }
+        let _ = self.inner.cache.lock().unwrap().save();
     }
 }
 
-fn worker_loop(
-    wid: usize,
-    cfg: Config,
-    db: SharedPatternDb,
-    cache: SharedCache,
-    rx: Arc<Mutex<Receiver<Job>>>,
-    stats: Arc<Mutex<ServiceStats>>,
-) {
+fn op_kind(op: &Op) -> OpKind {
+    match op {
+        Op::Offload(_) => OpKind::Offload,
+        Op::Stats => OpKind::Stats,
+        Op::Metrics => OpKind::Metrics,
+        Op::Ping => OpKind::Ping,
+        Op::Shutdown => OpKind::Shutdown,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// worker pool
+// ---------------------------------------------------------------------------
+
+fn worker_loop(wid: usize, cfg: Config, inner: Arc<Inner>) {
     // Each worker owns one OffloadSession, built inside this thread
     // (devices are not Send) and living for the whole service, so PJRT
     // executable caches stay warm across requests. The session keeps one
-    // coordinator per request variant; all sessions share the cache and
-    // pattern DB handed in here.
-    let mut session = OffloadSession::with_shared(cfg, cache, db);
+    // coordinator per request variant; all sessions share the cache,
+    // pattern DB and metrics registry. After a caught panic the session
+    // is dropped and rebuilt (None), so a request that corrupted session
+    // state cannot poison the ones after it.
+    let mut session: Option<OffloadSession> = None;
     loop {
-        let job = match rx.lock().unwrap().recv() {
-            Ok(j) => j,
-            Err(_) => break, // queue closed: service is shutting down
+        let job = {
+            let mut q = inner.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.jobs.pop_front() {
+                    break j;
+                }
+                if q.closed {
+                    return;
+                }
+                q = inner.ready.wait(q).unwrap();
+            }
         };
-        let resp = handle_offload(wid, &mut session, &job, &stats);
-        // a dropped reply receiver just means the client went away
-        let _ = job.reply.send(resp);
+        if job.cancelled.load(Ordering::SeqCst) {
+            // answered already (timeout / dead connection): don't search
+            continue;
+        }
+        let resp = handle_offload(wid, &cfg, &mut session, &job, &inner);
+        send_reply(&job.reply, resp);
     }
 }
 
-fn handle_offload(
-    wid: usize,
-    session: &mut OffloadSession,
-    job: &Job,
-    stats: &Arc<Mutex<ServiceStats>>,
-) -> Json {
-    match session.offload(&job.req) {
-        Ok(report) => {
-            {
-                let mut s = stats.lock().unwrap();
-                s.offloads += 1;
-                s.measurements += report.total_measurements as u64;
-                if report.reused_pattern.is_some() {
-                    s.reuse_hits += 1;
-                }
-                if report.learned_pattern {
-                    s.learned += 1;
-                }
-            }
-            proto::ok_offload(job.id, &report, wid, &job.warnings)
+fn send_reply(sink: &ReplySink, resp: Json) {
+    // a dropped receiver just means the client (or canceller) went away
+    match sink {
+        ReplySink::Channel(tx) => {
+            let _ = tx.send(resp);
         }
-        Err(e) => {
-            stats.lock().unwrap().errors += 1;
-            proto::err(job.id, &e.to_string())
+        ReplySink::Loop { tx, token } => {
+            let _ = tx.send(Completion { token: *token, resp });
         }
     }
+}
+
+/// Serve one offload, containing panics: a panicking request is counted
+/// and answered with a versioned error, the worker's session is dropped
+/// (rebuilt lazily for the next job), and the connection and the pool
+/// both survive.
+fn handle_offload(
+    wid: usize,
+    cfg: &Config,
+    session_slot: &mut Option<OffloadSession>,
+    job: &Job,
+    inner: &Inner,
+) -> Json {
+    let session = session_slot.get_or_insert_with(|| {
+        let mut s = OffloadSession::with_shared(cfg.clone(), inner.cache.clone(), inner.db.clone());
+        s.set_metrics(inner.metrics.clone());
+        s
+    });
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        test_failpoint(&job.req.name);
+        session.offload(&job.req)
+    }));
+    match outcome {
+        Ok(Ok(report)) => proto::ok_offload(job.id, &report, wid, &job.warnings),
+        Ok(Err(e)) => proto::err(job.id, &e.to_string()),
+        Err(payload) => {
+            // the request may have left the session in an arbitrary
+            // state mid-search: drop it so the next job starts clean
+            *session_slot = None;
+            inner.metrics.record_worker_panic();
+            proto::err(
+                job.id,
+                &format!(
+                    "internal error: offload worker panicked: {}",
+                    panic_message(payload.as_ref())
+                ),
+            )
+        }
+    }
+}
+
+/// Debug-build fault injection for the serve test suite (magic request
+/// names; compiled out of release builds).
+fn test_failpoint(name: &str) {
+    if !cfg!(debug_assertions) {
+        return;
+    }
+    if name == "__envadapt_test_panic" {
+        panic!("injected test panic");
+    }
+    if name == "__envadapt_test_slow" {
+        std::thread::sleep(Duration::from_millis(400));
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic payload".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// event loop (TCP transport)
+// ---------------------------------------------------------------------------
+
+/// One multiplexed client connection owned by the event loop.
+struct EvConn {
+    stream: TcpStream,
+    /// unparsed request bytes (partial trailing line)
+    rbuf: Vec<u8>,
+    /// unwritten response bytes
+    wbuf: Vec<u8>,
+    /// client closed its write side: no more requests, but queued
+    /// responses still get delivered (half-close friendly)
+    eof: bool,
+    /// connection is unusable (I/O error, protocol abuse): reap now
+    dead: bool,
+    /// admitted offloads not yet answered on this connection
+    inflight: usize,
+}
+
+/// An admitted offload the event loop is waiting on, keyed by token.
+struct EvPending {
+    conn: u64,
+    id: i64,
+    deadline: Option<Instant>,
+    cancelled: Arc<AtomicBool>,
+}
+
+/// Event-loop bookkeeping shared by the per-line handler.
+struct LoopState {
+    pending: HashMap<u64, EvPending>,
+    next_token: u64,
+    completions: Sender<Completion>,
+}
+
+fn push_resp(metrics: &SharedMetrics, conn: &mut EvConn, resp: &Json) {
+    metrics.note_response(resp);
+    conn.wbuf.extend_from_slice(resp.to_string().as_bytes());
+    conn.wbuf.push(b'\n');
+}
+
+/// Handle one framed request line from connection `cid`. Cheap ops are
+/// answered inline into the connection's write buffer; offloads are
+/// admitted (or shed) into the bounded queue with the completion routed
+/// back by token. `shutdown` flips the service into drain.
+fn handle_line(service: &Service, cid: u64, conn: &mut EvConn, line: &str, st: &mut LoopState) {
+    let inner = &service.inner;
+    let m = &inner.metrics;
+    let req = match Request::parse_line(line) {
+        Ok(req) => req,
+        Err(e) => {
+            m.note_op(OpKind::Invalid);
+            push_resp(m, conn, &proto::err(proto::line_id(line), &e.to_string()));
+            return;
+        }
+    };
+    let Request { id, op, warnings } = req;
+    m.note_op(op_kind(&op));
+    match op {
+        Op::Ping => push_resp(m, conn, &proto::ok_simple(id, "ping", &warnings)),
+        Op::Stats => push_resp(m, conn, &proto::ok_stats(id, service.stats_json(), &warnings)),
+        Op::Metrics => {
+            push_resp(m, conn, &proto::ok_metrics(id, service.metrics_json(), &warnings))
+        }
+        Op::Shutdown => {
+            // begin graceful drain; the ack is flushed before the loop
+            // exits, and admitted offloads still complete
+            inner.draining.store(true, Ordering::SeqCst);
+            push_resp(m, conn, &proto::ok_simple(id, "shutdown", &warnings));
+        }
+        Op::Offload(r) => {
+            let token = st.next_token;
+            st.next_token += 1;
+            let cancelled = Arc::new(AtomicBool::new(false));
+            let deadline = (inner.request_timeout_ms > 0)
+                .then(|| Instant::now() + Duration::from_millis(inner.request_timeout_ms));
+            let job = Job {
+                id,
+                req: *r,
+                warnings,
+                cancelled: cancelled.clone(),
+                reply: ReplySink::Loop { tx: st.completions.clone(), token },
+            };
+            match inner.admit(job) {
+                Admission::Queued => {
+                    st.pending.insert(token, EvPending { conn: cid, id, deadline, cancelled });
+                    conn.inflight += 1;
+                }
+                Admission::Busy { retry_after_ms } => {
+                    push_resp(m, conn, &proto::busy(id, retry_after_ms));
+                }
+                Admission::ShuttingDown => {
+                    push_resp(m, conn, &proto::err(id, "service is shutting down"));
+                }
+            }
+        }
+    }
+}
+
+/// The multiplexing event loop over an already-bound listener: owns
+/// every connection, frames lines, admits offloads, routes completions,
+/// enforces timeouts, and runs graceful drain to completion. Returns
+/// once drain has finished (`shutdown` op or a termination signal).
+fn run_event_loop(listener: TcpListener, service: &Service) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    let inner = &service.inner;
+    let (ctx, crx) = mpsc::channel::<Completion>();
+    let mut st = LoopState { pending: HashMap::new(), next_token: 0, completions: ctx };
+    let mut conns: HashMap<u64, EvConn> = HashMap::new();
+    let mut next_conn: u64 = 0;
+    let mut listener = Some(listener);
+
+    loop {
+        let mut progress = false;
+
+        // 0. external drain signals (SIGTERM/SIGINT under `envadapt serve`)
+        if sig::requested() {
+            inner.draining.store(true, Ordering::SeqCst);
+        }
+        let draining = inner.draining.load(Ordering::SeqCst);
+        if draining && listener.is_some() {
+            listener = None; // stop accepting
+        }
+
+        // 1. accept every waiting connection
+        if let Some(l) = &listener {
+            loop {
+                match l.accept() {
+                    Ok((stream, _)) => {
+                        let _ = stream.set_nonblocking(true);
+                        let _ = stream.set_nodelay(true);
+                        conns.insert(
+                            next_conn,
+                            EvConn {
+                                stream,
+                                rbuf: Vec::new(),
+                                wbuf: Vec::new(),
+                                eof: false,
+                                dead: false,
+                                inflight: 0,
+                            },
+                        );
+                        next_conn += 1;
+                        progress = true;
+                    }
+                    // WouldBlock (nothing waiting) and transient accept
+                    // errors both end this tick's accept burst
+                    Err(_) => break,
+                }
+            }
+        }
+
+        // 2. read and handle complete request lines
+        let mut buf = [0u8; 8192];
+        for (&cid, conn) in conns.iter_mut() {
+            if conn.eof || conn.dead {
+                continue;
+            }
+            loop {
+                match conn.stream.read(&mut buf) {
+                    Ok(0) => {
+                        conn.eof = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.rbuf.extend_from_slice(&buf[..n]);
+                        progress = true;
+                        if conn.rbuf.len() > MAX_LINE {
+                            let resp = proto::err(0, "request line too long");
+                            push_resp(&inner.metrics, conn, &resp);
+                            conn.dead = true;
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        conn.dead = true;
+                        break;
+                    }
+                }
+            }
+            if conn.dead {
+                continue;
+            }
+            let mut lines: Vec<String> = Vec::new();
+            while let Some(pos) = conn.rbuf.iter().position(|&b| b == b'\n') {
+                let mut raw: Vec<u8> = conn.rbuf.drain(..=pos).collect();
+                raw.pop();
+                lines.push(String::from_utf8_lossy(&raw).into_owned());
+            }
+            for line in lines {
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                progress = true;
+                handle_line(service, cid, conn, line, &mut st);
+            }
+        }
+
+        // 3. route worker completions back to their connections
+        while let Ok(c) = crx.try_recv() {
+            progress = true;
+            if let Some(p) = st.pending.remove(&c.token) {
+                if let Some(conn) = conns.get_mut(&p.conn) {
+                    push_resp(&inner.metrics, conn, &c.resp);
+                    conn.inflight = conn.inflight.saturating_sub(1);
+                }
+            }
+            // unknown token: the request was already answered (timeout)
+            // or its connection died — the late result is discarded
+        }
+
+        // 4. expire admitted requests past their deadline
+        if inner.request_timeout_ms > 0 {
+            let now = Instant::now();
+            let expired: Vec<u64> = st
+                .pending
+                .iter()
+                .filter(|(_, p)| p.deadline.is_some_and(|d| d <= now))
+                .map(|(&t, _)| t)
+                .collect();
+            for token in expired {
+                progress = true;
+                let p = st.pending.remove(&token).expect("token just listed");
+                p.cancelled.store(true, Ordering::SeqCst);
+                if let Some(conn) = conns.get_mut(&p.conn) {
+                    push_resp(
+                        &inner.metrics,
+                        conn,
+                        &proto::timeout(p.id, inner.request_timeout_ms),
+                    );
+                    conn.inflight = conn.inflight.saturating_sub(1);
+                }
+            }
+        }
+
+        // 5. flush write buffers
+        for conn in conns.values_mut() {
+            if conn.dead {
+                continue;
+            }
+            while !conn.wbuf.is_empty() {
+                match conn.stream.write(&conn.wbuf) {
+                    Ok(0) => {
+                        conn.dead = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.wbuf.drain(..n);
+                        progress = true;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        conn.dead = true;
+                        break;
+                    }
+                }
+            }
+        }
+
+        // 6. reap: dead connections cancel their in-flight work; cleanly
+        //    closed ones linger until every queued response is delivered
+        let reap: Vec<u64> = conns
+            .iter()
+            .filter(|(_, c)| c.dead || (c.eof && c.inflight == 0 && c.wbuf.is_empty()))
+            .map(|(&cid, _)| cid)
+            .collect();
+        for cid in reap {
+            let c = conns.remove(&cid).expect("conn just listed");
+            if c.dead {
+                st.pending.retain(|_, p| {
+                    if p.conn == cid {
+                        p.cancelled.store(true, Ordering::SeqCst);
+                        false
+                    } else {
+                        true
+                    }
+                });
+            }
+        }
+        inner.connections.store(conns.len() as u64, Ordering::Relaxed);
+
+        // 7. drain completion: every admitted request answered — deliver
+        //    the remaining bytes with a short blocking grace period
+        if draining && st.pending.is_empty() {
+            for conn in conns.values_mut() {
+                if conn.dead || conn.wbuf.is_empty() {
+                    continue;
+                }
+                let _ = conn.stream.set_nonblocking(false);
+                let _ = conn.stream.set_write_timeout(Some(Duration::from_secs(2)));
+                let _ = conn.stream.write_all(&conn.wbuf);
+                let _ = conn.stream.flush();
+            }
+            return Ok(());
+        }
+
+        if !progress {
+            std::thread::sleep(IDLE_TICK);
+        }
+    }
+}
+
+/// SIGTERM/SIGINT → graceful drain, installed only by the foreground
+/// daemon entry points (`envadapt serve`); background/test servers drain
+/// via the `shutdown` op instead. A handler that only sets a flag is
+/// async-signal-safe; the event loop polls the flag every tick.
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static REQUESTED: AtomicBool = AtomicBool::new(false);
+
+    pub fn requested() -> bool {
+        REQUESTED.load(Ordering::SeqCst)
+    }
+
+    #[cfg(unix)]
+    pub fn install() {
+        extern "C" fn on_signal(_sig: i32) {
+            REQUESTED.store(true, Ordering::SeqCst);
+        }
+        // no libc crate offline: declare the two symbols we need (std
+        // already links the platform libc)
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGTERM, on_signal);
+            signal(SIGINT, on_signal);
+        }
+    }
+
+    #[cfg(not(unix))]
+    pub fn install() {}
 }
 
 // ---------------------------------------------------------------------------
 // transports
 // ---------------------------------------------------------------------------
 
-/// Serve one client connection; returns whether the client requested
-/// service shutdown.
-fn handle_conn(stream: TcpStream, service: &Service) -> bool {
-    let Ok(read_half) = stream.try_clone() else { return false };
-    let reader = BufReader::new(read_half);
-    let mut writer = BufWriter::new(stream);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let (resp, quit) = service.dispatch_line(&line);
-        if writer.write_all(resp.to_string().as_bytes()).is_err()
-            || writer.write_all(b"\n").is_err()
-            || writer.flush().is_err()
-        {
-            break;
-        }
-        if quit {
-            return true;
-        }
-    }
-    false
+/// Serve an already-bound listener with the multiplexing event loop.
+/// Returns after graceful drain (a client's `shutdown` op, or
+/// SIGTERM/SIGINT when [`install_signal_handlers`] ran): accepted
+/// requests are finished and learned state is flushed before this
+/// returns.
+pub fn serve_listener(listener: TcpListener, cfg: Config, opts: ServeOptions) -> Result<()> {
+    let service = Service::start(cfg, &opts);
+    let r = run_event_loop(listener, &service);
+    service.shutdown();
+    r
 }
 
-/// Accept loop over an already-bound listener: one thread per connection,
-/// all feeding the shared [`Service`]. Returns when a client sends the
-/// `shutdown` op (after draining connections and joining the pool).
-pub fn serve_listener(listener: TcpListener, cfg: Config, opts: ServeOptions) -> Result<()> {
-    let service = Arc::new(Service::start(cfg, &opts));
-    let stop = Arc::new(AtomicBool::new(false));
-    let addr = listener.local_addr()?;
-    let mut conns: Vec<JoinHandle<()>> = Vec::new();
-    for stream in listener.incoming() {
-        if stop.load(Ordering::SeqCst) {
-            break;
-        }
-        let stream = match stream {
-            Ok(s) => s,
-            Err(_) => continue,
-        };
-        let service = service.clone();
-        let stop = stop.clone();
-        // reap finished connections so a long-lived daemon doesn't
-        // accumulate one JoinHandle per client forever
-        conns.retain(|c| !c.is_finished());
-        conns.push(std::thread::spawn(move || {
-            if handle_conn(stream, &service) {
-                // shutdown requested: stop accepting, then wake the
-                // accept loop with a throwaway connection
-                stop.store(true, Ordering::SeqCst);
-                let _ = TcpStream::connect(addr);
-            }
-        }));
-    }
-    for c in conns {
-        let _ = c.join();
-    }
-    if let Ok(service) = Arc::try_unwrap(service) {
-        service.shutdown();
-    }
-    Ok(())
+/// Install the daemon's SIGTERM/SIGINT → graceful-drain handlers
+/// (foreground `envadapt serve` only; no-op off unix).
+pub fn install_signal_handlers() {
+    sig::install();
 }
 
 /// Bind `addr` (e.g. `127.0.0.1:7777`; port 0 picks an ephemeral port)
-/// and serve until a client sends `shutdown`. Blocking — this is what
-/// `envadapt serve` runs.
+/// and serve until drained. Blocking — this is what `envadapt serve`
+/// runs.
 pub fn serve_tcp(addr: &str, cfg: Config, opts: ServeOptions) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     eprintln!("envadapt serve: listening on {}", listener.local_addr()?);
@@ -360,7 +882,9 @@ pub fn serve_tcp(addr: &str, cfg: Config, opts: ServeOptions) -> Result<()> {
 
 /// Serve line-delimited JSON on stdin/stdout (single-client mode; offload
 /// work still runs on the session pool). Returns at EOF or on the
-/// `shutdown` op.
+/// `shutdown` op. Requests are served synchronously in arrival order;
+/// admission control still applies (`busy` can only occur with a
+/// pipelining writer, timeouts whenever configured).
 pub fn serve_stdio(cfg: Config, opts: ServeOptions) -> Result<()> {
     let service = Service::start(cfg, &opts);
     let stdin = std::io::stdin();
@@ -395,16 +919,18 @@ impl ServerHandle {
         self.addr
     }
 
-    /// Ask the server to stop (a `shutdown` request over a fresh
-    /// connection) and wait for it to wind down. Graceful: open client
-    /// connections are drained first, so disconnect clients before
-    /// calling this for a prompt return.
+    /// Ask the server to drain (a `shutdown` request over a fresh
+    /// connection) and wait for it to wind down. Graceful: admitted
+    /// offloads finish and their responses are delivered first. If the
+    /// server is already draining (a client sent `shutdown`, SIGTERM),
+    /// the connect fails and this just joins.
     pub fn shutdown(self) -> Result<()> {
-        let mut stream = TcpStream::connect(self.addr)?;
-        stream.write_all(b"{\"op\":\"shutdown\",\"id\":0}\n")?;
-        stream.flush()?;
-        let mut line = String::new();
-        let _ = BufReader::new(stream).read_line(&mut line);
+        if let Ok(mut stream) = TcpStream::connect(self.addr) {
+            let _ = stream.write_all(b"{\"op\":\"shutdown\",\"id\":0}\n");
+            let _ = stream.flush();
+            let mut line = String::new();
+            let _ = BufReader::new(stream).read_line(&mut line);
+        }
         match self.thread.join() {
             Ok(r) => r,
             Err(_) => Err(anyhow!("server thread panicked")),
@@ -428,7 +954,7 @@ mod tests {
     use crate::ir::Lang;
 
     fn service() -> Service {
-        Service::start(Config::fast_sim(), &ServeOptions { pool: 2, db_path: None })
+        Service::start(Config::fast_sim(), &ServeOptions { pool: 2, ..Default::default() })
     }
 
     #[test]
@@ -454,6 +980,9 @@ mod tests {
         assert_eq!(stats.get("requests").and_then(|v| v.as_i64()), Some(3));
         assert_eq!(stats.get("errors").and_then(|v| v.as_i64()), Some(1));
         assert_eq!(stats.get("workers").and_then(|v| v.as_i64()), Some(2));
+        // admission-control counters ride along on the legacy summary
+        assert_eq!(stats.get("queue_depth").and_then(|v| v.as_i64()), Some(0));
+        assert_eq!(stats.get("busy_rejections").and_then(|v| v.as_i64()), Some(0));
 
         let (_, quit) = s.dispatch_line(r#"{"op":"shutdown","id":7}"#);
         assert!(quit);
@@ -469,7 +998,7 @@ mod tests {
         assert_eq!(resp.get("id").and_then(|v| v.as_i64()), Some(3));
         let err = resp.get("error").and_then(|v| v.as_str()).unwrap();
         assert!(
-            err.contains("supported: offload, stats, ping, shutdown"),
+            err.contains("supported: offload, stats, metrics, ping, shutdown"),
             "unknown-op error must name the supported ops: {err}"
         );
         s.shutdown();
@@ -517,6 +1046,18 @@ mod tests {
         assert_eq!(stats.get("pattern_reuse_hits").and_then(|v| v.as_i64()), Some(1));
         assert_eq!(stats.get("patterns_learned").and_then(|v| v.as_i64()), Some(1));
         assert_eq!(stats.get("learned_records").and_then(|v| v.as_i64()), Some(1));
+
+        // the metrics op sees the same traffic, in the structured schema
+        let (mresp, _) = s.dispatch_line(r#"{"op":"metrics","id":10}"#);
+        assert_eq!(mresp.get("ok").and_then(|v| v.as_bool()), Some(true));
+        let m = mresp.get("metrics").expect("metrics payload");
+        let o = m.get("offloads").unwrap();
+        assert_eq!(o.get("total").and_then(|v| v.as_i64()), Some(2));
+        assert_eq!(o.get("searched").and_then(|v| v.as_i64()), Some(1));
+        assert_eq!(o.get("replayed").and_then(|v| v.as_i64()), Some(1));
+        assert!(
+            m.get("search").unwrap().get("measurements").and_then(|v| v.as_i64()).unwrap() > 0
+        );
         s.shutdown();
     }
 
@@ -561,6 +1102,77 @@ mod tests {
         let devices = rep.get("devices").expect("report carries the device set");
         assert!(devices.to_string().contains("many-core"), "{}", devices.to_string());
         assert!(rep.get("placement").is_some(), "report carries the placement");
+        s.shutdown();
+    }
+
+    #[test]
+    fn draining_service_refuses_new_offloads() {
+        let s = service();
+        let (_, quit) = s.dispatch_line(r#"{"op":"shutdown","id":1}"#);
+        assert!(quit);
+        let code = crate::workloads::get("smallloops", Lang::C).unwrap().code;
+        let (resp, _) = s.dispatch_line(&proto::offload_request(2, "smallloops", Lang::C, code));
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(false));
+        assert!(resp
+            .get("error")
+            .and_then(|v| v.as_str())
+            .unwrap()
+            .contains("service is shutting down"));
+        // cheap ops still answer during drain (operators watch the drain)
+        let (resp, _) = s.dispatch_line(r#"{"op":"metrics","id":3}"#);
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+        s.shutdown();
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn per_request_timeout_answers_versioned_error() {
+        let s = Service::start(
+            Config::fast_sim(),
+            &ServeOptions { pool: 1, request_timeout_ms: 50, ..Default::default() },
+        );
+        let req = OffloadRequest::source("void main() { }", Lang::C)
+            .name("__envadapt_test_slow")
+            .build()
+            .unwrap();
+        let (resp, _) = s.dispatch(Request::offload(1, req));
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(false), "{}", resp.to_string());
+        assert_eq!(resp.get("timed_out").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(
+            resp.get("schema_version").and_then(|v| v.as_i64()),
+            Some(crate::api::SCHEMA_VERSION)
+        );
+        let (mresp, _) = s.dispatch_line(r#"{"op":"metrics","id":2}"#);
+        let m = mresp.get("metrics").unwrap();
+        assert_eq!(
+            m.get("responses").unwrap().get("timeout").and_then(|v| v.as_i64()),
+            Some(1)
+        );
+        s.shutdown();
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn worker_panic_is_caught_counted_and_answered() {
+        let s = Service::start(Config::fast_sim(), &ServeOptions { pool: 1, ..Default::default() });
+        let req = OffloadRequest::source("void main() { }", Lang::C)
+            .name("__envadapt_test_panic")
+            .build()
+            .unwrap();
+        let (resp, _) = s.dispatch(Request::offload(1, req));
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(false));
+        assert!(resp.get("error").and_then(|v| v.as_str()).unwrap().contains("panicked"));
+        assert_eq!(
+            resp.get("schema_version").and_then(|v| v.as_i64()),
+            Some(crate::api::SCHEMA_VERSION)
+        );
+        // the pool survived: the next request is served normally
+        let code = crate::workloads::get("smallloops", Lang::C).unwrap().code;
+        let (r2, _) = s.dispatch_line(&proto::offload_request(2, "smallloops", Lang::C, code));
+        assert_eq!(r2.get("ok").and_then(|v| v.as_bool()), Some(true), "{}", r2.to_string());
+        let (mresp, _) = s.dispatch_line(r#"{"op":"metrics","id":3}"#);
+        let m = mresp.get("metrics").unwrap();
+        assert_eq!(m.get("worker_panics").and_then(|v| v.as_i64()), Some(1));
         s.shutdown();
     }
 }

@@ -138,7 +138,10 @@ fn library_session_and_serve_daemon_emit_the_same_report_json() {
     );
 
     // entry path 2: the serve daemon, same request over the wire
-    let service = Service::start(Config::fast_sim(), &ServeOptions { pool: 1, db_path: None });
+    let service = Service::start(
+        Config::fast_sim(),
+        &ServeOptions { pool: 1, db_path: None, ..Default::default() },
+    );
     let (resp, _) = service.dispatch_line(&proto::offload_request_v2(1, &req));
     assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "{}", resp.to_string());
     let served = resp.get("report").expect("offload response carries the report");
@@ -177,7 +180,7 @@ fn v2_client_round_trips_against_the_daemon() {
     use std::net::TcpStream;
     let handle = server::spawn_tcp(
         Config::fast_sim(),
-        ServeOptions { pool: 1, db_path: None },
+        ServeOptions { pool: 1, db_path: None, ..Default::default() },
         "127.0.0.1:0",
     )
     .expect("spawn server");

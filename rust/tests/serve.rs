@@ -44,7 +44,7 @@ fn i64_field(r: &Response, report_key: &str) -> i64 {
 fn serve_learns_and_replays_all_four_languages() {
     let handle = server::spawn_tcp(
         Config::fast_sim(),
-        ServeOptions { pool: 2, db_path: None },
+        ServeOptions { pool: 2, db_path: None, ..Default::default() },
         "127.0.0.1:0",
     )
     .expect("spawn server");
@@ -115,7 +115,7 @@ fn serve_learns_and_replays_all_four_languages() {
 fn serve_handles_concurrent_clients_and_bad_input() {
     let handle = server::spawn_tcp(
         Config::fast_sim(),
-        ServeOptions { pool: 2, db_path: None },
+        ServeOptions { pool: 2, db_path: None, ..Default::default() },
         "127.0.0.1:0",
     )
     .expect("spawn server");
@@ -170,7 +170,7 @@ fn serve_learns_and_replays_mixed_placements() {
     // replays the learned placement with zero search measurements
     let handle = server::spawn_tcp(
         Config::fast_sim(),
-        ServeOptions { pool: 2, db_path: None },
+        ServeOptions { pool: 2, db_path: None, ..Default::default() },
         "127.0.0.1:0",
     )
     .expect("spawn server");
@@ -222,7 +222,7 @@ fn serve_resumes_learned_patterns_from_disk() {
     // first server instance: search + learn + persist
     let handle = server::spawn_tcp(
         Config::fast_sim(),
-        ServeOptions { pool: 1, db_path: Some(db_path.clone()) },
+        ServeOptions { pool: 1, db_path: Some(db_path.clone()), ..Default::default() },
         "127.0.0.1:0",
     )
     .unwrap();
@@ -239,7 +239,7 @@ fn serve_resumes_learned_patterns_from_disk() {
     // second instance (a restarted service): replays with zero search
     let handle = server::spawn_tcp(
         Config::fast_sim(),
-        ServeOptions { pool: 1, db_path: Some(db_path.clone()) },
+        ServeOptions { pool: 1, db_path: Some(db_path.clone()), ..Default::default() },
         "127.0.0.1:0",
     )
     .unwrap();
@@ -268,7 +268,7 @@ fn serve_js_learns_persists_and_never_replays_across_languages() {
 
     let handle = server::spawn_tcp(
         Config::fast_sim(),
-        ServeOptions { pool: 1, db_path: Some(db_path.clone()) },
+        ServeOptions { pool: 1, db_path: Some(db_path.clone()), ..Default::default() },
         "127.0.0.1:0",
     )
     .unwrap();
@@ -319,7 +319,7 @@ fn serve_js_learns_persists_and_never_replays_across_languages() {
     // 5) a restarted service replays the JS record from disk
     let handle = server::spawn_tcp(
         Config::fast_sim(),
-        ServeOptions { pool: 1, db_path: Some(db_path.clone()) },
+        ServeOptions { pool: 1, db_path: Some(db_path.clone()), ..Default::default() },
         "127.0.0.1:0",
     )
     .unwrap();
