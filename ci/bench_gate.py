@@ -3,16 +3,25 @@
 
 Compares a fresh bench JSON against the committed baseline and fails
 when throughput regressed by more than the threshold on any row. Covers
-the three bench files: ``BENCH_engine.json`` (rows keyed by ``workers``,
+the four bench files: ``BENCH_engine.json`` (rows keyed by ``workers``,
 valued in ``evals_per_sec``; ``cargo bench -- engine``),
 ``BENCH_vm.json`` (rows keyed by ``workload``, valued in
-``evals_per_sec``; ``cargo bench -- vm``) and ``BENCH_serve.json``
+``evals_per_sec``; ``cargo bench -- vm``), ``BENCH_serve.json``
 (rows keyed by ``clients``, valued in ``requests_per_sec``;
-``cargo bench -- serve``).
+``cargo bench -- serve``) and ``BENCH_patterndb.json`` (rows keyed by
+``records``, valued in ``lookups_per_sec``; ``cargo bench --
+patterndb``).
+
+For ``patterndb_lookup`` the gate additionally asserts *flatness* on the
+fresh run: per-lookup throughput across the record-count rows (10k →
+1M) must stay within ``FLAT_RATIO`` of each other — the indexed, tiered
+DB's whole point is that lookups do not degrade as the DB grows.
 
 A placeholder baseline (a ``null`` throughput — committed before the
 first toolchain-equipped run) skips the gate for that row, so the gate
 arms itself automatically once real numbers land in the repository.
+(The flatness check runs off the *fresh* values, so it arms as soon as
+the bench itself produces numbers.)
 
 Usage: bench_gate.py BASELINE.json FRESH.json [--threshold 0.25]
 """
@@ -21,20 +30,25 @@ import json
 import sys
 
 THRESHOLD = 0.25  # fail when fresh < (1 - THRESHOLD) * baseline
+FLAT_RATIO = 5.0  # patterndb_lookup: max/min lookups_per_sec across sizes
 
 
 def row_key(r):
     # BENCH_engine.json rows are per worker count, BENCH_vm.json rows per
-    # workload family, BENCH_serve.json rows per concurrent-client count;
-    # any of those values is a stable row identity
-    for key in ("workers", "workload", "clients"):
+    # workload family, BENCH_serve.json rows per concurrent-client count,
+    # BENCH_patterndb.json rows per record count; any of those values is
+    # a stable row identity
+    for key in ("workers", "workload", "clients", "records"):
         if r.get(key) is not None:
             return r.get(key)
     return None
 
 
 def row_value(r):
-    # engine/vm rows carry evals_per_sec, serve rows requests_per_sec
+    # engine/vm rows carry evals_per_sec, serve rows requests_per_sec,
+    # patterndb rows lookups_per_sec
+    if "lookups_per_sec" in r:
+        return r.get("lookups_per_sec")
     if "requests_per_sec" in r:
         return r.get("requests_per_sec")
     return r.get("evals_per_sec")
@@ -82,6 +96,23 @@ def main(argv):
                 f"{key}: throughput fell to {ratio:.2f}x of baseline "
                 f"(limit {1.0 - threshold:.2f}x)"
             )
+
+    # flat-latency assertion: lookup throughput must not fall off as the
+    # record count grows (fresh values; skipped while still placeholders)
+    if fresh.get("bench") == "patterndb_lookup":
+        vals = [v for v in rows(fresh).values() if v is not None]
+        if len(vals) >= 2 and len(vals) == len(fresh.get("results", [])):
+            flat = max(vals) / min(vals)
+            if flat > FLAT_RATIO:
+                failures.append(
+                    f"lookup throughput varies {flat:.2f}x across record counts "
+                    f"(flatness limit {FLAT_RATIO:.1f}x) — per-lookup latency "
+                    f"is no longer flat in the DB size"
+                )
+            else:
+                print(f"flatness: {flat:.2f}x spread across sizes (limit {FLAT_RATIO:.1f}x)")
+        else:
+            print("flatness: fresh results still placeholders — check skipped")
 
     if failures:
         sys.exit(f"{bench} regression gate FAILED:\n  " + "\n  ".join(failures))

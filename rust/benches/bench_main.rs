@@ -73,6 +73,9 @@ fn main() {
     if want("serve") {
         serve_throughput();
     }
+    if want("patterndb") {
+        patterndb_lookup();
+    }
     if want("micro") {
         micro_benchmarks();
     }
@@ -380,6 +383,164 @@ fn serve_throughput() {
         eprintln!("warning: could not write BENCH_serve.json: {e}");
     }
     handle.shutdown().expect("clean shutdown");
+}
+
+/// patterndb_lookup: per-lookup latency of the indexed, tiered pattern
+/// DB at 10k / 100k / 1M synthetic learned records. The flat-latency
+/// claim is the whole point — lookup throughput must not degrade as the
+/// DB grows (probe cost is governed by the threshold, not the record
+/// count) — so `ci/bench_gate.py` asserts the per-row `lookups_per_sec`
+/// stays within a small ratio across the three sizes, on top of the
+/// usual regression gate. Index/scan equivalence is spot-checked on the
+/// way (the full contract lives in `tests/patterndb_differential.rs`).
+/// Records the baseline to BENCH_patterndb.json.
+fn patterndb_lookup() {
+    use envadapt::device::TargetKind;
+    use envadapt::ir::NODE_KIND_COUNT;
+    use envadapt::patterndb::{LearnedPlan, PatternRecord, TierConfig};
+    use envadapt::util::json::Json;
+    use envadapt::util::Rng;
+
+    println!("## patterndb — indexed lookup latency vs learned-record count\n");
+
+    const EXACT_LOOKUPS: usize = 2_000;
+    const SIMILAR_LOOKUPS: usize = 1_000;
+    let mut rows = Vec::new();
+    let mut arr = Vec::new();
+    for n in [10_000usize, 100_000, 1_000_000] {
+        let base = std::env::temp_dir()
+            .join(format!("envadapt_bench_patterndb_{}_{n}.txt", std::process::id()));
+        let mut os = base.as_os_str().to_os_string();
+        os.push(".segments");
+        let segdir = std::path::PathBuf::from(os);
+        let _ = std::fs::remove_dir_all(&segdir);
+        let _ = std::fs::remove_file(&base);
+
+        // small hot tier: at 1M records, ~99% of lookups cross the cold
+        // tier, so the numbers include the promotion path
+        let tier =
+            TierConfig { hot_capacity: 10_000, segment_records: 250_000, max_segments: usize::MAX };
+        let mut db = PatternDb::open_tiered(Some(&base), tier);
+        let mut rng = Rng::new(0xD6 + n as u64);
+        let mut sample: Vec<(u64, [f64; NODE_KIND_COUNT])> = Vec::new();
+        let t0 = std::time::Instant::now();
+        for fp in 0..n as u64 {
+            let mut v = [0.0; NODE_KIND_COUNT];
+            for _ in 0..1 + rng.below(6) {
+                v[rng.below(NODE_KIND_COUNT)] += (1 + rng.below(9)) as f64;
+            }
+            if rng.chance(0.1) {
+                v[rng.below(NODE_KIND_COUNT)] += (10 + rng.below(200)) as f64;
+            }
+            if sample.len() < 1_000 && (fp < 64 || rng.chance(0.01)) {
+                sample.push((fp, v));
+            }
+            let plan = LearnedPlan {
+                fingerprint: fp,
+                lang: Lang::C,
+                target: TargetKind::Gpu,
+                devices: vec![TargetKind::Gpu],
+                gene: vec![true],
+                gene_loops: vec![1],
+                funcblocks: Vec::new(),
+                fb_dests: Vec::new(),
+                baseline_s: 1.0,
+                final_s: 0.5,
+            };
+            db.insert_learned(PatternRecord::from_learned(format!("bench {fp}"), v, plan));
+            if fp % 50_000 == 49_999 {
+                db.flush(&base).expect("flush");
+            }
+        }
+        db.flush(&base).expect("flush");
+        let build_s = t0.elapsed().as_secs_f64();
+
+        // exact-fingerprint hits (the zero-measurement replay fast path;
+        // cold records cost one seek to promote)
+        let t0 = std::time::Instant::now();
+        let mut found = 0usize;
+        for _ in 0..EXACT_LOOKUPS {
+            let fp = rng.below(n) as u64;
+            if db.lookup_learned(fp, TargetKind::Gpu).is_some() {
+                found += 1;
+            }
+        }
+        let exact_s = t0.elapsed().as_secs_f64();
+        assert_eq!(found, EXACT_LOOKUPS, "every fingerprint must resolve");
+
+        // similarity hits at the production reuse threshold
+        let t0 = std::time::Instant::now();
+        let mut hits = 0usize;
+        for i in 0..SIMILAR_LOOKUPS {
+            let v = sample[i % sample.len()].1;
+            if db.lookup_learned_similar(&v, Lang::C, &[TargetKind::Gpu], 0.9).is_some() {
+                hits += 1;
+            }
+        }
+        let similar_s = t0.elapsed().as_secs_f64();
+        assert_eq!(hits, SIMILAR_LOOKUPS, "an identical vector always scores 1.0");
+
+        // equivalence spot-check (untimed): indexed answers must be
+        // bit-identical to the linear scan
+        for i in 0..20 {
+            let v = sample[(i * 7) % sample.len()].1;
+            for t in [0.6, 0.9, 0.995] {
+                let indexed = db
+                    .lookup_learned_similar(&v, Lang::C, &[TargetKind::Gpu], t)
+                    .map(|(r, s)| (r.key.clone(), s.to_bits()));
+                let scanned = db
+                    .lookup_learned_similar_scan(&v, Lang::C, &[TargetKind::Gpu], t)
+                    .map(|(r, s)| (r.key.clone(), s.to_bits()));
+                assert_eq!(indexed, scanned, "index/scan diverge at {n} records, t={t}");
+            }
+        }
+
+        let stats = db.stats();
+        let exact_ps = EXACT_LOOKUPS as f64 / exact_s;
+        let similar_ps = SIMILAR_LOOKUPS as f64 / similar_s;
+        let lps = (EXACT_LOOKUPS + SIMILAR_LOOKUPS) as f64 / (exact_s + similar_s);
+        rows.push(vec![
+            n.to_string(),
+            format!("{exact_ps:.0}"),
+            format!("{similar_ps:.0}"),
+            format!("{lps:.0}"),
+            format!("{:.1}", stats.index_candidates as f64 / stats.index_probes.max(1) as f64),
+            format!("{build_s:.1}"),
+        ]);
+        arr.push(
+            Json::obj()
+                .set("records", n)
+                .set("lookups_per_sec", lps)
+                .set("exact_per_sec", exact_ps)
+                .set("similar_per_sec", similar_ps)
+                .set("build_s", build_s),
+        );
+        let _ = std::fs::remove_dir_all(&segdir);
+        let _ = std::fs::remove_file(&base);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &[
+                "records",
+                "exact lookups/sec",
+                "similar lookups/sec",
+                "blended/sec",
+                "avg candidates/probe",
+                "build s",
+            ],
+            &rows
+        )
+    );
+
+    let j = Json::obj()
+        .set("bench", "patterndb_lookup")
+        .set("exact_lookups", EXACT_LOOKUPS)
+        .set("similar_lookups", SIMILAR_LOOKUPS)
+        .set("results", Json::Arr(arr));
+    if let Err(e) = std::fs::write("BENCH_patterndb.json", j.to_pretty() + "\n") {
+        eprintln!("warning: could not write BENCH_patterndb.json: {e}");
+    }
 }
 
 /// E9 (extension): environment-adaptive target selection — the same app

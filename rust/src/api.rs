@@ -651,14 +651,9 @@ impl OffloadSession {
             let c = self.cache.lock().unwrap();
             (c.len(), c.hit_count(), c.miss_count())
         };
-        let learned_records = self.db.lock().unwrap().learned_len();
-        self.metrics.snapshot(&Gauges {
-            learned_records,
-            cache_entries,
-            cache_hits,
-            cache_misses,
-            ..Gauges::default()
-        })
+        let g = Gauges { cache_entries, cache_hits, cache_misses, ..Gauges::default() }
+            .with_db(&self.db.lock().unwrap());
+        self.metrics.snapshot(&g)
     }
 
     /// The coordinator that serves `req`, built now if this variant has

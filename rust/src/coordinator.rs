@@ -501,7 +501,7 @@ impl Coordinator {
             learned_pattern = db.insert_learned(record);
             if learned_pattern {
                 if let Some(p) = &self.cfg.pattern_db_path {
-                    if let Err(e) = db.save(p) {
+                    if let Err(e) = db.flush(p) {
                         eprintln!("warning: pattern DB not saved: {e}");
                     }
                 }
@@ -558,7 +558,7 @@ impl Coordinator {
         // snapshot the matching plan under the lock, then measure without
         // holding it (other service workers keep going)
         let (plan_rec, how) = {
-            let db = self.db.lock().unwrap();
+            let mut db = self.db.lock().unwrap();
             if db.learned_len() == 0 {
                 return None;
             }

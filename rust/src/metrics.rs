@@ -104,6 +104,33 @@ pub struct Gauges {
     pub cache_entries: usize,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    // pattern-DB tier occupancy + index counters (see
+    // `patterndb::TierStats` / `patterndb::DbStats`)
+    pub db_hot_records: usize,
+    pub db_cold_records: usize,
+    pub db_segments: usize,
+    pub db_index_probes: u64,
+    pub db_index_candidates: u64,
+    pub db_index_fallbacks: u64,
+    pub db_promotions: u64,
+}
+
+impl Gauges {
+    /// Fill the pattern-DB gauges (record count, tier occupancy, index
+    /// counters) from the DB itself — call under the DB lock.
+    pub fn with_db(mut self, db: &crate::patterndb::PatternDb) -> Gauges {
+        let tier = db.tier_stats();
+        let stats = db.stats();
+        self.learned_records = db.learned_len();
+        self.db_hot_records = tier.hot_records;
+        self.db_cold_records = tier.cold_records;
+        self.db_segments = tier.segments;
+        self.db_index_probes = stats.index_probes;
+        self.db_index_candidates = stats.index_candidates;
+        self.db_index_fallbacks = stats.index_fallbacks;
+        self.db_promotions = stats.promotions;
+        self
+    }
 }
 
 impl Default for Metrics {
@@ -362,7 +389,14 @@ impl Metrics {
                 "patterns",
                 Json::obj()
                     .set("learned_total", ld(&self.patterns_learned))
-                    .set("records", g.learned_records),
+                    .set("records", g.learned_records)
+                    .set("hot_records", g.db_hot_records)
+                    .set("cold_records", g.db_cold_records)
+                    .set("segments", g.db_segments)
+                    .set("index_probes", g.db_index_probes as i64)
+                    .set("index_candidates", g.db_index_candidates as i64)
+                    .set("index_fallbacks", g.db_index_fallbacks as i64)
+                    .set("promotions", g.db_promotions as i64),
             )
             .set(
                 "search",

@@ -18,14 +18,41 @@
 //! zero new search measurements. Learned records live in a separate
 //! store so clone detection over user loop nests never matches a
 //! whole-program vector.
+//!
+//! The store is built to stay flat at a million learned records:
+//!
+//! * **Index** (the `index` submodule): similarity lookups probe a sound pruning
+//!   index (records bucketed by `(lang, device set)`, ordered by vector
+//!   mass and band signature) instead of scanning every record. The
+//!   index is a candidate filter, not an approximation — every answer
+//!   is bit-identical to the linear scan (the `*_scan` methods), a
+//!   contract enforced by `tests/patterndb_differential.rs`.
+//! * **Tiering** (the `tier` submodule, behind [`PatternDb::open_tiered`]): a
+//!   bounded hot in-memory set backed by append-only on-disk segments.
+//!   [`PatternDb::flush`] appends only dirty records; compaction
+//!   ([`PatternDb::save`]) folds segments back into the base file,
+//!   keeping the faster plan on duplicate keys — the same merge
+//!   semantics [`PatternDb::merge`] always had. Cold records keep their
+//!   key, vector and gate fields resident, so lookups stay exact; the
+//!   full record is re-read with one seek only when it wins a lookup.
+
+mod index;
+mod tier;
+
+pub use tier::TierConfig;
 
 use crate::clone::{char_vector_stmt, similarity, CharVec};
 use crate::device::TargetKind;
 use crate::frontend::parse;
 use crate::ir::{Lang, LoopId, NODE_KIND_COUNT, Stmt};
 use anyhow::{anyhow, bail, Result};
+use index::{Sig, SimIndex};
+use std::collections::{HashMap, VecDeque};
+use std::io::Write as _;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use tier::{SegLoc, SegmentStore};
 
 /// A verified offload plan learned from a completed search — everything
 /// needed to rebuild and re-verify the final pattern without searching.
@@ -110,11 +137,118 @@ impl PatternRecord {
     }
 }
 
+/// Index/tier lookup counters (atomics: the catalogue lookup is `&self`
+/// and may race across a future lock-free reader; counters are
+/// monotonic and advisory, Relaxed is plenty).
+#[derive(Debug, Default)]
+struct Counters {
+    probes: AtomicU64,
+    candidates: AtomicU64,
+    fallbacks: AtomicU64,
+    promotions: AtomicU64,
+    promote_failures: AtomicU64,
+}
+
+impl Clone for Counters {
+    fn clone(&self) -> Counters {
+        let ld = |a: &AtomicU64| AtomicU64::new(a.load(Ordering::Relaxed));
+        Counters {
+            probes: ld(&self.probes),
+            candidates: ld(&self.candidates),
+            fallbacks: ld(&self.fallbacks),
+            promotions: ld(&self.promotions),
+            promote_failures: ld(&self.promote_failures),
+        }
+    }
+}
+
+/// Monotonic index/promotion counters, for the `metrics` snapshot (see
+/// `docs/OPERATIONS.md`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DbStats {
+    /// similarity lookups answered through the index
+    pub index_probes: u64,
+    /// candidate records the index offered for exact scoring
+    pub index_candidates: u64,
+    /// probes that degenerated to a full-bucket walk (still exact)
+    pub index_fallbacks: u64,
+    /// cold records re-read from disk because a lookup chose them
+    pub promotions: u64,
+    /// promotions that failed (unreadable/moved segment line)
+    pub promote_failures: u64,
+}
+
+/// Point-in-time tier occupancy.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierStats {
+    /// learned records fully materialized in memory
+    pub hot_records: usize,
+    /// learned records demoted to resident-metadata-only
+    pub cold_records: usize,
+    /// append-only segment files currently on disk
+    pub segments: usize,
+    /// records inserted/replaced since the last flush
+    pub dirty_records: usize,
+}
+
+/// A learned record's resident identity: everything lookups gate,
+/// prune and tie-break on stays in memory even when the full record has
+/// been demoted to a cold on-disk segment — so indexed and scan lookups
+/// are exact without touching disk, and only the winner is re-read.
+#[derive(Debug, Clone)]
+struct Entry {
+    key: String,
+    lang: Lang,
+    devices: Vec<TargetKind>,
+    final_s: f64,
+    vector: CharVec,
+    sig: Sig,
+    bucket: u32,
+    /// where the record's line lives on disk (None until flushed)
+    loc: Option<SegLoc>,
+    state: EntryState,
+}
+
+#[derive(Debug, Clone)]
+enum EntryState {
+    /// full record in memory
+    Hot(Box<PatternRecord>),
+    /// resident metadata only; the record is re-read from `loc` on use
+    Cold,
+    /// tombstone (replaced by a newer entry under the same key)
+    Dead,
+}
+
+/// The catalogue lives in index bucket 0; learned buckets start at 1.
+const CATALOGUE_BUCKET: u32 = 0;
+
+const HEADER: &str = "# envadapt pattern DB v3\n";
+
 /// The pattern DB: the function-block catalogue plus learned plans.
 #[derive(Debug, Clone, Default)]
 pub struct PatternDb {
     records: Vec<PatternRecord>,
-    learned: Vec<PatternRecord>,
+    /// learned entries, append-only (replacements tombstone the old id)
+    entries: Vec<Entry>,
+    /// key → live entry id (exactly one live entry per key)
+    by_key: HashMap<String, u32>,
+    /// `(lang, device set)` → index bucket for learned records
+    buckets: HashMap<(Lang, Vec<TargetKind>), u32>,
+    learned_index: SimIndex,
+    catalogue_index: SimIndex,
+    /// hot entries in promotion order (FIFO demotion; stale ids are
+    /// skipped lazily)
+    hot_queue: VecDeque<u32>,
+    hot_count: usize,
+    /// hot entries that also have an on-disk line — the only ones
+    /// eviction can demote, so when this is 0 eviction is a no-op (keeps
+    /// bulk insert-then-flush linear instead of rescanning the queue)
+    hot_persisted: usize,
+    /// entry ids inserted/replaced since the last flush/save
+    dirty: Vec<u32>,
+    tier: TierConfig,
+    store: Option<SegmentStore>,
+    counters: Counters,
 }
 
 /// The DB as shared between service workers' coordinators: every worker
@@ -178,41 +312,42 @@ impl PatternDb {
             learned: None,
         };
         let zero = [0.0; NODE_KIND_COUNT];
-        PatternDb {
-            learned: Vec::new(),
-            records: vec![
-                rec(
-                    "matmul",
-                    &[32, 64, 96, 128, 256],
-                    comparison_vector(MATMUL_COMPARISON_C),
-                    "dense square matmul (cuBLAS gemm analogue)",
-                ),
-                rec("dft", &[128, 256, 512], zero, "dense DFT (cuFFT analogue)"),
-                rec("saxpy", &[1024, 4096, 65536], zero, "fused a*x+y"),
-                rec(
-                    "blackscholes",
-                    &[1024, 4096, 65536],
-                    zero,
-                    "European option pricing (elementwise)",
-                ),
-                {
-                    let mut r = rec(
-                        "jacobi_step",
-                        &[32, 64, 128],
-                        comparison_vector(JACOBI_COMPARISON_C),
-                        "5-point Jacobi relaxation step",
-                    );
-                    r.gpu_kernel = "jacobi".into();
-                    r
-                },
-                rec("conv1d", &[1024, 4096], zero, "valid 1-D convolution (m = 16)"),
-                {
-                    let mut r = rec("reduce_sum", &[1024, 4096, 65536], zero, "tree sum reduction");
-                    r.gpu_kernel = "reduce".into();
-                    r
-                },
-            ],
+        let mut db = PatternDb::default();
+        for r in [
+            rec(
+                "matmul",
+                &[32, 64, 96, 128, 256],
+                comparison_vector(MATMUL_COMPARISON_C),
+                "dense square matmul (cuBLAS gemm analogue)",
+            ),
+            rec("dft", &[128, 256, 512], zero, "dense DFT (cuFFT analogue)"),
+            rec("saxpy", &[1024, 4096, 65536], zero, "fused a*x+y"),
+            rec(
+                "blackscholes",
+                &[1024, 4096, 65536],
+                zero,
+                "European option pricing (elementwise)",
+            ),
+            {
+                let mut r = rec(
+                    "jacobi_step",
+                    &[32, 64, 128],
+                    comparison_vector(JACOBI_COMPARISON_C),
+                    "5-point Jacobi relaxation step",
+                );
+                r.gpu_kernel = "jacobi".into();
+                r
+            },
+            rec("conv1d", &[1024, 4096], zero, "valid 1-D convolution (m = 16)"),
+            {
+                let mut r = rec("reduce_sum", &[1024, 4096, 65536], zero, "tree sum reduction");
+                r.gpu_kernel = "reduce".into();
+                r
+            },
+        ] {
+            db.push_record(r);
         }
+        db
     }
 
     /// Number of function-block records (learned records are counted by
@@ -222,7 +357,7 @@ impl PatternDb {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.records.is_empty() && self.learned.is_empty()
+        self.records.is_empty() && self.by_key.is_empty()
     }
 
     /// Function-block records only — this is what clone detection scans,
@@ -231,13 +366,239 @@ impl PatternDb {
         &self.records
     }
 
-    pub fn learned_records(&self) -> &[PatternRecord] {
-        &self.learned
+    pub fn learned_len(&self) -> usize {
+        self.by_key.len()
     }
 
-    pub fn learned_len(&self) -> usize {
-        self.learned.len()
+    /// Index/promotion counters since this DB was built.
+    pub fn stats(&self) -> DbStats {
+        let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        DbStats {
+            index_probes: ld(&self.counters.probes),
+            index_candidates: ld(&self.counters.candidates),
+            index_fallbacks: ld(&self.counters.fallbacks),
+            promotions: ld(&self.counters.promotions),
+            promote_failures: ld(&self.counters.promote_failures),
+        }
     }
+
+    /// Hot/cold/segment occupancy right now.
+    pub fn tier_stats(&self) -> TierStats {
+        TierStats {
+            hot_records: self.hot_count,
+            cold_records: self.by_key.len().saturating_sub(self.hot_count),
+            segments: self.store.as_ref().map(|s| s.segment_count()).unwrap_or(0),
+            dirty_records: self.dirty.len(),
+        }
+    }
+
+    // ---- internal bookkeeping -------------------------------------------
+
+    fn push_record(&mut self, r: PatternRecord) {
+        let id = self.records.len() as u32;
+        let sig = Sig::of(&r.vector);
+        if sig.mass() > 0.0 {
+            self.catalogue_index.insert(CATALOGUE_BUCKET, &sig, id);
+        }
+        self.records.push(r);
+    }
+
+    fn intern_bucket(&mut self, lang: Lang, devices: &[TargetKind]) -> u32 {
+        if let Some(&b) = self.buckets.get(&(lang, devices.to_vec())) {
+            return b;
+        }
+        let b = self.buckets.len() as u32 + 1; // 0 is the catalogue
+        self.buckets.insert((lang, devices.to_vec()), b);
+        b
+    }
+
+    fn push_learned(&mut self, rec: PatternRecord, loc: Option<SegLoc>, mark_dirty: bool) {
+        let plan = rec.learned.as_ref().expect("learned record carries a plan");
+        let id = self.entries.len() as u32;
+        let bucket = self.intern_bucket(plan.lang, &plan.devices);
+        let sig = Sig::of(&rec.vector);
+        if sig.mass() > 0.0 {
+            self.learned_index.insert(bucket, &sig, id);
+        }
+        let e = Entry {
+            key: rec.key.clone(),
+            lang: plan.lang,
+            devices: plan.devices.clone(),
+            final_s: plan.final_s,
+            vector: rec.vector,
+            sig,
+            bucket,
+            loc,
+            state: EntryState::Hot(Box::new(rec)),
+        };
+        self.by_key.insert(e.key.clone(), id);
+        let persisted = e.loc.is_some();
+        self.entries.push(e);
+        self.hot_count += 1;
+        if persisted {
+            self.hot_persisted += 1;
+        }
+        self.hot_queue.push_back(id);
+        if mark_dirty {
+            self.dirty.push(id);
+        }
+        self.evict_excess(Some(id));
+    }
+
+    fn replace_entry(&mut self, id: u32, rec: PatternRecord, loc: Option<SegLoc>, dirty: bool) {
+        let e = &mut self.entries[id as usize];
+        if e.sig.mass() > 0.0 {
+            self.learned_index.remove(e.bucket, &e.sig, id);
+        }
+        if matches!(e.state, EntryState::Hot(_)) {
+            self.hot_count -= 1;
+            if e.loc.is_some() {
+                self.hot_persisted -= 1;
+            }
+        }
+        e.state = EntryState::Dead; // by_key/hot_queue clean up lazily
+        self.push_learned(rec, loc, dirty);
+    }
+
+    /// Merge-semantics upsert (add when new, faster plan wins on a
+    /// duplicate key; function blocks add-if-new). Returns whether the
+    /// DB changed.
+    fn absorb_record(&mut self, rec: PatternRecord, loc: Option<SegLoc>, dirty: bool) -> bool {
+        if rec.learned.is_some() {
+            match self.by_key.get(&rec.key).copied() {
+                None => {
+                    self.push_learned(rec, loc, dirty);
+                    true
+                }
+                Some(id) => {
+                    let incoming = rec.learned.as_ref().unwrap().final_s;
+                    if incoming < self.entries[id as usize].final_s {
+                        self.replace_entry(id, rec, loc, dirty);
+                        true
+                    } else {
+                        false
+                    }
+                }
+            }
+        } else if self.lookup_name(&rec.key).is_none() {
+            self.push_record(rec);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Demote hot persisted entries (oldest promotion first) until the
+    /// hot tier fits. Entries without an on-disk line and the pinned
+    /// `keep` id rotate to the back instead — demotion never loses data
+    /// and never invalidates the reference a lookup is about to return.
+    fn evict_excess(&mut self, keep: Option<u32>) {
+        if self.store.is_none() {
+            return; // untiered DBs keep everything hot (old behavior)
+        }
+        let mut attempts = self.hot_queue.len();
+        while self.hot_count > self.tier.hot_capacity && self.hot_persisted > 0 && attempts > 0 {
+            attempts -= 1;
+            let Some(id) = self.hot_queue.pop_front() else { break };
+            let e = &mut self.entries[id as usize];
+            let hot = matches!(e.state, EntryState::Hot(_));
+            if hot && e.loc.is_some() && Some(id) != keep {
+                e.state = EntryState::Cold;
+                self.hot_count -= 1;
+                self.hot_persisted -= 1;
+            } else if hot {
+                self.hot_queue.push_back(id); // un-persisted or pinned
+            } // Cold/Dead: stale queue id, drop it
+        }
+    }
+
+    /// Re-read a cold entry's record from its segment line. Returns
+    /// whether the entry is hot afterwards.
+    fn materialize(&mut self, id: u32) -> bool {
+        match self.entries[id as usize].state {
+            EntryState::Hot(_) => return true,
+            EntryState::Dead => return false,
+            EntryState::Cold => {}
+        }
+        match self.cold_record(id) {
+            Ok(rec) => {
+                let e = &mut self.entries[id as usize];
+                e.state = EntryState::Hot(Box::new(rec));
+                self.hot_count += 1;
+                self.hot_persisted += 1; // Cold entries always have a loc
+                self.hot_queue.push_back(id);
+                self.counters.promotions.fetch_add(1, Ordering::Relaxed);
+                self.evict_excess(Some(id));
+                true
+            }
+            Err(err) => {
+                self.counters.promote_failures.fetch_add(1, Ordering::Relaxed);
+                let key = &self.entries[id as usize].key;
+                eprintln!("warning: pattern DB could not re-read record {key}: {err}");
+                false
+            }
+        }
+    }
+
+    /// Parse a cold entry's line back off disk (no state change).
+    fn cold_record(&self, id: u32) -> Result<PatternRecord> {
+        let e = &self.entries[id as usize];
+        let (store, loc) = match (&self.store, e.loc) {
+            (Some(s), Some(l)) => (s, l),
+            _ => bail!("cold record {} has no on-disk location", e.key),
+        };
+        let line = store.read_line_at(loc)?;
+        let rec = parse_record_line(&line, 0)?
+            .ok_or_else(|| anyhow!("record {} line is blank on disk", e.key))?;
+        if rec.key != e.key {
+            bail!("record {} read back as {} — DB files changed underneath?", e.key, rec.key);
+        }
+        Ok(rec)
+    }
+
+    /// Hand out the full record for entry `id`, promoting it first when
+    /// cold.
+    fn record_ref(&mut self, id: u32) -> Option<&PatternRecord> {
+        if !self.materialize(id) {
+            return None;
+        }
+        match &self.entries[id as usize].state {
+            EntryState::Hot(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    /// Deterministic tie-break shared by scan and index paths: highest
+    /// similarity, then lowest key (for learned records the key embeds
+    /// the zero-padded fingerprint, so equal-scoring ties resolve to
+    /// the lowest fingerprint), then lowest entry id.
+    fn entry_beats(&self, best: Option<(u32, f64)>, s: f64, id: u32) -> bool {
+        match best {
+            None => true,
+            Some((bid, bs)) => {
+                s > bs
+                    || (s == bs && {
+                        let (k, bk) = (&self.entries[id as usize].key, &self.entries[bid as usize].key);
+                        k < bk || (k == bk && id < bid)
+                    })
+            }
+        }
+    }
+
+    fn catalogue_beats(&self, best: Option<(u32, f64)>, s: f64, id: u32) -> bool {
+        match best {
+            None => true,
+            Some((bid, bs)) => {
+                s > bs
+                    || (s == bs && {
+                        let (k, bk) = (&self.records[id as usize].key, &self.records[bid as usize].key);
+                        k < bk || (k == bk && id < bid)
+                    })
+            }
+        }
+    }
+
+    // ---- mutation --------------------------------------------------------
 
     /// Insert a freshly measured learned plan. A fresh measurement is
     /// newer ground truth than whatever is stored, so an existing record
@@ -245,17 +606,20 @@ impl PatternDb {
     /// (false only when an identical record is already present).
     pub fn insert_learned(&mut self, rec: PatternRecord) -> bool {
         debug_assert!(rec.learned.is_some(), "insert_learned needs a LearnedPlan");
-        match self.learned.iter().position(|r| r.key == rec.key) {
-            Some(pos) => {
-                if self.learned[pos].learned == rec.learned {
-                    false
-                } else {
-                    self.learned[pos] = rec;
-                    true
-                }
-            }
+        match self.by_key.get(&rec.key).copied() {
             None => {
-                self.learned.push(rec);
+                self.push_learned(rec, None, true);
+                true
+            }
+            Some(id) => {
+                if self.materialize(id) {
+                    if let EntryState::Hot(old) = &self.entries[id as usize].state {
+                        if old.learned == rec.learned {
+                            return false;
+                        }
+                    }
+                }
+                self.replace_entry(id, rec, None, true);
                 true
             }
         }
@@ -267,48 +631,75 @@ impl PatternDb {
     /// plan (smaller `final_s`) wins. Returns how many records changed.
     pub fn merge(&mut self, other: PatternDb) -> usize {
         let mut changed = 0usize;
-        for r in other.records {
-            if self.lookup_name(&r.key).is_none() {
-                self.records.push(r);
+        let (fbs, learned) = other.into_parts();
+        for r in fbs.into_iter().chain(learned) {
+            if self.absorb_record(r, None, true) {
                 changed += 1;
-            }
-        }
-        for r in other.learned {
-            let incoming_final =
-                r.learned.as_ref().expect("learned record carries a plan").final_s;
-            match self.learned.iter().position(|x| x.key == r.key) {
-                None => {
-                    self.learned.push(r);
-                    changed += 1;
-                }
-                Some(pos) => {
-                    let current_final = self.learned[pos].learned.as_ref().unwrap().final_s;
-                    if incoming_final < current_final {
-                        self.learned[pos] = r;
-                        changed += 1;
-                    }
-                }
             }
         }
         changed
     }
 
+    /// Tear the DB apart into (function-block, learned) record lists,
+    /// materializing every cold entry — the consuming half of
+    /// [`PatternDb::merge`].
+    fn into_parts(mut self) -> (Vec<PatternRecord>, Vec<PatternRecord>) {
+        self.tier.hot_capacity = usize::MAX; // no demotions while draining
+        let mut learned = Vec::new();
+        for id in 0..self.entries.len() as u32 {
+            if matches!(self.entries[id as usize].state, EntryState::Dead) {
+                continue;
+            }
+            if !self.materialize(id) {
+                let key = &self.entries[id as usize].key;
+                eprintln!("warning: pattern DB record {key} lost in merge (unreadable segment)");
+                continue;
+            }
+            let state =
+                std::mem::replace(&mut self.entries[id as usize].state, EntryState::Dead);
+            if let EntryState::Hot(rec) = state {
+                learned.push(*rec);
+            }
+        }
+        (self.records, learned)
+    }
+
+    // ---- lookups ---------------------------------------------------------
+
     /// Exact learned-pattern lookup: same program fingerprint, same
     /// single target — the service's zero-measurement fast path.
-    pub fn lookup_learned(&self, fingerprint: u64, target: TargetKind) -> Option<&PatternRecord> {
+    pub fn lookup_learned(&mut self, fingerprint: u64, target: TargetKind) -> Option<&PatternRecord> {
         self.lookup_learned_set(fingerprint, &[target])
     }
 
     /// Exact learned-pattern lookup keyed by the full heterogeneous
     /// destination set (a mixed plan's gene only decodes against the set
-    /// it was searched with, so sets are part of the key).
+    /// it was searched with, so sets are part of the key). `&mut self`:
+    /// a cold record is promoted into the hot tier before it is
+    /// returned.
     pub fn lookup_learned_set(
-        &self,
+        &mut self,
         fingerprint: u64,
         devices: &[TargetKind],
     ) -> Option<&PatternRecord> {
         let key = PatternRecord::learned_key_set(fingerprint, devices);
-        self.learned.iter().find(|r| r.key == key)
+        let id = self.by_key.get(&key).copied()?;
+        self.record_ref(id)
+    }
+
+    /// Linear-scan reference for [`PatternDb::lookup_learned_set`] (the
+    /// differential suite runs both and requires identical answers).
+    pub fn lookup_learned_set_scan(
+        &mut self,
+        fingerprint: u64,
+        devices: &[TargetKind],
+    ) -> Option<&PatternRecord> {
+        let key = PatternRecord::learned_key_set(fingerprint, devices);
+        let id = self
+            .entries
+            .iter()
+            .position(|e| !matches!(e.state, EntryState::Dead) && e.key == key)?;
+        self.record_ref(id as u32)
     }
 
     /// Similarity lookup over *learned* records only: best record in the
@@ -322,26 +713,67 @@ impl PatternDb {
     /// program hash). The caller must still validate the replayed plan
     /// against its own analysis (gene-loop set, candidate descriptions)
     /// and re-verify the result — similarity alone is a hint, not proof.
+    ///
+    /// Answered through the pruning index; bit-identical to
+    /// [`PatternDb::lookup_learned_similar_scan`] by construction (and
+    /// by the differential suite). Ties break to the lowest fingerprint.
     pub fn lookup_learned_similar(
-        &self,
+        &mut self,
         v: &CharVec,
         lang: Lang,
         devices: &[TargetKind],
         threshold: f64,
     ) -> Option<(&PatternRecord, f64)> {
-        let mut best: Option<(&PatternRecord, f64)> = None;
-        for r in &self.learned {
-            let Some(plan) = r.learned.as_ref() else { continue };
-            if plan.lang != lang || plan.devices != devices || r.vector.iter().all(|&x| x == 0.0)
-            {
+        self.counters.probes.fetch_add(1, Ordering::Relaxed);
+        let bucket = self.buckets.get(&(lang, devices.to_vec())).copied()?;
+        let q = Sig::of(v);
+        let mut cands = Vec::new();
+        if self.learned_index.candidates(bucket, &q, threshold, &mut cands) {
+            self.counters.fallbacks.fetch_add(1, Ordering::Relaxed);
+        }
+        self.counters.candidates.fetch_add(cands.len() as u64, Ordering::Relaxed);
+        let mut best: Option<(u32, f64)> = None;
+        for &id in &cands {
+            let e = &self.entries[id as usize];
+            debug_assert!(e.lang == lang && e.devices == devices, "bucket gates lang+devices");
+            if !index::may_reach(&q, &e.sig, threshold) {
                 continue;
             }
-            let s = similarity(v, &r.vector);
-            if s >= threshold && best.map(|(_, bs)| s > bs).unwrap_or(true) {
-                best = Some((r, s));
+            let s = similarity(v, &e.vector);
+            if s >= threshold && self.entry_beats(best, s, id) {
+                best = Some((id, s));
             }
         }
-        best
+        let (id, s) = best?;
+        Some((self.record_ref(id)?, s))
+    }
+
+    /// Linear-scan reference for [`PatternDb::lookup_learned_similar`]:
+    /// every live learned record is gated and scored directly.
+    pub fn lookup_learned_similar_scan(
+        &mut self,
+        v: &CharVec,
+        lang: Lang,
+        devices: &[TargetKind],
+        threshold: f64,
+    ) -> Option<(&PatternRecord, f64)> {
+        let mut best: Option<(u32, f64)> = None;
+        for (id, e) in self.entries.iter().enumerate() {
+            let id = id as u32;
+            if matches!(e.state, EntryState::Dead) || e.lang != lang || e.devices != devices {
+                continue;
+            }
+            // no comparison vector registered (all-zero / degenerate)
+            if e.sig.mass() <= 0.0 || e.sig.mass().is_nan() {
+                continue;
+            }
+            let s = similarity(v, &e.vector);
+            if s >= threshold && self.entry_beats(best, s, id) {
+                best = Some((id, s));
+            }
+        }
+        let (id, s) = best?;
+        Some((self.record_ref(id)?, s))
     }
 
     /// Name-match lookup (the paper's ライブラリ名一致).
@@ -349,20 +781,49 @@ impl PatternDb {
         self.records.iter().find(|r| r.key == lib)
     }
 
-    /// Similarity lookup (the paper's 類似性検知): best record whose
-    /// comparison vector scores ≥ `threshold` against `v`.
+    /// Similarity lookup (the paper's 類似性検知): best catalogue record
+    /// whose comparison vector scores ≥ `threshold` against `v`.
+    /// Answered through the pruning index; bit-identical to
+    /// [`PatternDb::lookup_similar_scan`].
     pub fn lookup_similar(&self, v: &CharVec, threshold: f64) -> Option<(&PatternRecord, f64)> {
-        let mut best: Option<(&PatternRecord, f64)> = None;
-        for r in &self.records {
-            if r.vector.iter().all(|&x| x == 0.0) {
+        self.counters.probes.fetch_add(1, Ordering::Relaxed);
+        let q = Sig::of(v);
+        let mut cands = Vec::new();
+        if self.catalogue_index.candidates(CATALOGUE_BUCKET, &q, threshold, &mut cands) {
+            self.counters.fallbacks.fetch_add(1, Ordering::Relaxed);
+        }
+        self.counters.candidates.fetch_add(cands.len() as u64, Ordering::Relaxed);
+        let mut best: Option<(u32, f64)> = None;
+        for &id in &cands {
+            let s = similarity(v, &self.records[id as usize].vector);
+            if s >= threshold && self.catalogue_beats(best, s, id) {
+                best = Some((id, s));
+            }
+        }
+        let (id, s) = best?;
+        Some((&self.records[id as usize], s))
+    }
+
+    /// Linear-scan reference for [`PatternDb::lookup_similar`].
+    pub fn lookup_similar_scan(
+        &self,
+        v: &CharVec,
+        threshold: f64,
+    ) -> Option<(&PatternRecord, f64)> {
+        let mut best: Option<(u32, f64)> = None;
+        for (id, r) in self.records.iter().enumerate() {
+            let id = id as u32;
+            let mass = Sig::of(&r.vector).mass();
+            if mass <= 0.0 || mass.is_nan() {
                 continue; // no comparison code registered
             }
             let s = similarity(v, &r.vector);
-            if s >= threshold && best.map(|(_, bs)| s > bs).unwrap_or(true) {
-                best = Some((r, s));
+            if s >= threshold && self.catalogue_beats(best, s, id) {
+                best = Some((id, s));
             }
         }
-        best
+        let (id, s) = best?;
+        Some((&self.records[id as usize], s))
     }
 
     /// Does an artifact exist for (record, n)?
@@ -382,219 +843,419 @@ impl PatternDb {
     // v2 learned lines (13 fields — no devices/fb_dests: a single-target
     // plan, devices = [target], every block on the target) and v1 files
     // (5 fields everywhere) still load.
+    //
+    // Tiered layout: the base file plus `<base>.segments/seg-*.txt`
+    // append-only segments in the same line format (see `tier`).
 
     /// Builtin catalogue merged with whatever `path` holds (when given
     /// and present) — how a restarted service resumes its learned state.
-    /// An unreadable file is reported and ignored, never fatal.
+    /// An unreadable file is reported and ignored, never fatal. Tiering
+    /// uses the default [`TierConfig`]; see [`PatternDb::open_tiered`].
     pub fn open_or_builtin(path: Option<&Path>) -> PatternDb {
+        PatternDb::open_tiered(path, TierConfig::default())
+    }
+
+    /// [`PatternDb::open_or_builtin`] with explicit tiering knobs.
+    ///
+    /// The base file is parsed strictly (a malformed base is warned
+    /// about and ignored whole, the old behavior); segments are parsed
+    /// leniently — a torn tail (crash mid-append) keeps every record
+    /// before the tear and the file is truncated back to the valid
+    /// prefix so appends stay clean. Records beyond
+    /// [`TierConfig::hot_capacity`] are demoted to cold, oldest first.
+    pub fn open_tiered(path: Option<&Path>, tier: TierConfig) -> PatternDb {
         let mut db = PatternDb::builtin();
-        if let Some(p) = path {
-            if p.exists() {
-                match PatternDb::load(p) {
-                    Ok(other) => {
-                        db.merge(other);
-                    }
-                    Err(e) => {
+        db.tier = tier;
+        let Some(p) = path else { return db };
+        let mut store = SegmentStore::open(p);
+        if p.exists() {
+            match std::fs::read_to_string(p) {
+                Ok(text) => {
+                    let (items, err) = parse_text(&text);
+                    if let Some((_, e)) = err {
                         eprintln!("warning: pattern DB {} not loaded: {e}", p.display());
+                    } else {
+                        for (rec, off) in items {
+                            db.absorb_record(rec, Some(SegLoc { file: 0, offset: off }), false);
+                        }
                     }
                 }
+                Err(e) => eprintln!("warning: pattern DB {} not loaded: {e}", p.display()),
             }
         }
+        for idx in 1..=store.segment_count() {
+            let segp = store.file(idx as u32).to_path_buf();
+            let active = idx == store.segment_count();
+            let text = match std::fs::read_to_string(&segp) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("warning: pattern DB segment {} unreadable: {e}", segp.display());
+                    if active {
+                        store.set_active_len(usize::MAX); // never append to it
+                    }
+                    continue;
+                }
+            };
+            let (items, err) = parse_text(&text);
+            if active {
+                store.set_active_len(items.len());
+            }
+            if let Some((torn_at, e)) = err {
+                eprintln!(
+                    "warning: pattern DB segment {} malformed ({e}) — keeping the {} records before it",
+                    segp.display(),
+                    items.len()
+                );
+                if active && !truncate_to(&segp, torn_at) {
+                    store.set_active_len(usize::MAX);
+                }
+            }
+            for (rec, off) in items {
+                db.absorb_record(rec, Some(SegLoc { file: idx as u32, offset: off }), false);
+            }
+        }
+        db.store = Some(store);
+        db.evict_excess(None);
         db
     }
 
-    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let mut out = String::from("# envadapt pattern DB v3\n");
-        for r in self.records.iter().chain(&self.learned) {
-            let sizes: Vec<String> = r.sizes.iter().map(|s| s.to_string()).collect();
-            let vec: Vec<String> = r.vector.iter().map(|x| format!("{x}")).collect();
-            // the description can embed user input (app names) — scrub
-            // everything that could corrupt or inject a record line
-            out.push_str(&format!(
-                "{}|{}|{}|{}|{}",
-                r.key,
-                r.gpu_kernel,
-                sizes.join(","),
-                r.description.replace(['|', '\n', '\r'], "/"),
-                vec.join(",")
-            ));
-            if let Some(p) = &r.learned {
-                let gene: String = if p.gene.is_empty() {
-                    "-".to_string()
-                } else {
-                    p.gene.iter().map(|&b| if b { '1' } else { '0' }).collect()
-                };
-                let loops = if p.gene_loops.is_empty() {
-                    "-".to_string()
-                } else {
-                    p.gene_loops.iter().map(|l| l.to_string()).collect::<Vec<_>>().join(",")
-                };
-                let blocks = if p.funcblocks.is_empty() {
-                    "-".to_string()
-                } else {
-                    p.funcblocks
-                        .iter()
-                        .map(|b| b.replace(['|', ';', '\n', '\r'], "/"))
-                        .collect::<Vec<_>>()
-                        .join(";")
-                };
-                let devices = p
-                    .devices
-                    .iter()
-                    .map(|d| d.name())
-                    .collect::<Vec<_>>()
-                    .join("+");
-                let fb_dests = if p.fb_dests.is_empty() {
-                    "-".to_string()
-                } else {
-                    p.fb_dests.iter().map(|d| d.name()).collect::<Vec<_>>().join(",")
-                };
-                out.push_str(&format!(
-                    "|{:016x}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
-                    p.fingerprint,
-                    p.lang.name(),
-                    p.target.name(),
-                    gene,
-                    loops,
-                    blocks,
-                    p.baseline_s,
-                    p.final_s,
-                    devices,
-                    fb_dests
-                ));
-            }
-            out.push('\n');
+    /// Persist incrementally: while the DB fits its hot capacity and no
+    /// segments exist this is a plain full [`PatternDb::save`] (the old
+    /// behavior, byte-identical); beyond that only records dirtied since
+    /// the last flush are appended to the active segment, and a full
+    /// compaction runs once more than [`TierConfig::max_segments`]
+    /// segments accumulate.
+    pub fn flush(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let tiered = self.store.as_ref().is_some_and(|s| {
+            s.base() == path && (self.by_key.len() > self.tier.hot_capacity || s.segment_count() > 0)
+        });
+        if !tiered {
+            return self.save(path);
         }
-        std::fs::write(path, out)?;
+        let dirty = std::mem::take(&mut self.dirty);
+        let mut lines = Vec::new();
+        let mut ids = Vec::new();
+        for id in dirty {
+            if let EntryState::Hot(rec) = &self.entries[id as usize].state {
+                lines.push(record_line(rec));
+                ids.push(id);
+            } // ids replaced before the flush (Dead) just drop out
+        }
+        if !lines.is_empty() {
+            let store = self.store.as_mut().expect("tiered flush has a store");
+            match store.append(&lines, self.tier.segment_records) {
+                Ok(locs) => {
+                    for (&id, loc) in ids.iter().zip(locs) {
+                        let e = &mut self.entries[id as usize];
+                        if e.loc.is_none() && matches!(e.state, EntryState::Hot(_)) {
+                            self.hot_persisted += 1;
+                        }
+                        e.loc = Some(loc);
+                    }
+                }
+                Err(e) => {
+                    self.dirty = ids; // still dirty; retry next flush
+                    return Err(e.into());
+                }
+            }
+        }
+        self.evict_excess(None);
+        if self.store.as_ref().map(|s| s.segment_count()).unwrap_or(0) > self.tier.max_segments {
+            self.save(path)?; // compaction
+        }
         Ok(())
     }
 
+    /// Full snapshot: stream every live record (hot from memory, cold
+    /// re-read from its segment) into `path` via a temp file + atomic
+    /// rename. When `path` is this DB's tiered base file this is the
+    /// compaction step — afterwards every record's location points into
+    /// the fresh base file and all segments are deleted.
+    pub fn save(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let file_name = path.file_name().and_then(|s| s.to_str()).unwrap_or("patterndb");
+        let tmp = path.with_file_name(format!("{file_name}.tmp"));
+        let new_locs = match self.write_snapshot(&tmp) {
+            Ok(locs) => locs,
+            Err(e) => {
+                let _ = std::fs::remove_file(&tmp);
+                return Err(e);
+            }
+        };
+        if let Err(e) = std::fs::rename(&tmp, path) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e.into());
+        }
+        if self.store.as_ref().is_some_and(|s| s.base() == path) {
+            for (id, off) in new_locs {
+                self.entries[id as usize].loc = Some(SegLoc { file: 0, offset: off });
+            }
+            if let Some(store) = self.store.as_mut() {
+                store.clear_segments();
+            }
+            self.dirty.clear();
+            // every live entry now has a base-file line
+            self.hot_persisted = self.hot_count;
+            self.evict_excess(None);
+        } else if self.store.is_none() {
+            self.dirty.clear(); // plain save: everything is in the snapshot
+        }
+        Ok(())
+    }
+
+    fn write_snapshot(&self, tmp: &Path) -> Result<Vec<(u32, u64)>> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(tmp)?);
+        w.write_all(HEADER.as_bytes())?;
+        let mut offset = HEADER.len() as u64;
+        for r in &self.records {
+            let line = record_line(r);
+            w.write_all(line.as_bytes())?;
+            w.write_all(b"\n")?;
+            offset += line.len() as u64 + 1;
+        }
+        let mut locs = Vec::new();
+        for (id, e) in self.entries.iter().enumerate() {
+            let line = match &e.state {
+                EntryState::Dead => continue,
+                EntryState::Hot(rec) => record_line(rec),
+                EntryState::Cold => record_line(&self.cold_record(id as u32)?),
+            };
+            locs.push((id as u32, offset));
+            w.write_all(line.as_bytes())?;
+            w.write_all(b"\n")?;
+            offset += line.len() as u64 + 1;
+        }
+        w.flush()?;
+        Ok(locs)
+    }
+
+    /// Strict whole-file load (tests, tools): any malformed line is an
+    /// error. Duplicate keys resolve by the merge rule (faster plan
+    /// wins), exactly as [`PatternDb::open_or_builtin`] resolves them.
     pub fn load(path: impl AsRef<Path>) -> Result<PatternDb> {
         let text = std::fs::read_to_string(&path)?;
+        let (items, err) = parse_text(&text);
+        if let Some((_, e)) = err {
+            return Err(e);
+        }
         let mut db = PatternDb::default();
-        for (lineno, line) in text.lines().enumerate() {
-            if line.starts_with('#') || line.trim().is_empty() {
-                continue;
-            }
-            let parts: Vec<&str> = line.split('|').collect();
-            if parts.len() != 5 && parts.len() != 13 && parts.len() != 15 {
-                bail!("pattern DB line {} malformed", lineno + 1);
-            }
-            let sizes: Vec<usize> = parts[2]
-                .split(',')
-                .filter(|s| !s.is_empty())
-                .map(|s| s.parse().map_err(|_| anyhow!("bad size {s:?}")))
-                .collect::<Result<_>>()?;
-            let vec_parts: Vec<f64> = parts[4]
-                .split(',')
-                .map(|s| s.parse().map_err(|_| anyhow!("bad vector element {s:?}")))
-                .collect::<Result<_>>()?;
-            if vec_parts.len() != NODE_KIND_COUNT {
-                bail!("pattern DB line {}: vector length {}", lineno + 1, vec_parts.len());
-            }
-            let mut vector = [0.0; NODE_KIND_COUNT];
-            vector.copy_from_slice(&vec_parts);
-            let learned = if parts.len() >= 13 {
-                Some(Self::parse_learned(&parts, lineno)?)
-            } else {
-                None
-            };
-            let rec = PatternRecord {
-                key: parts[0].to_string(),
-                gpu_kernel: parts[1].to_string(),
-                sizes,
-                vector,
-                description: parts[3].to_string(),
-                learned,
-            };
-            if rec.learned.is_some() {
-                db.learned.push(rec);
-            } else {
-                db.records.push(rec);
-            }
+        for (rec, _) in items {
+            db.absorb_record(rec, None, true);
         }
         Ok(db)
     }
+}
 
-    fn parse_learned(parts: &[&str], lineno: usize) -> Result<LearnedPlan> {
-        let bad = |what: &str| anyhow!("pattern DB line {}: bad {what}", lineno + 1);
-        let fingerprint =
-            u64::from_str_radix(parts[5], 16).map_err(|_| bad("fingerprint"))?;
-        let lang = Lang::from_name(parts[6]).ok_or_else(|| bad("language"))?;
-        let target = TargetKind::from_name(parts[7]).ok_or_else(|| bad("target"))?;
-        let gene: Vec<bool> = if parts[8] == "-" {
-            Vec::new()
-        } else {
-            parts[8]
-                .chars()
-                .map(|c| match c {
-                    '0' => Ok(false),
-                    '1' => Ok(true),
-                    _ => Err(bad("gene")),
-                })
-                .collect::<Result<_>>()?
-        };
-        let gene_loops: Vec<LoopId> = if parts[9] == "-" {
-            Vec::new()
-        } else {
-            parts[9]
-                .split(',')
-                .map(|s| s.parse().map_err(|_| bad("gene loop id")))
-                .collect::<Result<_>>()?
-        };
-        let funcblocks: Vec<String> = if parts[10] == "-" {
-            Vec::new()
-        } else {
-            parts[10].split(';').map(|s| s.to_string()).collect()
-        };
-        let baseline_s: f64 = parts[11].parse().map_err(|_| bad("baseline_s"))?;
-        let final_s: f64 = parts[12].parse().map_err(|_| bad("final_s"))?;
-        // v3 appends the destination set and per-block destinations; a v2
-        // line is a single-target plan with every block on the target
-        let devices: Vec<TargetKind> = if parts.len() >= 15 {
-            parts[13]
-                .split('+')
-                .map(|s| TargetKind::from_name(s).ok_or_else(|| bad("device set")))
-                .collect::<Result<_>>()?
-        } else {
-            vec![target]
-        };
-        if devices.is_empty() {
-            return Err(bad("device set"));
-        }
-        let fb_dests: Vec<TargetKind> = if parts.len() >= 15 {
-            if parts[14] == "-" {
-                Vec::new()
-            } else {
-                parts[14]
-                    .split(',')
-                    .map(|s| TargetKind::from_name(s).ok_or_else(|| bad("funcblock dest")))
-                    .collect::<Result<_>>()?
-            }
-        } else {
-            vec![target; funcblocks.len()]
-        };
-        if fb_dests.len() != funcblocks.len() {
-            return Err(bad("funcblock dest count"));
-        }
-        Ok(LearnedPlan {
-            fingerprint,
-            lang,
-            target,
-            devices,
-            gene,
-            gene_loops,
-            funcblocks,
-            fb_dests,
-            baseline_s,
-            final_s,
-        })
+fn truncate_to(path: &Path, len: u64) -> bool {
+    let ok = std::fs::OpenOptions::new()
+        .write(true)
+        .open(path)
+        .and_then(|f| f.set_len(len))
+        .is_ok();
+    if !ok {
+        eprintln!("warning: could not truncate torn pattern DB segment {}", path.display());
     }
+    ok
+}
+
+/// Serialize one record as a v3 line (no trailing newline).
+fn record_line(r: &PatternRecord) -> String {
+    let sizes: Vec<String> = r.sizes.iter().map(|s| s.to_string()).collect();
+    let vec: Vec<String> = r.vector.iter().map(|x| format!("{x}")).collect();
+    // the description can embed user input (app names) — scrub
+    // everything that could corrupt or inject a record line
+    let mut out = format!(
+        "{}|{}|{}|{}|{}",
+        r.key,
+        r.gpu_kernel,
+        sizes.join(","),
+        r.description.replace(['|', '\n', '\r'], "/"),
+        vec.join(",")
+    );
+    if let Some(p) = &r.learned {
+        let gene: String = if p.gene.is_empty() {
+            "-".to_string()
+        } else {
+            p.gene.iter().map(|&b| if b { '1' } else { '0' }).collect()
+        };
+        let loops = if p.gene_loops.is_empty() {
+            "-".to_string()
+        } else {
+            p.gene_loops.iter().map(|l| l.to_string()).collect::<Vec<_>>().join(",")
+        };
+        let blocks = if p.funcblocks.is_empty() {
+            "-".to_string()
+        } else {
+            p.funcblocks
+                .iter()
+                .map(|b| b.replace(['|', ';', '\n', '\r'], "/"))
+                .collect::<Vec<_>>()
+                .join(";")
+        };
+        let devices = p.devices.iter().map(|d| d.name()).collect::<Vec<_>>().join("+");
+        let fb_dests = if p.fb_dests.is_empty() {
+            "-".to_string()
+        } else {
+            p.fb_dests.iter().map(|d| d.name()).collect::<Vec<_>>().join(",")
+        };
+        out.push_str(&format!(
+            "|{:016x}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
+            p.fingerprint,
+            p.lang.name(),
+            p.target.name(),
+            gene,
+            loops,
+            blocks,
+            p.baseline_s,
+            p.final_s,
+            devices,
+            fb_dests
+        ));
+    }
+    out
+}
+
+/// Parse one line; `Ok(None)` for comments and blanks.
+fn parse_record_line(line: &str, lineno: usize) -> Result<Option<PatternRecord>> {
+    if line.starts_with('#') || line.trim().is_empty() {
+        return Ok(None);
+    }
+    let parts: Vec<&str> = line.split('|').collect();
+    if parts.len() != 5 && parts.len() != 13 && parts.len() != 15 {
+        bail!("pattern DB line {} malformed", lineno + 1);
+    }
+    let sizes: Vec<usize> = parts[2]
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse().map_err(|_| anyhow!("bad size {s:?}")))
+        .collect::<Result<_>>()?;
+    let vec_parts: Vec<f64> = parts[4]
+        .split(',')
+        .map(|s| s.parse().map_err(|_| anyhow!("bad vector element {s:?}")))
+        .collect::<Result<_>>()?;
+    if vec_parts.len() != NODE_KIND_COUNT {
+        bail!("pattern DB line {}: vector length {}", lineno + 1, vec_parts.len());
+    }
+    let mut vector = [0.0; NODE_KIND_COUNT];
+    vector.copy_from_slice(&vec_parts);
+    let learned =
+        if parts.len() >= 13 { Some(parse_learned(&parts, lineno)?) } else { None };
+    Ok(Some(PatternRecord {
+        key: parts[0].to_string(),
+        gpu_kernel: parts[1].to_string(),
+        sizes,
+        vector,
+        description: parts[3].to_string(),
+        learned,
+    }))
+}
+
+/// Parse a whole DB/segment file, tracking each record's byte offset.
+/// Returns the records before the first malformed line plus, when one
+/// was hit, its byte offset and the error (strict callers fail, lenient
+/// callers keep the valid prefix — the torn-tail recovery contract).
+#[allow(clippy::type_complexity)]
+fn parse_text(text: &str) -> (Vec<(PatternRecord, u64)>, Option<(u64, anyhow::Error)>) {
+    let mut out = Vec::new();
+    let mut offset = 0u64;
+    for (lineno, raw) in text.split_inclusive('\n').enumerate() {
+        let start = offset;
+        offset += raw.len() as u64;
+        let line = raw.trim_end_matches('\n').trim_end_matches('\r');
+        match parse_record_line(line, lineno) {
+            Ok(Some(rec)) => out.push((rec, start)),
+            Ok(None) => {}
+            Err(e) => return (out, Some((start, e))),
+        }
+    }
+    (out, None)
+}
+
+fn parse_learned(parts: &[&str], lineno: usize) -> Result<LearnedPlan> {
+    let bad = |what: &str| anyhow!("pattern DB line {}: bad {what}", lineno + 1);
+    let fingerprint = u64::from_str_radix(parts[5], 16).map_err(|_| bad("fingerprint"))?;
+    let lang = Lang::from_name(parts[6]).ok_or_else(|| bad("language"))?;
+    let target = TargetKind::from_name(parts[7]).ok_or_else(|| bad("target"))?;
+    let gene: Vec<bool> = if parts[8] == "-" {
+        Vec::new()
+    } else {
+        parts[8]
+            .chars()
+            .map(|c| match c {
+                '0' => Ok(false),
+                '1' => Ok(true),
+                _ => Err(bad("gene")),
+            })
+            .collect::<Result<_>>()?
+    };
+    let gene_loops: Vec<LoopId> = if parts[9] == "-" {
+        Vec::new()
+    } else {
+        parts[9]
+            .split(',')
+            .map(|s| s.parse().map_err(|_| bad("gene loop id")))
+            .collect::<Result<_>>()?
+    };
+    let funcblocks: Vec<String> = if parts[10] == "-" {
+        Vec::new()
+    } else {
+        parts[10].split(';').map(|s| s.to_string()).collect()
+    };
+    let baseline_s: f64 = parts[11].parse().map_err(|_| bad("baseline_s"))?;
+    let final_s: f64 = parts[12].parse().map_err(|_| bad("final_s"))?;
+    // v3 appends the destination set and per-block destinations; a v2
+    // line is a single-target plan with every block on the target
+    let devices: Vec<TargetKind> = if parts.len() >= 15 {
+        parts[13]
+            .split('+')
+            .map(|s| TargetKind::from_name(s).ok_or_else(|| bad("device set")))
+            .collect::<Result<_>>()?
+    } else {
+        vec![target]
+    };
+    if devices.is_empty() {
+        return Err(bad("device set"));
+    }
+    let fb_dests: Vec<TargetKind> = if parts.len() >= 15 {
+        if parts[14] == "-" {
+            Vec::new()
+        } else {
+            parts[14]
+                .split(',')
+                .map(|s| TargetKind::from_name(s).ok_or_else(|| bad("funcblock dest")))
+                .collect::<Result<_>>()?
+        }
+    } else {
+        vec![target; funcblocks.len()]
+    };
+    if fb_dests.len() != funcblocks.len() {
+        return Err(bad("funcblock dest count"));
+    }
+    Ok(LearnedPlan {
+        fingerprint,
+        lang,
+        target,
+        devices,
+        gene,
+        gene_loops,
+        funcblocks,
+        fb_dests,
+        baseline_s,
+        final_s,
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn wipe(path: &Path) {
+        let mut os = path.as_os_str().to_os_string();
+        os.push(".segments");
+        let _ = std::fs::remove_dir_all(std::path::PathBuf::from(os));
+        let _ = std::fs::remove_file(path);
+    }
 
     #[test]
     fn builtin_has_all_library_kernels() {
@@ -633,7 +1294,7 @@ mod tests {
 
     #[test]
     fn save_load_roundtrip() {
-        let db = PatternDb::builtin();
+        let mut db = PatternDb::builtin();
         let tmp = std::env::temp_dir().join("envadapt_patterndb_test.txt");
         db.save(&tmp).unwrap();
         let loaded = PatternDb::load(&tmp).unwrap();
@@ -695,7 +1356,7 @@ mod tests {
         let tmp = std::env::temp_dir()
             .join(format!("envadapt_patterndb_learned_{}.txt", std::process::id()));
         db.save(&tmp).unwrap();
-        let loaded = PatternDb::load(&tmp).unwrap();
+        let mut loaded = PatternDb::load(&tmp).unwrap();
         assert_eq!(loaded.len(), db.len(), "function-block records survive");
         assert_eq!(loaded.learned_len(), 2);
         let a = db.lookup_learned(0xABCD, TargetKind::Gpu).unwrap();
@@ -762,7 +1423,7 @@ mod tests {
     fn learned_similarity_respects_lang_target_and_threshold() {
         let mut db = PatternDb::default();
         db.insert_learned(sample_learned(7, 0.2));
-        let v = db.learned_records()[0].vector;
+        let v = db.lookup_learned(7, TargetKind::Gpu).unwrap().vector;
         let (r, s) = db.lookup_learned_similar(&v, Lang::C, &[TargetKind::Gpu], 0.99).unwrap();
         assert_eq!(r.learned.as_ref().unwrap().fingerprint, 7);
         assert!(s > 0.999);
@@ -802,7 +1463,7 @@ mod tests {
         let tmp = std::env::temp_dir()
             .join(format!("envadapt_patterndb_langs_{}.txt", std::process::id()));
         db.save(&tmp).unwrap();
-        let loaded = PatternDb::load(&tmp).unwrap();
+        let mut loaded = PatternDb::load(&tmp).unwrap();
         assert_eq!(loaded.learned_len(), 4);
         for (i, lang) in Lang::all().into_iter().enumerate() {
             let r = loaded.lookup_learned(100 + i as u64, TargetKind::Gpu).unwrap();
@@ -844,7 +1505,7 @@ mod tests {
         let text = std::fs::read_to_string(&tmp).unwrap();
         assert!(text.starts_with("# envadapt pattern DB v3"));
         assert!(text.contains("|gpu+fpga|"), "{text}");
-        let loaded = PatternDb::load(&tmp).unwrap();
+        let mut loaded = PatternDb::load(&tmp).unwrap();
         let devices = [TargetKind::Gpu, TargetKind::Fpga];
         let r = loaded.lookup_learned_set(0x51AB, &devices).expect("set-keyed lookup");
         assert_eq!(r.learned.as_ref().unwrap(), &mixed_plan(0x51AB));
@@ -868,9 +1529,9 @@ mod tests {
         let tmp = std::env::temp_dir()
             .join(format!("envadapt_patterndb_v2compat_{}.txt", std::process::id()));
         std::fs::write(&tmp, format!("# envadapt pattern DB v2\n{line}")).unwrap();
-        let db = PatternDb::load(&tmp).unwrap();
+        let mut db = PatternDb::load(&tmp).unwrap();
         assert_eq!(db.learned_len(), 1);
-        let p = db.lookup_learned(0xAA, TargetKind::Gpu).unwrap().learned.as_ref().unwrap();
+        let p = db.lookup_learned(0xAA, TargetKind::Gpu).unwrap().learned.clone().unwrap();
         assert_eq!(p.devices, vec![TargetKind::Gpu], "v2 ⇒ single-target set");
         assert_eq!(p.fb_dests, vec![TargetKind::Gpu], "v2 blocks sit on the target");
         assert_eq!(p.gene, vec![true, false, true]);
@@ -879,11 +1540,8 @@ mod tests {
         let tmp2 = std::env::temp_dir()
             .join(format!("envadapt_patterndb_v2to3_{}.txt", std::process::id()));
         db.save(&tmp2).unwrap();
-        let again = PatternDb::load(&tmp2).unwrap();
-        assert_eq!(
-            again.lookup_learned(0xAA, TargetKind::Gpu).unwrap().learned,
-            db.lookup_learned(0xAA, TargetKind::Gpu).unwrap().learned
-        );
+        let mut again = PatternDb::load(&tmp2).unwrap();
+        assert_eq!(again.lookup_learned(0xAA, TargetKind::Gpu).unwrap().learned, Some(p));
         std::fs::remove_file(tmp).ok();
         std::fs::remove_file(tmp2).ok();
     }
@@ -892,7 +1550,7 @@ mod tests {
     fn open_or_builtin_resumes_learned_state() {
         let tmp = std::env::temp_dir()
             .join(format!("envadapt_patterndb_resume_{}.txt", std::process::id()));
-        let _ = std::fs::remove_file(&tmp);
+        wipe(&tmp);
         // missing file: plain builtin
         let db = PatternDb::open_or_builtin(Some(&tmp));
         assert_eq!(db.learned_len(), 0);
@@ -901,10 +1559,131 @@ mod tests {
         let mut db = db;
         db.insert_learned(sample_learned(42, 0.5));
         db.save(&tmp).unwrap();
-        let resumed = PatternDb::open_or_builtin(Some(&tmp));
+        let mut resumed = PatternDb::open_or_builtin(Some(&tmp));
         assert!(resumed.lookup_name("matmul").is_some());
         assert_eq!(resumed.learned_len(), 1);
         assert!(resumed.lookup_learned(42, TargetKind::Gpu).is_some());
-        std::fs::remove_file(tmp).ok();
+        wipe(&tmp);
+    }
+
+    #[test]
+    fn similarity_ties_break_to_the_lowest_fingerprint() {
+        // two learned records with IDENTICAL vectors score identically
+        // against any query; the winner must be the lowest fingerprint
+        // regardless of insertion order, in both lookup paths
+        for order in [[0x0Bu64, 0x0A], [0x0A, 0x0B]] {
+            let mut db = PatternDb::default();
+            for fp in order {
+                db.insert_learned(sample_learned(fp, 0.2));
+            }
+            let v = db.lookup_learned(0x0A, TargetKind::Gpu).unwrap().vector;
+            let want = PatternRecord::learned_key(0x0A, TargetKind::Gpu);
+            let (r, _) = db.lookup_learned_similar(&v, Lang::C, &[TargetKind::Gpu], 0.9).unwrap();
+            let indexed_key = r.key.clone();
+            assert_eq!(indexed_key, want, "index path, insertion order {order:?}");
+            let (r, _) =
+                db.lookup_learned_similar_scan(&v, Lang::C, &[TargetKind::Gpu], 0.9).unwrap();
+            assert_eq!(r.key, indexed_key, "scan path agrees, insertion order {order:?}");
+        }
+    }
+
+    #[test]
+    fn tiered_db_spills_promotes_and_compacts() {
+        let tmp = std::env::temp_dir()
+            .join(format!("envadapt_patterndb_tierspill_{}.txt", std::process::id()));
+        wipe(&tmp);
+        let tier = TierConfig { hot_capacity: 4, segment_records: 6, max_segments: 2 };
+        let mut db = PatternDb::open_tiered(Some(&tmp), tier);
+        for i in 0..20u64 {
+            db.insert_learned(sample_learned(100 + i, 0.2));
+            db.flush(&tmp).unwrap();
+        }
+        let ts = db.tier_stats();
+        assert!(ts.hot_records <= 4, "hot tier stays bounded: {ts:?}");
+        assert_eq!(ts.hot_records + ts.cold_records, 20);
+        for i in 0..20u64 {
+            assert!(
+                db.lookup_learned(100 + i, TargetKind::Gpu).is_some(),
+                "record {i} must resolve through the cold tier"
+            );
+        }
+        let st = db.stats();
+        assert!(st.promotions > 0, "cold lookups promote: {st:?}");
+        assert_eq!(st.promote_failures, 0, "{st:?}");
+        let reopened = PatternDb::open_tiered(Some(&tmp), tier);
+        assert_eq!(reopened.learned_len(), 20, "base + segments resume everything");
+        db.save(&tmp).unwrap();
+        assert_eq!(db.tier_stats().segments, 0, "compaction folds segments away");
+        let mut again = PatternDb::open_tiered(Some(&tmp), tier);
+        assert_eq!(again.learned_len(), 20);
+        assert!(again.lookup_learned(119, TargetKind::Gpu).is_some());
+        wipe(&tmp);
+    }
+
+    #[test]
+    fn torn_segment_tail_recovers_the_valid_prefix() {
+        let tmp = std::env::temp_dir()
+            .join(format!("envadapt_patterndb_torn_{}.txt", std::process::id()));
+        wipe(&tmp);
+        let tier = TierConfig { hot_capacity: 2, segment_records: 100, max_segments: 8 };
+        let mut db = PatternDb::open_tiered(Some(&tmp), tier);
+        for i in 0..6u64 {
+            db.insert_learned(sample_learned(200 + i, 0.2));
+            db.flush(&tmp).unwrap();
+        }
+        // tear the active segment mid-way through its last record line
+        // (a crash during append)
+        let mut os = tmp.as_os_str().to_os_string();
+        os.push(".segments");
+        let seg = std::path::PathBuf::from(os).join("seg-00000001.txt");
+        let text = std::fs::read_to_string(&seg).unwrap();
+        let cut = text.trim_end().rfind('\n').unwrap() + 10;
+        std::fs::write(&seg, &text[..cut]).unwrap();
+        let mut re = PatternDb::open_tiered(Some(&tmp), tier);
+        assert_eq!(re.learned_len(), 5, "only the half-written record is lost");
+        assert!(re.lookup_learned(204, TargetKind::Gpu).is_some());
+        assert!(re.lookup_learned(205, TargetKind::Gpu).is_none());
+        // the torn tail was truncated away, so new appends stay clean
+        re.insert_learned(sample_learned(300, 0.2));
+        re.flush(&tmp).unwrap();
+        let mut re2 = PatternDb::open_tiered(Some(&tmp), tier);
+        assert_eq!(re2.learned_len(), 6);
+        assert!(re2.lookup_learned(300, TargetKind::Gpu).is_some());
+        wipe(&tmp);
+    }
+
+    #[test]
+    fn flush_appends_instead_of_rewriting_the_base() {
+        let tmp = std::env::temp_dir()
+            .join(format!("envadapt_patterndb_append_{}.txt", std::process::id()));
+        wipe(&tmp);
+        let tier = TierConfig { hot_capacity: 1, segment_records: 10, max_segments: 8 };
+        let mut db = PatternDb::open_tiered(Some(&tmp), tier);
+        db.insert_learned(sample_learned(0x11, 0.2));
+        db.flush(&tmp).unwrap(); // still fits: plain full save
+        let base_bytes = std::fs::read(&tmp).unwrap();
+        db.insert_learned(sample_learned(0x12, 0.2));
+        db.flush(&tmp).unwrap(); // outgrown: appends a segment instead
+        assert_eq!(std::fs::read(&tmp).unwrap(), base_bytes, "append mode leaves the base alone");
+        assert_eq!(db.tier_stats().segments, 1);
+        let mut re = PatternDb::open_tiered(Some(&tmp), tier);
+        assert!(re.lookup_learned(0x11, TargetKind::Gpu).is_some());
+        assert!(re.lookup_learned(0x12, TargetKind::Gpu).is_some());
+        wipe(&tmp);
+    }
+
+    #[test]
+    fn index_counters_track_probes_and_fallbacks() {
+        let mut db = PatternDb::default();
+        db.insert_learned(sample_learned(1, 0.2));
+        db.insert_learned(sample_learned(2, 0.2));
+        let v = db.lookup_learned(1, TargetKind::Gpu).unwrap().vector;
+        assert!(db.lookup_learned_similar(&v, Lang::C, &[TargetKind::Gpu], 0.9).is_some());
+        // a threshold at/below T_MIN degenerates to the full-bucket walk
+        assert!(db.lookup_learned_similar(&v, Lang::C, &[TargetKind::Gpu], 0.1).is_some());
+        let st = db.stats();
+        assert_eq!(st.index_probes, 2, "{st:?}");
+        assert_eq!(st.index_fallbacks, 1, "{st:?}");
+        assert!(st.index_candidates >= 2, "{st:?}");
     }
 }

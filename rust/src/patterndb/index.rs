@@ -1,0 +1,282 @@
+//! Sound similarity-pruning index over characteristic vectors.
+//!
+//! `PatternDb::lookup_learned_similar` and `lookup_similar` must stay
+//! **bit-identical** to the linear scan (the differential suite in
+//! `tests/patterndb_differential.rs` enforces it), so this is not an
+//! approximate LSH: it is a deterministic candidate filter whose every
+//! pruning rule is a proved consequence of the similarity definition
+//! (`clone::similarity`), and exact similarity is still computed on
+//! whatever survives. The filter can only ever *add* work, never change
+//! an answer.
+//!
+//! Pruning rules, for `sim(q, r) = cosine(q, r) · max(0, 1 − L1/(Σq+Σr))`
+//! over non-negative count vectors and a threshold `t`:
+//!
+//! 1. `cosine ≤ 1`, so `sim ≥ t` forces `L1 ≤ (1 − t)·(Σq + Σr)`.
+//! 2. `L1 ≥ |Σq − Σr|`, so the record mass `Σr` must lie in the window
+//!    `[Σq·t/(2−t), Σq·(2−t)/t]` — a range query over mass.
+//! 3. `L1 ≥ Σ_k |Δband_k|` for any partition of dimensions into bands
+//!    (triangle inequality inside each band), which both caps the
+//!    record's band-0 share of mass (a second index dimension) and
+//!    gives the cheap [`may_reach`] post-filter.
+//!
+//! Records sit in a `BTreeSet` ordered by `(bucket, mass stratum,
+//! band-0 cell, mass bits, id)`: a probe enumerates the few strata and
+//! cells the window can touch and range-scans each, so probe cost is
+//! governed by the threshold, not the record count — the "flat at 1M
+//! records" property `BENCH_patterndb.json` gates. Every bound is
+//! widened by [`WIDEN`] (and strata/cells by ±1) so float rounding can
+//! only admit extra candidates, never drop a qualifying record.
+
+use crate::clone::CharVec;
+use std::collections::BTreeSet;
+
+/// Number of interleaved vector bands folded into a [`Sig`] (band `k`
+/// sums dimensions `i` with `i % BANDS == k`).
+pub(crate) const BANDS: usize = 4;
+
+/// Geometric growth factor of the mass strata (ln-space bucket width).
+const STRATUM_BASE: f64 = 1.25;
+
+/// Band-0-ratio cells per stratum.
+const CELLS: u8 = 8;
+
+/// Below this threshold the mass window of rule 2 is too wide to prune
+/// usefully; the probe falls back to a full-bucket range walk, which is
+/// still exact (counted by the `index_fallbacks` metric).
+pub(crate) const T_MIN: f64 = 0.35;
+
+/// Relative widening applied to every pruning bound: rounding error can
+/// only ever ADD candidates, never exclude a qualifying record.
+const WIDEN: f64 = 1e-9;
+
+/// A record's pruning signature: total vector mass plus [`BANDS`]
+/// interleaved partial sums. For the integer count vectors clone
+/// detection produces these sums are exact in f64.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub(crate) struct Sig {
+    mass: f64,
+    bands: [f64; BANDS],
+}
+
+impl Sig {
+    pub(crate) fn of(v: &CharVec) -> Sig {
+        let mut bands = [0.0; BANDS];
+        let mut mass = 0.0;
+        for (i, &x) in v.iter().enumerate() {
+            mass += x;
+            bands[i % BANDS] += x;
+        }
+        Sig { mass, bands }
+    }
+
+    pub(crate) fn mass(&self) -> f64 {
+        self.mass
+    }
+}
+
+/// Cheap signature-level refutation of `sim(q, r) ≥ threshold` (rule 3:
+/// per-band `|Δ|` sums lower-bound the true L1 distance). `false` is a
+/// proof the pair cannot reach the threshold; `true` just means "compute
+/// the exact similarity".
+pub(crate) fn may_reach(q: &Sig, r: &Sig, threshold: f64) -> bool {
+    if threshold <= 0.0 {
+        return true; // sim ≥ 0 always holds for count vectors
+    }
+    let mass = q.mass + r.mass;
+    if mass <= 0.0 {
+        return true;
+    }
+    let mut l1 = 0.0;
+    for k in 0..BANDS {
+        l1 += (q.bands[k] - r.bands[k]).abs();
+    }
+    1.0 - l1 / mass + WIDEN >= threshold
+}
+
+/// Ordered probe key: `(bucket, mass stratum, band-0 cell, mass bits,
+/// record id)`. `f64::to_bits` is monotone for non-negative finite
+/// values, so a `BTreeSet` range over the bits is a range over mass.
+type ProbeKey = (u32, i32, u8, u64, u32);
+
+/// The index proper: one ordered set shared by every bucket.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct SimIndex {
+    set: BTreeSet<ProbeKey>,
+}
+
+fn stratum(mass: f64) -> i32 {
+    // mass > 0 by construction (zero-mass vectors are never indexed);
+    // the `as` cast saturates, so extreme masses stay well-defined
+    (mass.ln() / STRATUM_BASE.ln()).floor() as i32
+}
+
+fn ratio_cell(ratio: f64) -> u8 {
+    ((ratio * CELLS as f64) as i64).clamp(0, CELLS as i64 - 1) as u8
+}
+
+fn cell(sig: &Sig) -> u8 {
+    ratio_cell(sig.bands[0] / sig.mass)
+}
+
+impl SimIndex {
+    fn key(bucket: u32, sig: &Sig, id: u32) -> ProbeKey {
+        (bucket, stratum(sig.mass), cell(sig), sig.mass.to_bits(), id)
+    }
+
+    /// Index `id` under `bucket`. Callers must not insert signatures
+    /// without positive mass — the scan path skips those records, so
+    /// indexing them would break scan/index equivalence (and `stratum`
+    /// needs `mass > 0`).
+    pub(crate) fn insert(&mut self, bucket: u32, sig: &Sig, id: u32) {
+        debug_assert!(sig.mass > 0.0, "zero-mass vectors are not indexed");
+        self.set.insert(Self::key(bucket, sig, id));
+    }
+
+    /// Un-index `id` (the key is recomputed, so the exact `sig` the
+    /// record was inserted with must be passed back).
+    pub(crate) fn remove(&mut self, bucket: u32, sig: &Sig, id: u32) {
+        self.set.remove(&Self::key(bucket, sig, id));
+    }
+
+    #[cfg(test)]
+    fn len(&self) -> usize {
+        self.set.len()
+    }
+
+    /// Collect into `out` every id in `bucket` that could score ≥
+    /// `threshold` against a query with signature `q`; the caller
+    /// computes exact similarity only on what this returns. Returns
+    /// `true` when the probe degenerated to a full-bucket walk (a
+    /// non-positive-mass query, or a threshold at or below [`T_MIN`]).
+    pub(crate) fn candidates(
+        &self,
+        bucket: u32,
+        q: &Sig,
+        threshold: f64,
+        out: &mut Vec<u32>,
+    ) -> bool {
+        out.clear();
+        if q.mass.is_nan() || q.mass <= 0.0 || threshold <= T_MIN {
+            let lo = (bucket, i32::MIN, 0u8, 0u64, 0u32);
+            let hi = (bucket, i32::MAX, u8::MAX, u64::MAX, u32::MAX);
+            out.extend(self.set.range(lo..=hi).map(|k| k.4));
+            return true;
+        }
+        // rule 2: the record mass window, widened against rounding
+        let lo_mass = q.mass * threshold / (2.0 - threshold) * (1.0 - WIDEN);
+        let hi_mass = q.mass * (2.0 - threshold) / threshold * (1.0 + WIDEN);
+        // rule 3 on band 0: |Δband₀| ≤ L1 ≤ (1 − t)(Σq + Σr) caps the
+        // record's band-0 share of its own mass to a cell range
+        let delta0 = (1.0 - threshold) * (q.mass + hi_mass) * (1.0 + WIDEN);
+        let r_lo = ((q.bands[0] - delta0).max(0.0) / hi_mass) * (1.0 - WIDEN);
+        let r_hi = ((q.bands[0] + delta0) / lo_mass) * (1.0 + WIDEN);
+        let c_lo = ratio_cell(r_lo).saturating_sub(1);
+        let c_hi = ratio_cell(r_hi.min(1.0)).saturating_add(1).min(CELLS - 1);
+        let s_lo = stratum(lo_mass) - 1;
+        let s_hi = stratum(hi_mass) + 1;
+        let (lo_bits, hi_bits) = (lo_mass.to_bits(), hi_mass.to_bits());
+        for s in s_lo..=s_hi {
+            for c in c_lo..=c_hi {
+                let from = (bucket, s, c, lo_bits, 0u32);
+                let to = (bucket, s, c, hi_bits, u32::MAX);
+                out.extend(self.set.range(from..=to).map(|k| k.4));
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clone::similarity;
+    use crate::ir::NODE_KIND_COUNT;
+    use crate::util::Rng;
+
+    fn random_vec(rng: &mut Rng) -> CharVec {
+        let mut v = [0.0; NODE_KIND_COUNT];
+        for _ in 0..1 + rng.below(6) {
+            v[rng.below(NODE_KIND_COUNT)] += (1 + rng.below(9)) as f64;
+        }
+        // occasional big-mass outliers spread records across strata
+        if rng.chance(0.2) {
+            v[rng.below(NODE_KIND_COUNT)] += (10 + rng.below(500)) as f64;
+        }
+        v
+    }
+
+    #[test]
+    fn probe_never_drops_a_qualifying_record() {
+        let mut rng = Rng::new(0xC0FFEE);
+        let vecs: Vec<CharVec> = (0..400).map(|_| random_vec(&mut rng)).collect();
+        let sigs: Vec<Sig> = vecs.iter().map(Sig::of).collect();
+        let mut idx = SimIndex::default();
+        for (i, s) in sigs.iter().enumerate() {
+            if s.mass() > 0.0 {
+                idx.insert(0, s, i as u32);
+            }
+        }
+        let mut out = Vec::new();
+        for case in 0..300 {
+            let q = random_vec(&mut rng);
+            let qs = Sig::of(&q);
+            let t = [0.36, 0.5, 0.75, 0.9, 0.99, 1.0][case % 6];
+            idx.candidates(0, &qs, t, &mut out);
+            for (i, v) in vecs.iter().enumerate() {
+                let qualifies = sigs[i].mass() > 0.0 && similarity(&q, v) >= t;
+                assert!(
+                    !qualifies || out.contains(&(i as u32)),
+                    "record {i} qualifies at t={t} but was pruned"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn low_thresholds_fall_back_to_the_whole_bucket() {
+        let mut rng = Rng::new(7);
+        let mut idx = SimIndex::default();
+        let mut n = 0u32;
+        for _ in 0..50 {
+            let s = Sig::of(&random_vec(&mut rng));
+            if s.mass() > 0.0 {
+                idx.insert(3, &s, n);
+                n += 1;
+            }
+        }
+        let q = Sig::of(&random_vec(&mut rng));
+        let mut out = Vec::new();
+        assert!(idx.candidates(3, &q, 0.1, &mut out), "at or below T_MIN must fall back");
+        assert_eq!(out.len() as u32, n, "the fallback visits the whole bucket");
+        assert!(!idx.candidates(3, &q, 0.9, &mut out), "a tight threshold prunes");
+        // other buckets are never visited, even by the fallback walk
+        assert!(idx.candidates(9, &q, 0.1, &mut out) && out.is_empty());
+    }
+
+    #[test]
+    fn may_reach_is_an_upper_bound_on_similarity() {
+        let mut rng = Rng::new(42);
+        for _ in 0..500 {
+            let (a, b) = (random_vec(&mut rng), random_vec(&mut rng));
+            let s = similarity(&a, &b);
+            for t in [0.4, 0.6, 0.8, 0.95] {
+                if s >= t {
+                    assert!(may_reach(&Sig::of(&a), &Sig::of(&b), t), "sim {s} ≥ {t} refuted");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn remove_unindexes_a_record() {
+        let mut v = [0.0; NODE_KIND_COUNT];
+        v[0] = 5.0;
+        let s = Sig::of(&v);
+        let mut idx = SimIndex::default();
+        idx.insert(1, &s, 9);
+        assert_eq!(idx.len(), 1);
+        idx.remove(1, &s, 9);
+        assert_eq!(idx.len(), 0);
+    }
+}

@@ -1,0 +1,228 @@
+//! Tiered persistence for the pattern DB: the base file plus
+//! append-only segments.
+//!
+//! Small DBs keep the old behavior — one plain-text file rewritten on
+//! every save. Once the DB outgrows its hot capacity (or segments
+//! already exist on disk), `PatternDb::flush` appends only the dirty
+//! records to `<base>.segments/seg-NNNNNNNN.txt` files in the same v3
+//! line format, rolling a new segment every [`TierConfig::segment_records`]
+//! lines; when more than [`TierConfig::max_segments`] accumulate, a full
+//! save compacts everything back into the base file (duplicate keys
+//! resolved by the existing merge semantics: the faster plan wins).
+//! Every persisted record remembers its [`SegLoc`] so a demoted (cold)
+//! record can be re-read with one seek when a lookup needs it.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, BufRead, BufReader, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// First line of every append-only segment file.
+pub(crate) const SEGMENT_HEADER: &str = "# envadapt pattern DB segment v3\n";
+
+/// Tiering knobs (see `docs/OPERATIONS.md` "Capacity planning" for how
+/// to size these against memory and lookup-latency budgets).
+#[derive(Debug, Clone, Copy)]
+pub struct TierConfig {
+    /// Learned records kept fully materialized in memory; beyond this,
+    /// persisted records are demoted to cold (resident metadata only)
+    /// oldest-first. Records not yet on disk are never demoted.
+    pub hot_capacity: usize,
+    /// Records per append-only segment before rolling a new one.
+    pub segment_records: usize,
+    /// Segment count that triggers compaction back into the base file.
+    pub max_segments: usize,
+}
+
+impl Default for TierConfig {
+    fn default() -> TierConfig {
+        TierConfig { hot_capacity: 100_000, segment_records: 25_000, max_segments: 16 }
+    }
+}
+
+/// Where a persisted record line starts: `file` 0 is the base DB file,
+/// 1.. are the append-only segments in creation order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct SegLoc {
+    pub file: u32,
+    pub offset: u64,
+}
+
+/// The on-disk side of the tier: the base file plus discovered/created
+/// segment files. Owns no file handles — every operation opens, works
+/// and closes, so a `PatternDb` stays freely movable across threads.
+#[derive(Debug, Clone)]
+pub(crate) struct SegmentStore {
+    base: PathBuf,
+    dir: PathBuf,
+    /// `files[0]` is the base file; the rest are segments, oldest first.
+    files: Vec<PathBuf>,
+    /// Records already in the newest segment (the append target).
+    active_len: usize,
+    /// Next segment sequence number — never reused, even after
+    /// compaction, so a crashed unlink cannot resurrect stale data
+    /// under a fresh segment's name.
+    next_seq: u64,
+}
+
+impl SegmentStore {
+    /// Attach to `base`, discovering any existing
+    /// `<base>.segments/seg-*.txt` files (sorted by sequence number).
+    pub(crate) fn open(base: &Path) -> SegmentStore {
+        let mut os = base.as_os_str().to_os_string();
+        os.push(".segments");
+        let dir = PathBuf::from(os);
+        let mut segs: Vec<(u64, PathBuf)> = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(&dir) {
+            for entry in entries.flatten() {
+                let name = entry.file_name();
+                let Some(name) = name.to_str() else { continue };
+                if let Some(seq) = name
+                    .strip_prefix("seg-")
+                    .and_then(|s| s.strip_suffix(".txt"))
+                    .and_then(|s| s.parse::<u64>().ok())
+                {
+                    segs.push((seq, entry.path()));
+                }
+            }
+        }
+        segs.sort();
+        let next_seq = segs.last().map(|(seq, _)| seq + 1).unwrap_or(1);
+        let mut files = vec![base.to_path_buf()];
+        files.extend(segs.into_iter().map(|(_, p)| p));
+        SegmentStore { base: base.to_path_buf(), dir, files, active_len: 0, next_seq }
+    }
+
+    pub(crate) fn base(&self) -> &Path {
+        &self.base
+    }
+
+    pub(crate) fn segment_count(&self) -> usize {
+        self.files.len() - 1
+    }
+
+    /// Path of file index `idx` (0 = base, 1.. = segments).
+    pub(crate) fn file(&self, idx: u32) -> &Path {
+        &self.files[idx as usize]
+    }
+
+    /// Record how many records the newest segment already holds (set by
+    /// the loader after parsing it) so appends roll over correctly.
+    pub(crate) fn set_active_len(&mut self, n: usize) {
+        self.active_len = n;
+    }
+
+    /// Append record lines (no trailing newline) to the active segment,
+    /// rolling a new one whenever `cap` records are reached. Returns
+    /// one [`SegLoc`] per line — the exact byte offset it starts at.
+    pub(crate) fn append(&mut self, lines: &[String], cap: usize) -> io::Result<Vec<SegLoc>> {
+        let cap = cap.max(1);
+        let mut locs = Vec::with_capacity(lines.len());
+        let mut i = 0usize;
+        while i < lines.len() {
+            if self.segment_count() == 0 || self.active_len >= cap {
+                self.roll()?;
+            }
+            let take = (cap - self.active_len).min(lines.len() - i);
+            let file_idx = (self.files.len() - 1) as u32;
+            let mut f = OpenOptions::new().append(true).open(&self.files[file_idx as usize])?;
+            let mut offset = f.metadata()?.len();
+            for line in &lines[i..i + take] {
+                f.write_all(line.as_bytes())?;
+                f.write_all(b"\n")?;
+                locs.push(SegLoc { file: file_idx, offset });
+                offset += line.len() as u64 + 1;
+            }
+            self.active_len += take;
+            i += take;
+        }
+        Ok(locs)
+    }
+
+    fn roll(&mut self) -> io::Result<()> {
+        std::fs::create_dir_all(&self.dir)?;
+        let path = self.dir.join(format!("seg-{:08}.txt", self.next_seq));
+        std::fs::write(&path, SEGMENT_HEADER)?;
+        self.next_seq += 1;
+        self.files.push(path);
+        self.active_len = 0;
+        Ok(())
+    }
+
+    /// Read back the single record line starting at `loc`.
+    pub(crate) fn read_line_at(&self, loc: SegLoc) -> io::Result<String> {
+        let path = self
+            .files
+            .get(loc.file as usize)
+            .ok_or_else(|| io::Error::new(io::ErrorKind::NotFound, "no such DB file"))?;
+        let mut f = File::open(path)?;
+        f.seek(SeekFrom::Start(loc.offset))?;
+        let mut buf = Vec::new();
+        BufReader::new(f).read_until(b'\n', &mut buf)?;
+        let line = String::from_utf8(buf)
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "record line is not UTF-8"))?;
+        Ok(line.trim_end_matches('\n').trim_end_matches('\r').to_string())
+    }
+
+    /// Drop every segment file after a compaction folded them into the
+    /// base file. Unlink failures are reported, never fatal — a leftover
+    /// segment merely re-merges (idempotently) on the next open.
+    pub(crate) fn clear_segments(&mut self) {
+        for p in self.files.drain(1..) {
+            if let Err(e) = std::fs::remove_file(&p) {
+                eprintln!("warning: could not remove pattern DB segment {}: {e}", p.display());
+            }
+        }
+        let _ = std::fs::remove_dir(&self.dir); // succeeds only when empty
+        self.active_len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpbase(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("envadapt_tier_{tag}_{}.txt", std::process::id()))
+    }
+
+    fn cleanup(base: &Path) {
+        let mut os = base.as_os_str().to_os_string();
+        os.push(".segments");
+        let _ = std::fs::remove_dir_all(PathBuf::from(os));
+        let _ = std::fs::remove_file(base);
+    }
+
+    #[test]
+    fn append_rolls_segments_and_reports_exact_offsets() {
+        let base = tmpbase("roll");
+        cleanup(&base);
+        let mut store = SegmentStore::open(&base);
+        let lines: Vec<String> = (0..10).map(|i| format!("record-{i}|x")).collect();
+        let locs = store.append(&lines, 4).unwrap();
+        assert_eq!(store.segment_count(), 3, "10 lines at 4/segment → 3 segments");
+        for (line, loc) in lines.iter().zip(&locs) {
+            assert!(loc.file >= 1, "appends never target the base file");
+            assert_eq!(&store.read_line_at(*loc).unwrap(), line);
+        }
+        // reopening rediscovers the same segment files, in order
+        let store2 = SegmentStore::open(&base);
+        assert_eq!(store2.segment_count(), 3);
+        assert_eq!(store2.read_line_at(locs[9]).unwrap(), lines[9]);
+        cleanup(&base);
+    }
+
+    #[test]
+    fn clear_segments_removes_files_without_reusing_names() {
+        let base = tmpbase("clear");
+        cleanup(&base);
+        let mut store = SegmentStore::open(&base);
+        store.append(&["a|b".to_string()], 4).unwrap();
+        let old = store.file(1).to_path_buf();
+        store.clear_segments();
+        assert!(!old.exists());
+        assert_eq!(store.segment_count(), 0);
+        store.append(&["c|d".to_string()], 4).unwrap();
+        assert_ne!(store.file(1), old.as_path(), "sequence numbers are never reused");
+        cleanup(&base);
+    }
+}

@@ -192,11 +192,12 @@ impl Inner {
             queue_depth: self.queue.lock().unwrap().jobs.len(),
             queue_capacity: self.queue_capacity,
             connections_open: self.connections.load(Ordering::Relaxed) as usize,
-            learned_records: self.db.lock().unwrap().learned_len(),
             cache_entries,
             cache_hits,
             cache_misses,
+            ..Gauges::default()
         }
+        .with_db(&self.db.lock().unwrap())
     }
 }
 
@@ -382,7 +383,7 @@ impl Service {
         // drain contract: learned state is durable once shutdown returns
         // (inserts already save incrementally; this covers the tail)
         if let Some(path) = &self.inner.db_path {
-            let _ = self.inner.db.lock().unwrap().save(path);
+            let _ = self.inner.db.lock().unwrap().flush(path);
         }
         let _ = self.inner.cache.lock().unwrap().save();
     }

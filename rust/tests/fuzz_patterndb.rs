@@ -1,0 +1,240 @@
+//! Pattern-DB persistence robustness: hostile on-disk state — garbage
+//! bytes, truncated files, torn segment tails, non-UTF-8 content —
+//! must load cleanly (valid-prefix recovery) or error cleanly, never
+//! panic, never poison the builtin catalogue, and never silently drop
+//! records that were durably flushed before the corruption.
+
+use envadapt::device::TargetKind;
+use envadapt::ir::{Lang, NODE_KIND_COUNT};
+use envadapt::patterndb::{LearnedPlan, PatternDb, PatternRecord, TierConfig};
+use envadapt::util::Rng;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("envadapt_fuzzdb_{}_{}.txt", name, std::process::id()))
+}
+
+fn segments_dir(base: &Path) -> PathBuf {
+    let mut os = base.as_os_str().to_os_string();
+    os.push(".segments");
+    PathBuf::from(os)
+}
+
+fn wipe(base: &Path) {
+    let _ = std::fs::remove_dir_all(segments_dir(base));
+    let _ = std::fs::remove_file(base);
+}
+
+/// A small learned record with fingerprint `fp` (single target, C).
+fn rec(fp: u64) -> PatternRecord {
+    let mut v = [0.0; NODE_KIND_COUNT];
+    v[(fp as usize) % NODE_KIND_COUNT] = 1.0 + (fp % 7) as f64;
+    v[(fp as usize * 13 + 5) % NODE_KIND_COUNT] += 2.0;
+    let plan = LearnedPlan {
+        fingerprint: fp,
+        lang: Lang::C,
+        target: TargetKind::Gpu,
+        devices: vec![TargetKind::Gpu],
+        gene: vec![true],
+        gene_loops: vec![1],
+        funcblocks: Vec::new(),
+        fb_dests: Vec::new(),
+        baseline_s: 2.0,
+        final_s: 0.5,
+    };
+    PatternRecord::from_learned(format!("fuzz {fp:x}"), v, plan)
+}
+
+fn builtin_intact(db: &PatternDb) {
+    assert!(db.lookup_name("matmul").is_some(), "builtin catalogue lost");
+    assert_eq!(db.len(), PatternDb::builtin().len(), "catalogue record count drifted");
+}
+
+#[test]
+fn random_garbage_base_files_never_panic() {
+    let base = tmp("garbage");
+    let pool: Vec<u8> = (b' '..=b'~').chain([b'|', b'\n', b'\r', b'\t', 0u8, 0xFF, 0xC3]).collect();
+    let mut rng = Rng::new(0xBAD5EED);
+    for case in 0..250 {
+        wipe(&base);
+        let len = rng.below(400);
+        let bytes: Vec<u8> = (0..len).map(|_| *rng.choose(&pool)).collect();
+        std::fs::write(&base, &bytes).unwrap();
+
+        // lenient open: garbage is warned about and ignored, the builtin
+        // catalogue survives, and no learned records are invented
+        let db = PatternDb::open_or_builtin(Some(&base));
+        builtin_intact(&db);
+
+        // strict load terminates with Ok (an all-blank file) or a clean
+        // Err — either way, no panic
+        let _ = PatternDb::load(&base);
+
+        // garbage must also be survivable as a *segment* of a valid base
+        if case % 10 == 0 {
+            wipe(&base);
+            let mut db = PatternDb::open_tiered(
+                Some(&base),
+                TierConfig { hot_capacity: 1, segment_records: 100, max_segments: 8 },
+            );
+            db.insert_learned(rec(0x900));
+            db.insert_learned(rec(0x901));
+            db.flush(&base).unwrap();
+            let dir = segments_dir(&base);
+            std::fs::create_dir_all(&dir).unwrap();
+            std::fs::write(dir.join("seg-00009999.txt"), &bytes).unwrap();
+            let mut again = PatternDb::open_or_builtin(Some(&base));
+            builtin_intact(&again);
+            assert!(
+                again.lookup_learned(0x900, TargetKind::Gpu).is_some(),
+                "valid records must survive a garbage sibling segment"
+            );
+            assert!(again.lookup_learned(0x901, TargetKind::Gpu).is_some());
+        }
+    }
+    wipe(&base);
+}
+
+#[test]
+fn truncated_base_files_never_panic_and_never_invent_records() {
+    let base = tmp("truncated");
+    wipe(&base);
+    let mut db = PatternDb::builtin();
+    for fp in 0..30u64 {
+        db.insert_learned(rec(0x500 + fp));
+    }
+    db.save(&base).unwrap();
+    let bytes = std::fs::read(&base).unwrap();
+
+    let mut rng = Rng::new(0x7C07);
+    for _ in 0..120 {
+        let cut = rng.below(bytes.len() + 1);
+        std::fs::write(&base, &bytes[..cut]).unwrap();
+        let loaded = PatternDb::open_or_builtin(Some(&base));
+        builtin_intact(&loaded);
+        // a cut at a line boundary loads that valid prefix; a cut
+        // mid-line makes the strict base parse ignore the whole file —
+        // either way no record is ever invented
+        assert!(
+            loaded.learned_len() <= 30,
+            "a truncated base must not invent records: {} loaded",
+            loaded.learned_len()
+        );
+        let _ = PatternDb::load(&base);
+    }
+    wipe(&base);
+}
+
+#[test]
+fn torn_segment_tails_keep_every_record_before_the_tear() {
+    let base = tmp("torn");
+    let tier = TierConfig { hot_capacity: 2, segment_records: 100, max_segments: 8 };
+    let mut rng = Rng::new(0x7EA6);
+    for garbage_len in [1usize, 7, 40] {
+        wipe(&base);
+        let mut db = PatternDb::open_tiered(Some(&base), tier);
+        for fp in 0..12u64 {
+            db.insert_learned(rec(0x700 + fp));
+            db.flush(&base).unwrap();
+        }
+        assert!(db.tier_stats().segments >= 1, "the tiny hot tier must have spilled");
+
+        // tear the active segment: append garbage (a crash mid-append)
+        let dir = segments_dir(&base);
+        let mut segs: Vec<PathBuf> =
+            std::fs::read_dir(&dir).unwrap().map(|e| e.unwrap().path()).collect();
+        segs.sort();
+        let active = segs.last().unwrap().clone();
+        let mut f = std::fs::OpenOptions::new().append(true).open(&active).unwrap();
+        let garbage: Vec<u8> = (0..garbage_len).map(|_| (rng.below(26) + 97) as u8).collect();
+        f.write_all(&garbage).unwrap();
+        drop(f);
+
+        // reopen: every record flushed before the tear is still there
+        let mut reopened = PatternDb::open_tiered(Some(&base), tier);
+        builtin_intact(&reopened);
+        assert_eq!(reopened.learned_len(), 12, "no flushed record may be lost to the tear");
+        for fp in 0..12u64 {
+            let r = reopened.lookup_learned(0x700 + fp, TargetKind::Gpu);
+            assert!(r.is_some(), "record {fp} lost after the torn tail");
+        }
+
+        // the torn tail was truncated away, so appends stay clean
+        reopened.insert_learned(rec(0x7FF));
+        reopened.flush(&base).unwrap();
+        let mut after = PatternDb::open_tiered(Some(&base), tier);
+        assert_eq!(after.learned_len(), 13);
+        assert!(after.lookup_learned(0x7FF, TargetKind::Gpu).is_some());
+    }
+    wipe(&base);
+}
+
+#[test]
+fn corrupt_middle_segments_do_not_take_later_segments_down() {
+    let base = tmp("middle");
+    // one record per segment: many segments to corrupt in the middle
+    let tier = TierConfig { hot_capacity: 1, segment_records: 2, max_segments: 50 };
+    wipe(&base);
+    let mut db = PatternDb::open_tiered(Some(&base), tier);
+    for fp in 0..10u64 {
+        db.insert_learned(rec(0x800 + fp));
+        db.flush(&base).unwrap();
+    }
+    let total = db.learned_len();
+    let segments = db.tier_stats().segments;
+    assert!(segments >= 3, "need several segments, got {segments}");
+    drop(db);
+
+    // append a malformed line to a middle (non-active) segment: its own
+    // records stay, later segments still load, nothing panics
+    let dir = segments_dir(&base);
+    let mut segs: Vec<PathBuf> = std::fs::read_dir(&dir).unwrap().map(|e| e.unwrap().path()).collect();
+    segs.sort();
+    let middle = segs[segs.len() / 2].clone();
+    let mut f = std::fs::OpenOptions::new().append(true).open(&middle).unwrap();
+    f.write_all(b"not|a|record\n").unwrap();
+    drop(f);
+
+    let mut reopened = PatternDb::open_tiered(Some(&base), tier);
+    builtin_intact(&reopened);
+    assert_eq!(
+        reopened.learned_len(),
+        total,
+        "a torn middle segment must not drop its own or later records"
+    );
+    for fp in 0..10u64 {
+        assert!(reopened.lookup_learned(0x800 + fp, TargetKind::Gpu).is_some(), "lost {fp}");
+    }
+    wipe(&base);
+}
+
+#[test]
+fn non_utf8_segments_are_skipped_without_losing_the_base() {
+    let base = tmp("nonutf8");
+    let tier = TierConfig { hot_capacity: 10, segment_records: 100, max_segments: 8 };
+    wipe(&base);
+    let mut db = PatternDb::open_tiered(Some(&base), tier);
+    for fp in 0..4u64 {
+        db.insert_learned(rec(0xA00 + fp));
+    }
+    db.save(&base).unwrap(); // all four live in the base file
+    drop(db);
+
+    let dir = segments_dir(&base);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("seg-00000001.txt"), [0xFFu8, 0xFE, 0x80, 0x81]).unwrap();
+
+    let mut reopened = PatternDb::open_tiered(Some(&base), tier);
+    builtin_intact(&reopened);
+    assert_eq!(reopened.learned_len(), 4, "base records must survive a binary segment");
+    for fp in 0..4u64 {
+        assert!(reopened.lookup_learned(0xA00 + fp, TargetKind::Gpu).is_some());
+    }
+    // and the store still accepts new work without touching the bad file
+    reopened.insert_learned(rec(0xAFF));
+    reopened.flush(&base).unwrap();
+    let mut after = PatternDb::open_tiered(Some(&base), tier);
+    assert!(after.lookup_learned(0xAFF, TargetKind::Gpu).is_some());
+    wipe(&base);
+}

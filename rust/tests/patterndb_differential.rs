@@ -1,0 +1,325 @@
+//! Differential suite for the indexed, tiered pattern DB: every indexed
+//! lookup must be **bit-identical** to its linear-scan reference (the
+//! `*_scan` methods) — same record, same score bits — on random DBs, at
+//! boundary thresholds (including the winning score itself and one ulp
+//! above it), and across the whole persistence journey: save → load,
+//! tiered open with a tiny hot tier, incremental flushes into segments,
+//! and compaction back into the base file.
+//!
+//! The random record population mixes synthetic sparse vectors with
+//! characteristic vectors of real random programs (the shared generator
+//! in `tests/common/`), so the index is exercised on the same vector
+//! shapes the coordinator produces.
+
+mod common;
+
+use envadapt::clone::{char_vector_program, CharVec};
+use envadapt::device::TargetKind;
+use envadapt::frontend::parse;
+use envadapt::ir::{Lang, NODE_KIND_COUNT};
+use envadapt::patterndb::{LearnedPlan, PatternDb, PatternRecord, TierConfig};
+use envadapt::util::Rng;
+use std::path::{Path, PathBuf};
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("envadapt_diff_{}_{}.txt", name, std::process::id()))
+}
+
+/// Remove a DB base file and its segment directory.
+fn wipe(path: &Path) {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".segments");
+    let _ = std::fs::remove_dir_all(PathBuf::from(os));
+    let _ = std::fs::remove_file(path);
+}
+
+fn device_sets() -> Vec<Vec<TargetKind>> {
+    vec![
+        vec![TargetKind::Gpu],
+        vec![TargetKind::ManyCore],
+        vec![TargetKind::Fpga],
+        vec![TargetKind::Gpu, TargetKind::ManyCore],
+    ]
+}
+
+/// A sparse random characteristic vector; occasionally all-zero (a
+/// degenerate record with no comparison vector — must never match).
+fn random_vector(rng: &mut Rng) -> CharVec {
+    let mut v = [0.0; NODE_KIND_COUNT];
+    if rng.chance(0.03) {
+        return v;
+    }
+    for _ in 0..1 + rng.below(6) {
+        v[rng.below(NODE_KIND_COUNT)] += (1 + rng.below(9)) as f64;
+    }
+    if rng.chance(0.1) {
+        v[rng.below(NODE_KIND_COUNT)] += (10 + rng.below(200)) as f64;
+    }
+    v
+}
+
+/// A learned record with a random (but well-formed) plan.
+fn record(rng: &mut Rng, fp: u64, lang: Lang, devices: &[TargetKind], v: CharVec) -> PatternRecord {
+    let funcblocks: Vec<String> =
+        if rng.chance(0.3) { vec![format!("fb{}", rng.below(4))] } else { Vec::new() };
+    let fb_dests = vec![devices[0]; funcblocks.len()];
+    let plan = LearnedPlan {
+        fingerprint: fp,
+        lang,
+        target: devices[0],
+        devices: devices.to_vec(),
+        gene: (0..devices.len()).map(|_| rng.bool()).collect(),
+        gene_loops: vec![rng.below(8)],
+        funcblocks,
+        fb_dests,
+        baseline_s: 1.0 + rng.f64(),
+        final_s: 0.1 + rng.f64(),
+    };
+    PatternRecord::from_learned(format!("random program {fp:x}"), v, plan)
+}
+
+/// Random learned records: unique keys when `unique` (so persistence
+/// round-trips are unambiguous), otherwise with occasional duplicate
+/// fingerprints to exercise in-memory replacement.
+fn random_records(rng: &mut Rng, n: usize, unique: bool) -> Vec<PatternRecord> {
+    let sets = device_sets();
+    let mut recs = Vec::new();
+    for i in 0..n {
+        let lang = *rng.choose(&Lang::all());
+        let devices = rng.choose(&sets).clone();
+        let fp = if !unique && i > 0 && rng.chance(0.05) {
+            0x1000 + rng.below(i) as u64
+        } else {
+            0x1000 + i as u64
+        };
+        let v = random_vector(rng);
+        recs.push(record(rng, fp, lang, &devices, v));
+    }
+    recs
+}
+
+/// Both answers for one learned-similarity query, reduced to owned
+/// `(key, score bits)` so they can be compared across `&mut` calls.
+fn sim_answers(
+    db: &mut PatternDb,
+    v: &CharVec,
+    lang: Lang,
+    devices: &[TargetKind],
+    t: f64,
+) -> (Option<(String, u64)>, Option<(String, u64)>) {
+    let idx = db.lookup_learned_similar(v, lang, devices, t).map(|(r, s)| (r.key.clone(), s.to_bits()));
+    let scan =
+        db.lookup_learned_similar_scan(v, lang, devices, t).map(|(r, s)| (r.key.clone(), s.to_bits()));
+    (idx, scan)
+}
+
+const THRESHOLDS: [f64; 9] = [0.0, 0.2, 0.35, 0.36, 0.5, 0.75, 0.9, 0.99, 1.0];
+
+#[test]
+fn indexed_similarity_is_bit_identical_to_the_scan() {
+    let mut rng = Rng::new(0xD1FF);
+    for &n in &[3usize, 25, 120, 400] {
+        let recs = random_records(&mut rng, n, false);
+        let vectors: Vec<CharVec> = recs.iter().map(|r| r.vector).collect();
+        let mut db = PatternDb::builtin();
+        for r in recs {
+            db.insert_learned(r);
+        }
+        let sets = device_sets();
+        for _q in 0..150 {
+            // half the queries replay a stored vector (exact-score hits),
+            // half are fresh randoms (misses and near-misses)
+            let v = if rng.bool() {
+                vectors[rng.below(vectors.len())]
+            } else {
+                random_vector(&mut rng)
+            };
+            let lang = *rng.choose(&Lang::all());
+            let devices = rng.choose(&sets).clone();
+            let t = *rng.choose(&THRESHOLDS);
+            let (idx, scan) = sim_answers(&mut db, &v, lang, &devices, t);
+            assert_eq!(idx, scan, "n={n} t={t} lang={lang} devices={devices:?}");
+
+            // boundary thresholds: exactly the winning score (the record
+            // must still qualify, `>=` in both paths) and one ulp above
+            // it (both paths must agree on whoever remains)
+            if let Some((_, bits)) = scan {
+                let s = f64::from_bits(bits);
+                let (at, at_scan) = sim_answers(&mut db, &v, lang, &devices, s);
+                assert_eq!(at, at_scan, "at the exact winning score");
+                assert!(at_scan.is_some(), "the winner must qualify at its own score");
+                let above = f64::from_bits(bits + 1);
+                let (up, up_scan) = sim_answers(&mut db, &v, lang, &devices, above);
+                assert_eq!(up, up_scan, "one ulp above the winning score");
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_vector_queries_agree_on_both_paths() {
+    let mut rng = Rng::new(0x0E20);
+    let recs = random_records(&mut rng, 80, false);
+    let mut db = PatternDb::builtin();
+    for r in recs {
+        db.insert_learned(r);
+    }
+    let zero = [0.0; NODE_KIND_COUNT];
+    let sets = device_sets();
+    for lang in Lang::all() {
+        for devices in &sets {
+            for t in THRESHOLDS {
+                let (idx, scan) = sim_answers(&mut db, &zero, lang, devices, t);
+                assert_eq!(idx, scan, "zero-vector query t={t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn catalogue_similarity_is_bit_identical_to_the_scan() {
+    let db = PatternDb::builtin();
+    let mut rng = Rng::new(0xCA7A);
+    let own: Vec<CharVec> = db.records().iter().map(|r| r.vector).collect();
+    for q in 0..300 {
+        let v = if q < own.len() { own[q] } else { random_vector(&mut rng) };
+        for t in THRESHOLDS {
+            let idx = db.lookup_similar(&v, t).map(|(r, s)| (r.key.clone(), s.to_bits()));
+            let scan = db.lookup_similar_scan(&v, t).map(|(r, s)| (r.key.clone(), s.to_bits()));
+            assert_eq!(idx, scan, "catalogue query {q} t={t}");
+        }
+    }
+}
+
+#[test]
+fn exact_set_lookup_matches_its_scan() {
+    let mut rng = Rng::new(0xE5E7);
+    let recs = random_records(&mut rng, 150, true);
+    let mut db = PatternDb::builtin();
+    for r in recs {
+        db.insert_learned(r);
+    }
+    let sets = device_sets();
+    // fingerprints both present (0x1000..) and absent (the tail past n)
+    for fp in 0x1000u64..0x1000 + 180 {
+        for devices in &sets {
+            let idx = db
+                .lookup_learned_set(fp, devices)
+                .map(|r| (r.key.clone(), r.learned.clone()));
+            let scan = db
+                .lookup_learned_set_scan(fp, devices)
+                .map(|r| (r.key.clone(), r.learned.clone()));
+            assert_eq!(idx, scan, "fp={fp:#x} devices={devices:?}");
+        }
+    }
+}
+
+#[test]
+fn real_program_vectors_agree_on_both_paths() {
+    // the same vector shapes the coordinator stores: characteristic
+    // vectors of random programs from the shared generator
+    let mut rng = Rng::new(0x9E4E);
+    let mut vectors = Vec::new();
+    for size in 1..=12 {
+        let src = common::random_program(&mut rng, size, Lang::C);
+        let p = parse(&src, Lang::C, "diff").unwrap();
+        vectors.push(char_vector_program(&p));
+    }
+    let mut db = PatternDb::builtin();
+    for (i, v) in vectors.iter().enumerate() {
+        db.insert_learned(record(&mut rng, 0x2000 + i as u64, Lang::C, &[TargetKind::Gpu], *v));
+    }
+    for v in &vectors {
+        for t in THRESHOLDS {
+            let (idx, scan) = sim_answers(&mut db, v, Lang::C, &[TargetKind::Gpu], t);
+            assert_eq!(idx, scan, "program-vector query t={t}");
+        }
+        // a stored program vector matches itself at a high threshold
+        // (self-similarity is 1.0 up to cosine rounding)
+        let (_, s) = sim_answers(&mut db, v, Lang::C, &[TargetKind::Gpu], 0.999);
+        assert!(s.is_some(), "self-similarity must clear 0.999");
+    }
+}
+
+/// Drive the same query workload against a reference DB and a
+/// round-tripped one: indexed == scan inside each, and the round trip
+/// must not change a single answer (keys and score bits).
+fn assert_dbs_agree(reference: &mut PatternDb, other: &mut PatternDb, probes: &[CharVec], seed: u64) {
+    assert_eq!(reference.learned_len(), other.learned_len(), "record count drifted");
+    let sets = device_sets();
+    let mut rng = Rng::new(seed);
+    for v in probes {
+        let lang = *rng.choose(&Lang::all());
+        let devices = rng.choose(&sets).clone();
+        for t in THRESHOLDS {
+            let (ri, rs) = sim_answers(reference, v, lang, &devices, t);
+            let (oi, os) = sim_answers(other, v, lang, &devices, t);
+            assert_eq!(ri, rs, "reference indexed vs scan (t={t})");
+            assert_eq!(oi, os, "round-tripped indexed vs scan (t={t})");
+            assert_eq!(ri, oi, "round trip changed an answer (t={t})");
+        }
+    }
+    // exact lookups: every reference key resolves identically
+    for fp in 0x1000u64..0x1000 + 60 {
+        for devices in &sets {
+            let a = reference.lookup_learned_set(fp, devices).map(|r| r.learned.clone());
+            let b = other.lookup_learned_set(fp, devices).map(|r| r.learned.clone());
+            assert_eq!(a, b, "exact lookup fp={fp:#x} drifted across the round trip");
+        }
+    }
+}
+
+#[test]
+fn equivalence_survives_save_load_and_tiered_round_trips() {
+    let base = tmp("tiered");
+    let snap = tmp("snapshot");
+    wipe(&base);
+    wipe(&snap);
+
+    let mut rng = Rng::new(0x70AD);
+    let recs = random_records(&mut rng, 150, true);
+    let mut probes: Vec<CharVec> = recs.iter().map(|r| r.vector).collect();
+    for _ in 0..60 {
+        probes.push(random_vector(&mut rng));
+    }
+
+    // the reference: all records hot, in memory, no disk
+    let mut reference = PatternDb::builtin();
+    for r in &recs {
+        reference.insert_learned(r.clone());
+    }
+
+    // the same records through a tiny hot tier with aggressive
+    // segmentation: insert + flush in small batches so most records go
+    // cold and several segments accumulate (and compact) along the way
+    let tier = TierConfig { hot_capacity: 8, segment_records: 16, max_segments: 3 };
+    let mut tiered = PatternDb::open_tiered(Some(&base), tier);
+    for (i, r) in recs.iter().enumerate() {
+        tiered.insert_learned(r.clone());
+        if i % 10 == 9 {
+            tiered.flush(&base).unwrap();
+        }
+    }
+    tiered.flush(&base).unwrap();
+    assert!(tiered.tier_stats().cold_records > 0, "the tiny hot tier must have demoted");
+    assert_dbs_agree(&mut reference, &mut tiered, &probes, 0x51D1);
+
+    // reopened from disk (cold-heavy: only hot_capacity records resident)
+    let mut reopened = PatternDb::open_tiered(Some(&base), tier);
+    assert_dbs_agree(&mut reference, &mut reopened, &probes, 0x51D2);
+
+    // full snapshot to a fresh path, strict-loaded back
+    reopened.save(&snap).unwrap();
+    let mut loaded = PatternDb::load(&snap).unwrap();
+    assert_dbs_agree(&mut reference, &mut loaded, &probes, 0x51D3);
+
+    // compaction onto the tiered base (segments fold away), then reopen
+    reopened.save(&base).unwrap();
+    assert_eq!(reopened.tier_stats().segments, 0, "compaction must clear the segments");
+    assert_dbs_agree(&mut reference, &mut reopened, &probes, 0x51D4);
+    let mut compacted = PatternDb::open_tiered(Some(&base), tier);
+    assert_dbs_agree(&mut reference, &mut compacted, &probes, 0x51D5);
+
+    wipe(&base);
+    wipe(&snap);
+}

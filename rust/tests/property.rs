@@ -192,6 +192,63 @@ fn reverse_loops(src: &str) -> String {
 }
 
 #[test]
+fn prop_patterndb_index_matches_scan() {
+    // For arbitrary learned-record populations and arbitrary thresholds,
+    // the pattern DB's pruning index must return *bit for bit* what the
+    // linear scan returns — same record key, same score bits (the
+    // equivalence contract behind `tests/patterndb_differential.rs`).
+    use envadapt::device::TargetKind;
+    use envadapt::ir::NODE_KIND_COUNT;
+    use envadapt::patterndb::{LearnedPlan, PatternDb, PatternRecord};
+
+    check(
+        &PropConfig { cases: 40, seed: 0xDB5EED, max_size: 10 },
+        |rng, size| (rng.next_u64(), 4 + size * 25),
+        |(seed, n)| {
+            let mut rng = Rng::new(*seed);
+            let mut db = PatternDb::builtin();
+            let mut vectors = Vec::new();
+            for i in 0..*n {
+                let mut v = [0.0; NODE_KIND_COUNT];
+                for _ in 0..1 + rng.below(5) {
+                    v[rng.below(NODE_KIND_COUNT)] += (1 + rng.below(9)) as f64;
+                }
+                vectors.push(v);
+                let plan = LearnedPlan {
+                    fingerprint: 0x4000 + i as u64,
+                    lang: Lang::C,
+                    target: TargetKind::Gpu,
+                    devices: vec![TargetKind::Gpu],
+                    gene: vec![rng.bool()],
+                    gene_loops: vec![rng.below(8)],
+                    funcblocks: Vec::new(),
+                    fb_dests: Vec::new(),
+                    baseline_s: 2.0,
+                    final_s: 0.5,
+                };
+                db.insert_learned(PatternRecord::from_learned(format!("p{i}"), v, plan));
+            }
+            for _ in 0..30 {
+                let v = vectors[rng.below(vectors.len())];
+                // thresholds straddle the index's fallback bound (0.35)
+                for t in [0.2, 0.35, 0.5, 0.8, 0.95, 1.0] {
+                    let idx = db
+                        .lookup_learned_similar(&v, Lang::C, &[TargetKind::Gpu], t)
+                        .map(|(r, s)| (r.key.clone(), s.to_bits()));
+                    let scan = db
+                        .lookup_learned_similar_scan(&v, Lang::C, &[TargetKind::Gpu], t)
+                        .map(|(r, s)| (r.key.clone(), s.to_bits()));
+                    if idx != scan {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
 fn prop_bytecode_outcome_bit_identical_to_tree_walker() {
     // For arbitrary programs and arbitrary gene plans, the bytecode VM
     // must reproduce the tree-walker's Outcome *bit for bit* — op counts,

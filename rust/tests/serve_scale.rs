@@ -1,0 +1,246 @@
+//! Scale end-to-end test: the serve daemon loaded with a 100 000-record
+//! learned pattern DB must stay responsive — pings answer quickly while
+//! similarity-probing offloads run against the full DB — and the learned
+//! fast path must still replay with zero search measurements. Also pins
+//! the on-disk compatibility contract: v1 (5-field), v2 (13-field) and
+//! v3 (15-field) record lines all load through the daemon's DB loader.
+
+use envadapt::config::Config;
+use envadapt::device::TargetKind;
+use envadapt::ir::{Lang, NODE_KIND_COUNT};
+use envadapt::patterndb::{LearnedPlan, PatternDb, PatternRecord};
+use envadapt::proto::{self, Response};
+use envadapt::server::{self, ServeOptions};
+use envadapt::util::Rng;
+use envadapt::workloads;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let writer = TcpStream::connect(addr).expect("connect");
+        let reader = BufReader::new(writer.try_clone().expect("clone stream"));
+        Client { reader, writer }
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Response {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).unwrap();
+        assert!(!resp.is_empty(), "server closed the connection");
+        Response::parse_line(&resp).unwrap()
+    }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("envadapt_scale_{}_{}.txt", name, std::process::id()))
+}
+
+fn wipe(base: &Path) {
+    let mut os = base.as_os_str().to_os_string();
+    os.push(".segments");
+    let _ = std::fs::remove_dir_all(PathBuf::from(os));
+    let _ = std::fs::remove_file(base);
+}
+
+fn i64_field(r: &Response, report_key: &str) -> i64 {
+    r.report()
+        .and_then(|rep| rep.get(report_key))
+        .and_then(|v| v.as_i64())
+        .unwrap_or_else(|| panic!("missing report field {report_key}: {}", r.body.to_string()))
+}
+
+fn patterns_i64(m: &envadapt::util::json::Json, leaf: &str) -> i64 {
+    m.get("patterns")
+        .and_then(|g| g.get(leaf))
+        .and_then(|v| v.as_i64())
+        .unwrap_or_else(|| panic!("missing metrics field patterns.{leaf}: {}", m.to_string()))
+}
+
+/// Synthetic ballast: plausible on disk, impossible to replay — the
+/// gene-loop ids (900+) can never match a real program's analysis and
+/// the modeled baseline never matches, so even a freak similarity hit is
+/// rejected by the coordinator's validation and falls back to search.
+fn ballast(rng: &mut Rng, fp: u64) -> PatternRecord {
+    let mut v = [0.0; NODE_KIND_COUNT];
+    v[rng.below(NODE_KIND_COUNT)] = (40 + rng.below(60)) as f64;
+    for _ in 0..rng.below(4) {
+        v[rng.below(NODE_KIND_COUNT)] += (1 + rng.below(5)) as f64;
+    }
+    let lang = *rng.choose(&Lang::all());
+    let devices = match rng.below(3) {
+        0 => vec![TargetKind::Gpu],
+        1 => vec![TargetKind::ManyCore],
+        _ => vec![TargetKind::Gpu, TargetKind::ManyCore],
+    };
+    let plan = LearnedPlan {
+        fingerprint: fp,
+        lang,
+        target: devices[0],
+        devices: devices.clone(),
+        gene: (0..devices.len()).map(|_| rng.bool()).collect(),
+        gene_loops: vec![900 + rng.below(50)],
+        funcblocks: Vec::new(),
+        fb_dests: Vec::new(),
+        baseline_s: 1e6 + fp as f64,
+        final_s: 1e5,
+    };
+    PatternRecord::from_learned(format!("ballast {fp:x}"), v, plan)
+}
+
+#[test]
+fn serve_stays_responsive_with_a_hundred_thousand_learned_records() {
+    const RECORDS: u64 = 100_000;
+    let db_path = tmp("serve100k");
+    wipe(&db_path);
+
+    // build and persist the 100k-record DB (fingerprints 1..=100k can
+    // never collide with real 64-bit program hashes)
+    let mut db = PatternDb::builtin();
+    let mut rng = Rng::new(0x5CA1E);
+    for fp in 1..=RECORDS {
+        db.insert_learned(ballast(&mut rng, fp));
+    }
+    db.save(&db_path).unwrap();
+
+    let handle = server::spawn_tcp(
+        Config::fast_sim(),
+        ServeOptions { pool: 2, db_path: Some(db_path.clone()), ..Default::default() },
+        "127.0.0.1:0",
+    )
+    .expect("spawn server with a 100k-record DB");
+    let addr = handle.addr();
+    let mut c = Client::connect(addr);
+
+    // the whole DB is loaded and visible in metrics (all hot: the
+    // default hot capacity is exactly 100k), with the index gauges live
+    let m = c.roundtrip(r#"{"op":"metrics","id":1}"#);
+    assert!(m.ok, "{:?}", m.error);
+    let snap = m.body.get("metrics").expect("metrics payload").clone();
+    assert_eq!(patterns_i64(&snap, "records"), RECORDS as i64);
+    assert_eq!(patterns_i64(&snap, "hot_records"), RECORDS as i64);
+    assert_eq!(patterns_i64(&snap, "cold_records"), 0);
+    assert_eq!(patterns_i64(&snap, "segments"), 0);
+    assert!(patterns_i64(&snap, "index_probes") >= 0);
+
+    // learn a real workload against the loaded DB: the first request
+    // must run a real search (the ballast is unreplayable by design)...
+    let code = workloads::get("mm", Lang::C).unwrap().code;
+    let r1 = c.roundtrip(&proto::offload_request(2, "mm", Lang::C, code));
+    assert!(r1.ok, "{:?}", r1.error);
+    assert!(i64_field(&r1, "measurements") > 0, "ballast must never be replayed");
+    let gene1 = r1.report().and_then(|rep| rep.get("gene")).cloned().unwrap();
+
+    // ...and the identical repeat replays with zero measurements even
+    // with 100k other records in the way
+    let r2 = c.roundtrip(&proto::offload_request(3, "mm", Lang::C, code));
+    assert!(r2.ok, "{:?}", r2.error);
+    assert_eq!(i64_field(&r2, "measurements"), 0, "exact replay at scale");
+    assert!(r2.report().and_then(|rep| rep.get("pattern_reuse")).is_some());
+    assert_eq!(r2.report().and_then(|rep| rep.get("gene")).cloned(), Some(gene1));
+
+    // responsiveness: pings answer promptly while another connection
+    // drives offloads (each one similarity-probing the 100k records)
+    let worker = std::thread::spawn(move || {
+        let mut bg = Client::connect(addr);
+        for (i, (app, lang)) in [
+            ("fourier", Lang::Python),
+            ("stencil", Lang::Java),
+            ("blackscholes", Lang::JavaScript),
+            ("mixed", Lang::C),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let code = workloads::get(app, lang).unwrap().code;
+            let r = bg.roundtrip(&proto::offload_request(100 + i as i64, app, lang, code));
+            assert!(r.ok, "background {app}: {:?}", r.error);
+        }
+    });
+    let mut worst = Duration::ZERO;
+    for i in 0..40 {
+        let t0 = Instant::now();
+        let ping = c.roundtrip(&format!("{{\"op\":\"ping\",\"id\":{}}}", 1000 + i));
+        let dt = t0.elapsed();
+        assert!(ping.ok);
+        worst = worst.max(dt);
+        assert!(
+            dt < Duration::from_secs(2),
+            "ping {i} took {dt:?} with a 100k-record DB under load"
+        );
+    }
+    worker.join().unwrap();
+
+    // the searches above probed the index; the counters moved
+    let m2 = c.roundtrip(r#"{"op":"metrics","id":2000}"#);
+    assert!(m2.ok);
+    let snap2 = m2.body.get("metrics").expect("metrics payload").clone();
+    assert!(
+        patterns_i64(&snap2, "index_probes") >= 1,
+        "searches must have probed the similarity index (worst ping {worst:?}): {}",
+        snap2.to_string()
+    );
+    assert!(patterns_i64(&snap2, "records") > RECORDS as i64, "the new patterns were learned");
+
+    drop(c);
+    handle.shutdown().expect("clean shutdown");
+    wipe(&db_path);
+}
+
+#[test]
+fn v1_v2_and_v3_record_lines_all_load() {
+    let db_path = tmp("vintages");
+    wipe(&db_path);
+    let ones = vec!["1"; NODE_KIND_COUNT].join(",");
+    // one file, three vintages of line (the loader sniffs per line):
+    //   v1: 5-field function-block record
+    //   v2: 13-field single-target learned plan
+    //   v3: 15-field learned plan with a heterogeneous device set
+    let text = format!(
+        "# envadapt pattern DB v3\n\
+         customfb|customfb|64,256|a hand-written v1 record|{ones}\n\
+         learned/00000000000000ab/gpu|||v2 plan|{ones}|00000000000000ab|c|gpu|1|5|-|2.5|0.5\n\
+         learned/00000000000000ac/gpu+many-core|||v3 plan|{ones}|00000000000000ac|python|gpu|10|5,6|-|3.5|0.7|gpu+many-core|-\n"
+    );
+    std::fs::write(&db_path, text).unwrap();
+
+    let mut db = PatternDb::open_or_builtin(Some(&db_path));
+    assert_eq!(db.learned_len(), 2, "both learned vintages must load");
+    assert!(db.lookup_name("customfb").is_some(), "the v1 catalogue record must load");
+
+    let v2 = db.lookup_learned(0xAB, TargetKind::Gpu).expect("v2 record");
+    let p2 = v2.learned.clone().unwrap();
+    assert_eq!(p2.devices, vec![TargetKind::Gpu], "v2 defaults to the single target");
+    assert_eq!(p2.gene, vec![true]);
+    assert_eq!(p2.gene_loops, vec![5]);
+
+    let v3 = db
+        .lookup_learned_set(0xAC, &[TargetKind::Gpu, TargetKind::ManyCore])
+        .expect("v3 record");
+    let p3 = v3.learned.clone().unwrap();
+    assert_eq!(p3.devices, vec![TargetKind::Gpu, TargetKind::ManyCore]);
+    assert_eq!(p3.lang, Lang::Python);
+    assert_eq!(p3.gene, vec![true, false]);
+
+    // the similarity path sees all vintages identically on both the
+    // indexed and the scan path
+    let q = [1.0; NODE_KIND_COUNT];
+    let idx = db
+        .lookup_learned_similar(&q, Lang::C, &[TargetKind::Gpu], 0.9)
+        .map(|(r, s)| (r.key.clone(), s.to_bits()));
+    let scan = db
+        .lookup_learned_similar_scan(&q, Lang::C, &[TargetKind::Gpu], 0.9)
+        .map(|(r, s)| (r.key.clone(), s.to_bits()));
+    assert_eq!(idx, scan);
+    assert!(idx.is_some(), "the v2 record matches its own vector");
+    wipe(&db_path);
+}
