@@ -3,14 +3,15 @@
 
 Compares a fresh bench JSON against the committed baseline and fails
 when throughput regressed by more than the threshold on any row. Covers
-the four bench files: ``BENCH_engine.json`` (rows keyed by ``workers``,
+the five bench files: ``BENCH_engine.json`` (rows keyed by ``workers``,
 valued in ``evals_per_sec``; ``cargo bench -- engine``),
 ``BENCH_vm.json`` (rows keyed by ``workload``, valued in
 ``evals_per_sec``; ``cargo bench -- vm``), ``BENCH_serve.json``
 (rows keyed by ``clients``, valued in ``requests_per_sec``;
-``cargo bench -- serve``) and ``BENCH_patterndb.json`` (rows keyed by
+``cargo bench -- serve``), ``BENCH_patterndb.json`` (rows keyed by
 ``records``, valued in ``lookups_per_sec``; ``cargo bench --
-patterndb``).
+patterndb``) and ``BENCH_transfer.json`` (rows keyed by ``workload``,
+valued in ``plans_per_sec``; ``cargo bench -- transfer``).
 
 For ``patterndb_lookup`` the gate additionally asserts *flatness* on the
 fresh run: per-lookup throughput across the record-count rows (10k →
@@ -46,11 +47,13 @@ def row_key(r):
 
 def row_value(r):
     # engine/vm rows carry evals_per_sec, serve rows requests_per_sec,
-    # patterndb rows lookups_per_sec
+    # patterndb rows lookups_per_sec, transfer rows plans_per_sec
     if "lookups_per_sec" in r:
         return r.get("lookups_per_sec")
     if "requests_per_sec" in r:
         return r.get("requests_per_sec")
+    if "plans_per_sec" in r:
+        return r.get("plans_per_sec")
     return r.get("evals_per_sec")
 
 

@@ -76,6 +76,9 @@ fn main() {
     if want("patterndb") {
         patterndb_lookup();
     }
+    if want("transfer") {
+        transfer_throughput();
+    }
     if want("micro") {
         micro_benchmarks();
     }
@@ -540,6 +543,79 @@ fn patterndb_lookup() {
         .set("results", Json::Arr(arr));
     if let Err(e) = std::fs::write("BENCH_patterndb.json", j.to_pretty() + "\n") {
         eprintln!("warning: could not write BENCH_patterndb.json: {e}");
+    }
+}
+
+/// transfer_throughput: plans/second of the post-GA transfer-optimization
+/// pass (`transfer::optimize`) on the hetero workload family — the pass
+/// runs once per offload request, after the GA, so its cost must stay
+/// negligible next to a single measurement. Also reports what the pass
+/// buys: modeled cost of the all-offload plan under hoisted vs naive
+/// per-region accounting, and how many arrays it proves resident.
+/// Records the baseline to BENCH_transfer.json for the CI gate.
+fn transfer_throughput() {
+    use envadapt::transfer;
+    use envadapt::util::json::Json;
+    use std::time::Instant;
+
+    println!("## transfer — residency-planning pass throughput (plans/sec)\n");
+
+    const ITERS: u32 = 2000;
+    let mut rows = Vec::new();
+    let mut arr = Vec::new();
+    for app in ["hetero", "heterochain", "heterohost"] {
+        let s = workloads::get(app, Lang::C).unwrap();
+        let p = parse(s.code, Lang::C, app).unwrap();
+        let a = analysis::analyze(&p);
+        let gene = vec![true; a.gene_loops().len()];
+        let hoisted = analysis::build_plan(&a, &gene, false);
+        let naive = analysis::build_plan(&a, &gene, true);
+
+        let start = Instant::now();
+        let mut present = 0usize;
+        for _ in 0..ITERS {
+            present = transfer::optimize(&p, &hoisted).present_count();
+        }
+        let secs = start.elapsed().as_secs_f64();
+        let plans_per_sec = ITERS as f64 / secs.max(1e-12);
+
+        let measurer = Measurer::new(&p, VmConfig::default(), 1e-9).unwrap();
+        let mut d1 = GpuDevice::simulated(CostModel::default());
+        let mut d2 = GpuDevice::simulated(CostModel::default());
+        let rh = measurer.measure(&p, &hoisted, &mut d1);
+        let rn = measurer.measure(&p, &naive, &mut d2);
+
+        rows.push(vec![
+            app.to_string(),
+            format!("{plans_per_sec:.0}"),
+            present.to_string(),
+            format!("{:.3}", rh.modeled_s * 1e3),
+            format!("{:.3}", rn.modeled_s * 1e3),
+            format!("{:.2}x", rn.modeled_s / rh.modeled_s),
+        ]);
+        arr.push(
+            Json::obj()
+                .set("workload", app)
+                .set("plans_per_sec", plans_per_sec)
+                .set("present_arrays", present as i64)
+                .set("hoisted_ms", rh.modeled_s * 1e3)
+                .set("naive_ms", rn.modeled_s * 1e3),
+        );
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["workload", "plans/sec", "present arrays", "hoisted ms", "naive ms", "hoist gain"],
+            &rows
+        )
+    );
+
+    let j = Json::obj()
+        .set("bench", "transfer_throughput")
+        .set("iters", ITERS as i64)
+        .set("results", Json::Arr(arr));
+    if let Err(e) = std::fs::write("BENCH_transfer.json", j.to_pretty() + "\n") {
+        eprintln!("warning: could not write BENCH_transfer.json: {e}");
     }
 }
 

@@ -775,51 +775,58 @@ pub fn build_plan(analysis: &ProgramAnalysis, gene: &[bool], naive_transfers: bo
     )
 }
 
-/// Render-ready directives for a plan ([37]'s `data` directive placement):
-/// arrays used by more than one region **on the same destination** stay
-/// device-resident (`present`, transfer hoisted); the rest get
-/// `copyin`/`copyout`. Hoisting is keyed per (array, destination)
-/// because the execution model stages an array through the host when
-/// consecutive regions run on different destinations — annotating such
-/// an array `present` would claim a residency the VM never models.
-pub fn plan_directives(
-    analysis: &ProgramAnalysis,
-    plan: &ExecPlan,
-) -> HashMap<LoopId, LoopDirective> {
-    let mut region_use: HashMap<(&str, usize), usize> = HashMap::new();
-    let mut dests_of: HashMap<&str, HashSet<usize>> = HashMap::new();
-    for r in plan.regions.values() {
-        for a in r.copy_in.iter().chain(&r.copy_out) {
-            *region_use.entry((a.as_str(), r.dest)).or_insert(0) += 1;
-            dests_of.entry(a.as_str()).or_default().insert(r.dest);
-        }
-    }
-    let _ = analysis;
+/// Render-ready directives for a plan ([37]'s `data` directive placement),
+/// derived from the order-aware residency result of the post-GA transfer
+/// pass (`crate::transfer`): `present` exactly where the dataflow proves
+/// the array is already resident on the region's destination, hoisted
+/// `copyin` otherwise, and `copyout` only for device writes some later
+/// consumer actually reads back (`keep` results render no clause at all).
+/// Because the measured plan carries the same [`TransferPlan`], every
+/// rendered `present` is backed by zero staged transfers at that boundary
+/// — the engines count any disagreement in
+/// [`crate::vm::Outcome::presence_violations`].
+///
+/// Naive plans (the [37] ablation and `--no-transfer-opt`) render the
+/// un-hoisted per-region `copyin`/`copyout` baseline, byte-identical to
+/// the pre-pass renderer.
+///
+/// [`TransferPlan`]: crate::transfer::TransferPlan
+pub fn plan_directives(prog: &Program, plan: &ExecPlan) -> HashMap<LoopId, LoopDirective> {
     let mut out = HashMap::new();
+    if plan.naive_transfers {
+        for (id, r) in &plan.regions {
+            let mut d = LoopDirective { offload: true, ..Default::default() };
+            d.dest = plan.devices.get(r.dest).copied();
+            d.copy_in = r.copy_in.clone();
+            d.copy_out = r.copy_out.clone();
+            out.insert(*id, d);
+        }
+        return out;
+    }
+    // use the plan's attached residency result (the one the measurement
+    // audited); compute it on the fly for plans built outside the
+    // coordinator (tests, embedders)
+    let computed;
+    let tp = match &plan.transfers {
+        Some(tp) => tp,
+        None => {
+            computed = crate::transfer::optimize(prog, plan);
+            &computed
+        }
+    };
     for (id, r) in &plan.regions {
         let mut d = LoopDirective { offload: true, ..Default::default() };
         d.dest = plan.devices.get(r.dest).copied();
-        // hoist only when every region touching the array shares this
-        // destination: a use on any other destination stages the array
-        // through the host at some point, and this count-based heuristic
-        // is not order-aware enough to know which same-destination pair
-        // (if any) really stays resident
-        let uses = |a: &str| {
-            if dests_of.get(a).map(|s| s.len()).unwrap_or(0) > 1 {
-                return 1; // cross-destination: always copied
+        match tp.regions.get(id) {
+            Some(rt) => {
+                d.copy_in = rt.copy_in.clone();
+                d.present = rt.present.clone();
+                d.copy_out = rt.copy_out.clone();
             }
-            region_use.get(&(a, r.dest)).copied().unwrap_or(0)
-        };
-        for a in &r.copy_in {
-            if !plan.naive_transfers && uses(a.as_str()) > 1 {
-                d.present.push(a.clone());
-            } else {
-                d.copy_in.push(a.clone());
-            }
-        }
-        for a in &r.copy_out {
-            if plan.naive_transfers || uses(a.as_str()) <= 1 {
-                d.copy_out.push(a.clone());
+            None => {
+                // a region the pass never saw: conservative full copies
+                d.copy_in = r.copy_in.clone();
+                d.copy_out = r.copy_out.clone();
             }
         }
         out.insert(*id, d);
@@ -1024,22 +1031,56 @@ mod tests {
 
     #[test]
     fn directives_mark_present_for_shared_arrays() {
-        let a = analyze_c(
+        let p = parse(
             r#"void main() {
                 int n = 8;
                 double x[n];
                 for (int i = 0; i < n; i++) { x[i] = i; }
                 for (int i = 0; i < n; i++) { x[i] = x[i] * 2.0; }
             }"#,
-        );
+            Lang::C,
+            "t",
+        )
+        .unwrap();
+        let a = analyze(&p);
         let plan = build_plan(&a, &[true, true], false);
-        let dirs = plan_directives(&a, &plan);
+        let dirs = plan_directives(&p, &plan);
         assert_eq!(dirs.len(), 2);
         assert!(dirs.values().any(|d| d.present.contains(&"x".to_string())));
         // naive mode: no `present`, everything copied
         let plan_naive = build_plan(&a, &[true, true], true);
-        let dirs_naive = plan_directives(&a, &plan_naive);
+        let dirs_naive = plan_directives(&p, &plan_naive);
         assert!(dirs_naive.values().all(|d| d.present.is_empty()));
+    }
+
+    #[test]
+    fn directives_are_order_aware_not_count_based() {
+        // regression for the count-based heuristic: both regions touch x
+        // on the same destination (two same-destination uses, which the
+        // old heuristic hoisted to `present`), but the host writes x
+        // between them — the second region must copy in
+        let p = parse(
+            r#"void main() {
+                int n = 8;
+                double x[n]; double y[n];
+                for (int i = 0; i < n; i++) { y[i] = x[i] * 2.0; }
+                x[0] = y[0] + 3.0;
+                for (int i = 0; i < n; i++) { y[i] = x[i] * 0.5 + y[i]; }
+            }"#,
+            Lang::C,
+            "t",
+        )
+        .unwrap();
+        let a = analyze(&p);
+        let plan = build_plan(&a, &[true, true], false);
+        let dirs = plan_directives(&p, &plan);
+        assert!(
+            dirs.values().all(|d| !d.present.contains(&"x".to_string())),
+            "host-clobbered x must not be `present`: {dirs:?}"
+        );
+        assert!(dirs[&1].copy_in.contains(&"x".to_string()), "{dirs:?}");
+        // y really does stay resident (the host only *read* y[0])
+        assert!(dirs[&1].present.contains(&"y".to_string()), "{dirs:?}");
     }
 
     #[test]
@@ -1049,14 +1090,18 @@ mod tests {
         // annotations must show real transfers, not `present`
         use crate::device::TargetKind;
         use crate::placement::DeviceSet;
-        let a = analyze_c(
+        let p = parse(
             r#"void main() {
                 int n = 8;
                 double x[n];
                 for (int i = 0; i < n; i++) { x[i] = i; }
                 for (int i = 0; i < n; i++) { x[i] = x[i] * 2.0; }
             }"#,
-        );
+            Lang::C,
+            "t",
+        )
+        .unwrap();
+        let a = analyze(&p);
         let set = DeviceSet::new(vec![TargetKind::Gpu, TargetKind::Fpga]).unwrap();
         let plan = crate::placement::build_plan(
             &a,
@@ -1064,7 +1109,7 @@ mod tests {
             &[Some(TargetKind::Gpu), Some(TargetKind::Fpga)],
             false,
         );
-        let dirs = plan_directives(&a, &plan);
+        let dirs = plan_directives(&p, &plan);
         assert!(dirs.values().all(|d| d.present.is_empty()), "{dirs:?}");
         assert!(dirs[&0].copy_out.contains(&"x".to_string()), "GPU region must copy x out");
         assert!(dirs[&1].copy_in.contains(&"x".to_string()), "FPGA region must copy x in");
@@ -1075,7 +1120,7 @@ mod tests {
             &[Some(TargetKind::Fpga), Some(TargetKind::Fpga)],
             false,
         );
-        let dirs_same = plan_directives(&a, &same);
+        let dirs_same = plan_directives(&p, &same);
         assert!(dirs_same.values().any(|d| d.present.contains(&"x".to_string())));
     }
 

@@ -105,6 +105,10 @@ pub struct OffloadRequest {
     pub funcblock_budget: Option<usize>,
     /// disable transfer hoisting (ablation)
     pub naive_transfers: Option<bool>,
+    /// enable/disable the post-GA transfer-optimization pass
+    /// (`Some(false)` = `--no-transfer-opt`: naive per-region transfer
+    /// accounting, no `present` hoisting in the rendered directives)
+    pub transfer_opt: Option<bool>,
 }
 
 impl OffloadRequest {
@@ -122,6 +126,7 @@ impl OffloadRequest {
                 funcblock: None,
                 funcblock_budget: None,
                 naive_transfers: None,
+                transfer_opt: None,
             },
         }
     }
@@ -187,6 +192,9 @@ impl OffloadRequest {
         if let Some(n) = self.naive_transfers {
             j = j.set("naive_transfers", n);
         }
+        if let Some(t) = self.transfer_opt {
+            j = j.set("transfer_opt", t);
+        }
         j
     }
 
@@ -211,6 +219,7 @@ impl OffloadRequest {
             "funcblock",
             "funcblock_budget",
             "naive_transfers",
+            "transfer_opt",
         ];
         let warnings = unknown_field_warnings(j, KNOWN);
         let lang = parse_lang(j)?;
@@ -261,6 +270,11 @@ impl OffloadRequest {
         if let Some(v) = j.get("naive_transfers") {
             b = b.naive_transfers(
                 v.as_bool().ok_or_else(|| anyhow!("naive_transfers must be a boolean"))?,
+            );
+        }
+        if let Some(v) = j.get("transfer_opt") {
+            b = b.transfer_opt(
+                v.as_bool().ok_or_else(|| anyhow!("transfer_opt must be a boolean"))?,
             );
         }
         Ok((b.build()?, warnings))
@@ -465,6 +479,14 @@ impl OffloadRequestBuilder {
         self
     }
 
+    /// Enable/disable the post-GA transfer-optimization pass (`false` =
+    /// `--no-transfer-opt`: naive per-region transfer accounting, no
+    /// `present` hoisting).
+    pub fn transfer_opt(mut self, on: bool) -> Self {
+        self.req.transfer_opt = Some(on);
+        self
+    }
+
     /// Validate every field and return the request.
     pub fn build(self) -> Result<OffloadRequest> {
         let r = self.req;
@@ -534,6 +556,9 @@ pub fn effective_config(base: &Config, req: &OffloadRequest) -> Config {
     }
     if let Some(n) = req.naive_transfers {
         cfg.naive_transfers = n;
+    }
+    if let Some(t) = req.transfer_opt {
+        cfg.no_transfer_opt = !t;
     }
     cfg
 }
@@ -664,7 +689,7 @@ impl OffloadSession {
         // keyed on *effective* values: a request that spells out the
         // session default shares the default's (warm) coordinator
         let key = format!(
-            "{}|{}|{}|{}|{}|{}|{}",
+            "{}|{}|{}|{}|{}|{}|{}|{}",
             crate::placement::set_name(&cfg.effective_devices()),
             cfg.power_weight,
             cfg.ga.population,
@@ -672,6 +697,7 @@ impl OffloadSession {
             cfg.funcblock.enabled,
             cfg.funcblock.max_combination_trials,
             cfg.naive_transfers,
+            cfg.no_transfer_opt,
         );
         if self.coords.len() >= MAX_COORDS && !self.coords.contains_key(&key) {
             self.coords.clear();
@@ -1005,6 +1031,7 @@ mod tests {
             .funcblock(false)
             .funcblock_budget(32)
             .naive_transfers(true)
+            .transfer_opt(false)
             .build()
             .unwrap();
         let (back, warnings) = OffloadRequest::from_json(&full.to_json()).unwrap();
@@ -1083,6 +1110,16 @@ mod tests {
         let (rn, _) = OffloadRequest::from_wire(&v1null).unwrap();
         assert!(rn.devices.is_empty(), "null target must fall back to the default");
 
+        // a v2-only knob on a v1 line is warned about and ignored, never
+        // silently honored by a daemon that predates it
+        let v1knob = Json::parse(
+            r#"{"op":"offload","lang":"c","code":"void main() { }","transfer_opt":false}"#,
+        )
+        .unwrap();
+        let (rk, wk) = OffloadRequest::from_wire(&v1knob).unwrap();
+        assert_eq!(rk.transfer_opt, None, "v1 must not honor transfer_opt");
+        assert!(wk.iter().any(|w| w.contains("transfer_opt")), "{wk:?}");
+
         // future versions are rejected with a clear message
         let v9 = Json::parse(r#"{"op":"offload","schema_version":9,"lang":"c","code":""}"#)
             .unwrap();
@@ -1101,6 +1138,7 @@ mod tests {
             .funcblock(false)
             .funcblock_budget(7)
             .naive_transfers(true)
+            .transfer_opt(false)
             .build()
             .unwrap();
         let cfg = effective_config(&base, &req);
@@ -1113,12 +1151,14 @@ mod tests {
         assert!(!cfg.funcblock.enabled);
         assert_eq!(cfg.funcblock.max_combination_trials, 7);
         assert!(cfg.naive_transfers);
+        assert!(cfg.no_transfer_opt);
 
         // a default request leaves the base configuration untouched
         let plain = OffloadRequest::source("", Lang::C).build().unwrap();
         let cfg2 = effective_config(&base, &plain);
         assert_eq!(cfg2.ga.population, base.ga.population);
         assert_eq!(cfg2.effective_devices(), base.effective_devices());
+        assert!(!cfg2.no_transfer_opt, "transfer pass stays on by default");
     }
 
     #[test]

@@ -827,6 +827,7 @@ struct Exec<'a> {
     region: Option<ActiveRegion>,
     prints: Vec<f64>,
     call_depth: usize,
+    presence_violations: u64,
 }
 
 /// Run compiled `prog` under `plan` with `dev` — the bytecode counterpart
@@ -850,6 +851,7 @@ pub fn run(
         region: None,
         prints: Vec::new(),
         call_depth: 0,
+        presence_violations: 0,
     };
     let entry = &prog.funcs[prog.entry];
     if entry.n_params != 0 {
@@ -865,6 +867,7 @@ pub fn run(
         gpu_seconds: ex.dev.gpu_seconds(),
         energy_j: cpu_seconds * crate::device::HOST_CPU_WATTS + ex.dev.energy_joules(),
         transfers: ex.dev.transfer_stats(),
+        presence_violations: ex.presence_violations,
     })
 }
 
@@ -1175,6 +1178,22 @@ impl<'a> Exec<'a> {
     ) -> Result<bool> {
         let naive = self.plan.naive_transfers;
         let dest = region.dest;
+        // audit static `present` claims against dynamic residency
+        // (mirrors the tree-walker; lookup failures defer to the
+        // copy_in loop's canonical error)
+        if !naive {
+            if let Some(tp) = &self.plan.transfers {
+                if let Some(rt) = tp.regions.get(&region.root) {
+                    for name in &rt.present {
+                        if let Ok(arr) = array_by_name(f, regs, name) {
+                            if !vm::loc_valid_on(arr.borrow().loc, dest) {
+                                self.presence_violations += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
         for name in &region.copy_in {
             let arr = array_by_name(f, regs, name)?;
             vm::device_read(&mut *self.dev, &arr, dest, naive);

@@ -13,7 +13,7 @@
 //!                  [--devices gpu,many-core,fpga|all] [--power-weight W]
 //!                  [--workers N] [--cache FILE] [--db FILE]
 //!                  [--no-reuse] [--no-learn]
-//!                  [--naive-transfers] [--no-funcblock] [--sim] [--json]
+//!                  [--naive-transfers] [--no-transfer-opt] [--no-funcblock] [--sim] [--json]
 //!                  [--emit-annotated]
 //! envadapt serve [--port N | --stdio] [--pool N] [--db FILE]
 //!                [--queue N] [--timeout-ms N]
@@ -77,6 +77,8 @@ struct Opts {
     /// offload: print the session metrics snapshot after the report
     metrics: bool,
     naive: bool,
+    /// disable the post-GA transfer-optimization pass
+    no_transfer_opt: bool,
     no_funcblock: bool,
     sim: bool,
     json: bool,
@@ -107,6 +109,7 @@ fn parse_opts(rest: &[String]) -> anyhow::Result<Opts> {
         timeout_ms: None,
         metrics: false,
         naive: false,
+        no_transfer_opt: false,
         no_funcblock: false,
         sim: false,
         json: false,
@@ -204,6 +207,7 @@ fn parse_opts(rest: &[String]) -> anyhow::Result<Opts> {
                 o.power_weight = Some(w);
             }
             "--naive-transfers" => o.naive = true,
+            "--no-transfer-opt" => o.no_transfer_opt = true,
             "--no-funcblock" => o.no_funcblock = true,
             "--sim" => o.sim = true,
             "--json" => o.json = true,
@@ -273,6 +277,9 @@ fn request_from(
     }
     if opts.naive {
         b = b.naive_transfers(true);
+    }
+    if opts.no_transfer_opt {
+        b = b.transfer_opt(false);
     }
     if opts.no_funcblock {
         b = b.funcblock(false);
@@ -518,7 +525,7 @@ USAGE:
                    [--devices gpu,many-core,fpga|all] [--power-weight W]
                    [--workers N] [--cache FILE] [--db FILE]
                    [--no-reuse] [--no-learn]
-                   [--naive-transfers] [--no-funcblock] [--sim] [--json]
+                   [--naive-transfers] [--no-transfer-opt] [--no-funcblock] [--sim] [--json]
                    [--emit-annotated] [--metrics]
   envadapt serve   [--port N | --stdio] [--pool N] [--db FILE]
                    [--queue N] [--timeout-ms N]
@@ -550,6 +557,11 @@ OPTIONS:
                 requests replay the known plan with zero measurements
   --no-reuse    always run the full search (skip the pattern-DB replay)
   --no-learn    do not insert learned patterns after a search
+  --no-transfer-opt
+                disable the post-GA transfer-optimization pass: plans are
+                measured with naive per-region transfer accounting and
+                directives fall back to plain copyin/copyout (no
+                `present` hoisting)
   --metrics     offload: print the session's metrics snapshot after the
                 report (same schema as the serve daemon's `metrics` op)
 
@@ -573,6 +585,6 @@ SERVE (the offload-as-a-service daemon, line-delimited JSON, wire v2;
              \"lang\":\"c\",\"code\":\"...\"}}  (v1 requests still accepted)
   also:     {{\"op\":\"stats\"|\"metrics\"|\"ping\"|\"shutdown\",\"id\":N}}
 
-Built-in workloads: mm fourier stencil blackscholes mixed signal smallloops hetero"
+Built-in workloads: mm fourier stencil blackscholes mixed signal smallloops hetero heterochain heterohost"
     );
 }

@@ -48,6 +48,12 @@ pub struct Config {
     pub tolerance: f64,
     /// disable transfer hoisting (ablation E4)
     pub naive_transfers: bool,
+    /// disable the post-GA transfer-optimization pass (`crate::transfer`):
+    /// plans are built and measured with naive per-region transfer
+    /// accounting and directives fall back to all-`copyin`/`copyout`.
+    /// Implied by `naive_transfers` (the ablation must stay a strict
+    /// baseline); exposed as `--no-transfer-opt`
+    pub no_transfer_opt: bool,
     /// use the PJRT-backed device (false = cost model only)
     pub use_pjrt: bool,
     /// measurement-engine pool size: how many device workers evaluate one
@@ -95,6 +101,7 @@ impl Config {
             funcblock: FuncBlockConfig::default(),
             tolerance: 2e-3,
             naive_transfers: false,
+            no_transfer_opt: false,
             use_pjrt: true,
             workers: default_workers(),
             target: TargetKind::Gpu,

@@ -190,8 +190,8 @@ fn assemble_plan(
 
 /// Offload-directive-annotated source for a final plan (library-replaced
 /// regions render as offloaded loops too).
-fn annotate(prog: &Program, analysis: &ProgramAnalysis, plan: &ExecPlan) -> String {
-    let mut directives = analysis::plan_directives(analysis, plan);
+fn annotate(prog: &Program, plan: &ExecPlan) -> String {
+    let mut directives = analysis::plan_directives(prog, plan);
     for (id, region) in &plan.regions {
         directives.entry(*id).or_insert_with(|| render::LoopDirective {
             offload: true,
@@ -365,7 +365,7 @@ impl Coordinator {
                     &analysis,
                     &candidates,
                     &dset,
-                    self.cfg.naive_transfers,
+                    self.plan_naive(),
                 );
                 // mask slot i means candidates[i], and the candidate list
                 // depends on the clone threshold / pattern DB — fold it
@@ -415,7 +415,7 @@ impl Coordinator {
             .filter(|id| !excluded.contains(id))
             .collect();
 
-        let naive_transfers = self.cfg.naive_transfers;
+        let naive_transfers = self.plan_naive();
         let build_full_plan = |gene: &[bool]| -> ExecPlan {
             assemble_plan(&analysis, &dset, &gene_loops, gene, &chosen_candidates, naive_transfers)
         };
@@ -450,7 +450,15 @@ impl Coordinator {
 
         // ---- phase 3: final selection + verification ---------------------
         let best_gene = ga_result.best_gene.clone();
-        let final_plan = build_full_plan(&best_gene);
+        let mut final_plan = build_full_plan(&best_gene);
+        // post-GA transfer-optimization pass: attach the order-aware
+        // residency plan so the final measurement audits its `present`
+        // claims and the rendered directives derive from the same plan
+        // the measurement used. (Search trials never carry one — the
+        // dynamic residency model already charges hoisted transfers.)
+        if !final_plan.naive_transfers {
+            final_plan.transfers = Some(crate::transfer::optimize(prog, &final_plan));
+        }
         self.dev.reset();
         let final_measurement = measurer.measure(prog, &final_plan, &mut self.dev);
         let final_s = if final_measurement.ok {
@@ -461,7 +469,7 @@ impl Coordinator {
         };
 
         // ---- directive-annotated source -----------------------------------
-        let annotated_source = annotate(prog, &analysis, &final_plan);
+        let annotated_source = annotate(prog, &final_plan);
 
         // persist the measurement cache so the next run starts warm
         if self.cfg.cache_path.is_some() {
@@ -619,14 +627,17 @@ impl Coordinator {
         {
             return None;
         }
-        let final_plan = assemble_plan(
+        let mut final_plan = assemble_plan(
             analysis,
             dset,
             &gene_loops,
             &plan_rec.gene,
             &chosen,
-            self.cfg.naive_transfers,
+            self.plan_naive(),
         );
+        if !final_plan.naive_transfers {
+            final_plan.transfers = Some(crate::transfer::optimize(prog, &final_plan));
+        }
 
         // re-verify the replayed plan (PCAST results check) — a stale or
         // mis-matched pattern falls back to the full search
@@ -635,7 +646,7 @@ impl Coordinator {
         if !final_measurement.ok {
             return None;
         }
-        let annotated_source = annotate(prog, analysis, &final_plan);
+        let annotated_source = annotate(prog, &final_plan);
         // the replay applied the learned function blocks — report them
         // (no trials ran, so the trial list is empty)
         let funcblock = if chosen.is_empty() {
@@ -673,6 +684,14 @@ impl Coordinator {
             reused_pattern: Some(how),
             learned_pattern: false,
         })
+    }
+
+    /// Plans are built naive (per-region transfer accounting) for the
+    /// [37] ablation *and* when the transfer-optimization pass is off —
+    /// without the pass there is nothing to hoist, so the cost model
+    /// must charge the un-hoisted per-region copies.
+    fn plan_naive(&self) -> bool {
+        self.cfg.naive_transfers || self.cfg.no_transfer_opt
     }
 
     /// Loops the GA must not touch: inside a clone-replaced nest, or an

@@ -325,6 +325,9 @@ pub fn fingerprint(prog: &Program, cfg: &Config, space: &str, extra: &[&str]) ->
     h.write_u64(c.gpu_lanes);
     h.write_u64(cfg.vm.max_ops);
     h.write_u8(cfg.naive_transfers as u8);
+    // the transfer-opt knob changes how plans charge transfers (naive
+    // per-region accounting when off), so cached times must not cross it
+    h.write_u8(cfg.no_transfer_opt as u8);
     h.write_u8(cfg.use_pjrt as u8);
     // the destination set defines what each gene bit *means* (slot width
     // and device numbering), so two searches over different sets must
@@ -826,6 +829,14 @@ mod tests {
         let mut cfg2 = f.cfg.clone();
         cfg2.naive_transfers = true;
         assert_ne!(base, fingerprint(&f.prog, &cfg2, "loops", &[]), "transfer policy change");
+        let mut cfg2b = f.cfg.clone();
+        cfg2b.no_transfer_opt = true;
+        assert_ne!(base, fingerprint(&f.prog, &cfg2b, "loops", &[]), "transfer-opt knob change");
+        assert_ne!(
+            fingerprint(&f.prog, &cfg2, "loops", &[]),
+            fingerprint(&f.prog, &cfg2b, "loops", &[]),
+            "ablation and knob are distinct cache spaces"
+        );
         let mut cfg3 = f.cfg.clone();
         cfg3.cost.gpu_op_ns *= 2.0;
         assert_ne!(base, fingerprint(&f.prog, &cfg3, "loops", &[]), "cost model change");

@@ -78,6 +78,7 @@ pub mod placement;
 pub mod proto;
 pub mod runtime;
 pub mod server;
+pub mod transfer;
 pub mod util;
 pub mod vm;
 pub mod workloads;

@@ -83,6 +83,14 @@ pub struct Metrics {
     placed_gpu: AtomicU64,
     placed_many_core: AtomicU64,
     placed_fpga: AtomicU64,
+    // modeled bus traffic of final (winning) measurements, plus the
+    // transfer pass's audit counter (see `vm::Outcome::presence_violations`;
+    // nonzero means rendered directives diverged from the cost model)
+    xfer_h2d: AtomicU64,
+    xfer_h2d_bytes: AtomicU64,
+    xfer_d2h: AtomicU64,
+    xfer_d2h_bytes: AtomicU64,
+    presence_violations: AtomicU64,
     // offload wall-time histogram (cumulative le buckets, see
     // WALL_MS_BUCKETS) + count + sum
     wall_le: [AtomicU64; WALL_MS_BUCKETS.len()],
@@ -164,6 +172,11 @@ impl Metrics {
             placed_gpu: AtomicU64::new(0),
             placed_many_core: AtomicU64::new(0),
             placed_fpga: AtomicU64::new(0),
+            xfer_h2d: AtomicU64::new(0),
+            xfer_h2d_bytes: AtomicU64::new(0),
+            xfer_d2h: AtomicU64::new(0),
+            xfer_d2h_bytes: AtomicU64::new(0),
+            presence_violations: AtomicU64::new(0),
             wall_le: std::array::from_fn(|_| AtomicU64::new(0)),
             wall_count: AtomicU64::new(0),
             wall_sum_us: AtomicU64::new(0),
@@ -233,6 +246,21 @@ impl Metrics {
             report.search_wall_s,
             &report.placement,
         );
+        if let Some(o) = &report.final_measurement.outcome {
+            self.record_transfers(o.transfers, o.presence_violations);
+        }
+    }
+
+    /// Accumulate one final measurement's modeled bus traffic
+    /// (`(h2d count, h2d bytes, d2h count, d2h bytes)`) and its presence
+    /// audit result.
+    pub fn record_transfers(&self, transfers: (u64, u64, u64, u64), violations: u64) {
+        let (h2d, h2d_b, d2h, d2h_b) = transfers;
+        self.xfer_h2d.fetch_add(h2d, Ordering::Relaxed);
+        self.xfer_h2d_bytes.fetch_add(h2d_b, Ordering::Relaxed);
+        self.xfer_d2h.fetch_add(d2h, Ordering::Relaxed);
+        self.xfer_d2h_bytes.fetch_add(d2h_b, Ordering::Relaxed);
+        self.presence_violations.fetch_add(violations, Ordering::Relaxed);
     }
 
     /// The raw recording behind [`Metrics::record_offload`] (separated so
@@ -422,6 +450,15 @@ impl Metrics {
                     .set("many-core", ld(&self.placed_many_core))
                     .set("fpga", ld(&self.placed_fpga)),
             )
+            .set(
+                "transfers",
+                Json::obj()
+                    .set("h2d", ld(&self.xfer_h2d))
+                    .set("h2d_bytes", ld(&self.xfer_h2d_bytes))
+                    .set("d2h", ld(&self.xfer_d2h))
+                    .set("d2h_bytes", ld(&self.xfer_d2h_bytes))
+                    .set("presence_violations", ld(&self.presence_violations)),
+            )
             .set("offload_wall_ms", wall)
     }
 }
@@ -468,6 +505,8 @@ mod tests {
             "search.evals_per_sec",
             "cache.hit_rate",
             "placements.many-core",
+            "transfers.h2d_bytes",
+            "transfers.presence_violations",
             "offload_wall_ms.le_1",
             "offload_wall_ms.sum_ms",
         ] {
@@ -538,5 +577,19 @@ mod tests {
         assert_eq!(h.get("le_100").and_then(|v| v.as_i64()), Some(2));
         assert_eq!(h.get("le_10000").and_then(|v| v.as_i64()), Some(2));
         assert_eq!(h.get("count").and_then(|v| v.as_i64()), Some(2));
+    }
+
+    #[test]
+    fn transfer_recording_accumulates() {
+        let m = Metrics::new();
+        m.record_transfers((3, 4096, 1, 1024), 0);
+        m.record_transfers((1, 512, 2, 2048), 2);
+        let j = m.snapshot(&Gauges::default());
+        let t = j.get("transfers").unwrap();
+        assert_eq!(t.get("h2d").and_then(|v| v.as_i64()), Some(4));
+        assert_eq!(t.get("h2d_bytes").and_then(|v| v.as_i64()), Some(4608));
+        assert_eq!(t.get("d2h").and_then(|v| v.as_i64()), Some(3));
+        assert_eq!(t.get("d2h_bytes").and_then(|v| v.as_i64()), Some(3072));
+        assert_eq!(t.get("presence_violations").and_then(|v| v.as_i64()), Some(2));
     }
 }

@@ -1,0 +1,953 @@
+//! Post-GA transfer-optimization pass (arXiv:2002.12115's data-region
+//! hoisting, made order-aware).
+//!
+//! The execution engines model residency *dynamically* (`vm::Loc` — MSI
+//! style: a device copy stays valid until the host writes), so the cost
+//! model already pays hoisted transfers: an array that stays on one
+//! destination across consecutive regions is charged once, not per
+//! region. What was missing is the **static** counterpart: a per-region
+//! data-region plan that says, ahead of execution, which entries are
+//! real `copyin`s, which are provably `present`, which exits must
+//! `copyout`, and which device writes never leave the card (`keep`).
+//! The rendered directives ([`crate::analysis::plan_directives`]) and
+//! the measured plan both read this result, so a rendered `present` is
+//! backed by zero staged transfers at that boundary *by construction* —
+//! the engines count any disagreement as
+//! [`crate::vm::Outcome::presence_violations`].
+//!
+//! The pass is a forward abstract interpretation of the entry function
+//! over a small residency lattice:
+//!
+//! | abstract   | meaning (per array)                                   |
+//! |------------|-------------------------------------------------------|
+//! | `Host`     | the host copy is valid (device copies unknown)        |
+//! | `Dev(d)`   | destination `d`'s copy is valid (host unknown)        |
+//! | `Both(d)`  | host *and* destination `d` are valid                  |
+//! | `Unknown`  | nothing provable                                      |
+//!
+//! Control-flow joins take the lattice meet (keep only what every path
+//! proves); loops run to a fixpoint (the lattice has height 3, so a
+//! handful of trial passes converge) and a body-level `break`/`continue`
+//! poisons every array the loop touches, because a mid-body exit can
+//! leave residency in a state the entry/exit meet never saw. Everything
+//! unprovable degrades to plain `copyin`/`copyout` — strictly
+//! conservative, never wrong. `present` is the only claim with
+//! execution-visible teeth, so the pass under-claims it and over-claims
+//! copies.
+
+use crate::ir::{Expr, LValue, LoopId, Program, Stmt};
+use crate::libs;
+use crate::vm::{ExecPlan, GpuRegion};
+use std::collections::{BTreeSet, HashMap, HashSet};
+
+/// The data-region plan for one offload region, in `copy_in`/`copy_out`
+/// list order of the underlying [`GpuRegion`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RegionTransfers {
+    /// staged host→device at region entry
+    pub copy_in: Vec<String>,
+    /// proven already resident on the region's destination at entry
+    pub present: Vec<String>,
+    /// written on the device and later consumed by the host (or another
+    /// destination), so the copy-out is eventually real
+    pub copy_out: Vec<String>,
+    /// written on the device but never read back — the hoisting win:
+    /// no `copyout` clause is rendered for these
+    pub keep: Vec<String>,
+}
+
+/// Whole-plan residency result: one [`RegionTransfers`] per offload
+/// region (keyed by the region's root loop id, like
+/// [`ExecPlan::regions`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TransferPlan {
+    pub regions: HashMap<LoopId, RegionTransfers>,
+}
+
+impl TransferPlan {
+    /// Total `present` claims across all regions (test/report helper).
+    pub fn present_count(&self) -> usize {
+        self.regions.values().map(|r| r.present.len()).sum()
+    }
+}
+
+/// Abstract residency of one array variable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum AbsLoc {
+    Host,
+    Dev(usize),
+    Both(usize),
+    Unknown,
+}
+
+impl AbsLoc {
+    /// Is the copy on destination `d` provably valid?
+    fn valid_on(self, d: usize) -> bool {
+        matches!(self, AbsLoc::Dev(x) | AbsLoc::Both(x) if x == d)
+    }
+
+    /// Lattice meet: keep only facts both sides prove.
+    fn meet(self, other: AbsLoc) -> AbsLoc {
+        use AbsLoc::*;
+        match (self, other) {
+            (a, b) if a == b => a,
+            (Both(d), Dev(e)) | (Dev(e), Both(d)) if d == e => Dev(d),
+            (Both(_), Host) | (Host, Both(_)) => Host,
+            // different destinations: the host copy is the only
+            // candidate both sides might agree on
+            (Both(_), Both(_)) => Host,
+            _ => Unknown,
+        }
+    }
+}
+
+/// Walker state at one program point: residency per array plus pending
+/// device writes (region ids whose `copy_out` has not met a
+/// host-visible consumer yet). `pending` owner sets are ordered so the
+/// pass output is deterministic.
+#[derive(Debug, Clone, PartialEq)]
+struct Snap {
+    state: HashMap<String, AbsLoc>,
+    pending: HashMap<String, BTreeSet<LoopId>>,
+}
+
+impl Snap {
+    fn new() -> Snap {
+        Snap { state: HashMap::new(), pending: HashMap::new() }
+    }
+
+    fn meet(&self, other: &Snap) -> Snap {
+        let mut state = HashMap::new();
+        let keys: HashSet<&String> =
+            self.state.keys().chain(other.state.keys()).collect();
+        for k in keys {
+            let a = self.state.get(k).copied().unwrap_or(AbsLoc::Host);
+            let b = other.state.get(k).copied().unwrap_or(AbsLoc::Host);
+            state.insert(k.clone(), a.meet(b));
+        }
+        // pendings union: a write pending on either path may still need
+        // its copy-out realized later
+        let mut pending = self.pending.clone();
+        for (k, owners) in &other.pending {
+            pending.entry(k.clone()).or_default().extend(owners.iter().copied());
+        }
+        Snap { state, pending }
+    }
+}
+
+struct Pass<'a> {
+    plan: &'a ExecPlan,
+    /// names known to be arrays (entry-function decls + region lists)
+    arrays: HashSet<String>,
+    /// names that may alias another array (`a = b`, `a = f(...)`) —
+    /// permanently `Unknown`, never `present`
+    poisoned: HashSet<String>,
+    snap: Snap,
+    /// region → set of `copy_in` names proven present, intersected
+    /// across record visits (a region under a loop is classified at the
+    /// loop fixpoint, which under-approximates every iteration entry)
+    present: HashMap<LoopId, HashSet<String>>,
+    /// (region, name) copy-outs that met a host-visible consumer
+    realized: HashSet<(LoopId, String)>,
+    /// recording on the final pass, off during loop fixpoint trials
+    record: bool,
+}
+
+/// Compute the order-aware data-region plan for `plan` over `prog`.
+///
+/// Regions rooted outside the entry function (or otherwise out of the
+/// walker's reach) degrade to all-`copyin`/all-`copyout` — the same
+/// conservative shape the naive renderer used.
+pub fn optimize(prog: &Program, plan: &ExecPlan) -> TransferPlan {
+    let mut p = Pass {
+        plan,
+        arrays: HashSet::new(),
+        poisoned: HashSet::new(),
+        snap: Snap::new(),
+        present: HashMap::new(),
+        realized: HashSet::new(),
+        record: true,
+    };
+    for r in plan.regions.values() {
+        p.arrays.extend(r.copy_in.iter().cloned());
+        p.arrays.extend(r.copy_out.iter().cloned());
+    }
+    if let Some(entry) = prog.entry() {
+        collect_arrays(&entry.body, &mut p.arrays);
+        let arrays = p.arrays.clone();
+        collect_poisoned(&entry.body, &arrays, &mut p.poisoned);
+        p.walk_block(&entry.body);
+    }
+    // assemble: partition each region's lists by what the walk proved
+    let mut out = TransferPlan::default();
+    for (id, r) in &plan.regions {
+        let proven = p.present.get(id);
+        let mut rt = RegionTransfers::default();
+        for a in &r.copy_in {
+            if proven.is_some_and(|s| s.contains(a)) {
+                rt.present.push(a.clone());
+            } else {
+                rt.copy_in.push(a.clone());
+            }
+        }
+        for a in &r.copy_out {
+            // unvisited regions conservatively copy everything out
+            if proven.is_none() || p.realized.contains(&(*id, a.clone())) {
+                rt.copy_out.push(a.clone());
+            } else {
+                rt.keep.push(a.clone());
+            }
+        }
+        out.regions.insert(*id, rt);
+    }
+    out
+}
+
+impl<'a> Pass<'a> {
+    fn get(&self, name: &str) -> AbsLoc {
+        if self.poisoned.contains(name) {
+            return AbsLoc::Unknown;
+        }
+        self.snap.state.get(name).copied().unwrap_or(AbsLoc::Host)
+    }
+
+    fn set(&mut self, name: &str, loc: AbsLoc) {
+        if !self.poisoned.contains(name) {
+            self.snap.state.insert(name.to_string(), loc);
+        }
+    }
+
+    /// A host-visible consumer reached `name`: any pending device write
+    /// must really copy out.
+    fn realize(&mut self, name: &str) {
+        if let Some(owners) = self.snap.pending.remove(name) {
+            if self.record {
+                for r in owners {
+                    self.realized.insert((r, name.to_string()));
+                }
+            }
+        }
+    }
+
+    /// CPU-side read (mirrors `vm::host_read`): pulls a device-only
+    /// copy back, so the host copy becomes valid too.
+    fn host_read(&mut self, name: &str) {
+        if !self.arrays.contains(name) {
+            return;
+        }
+        self.realize(name);
+        match self.get(name) {
+            AbsLoc::Dev(d) => self.set(name, AbsLoc::Both(d)),
+            AbsLoc::Unknown => self.set(name, AbsLoc::Host),
+            _ => {}
+        }
+    }
+
+    /// CPU-side write (mirrors `vm::host_write`): device copies stale.
+    fn host_write(&mut self, name: &str) {
+        if !self.arrays.contains(name) {
+            return;
+        }
+        self.realize(name);
+        self.set(name, AbsLoc::Host);
+    }
+
+    /// Region entry/exit (mirrors `exec_gpu_region`): classify each
+    /// `copy_in` name against the pre-state, then apply the residency
+    /// effects of the staged reads and the device-side writes.
+    fn region(&mut self, region: &GpuRegion) {
+        let dest = region.dest;
+        let mut proven: HashSet<String> = HashSet::new();
+        for a in &region.copy_in {
+            let pre = self.get(a);
+            if pre.valid_on(dest) {
+                proven.insert(a.clone());
+                // already resident: no transfer, no state change
+                continue;
+            }
+            // staging from another destination goes through the host
+            // (d2h from the owner first) — that d2h realizes the
+            // owner's pending copy-out
+            if matches!(pre, AbsLoc::Dev(_) | AbsLoc::Unknown) {
+                self.realize(a);
+            }
+            let post = match pre {
+                AbsLoc::Unknown => AbsLoc::Dev(dest),
+                _ => AbsLoc::Both(dest),
+            };
+            self.set(a, post);
+        }
+        if self.record {
+            match self.present.entry(region.root) {
+                std::collections::hash_map::Entry::Occupied(mut e) => {
+                    e.get_mut().retain(|a| proven.contains(a));
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(proven);
+                }
+            }
+        }
+        for a in &region.copy_out {
+            // an earlier pending write to the same array is dead on the
+            // device (overwritten before it ever reached the host)
+            self.snap.pending.remove(a);
+            self.snap.pending.entry(a.clone()).or_default().insert(region.root);
+            self.set(a, AbsLoc::Dev(dest));
+        }
+    }
+
+    /// A library call replaced by a device implementation (function
+    /// block): array args are read on, then conservatively written by,
+    /// the call's destination.
+    fn gpu_call(&mut self, name: &str, array_args: &[String]) {
+        let dest = self.plan.call_dest.get(name).copied().unwrap_or(0);
+        for a in array_args {
+            if matches!(self.get(a), AbsLoc::Dev(_) | AbsLoc::Unknown) {
+                self.realize(a);
+            }
+            // the write makes any earlier pending copy-out dead; the
+            // call itself has no directive slot, so nothing new pends
+            self.snap.pending.remove(a);
+            self.set(a, AbsLoc::Dev(dest));
+        }
+    }
+
+    /// Evaluate an expression on the host: every array it can touch is
+    /// a host read; calls get their own models.
+    fn host_expr(&mut self, e: &Expr) {
+        match e {
+            Expr::IntLit(_) | Expr::FloatLit(_) => {}
+            Expr::Var(n) | Expr::Len { base: n, .. } => self.host_read(n),
+            Expr::Index { base, indices } => {
+                for i in indices {
+                    self.host_expr(i);
+                }
+                self.host_read(base);
+            }
+            Expr::Binary { lhs, rhs, .. } => {
+                self.host_expr(lhs);
+                self.host_expr(rhs);
+            }
+            Expr::Unary { operand, .. } => self.host_expr(operand),
+            Expr::Intrinsic { args, .. } => {
+                for a in args {
+                    self.host_expr(a);
+                }
+            }
+            Expr::Call { name, args } => self.call(name, args),
+        }
+    }
+
+    fn call(&mut self, name: &str, args: &[Expr]) {
+        for a in args {
+            // argument evaluation itself (index math etc.)
+            if !matches!(a, Expr::Var(_)) {
+                self.host_expr(a);
+            }
+        }
+        let array_args: Vec<String> = args
+            .iter()
+            .filter_map(|a| match a {
+                Expr::Var(n) if self.arrays.contains(n) => Some(n.clone()),
+                _ => None,
+            })
+            .collect();
+        if self.plan.gpu_calls.contains(name) {
+            self.gpu_call(name, &array_args);
+        } else if libs::is_library(name) {
+            // CPU library: reads and writes every array arg on the host
+            for a in &array_args {
+                self.host_read(a);
+                self.host_write(a);
+            }
+        } else {
+            // user function: its body is outside this walk — assume
+            // anything about the arrays it received
+            for a in &array_args {
+                self.realize(a);
+                self.snap.state.insert(a.clone(), AbsLoc::Unknown);
+            }
+        }
+    }
+
+    fn walk_block(&mut self, body: &[Stmt]) {
+        for s in body {
+            self.walk_stmt(s);
+        }
+    }
+
+    fn walk_stmt(&mut self, s: &Stmt) {
+        match s {
+            Stmt::Decl { name, dims, init, .. } => {
+                for d in dims {
+                    self.host_expr(d);
+                }
+                if let Some(e) = init {
+                    self.host_expr(e);
+                }
+                if !dims.is_empty() {
+                    // fresh array: any pending write to a shadowed name
+                    // can never reach this new storage
+                    self.snap.pending.remove(name);
+                    self.set(name, AbsLoc::Host);
+                }
+            }
+            Stmt::Assign { target, value, .. } => {
+                self.host_expr(value);
+                match target {
+                    LValue::Var(n) => {
+                        if self.arrays.contains(n) {
+                            // rebinding an array name (aliasing) — the
+                            // prescan poisoned it; stay safe regardless
+                            self.realize(n);
+                            self.snap.state.insert(n.clone(), AbsLoc::Unknown);
+                        }
+                    }
+                    LValue::Index { base, indices } => {
+                        for i in indices {
+                            self.host_expr(i);
+                        }
+                        self.host_write(base);
+                    }
+                }
+            }
+            Stmt::For { id, start, end, step, body, .. } => {
+                if let Some(region) = self.plan.regions.get(id) {
+                    // bounds evaluate inside the region (no host reads)
+                    let region = region.clone();
+                    self.region(&region);
+                    return;
+                }
+                self.host_expr(start);
+                self.host_expr(end);
+                self.host_expr(step);
+                self.host_loop(body, None);
+            }
+            Stmt::While { cond, body } => {
+                // the condition runs before the first iteration and
+                // after every body pass
+                self.host_expr(cond);
+                self.host_loop(body, Some(cond));
+            }
+            Stmt::If { cond, then_body, else_body } => {
+                self.host_expr(cond);
+                let before = self.snap.clone();
+                self.walk_block(then_body);
+                let after_then = std::mem::replace(&mut self.snap, before);
+                self.walk_block(else_body);
+                self.snap = self.snap.meet(&after_then);
+            }
+            Stmt::Call { name, args } => self.call(name, args),
+            Stmt::Return(e) => {
+                if let Some(e) = e {
+                    self.host_expr(e);
+                }
+                // fall through: statements past a return are dynamically
+                // dead, so whatever we record for them is vacuous
+            }
+            Stmt::Break | Stmt::Continue => {}
+            Stmt::Print(e) => self.host_expr(e),
+        }
+    }
+
+    /// A host-level loop that may contain region roots: run the body
+    /// transfer function to a fixpoint (trial passes, no recording),
+    /// then record from the fixpoint state, which under-approximates
+    /// every dynamic iteration entry. A body-level `break`/`continue`
+    /// invalidates the entry/exit meet (a mid-body exit can escape with
+    /// residency neither endpoint saw), so every array the loop touches
+    /// is poisoned to `Unknown` instead.
+    fn host_loop(&mut self, body: &[Stmt], cond: Option<&Expr>) {
+        let entry = self.snap.clone();
+        let mut cur = entry.clone();
+        let was_recording = self.record;
+        self.record = false;
+        for _ in 0..8 {
+            self.snap = cur.clone();
+            self.walk_block(body);
+            if let Some(c) = cond {
+                self.host_expr(c);
+            }
+            let next = cur.meet(&self.snap);
+            if next == cur {
+                break;
+            }
+            cur = next;
+        }
+        self.record = was_recording;
+        if has_own_break_or_continue(body) {
+            let mut touched = HashSet::new();
+            collect_arrays_mentioned(body, &self.arrays, &mut touched);
+            for a in touched {
+                cur.state.insert(a, AbsLoc::Unknown);
+            }
+        }
+        // record from the fixpoint; walk twice so a pending created late
+        // in the body meets its consumer early in the next iteration
+        self.snap = cur.clone();
+        self.walk_block(body);
+        if let Some(c) = cond {
+            self.host_expr(c);
+        }
+        self.walk_block(body);
+        if let Some(c) = cond {
+            self.host_expr(c);
+        }
+        // the loop may run zero times
+        self.snap = self.snap.meet(&entry);
+    }
+}
+
+/// `break`/`continue` belonging to this loop body (not to a loop nested
+/// inside it).
+fn has_own_break_or_continue(body: &[Stmt]) -> bool {
+    body.iter().any(|s| match s {
+        Stmt::Break | Stmt::Continue => true,
+        Stmt::If { then_body, else_body, .. } => {
+            has_own_break_or_continue(then_body) || has_own_break_or_continue(else_body)
+        }
+        _ => false,
+    })
+}
+
+fn collect_arrays(body: &[Stmt], out: &mut HashSet<String>) {
+    for s in body {
+        match s {
+            Stmt::Decl { name, dims, .. } if !dims.is_empty() => {
+                out.insert(name.clone());
+            }
+            Stmt::For { body, .. } | Stmt::While { body, .. } => collect_arrays(body, out),
+            Stmt::If { then_body, else_body, .. } => {
+                collect_arrays(then_body, out);
+                collect_arrays(else_body, out);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Array names mentioned anywhere under `body` (for loop poisoning).
+fn collect_arrays_mentioned(body: &[Stmt], arrays: &HashSet<String>, out: &mut HashSet<String>) {
+    let mut note_expr = |e: &Expr, out: &mut HashSet<String>| {
+        let mut vs = Vec::new();
+        e.collect_vars(&mut vs);
+        out.extend(vs.into_iter().filter(|v| arrays.contains(v)));
+    };
+    for s in body {
+        match s {
+            Stmt::Decl { name, dims, init, .. } => {
+                if !dims.is_empty() {
+                    out.insert(name.clone());
+                }
+                for d in dims {
+                    note_expr(d, out);
+                }
+                if let Some(e) = init {
+                    note_expr(e, out);
+                }
+            }
+            Stmt::Assign { target, value, .. } => {
+                if arrays.contains(target.base_name()) {
+                    out.insert(target.base_name().to_string());
+                }
+                if let LValue::Index { indices, .. } = target {
+                    for i in indices {
+                        note_expr(i, out);
+                    }
+                }
+                note_expr(value, out);
+            }
+            Stmt::For { start, end, step, body, .. } => {
+                note_expr(start, out);
+                note_expr(end, out);
+                note_expr(step, out);
+                collect_arrays_mentioned(body, arrays, out);
+            }
+            Stmt::While { cond, body } => {
+                note_expr(cond, out);
+                collect_arrays_mentioned(body, arrays, out);
+            }
+            Stmt::If { cond, then_body, else_body } => {
+                note_expr(cond, out);
+                collect_arrays_mentioned(then_body, arrays, out);
+                collect_arrays_mentioned(else_body, arrays, out);
+            }
+            Stmt::Call { args, .. } => {
+                for a in args {
+                    note_expr(a, out);
+                }
+            }
+            Stmt::Return(Some(e)) | Stmt::Print(e) => note_expr(e, out),
+            _ => {}
+        }
+    }
+}
+
+/// Names that may alias an array: `x = y` with `y` an array, or
+/// `x = f(...)` (the callee may return one of its array arguments). Both
+/// sides are poisoned for the whole walk — aliases would let a write
+/// through one name invalidate residency tracked under another.
+fn collect_poisoned(body: &[Stmt], arrays: &HashSet<String>, out: &mut HashSet<String>) {
+    let mut note_rhs = |name: &str, e: &Expr, out: &mut HashSet<String>| match e {
+        Expr::Var(v) if arrays.contains(v) => {
+            out.insert(name.to_string());
+            out.insert(v.clone());
+        }
+        Expr::Call { args, .. } => {
+            out.insert(name.to_string());
+            for a in args {
+                if let Expr::Var(v) = a {
+                    if arrays.contains(v) {
+                        out.insert(v.clone());
+                    }
+                }
+            }
+        }
+        _ => {}
+    };
+    for s in body {
+        match s {
+            Stmt::Decl { name, dims, init: Some(e), .. } if dims.is_empty() => {
+                note_rhs(name, e, out);
+            }
+            Stmt::Assign { target: LValue::Var(n), value, .. } => note_rhs(n, value, out),
+            Stmt::For { body, .. } | Stmt::While { body, .. } => {
+                collect_poisoned(body, arrays, out);
+            }
+            Stmt::If { then_body, else_body, .. } => {
+                collect_poisoned(then_body, arrays, out);
+                collect_poisoned(else_body, arrays, out);
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{analyze, build_plan};
+    use crate::frontend::parse;
+    use crate::ir::Lang;
+
+    fn pass_for(src: &str, gene: &[bool]) -> (Program, ExecPlan, TransferPlan) {
+        let p = parse(src, Lang::C, "t").unwrap();
+        let a = analyze(&p);
+        assert_eq!(a.gene_loops().len(), gene.len(), "gene length");
+        let plan = build_plan(&a, gene, false);
+        let tp = optimize(&p, &plan);
+        (p, plan, tp)
+    }
+
+    use crate::ir::Program;
+
+    #[test]
+    fn chained_same_destination_regions_stay_resident() {
+        let (_, plan, tp) = pass_for(
+            r#"void main() {
+                int n = 8;
+                double x[n]; double y[n];
+                for (int i = 0; i < n; i++) { x[i] = i; }
+                for (int i = 0; i < n; i++) { y[i] = x[i] * 2.0; }
+                for (int i = 0; i < n; i++) { x[i] = y[i] + 1.0; }
+            }"#,
+            &[true, true, true],
+        );
+        assert_eq!(plan.regions.len(), 3);
+        // region 1 reads x written by region 0: present
+        assert_eq!(tp.regions[&1].present, vec!["x".to_string()]);
+        assert!(tp.regions[&1].copy_in.is_empty());
+        // region 2 reads y written by region 1: present
+        assert_eq!(tp.regions[&2].present, vec!["y".to_string()]);
+        // nothing is ever read on the host: every device write keeps
+        for id in [0usize, 1, 2] {
+            assert!(tp.regions[&id].copy_out.is_empty(), "region {id} copies out");
+        }
+    }
+
+    #[test]
+    fn host_write_between_regions_blocks_present() {
+        // the order-aware regression case: both regions touch x on the
+        // same destination, but the host writes x between them, so the
+        // second region must copy in, not claim `present`
+        let (_, _, tp) = pass_for(
+            r#"void main() {
+                int n = 8;
+                double x[n]; double y[n];
+                for (int i = 0; i < n; i++) { y[i] = x[i] * 2.0; }
+                x[0] = y[0] + 3.0;
+                for (int i = 0; i < n; i++) { y[i] = x[i] * 0.5 + y[i]; }
+            }"#,
+            &[true, true],
+        );
+        assert_eq!(tp.regions[&0].copy_in, vec!["x".to_string()]);
+        assert_eq!(tp.regions[&1].copy_in, vec!["x".to_string()], "host wrote x in between");
+        // y's device copy stays valid across the host *read* of y[0]
+        assert_eq!(tp.regions[&1].present, vec!["y".to_string()]);
+        // the host read of y[0] realizes region 0's copy-out
+        assert_eq!(tp.regions[&0].copy_out, vec!["y".to_string()]);
+    }
+
+    #[test]
+    fn host_read_after_region_realizes_copy_out() {
+        let (_, _, tp) = pass_for(
+            r#"void main() {
+                int n = 8;
+                double x[n];
+                for (int i = 0; i < n; i++) { x[i] = i * 2.0; }
+                printf("%f\n", x[3]);
+            }"#,
+            &[true],
+        );
+        assert_eq!(tp.regions[&0].copy_out, vec!["x".to_string()]);
+        assert!(tp.regions[&0].keep.is_empty());
+    }
+
+    #[test]
+    fn unread_device_write_is_kept() {
+        let (_, _, tp) = pass_for(
+            r#"void main() {
+                int n = 8;
+                double x[n]; double y[n];
+                for (int i = 0; i < n; i++) { y[i] = x[i] * 2.0; }
+                printf("%f\n", x[0]);
+            }"#,
+            &[true],
+        );
+        // y is written on the device and never consumed again
+        assert_eq!(tp.regions[&0].keep, vec!["y".to_string()]);
+        assert!(tp.regions[&0].copy_out.is_empty());
+    }
+
+    #[test]
+    fn region_under_host_loop_is_classified_at_the_fixpoint() {
+        // iteration 1 enters the region with x host-resident; later
+        // iterations enter with x device-resident — `present` would be
+        // wrong for the first pass, so the fixpoint must reject it
+        let (_, _, tp) = pass_for(
+            r#"void main() {
+                int n = 8;
+                double x[n]; double y[n];
+                for (int t = 0; t < 4; t++) {
+                    for (int i = 0; i < n; i++) { y[i] = x[i] * 2.0; }
+                    x[0] = t;
+                }
+                printf("%f\n", y[0]);
+            }"#,
+            &[true],
+        );
+        let only = tp.regions.values().next().unwrap();
+        assert!(only.present.is_empty(), "{only:?}");
+        assert_eq!(only.copy_in, vec!["x".to_string()]);
+    }
+
+    #[test]
+    fn region_under_host_loop_with_stable_input_is_present() {
+        // x is never invalidated between iterations: after the first
+        // upload it stays resident, and the fixpoint proves it
+        let (_, _, tp) = pass_for(
+            r#"void main() {
+                int n = 8;
+                double x[n]; double y[n];
+                for (int i = 0; i < n; i++) { x[i] = i; }
+                for (int t = 0; t < 4; t++) {
+                    for (int i = 0; i < n; i++) { y[i] = x[i] * 2.0; }
+                }
+                printf("%f\n", y[0]);
+            }"#,
+            &[true, true],
+        );
+        // the seed region leaves x device-resident, the swept region
+        // reuses it every iteration
+        let swept = tp
+            .regions
+            .iter()
+            .find(|(_, r)| !r.copy_in.contains(&"x".to_string()) || !r.present.is_empty())
+            .map(|(_, r)| r)
+            .unwrap();
+        assert_eq!(swept.present, vec!["x".to_string()], "{tp:?}");
+    }
+
+    #[test]
+    fn break_in_host_loop_poisons_residency() {
+        // a mid-body break can exit with x freshly host-written while
+        // the entry/exit meet claims device residency — the pass must
+        // refuse `present` on the trailing region
+        let (_, _, tp) = pass_for(
+            r#"void main() {
+                int n = 8;
+                double x[n]; double y[n];
+                for (int i = 0; i < n; i++) { x[i] = i; }
+                int t = 0;
+                while (t < 5) {
+                    for (int i = 0; i < n; i++) { x[i] = x[i] + 1.0; }
+                    if (t > 2) { break; }
+                    t = t + 1;
+                }
+                for (int i = 0; i < n; i++) { y[i] = x[i] * 2.0; }
+                printf("%f\n", y[0]);
+            }"#,
+            &[true, true, true],
+        );
+        // the last region (reads x) must not claim present
+        let last = tp
+            .regions
+            .iter()
+            .find(|(_, r)| r.copy_out.contains(&"y".to_string()) || r.keep.contains(&"y".to_string()))
+            .map(|(_, r)| r)
+            .unwrap();
+        assert!(last.present.is_empty(), "{last:?}");
+    }
+
+    #[test]
+    fn if_branches_meet_conservatively() {
+        // x device-resident on one branch only: the join must not prove
+        // residency for the trailing region
+        let (_, _, tp) = pass_for(
+            r#"void main() {
+                int n = 8;
+                double x[n]; double y[n];
+                int c = 1;
+                if (c > 0) {
+                    for (int i = 0; i < n; i++) { x[i] = i; }
+                } else {
+                    x[0] = 1.0;
+                }
+                for (int i = 0; i < n; i++) { y[i] = x[i] * 2.0; }
+                printf("%f\n", y[0]);
+            }"#,
+            &[true, true],
+        );
+        let trailing = tp
+            .regions
+            .iter()
+            .find(|(_, r)| {
+                r.copy_in.contains(&"x".to_string()) || r.present.contains(&"x".to_string())
+            })
+            .map(|(_, r)| r)
+            .unwrap();
+        assert!(trailing.present.is_empty(), "{trailing:?}");
+    }
+
+    #[test]
+    fn user_call_with_array_arg_degrades_to_unknown() {
+        let (_, _, tp) = pass_for(
+            r#"void main() {
+                int n = 8;
+                double x[n]; double y[n];
+                for (int i = 0; i < n; i++) { x[i] = i; }
+                touch(x, n);
+                for (int i = 0; i < n; i++) { y[i] = x[i] * 2.0; }
+                printf("%f\n", y[0]);
+            }
+            void touch(double a[], int n) {
+                a[0] = 7.0;
+            }"#,
+            &[true, true],
+        );
+        let trailing = tp
+            .regions
+            .iter()
+            .find(|(_, r)| {
+                r.copy_in.contains(&"x".to_string()) || r.present.contains(&"x".to_string())
+            })
+            .map(|(_, r)| r)
+            .unwrap();
+        assert!(trailing.present.is_empty(), "callee may touch x on the host");
+        // and the callee's host access realizes the seed region's write
+        let seed = tp
+            .regions
+            .iter()
+            .find(|(_, r)| r.copy_out.contains(&"x".to_string()))
+            .map(|(_, r)| r);
+        assert!(seed.is_some(), "{tp:?}");
+    }
+
+    #[test]
+    fn cross_destination_consumption_realizes_copy_out() {
+        use crate::device::TargetKind;
+        use crate::placement::DeviceSet;
+        let p = parse(
+            r#"void main() {
+                int n = 8;
+                double x[n];
+                for (int i = 0; i < n; i++) { x[i] = i; }
+                for (int i = 0; i < n; i++) { x[i] = x[i] * 2.0; }
+            }"#,
+            Lang::C,
+            "t",
+        )
+        .unwrap();
+        let a = analyze(&p);
+        let set = DeviceSet::new(vec![TargetKind::Gpu, TargetKind::Fpga]).unwrap();
+        let plan = crate::placement::build_plan(
+            &a,
+            &set,
+            &[Some(TargetKind::Gpu), Some(TargetKind::Fpga)],
+            false,
+        );
+        let tp = optimize(&p, &plan);
+        // staging x to the FPGA pulls it off the GPU: region 0 copies out
+        assert_eq!(tp.regions[&0].copy_out, vec!["x".to_string()]);
+        assert_eq!(tp.regions[&1].copy_in, vec!["x".to_string()]);
+        assert!(tp.regions[&1].present.is_empty());
+    }
+
+    #[test]
+    fn aliased_arrays_are_poisoned() {
+        let p = parse(
+            r#"void main() {
+                int n = 8;
+                double x[n];
+                for (int i = 0; i < n; i++) { x[i] = i; }
+                for (int i = 0; i < n; i++) { x[i] = x[i] * 2.0; }
+            }"#,
+            Lang::C,
+            "t",
+        )
+        .unwrap();
+        // hand-poison via a synthetic alias statement is hard to parse
+        // from C; exercise collect_poisoned directly
+        let mut arrays = HashSet::new();
+        arrays.insert("x".to_string());
+        let body = vec![Stmt::Assign {
+            target: LValue::Var("b".to_string()),
+            op: crate::ir::AssignOp::Set,
+            value: Expr::Var("x".to_string()),
+        }];
+        let mut poisoned = HashSet::new();
+        collect_poisoned(&body, &arrays, &mut poisoned);
+        assert!(poisoned.contains("x") && poisoned.contains("b"));
+        // a poisoned array never proves present
+        let a = analyze(&p);
+        let plan = build_plan(&a, &[true, true], false);
+        let mut pass = Pass {
+            plan: &plan,
+            arrays: arrays.clone(),
+            poisoned,
+            snap: Snap::new(),
+            present: HashMap::new(),
+            realized: HashSet::new(),
+            record: true,
+        };
+        pass.walk_block(&p.entry().unwrap().body);
+        assert!(pass.present.values().all(|s| s.is_empty()), "{:?}", pass.present);
+    }
+
+    #[test]
+    fn meet_is_commutative_and_sound() {
+        use AbsLoc::*;
+        let all = [Host, Dev(0), Dev(1), Both(0), Both(1), Unknown];
+        for a in all {
+            for b in all {
+                assert_eq!(a.meet(b), b.meet(a), "{a:?} {b:?}");
+                // meet never proves device validity one side lacks
+                for d in [0usize, 1] {
+                    if a.meet(b).valid_on(d) {
+                        assert!(a.valid_on(d) && b.valid_on(d), "{a:?} {b:?} {d}");
+                    }
+                }
+            }
+        }
+    }
+}

@@ -164,6 +164,14 @@ pub struct ExecPlan {
     /// the heterogeneous destination set `dest` indices refer to, in
     /// index order; empty = legacy single-device plan (device 0 only)
     pub devices: Vec<crate::device::TargetKind>,
+    /// order-aware per-region residency plan from the post-GA transfer
+    /// pass (`crate::transfer`). `None` during search trials and for
+    /// naive plans; when present, the engines check every `present`
+    /// claim at region entry and count disagreements in
+    /// [`Outcome::presence_violations`]. Charging itself is unchanged —
+    /// the dynamic residency model *is* the hoisted-transfer oracle the
+    /// pass statically approximates.
+    pub transfers: Option<crate::transfer::TransferPlan>,
 }
 
 impl ExecPlan {
@@ -318,6 +326,10 @@ pub struct Outcome {
     pub energy_j: f64,
     /// h2d count, h2d bytes, d2h count, d2h bytes
     pub transfers: (u64, u64, u64, u64),
+    /// region entries where the plan's static `present` claim did not
+    /// match dynamic residency (a directive/cost-model mismatch; 0 when
+    /// the plan carries no transfer plan)
+    pub presence_violations: u64,
 }
 
 impl Outcome {
@@ -351,6 +363,7 @@ pub struct Vm<'a> {
     region_parallel: HashMap<LoopId, u64>,
     prints: Vec<f64>,
     call_depth: usize,
+    presence_violations: u64,
 }
 
 /// Run `prog` under `plan` with `dev`; convenience wrapper.
@@ -389,6 +402,7 @@ impl<'a> Vm<'a> {
             region_parallel: HashMap::new(),
             prints: Vec::new(),
             call_depth: 0,
+            presence_violations: 0,
         }
     }
 
@@ -414,6 +428,7 @@ impl<'a> Vm<'a> {
             gpu_seconds: self.dev.gpu_seconds(),
             energy_j: cpu_seconds * crate::device::HOST_CPU_WATTS + self.dev.energy_joules(),
             transfers: self.dev.transfer_stats(),
+            presence_violations: self.presence_violations,
         })
     }
 
@@ -631,6 +646,23 @@ impl<'a> Vm<'a> {
     fn exec_gpu_region(&mut self, region: &GpuRegion, s: &Stmt, env: &mut Env) -> Result<Flow> {
         let naive = self.plan.naive_transfers;
         let dest = region.dest;
+        // audit the static transfer plan's `present` claims against the
+        // dynamic residency the staging below is about to consult
+        // (lookup failures fall through: the copy_in loop raises the
+        // canonical error)
+        if !naive {
+            if let Some(tp) = &self.plan.transfers {
+                if let Some(rt) = tp.regions.get(&region.root) {
+                    for name in &rt.present {
+                        if let Ok(arr) = self.lookup_array(env, name) {
+                            if !loc_valid_on(arr.borrow().loc, dest) {
+                                self.presence_violations += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
         // host→device transfers for read arrays
         for name in &region.copy_in {
             let arr = self.lookup_array(env, name)?;
@@ -915,6 +947,13 @@ fn apply_compound(op: AssignOp, old: &Value, rhs: &Value) -> Result<Value> {
 // ---------------------------------------------------------------------------
 // residency accounting shared by both engines
 // ---------------------------------------------------------------------------
+
+/// Is destination `dest`'s copy valid under `loc`? This is the dynamic
+/// truth the transfer pass's static `present` claims are audited
+/// against at region entry (both engines).
+pub(crate) fn loc_valid_on(loc: Loc, dest: usize) -> bool {
+    matches!(loc, Loc::Device(d) | Loc::Both(d) if d == dest)
+}
 
 /// CPU-side read: pull from the owning device if the only valid copy is
 /// there (MSI-style residency; see [`Loc`]).

@@ -18,6 +18,10 @@
 //! | smallloops   | loops too small to profit — GA must keep them on CPU         |
 //! | hetero       | transfer-dominated medium loops: GPU offload loses to PCIe   |
 //! |              | costs, the many-core CPU wins — the mixed-destination case   |
+//! | heterochain  | chained same-array loops: per-region transfer pricing sinks  |
+//! |              | the GPU, residency hoisting (the transfer pass) rescues it   |
+//! | heterohost   | host statement interleaved between two regions — the partial |
+//! |              | re-transfer case the order-aware directive pass must get right|
 
 use crate::ir::Lang;
 
@@ -29,8 +33,18 @@ pub struct Source {
     pub code: &'static str,
 }
 
-pub const APPS: &[&str] =
-    &["mm", "fourier", "stencil", "blackscholes", "mixed", "signal", "smallloops", "hetero"];
+pub const APPS: &[&str] = &[
+    "mm",
+    "fourier",
+    "stencil",
+    "blackscholes",
+    "mixed",
+    "signal",
+    "smallloops",
+    "hetero",
+    "heterochain",
+    "heterohost",
+];
 
 /// Fetch a workload. Returns `None` for unknown app names.
 pub fn get(app: &str, lang: Lang) -> Option<Source> {
@@ -59,6 +73,12 @@ pub fn get(app: &str, lang: Lang) -> Option<Source> {
         ("hetero", Lang::C) => HETERO_C,
         ("hetero", Lang::Python) => HETERO_PY,
         ("hetero", Lang::Java) => HETERO_JAVA,
+        ("heterochain", Lang::C) => HCHAIN_C,
+        ("heterochain", Lang::Python) => HCHAIN_PY,
+        ("heterochain", Lang::Java) => HCHAIN_JAVA,
+        ("heterohost", Lang::C) => HHOST_C,
+        ("heterohost", Lang::Python) => HHOST_PY,
+        ("heterohost", Lang::Java) => HHOST_JAVA,
         ("mm", Lang::JavaScript) => MM_JS,
         ("fourier", Lang::JavaScript) => FOURIER_JS,
         ("stencil", Lang::JavaScript) => STENCIL_JS,
@@ -67,6 +87,8 @@ pub fn get(app: &str, lang: Lang) -> Option<Source> {
         ("signal", Lang::JavaScript) => SIGNAL_JS,
         ("smallloops", Lang::JavaScript) => SMALL_JS,
         ("hetero", Lang::JavaScript) => HETERO_JS,
+        ("heterochain", Lang::JavaScript) => HCHAIN_JS,
+        ("heterohost", Lang::JavaScript) => HHOST_JS,
         _ => return None,
     };
     Some(Source { app: APPS.iter().find(|a| **a == app)?, lang, code })
@@ -805,6 +827,171 @@ public class Hetero {
 "#;
 
 // ---------------------------------------------------------------------------
+// heterochain — a seed loop followed by six chained elementwise loops that
+// cycle the same three arrays (y←x, z←y, x←z, …) on one destination.
+// Priced per region (naive transfers / transfer pass off) every loop pays
+// h2d+d2h and the CPU wins; with residency hoisting the chain stays on the
+// device and only the kernel launch is charged, flipping the placement.
+// ---------------------------------------------------------------------------
+
+const HCHAIN_C: &str = r#"
+#include <stdio.h>
+void main() {
+    int n = 4096;
+    double x[n];
+    double y[n];
+    double z[n];
+    for (int i = 0; i < n; i++) {
+        x[i] = ((i * 13) % 29) * 0.25 + 1.0;
+    }
+    for (int i = 0; i < n; i++) {
+        y[i] = x[i] * 0.5 + x[i];
+    }
+    for (int i = 0; i < n; i++) {
+        z[i] = y[i] * 0.5 + y[i];
+    }
+    for (int i = 0; i < n; i++) {
+        x[i] = z[i] * 0.5 + z[i];
+    }
+    for (int i = 0; i < n; i++) {
+        y[i] = x[i] * 0.5 + x[i];
+    }
+    for (int i = 0; i < n; i++) {
+        z[i] = y[i] * 0.5 + y[i];
+    }
+    for (int i = 0; i < n; i++) {
+        x[i] = z[i] * 0.5 + z[i];
+    }
+    printf("%f\n", x[100]);
+    printf("%f\n", x[2000]);
+}
+"#;
+
+const HCHAIN_PY: &str = r#"
+def main():
+    n = 4096
+    x = zeros(n)
+    y = zeros(n)
+    z = zeros(n)
+    for i in range(n):
+        x[i] = ((i * 13) % 29) * 0.25 + 1.0
+    for i in range(n):
+        y[i] = x[i] * 0.5 + x[i]
+    for i in range(n):
+        z[i] = y[i] * 0.5 + y[i]
+    for i in range(n):
+        x[i] = z[i] * 0.5 + z[i]
+    for i in range(n):
+        y[i] = x[i] * 0.5 + x[i]
+    for i in range(n):
+        z[i] = y[i] * 0.5 + y[i]
+    for i in range(n):
+        x[i] = z[i] * 0.5 + z[i]
+    print(x[100])
+    print(x[2000])
+"#;
+
+const HCHAIN_JAVA: &str = r#"
+public class Heterochain {
+    public static void main(String[] args) {
+        int n = 4096;
+        double[] x = new double[n];
+        double[] y = new double[n];
+        double[] z = new double[n];
+        for (int i = 0; i < n; i++) {
+            x[i] = ((i * 13) % 29) * 0.25 + 1.0;
+        }
+        for (int i = 0; i < n; i++) {
+            y[i] = x[i] * 0.5 + x[i];
+        }
+        for (int i = 0; i < n; i++) {
+            z[i] = y[i] * 0.5 + y[i];
+        }
+        for (int i = 0; i < n; i++) {
+            x[i] = z[i] * 0.5 + z[i];
+        }
+        for (int i = 0; i < n; i++) {
+            y[i] = x[i] * 0.5 + x[i];
+        }
+        for (int i = 0; i < n; i++) {
+            z[i] = y[i] * 0.5 + y[i];
+        }
+        for (int i = 0; i < n; i++) {
+            x[i] = z[i] * 0.5 + z[i];
+        }
+        System.out.println(x[100]);
+        System.out.println(x[2000]);
+    }
+}
+"#;
+
+// ---------------------------------------------------------------------------
+// heterohost — a host statement (`x[0] = y[0] + 3.0`) wedged between two
+// regions that both read x. The second region must re-stage x (copyin) but
+// may keep y resident (present) — the order-aware case a count-based
+// directive heuristic gets wrong.
+// ---------------------------------------------------------------------------
+
+const HHOST_C: &str = r#"
+#include <stdio.h>
+void main() {
+    int n = 2048;
+    double x[n];
+    double y[n];
+    for (int i = 0; i < n; i++) {
+        x[i] = ((i * 7) % 13) * 0.5 + 1.0;
+    }
+    for (int i = 0; i < n; i++) {
+        y[i] = x[i] * 2.0 + 1.0;
+    }
+    x[0] = y[0] + 3.0;
+    for (int i = 0; i < n; i++) {
+        y[i] = x[i] * 0.5 + y[i];
+    }
+    printf("%f\n", y[100]);
+    printf("%f\n", x[0]);
+}
+"#;
+
+const HHOST_PY: &str = r#"
+def main():
+    n = 2048
+    x = zeros(n)
+    y = zeros(n)
+    for i in range(n):
+        x[i] = ((i * 7) % 13) * 0.5 + 1.0
+    for i in range(n):
+        y[i] = x[i] * 2.0 + 1.0
+    x[0] = y[0] + 3.0
+    for i in range(n):
+        y[i] = x[i] * 0.5 + y[i]
+    print(y[100])
+    print(x[0])
+"#;
+
+const HHOST_JAVA: &str = r#"
+public class Heterohost {
+    public static void main(String[] args) {
+        int n = 2048;
+        double[] x = new double[n];
+        double[] y = new double[n];
+        for (int i = 0; i < n; i++) {
+            x[i] = ((i * 7) % 13) * 0.5 + 1.0;
+        }
+        for (int i = 0; i < n; i++) {
+            y[i] = x[i] * 2.0 + 1.0;
+        }
+        x[0] = y[0] + 3.0;
+        for (int i = 0; i < n; i++) {
+            y[i] = x[i] * 0.5 + y[i];
+        }
+        System.out.println(y[100]);
+        System.out.println(x[0]);
+    }
+}
+"#;
+
+// ---------------------------------------------------------------------------
 // JavaScript variants — semantically identical to the C/Python/Java
 // sources above (same literals, same expression shapes), so all four
 // front ends lower each app to the same IR and print the same checksums.
@@ -1044,6 +1231,58 @@ function main() {
 }
 "#;
 
+const HCHAIN_JS: &str = r#"
+function main() {
+    let n = 4096;
+    let x = zeros(n);
+    let y = zeros(n);
+    let z = zeros(n);
+    for (let i = 0; i < n; i++) {
+        x[i] = ((i * 13) % 29) * 0.25 + 1.0;
+    }
+    for (let i = 0; i < n; i++) {
+        y[i] = x[i] * 0.5 + x[i];
+    }
+    for (let i = 0; i < n; i++) {
+        z[i] = y[i] * 0.5 + y[i];
+    }
+    for (let i = 0; i < n; i++) {
+        x[i] = z[i] * 0.5 + z[i];
+    }
+    for (let i = 0; i < n; i++) {
+        y[i] = x[i] * 0.5 + x[i];
+    }
+    for (let i = 0; i < n; i++) {
+        z[i] = y[i] * 0.5 + y[i];
+    }
+    for (let i = 0; i < n; i++) {
+        x[i] = z[i] * 0.5 + z[i];
+    }
+    console.log(x[100]);
+    console.log(x[2000]);
+}
+"#;
+
+const HHOST_JS: &str = r#"
+function main() {
+    let n = 2048;
+    let x = zeros(n);
+    let y = zeros(n);
+    for (let i = 0; i < n; i++) {
+        x[i] = ((i * 7) % 13) * 0.5 + 1.0;
+    }
+    for (let i = 0; i < n; i++) {
+        y[i] = x[i] * 2.0 + 1.0;
+    }
+    x[0] = y[0] + 3.0;
+    for (let i = 0; i < n; i++) {
+        y[i] = x[i] * 0.5 + y[i];
+    }
+    console.log(y[100]);
+    console.log(x[0]);
+}
+"#;
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1120,6 +1359,36 @@ mod tests {
         assert_eq!(
             a.gene_loops().len(),
             5,
+            "{:?}",
+            a.loops.iter().map(|l| l.reject_reason.clone()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn heterochain_loops_are_all_offloadable() {
+        // the transfer-pass flip workload: seed + six chained elementwise
+        // loops, all legal placement slots
+        let s = get("heterochain", Lang::C).unwrap();
+        let p = parse(s.code, Lang::C, "heterochain").unwrap();
+        let a = crate::analysis::analyze(&p);
+        assert_eq!(a.loops.len(), 7);
+        assert_eq!(
+            a.gene_loops().len(),
+            7,
+            "{:?}",
+            a.loops.iter().map(|l| l.reject_reason.clone()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn heterohost_loops_are_all_offloadable() {
+        let s = get("heterohost", Lang::C).unwrap();
+        let p = parse(s.code, Lang::C, "heterohost").unwrap();
+        let a = crate::analysis::analyze(&p);
+        assert_eq!(a.loops.len(), 3);
+        assert_eq!(
+            a.gene_loops().len(),
+            3,
             "{:?}",
             a.loops.iter().map(|l| l.reject_reason.clone()).collect::<Vec<_>>()
         );

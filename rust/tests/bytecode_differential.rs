@@ -20,6 +20,7 @@ use envadapt::device::{CostModel, GpuDevice};
 use envadapt::frontend::parse;
 use envadapt::ga::GaConfig;
 use envadapt::ir::{Lang, Program};
+use envadapt::transfer;
 use envadapt::util::Rng;
 use envadapt::vm::{self, ExecEngine, Outcome, VmConfig};
 use envadapt::workloads;
@@ -55,6 +56,10 @@ fn assert_same_outcome(tag: &str, tree: &Outcome, byte: &Outcome) {
         byte.energy_j
     );
     assert_eq!(tree.transfers, byte.transfers, "{tag}: transfers");
+    assert_eq!(
+        tree.presence_violations, byte.presence_violations,
+        "{tag}: presence_violations"
+    );
 }
 
 /// Compare both engines on one program under one gene (CPU-only when
@@ -68,7 +73,12 @@ fn check_program(tag: &str, p: &Program, gene: Option<(&[bool], bool)>) {
         ),
         Some((bits, naive)) => {
             let a = analysis::analyze(p);
-            let plan = analysis::build_plan(&a, bits, naive);
+            let mut plan = analysis::build_plan(&a, bits, naive);
+            if !naive {
+                // every hoisted plan carries its transfer plan, so both
+                // engines audit the rendered `present` set while running
+                plan.transfers = Some(transfer::optimize(p, &plan));
+            }
             let mut d1 = GpuDevice::simulated(CostModel::default());
             let mut d2 = GpuDevice::simulated(CostModel::default());
             (
@@ -78,16 +88,22 @@ fn check_program(tag: &str, p: &Program, gene: Option<(&[bool], bool)>) {
         }
     };
     match (tree, byte) {
-        (Ok(t), Ok(b)) => assert_same_outcome(tag, &t, &b),
+        (Ok(t), Ok(b)) => {
+            assert_same_outcome(tag, &t, &b);
+            assert_eq!(
+                t.presence_violations, 0,
+                "{tag}: transfer pass claimed presence the dynamic model disproved"
+            );
+        }
         (Err(t), Err(b)) => assert_eq!(t.to_string(), b.to_string(), "{tag}: error text"),
         (t, b) => panic!("{tag}: engines disagree on success: tree={t:?} bytecode={b:?}"),
     }
 }
 
 #[test]
-fn all_32_workload_sources_cpu_bit_identical() {
+fn all_workload_sources_cpu_bit_identical() {
     let sources = workloads::all();
-    assert_eq!(sources.len(), 32, "expected 8 apps x 4 languages");
+    assert_eq!(sources.len(), 40, "expected 10 apps x 4 languages");
     for s in &sources {
         let p = parse(s.code, s.lang, s.app).unwrap();
         check_program(&format!("{}/{:?} cpu", s.app, s.lang), &p, None);
@@ -95,7 +111,7 @@ fn all_32_workload_sources_cpu_bit_identical() {
 }
 
 #[test]
-fn all_32_workload_sources_offloaded_bit_identical() {
+fn all_workload_sources_offloaded_bit_identical() {
     for s in &workloads::all() {
         let p = parse(s.code, s.lang, s.app).unwrap();
         let a = analysis::analyze(&p);

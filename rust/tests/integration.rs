@@ -123,7 +123,7 @@ fn directive_rendering_round_trips_for_every_language() {
             let a = analysis::analyze(&p);
             let gene = vec![true; a.gene_loops().len()];
             let plan = analysis::build_plan(&a, &gene, false);
-            let dirs = analysis::plan_directives(&a, &plan);
+            let dirs = analysis::plan_directives(&p, &plan);
             let s = render::render(&p, &dirs);
             assert!(!s.is_empty());
             if !plan.regions.is_empty() {

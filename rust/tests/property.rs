@@ -267,7 +267,11 @@ fn prop_bytecode_outcome_bit_identical_to_tree_walker() {
             let a = analysis::analyze(&p);
             let mut grng = Rng::new(*gene_seed);
             let gene: Vec<bool> = (0..a.gene_loops().len()).map(|_| grng.bool()).collect();
-            let plan = analysis::build_plan(&a, &gene, grng.bool());
+            let naive = grng.bool();
+            let mut plan = analysis::build_plan(&a, &gene, naive);
+            if !naive {
+                plan.transfers = Some(envadapt::transfer::optimize(&p, &plan));
+            }
             let mut d1 = GpuDevice::simulated(CostModel::default());
             let mut d2 = GpuDevice::simulated(CostModel::default());
             let t = vm::run(&p, &plan, &mut d1, VmConfig::default()).unwrap();
@@ -281,6 +285,46 @@ fn prop_bytecode_outcome_bit_identical_to_tree_walker() {
                 && t.gpu_seconds.to_bits() == b.gpu_seconds.to_bits()
                 && t.energy_j.to_bits() == b.energy_j.to_bits()
                 && t.transfers == b.transfers
+                && t.presence_violations == b.presence_violations
+        },
+    );
+}
+
+#[test]
+fn prop_transfer_plan_is_sound_and_audit_only() {
+    // Two invariants of the transfer-optimization pass, for arbitrary
+    // programs and arbitrary hoisted-plan genes:
+    //  1. soundness — every array the pass marks `present` really is
+    //     device-resident at region entry (zero presence violations), and
+    //  2. audit-only — attaching the plan changes *nothing* the dynamic
+    //     model charges: op counts, modeled seconds, energy and transfer
+    //     stats are bit-identical with and without it.
+    check(
+        &PropConfig { cases: 60, seed: 0x7AFE, max_size: 8 },
+        |rng, size| {
+            let src = random_c_program(rng, size);
+            let gene_seed = rng.next_u64();
+            (src, gene_seed)
+        },
+        |(src, gene_seed)| {
+            let p = parse(src, Lang::C, "prop").unwrap();
+            let a = analysis::analyze(&p);
+            let mut grng = Rng::new(*gene_seed);
+            let gene: Vec<bool> = (0..a.gene_loops().len()).map(|_| grng.bool()).collect();
+            let bare = analysis::build_plan(&a, &gene, false);
+            let mut planned = bare.clone();
+            planned.transfers = Some(envadapt::transfer::optimize(&p, &planned));
+            let mut d1 = GpuDevice::simulated(CostModel::default());
+            let mut d2 = GpuDevice::simulated(CostModel::default());
+            let o1 = vm::run(&p, &bare, &mut d1, VmConfig::default()).unwrap();
+            let o2 = vm::run(&p, &planned, &mut d2, VmConfig::default()).unwrap();
+            o2.presence_violations == 0
+                && o1.cpu_ops == o2.cpu_ops
+                && o1.gpu_ops == o2.gpu_ops
+                && o1.cpu_seconds.to_bits() == o2.cpu_seconds.to_bits()
+                && o1.gpu_seconds.to_bits() == o2.gpu_seconds.to_bits()
+                && o1.energy_j.to_bits() == o2.energy_j.to_bits()
+                && o1.transfers == o2.transfers
         },
     );
 }

@@ -1,0 +1,199 @@
+//! Consistency suite for the post-GA transfer-optimization pass
+//! (`envadapt::transfer`): the data-region directives the coordinator
+//! renders must describe exactly what the measured cost model charged.
+//!
+//! Three contracts:
+//!  * every rendered `present` clause is backed by zero staged transfers
+//!    at that region boundary in the measured `Outcome` (audited by the
+//!    engines as `presence_violations`),
+//!  * on the transfer-dominated workload family the pass changes the
+//!    GA's placement decision and reduces modeled transfer volume, and
+//!  * under the `naive_transfers` ablation the pass is a strict no-op.
+
+mod common;
+
+use envadapt::analysis;
+use envadapt::config::Config;
+use envadapt::coordinator::Coordinator;
+use envadapt::device::{CostModel, GpuDevice};
+use envadapt::frontend::parse;
+use envadapt::ir::Lang;
+use envadapt::transfer;
+use envadapt::util::Rng;
+use envadapt::vm::{self, ExecPlan, Outcome, VmConfig};
+use envadapt::workloads;
+
+fn run_sim(p: &envadapt::ir::Program, plan: &ExecPlan) -> Outcome {
+    let mut dev = GpuDevice::simulated(CostModel::default());
+    vm::run(p, plan, &mut dev, VmConfig::default()).unwrap()
+}
+
+/// All-true-gene hoisted plan with the transfer plan attached.
+fn planned(p: &envadapt::ir::Program) -> ExecPlan {
+    let a = analysis::analyze(p);
+    let gene = vec![true; a.gene_loops().len()];
+    let mut plan = analysis::build_plan(&a, &gene, false);
+    plan.transfers = Some(transfer::optimize(p, &plan));
+    plan
+}
+
+#[test]
+fn rendered_present_is_backed_by_zero_staging_on_every_workload() {
+    // every built-in source in every language: the pass's `present`
+    // claims — the ones plan_directives renders — must all hold
+    // dynamically (no region entry where the array still had to cross
+    // the bus).
+    for s in workloads::all() {
+        let p = parse(s.code, s.lang, s.app).unwrap();
+        let plan = planned(&p);
+        let o = run_sim(&p, &plan);
+        assert_eq!(
+            o.presence_violations, 0,
+            "{} [{}]: rendered present not backed by residency",
+            s.app, s.lang
+        );
+        // and the rendered directives are the plan, not a re-derivation
+        let dirs = analysis::plan_directives(&p, &plan);
+        let tp = plan.transfers.as_ref().unwrap();
+        for (id, rt) in &tp.regions {
+            let d = dirs.get(id).unwrap_or_else(|| panic!("{}: region {id} lost", s.app));
+            let mut want = rt.present.clone();
+            want.sort();
+            let mut got = d.present.clone();
+            got.sort();
+            assert_eq!(got, want, "{} [{}] region {id}: present mismatch", s.app, s.lang);
+        }
+    }
+}
+
+#[test]
+fn rendered_present_is_backed_by_zero_staging_on_generated_programs() {
+    // same contract over generated conformance programs in all four
+    // languages, under random genes — the pass must stay sound on
+    // program shapes nobody hand-picked.
+    let mut rng = Rng::new(0xC0517);
+    for case in 0..40 {
+        let spec = common::random_spec(&mut rng, 8);
+        let gene_seed = rng.next_u64();
+        for lang in Lang::all() {
+            let src = common::emit(&spec, lang);
+            let p = parse(&src, lang, "consistency").unwrap();
+            let a = analysis::analyze(&p);
+            let mut grng = Rng::new(gene_seed);
+            let gene: Vec<bool> = (0..a.gene_loops().len()).map(|_| grng.bool()).collect();
+            let mut plan = analysis::build_plan(&a, &gene, false);
+            plan.transfers = Some(transfer::optimize(&p, &plan));
+            let o = run_sim(&p, &plan);
+            assert_eq!(o.presence_violations, 0, "case {case} [{lang}]");
+        }
+    }
+}
+
+#[test]
+fn transfer_pass_flips_placement_and_cuts_transfer_volume_on_heterochain() {
+    // the workload the pass was built for: six chained same-destination
+    // loops. With the pass off, plans charge naive per-region transfers,
+    // PCIe costs sink the GPU and the chain stays on the CPU; with it
+    // on, residency hoisting makes the GPU win — a different placement,
+    // a faster plan, and strictly less modeled transfer volume.
+    let mut on_cfg = Config::fast_sim();
+    on_cfg.reuse_patterns = false;
+    let mut off_cfg = on_cfg.clone();
+    off_cfg.no_transfer_opt = true;
+
+    let s = workloads::get("heterochain", Lang::C).unwrap();
+    let on = Coordinator::new(on_cfg).offload_source(s.code, Lang::C, "heterochain").unwrap();
+    let off = Coordinator::new(off_cfg).offload_source(s.code, Lang::C, "heterochain").unwrap();
+    assert!(on.final_measurement.ok && off.final_measurement.ok);
+
+    // ≥1 placement decision flips
+    assert_ne!(on.placement, off.placement, "pass on/off chose identical placements");
+    assert!(on.final_s < off.final_s, "on {} !< off {}", on.final_s, off.final_s);
+
+    // the pass's plan is attached on, absent off
+    assert!(on.final_plan.transfers.is_some());
+    assert!(off.final_plan.transfers.is_none());
+    assert!(off.final_plan.naive_transfers, "pass off must price transfers per region");
+
+    // the ON-selected placement, priced under the pass's hoisted
+    // accounting vs naive per-region accounting: strictly fewer modeled
+    // bytes on the bus (the "reduces modeled transfer volume" claim)
+    let p = parse(s.code, Lang::C, "heterochain").unwrap();
+    let hoisted_plan = on.final_plan.clone();
+    let mut naive_plan = on.final_plan.clone();
+    naive_plan.naive_transfers = true;
+    naive_plan.transfers = None;
+    let ho = run_sim(&p, &hoisted_plan);
+    let na = run_sim(&p, &naive_plan);
+    let hoisted_bytes = ho.transfers.1 + ho.transfers.3;
+    let naive_bytes = na.transfers.1 + na.transfers.3;
+    assert!(
+        hoisted_bytes < naive_bytes,
+        "hoisted {hoisted_bytes} bytes !< naive {naive_bytes} bytes"
+    );
+
+    // the measured final outcome backs every rendered present clause
+    let o = on.final_measurement.outcome.as_ref().unwrap();
+    assert_eq!(o.presence_violations, 0);
+    // the chained regions really render as resident
+    assert!(
+        on.annotated_source.contains("present("),
+        "expected present clauses in:\n{}",
+        on.annotated_source
+    );
+    assert!(
+        !off.annotated_source.contains("present("),
+        "pass off must fall back to full copies:\n{}",
+        off.annotated_source
+    );
+}
+
+#[test]
+fn heterohost_region_after_host_write_restages_only_the_touched_array() {
+    // the order-aware case: host writes x[0] between two regions that
+    // both touch x and y — x must be re-staged (copyin) in the second
+    // region while y stays resident (present).
+    let s = workloads::get("heterohost", Lang::C).unwrap();
+    let p = parse(s.code, Lang::C, "heterohost").unwrap();
+    let plan = planned(&p);
+    let dirs = analysis::plan_directives(&p, &plan);
+    // loop ids: 0 = seed (writes x), 1 = first y loop, 2 = second y loop
+    let second = dirs.get(&2).expect("second y region");
+    assert!(
+        second.copy_in.contains(&"x".to_string()),
+        "x was host-written and must be re-staged: {second:?}"
+    );
+    assert!(
+        !second.present.contains(&"x".to_string()),
+        "x must not be claimed resident: {second:?}"
+    );
+    assert!(
+        second.present.contains(&"y".to_string()),
+        "y was only host-read and stays resident: {second:?}"
+    );
+    let o = run_sim(&p, &plan);
+    assert_eq!(o.presence_violations, 0);
+}
+
+#[test]
+fn naive_ablation_is_a_strict_noop_for_the_transfer_pass() {
+    // satellite contract: with the E4 ablation (naive per-region
+    // transfers) enabled, toggling the transfer pass changes *nothing* —
+    // byte-identical annotated source, identical gene/placement/cost,
+    // and no transfer plan attached either way.
+    let mut base = Config::fast_sim();
+    base.reuse_patterns = false;
+    base.naive_transfers = true;
+    let mut with_knob = base.clone();
+    with_knob.no_transfer_opt = true;
+
+    let s = workloads::get("hetero", Lang::C).unwrap();
+    let a = Coordinator::new(base).offload_source(s.code, Lang::C, "hetero").unwrap();
+    let b = Coordinator::new(with_knob).offload_source(s.code, Lang::C, "hetero").unwrap();
+    assert_eq!(a.best_gene, b.best_gene);
+    assert_eq!(a.placement, b.placement);
+    assert_eq!(a.final_s.to_bits(), b.final_s.to_bits());
+    assert_eq!(a.annotated_source, b.annotated_source);
+    assert!(a.final_plan.transfers.is_none());
+    assert!(b.final_plan.transfers.is_none());
+}
