@@ -3,15 +3,17 @@
 
 Compares a fresh bench JSON against the committed baseline and fails
 when throughput regressed by more than the threshold on any row. Covers
-the five bench files: ``BENCH_engine.json`` (rows keyed by ``workers``,
+the six bench files: ``BENCH_engine.json`` (rows keyed by ``workers``,
 valued in ``evals_per_sec``; ``cargo bench -- engine``),
 ``BENCH_vm.json`` (rows keyed by ``workload``, valued in
 ``evals_per_sec``; ``cargo bench -- vm``), ``BENCH_serve.json``
 (rows keyed by ``clients``, valued in ``requests_per_sec``;
 ``cargo bench -- serve``), ``BENCH_patterndb.json`` (rows keyed by
 ``records``, valued in ``lookups_per_sec``; ``cargo bench --
-patterndb``) and ``BENCH_transfer.json`` (rows keyed by ``workload``,
-valued in ``plans_per_sec``; ``cargo bench -- transfer``).
+patterndb``), ``BENCH_transfer.json`` (rows keyed by ``workload``,
+valued in ``plans_per_sec``; ``cargo bench -- transfer``) and
+``BENCH_router.json`` (rows keyed by ``shards``, valued in
+``requests_per_sec``; ``cargo bench -- router``).
 
 For ``patterndb_lookup`` the gate additionally asserts *flatness* on the
 fresh run: per-lookup throughput across the record-count rows (10k →
@@ -37,9 +39,9 @@ FLAT_RATIO = 5.0  # patterndb_lookup: max/min lookups_per_sec across sizes
 def row_key(r):
     # BENCH_engine.json rows are per worker count, BENCH_vm.json rows per
     # workload family, BENCH_serve.json rows per concurrent-client count,
-    # BENCH_patterndb.json rows per record count; any of those values is
-    # a stable row identity
-    for key in ("workers", "workload", "clients", "records"):
+    # BENCH_patterndb.json rows per record count, BENCH_router.json rows
+    # per shard count; any of those values is a stable row identity
+    for key in ("workers", "workload", "clients", "records", "shards"):
         if r.get(key) is not None:
             return r.get(key)
     return None

@@ -1,0 +1,140 @@
+//! Sharded-cluster quickstart: three offload daemons behind one
+//! wire-v2 router (`envadapt route`), all in-process.
+//!
+//! The demo drives the four-language conformance twins through the
+//! router twice: round 1 runs a real plan search on whichever shard
+//! each program's fingerprint homes to; round 2 replays every pattern
+//! from the cluster's logical pattern DB with **zero** new
+//! measurements — the client never learns there is more than one
+//! daemon. It finishes by scraping each shard directly to show where
+//! the work actually landed and what fraction of it was replayed.
+//!
+//! ```bash
+//! cargo run --release --example cluster_demo
+//! ```
+
+use envadapt::config::Config;
+use envadapt::ir::Lang;
+use envadapt::proto::{self, Response};
+use envadapt::router::{self, RouterOptions};
+use envadapt::server::{self, ServeOptions};
+use envadapt::workloads;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+const TWINS: [(&str, Lang); 4] = [
+    ("mm", Lang::C),
+    ("fourier", Lang::Python),
+    ("stencil", Lang::Java),
+    ("blackscholes", Lang::JavaScript),
+];
+
+fn roundtrip(addr: &str, line: &str) -> anyhow::Result<Response> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(line.as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()?;
+    let mut resp = String::new();
+    BufReader::new(stream).read_line(&mut resp)?;
+    Response::parse_line(&resp)
+}
+
+fn main() -> anyhow::Result<()> {
+    // three independent daemons, each with its own pool and pattern DB
+    let mut backends = Vec::new();
+    let mut shard_addrs = Vec::new();
+    for _ in 0..3 {
+        let h = server::spawn_tcp(
+            Config::fast_sim(),
+            ServeOptions { pool: 2, db_path: None, ..Default::default() },
+            "127.0.0.1:0",
+        )?;
+        shard_addrs.push(h.addr().to_string());
+        backends.push(h);
+    }
+    // the router fronts them as one logical service; anti-entropy runs
+    // on its default 500 ms cadence so learned plans replicate live
+    let rh = router::spawn_router(
+        RouterOptions { shards: shard_addrs.clone(), ..Default::default() },
+        "127.0.0.1:0",
+    )?;
+    let front = rh.addr().to_string();
+    println!("3-shard cluster behind router at {front}");
+    for (i, a) in shard_addrs.iter().enumerate() {
+        println!("  shard {i}: {a}");
+    }
+    println!();
+
+    let mut id = 0i64;
+    for round in 1..=2 {
+        println!("-- round {round} --");
+        for (app, lang) in TWINS {
+            let code = workloads::get(app, lang).unwrap().code;
+            id += 1;
+            let r = roundtrip(&front, &proto::offload_request(id, app, lang, code))?;
+            anyhow::ensure!(r.ok, "offload failed: {:?}", r.error);
+            let rep = r.report().expect("offload report");
+            let speedup = rep.get("speedup").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+            let m = rep.get("measurements").and_then(|v| v.as_i64()).unwrap_or(-1);
+            let how = rep
+                .get("pattern_reuse")
+                .and_then(|v| v.as_str())
+                .map(|s| format!("pattern DB: {s}"))
+                .unwrap_or_else(|| "full search".to_string());
+            println!(
+                "  {app:<13}[{:<10}] speedup {speedup:>6.2}x  {m:>3} measurements  ({how})",
+                lang.name()
+            );
+        }
+    }
+
+    // the router's own view: where did the traffic go?
+    id += 1;
+    let m = roundtrip(&front, &format!("{{\"op\":\"metrics\",\"id\":{id}}}"))?;
+    let rv = m
+        .body
+        .get("metrics")
+        .and_then(|j| j.get("router"))
+        .expect("router metrics");
+    let ri = |k: &str| rv.get(k).and_then(|v| v.as_i64()).unwrap_or(-1);
+    println!(
+        "\nrouter: {} requests, {} forwarded, {} healthy shards, {} replica merges",
+        ri("requests_total"),
+        ri("forwarded_total"),
+        ri("healthy_shards"),
+        ri("replica_merges"),
+    );
+
+    // per-shard ground truth: scrape each daemon directly and report its
+    // replay ratio — round 2 (and any replicated re-homing) is pure replay
+    println!("\nper-shard replay ratios:");
+    for (i, addr) in shard_addrs.iter().enumerate() {
+        id += 1;
+        let m = roundtrip(addr, &format!("{{\"op\":\"metrics\",\"id\":{id}}}"))?;
+        let off = m
+            .body
+            .get("metrics")
+            .and_then(|j| j.get("offloads"))
+            .expect("shard offload metrics");
+        let g = |k: &str| off.get(k).and_then(|v| v.as_i64()).unwrap_or(0);
+        let ratio = off
+            .get("replay_ratio")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0);
+        println!(
+            "  shard {i}: {} offloads ({} searched, {} replayed) — replay ratio {ratio:.2}",
+            g("total"),
+            g("searched"),
+            g("replayed"),
+        );
+    }
+
+    // drain the router first (it propagates shutdown to every shard),
+    // then join the backends
+    rh.shutdown()?;
+    for h in backends {
+        let _ = h.shutdown();
+    }
+    println!("\ncluster drained cleanly");
+    Ok(())
+}

@@ -73,6 +73,9 @@ fn main() {
     if want("serve") {
         serve_throughput();
     }
+    if want("router") {
+        router_throughput();
+    }
     if want("patterndb") {
         patterndb_lookup();
     }
@@ -386,6 +389,125 @@ fn serve_throughput() {
         eprintln!("warning: could not write BENCH_serve.json: {e}");
     }
     handle.shutdown().expect("clean shutdown");
+}
+
+/// router_throughput: requests/second through the sharded serve cluster
+/// (`envadapt route` in front of 1 / 2 / 3 daemons) on the replay path.
+/// Four primed workloads fan across the shards by fingerprint, so the
+/// cluster rows measure what the router buys: rendezvous placement,
+/// sticky forwarding, and the per-shard pools working in parallel. The
+/// 1-shard row is the router-overhead baseline against BENCH_serve.json.
+/// Records the baseline to BENCH_router.json for the CI regression gate
+/// (rows keyed by shard count).
+fn router_throughput() {
+    use envadapt::proto::{self, Response};
+    use envadapt::router::{self, RouterOptions};
+    use envadapt::server::{self, ServeOptions};
+    use envadapt::util::json::Json;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::{Arc, Barrier};
+
+    println!("## router — sharded-cluster replay throughput (requests/sec)\n");
+
+    const APPS: [&str; 4] = ["mm", "fourier", "stencil", "blackscholes"];
+    const CLIENTS: usize = 8;
+    const REQS_PER_CLIENT: usize = 25;
+
+    let mut rows = Vec::new();
+    let mut arr = Vec::new();
+    for shards in [1usize, 2, 3] {
+        let mut backends = Vec::new();
+        let mut addrs = Vec::new();
+        for _ in 0..shards {
+            let h = server::spawn_tcp(
+                Config::fast_sim(),
+                ServeOptions { pool: 2, ..Default::default() },
+                "127.0.0.1:0",
+            )
+            .expect("spawn shard");
+            addrs.push(h.addr().to_string());
+            backends.push(h);
+        }
+        // anti-entropy off: the bench measures routing, not replication
+        let rh = router::spawn_router(
+            RouterOptions { shards: addrs, sync_interval_ms: 3_600_000, ..Default::default() },
+            "127.0.0.1:0",
+        )
+        .expect("spawn router");
+        let addr = rh.addr();
+
+        let roundtrip = |line: &str| -> Response {
+            let mut stream = TcpStream::connect(addr).expect("connect");
+            stream.write_all(line.as_bytes()).unwrap();
+            stream.write_all(b"\n").unwrap();
+            stream.flush().unwrap();
+            let mut resp = String::new();
+            BufReader::new(stream).read_line(&mut resp).unwrap();
+            Response::parse_line(&resp).unwrap()
+        };
+
+        // prime every app once through the router: each runs its one real
+        // search on whichever shard its fingerprint homes to
+        for (i, app) in APPS.iter().enumerate() {
+            let code = workloads::get(app, Lang::C).unwrap().code;
+            let r = roundtrip(&proto::offload_request(i as i64, app, Lang::C, code));
+            assert!(r.ok, "priming offload failed: {:?}", r.error);
+        }
+
+        let barrier = Arc::new(Barrier::new(CLIENTS + 1));
+        let mut threads = Vec::new();
+        for c in 0..CLIENTS {
+            let barrier = barrier.clone();
+            threads.push(std::thread::spawn(move || {
+                let app = APPS[c % APPS.len()];
+                let code = workloads::get(app, Lang::C).unwrap().code;
+                let stream = TcpStream::connect(addr).expect("connect");
+                let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+                let mut writer = stream;
+                let line = proto::offload_request(c as i64, app, Lang::C, code);
+                barrier.wait();
+                for _ in 0..REQS_PER_CLIENT {
+                    writer.write_all(line.as_bytes()).unwrap();
+                    writer.write_all(b"\n").unwrap();
+                    writer.flush().unwrap();
+                    let mut resp = String::new();
+                    reader.read_line(&mut resp).unwrap();
+                    let r = Response::parse_line(&resp).unwrap();
+                    assert!(r.ok, "replay request failed: {:?}", r.error);
+                }
+            }));
+        }
+        barrier.wait();
+        let t0 = std::time::Instant::now();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let total = (CLIENTS * REQS_PER_CLIENT) as f64;
+        let rps = total / wall;
+        rows.push(vec![shards.to_string(), format!("{:.3}", wall * 1e3), format!("{rps:.1}")]);
+        arr.push(
+            Json::obj()
+                .set("shards", shards)
+                .set("batch_wall_s", wall)
+                .set("requests_per_sec", rps),
+        );
+        rh.shutdown().expect("router drain");
+        for h in backends {
+            let _ = h.shutdown();
+        }
+    }
+    println!("{}", markdown_table(&["shards", "batch wall ms", "requests/sec"], &rows));
+
+    let j = Json::obj()
+        .set("bench", "router_throughput")
+        .set("concurrent_clients", CLIENTS)
+        .set("reqs_per_client", REQS_PER_CLIENT)
+        .set("results", Json::Arr(arr));
+    if let Err(e) = std::fs::write("BENCH_router.json", j.to_pretty() + "\n") {
+        eprintln!("warning: could not write BENCH_router.json: {e}");
+    }
 }
 
 /// patterndb_lookup: per-lookup latency of the indexed, tiered pattern

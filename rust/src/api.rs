@@ -853,6 +853,10 @@ pub struct OffloadResponse {
     /// the request exceeded the service's per-request timeout (the
     /// request must be treated as failed; it will not be answered later)
     pub timed_out: bool,
+    /// a degraded cluster could not place this request on any healthy
+    /// shard (router deployments only; see `docs/PROTOCOL.md`). Retryable
+    /// like `busy`, but signals lost capacity rather than a full queue.
+    pub unavailable: bool,
     /// decoder warnings the server attached (unknown request fields, ...)
     pub warnings: Vec<String>,
     /// pool member that served an offload (diagnostics)
@@ -872,6 +876,8 @@ impl OffloadResponse {
         let busy = body.get("busy").and_then(|v| v.as_bool()).unwrap_or(false);
         let retry_after_ms = body.get("retry_after_ms").and_then(|v| v.as_i64());
         let timed_out = body.get("timed_out").and_then(|v| v.as_bool()).unwrap_or(false);
+        let unavailable =
+            body.get("unavailable").and_then(|v| v.as_bool()).unwrap_or(false);
         let warnings = body
             .get("warnings")
             .and_then(|v| v.items())
@@ -888,6 +894,7 @@ impl OffloadResponse {
             busy,
             retry_after_ms,
             timed_out,
+            unavailable,
             warnings,
             worker,
             body,
@@ -969,6 +976,20 @@ impl OffloadResponse {
             .set("busy", true)
             .set("retry_after_ms", retry_after_ms as i64)
             .set("error", "service busy: admission queue full")
+    }
+
+    /// Degraded-cluster response, flagged `"unavailable":true`: a router
+    /// could not place the request on any healthy shard (every candidate
+    /// down or retries exhausted). Retryable — capacity usually returns —
+    /// but distinct from `busy` so clients can alert on lost shards
+    /// rather than treating the cluster as merely loaded.
+    pub fn encode_unavailable(id: i64, msg: &str) -> Json {
+        Json::obj()
+            .set("id", id)
+            .set("ok", false)
+            .set("schema_version", SCHEMA_VERSION)
+            .set("unavailable", true)
+            .set("error", msg)
     }
 
     /// Per-request-timeout response, flagged `"timed_out":true`. The

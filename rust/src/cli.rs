@@ -18,6 +18,9 @@
 //! envadapt serve [--port N | --stdio] [--pool N] [--db FILE]
 //!                [--queue N] [--timeout-ms N]
 //!                [--workers N] [--cache FILE] [--sim] [...]
+//! envadapt route --shards host:port,host:port[,...] [--port N]
+//!                [--spill-queue N] [--retry-limit N]
+//!                [--probe-ms N] [--sync-ms N]
 //! envadapt analyze <file|app> [--lang ...]       loop table + candidates
 //! envadapt run <file|app> [--lang ...]           CPU-only execution
 //! envadapt workloads                             list built-in apps
@@ -29,6 +32,7 @@ use crate::api::{self, OffloadRequest, OffloadSession};
 use crate::config::Config;
 use crate::frontend;
 use crate::ir::Lang;
+use crate::router;
 use crate::runtime::Runtime;
 use crate::server;
 use crate::vm;
@@ -74,6 +78,16 @@ struct Opts {
     queue: Option<usize>,
     /// serve: per-request timeout in ms (None = disabled)
     timeout_ms: Option<u64>,
+    /// route: backend shard addresses
+    shards: Option<Vec<String>>,
+    /// route: spill threshold (None = policy default)
+    spill_queue: Option<usize>,
+    /// route: per-request sibling-retry budget (None = default)
+    retry_limit: Option<u32>,
+    /// route: health-probe/load-poll period in ms (None = default)
+    probe_ms: Option<u64>,
+    /// route: anti-entropy replication period in ms (None = default)
+    sync_ms: Option<u64>,
     /// offload: print the session metrics snapshot after the report
     metrics: bool,
     naive: bool,
@@ -107,6 +121,11 @@ fn parse_opts(rest: &[String]) -> anyhow::Result<Opts> {
         stdio: false,
         queue: None,
         timeout_ms: None,
+        shards: None,
+        spill_queue: None,
+        retry_limit: None,
+        probe_ms: None,
+        sync_ms: None,
         metrics: false,
         naive: false,
         no_transfer_opt: false,
@@ -180,6 +199,40 @@ fn parse_opts(rest: &[String]) -> anyhow::Result<Opts> {
                 o.timeout_ms = Some(n);
             }
             "--metrics" => o.metrics = true,
+            "--shards" => {
+                i += 1;
+                let v = rest.get(i).ok_or_else(|| {
+                    anyhow::anyhow!("--shards needs a comma-separated list of host:port addresses")
+                })?;
+                let shards: Vec<String> =
+                    v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+                anyhow::ensure!(!shards.is_empty(), "--shards needs at least one address");
+                o.shards = Some(shards);
+            }
+            "--spill-queue" => {
+                i += 1;
+                let n: usize = rest.get(i).and_then(|v| v.parse().ok()).ok_or_else(|| anyhow::anyhow!("--spill-queue needs a number"))?;
+                anyhow::ensure!(n >= 1, "--spill-queue must be at least 1");
+                o.spill_queue = Some(n);
+            }
+            "--retry-limit" => {
+                i += 1;
+                let n: u32 = rest.get(i).and_then(|v| v.parse().ok()).ok_or_else(|| anyhow::anyhow!("--retry-limit needs a number"))?;
+                anyhow::ensure!(n >= 1, "--retry-limit must be at least 1");
+                o.retry_limit = Some(n);
+            }
+            "--probe-ms" => {
+                i += 1;
+                let n: u64 = rest.get(i).and_then(|v| v.parse().ok()).ok_or_else(|| anyhow::anyhow!("--probe-ms needs a number of milliseconds"))?;
+                anyhow::ensure!(n >= 1, "--probe-ms must be at least 1");
+                o.probe_ms = Some(n);
+            }
+            "--sync-ms" => {
+                i += 1;
+                let n: u64 = rest.get(i).and_then(|v| v.parse().ok()).ok_or_else(|| anyhow::anyhow!("--sync-ms needs a number of milliseconds"))?;
+                anyhow::ensure!(n >= 1, "--sync-ms must be at least 1");
+                o.sync_ms = Some(n);
+            }
             "--target" => {
                 i += 1;
                 let v = rest.get(i).ok_or_else(|| anyhow::anyhow!("--target needs a value"))?;
@@ -482,6 +535,25 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 server::serve_tcp(&addr, cfg, sopts)
             }
         }
+        "route" => {
+            let opts = parse_opts(&args[1..])?;
+            let shards = opts.shards.clone().ok_or_else(|| {
+                anyhow::anyhow!("route needs --shards host:port[,host:port...] (the backend `envadapt serve` daemons)")
+            })?;
+            let ropts = router::RouterOptions {
+                shards,
+                spill_queue: opts.spill_queue.unwrap_or(0),
+                retry_limit: opts.retry_limit.unwrap_or(0),
+                probe_interval_ms: opts.probe_ms.unwrap_or(0),
+                sync_interval_ms: opts.sync_ms.unwrap_or(0),
+                ..Default::default()
+            };
+            // foreground daemon: SIGTERM/SIGINT drain the router and
+            // propagate shutdown to every shard (cluster-wide drain)
+            server::install_signal_handlers();
+            let addr = format!("127.0.0.1:{}", opts.port.unwrap_or(7748));
+            router::route_tcp(&addr, ropts)
+        }
         "workloads" => {
             let langs: Vec<&str> = Lang::all().iter().map(|l| l.name()).collect();
             let langs = langs.join(", ");
@@ -531,6 +603,9 @@ USAGE:
                    [--queue N] [--timeout-ms N]
                    [--workers N] [--cache FILE] [--sim] [--no-reuse]
                    [--no-learn] [--pop N] [--gens N]
+  envadapt route   --shards host:port,host:port[,...] [--port N]
+                   [--spill-queue N] [--retry-limit N]
+                   [--probe-ms N] [--sync-ms N]
   envadapt analyze <file|app> [--lang ...]
   envadapt run <file|app> [--lang ...]
   envadapt workloads
@@ -584,6 +659,26 @@ SERVE (the offload-as-a-service daemon, line-delimited JSON, wire v2;
   request:  {{\"op\":\"offload\",\"id\":1,\"schema_version\":2,\"name\":\"mm\",
              \"lang\":\"c\",\"code\":\"...\"}}  (v1 requests still accepted)
   also:     {{\"op\":\"stats\"|\"metrics\"|\"ping\"|\"shutdown\",\"id\":N}}
+
+ROUTE (the sharded-cluster front process: one wire-v2 endpoint fanning
+       requests across N serve daemons; runbook: docs/OPERATIONS.md
+       \"Running a sharded cluster\"):
+  --shards A,B,..  backend daemon addresses, one per shard (required)
+  --port N      listen on 127.0.0.1:N (default 7748; 0 = ephemeral)
+  --spill-queue N
+                shed NEW fingerprints off a home shard whose queue depth
+                plus in-flight reaches N (default 8); existing
+                placements stay put for replay locality
+  --retry-limit N
+                sibling retries per request after a shard fails
+                mid-flight (default 2); past it clients get a versioned
+                `unavailable` response
+  --probe-ms N  health-probe + load-poll period (default 200)
+  --sync-ms N   anti-entropy replication period (default 500): learned
+                records flow between shards, so the cluster behaves as
+                one logical pattern DB
+  SIGTERM/SIGINT drain the router, then propagate shutdown to every
+  shard: one signal stops the whole cluster with no dropped requests.
 
 Built-in workloads: mm fourier stencil blackscholes mixed signal smallloops hetero heterochain heterohost"
     );

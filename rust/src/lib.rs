@@ -38,7 +38,12 @@
 //! pool that shares one measurement cache and one *learning* pattern DB
 //! (`patterndb`) — every verified pattern is remembered, and repeat or
 //! near-identical requests replay the known plan with zero new
-//! measurements (the paper's production reuse path).
+//! measurements (the paper's production reuse path). For horizontal
+//! scale, `envadapt route` (`router`, with the routing policy in
+//! `shard`) fans one *logical* pattern DB across N daemon instances
+//! behind that same wire protocol: rendezvous-sharded placement,
+//! anti-entropy replication of learned records, and load spill away
+//! from busy shards.
 //!
 //! # Embedding: the versioned offload API
 //!
@@ -76,8 +81,10 @@ pub mod metrics;
 pub mod patterndb;
 pub mod placement;
 pub mod proto;
+pub mod router;
 pub mod runtime;
 pub mod server;
+pub mod shard;
 pub mod transfer;
 pub mod util;
 pub mod vm;

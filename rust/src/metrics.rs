@@ -45,6 +45,8 @@ pub enum OpKind {
     Metrics,
     Ping,
     Shutdown,
+    /// shard-internal anti-entropy (`sync_pull` / `sync_push`)
+    Sync,
     Invalid,
 }
 
@@ -64,6 +66,7 @@ pub struct Metrics {
     req_metrics: AtomicU64,
     req_ping: AtomicU64,
     req_shutdown: AtomicU64,
+    req_sync: AtomicU64,
     req_invalid: AtomicU64,
     // responses by outcome class (mutually exclusive)
     resp_ok: AtomicU64,
@@ -156,6 +159,7 @@ impl Metrics {
             req_metrics: AtomicU64::new(0),
             req_ping: AtomicU64::new(0),
             req_shutdown: AtomicU64::new(0),
+            req_sync: AtomicU64::new(0),
             req_invalid: AtomicU64::new(0),
             resp_ok: AtomicU64::new(0),
             resp_error: AtomicU64::new(0),
@@ -204,6 +208,7 @@ impl Metrics {
             OpKind::Metrics => &self.req_metrics,
             OpKind::Ping => &self.req_ping,
             OpKind::Shutdown => &self.req_shutdown,
+            OpKind::Sync => &self.req_sync,
             OpKind::Invalid => &self.req_invalid,
         };
         c.fetch_add(1, Ordering::Relaxed);
@@ -313,7 +318,20 @@ impl Metrics {
             + self.req_metrics.load(Ordering::Relaxed)
             + self.req_ping.load(Ordering::Relaxed)
             + self.req_shutdown.load(Ordering::Relaxed)
+            + self.req_sync.load(Ordering::Relaxed)
             + self.req_invalid.load(Ordering::Relaxed)
+    }
+
+    /// Mean wall time of completed offloads in milliseconds — 0.0 until
+    /// the first one completes. This is the recent-load signal the
+    /// admission path multiplies by the queue depth to produce a
+    /// load-proportional `retry_after_ms` hint ([`crate::proto::retry_hint`]).
+    pub fn avg_wall_ms(&self) -> f64 {
+        let n = self.wall_count.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.wall_sum_us.load(Ordering::Relaxed) as f64 / 1e3 / n as f64
     }
 
     pub fn offloads_total(&self) -> u64 {
@@ -394,6 +412,7 @@ impl Metrics {
                     .set("metrics", ld(&self.req_metrics))
                     .set("ping", ld(&self.req_ping))
                     .set("shutdown", ld(&self.req_shutdown))
+                    .set("sync", ld(&self.req_sync))
                     .set("invalid", ld(&self.req_invalid)),
             )
             .set(

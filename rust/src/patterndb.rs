@@ -664,6 +664,70 @@ impl PatternDb {
         (self.records, learned)
     }
 
+    // ---- anti-entropy sync ----------------------------------------------
+
+    /// Monotone entry-log position. The entries vec is append-only
+    /// (replacements tombstone the old slot and append a fresh one), so
+    /// `from..entry_seq()` names exactly the learned records added or
+    /// replaced since a cursor `from` was taken — the router's
+    /// anti-entropy exchange pulls that range incrementally.
+    pub fn entry_seq(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Render the live learned records at entry positions `from..` as
+    /// persistence lines (the v3 record-line format — newline-free by
+    /// construction, so they travel inside JSON strings), at most `max`
+    /// per call. Returns the lines plus the cursor to resume from. Cold
+    /// entries are read off disk without promotion; tombstoned slots
+    /// and built-in catalogue records (identical on every shard) are
+    /// skipped but still advance the cursor.
+    pub fn sync_lines_since(&self, from: usize, max: usize) -> (Vec<String>, usize) {
+        let mut out = Vec::new();
+        let mut next = from.min(self.entries.len());
+        while next < self.entries.len() && out.len() < max {
+            let id = next as u32;
+            let e = &self.entries[next];
+            next += 1;
+            if !e.key.starts_with("learned/") {
+                continue;
+            }
+            match &e.state {
+                EntryState::Dead => {}
+                EntryState::Hot(rec) => out.push(record_line(rec)),
+                EntryState::Cold => match self.cold_record(id) {
+                    Ok(rec) => out.push(record_line(&rec)),
+                    Err(err) => {
+                        eprintln!("warning: pattern DB sync skipped record {}: {err}", e.key)
+                    }
+                },
+            }
+        }
+        (out, next)
+    }
+
+    /// Absorb record lines produced by [`PatternDb::sync_lines_since`]
+    /// on a peer: add when the key is new, faster plan (smaller
+    /// `final_s`) wins on a duplicate learned key — the same
+    /// merge-on-write semantics as [`PatternDb::merge`], so replication
+    /// order between shards can never regress a plan. Malformed lines
+    /// are skipped with a warning. Returns how many records changed.
+    pub fn absorb_lines(&mut self, lines: &[String]) -> usize {
+        let mut changed = 0usize;
+        for (i, line) in lines.iter().enumerate() {
+            match parse_record_line(line, i + 1) {
+                Ok(Some(rec)) => {
+                    if self.absorb_record(rec, None, true) {
+                        changed += 1;
+                    }
+                }
+                Ok(None) => {}
+                Err(err) => eprintln!("warning: pattern DB sync rejected a line: {err}"),
+            }
+        }
+        changed
+    }
+
     // ---- lookups ---------------------------------------------------------
 
     /// Exact learned-pattern lookup: same program fingerprint, same
@@ -1403,6 +1467,51 @@ mod tests {
         let p = db.lookup_learned(7, TargetKind::Gpu).unwrap().learned.as_ref().unwrap();
         assert_eq!(p.final_s, 0.05);
         assert_eq!(db.len(), fb_count, "merge never duplicates builtin records");
+    }
+
+    #[test]
+    fn sync_lines_round_trip_with_merge_on_write() {
+        let mut a = PatternDb::default();
+        a.insert_learned(sample_learned(7, 0.2));
+        a.insert_learned(sample_learned(8, 0.4));
+        let (lines, next) = a.sync_lines_since(0, 64);
+        assert_eq!(lines.len(), 2);
+        assert_eq!(next, a.entry_seq());
+        let mut b = PatternDb::default();
+        b.insert_learned(sample_learned(8, 0.1)); // already faster locally
+        assert_eq!(b.absorb_lines(&lines), 1, "only fp 7 is news for b");
+        assert_eq!(b.learned_len(), 2);
+        let p = b.lookup_learned(8, TargetKind::Gpu).unwrap().learned.as_ref().unwrap();
+        assert_eq!(p.final_s, 0.1, "slower replica must not replace the faster local plan");
+        // replaying the same batch is idempotent
+        assert_eq!(b.absorb_lines(&lines), 0);
+        // the cursor resumes: a replacement appends a fresh entry past `next`
+        a.insert_learned(sample_learned(7, 0.05));
+        let (more, end) = a.sync_lines_since(next, 64);
+        assert_eq!(more.len(), 1);
+        assert_eq!(end, a.entry_seq());
+        assert_eq!(b.absorb_lines(&more), 1);
+        let p = b.lookup_learned(7, TargetKind::Gpu).unwrap().learned.as_ref().unwrap();
+        assert_eq!(p.final_s, 0.05);
+    }
+
+    #[test]
+    fn sync_lines_bound_batches_and_absorb_skips_garbage() {
+        let mut a = PatternDb::default();
+        for i in 0..5 {
+            a.insert_learned(sample_learned(100 + i, 0.2));
+        }
+        let (first, cur) = a.sync_lines_since(0, 2);
+        assert_eq!((first.len(), cur), (2, 2), "batches honor the max");
+        let (rest, end) = a.sync_lines_since(cur, 64);
+        assert_eq!(rest.len(), 3);
+        assert_eq!(end, a.entry_seq());
+        let mut lines = first;
+        lines.push("not|a|record".into());
+        lines.extend(rest);
+        let mut b = PatternDb::default();
+        assert_eq!(b.absorb_lines(&lines), 5, "garbage lines are skipped, not fatal");
+        assert_eq!(b.learned_len(), 5);
     }
 
     #[test]

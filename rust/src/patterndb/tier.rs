@@ -140,12 +140,24 @@ impl SegmentStore {
 
     fn roll(&mut self) -> io::Result<()> {
         std::fs::create_dir_all(&self.dir)?;
-        let path = self.dir.join(format!("seg-{:08}.txt", self.next_seq));
-        std::fs::write(&path, SEGMENT_HEADER)?;
-        self.next_seq += 1;
-        self.files.push(path);
-        self.active_len = 0;
-        Ok(())
+        // create_new + skip-forward: two stores attached to one segment
+        // directory (DB instances replicating into a shared slice —
+        // the anti-entropy path) can never claim the same sequence
+        // number; losing the race just advances to the next free one.
+        loop {
+            let path = self.dir.join(format!("seg-{:08}.txt", self.next_seq));
+            self.next_seq += 1;
+            match OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    f.write_all(SEGMENT_HEADER.as_bytes())?;
+                    self.files.push(path);
+                    self.active_len = 0;
+                    return Ok(());
+                }
+                Err(e) if e.kind() == io::ErrorKind::AlreadyExists => continue,
+                Err(e) => return Err(e),
+            }
+        }
     }
 
     /// Read back the single record line starting at `loc`.
@@ -223,6 +235,27 @@ mod tests {
         assert_eq!(store.segment_count(), 0);
         store.append(&["c|d".to_string()], 4).unwrap();
         assert_ne!(store.file(1), old.as_path(), "sequence numbers are never reused");
+        cleanup(&base);
+    }
+
+    #[test]
+    fn two_stores_sharing_a_directory_never_claim_the_same_segment() {
+        let base = tmpbase("shared");
+        cleanup(&base);
+        let mut a = SegmentStore::open(&base);
+        let mut b = SegmentStore::open(&base); // both start at seq 1
+        let la = a.append(&["a1|x".to_string(), "a2|x".to_string()], 1).unwrap();
+        let lb = b.append(&["b1|x".to_string(), "b2|x".to_string()], 1).unwrap();
+        // every roll landed in its own file: a's lines still read back
+        // exactly even though b rolled over the same seq range
+        for (line, loc) in ["a1|x", "a2|x"].iter().zip(&la) {
+            assert_eq!(&a.read_line_at(*loc).unwrap(), line);
+        }
+        for (line, loc) in ["b1|x", "b2|x"].iter().zip(&lb) {
+            assert_eq!(&b.read_line_at(*loc).unwrap(), line);
+        }
+        let reopened = SegmentStore::open(&base);
+        assert_eq!(reopened.segment_count(), 4, "4 distinct segments, no clobbers");
         cleanup(&base);
     }
 }

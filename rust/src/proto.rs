@@ -24,12 +24,16 @@
 //! "error":"..."}` and never tear down the connection; an unknown `op`
 //! names the supported ones, and unknown request fields surface as a
 //! `warnings` array on the response instead of being dropped silently.
-//! Two failure shapes carry extra flags: a load-shed response is tagged
-//! `"busy":true` with a `retry_after_ms` backoff hint, and a
-//! per-request-timeout response is tagged `"timed_out":true`. The
-//! `metrics` op returns the full observability snapshot. On a pipelined
-//! connection responses are matched by `id` and may arrive out of
-//! order. The full wire reference is `docs/PROTOCOL.md`.
+//! Three failure shapes carry extra flags: a load-shed response is
+//! tagged `"busy":true` with a load-proportional `retry_after_ms`
+//! backoff hint (see [`retry_hint`]), a per-request-timeout response is
+//! tagged `"timed_out":true`, and a degraded router cluster answers
+//! `"unavailable":true`. The `metrics` op returns the full
+//! observability snapshot. The `sync_pull`/`sync_push` ops are the
+//! shard-internal anti-entropy exchange a router drives between
+//! cluster members (`envadapt route`). On a pipelined connection
+//! responses are matched by `id` and may arrive out of order. The full
+//! wire reference is `docs/PROTOCOL.md`.
 
 use crate::api::{OffloadRequest, OffloadResponse};
 use crate::coordinator::OffloadReport;
@@ -42,7 +46,8 @@ use anyhow::{anyhow, bail, Result};
 pub use crate::api::OffloadResponse as Response;
 
 /// Every op this protocol version serves (named in unknown-op errors).
-pub const SUPPORTED_OPS: &[&str] = &["offload", "stats", "metrics", "ping", "shutdown"];
+pub const SUPPORTED_OPS: &[&str] =
+    &["offload", "stats", "metrics", "ping", "shutdown", "sync_pull", "sync_push"];
 
 /// The operation one request line selects.
 #[derive(Debug, Clone)]
@@ -55,6 +60,14 @@ pub enum Op {
     Metrics,
     Ping,
     Shutdown,
+    /// shard-internal anti-entropy: pull the learned record lines
+    /// appended to this daemon's pattern DB at or after entry cursor
+    /// `since` (bounded batch; the response carries the resume cursor)
+    SyncPull { since: usize },
+    /// shard-internal anti-entropy: absorb learned record lines
+    /// replicated from a sibling shard (merge-on-write — the faster
+    /// plan wins on a duplicate key, so replication can never regress)
+    SyncPush { records: Vec<String> },
 }
 
 /// One parsed protocol request: transport envelope (`id`) + operation +
@@ -98,6 +111,32 @@ impl Request {
                 };
                 Ok(Request { id, op, warnings })
             }
+            "sync_pull" => {
+                let warnings = crate::api::unknown_field_warnings(
+                    &j,
+                    &["op", "id", "schema_version", "since"],
+                );
+                let since = j.get("since").and_then(|v| v.as_i64()).unwrap_or(0).max(0) as usize;
+                Ok(Request { id, op: Op::SyncPull { since }, warnings })
+            }
+            "sync_push" => {
+                let warnings = crate::api::unknown_field_warnings(
+                    &j,
+                    &["op", "id", "schema_version", "records"],
+                );
+                let items = j
+                    .get("records")
+                    .and_then(|v| v.items())
+                    .ok_or_else(|| anyhow!("sync_push needs a `records` array"))?;
+                let mut records = Vec::with_capacity(items.len());
+                for x in items {
+                    match x.as_str() {
+                        Some(s) => records.push(s.to_string()),
+                        None => bail!("sync_push `records` must be an array of strings"),
+                    }
+                }
+                Ok(Request { id, op: Op::SyncPush { records }, warnings })
+            }
             other => bail!(
                 "unknown op {other:?} (supported: {})",
                 SUPPORTED_OPS.join(", ")
@@ -123,6 +162,19 @@ impl Request {
             Op::Metrics => simple_line("metrics", self.id),
             Op::Ping => simple_line("ping", self.id),
             Op::Shutdown => simple_line("shutdown", self.id),
+            Op::SyncPull { since } => Json::obj()
+                .set("op", "sync_pull")
+                .set("id", self.id)
+                .set("since", *since)
+                .to_string(),
+            Op::SyncPush { records } => Json::obj()
+                .set("op", "sync_push")
+                .set("id", self.id)
+                .set(
+                    "records",
+                    Json::Arr(records.iter().map(|r| Json::Str(r.clone())).collect()),
+                )
+                .to_string(),
         }
     }
 }
@@ -198,6 +250,45 @@ pub fn busy(id: i64, retry_after_ms: u64) -> Json {
 /// Per-request-timeout response (`"timed_out":true`).
 pub fn timeout(id: i64, timeout_ms: u64) -> Json {
     OffloadResponse::encode_timeout(id, timeout_ms)
+}
+
+/// Degraded-cluster response (`"unavailable":true`) — a router could not
+/// place the request on any healthy shard.
+pub fn unavailable(id: i64, msg: &str) -> Json {
+    OffloadResponse::encode_unavailable(id, msg)
+}
+
+/// Successful `sync_pull` response: the pulled record lines plus the
+/// entry cursor to resume the next pull from.
+pub fn ok_sync_pull(id: i64, records: &[String], next_seq: usize, warnings: &[String]) -> Json {
+    OffloadResponse::encode_simple(id, "sync_pull", warnings)
+        .set("records", Json::Arr(records.iter().map(|r| Json::Str(r.clone())).collect()))
+        .set("next_seq", next_seq)
+}
+
+/// Successful `sync_push` response: how many replicated records actually
+/// changed the receiving DB (duplicates that lost merge-on-write don't).
+pub fn ok_sync_push(id: i64, merged: usize, warnings: &[String]) -> Json {
+    OffloadResponse::encode_simple(id, "sync_push", warnings).set("merged", merged)
+}
+
+/// Load-proportional backoff hint for `busy` responses: the estimated
+/// time to drain the current admission queue — queue depth × the recent
+/// average `offload_wall_ms` — clamped to `[floor_ms, 10s]`. Before any
+/// offload has completed (no average yet) the floor is the hint, which
+/// is also the pre-PR-10 constant behavior.
+pub fn retry_hint(queue_depth: usize, avg_wall_ms: f64, floor_ms: u64) -> u64 {
+    const CAP_MS: u64 = 10_000;
+    let floor = floor_ms.clamp(1, CAP_MS);
+    if queue_depth == 0 || !avg_wall_ms.is_finite() || avg_wall_ms <= 0.0 {
+        return floor;
+    }
+    let est = (queue_depth as f64 * avg_wall_ms).ceil();
+    if est >= CAP_MS as f64 {
+        CAP_MS
+    } else {
+        (est as u64).max(floor)
+    }
 }
 
 #[cfg(test)]
@@ -348,6 +439,72 @@ mod tests {
         assert!(!r.busy && !r.timed_out, "plain errors carry no outcome flags");
         assert_eq!(r.error.as_deref(), Some("boom"));
         assert_eq!(r.schema_version, crate::api::SCHEMA_VERSION);
+    }
+
+    #[test]
+    fn sync_ops_round_trip() {
+        let pull = Request { id: 21, op: Op::SyncPull { since: 40 }, warnings: Vec::new() };
+        let back = Request::parse_line(&pull.to_line()).unwrap();
+        assert_eq!(back.id, 21);
+        assert!(matches!(back.op, Op::SyncPull { since: 40 }));
+
+        let lines = vec!["learned/0000000000000007/gpu|desc|1|2|3".to_string()];
+        let push =
+            Request { id: 22, op: Op::SyncPush { records: lines.clone() }, warnings: Vec::new() };
+        let back = Request::parse_line(&push.to_line()).unwrap();
+        match back.op {
+            Op::SyncPush { records } => assert_eq!(records, lines),
+            other => panic!("wrong request: {other:?}"),
+        }
+        // malformed bodies are rejected, not defaulted
+        assert!(Request::parse_line(r#"{"op":"sync_push","id":1}"#).is_err());
+        assert!(Request::parse_line(r#"{"op":"sync_push","id":1,"records":[3]}"#).is_err());
+        // a negative cursor clamps to 0 (pull-from-the-start)
+        let r = Request::parse_line(r#"{"op":"sync_pull","id":2,"since":-9}"#).unwrap();
+        assert!(matches!(r.op, Op::SyncPull { since: 0 }));
+
+        let resp =
+            Response::parse_line(&ok_sync_pull(21, &lines, 41, &[]).to_string()).unwrap();
+        assert!(resp.ok);
+        assert_eq!(resp.body.get("next_seq").and_then(|v| v.as_i64()), Some(41));
+        assert_eq!(
+            resp.body.get("records").and_then(|v| v.items()).map(|x| x.len()),
+            Some(1)
+        );
+        let resp = Response::parse_line(&ok_sync_push(22, 1, &[]).to_string()).unwrap();
+        assert!(resp.ok);
+        assert_eq!(resp.body.get("merged").and_then(|v| v.as_i64()), Some(1));
+    }
+
+    #[test]
+    fn unavailable_response_round_trips() {
+        let j = unavailable(6, "cluster degraded: no healthy shard for this request");
+        let r = Response::parse_line(&j.to_string()).unwrap();
+        assert_eq!(r.id, 6);
+        assert!(!r.ok && r.unavailable && !r.busy && !r.timed_out);
+        assert_eq!(r.schema_version, crate::api::SCHEMA_VERSION);
+        assert!(r.error.unwrap().contains("degraded"));
+        // and plain errors never carry the flag
+        let r = Response::parse_line(&err(7, "boom").to_string()).unwrap();
+        assert!(!r.unavailable);
+    }
+
+    #[test]
+    fn retry_hint_is_load_proportional() {
+        // no completed offloads yet (no average): the configured floor
+        assert_eq!(retry_hint(12, 0.0, 100), 100);
+        assert_eq!(retry_hint(0, 250.0, 100), 100, "empty queue drains immediately");
+        // depth × average, when above the floor
+        assert_eq!(retry_hint(5, 40.0, 100), 200);
+        assert_eq!(retry_hint(8, 250.0, 100), 2000);
+        // never below the floor …
+        assert_eq!(retry_hint(1, 3.0, 100), 100);
+        // … never above the 10 s cap, even for absurd queues
+        assert_eq!(retry_hint(10_000, 500.0, 100), 10_000);
+        assert_eq!(retry_hint(4, f64::INFINITY, 100), 100, "junk averages fall back");
+        // deeper queue ⇒ monotonically larger hint (the router's backoff
+        // tracks load, the property the constant hint lacked)
+        assert!(retry_hint(20, 40.0, 100) > retry_hint(5, 40.0, 100));
     }
 
     #[test]

@@ -1,0 +1,1196 @@
+//! The sharded-cluster front process (`envadapt route`): a wire-v2
+//! router that fans one *logical* pattern DB across N serve daemons.
+//!
+//! Clients speak unmodified wire v2 (`docs/PROTOCOL.md`) to the router
+//! exactly as they would to a single `envadapt serve` daemon; the
+//! router multiplies capacity behind that same socket:
+//!
+//! * **Placement** — each offload is fingerprinted
+//!   ([`crate::engine::fingerprint`] of its parsed program) and routed
+//!   by the rendezvous policy in [`crate::shard`]: deterministic homes,
+//!   sticky placements for replay locality, and load spill away from
+//!   shards that reported `busy` or deep queues at the last `metrics`
+//!   poll. Spill is a routing decision only — any shard can serve any
+//!   request — so it never affects correctness.
+//! * **One logical DB** — a periodic anti-entropy round pulls each
+//!   shard's newly learned records (`sync_pull`, cursored by the
+//!   shard's append-only entry log) and pushes them to every other
+//!   shard (`sync_push`). Merge-on-write (the faster plan wins,
+//!   duplicates are no-ops) makes replication idempotent and
+//!   direction-agnostic: echoes damp out instead of looping.
+//! * **Failure** — consecutive probe/forward failures take a shard out
+//!   of the rendezvous set ([`crate::shard::DOWN_AFTER`]); its
+//!   in-flight requests retry on a sibling shard with exponential
+//!   backoff, bounded by [`RouterOptions::retry_limit`]. Only when no
+//!   healthy shard remains does a client see the versioned
+//!   `unavailable` response — retryable like `busy`, but signalling
+//!   lost capacity rather than a full queue.
+//! * **Drain** — the `shutdown` op (or SIGTERM/SIGINT under the
+//!   foreground `envadapt route`) stops accepting, finishes every
+//!   forwarded request, then propagates `shutdown` to every backend
+//!   and waits (bounded) for their acks: one signal drains the whole
+//!   cluster, and no accepted request is dropped.
+//! * **Observability** — the router answers `ping`/`stats`/`metrics`
+//!   itself; `metrics` returns the `router.*` family (per-shard
+//!   forward/reply/spill/retry counts, replica merges, health
+//!   transitions) in the same envelope shape as a daemon's metrics
+//!   (`docs/OPERATIONS.md`, "Running a sharded cluster").
+//!
+//! Like the daemon's event loop, the router is one thread and all
+//! non-blocking `std::net` — no thread-per-connection, no extra
+//! dependencies.
+
+use crate::api::{OffloadRequest, ProgramSource, SCHEMA_VERSION};
+use crate::config::Config;
+use crate::engine;
+use crate::proto::{self, Op, Request};
+use crate::server::sig;
+use crate::shard::{Fleet, Health};
+use crate::util::fxhash::FxHasher;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::hash::Hasher;
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+/// Longest accepted request line (same framing rule as the daemon).
+const MAX_LINE: usize = 16 * 1024 * 1024;
+
+/// Idle tick of the event loop (see `server.rs`).
+const IDLE_TICK: Duration = Duration::from_millis(1);
+
+/// Base delay before a failed forward retries on a sibling shard;
+/// doubles per attempt (50 ms, 100 ms, 200 ms, ...).
+const RETRY_BACKOFF: Duration = Duration::from_millis(50);
+
+/// How long the drain phase waits for backend `shutdown` acks before
+/// giving up and returning anyway (the backends still drain on their
+/// own; the router just stops watching).
+const DRAIN_ACK_GRACE: Duration = Duration::from_secs(5);
+
+/// Router deployment options. Every `0` field takes the documented
+/// default, so `RouterOptions { shards, ..Default::default() }` is a
+/// working cluster.
+#[derive(Debug, Clone, Default)]
+pub struct RouterOptions {
+    /// backend daemon addresses (`host:port`), one per shard; order
+    /// defines the shard indices reported by `metrics`
+    pub shards: Vec<String>,
+    /// spill threshold: a home shard whose reported queue depth plus
+    /// router-attributed in-flight requests reaches this sheds *new*
+    /// fingerprints to the least-loaded healthy sibling;
+    /// 0 = [`crate::shard::DEFAULT_SPILL_QUEUE`]
+    pub spill_queue: usize,
+    /// how many times one request may retry on a sibling after its
+    /// shard fails mid-flight; 0 = 2
+    pub retry_limit: u32,
+    /// health-probe and load-poll period in milliseconds; 0 = 200
+    pub probe_interval_ms: u64,
+    /// anti-entropy replication period in milliseconds; 0 = 500
+    pub sync_interval_ms: u64,
+    /// backend TCP connect timeout in milliseconds; 0 = 1000
+    pub connect_timeout_ms: u64,
+}
+
+impl RouterOptions {
+    fn retry_limit(&self) -> u32 {
+        if self.retry_limit == 0 {
+            2
+        } else {
+            self.retry_limit
+        }
+    }
+
+    fn probe_every(&self) -> Duration {
+        Duration::from_millis(if self.probe_interval_ms == 0 {
+            200
+        } else {
+            self.probe_interval_ms
+        })
+    }
+
+    fn sync_every(&self) -> Duration {
+        Duration::from_millis(if self.sync_interval_ms == 0 { 500 } else { self.sync_interval_ms })
+    }
+
+    fn connect_timeout(&self) -> Duration {
+        Duration::from_millis(if self.connect_timeout_ms == 0 {
+            1000
+        } else {
+            self.connect_timeout_ms
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// routing key
+// ---------------------------------------------------------------------------
+
+/// The deterministic route key of one offload: the engine fingerprint
+/// of its parsed program (so identical programs always meet the same
+/// shard and replay each other's learned plans), falling back to a raw
+/// hash of the source text when the program does not parse — the shard
+/// will produce the parse error, the router only needs *somewhere*
+/// deterministic to send it. Public so tests and tooling can predict
+/// placement with [`crate::shard::Fleet`] built over the same address
+/// list.
+pub fn route_key(cfg: &Config, req: &OffloadRequest) -> u64 {
+    let code: &str = match &req.source {
+        ProgramSource::Code(c) => c,
+        ProgramSource::Workload(w) => match crate::workloads::get(w, req.lang) {
+            Some(src) => src.code,
+            None => return raw_key(&format!("workload/{}/{w}", req.lang)),
+        },
+    };
+    match crate::frontend::parse(code, req.lang, &req.name) {
+        Ok(prog) => engine::fingerprint(&prog, cfg, "route", &[]),
+        Err(_) => raw_key(&format!("unparsed/{}/{code}", req.lang)),
+    }
+}
+
+fn raw_key(text: &str) -> u64 {
+    let mut h = FxHasher::default();
+    h.write(text.as_bytes());
+    h.finish()
+}
+
+/// Rewrite the `id` of a serialized wire object in place, preserving
+/// every other field byte-for-byte (the order-stable [`Json`]
+/// round-trip is what makes the router wire-transparent: clients see
+/// exactly the shard's response, with their own `id` restored).
+fn set_id(j: &mut Json, id: i64) {
+    if let Json::Obj(kvs) = j {
+        for (k, v) in kvs.iter_mut() {
+            if k == "id" {
+                *v = Json::Int(id);
+                return;
+            }
+        }
+        kvs.push(("id".to_string(), Json::Int(id)));
+    }
+}
+
+fn rewrite_id(line: &str, id: i64) -> Option<String> {
+    let mut j = Json::parse(line).ok()?;
+    set_id(&mut j, id);
+    Some(j.to_string())
+}
+
+// ---------------------------------------------------------------------------
+// router metrics (single-threaded: the loop owns them, plain fields)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default, Clone)]
+struct ShardCounters {
+    forwarded: u64,
+    replies: u64,
+    spills: u64,
+    retries: u64,
+    failures: u64,
+    health_transitions: u64,
+}
+
+#[derive(Debug)]
+struct RouterMetrics {
+    started: Instant,
+    requests_total: u64,
+    local_answers: u64,
+    unavailable: u64,
+    sync_rounds: u64,
+    replica_records: u64,
+    replica_merges: u64,
+    per_shard: Vec<ShardCounters>,
+}
+
+impl RouterMetrics {
+    fn new(shards: usize) -> RouterMetrics {
+        RouterMetrics {
+            started: Instant::now(),
+            requests_total: 0,
+            local_answers: 0,
+            unavailable: 0,
+            sync_rounds: 0,
+            replica_records: 0,
+            replica_merges: 0,
+            per_shard: vec![ShardCounters::default(); shards],
+        }
+    }
+
+    fn forwarded_total(&self) -> u64 {
+        self.per_shard.iter().map(|s| s.forwarded).sum()
+    }
+
+    /// The `router.*` family, rendered in the same envelope shape as a
+    /// daemon's metrics payload (field reference: `docs/OPERATIONS.md`,
+    /// "Running a sharded cluster").
+    fn snapshot(&self, fleet: &Fleet) -> Json {
+        let per_shard: Vec<Json> = self
+            .per_shard
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let s = fleet.shard(i);
+                Json::obj()
+                    .set("addr", s.addr.as_str())
+                    .set("health", if s.health == Health::Up { "up" } else { "down" })
+                    .set("forwarded", c.forwarded as i64)
+                    .set("replies", c.replies as i64)
+                    .set("spills", c.spills as i64)
+                    .set("retries", c.retries as i64)
+                    .set("failures", c.failures as i64)
+                    .set("health_transitions", c.health_transitions as i64)
+                    .set("queue_depth", s.queue_depth)
+                    .set("inflight", s.inflight)
+            })
+            .collect();
+        Json::obj()
+            .set("schema_version", SCHEMA_VERSION)
+            .set("uptime_s", self.started.elapsed().as_secs_f64())
+            .set(
+                "router",
+                Json::obj()
+                    .set("shards", fleet.len())
+                    .set("healthy_shards", fleet.healthy_count())
+                    .set("requests_total", self.requests_total as i64)
+                    .set("local_answers", self.local_answers as i64)
+                    .set("forwarded_total", self.forwarded_total() as i64)
+                    .set("unavailable", self.unavailable as i64)
+                    .set("sync_rounds", self.sync_rounds as i64)
+                    .set("replica_records", self.replica_records as i64)
+                    .set("replica_merges", self.replica_merges as i64)
+                    .set("per_shard", Json::Arr(per_shard)),
+            )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// event-loop state
+// ---------------------------------------------------------------------------
+
+/// One multiplexed client connection (same lifecycle as the daemon's
+/// `EvConn`).
+struct ClientConn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    eof: bool,
+    dead: bool,
+    inflight: usize,
+}
+
+fn push_client(conn: &mut ClientConn, resp: &Json) {
+    conn.wbuf.extend_from_slice(resp.to_string().as_bytes());
+    conn.wbuf.push(b'\n');
+}
+
+/// One persistent non-blocking connection to a backend shard.
+struct BackendConn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+}
+
+/// What one outstanding backend request was for, keyed by the router
+/// token its `id` was rewritten to.
+enum PendingKind {
+    /// a forwarded client offload: where the answer goes, the client's
+    /// original `id`, the original request line (verbatim — replayed
+    /// on retry), its route key and how many shards already failed it
+    Client { conn: u64, id: i64, line: String, key: u64, attempts: u32 },
+    /// health probe (`ping`)
+    Probe,
+    /// load poll (`metrics`)
+    Poll,
+    /// anti-entropy pull of a shard's new learned records
+    SyncPull,
+    /// anti-entropy push of pulled records to a sibling
+    SyncPush,
+    /// propagated cluster drain (`shutdown`)
+    Drain,
+}
+
+struct Pending {
+    shard: usize,
+    kind: PendingKind,
+}
+
+/// A failed forward waiting out its backoff before retrying on a
+/// sibling of the shard that failed it.
+struct QueuedRetry {
+    due: Instant,
+    conn: u64,
+    id: i64,
+    line: String,
+    key: u64,
+    attempts: u32,
+    exclude: usize,
+}
+
+struct Router {
+    cfg: Config,
+    fleet: Fleet,
+    backends: Vec<Option<BackendConn>>,
+    /// per-shard anti-entropy cursor (the shard's `next_seq` from the
+    /// last completed `sync_pull`)
+    cursors: Vec<usize>,
+    /// a `sync_pull` is outstanding on this shard (don't pile up)
+    sync_busy: Vec<bool>,
+    pending: HashMap<i64, Pending>,
+    retries: Vec<QueuedRetry>,
+    next_token: i64,
+    metrics: RouterMetrics,
+    retry_limit: u32,
+    connect_timeout: Duration,
+    probe_every: Duration,
+    sync_every: Duration,
+    last_probe: Option<Instant>,
+    last_sync: Option<Instant>,
+    draining: bool,
+    drain_sent: bool,
+    drain_deadline: Option<Instant>,
+}
+
+impl Router {
+    fn new(opts: &RouterOptions) -> Router {
+        let n = opts.shards.len();
+        Router {
+            cfg: Config::standard(),
+            fleet: Fleet::new(&opts.shards, opts.spill_queue),
+            backends: (0..n).map(|_| None).collect(),
+            cursors: vec![0; n],
+            sync_busy: vec![false; n],
+            pending: HashMap::new(),
+            retries: Vec::new(),
+            next_token: 1,
+            metrics: RouterMetrics::new(n),
+            retry_limit: opts.retry_limit(),
+            connect_timeout: opts.connect_timeout(),
+            probe_every: opts.probe_every(),
+            sync_every: opts.sync_every(),
+            last_probe: None,
+            last_sync: None,
+            draining: false,
+            drain_sent: false,
+            drain_deadline: None,
+        }
+    }
+
+    fn token(&mut self) -> i64 {
+        let t = self.next_token;
+        self.next_token += 1;
+        t
+    }
+
+    // ---- backend connections ---------------------------------------------
+
+    /// One probe/forward failure on shard `i`: count it, and log the
+    /// health transition when the failure streak downs the shard.
+    fn conn_failed(&mut self, i: usize) {
+        self.metrics.per_shard[i].failures += 1;
+        if self.fleet.note_failure(i) {
+            self.metrics.per_shard[i].health_transitions += 1;
+            eprintln!("envadapt route: shard {i} ({}) is down", self.fleet.shard(i).addr);
+        }
+    }
+
+    fn try_connect(&mut self, i: usize) {
+        if self.backends[i].is_some() {
+            return;
+        }
+        let addr = self.fleet.shard(i).addr.clone();
+        let sa = match addr.to_socket_addrs().ok().and_then(|mut a| a.next()) {
+            Some(sa) => sa,
+            None => {
+                self.conn_failed(i);
+                return;
+            }
+        };
+        match TcpStream::connect_timeout(&sa, self.connect_timeout) {
+            Ok(stream) => {
+                let _ = stream.set_nonblocking(true);
+                let _ = stream.set_nodelay(true);
+                self.backends[i] = Some(BackendConn { stream, rbuf: Vec::new(), wbuf: Vec::new() });
+            }
+            Err(_) => self.conn_failed(i),
+        }
+    }
+
+    /// Buffer one line for shard `i` (the flush phase writes it out).
+    /// Returns `false` when the shard has no live connection.
+    fn send_to(&mut self, i: usize, line: &str) -> bool {
+        match &mut self.backends[i] {
+            Some(b) => {
+                b.wbuf.extend_from_slice(line.as_bytes());
+                b.wbuf.push(b'\n');
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Shard `i`'s connection died: drop it, count the failure, and
+    /// fail over everything that was in flight there — forwarded client
+    /// requests go to the backoff queue (a sibling retries them),
+    /// internal requests are simply dropped and reissued next tick.
+    fn fail_backend(&mut self, i: usize, conns: &mut HashMap<u64, ClientConn>) {
+        self.backends[i] = None;
+        self.sync_busy[i] = false;
+        self.conn_failed(i);
+        let tokens: Vec<i64> =
+            self.pending.iter().filter(|(_, p)| p.shard == i).map(|(&t, _)| t).collect();
+        for t in tokens {
+            let p = self.pending.remove(&t).expect("token just listed");
+            if let PendingKind::Client { conn, id, line, key, attempts } = p.kind {
+                let s = self.fleet.shard_mut(i);
+                s.inflight = s.inflight.saturating_sub(1);
+                if attempts < self.retry_limit {
+                    let due = Instant::now() + RETRY_BACKOFF * 2u32.saturating_pow(attempts);
+                    self.retries.push(QueuedRetry {
+                        due,
+                        conn,
+                        id,
+                        line,
+                        key,
+                        attempts: attempts + 1,
+                        exclude: i,
+                    });
+                } else {
+                    self.answer_unavailable(conns, conn, id);
+                }
+            }
+        }
+    }
+
+    fn answer_unavailable(&mut self, conns: &mut HashMap<u64, ClientConn>, cid: u64, id: i64) {
+        self.metrics.unavailable += 1;
+        if let Some(c) = conns.get_mut(&cid) {
+            push_client(c, &proto::unavailable(id, "no healthy shard available"));
+            c.inflight = c.inflight.saturating_sub(1);
+        }
+    }
+
+    /// Forward one client request line to shard `i` under a fresh
+    /// token. Returns `false` if the shard could not be reached (the
+    /// caller escalates).
+    fn forward(
+        &mut self,
+        i: usize,
+        cid: u64,
+        id: i64,
+        line: &str,
+        key: u64,
+        attempts: u32,
+    ) -> bool {
+        if self.backends[i].is_none() {
+            self.try_connect(i);
+        }
+        let t = self.token();
+        let Some(fwd) = rewrite_id(line, t) else { return false };
+        if !self.send_to(i, &fwd) {
+            return false;
+        }
+        self.pending.insert(
+            t,
+            Pending {
+                shard: i,
+                kind: PendingKind::Client { conn: cid, id, line: line.to_string(), key, attempts },
+            },
+        );
+        self.fleet.shard_mut(i).inflight += 1;
+        self.metrics.per_shard[i].forwarded += 1;
+        if attempts > 0 {
+            self.metrics.per_shard[i].retries += 1;
+        }
+        true
+    }
+
+    /// Retries whose backoff elapsed: place each on the best healthy
+    /// sibling of the shard that failed it.
+    fn pump_retries(&mut self, conns: &mut HashMap<u64, ClientConn>) -> bool {
+        if self.retries.is_empty() {
+            return false;
+        }
+        let now = Instant::now();
+        let mut progress = false;
+        let due: Vec<QueuedRetry> = {
+            let mut rest = Vec::new();
+            let mut due = Vec::new();
+            for r in self.retries.drain(..) {
+                if r.due <= now {
+                    due.push(r);
+                } else {
+                    rest.push(r);
+                }
+            }
+            self.retries = rest;
+            due
+        };
+        for r in due {
+            progress = true;
+            let target = self.fleet.sibling(r.key, r.exclude);
+            let sent = match target {
+                Some(s) => {
+                    let ok = self.forward(s, r.conn, r.id, &r.line, r.key, r.attempts);
+                    if ok {
+                        self.fleet.resticky(r.key, s);
+                    }
+                    ok
+                }
+                None => false,
+            };
+            if !sent {
+                self.answer_unavailable(conns, r.conn, r.id);
+            }
+        }
+        progress
+    }
+
+    // ---- periodic maintenance --------------------------------------------
+
+    /// Health probes, load polls and anti-entropy rounds, each on its
+    /// own period.
+    fn tick(&mut self) -> bool {
+        let now = Instant::now();
+        let mut progress = false;
+        if self.last_probe.map_or(true, |t| now.duration_since(t) >= self.probe_every) {
+            self.last_probe = Some(now);
+            for i in 0..self.fleet.len() {
+                self.try_connect(i);
+                if self.backends[i].is_some() {
+                    let t = self.token();
+                    self.pending.insert(t, Pending { shard: i, kind: PendingKind::Probe });
+                    self.send_to(i, &format!("{{\"op\":\"ping\",\"id\":{t}}}"));
+                    let t = self.token();
+                    self.pending.insert(t, Pending { shard: i, kind: PendingKind::Poll });
+                    self.send_to(i, &format!("{{\"op\":\"metrics\",\"id\":{t}}}"));
+                }
+            }
+            progress = true;
+        }
+        if !self.draining
+            && self.last_sync.map_or(true, |t| now.duration_since(t) >= self.sync_every)
+        {
+            self.last_sync = Some(now);
+            self.metrics.sync_rounds += 1;
+            for i in 0..self.fleet.len() {
+                if self.fleet.shard(i).health == Health::Up
+                    && self.backends[i].is_some()
+                    && !self.sync_busy[i]
+                {
+                    let t = self.token();
+                    self.pending.insert(t, Pending { shard: i, kind: PendingKind::SyncPull });
+                    self.sync_busy[i] = true;
+                    let line = Json::obj()
+                        .set("op", "sync_pull")
+                        .set("id", t)
+                        .set("since", self.cursors[i])
+                        .to_string();
+                    self.send_to(i, &line);
+                }
+            }
+            progress = true;
+        }
+        progress
+    }
+
+    // ---- request handling ------------------------------------------------
+
+    /// One framed client request line: `ping`/`stats`/`metrics`/
+    /// `shutdown` answer locally, offloads route and forward.
+    fn handle_client_line(&mut self, cid: u64, conn: &mut ClientConn, line: &str) {
+        self.metrics.requests_total += 1;
+        let req = match Request::parse_line(line) {
+            Ok(req) => req,
+            Err(e) => {
+                self.metrics.local_answers += 1;
+                push_client(conn, &proto::err(proto::line_id(line), &e.to_string()));
+                return;
+            }
+        };
+        let Request { id, op, warnings } = req;
+        match op {
+            Op::Ping => {
+                self.metrics.local_answers += 1;
+                push_client(conn, &proto::ok_simple(id, "ping", &warnings));
+            }
+            Op::Stats => {
+                self.metrics.local_answers += 1;
+                push_client(conn, &proto::ok_stats(id, self.stats_json(), &warnings));
+            }
+            Op::Metrics => {
+                self.metrics.local_answers += 1;
+                push_client(conn, &proto::ok_metrics(id, self.metrics.snapshot(&self.fleet), &warnings));
+            }
+            Op::SyncPull { .. } | Op::SyncPush { .. } => {
+                self.metrics.local_answers += 1;
+                push_client(
+                    conn,
+                    &proto::err(id, "sync ops are shard-internal: send them to a shard daemon"),
+                );
+            }
+            Op::Shutdown => {
+                self.metrics.local_answers += 1;
+                self.draining = true;
+                push_client(conn, &proto::ok_simple(id, "shutdown", &warnings));
+            }
+            Op::Offload(r) => {
+                if self.draining {
+                    push_client(conn, &proto::err(id, "router is shutting down"));
+                    return;
+                }
+                let key = route_key(&self.cfg, &r);
+                let Some(route) = self.fleet.route(key) else {
+                    self.metrics.unavailable += 1;
+                    push_client(conn, &proto::unavailable(id, "no healthy shard available"));
+                    return;
+                };
+                if self.forward(route.shard, cid, id, line, key, 0) {
+                    if route.spilled {
+                        self.metrics.per_shard[route.shard].spills += 1;
+                    }
+                    conn.inflight += 1;
+                } else {
+                    // the chosen shard refused the connection outright:
+                    // treat it like a mid-flight failure (failure
+                    // accounting already happened in try_connect) and
+                    // let the backoff queue find a sibling
+                    self.retries.push(QueuedRetry {
+                        due: Instant::now() + RETRY_BACKOFF,
+                        conn: cid,
+                        id,
+                        line: line.to_string(),
+                        key,
+                        attempts: 1,
+                        exclude: route.shard,
+                    });
+                    conn.inflight += 1;
+                }
+            }
+        }
+    }
+
+    /// One framed response line from shard `i`, matched to its pending
+    /// request by token.
+    fn handle_backend_line(
+        &mut self,
+        i: usize,
+        line: &str,
+        conns: &mut HashMap<u64, ClientConn>,
+    ) {
+        let Ok(mut resp) = Json::parse(line) else { return };
+        let Some(token) = resp.get("id").and_then(|v| v.as_i64()) else { return };
+        let Some(p) = self.pending.remove(&token) else { return };
+        if self.fleet.note_success(i) {
+            self.metrics.per_shard[i].health_transitions += 1;
+            eprintln!("envadapt route: shard {i} ({}) is back up", self.fleet.shard(i).addr);
+        }
+        match p.kind {
+            PendingKind::Client { conn, id, key, attempts, .. } => {
+                let s = self.fleet.shard_mut(i);
+                s.inflight = s.inflight.saturating_sub(1);
+                self.metrics.per_shard[i].replies += 1;
+                if attempts > 0 {
+                    // the retry landed here: keep the key here too
+                    self.fleet.resticky(key, i);
+                }
+                set_id(&mut resp, id);
+                if let Some(c) = conns.get_mut(&conn) {
+                    push_client(c, &resp);
+                    c.inflight = c.inflight.saturating_sub(1);
+                }
+            }
+            PendingKind::Probe | PendingKind::Drain => {}
+            PendingKind::Poll => {
+                if let Some(m) = resp.get("metrics") {
+                    let qd = m.get("queue_depth").and_then(|v| v.as_i64()).unwrap_or(0).max(0);
+                    let busy = m
+                        .get("responses")
+                        .and_then(|r| r.get("busy"))
+                        .and_then(|v| v.as_i64())
+                        .unwrap_or(0)
+                        .max(0);
+                    self.fleet.shard_mut(i).note_poll(qd as usize, busy as u64);
+                }
+            }
+            PendingKind::SyncPull => {
+                self.sync_busy[i] = false;
+                if resp.get("ok").and_then(|v| v.as_bool()) != Some(true) {
+                    return;
+                }
+                if let Some(next) = resp.get("next_seq").and_then(|v| v.as_i64()) {
+                    self.cursors[i] = next.max(0) as usize;
+                }
+                let records: Vec<Json> = resp
+                    .get("records")
+                    .and_then(|v| v.items())
+                    .map(|xs| xs.to_vec())
+                    .unwrap_or_default();
+                if records.is_empty() {
+                    return;
+                }
+                self.metrics.replica_records += records.len() as u64;
+                for j in 0..self.fleet.len() {
+                    if j == i
+                        || self.fleet.shard(j).health != Health::Up
+                        || self.backends[j].is_none()
+                    {
+                        continue;
+                    }
+                    let t = self.token();
+                    self.pending.insert(t, Pending { shard: j, kind: PendingKind::SyncPush });
+                    let line = Json::obj()
+                        .set("op", "sync_push")
+                        .set("id", t)
+                        .set("records", Json::Arr(records.clone()))
+                        .to_string();
+                    self.send_to(j, &line);
+                }
+            }
+            PendingKind::SyncPush => {
+                if let Some(n) = resp.get("merged").and_then(|v| v.as_i64()) {
+                    self.metrics.replica_merges += n.max(0) as u64;
+                }
+            }
+        }
+    }
+
+    /// Router-level `stats` payload (the daemon's `stats` is per-shard;
+    /// ask a shard directly for those).
+    fn stats_json(&self) -> Json {
+        Json::obj()
+            .set("schema_version", SCHEMA_VERSION)
+            .set("shards", self.fleet.len())
+            .set("healthy_shards", self.fleet.healthy_count())
+            .set("requests", self.metrics.requests_total as i64)
+            .set("forwarded", self.metrics.forwarded_total() as i64)
+            .set("unavailable", self.metrics.unavailable as i64)
+            .set("replica_merges", self.metrics.replica_merges as i64)
+    }
+
+    /// Forwarded client work still unanswered (pending or backing off)?
+    fn client_work_outstanding(&self) -> bool {
+        !self.retries.is_empty()
+            || self.pending.values().any(|p| matches!(p.kind, PendingKind::Client { .. }))
+    }
+
+    fn drain_acks_outstanding(&self) -> bool {
+        self.pending.values().any(|p| matches!(p.kind, PendingKind::Drain))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// event loop
+// ---------------------------------------------------------------------------
+
+fn run_router(listener: TcpListener, r: &mut Router) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    let mut conns: HashMap<u64, ClientConn> = HashMap::new();
+    let mut next_conn: u64 = 0;
+    let mut listener = Some(listener);
+
+    loop {
+        let mut progress = false;
+
+        // 0. external drain signals (SIGTERM/SIGINT under `envadapt route`)
+        if sig::requested() {
+            r.draining = true;
+        }
+        if r.draining && listener.is_some() {
+            listener = None;
+        }
+
+        // 1. accept every waiting client
+        if let Some(l) = &listener {
+            loop {
+                match l.accept() {
+                    Ok((stream, _)) => {
+                        let _ = stream.set_nonblocking(true);
+                        let _ = stream.set_nodelay(true);
+                        conns.insert(
+                            next_conn,
+                            ClientConn {
+                                stream,
+                                rbuf: Vec::new(),
+                                wbuf: Vec::new(),
+                                eof: false,
+                                dead: false,
+                                inflight: 0,
+                            },
+                        );
+                        next_conn += 1;
+                        progress = true;
+                    }
+                    Err(_) => break,
+                }
+            }
+        }
+
+        // 2. read clients and handle complete request lines
+        let mut buf = [0u8; 8192];
+        let cids: Vec<u64> = conns.keys().copied().collect();
+        for cid in cids {
+            let conn = conns.get_mut(&cid).expect("cid just listed");
+            if conn.eof || conn.dead {
+                continue;
+            }
+            loop {
+                match conn.stream.read(&mut buf) {
+                    Ok(0) => {
+                        conn.eof = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.rbuf.extend_from_slice(&buf[..n]);
+                        progress = true;
+                        if conn.rbuf.len() > MAX_LINE {
+                            push_client(conn, &proto::err(0, "request line too long"));
+                            conn.dead = true;
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        conn.dead = true;
+                        break;
+                    }
+                }
+            }
+            if conn.dead {
+                continue;
+            }
+            let mut lines: Vec<String> = Vec::new();
+            while let Some(pos) = conn.rbuf.iter().position(|&b| b == b'\n') {
+                let mut raw: Vec<u8> = conn.rbuf.drain(..=pos).collect();
+                raw.pop();
+                lines.push(String::from_utf8_lossy(&raw).into_owned());
+            }
+            for line in lines {
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                progress = true;
+                r.handle_client_line(cid, conn, line);
+            }
+        }
+
+        // 3. periodic probes, polls, anti-entropy, retry backoff
+        progress |= r.tick();
+        progress |= r.pump_retries(&mut conns);
+
+        // 4. read backends and handle complete response lines
+        for i in 0..r.backends.len() {
+            let mut lines: Vec<String> = Vec::new();
+            let mut failed = false;
+            if let Some(b) = &mut r.backends[i] {
+                loop {
+                    match b.stream.read(&mut buf) {
+                        Ok(0) => {
+                            failed = true;
+                            break;
+                        }
+                        Ok(n) => {
+                            b.rbuf.extend_from_slice(&buf[..n]);
+                            progress = true;
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                        Err(_) => {
+                            failed = true;
+                            break;
+                        }
+                    }
+                }
+                while let Some(pos) = b.rbuf.iter().position(|&x| x == b'\n') {
+                    let mut raw: Vec<u8> = b.rbuf.drain(..=pos).collect();
+                    raw.pop();
+                    lines.push(String::from_utf8_lossy(&raw).into_owned());
+                }
+            }
+            for line in lines {
+                let line = line.trim();
+                if !line.is_empty() {
+                    progress = true;
+                    r.handle_backend_line(i, line, &mut conns);
+                }
+            }
+            if failed {
+                progress = true;
+                // a cleanly-draining backend closing its socket after
+                // answering everything is not a failure worth counting
+                // against health unless work was actually lost
+                r.fail_backend(i, &mut conns);
+            }
+        }
+
+        // 5. flush backend write buffers
+        for i in 0..r.backends.len() {
+            let mut failed = false;
+            if let Some(b) = &mut r.backends[i] {
+                while !b.wbuf.is_empty() {
+                    match b.stream.write(&b.wbuf) {
+                        Ok(0) => {
+                            failed = true;
+                            break;
+                        }
+                        Ok(n) => {
+                            b.wbuf.drain(..n);
+                            progress = true;
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                        Err(_) => {
+                            failed = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            if failed {
+                progress = true;
+                r.fail_backend(i, &mut conns);
+            }
+        }
+
+        // 6. flush client write buffers
+        for conn in conns.values_mut() {
+            if conn.dead {
+                continue;
+            }
+            while !conn.wbuf.is_empty() {
+                match conn.stream.write(&conn.wbuf) {
+                    Ok(0) => {
+                        conn.dead = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.wbuf.drain(..n);
+                        progress = true;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        conn.dead = true;
+                        break;
+                    }
+                }
+            }
+        }
+
+        // 7. reap client connections; a dead client's in-flight work is
+        //    orphaned (late backend replies find no connection and are
+        //    dropped — the shard did the work, nobody is listening)
+        let reap: Vec<u64> = conns
+            .iter()
+            .filter(|(_, c)| c.dead || (c.eof && c.inflight == 0 && c.wbuf.is_empty()))
+            .map(|(&cid, _)| cid)
+            .collect();
+        for cid in reap {
+            let c = conns.remove(&cid).expect("conn just listed");
+            if c.dead {
+                let orphaned: Vec<i64> = r
+                    .pending
+                    .iter()
+                    .filter(|(_, p)| matches!(&p.kind, PendingKind::Client { conn, .. } if *conn == cid))
+                    .map(|(&t, _)| t)
+                    .collect();
+                for t in orphaned {
+                    let p = r.pending.remove(&t).expect("token just listed");
+                    let s = r.fleet.shard_mut(p.shard);
+                    s.inflight = s.inflight.saturating_sub(1);
+                }
+                r.retries.retain(|q| q.conn != cid);
+            }
+        }
+
+        // 8. drain: finish forwarded work, then propagate shutdown to
+        //    every backend and wait (bounded) for their acks
+        if r.draining && !r.client_work_outstanding() {
+            if !r.drain_sent {
+                r.drain_sent = true;
+                r.drain_deadline = Some(Instant::now() + DRAIN_ACK_GRACE);
+                for i in 0..r.fleet.len() {
+                    r.try_connect(i);
+                    if r.backends[i].is_some() {
+                        let t = r.token();
+                        r.pending.insert(t, Pending { shard: i, kind: PendingKind::Drain });
+                        r.send_to(i, &format!("{{\"op\":\"shutdown\",\"id\":{t}}}"));
+                    }
+                }
+            } else if !r.drain_acks_outstanding()
+                || r.drain_deadline.is_some_and(|d| d <= Instant::now())
+            {
+                let backends_flushed =
+                    r.backends.iter().all(|b| b.as_ref().map_or(true, |b| b.wbuf.is_empty()));
+                if backends_flushed {
+                    for conn in conns.values_mut() {
+                        if conn.dead || conn.wbuf.is_empty() {
+                            continue;
+                        }
+                        let _ = conn.stream.set_nonblocking(false);
+                        let _ = conn.stream.set_write_timeout(Some(Duration::from_secs(2)));
+                        let _ = conn.stream.write_all(&conn.wbuf);
+                        let _ = conn.stream.flush();
+                    }
+                    return Ok(());
+                }
+            }
+        }
+
+        if !progress {
+            std::thread::sleep(IDLE_TICK);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// transports
+// ---------------------------------------------------------------------------
+
+/// Route an already-bound listener until drained (a client's `shutdown`
+/// op, or SIGTERM/SIGINT when [`crate::server::install_signal_handlers`]
+/// ran). Drain is propagated to every backend shard before returning.
+pub fn route_listener(listener: TcpListener, opts: RouterOptions) -> Result<()> {
+    if opts.shards.is_empty() {
+        return Err(anyhow!("a router needs at least one --shards address"));
+    }
+    let mut r = Router::new(&opts);
+    run_router(listener, &mut r)
+}
+
+/// Bind `addr` and route until drained. Blocking — this is what
+/// `envadapt route` runs.
+pub fn route_tcp(addr: &str, opts: RouterOptions) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!(
+        "envadapt route: listening on {} for {} shard(s)",
+        listener.local_addr()?,
+        opts.shards.len()
+    );
+    route_listener(listener, opts)
+}
+
+/// Handle on a router running on a background thread (tests, examples,
+/// embedding).
+pub struct RouterHandle {
+    addr: SocketAddr,
+    thread: std::thread::JoinHandle<Result<()>>,
+}
+
+impl RouterHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Ask the router to drain (a `shutdown` request over a fresh
+    /// connection) and wait for it to wind down. The drain propagates
+    /// to every backend shard: after this returns the whole cluster is
+    /// stopped.
+    pub fn shutdown(self) -> Result<()> {
+        if let Ok(mut stream) = TcpStream::connect(self.addr) {
+            let _ = stream.write_all(b"{\"op\":\"shutdown\",\"id\":0}\n");
+            let _ = stream.flush();
+            let mut line = String::new();
+            let _ = BufReader::new(stream).read_line(&mut line);
+        }
+        match self.thread.join() {
+            Ok(r) => r,
+            Err(_) => Err(anyhow!("router thread panicked")),
+        }
+    }
+}
+
+/// Bind `addr` and route on a background thread; the returned handle
+/// carries the bound address (bind port 0 for an ephemeral port).
+pub fn spawn_router(opts: RouterOptions, addr: &str) -> Result<RouterHandle> {
+    if opts.shards.is_empty() {
+        return Err(anyhow!("a router needs at least one --shards address"));
+    }
+    let listener = TcpListener::bind(addr)?;
+    let addr = listener.local_addr()?;
+    let thread = std::thread::spawn(move || {
+        let mut r = Router::new(&opts);
+        run_router(listener, &mut r)
+    });
+    Ok(RouterHandle { addr, thread })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Lang;
+
+    #[test]
+    fn set_id_replaces_in_place_preserving_field_order() {
+        let mut j = Json::obj().set("ok", true).set("id", 5).set("report", "x");
+        set_id(&mut j, 9);
+        assert_eq!(j.to_string(), r#"{"ok":true,"id":9,"report":"x"}"#);
+        // absent id: appended, nothing else moves
+        let mut j = Json::obj().set("ok", false);
+        set_id(&mut j, 3);
+        assert_eq!(j.to_string(), r#"{"ok":false,"id":3}"#);
+        // rewrite_id round-trips unknown fields byte-identically
+        let line = r#"{"op":"offload","id":1,"future_field":{"nested":[1,2]},"name":"x"}"#;
+        let out = rewrite_id(line, 42).unwrap();
+        assert_eq!(out, r#"{"op":"offload","id":42,"future_field":{"nested":[1,2]},"name":"x"}"#);
+    }
+
+    #[test]
+    fn route_keys_are_deterministic_and_program_sensitive() {
+        let cfg = Config::standard();
+        let mm = OffloadRequest::workload("mm", Lang::C).build().unwrap();
+        let k1 = route_key(&cfg, &mm);
+        assert_eq!(route_key(&cfg, &mm), k1, "same request, same key");
+        let fourier = OffloadRequest::workload("fourier", Lang::C).build().unwrap();
+        assert_ne!(route_key(&cfg, &fourier), k1, "different program, different key");
+        // inline source of the same workload fingerprints identically:
+        // the route key follows the *program*, not the request shape
+        let src = crate::workloads::get("mm", Lang::C).unwrap().code;
+        let inline = OffloadRequest::source(src, Lang::C).name("mm").build().unwrap();
+        assert_eq!(route_key(&cfg, &inline), k1);
+        // unparseable code still keys deterministically (the shard
+        // reports the parse error; routing just has to be stable)
+        let bad = OffloadRequest::source("int main( {", Lang::C).build().unwrap();
+        assert_eq!(route_key(&cfg, &bad), route_key(&cfg, &bad));
+    }
+
+    #[test]
+    fn router_metrics_snapshot_has_the_router_family() {
+        let fleet = Fleet::new(&["127.0.0.1:1", "127.0.0.1:2"], 0);
+        let mut m = RouterMetrics::new(2);
+        m.requests_total = 7;
+        m.per_shard[1].forwarded = 4;
+        m.per_shard[1].spills = 1;
+        let snap = m.snapshot(&fleet);
+        assert_eq!(snap.get("schema_version").and_then(|v| v.as_i64()), Some(SCHEMA_VERSION));
+        let r = snap.get("router").expect("router family");
+        assert_eq!(r.get("shards").and_then(|v| v.as_i64()), Some(2));
+        assert_eq!(r.get("healthy_shards").and_then(|v| v.as_i64()), Some(2));
+        assert_eq!(r.get("forwarded_total").and_then(|v| v.as_i64()), Some(4));
+        let per = r.get("per_shard").and_then(|v| v.items()).unwrap();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[1].get("spills").and_then(|v| v.as_i64()), Some(1));
+        assert_eq!(per[0].get("health").and_then(|v| v.as_str()), Some("up"));
+    }
+
+    #[test]
+    fn empty_shard_list_is_rejected_up_front() {
+        let err = spawn_router(RouterOptions::default(), "127.0.0.1:0").unwrap_err();
+        assert!(err.to_string().contains("--shards"));
+    }
+
+    #[test]
+    fn options_default_sensibly() {
+        let o = RouterOptions::default();
+        assert_eq!(o.retry_limit(), 2);
+        assert_eq!(o.probe_every(), Duration::from_millis(200));
+        assert_eq!(o.sync_every(), Duration::from_millis(500));
+        assert_eq!(o.connect_timeout(), Duration::from_millis(1000));
+        let o = RouterOptions { retry_limit: 5, probe_interval_ms: 50, ..Default::default() };
+        assert_eq!(o.retry_limit(), 5);
+        assert_eq!(o.probe_every(), Duration::from_millis(50));
+    }
+}

@@ -8,7 +8,8 @@
 //!
 //! * **Event loop** — one thread owns the listener and every client
 //!   connection, all non-blocking (`run_event_loop`): it accepts, frames
-//!   request lines, answers cheap ops (`ping`/`stats`/`metrics`) inline,
+//!   request lines, answers cheap ops (`ping`/`stats`/`metrics` and the
+//!   shard-internal `sync_pull`/`sync_push`) inline,
 //!   admits offloads into a bounded queue, routes worker completions
 //!   back to the right connection by token, enforces per-request
 //!   timeouts, and drives graceful drain. No thread-per-connection:
@@ -64,6 +65,12 @@ use std::time::{Duration, Instant};
 /// Longest accepted request line (a line past this answers an error and
 /// closes the connection — a framing bug, not a request).
 const MAX_LINE: usize = 16 * 1024 * 1024;
+
+/// Most learned record lines one `sync_pull` response carries — keeps
+/// anti-entropy answers bounded so a replication round can never stall
+/// the event loop behind one giant response (pullers resume from the
+/// returned `next_seq` cursor).
+const SYNC_PULL_BATCH: usize = 512;
 
 /// Idle tick of the event loop: how long it sleeps when no socket made
 /// progress (bounds added latency at idle; under load it never sleeps).
@@ -174,7 +181,16 @@ impl Inner {
             return Admission::ShuttingDown;
         }
         if q.jobs.len() >= self.queue_capacity {
-            return Admission::Busy { retry_after_ms: self.retry_after_ms };
+            // load-proportional backoff: estimated queue drain time
+            // (depth × recent offload wall average), floored at the
+            // configured hint — a router's retry pacing tracks load
+            return Admission::Busy {
+                retry_after_ms: proto::retry_hint(
+                    q.jobs.len(),
+                    self.metrics.avg_wall_ms(),
+                    self.retry_after_ms,
+                ),
+            };
         }
         q.jobs.push_back(job);
         drop(q);
@@ -290,6 +306,8 @@ impl Service {
             Op::Stats => (proto::ok_stats(id, self.stats_json(), &warnings), false),
             Op::Metrics => (proto::ok_metrics(id, self.metrics_json(), &warnings), false),
             Op::Ping => (proto::ok_simple(id, "ping", &warnings), false),
+            Op::SyncPull { since } => (self.sync_pull_resp(id, since, &warnings), false),
+            Op::SyncPush { records } => (self.sync_push_resp(id, &records, &warnings), false),
             Op::Shutdown => {
                 self.inner.draining.store(true, Ordering::SeqCst);
                 (proto::ok_simple(id, "shutdown", &warnings), true)
@@ -359,6 +377,22 @@ impl Service {
         self.inner.metrics.snapshot(&self.inner.gauges())
     }
 
+    /// The `sync_pull` op: a bounded batch of learned record lines
+    /// appended at or after entry cursor `since`, plus the cursor to
+    /// resume from (anti-entropy; see `proto::Op::SyncPull`).
+    fn sync_pull_resp(&self, id: i64, since: usize, warnings: &[String]) -> Json {
+        let (records, next) =
+            self.inner.db.lock().unwrap().sync_lines_since(since, SYNC_PULL_BATCH);
+        proto::ok_sync_pull(id, &records, next, warnings)
+    }
+
+    /// The `sync_push` op: absorb record lines replicated from a sibling
+    /// shard with merge-on-write semantics (the faster plan wins).
+    fn sync_push_resp(&self, id: i64, records: &[String], warnings: &[String]) -> Json {
+        let merged = self.inner.db.lock().unwrap().absorb_lines(records);
+        proto::ok_sync_push(id, merged, warnings)
+    }
+
     /// Handle on the shared metrics registry (tests, embedding).
     pub fn metrics(&self) -> SharedMetrics {
         self.inner.metrics.clone()
@@ -396,6 +430,7 @@ fn op_kind(op: &Op) -> OpKind {
         Op::Metrics => OpKind::Metrics,
         Op::Ping => OpKind::Ping,
         Op::Shutdown => OpKind::Shutdown,
+        Op::SyncPull { .. } | Op::SyncPush { .. } => OpKind::Sync,
     }
 }
 
@@ -572,6 +607,12 @@ fn handle_line(service: &Service, cid: u64, conn: &mut EvConn, line: &str, st: &
         Op::Stats => push_resp(m, conn, &proto::ok_stats(id, service.stats_json(), &warnings)),
         Op::Metrics => {
             push_resp(m, conn, &proto::ok_metrics(id, service.metrics_json(), &warnings))
+        }
+        Op::SyncPull { since } => {
+            push_resp(m, conn, &service.sync_pull_resp(id, since, &warnings))
+        }
+        Op::SyncPush { records } => {
+            push_resp(m, conn, &service.sync_push_resp(id, &records, &warnings))
         }
         Op::Shutdown => {
             // begin graceful drain; the ack is flushed before the loop
@@ -818,8 +859,10 @@ fn run_event_loop(listener: TcpListener, service: &Service) -> Result<()> {
 /// SIGTERM/SIGINT → graceful drain, installed only by the foreground
 /// daemon entry points (`envadapt serve`); background/test servers drain
 /// via the `shutdown` op instead. A handler that only sets a flag is
-/// async-signal-safe; the event loop polls the flag every tick.
-mod sig {
+/// async-signal-safe; the event loop polls the flag every tick (the
+/// router's loop in [`crate::router`] polls the same flag, so one
+/// SIGTERM drains whichever daemon flavor is in the foreground).
+pub(crate) mod sig {
     use std::sync::atomic::{AtomicBool, Ordering};
 
     static REQUESTED: AtomicBool = AtomicBool::new(false);
@@ -1060,6 +1103,56 @@ mod tests {
             m.get("search").unwrap().get("measurements").and_then(|v| v.as_i64()).unwrap() > 0
         );
         s.shutdown();
+    }
+
+    #[test]
+    fn sync_ops_replicate_learned_patterns_between_services() {
+        let a = service();
+        let code = crate::workloads::get("smallloops", Lang::C).unwrap().code;
+        let (r, _) = a.dispatch_line(&proto::offload_request(1, "smallloops", Lang::C, code));
+        assert_eq!(r.get("ok").and_then(|v| v.as_bool()), Some(true), "{}", r.to_string());
+
+        // pull a's learned slice off the wire ...
+        let (pull, _) = a.dispatch_line(r#"{"op":"sync_pull","id":2,"since":0}"#);
+        assert_eq!(pull.get("ok").and_then(|v| v.as_bool()), Some(true), "{}", pull.to_string());
+        let records = pull.get("records").and_then(|v| v.items()).expect("records array");
+        assert_eq!(records.len(), 1, "one learned record so far");
+        let next = pull.get("next_seq").and_then(|v| v.as_i64()).unwrap();
+        assert!(next >= 1);
+        // ... and an incremental pull from the cursor is empty
+        let (tail, _) =
+            a.dispatch_line(&format!(r#"{{"op":"sync_pull","id":3,"since":{next}}}"#));
+        assert_eq!(
+            tail.get("records").and_then(|v| v.items()).map(|x| x.len()),
+            Some(0),
+            "nothing new since the cursor"
+        );
+
+        // push the slice into a fresh service: it replays with zero
+        // measurements, never having searched this program itself
+        let b = service();
+        let push = Json::obj()
+            .set("op", "sync_push")
+            .set("id", 4)
+            .set("records", Json::Arr(records.to_vec()))
+            .to_string();
+        let (pushed, _) = b.dispatch_line(&push);
+        assert_eq!(pushed.get("ok").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(pushed.get("merged").and_then(|v| v.as_i64()), Some(1));
+        let (r2, _) = b.dispatch_line(&proto::offload_request(5, "smallloops", Lang::C, code));
+        let rep = r2.get("report").unwrap();
+        assert_eq!(rep.get("measurements").and_then(|v| v.as_i64()), Some(0));
+        assert!(rep.get("pattern_reuse").is_some(), "{}", r2.to_string());
+        // a second identical push changes nothing (idempotent)
+        let (pushed2, _) = b.dispatch_line(&push);
+        assert_eq!(pushed2.get("merged").and_then(|v| v.as_i64()), Some(0));
+
+        // both sync ops were counted under requests_by_op.sync
+        let (m, _) = a.dispatch_line(r#"{"op":"metrics","id":9}"#);
+        let by_op = m.get("metrics").unwrap().get("requests_by_op").unwrap();
+        assert_eq!(by_op.get("sync").and_then(|v| v.as_i64()), Some(2));
+        a.shutdown();
+        b.shutdown();
     }
 
     #[test]

@@ -1,0 +1,403 @@
+//! Routing policy for the sharded serve cluster (`envadapt route`):
+//! rendezvous placement, shard health bookkeeping, sticky assignment
+//! and the load-spill decision.
+//!
+//! This is a pure state machine — no sockets, no clocks — so every
+//! policy rule is unit-testable in isolation; [`crate::router`] drives
+//! it from the wire. The rules:
+//!
+//! * **Placement** — a request's route key (the engine fingerprint of
+//!   its program) picks a *home* shard by rendezvous (highest-random-
+//!   weight) hashing over the healthy shards: every router instance
+//!   agrees on the mapping without coordination, and losing a shard
+//!   remaps only the keys that lived on it.
+//! * **Stickiness** — the first placement of a key is remembered and
+//!   reused while that shard stays healthy. Replay correctness depends
+//!   on this: the shard that learned a pattern replays it with zero
+//!   measurements, so a key must not wander between shards faster than
+//!   anti-entropy replication spreads its record.
+//! * **Spill** — when the home shard looks overloaded (it answered
+//!   `busy` since the last metrics poll, or its queue depth plus the
+//!   router's own in-flight count reaches the spill threshold), *new*
+//!   keys are placed on the least-loaded healthy shard instead. Spill
+//!   is purely a routing decision — any shard can serve any request —
+//!   so it trades replay locality for latency, never correctness.
+//! * **Health** — [`DOWN_AFTER`] consecutive probe/request failures
+//!   take a shard out of the rendezvous set; one success brings it
+//!   back. Sticky entries pointing at a down shard re-home lazily on
+//!   their next request.
+
+use crate::util::fxhash::FxHasher;
+use std::collections::HashMap;
+use std::hash::Hasher;
+
+/// Consecutive failures (health probes or forwarded requests) before a
+/// shard is marked [`Health::Down`] and leaves the rendezvous set.
+pub const DOWN_AFTER: u32 = 3;
+
+/// Spill threshold when [`Fleet::new`] is given 0: a home shard whose
+/// observed queue depth plus router-attributed in-flight requests
+/// reaches this (or that answered `busy` since the last poll) sheds
+/// new keys to the least-loaded healthy sibling.
+pub const DEFAULT_SPILL_QUEUE: usize = 8;
+
+/// A shard is either in the rendezvous set or not — there is no
+/// half-in state; suspicion is the failure streak below [`DOWN_AFTER`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    Up,
+    Down,
+}
+
+/// Everything the router knows about one backend daemon.
+#[derive(Debug, Clone)]
+pub struct ShardState {
+    /// backend address, exactly as given on the command line; doubles
+    /// as the shard's rendezvous identity, so the mapping survives
+    /// router restarts
+    pub addr: String,
+    pub health: Health,
+    /// consecutive failures since the last success
+    failures: u32,
+    /// queue depth reported by the shard's last `metrics` poll
+    pub queue_depth: usize,
+    /// `busy` responses the shard shed between the last two polls
+    pub busy_delta: u64,
+    /// absolute `responses.busy` counter at the last poll
+    busy_total: u64,
+    /// offloads the router has forwarded here and not yet seen answered
+    pub inflight: usize,
+}
+
+impl ShardState {
+    fn new(addr: &str) -> ShardState {
+        ShardState {
+            addr: addr.to_string(),
+            health: Health::Up,
+            failures: 0,
+            queue_depth: 0,
+            busy_delta: 0,
+            busy_total: 0,
+            inflight: 0,
+        }
+    }
+
+    /// The load signal spill decisions compare: what the shard reported
+    /// queued, plus what the router has sent it since that report.
+    pub fn load(&self) -> usize {
+        self.queue_depth + self.inflight
+    }
+
+    /// Fold in one `metrics` poll: the shard's current queue depth and
+    /// its absolute `responses.busy` counter (the delta against the
+    /// previous poll is the freshest overload signal there is — the
+    /// shard itself told a client to back off).
+    pub fn note_poll(&mut self, queue_depth: usize, busy_total: u64) {
+        self.busy_delta = busy_total.saturating_sub(self.busy_total);
+        self.busy_total = busy_total;
+        self.queue_depth = queue_depth;
+    }
+
+    /// Should new keys spill away from this shard?
+    pub fn overloaded(&self, spill_queue: usize) -> bool {
+        self.busy_delta > 0 || self.load() >= spill_queue
+    }
+}
+
+/// Where [`Fleet::route`] decided one request goes, and why — the
+/// router counts `spilled` routes per shard in its metrics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Route {
+    pub shard: usize,
+    /// placed off its rendezvous home because the home was overloaded
+    pub spilled: bool,
+    /// reused a remembered placement rather than computing one
+    pub sticky: bool,
+}
+
+/// The cluster as the router sees it: shard states plus the sticky
+/// key→shard table.
+#[derive(Debug)]
+pub struct Fleet {
+    shards: Vec<ShardState>,
+    sticky: HashMap<u64, usize>,
+    spill_queue: usize,
+}
+
+impl Fleet {
+    /// Build from backend addresses (order defines shard indices);
+    /// `spill_queue` 0 takes [`DEFAULT_SPILL_QUEUE`]. Everything starts
+    /// `Up` — the first health probe corrects optimism within a tick.
+    pub fn new<S: AsRef<str>>(addrs: &[S], spill_queue: usize) -> Fleet {
+        Fleet {
+            shards: addrs.iter().map(|a| ShardState::new(a.as_ref())).collect(),
+            sticky: HashMap::new(),
+            spill_queue: if spill_queue == 0 { DEFAULT_SPILL_QUEUE } else { spill_queue },
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    pub fn shard(&self, i: usize) -> &ShardState {
+        &self.shards[i]
+    }
+
+    pub fn shard_mut(&mut self, i: usize) -> &mut ShardState {
+        &mut self.shards[i]
+    }
+
+    pub fn healthy_count(&self) -> usize {
+        self.shards.iter().filter(|s| s.health == Health::Up).count()
+    }
+
+    /// A probe or forwarded request succeeded. Returns `true` on a
+    /// `Down → Up` transition (the router logs and counts these).
+    pub fn note_success(&mut self, i: usize) -> bool {
+        let s = &mut self.shards[i];
+        s.failures = 0;
+        if s.health == Health::Down {
+            s.health = Health::Up;
+            return true;
+        }
+        false
+    }
+
+    /// A probe or forwarded request failed. Returns `true` on an
+    /// `Up → Down` transition ([`DOWN_AFTER`] consecutive failures).
+    pub fn note_failure(&mut self, i: usize) -> bool {
+        let s = &mut self.shards[i];
+        s.failures = s.failures.saturating_add(1);
+        if s.health == Health::Up && s.failures >= DOWN_AFTER {
+            s.health = Health::Down;
+            return true;
+        }
+        false
+    }
+
+    /// Rendezvous score of `key` on the shard named `addr`: both sides
+    /// of the pair feed one hash, so each (key, shard) pair gets an
+    /// independent uniform weight and the argmax is the HRW placement.
+    fn score(key: u64, addr: &str) -> u64 {
+        let mut h = FxHasher::default();
+        h.write_u64(key);
+        h.write(addr.as_bytes());
+        h.finish()
+    }
+
+    /// The rendezvous home of `key` over the currently-healthy shards;
+    /// `None` when every shard is down (the router answers
+    /// `unavailable`).
+    pub fn home(&self, key: u64) -> Option<usize> {
+        self.shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.health == Health::Up)
+            .max_by_key(|(i, s)| (Self::score(key, &s.addr), usize::MAX - i))
+            .map(|(i, _)| i)
+    }
+
+    /// Place one request: sticky placement if its shard is still
+    /// healthy, otherwise the rendezvous home — unless the home is
+    /// overloaded and a strictly less-loaded healthy sibling exists, in
+    /// which case the key spills there. The chosen shard is remembered.
+    pub fn route(&mut self, key: u64) -> Option<Route> {
+        if let Some(&i) = self.sticky.get(&key) {
+            if self.shards[i].health == Health::Up {
+                return Some(Route { shard: i, spilled: false, sticky: true });
+            }
+        }
+        let home = self.home(key)?;
+        let mut chosen = home;
+        let mut spilled = false;
+        if self.shards[home].overloaded(self.spill_queue) {
+            let alt = self
+                .shards
+                .iter()
+                .enumerate()
+                .filter(|(i, s)| *i != home && s.health == Health::Up)
+                .min_by_key(|(_, s)| s.load())
+                .map(|(i, _)| i);
+            if let Some(alt) = alt {
+                if self.shards[alt].load() < self.shards[home].load() {
+                    chosen = alt;
+                    spilled = true;
+                }
+            }
+        }
+        self.sticky.insert(key, chosen);
+        Some(Route { shard: chosen, spilled, sticky: false })
+    }
+
+    /// Best healthy shard for `key` other than `exclude` — where a
+    /// failed forward retries. `None` when no other shard is healthy.
+    pub fn sibling(&self, key: u64, exclude: usize) -> Option<usize> {
+        self.shards
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| *i != exclude && s.health == Health::Up)
+            .max_by_key(|(i, s)| (Self::score(key, &s.addr), usize::MAX - i))
+            .map(|(i, _)| i)
+    }
+
+    /// A retry landed `key` somewhere other than its recorded
+    /// placement: remember the shard that actually answered.
+    pub fn resticky(&mut self, key: u64, shard: usize) {
+        self.sticky.insert(key, shard);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet(n: usize) -> Fleet {
+        let addrs: Vec<String> = (0..n).map(|i| format!("127.0.0.1:{}", 9000 + i)).collect();
+        Fleet::new(&addrs, 0)
+    }
+
+    fn down(f: &mut Fleet, i: usize) {
+        for _ in 0..DOWN_AFTER {
+            f.note_failure(i);
+        }
+        assert_eq!(f.shard(i).health, Health::Down);
+    }
+
+    #[test]
+    fn rendezvous_is_deterministic_balanced_and_minimally_disruptive() {
+        let mut f = fleet(3);
+        let homes: Vec<usize> = (0..200).map(|k| f.home(k).unwrap()).collect();
+        // deterministic
+        for (k, &h) in homes.iter().enumerate() {
+            assert_eq!(f.home(k as u64), Some(h));
+        }
+        // every shard owns a share of the keyspace
+        for i in 0..3 {
+            let n = homes.iter().filter(|&&h| h == i).count();
+            assert!(n > 10, "shard {i} owns only {n}/200 keys");
+        }
+        // losing shard 1 moves only shard 1's keys
+        down(&mut f, 1);
+        for (k, &h) in homes.iter().enumerate() {
+            let now = f.home(k as u64).unwrap();
+            if h != 1 {
+                assert_eq!(now, h, "key {k} moved off a healthy shard");
+            } else {
+                assert_ne!(now, 1, "key {k} still maps to the down shard");
+            }
+        }
+        // recovery restores the original mapping exactly
+        f.note_success(1);
+        for (k, &h) in homes.iter().enumerate() {
+            assert_eq!(f.home(k as u64), Some(h));
+        }
+    }
+
+    #[test]
+    fn health_transitions_need_a_streak_and_report_once() {
+        let mut f = fleet(2);
+        // a streak below the threshold, broken by one success: still up
+        f.note_failure(0);
+        f.note_failure(0);
+        assert!(!f.note_success(0), "Up → Up is not a transition");
+        assert_eq!(f.shard(0).health, Health::Up);
+        // the full streak downs it, exactly once
+        assert!(!f.note_failure(0));
+        assert!(!f.note_failure(0));
+        assert!(f.note_failure(0), "third consecutive failure transitions");
+        assert!(!f.note_failure(0), "already down: no repeat transition");
+        assert_eq!(f.healthy_count(), 1);
+        // one success is enough to rejoin
+        assert!(f.note_success(0));
+        assert_eq!(f.shard(0).health, Health::Up);
+    }
+
+    #[test]
+    fn routes_are_sticky_and_rehome_off_a_dead_shard() {
+        let mut f = fleet(3);
+        let key = 42;
+        let first = f.route(key).unwrap();
+        assert!(!first.sticky);
+        assert_eq!(f.home(key), Some(first.shard), "unloaded route is the home");
+        let again = f.route(key).unwrap();
+        assert_eq!(again.shard, first.shard);
+        assert!(again.sticky, "second placement reuses the first");
+        // the shard dies: the key lazily re-homes and sticks there
+        down(&mut f, first.shard);
+        let moved = f.route(key).unwrap();
+        assert_ne!(moved.shard, first.shard);
+        assert!(!moved.sticky);
+        assert!(f.route(key).unwrap().sticky);
+    }
+
+    #[test]
+    fn overloaded_home_spills_new_keys_but_not_sticky_ones() {
+        let mut f = fleet(3);
+        // pick a key and pin it to its home before any overload
+        let pinned = (0..).find(|&k| f.home(k) == Some(0)).unwrap();
+        assert_eq!(f.route(pinned).unwrap().shard, 0);
+        // shard 0 shed a busy since the last poll: overloaded
+        f.shard_mut(0).note_poll(0, 1);
+        assert!(f.shard(0).overloaded(DEFAULT_SPILL_QUEUE));
+        f.shard_mut(0).inflight = 2; // spill target must be strictly lighter
+        let fresh = (pinned + 1..).find(|&k| f.home(k) == Some(0)).unwrap();
+        let spilled = f.route(fresh).unwrap();
+        assert!(spilled.spilled, "new key on an overloaded home spills");
+        assert_ne!(spilled.shard, 0);
+        // the pinned key stays home: spill never moves an existing placement
+        let r = f.route(pinned).unwrap();
+        assert_eq!((r.shard, r.sticky), (0, true));
+        // once the next poll clears the busy delta and load, new keys home again
+        f.shard_mut(0).note_poll(0, 1);
+        f.shard_mut(0).inflight = 0;
+        assert!(!f.shard(0).overloaded(DEFAULT_SPILL_QUEUE));
+        let later = (fresh + 1..).find(|&k| f.home(k) == Some(0)).unwrap();
+        let r = f.route(later).unwrap();
+        assert_eq!((r.shard, r.spilled), (0, false));
+        // but the spilled key keeps its placement (replay locality)
+        assert_eq!(f.route(fresh).unwrap().shard, spilled.shard);
+    }
+
+    #[test]
+    fn spill_stays_home_when_every_sibling_is_as_loaded() {
+        let mut f = fleet(2);
+        f.shard_mut(0).note_poll(4, 1);
+        f.shard_mut(1).note_poll(4, 0);
+        let key = (0..).find(|&k| f.home(k) == Some(0)).unwrap();
+        let r = f.route(key).unwrap();
+        assert_eq!((r.shard, r.spilled), (0, false), "equal load: no point spilling");
+    }
+
+    #[test]
+    fn sibling_skips_the_excluded_and_the_dead() {
+        let mut f = fleet(3);
+        let key = 7;
+        let home = f.home(key).unwrap();
+        let sib = f.sibling(key, home).unwrap();
+        assert_ne!(sib, home);
+        down(&mut f, sib);
+        let next = f.sibling(key, home).unwrap();
+        assert!(next != home && next != sib);
+        down(&mut f, next);
+        assert_eq!(f.sibling(key, home), None, "no healthy sibling left");
+        // resticky records where a retry actually landed
+        f.route(key);
+        f.resticky(key, home);
+        assert_eq!(f.route(key).unwrap().shard, home);
+    }
+
+    #[test]
+    fn all_shards_down_routes_nowhere() {
+        let mut f = fleet(2);
+        down(&mut f, 0);
+        down(&mut f, 1);
+        assert_eq!(f.home(1), None);
+        assert_eq!(f.route(1), None);
+        assert_eq!(f.healthy_count(), 0);
+    }
+}

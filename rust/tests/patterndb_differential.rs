@@ -323,3 +323,73 @@ fn equivalence_survives_save_load_and_tiered_round_trips() {
     wipe(&base);
     wipe(&snap);
 }
+
+/// Anti-entropy path: two live DB instances attached to the *same* base
+/// path interleave inserts and flushes into one shared segment
+/// directory. Merge-on-write must hold when the shards' slices are
+/// folded back together — every duplicate key resolves to the faster
+/// plan — and no flush may ever clobber another instance's segment
+/// (sequence numbers are claimed create-new, never reused).
+#[test]
+fn interleaved_flushes_from_two_instances_sharing_segments_merge_on_write() {
+    let base = tmp("interleaved");
+    wipe(&base);
+    let mut rng = Rng::new(0x5A5A);
+    let devices = [TargetKind::Gpu];
+    let mut rec_with = |fp: u64, final_s: f64| {
+        let mut r = record(&mut rng, fp, Lang::C, &devices, random_vector(&mut rng));
+        r.learned.as_mut().unwrap().final_s = final_s;
+        r
+    };
+
+    // tiny hot tier so every flush goes through the segment store; a
+    // huge max_segments so neither instance compacts away segments the
+    // sibling still references mid-run
+    let tier = TierConfig { hot_capacity: 2, segment_records: 2, max_segments: 10_000 };
+    let mut a = PatternDb::open_tiered(Some(&base), tier);
+    let mut b = PatternDb::open_tiered(Some(&base), tier);
+
+    // interleave: a flushes fps 1-3, then b flushes 3 (faster), 4, 5,
+    // then a again (fp 6), then b a *slower* duplicate of fp 2
+    for fp in 1..=3u64 {
+        a.insert_learned(rec_with(fp, 0.5));
+    }
+    a.flush(&base).unwrap();
+    b.insert_learned(rec_with(3, 0.1)); // faster twin of a's fp 3
+    b.insert_learned(rec_with(4, 0.5));
+    b.insert_learned(rec_with(5, 0.5));
+    b.flush(&base).unwrap();
+    a.insert_learned(rec_with(6, 0.5));
+    a.flush(&base).unwrap();
+    b.insert_learned(rec_with(2, 0.9)); // slower twin of a's fp 2
+    b.flush(&base).unwrap();
+
+    // every appended line survived: 8 inserts → 8 record lines across
+    // the shared directory, each segment claimed by exactly one flush
+    let mut seg_dir = base.as_os_str().to_os_string();
+    seg_dir.push(".segments");
+    let mut lines = 0usize;
+    let mut segs = 0usize;
+    for entry in std::fs::read_dir(PathBuf::from(seg_dir)).unwrap() {
+        let text = std::fs::read_to_string(entry.unwrap().path()).unwrap();
+        assert!(text.starts_with("# envadapt pattern DB segment v3"));
+        lines += text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()).count();
+        segs += 1;
+    }
+    assert_eq!(lines, 8, "an interleaved flush overwrote a sibling's segment");
+    assert_eq!(segs, 4, "2-record segments: each instance rolled twice");
+
+    // fold the shared slice back together: duplicate keys keep the
+    // faster plan regardless of which instance flushed last
+    let mut merged = PatternDb::open_tiered(Some(&base), tier);
+    assert_eq!(merged.learned_len(), 6, "fps 1-6, duplicates collapsed");
+    let final_s = |db: &mut PatternDb, fp: u64| {
+        db.lookup_learned_set(fp, &devices).unwrap().learned.as_ref().unwrap().final_s
+    };
+    assert_eq!(final_s(&mut merged, 3), 0.1, "b's faster fp 3 must win");
+    assert_eq!(final_s(&mut merged, 2), 0.5, "b's slower fp 2 must lose");
+    for fp in [1, 4, 5, 6] {
+        assert_eq!(final_s(&mut merged, fp), 0.5);
+    }
+    wipe(&base);
+}

@@ -1,0 +1,437 @@
+//! End-to-end tests for the sharded serve cluster: real `envadapt serve`
+//! daemons behind the wire-v2 `envadapt route` front process, all on
+//! loopback — byte transparency vs a single daemon, sticky replay,
+//! anti-entropy replication surviving shard death, load spill away from
+//! an overloaded home shard, and exact router metrics reconciliation.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use envadapt::api::OffloadRequest;
+use envadapt::config::Config;
+use envadapt::ir::Lang;
+use envadapt::proto::{self, Response};
+use envadapt::router::{self, RouterHandle, RouterOptions};
+use envadapt::server::{self, ServeOptions, ServerHandle};
+use envadapt::shard::{Fleet, DOWN_AFTER};
+use envadapt::util::json::Json;
+use envadapt::workloads;
+
+const FIXTURE: &str = include_str!("fixtures/wire_v2.jsonl");
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let writer = TcpStream::connect(addr).expect("connect");
+        let reader = BufReader::new(writer.try_clone().expect("clone stream"));
+        Client { reader, writer }
+    }
+
+    fn send(&mut self, line: &str) {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+    }
+
+    fn recv(&mut self) -> Response {
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).unwrap();
+        assert!(!resp.is_empty(), "server closed the connection");
+        Response::parse_line(&resp).unwrap()
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Response {
+        self.send(line);
+        self.recv()
+    }
+}
+
+fn i64_field(r: &Response, report_key: &str) -> i64 {
+    r.report()
+        .and_then(|rep| rep.get(report_key))
+        .and_then(|v| v.as_i64())
+        .unwrap_or_else(|| panic!("missing report field {report_key}: {}", r.body.to_string()))
+}
+
+/// A running cluster: N backend daemons plus the router fronting them,
+/// with the shard address list in router order.
+struct Cluster {
+    backends: Vec<Option<ServerHandle>>,
+    router: Option<RouterHandle>,
+    shard_addrs: Vec<String>,
+}
+
+impl Cluster {
+    fn start(n: usize, serve: &ServeOptions, ropts: RouterOptions) -> Cluster {
+        let mut backends = Vec::new();
+        let mut shard_addrs = Vec::new();
+        for _ in 0..n {
+            let h = server::spawn_tcp(Config::fast_sim(), serve.clone(), "127.0.0.1:0")
+                .expect("spawn shard");
+            shard_addrs.push(h.addr().to_string());
+            backends.push(Some(h));
+        }
+        let ropts = RouterOptions { shards: shard_addrs.clone(), ..ropts };
+        let router = router::spawn_router(ropts, "127.0.0.1:0").expect("spawn router");
+        Cluster { backends, router: Some(router), shard_addrs }
+    }
+
+    fn client(&self) -> Client {
+        Client::connect(self.router.as_ref().unwrap().addr())
+    }
+
+    fn kill_shard(&mut self, i: usize) {
+        self.backends[i].take().expect("shard already killed").shutdown().unwrap();
+    }
+
+    /// Drain the router (which propagates shutdown to every live shard)
+    /// and then join every backend.
+    fn shutdown(mut self) {
+        self.router.take().unwrap().shutdown().expect("router drain");
+        for h in self.backends.iter_mut().filter_map(Option::take) {
+            let _ = h.shutdown();
+        }
+    }
+}
+
+/// The `router` object out of a router `metrics` response.
+fn router_view(r: &Response) -> &Json {
+    r.body
+        .get("metrics")
+        .and_then(|m| m.get("router"))
+        .unwrap_or_else(|| panic!("no router metrics in {}", r.body.to_string()))
+}
+
+fn j_i64(j: &Json, key: &str) -> i64 {
+    j.get(key)
+        .and_then(|v| v.as_i64())
+        .unwrap_or_else(|| panic!("missing i64 field {key} in {}", j.to_string()))
+}
+
+fn per_shard(j: &Json) -> &[Json] {
+    j.get("per_shard").and_then(|v| v.items()).expect("per_shard array")
+}
+
+/// Canonical bytes of a wire response with the only legitimately
+/// instance-dependent fields removed: `id` (client-chosen), `worker`
+/// (pool-member name) and `report.search_wall_s` (wall clock). What is
+/// left must be byte-identical between a single daemon and the cluster.
+fn stable_bytes(resp: &Json) -> String {
+    let mut j = resp.clone();
+    if let Json::Obj(kvs) = &mut j {
+        kvs.retain(|(k, _)| k != "id" && k != "worker");
+        for (k, v) in kvs.iter_mut() {
+            if k == "report" {
+                if let Json::Obj(rep) = v {
+                    rep.retain(|(rk, _)| rk != "search_wall_s");
+                }
+            }
+        }
+    }
+    j.to_string()
+}
+
+fn fixture_lines() -> Vec<&'static str> {
+    FIXTURE.lines().map(str::trim).filter(|l| !l.is_empty()).collect()
+}
+
+/// Acceptance: for every request in the v2 fixture corpus, a 3-shard
+/// cluster behind the router answers with exactly the bytes a single
+/// daemon would produce, modulo `id` / `worker` / wall clock. Each
+/// request gets a fresh daemon and a fresh cluster so both sides see
+/// identical (empty) learned state.
+#[test]
+fn router_is_byte_transparent_for_every_wire_v2_fixture_request() {
+    for line in fixture_lines() {
+        let single = server::spawn_tcp(
+            Config::fast_sim(),
+            ServeOptions { pool: 2, ..Default::default() },
+            "127.0.0.1:0",
+        )
+        .expect("spawn single daemon");
+        let cluster = Cluster::start(
+            3,
+            &ServeOptions { pool: 2, ..Default::default() },
+            // anti-entropy off: transparency must not depend on it
+            RouterOptions { sync_interval_ms: 3_600_000, ..Default::default() },
+        );
+
+        let mut sc = Client::connect(single.addr());
+        let mut rc = cluster.client();
+        let a = sc.roundtrip(line);
+        let b = rc.roundtrip(line);
+        assert!(a.ok, "single daemon rejected fixture request {line}: {:?}", a.error);
+        assert_eq!(
+            stable_bytes(&a.body),
+            stable_bytes(&b.body),
+            "cluster response diverged from the single daemon for {line}"
+        );
+
+        drop(sc);
+        drop(rc);
+        cluster.shutdown();
+        single.shutdown().unwrap();
+    }
+}
+
+/// Exact accounting: every client line shows up in exactly one router
+/// counter, forwarded == replies once quiet, and repeat programs replay
+/// with zero measurements because sticky routing lands them on the
+/// shard that learned them.
+#[test]
+fn cluster_metrics_reconcile_exactly_and_replays_ride_sticky_routing() {
+    let cluster = Cluster::start(
+        3,
+        &ServeOptions { pool: 2, ..Default::default() },
+        RouterOptions { sync_interval_ms: 3_600_000, probe_interval_ms: 50, ..Default::default() },
+    );
+    let mut c = cluster.client();
+
+    let ping = c.roundtrip(r#"{"op":"ping","id":1}"#);
+    assert!(ping.ok);
+    let stats = c.roundtrip(r#"{"op":"stats","id":2}"#);
+    assert!(stats.ok);
+    let shards = stats.body.get("stats").and_then(|s| s.get("shards")).and_then(|v| v.as_i64());
+    assert_eq!(shards, Some(3), "router stats carry the topology: {}", stats.body.to_string());
+
+    // sync ops are shard-internal: the router must refuse to route them
+    let refused = c.roundtrip(r#"{"op":"sync_pull","id":3,"since":0}"#);
+    assert!(!refused.ok);
+    assert!(refused.error.unwrap_or_default().contains("shard-internal"));
+
+    let mut id = 10i64;
+    let mut offloads = 0i64;
+    for (lang, app) in [
+        (Lang::C, "mm"),
+        (Lang::Python, "fourier"),
+        (Lang::Java, "stencil"),
+        (Lang::JavaScript, "blackscholes"),
+    ] {
+        let code = workloads::get(app, lang).unwrap().code;
+        id += 1;
+        let r1 = c.roundtrip(&proto::offload_request(id, app, lang, code));
+        assert!(r1.ok, "[{lang}] first request failed: {:?}", r1.error);
+        assert_eq!(r1.id, id);
+        assert!(i64_field(&r1, "measurements") > 0, "[{lang}] first request must search");
+        id += 1;
+        let r2 = c.roundtrip(&proto::offload_request(id, app, lang, code));
+        assert!(r2.ok, "[{lang}] second request failed: {:?}", r2.error);
+        assert_eq!(i64_field(&r2, "measurements"), 0, "[{lang}] sticky replay, no search");
+        assert!(
+            r2.report().and_then(|rep| rep.get("pattern_reuse")).is_some(),
+            "[{lang}] replay must come from the learned pattern DB"
+        );
+        offloads += 2;
+    }
+
+    let m = c.roundtrip(r#"{"op":"metrics","id":99}"#);
+    let rv = router_view(&m);
+    // ping + stats + rejected sync + 8 offloads + this metrics request
+    assert_eq!(j_i64(rv, "requests_total"), 4 + offloads);
+    assert_eq!(j_i64(rv, "local_answers"), 4);
+    assert_eq!(j_i64(rv, "forwarded_total"), offloads);
+    assert_eq!(j_i64(rv, "unavailable"), 0);
+    assert_eq!(j_i64(rv, "shards"), 3);
+    assert_eq!(j_i64(rv, "healthy_shards"), 3);
+    // anti-entropy was configured off: exactly the startup round ran,
+    // before any pattern was learned
+    assert_eq!(j_i64(rv, "sync_rounds"), 1);
+    assert_eq!(j_i64(rv, "replica_records"), 0);
+    assert_eq!(j_i64(rv, "replica_merges"), 0);
+
+    let shards = per_shard(rv);
+    assert_eq!(shards.len(), 3);
+    let mut forwarded = 0i64;
+    let mut replies = 0i64;
+    for (i, s) in shards.iter().enumerate() {
+        assert_eq!(s.get("health").and_then(|v| v.as_str()), Some("up"), "shard {i}");
+        assert_eq!(j_i64(s, "spills"), 0, "sequential roundtrips never spill (shard {i})");
+        assert_eq!(j_i64(s, "retries"), 0, "shard {i}");
+        assert_eq!(j_i64(s, "failures"), 0, "shard {i}");
+        assert_eq!(j_i64(s, "health_transitions"), 0, "shard {i}");
+        assert_eq!(j_i64(s, "inflight"), 0, "quiet cluster (shard {i})");
+        forwarded += j_i64(s, "forwarded");
+        replies += j_i64(s, "replies");
+    }
+    assert_eq!(forwarded, offloads, "every offload forwarded exactly once");
+    assert_eq!(replies, offloads, "every forward answered exactly once");
+
+    drop(c);
+    cluster.shutdown();
+}
+
+/// Acceptance: a pattern learned through shard A replays with zero
+/// measurements via the router — including after that shard is killed
+/// mid-run, because anti-entropy already replicated the learned record
+/// to its siblings and the router re-homes the key off the dead shard.
+#[test]
+fn patterns_learned_on_one_shard_replay_cluster_wide_even_after_it_dies() {
+    let mut cluster = Cluster::start(
+        3,
+        &ServeOptions { pool: 1, ..Default::default() },
+        RouterOptions { probe_interval_ms: 25, sync_interval_ms: 40, ..Default::default() },
+    );
+    let mut c = cluster.client();
+    let code = workloads::get("mm", Lang::C).unwrap().code;
+
+    // learn through the router: lands on the key's home shard
+    let r1 = c.roundtrip(&proto::offload_request(1, "mm", Lang::C, code));
+    assert!(r1.ok, "learning request failed: {:?}", r1.error);
+    assert!(i64_field(&r1, "measurements") > 0, "first request must search");
+
+    // sticky replay on the same shard, before any replication matters
+    let r2 = c.roundtrip(&proto::offload_request(2, "mm", Lang::C, code));
+    assert!(r2.ok);
+    assert_eq!(i64_field(&r2, "measurements"), 0, "sticky replay");
+
+    // wait for anti-entropy to fan the learned record(s) to both
+    // siblings: merges reach at least one per sibling AND stop growing
+    // for several sync periods (all pushes landed, echoes merge zero)
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut last_merges = -1i64;
+    let mut stable = 0;
+    let learner = loop {
+        let m = c.roundtrip(r#"{"op":"metrics","id":90}"#);
+        let rv = router_view(&m);
+        let merges = j_i64(rv, "replica_merges");
+        if merges >= 2 && merges == last_merges {
+            stable += 1;
+        } else {
+            stable = 0;
+        }
+        last_merges = merges;
+        if stable >= 3 {
+            // both offloads went sticky to one shard: that's the learner
+            let shards = per_shard(rv);
+            let learner = (0..shards.len())
+                .max_by_key(|&i| j_i64(&shards[i], "forwarded"))
+                .unwrap();
+            assert_eq!(j_i64(&shards[learner], "forwarded"), 2);
+            break learner;
+        }
+        assert!(Instant::now() < deadline, "replication never converged: {}", m.body.to_string());
+        std::thread::sleep(Duration::from_millis(100));
+    };
+
+    // kill the learner and wait for the router to mark it down
+    cluster.kill_shard(learner);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let m = c.roundtrip(r#"{"op":"metrics","id":91}"#);
+        let rv = router_view(&m);
+        let s = &per_shard(rv)[learner];
+        if s.get("health").and_then(|v| v.as_str()) == Some("down") {
+            assert!(j_i64(s, "failures") >= DOWN_AFTER as i64);
+            assert!(j_i64(s, "health_transitions") >= 1);
+            assert_eq!(j_i64(rv, "healthy_shards"), 2);
+            break;
+        }
+        assert!(Instant::now() < deadline, "dead shard never marked down");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+
+    // the same program re-homes to a surviving shard and still replays
+    // with zero measurements, off the replicated record
+    let r3 = c.roundtrip(&proto::offload_request(3, "mm", Lang::C, code));
+    assert!(r3.ok, "post-kill request failed: {:?}", r3.error);
+    assert_eq!(i64_field(&r3, "measurements"), 0, "replica replay after shard death");
+    assert!(
+        r3.report().and_then(|rep| rep.get("pattern_reuse")).is_some(),
+        "replay must come from the replicated pattern"
+    );
+
+    let m = c.roundtrip(r#"{"op":"metrics","id":92}"#);
+    assert_eq!(j_i64(router_view(&m), "unavailable"), 0, "no request was ever dropped");
+
+    drop(c);
+    cluster.shutdown();
+}
+
+/// Load spill: with the home shard saturated by slow in-flight work,
+/// fresh fingerprints that would home there are routed to the idle
+/// sibling instead — a routing decision only, every request still
+/// answers ok.
+#[test]
+fn overloaded_home_shard_spills_fresh_fingerprints_to_an_idle_sibling() {
+    let cluster = Cluster::start(
+        2,
+        &ServeOptions { pool: 1, ..Default::default() },
+        RouterOptions {
+            spill_queue: 1,
+            probe_interval_ms: 25,
+            sync_interval_ms: 3_600_000,
+            ..Default::default()
+        },
+    );
+
+    // predict placement with the same key + fleet the router uses
+    let cfg = Config::standard();
+    let fleet = Fleet::new(&cluster.shard_addrs, 1);
+    let slow_req = OffloadRequest::source("void main() { }", Lang::C)
+        .name("__envadapt_test_slow")
+        .build()
+        .unwrap();
+    let slow_key = router::route_key(&cfg, &slow_req);
+    let home = fleet.home(slow_key).unwrap();
+    let other = 1 - home;
+
+    // fresh programs whose home is the shard the slow work saturates
+    let mut victims: Vec<String> = Vec::new();
+    'apps: for app in ["mm", "fourier", "stencil", "blackscholes", "smallloops", "mixed", "signal"]
+    {
+        for lang in [Lang::C, Lang::Python, Lang::Java, Lang::JavaScript] {
+            if let Ok(req) = OffloadRequest::workload(app, lang).build() {
+                if router::route_key(&cfg, &req) != slow_key
+                    && fleet.home(router::route_key(&cfg, &req)) == Some(home)
+                {
+                    victims.push(proto::offload_request_v2(200 + victims.len() as i64, &req));
+                    if victims.len() == 2 {
+                        break 'apps;
+                    }
+                }
+            }
+        }
+    }
+    assert_eq!(victims.len(), 2, "could not find two programs homing on shard {home}");
+
+    // saturate the home shard: four pipelined 400 ms debug-failpoint
+    // requests, all the same key, so they stack sticky on one pool-1
+    // shard while the sibling stays idle
+    let mut c = cluster.client();
+    let slow_line = proto::offload_request_v2(100, &slow_req);
+    for _ in 0..4 {
+        c.send(&slow_line);
+    }
+    std::thread::sleep(Duration::from_millis(100));
+    for v in &victims {
+        c.send(v);
+    }
+
+    // all six answer ok, matched by id (spilled work finishes while the
+    // slow chain is still running, so replies interleave)
+    let mut by_id: std::collections::HashMap<i64, u32> = std::collections::HashMap::new();
+    for _ in 0..6 {
+        let r = c.recv();
+        assert!(r.ok, "request {} failed: {:?}", r.id, r.error);
+        *by_id.entry(r.id).or_insert(0) += 1;
+    }
+    assert_eq!(by_id.get(&100), Some(&4), "all four slow requests answered: {by_id:?}");
+    assert_eq!(by_id.get(&200), Some(&1), "{by_id:?}");
+    assert_eq!(by_id.get(&201), Some(&1), "{by_id:?}");
+
+    let m = c.roundtrip(r#"{"op":"metrics","id":999}"#);
+    let rv = router_view(&m);
+    let shards = per_shard(rv);
+    assert_eq!(j_i64(&shards[home], "forwarded"), 4, "slow chain stayed sticky on its home");
+    assert_eq!(j_i64(&shards[other], "forwarded"), 2, "both fresh keys spilled to the sibling");
+    assert_eq!(j_i64(&shards[other], "spills"), 2);
+    assert_eq!(j_i64(rv, "unavailable"), 0, "spill is a routing decision, never a drop");
+
+    drop(c);
+    cluster.shutdown();
+}
